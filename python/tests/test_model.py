@@ -1,0 +1,178 @@
+"""Layer-2 correctness: the scan_stats epilogue vs a brute-force OLS
+oracle, and the full compress→project→scan pipeline in pure Python.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import party_compress, scan_stats
+from compile.kernels import ref
+
+
+def brute_force_ols(y, x_col, c):
+    """OLS of y on [x | C]; returns (beta_x, se_x)."""
+    design = np.column_stack([x_col, c])
+    n, k1 = design.shape
+    coef, *_ = np.linalg.lstsq(design, y, rcond=None)
+    resid = y - design @ coef
+    df = n - k1
+    sigma2 = resid @ resid / df
+    cov = sigma2 * np.linalg.inv(design.T @ design)
+    return coef[0], np.sqrt(cov[0, 0])
+
+
+class TestScanStats:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([40, 80, 200]),
+        k=st.integers(min_value=1, max_value=6),
+        m=st.sampled_from([3, 11]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_brute_force(self, n, k, m, seed):
+        rng = np.random.default_rng(seed)
+        c = rng.normal(size=(n, k))
+        c[:, 0] = 1.0
+        x = rng.normal(size=(n, m))
+        y = 0.5 * x[:, 0] + rng.normal(size=n)
+        q, _ = np.linalg.qr(c)
+        beta, se, t = scan_stats(
+            float(n),
+            float(k),
+            float(y @ y),
+            jnp.asarray(x.T @ y),
+            jnp.asarray(np.sum(x * x, axis=0)),
+            jnp.asarray(q.T @ y),
+            jnp.asarray(q.T @ x),
+        )
+        for j in range(m):
+            b_ref, se_ref = brute_force_ols(y, x[:, j], c)
+            np.testing.assert_allclose(float(beta[j]), b_ref, rtol=1e-9)
+            np.testing.assert_allclose(float(se[j]), se_ref, rtol=1e-9)
+
+    def test_matches_ref_oracle(self):
+        rng = np.random.default_rng(3)
+        n, k, m = 64, 4, 32
+        c = rng.normal(size=(n, k))
+        x = rng.normal(size=(n, m))
+        y = rng.normal(size=n)
+        q, _ = np.linalg.qr(c)
+        args = (
+            float(n),
+            float(k),
+            float(y @ y),
+            jnp.asarray(x.T @ y),
+            jnp.asarray(np.sum(x * x, axis=0)),
+            jnp.asarray(q.T @ y),
+            jnp.asarray(q.T @ x),
+        )
+        got = scan_stats(*args)
+        want = ref.scan_stats_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+    def test_collinear_variant_is_nan(self):
+        rng = np.random.default_rng(4)
+        n, k = 50, 3
+        c = rng.normal(size=(n, k))
+        x = c[:, [1]]  # in the covariate span
+        y = rng.normal(size=n)
+        q, _ = np.linalg.qr(c)
+        beta, se, t = scan_stats(
+            float(n),
+            float(k),
+            float(y @ y),
+            jnp.asarray(x.T @ y),
+            jnp.asarray(np.sum(x * x, axis=0)),
+            jnp.asarray(q.T @ y),
+            jnp.asarray(q.T @ x),
+        )
+        assert np.isnan(float(beta[0]))
+        assert np.isnan(float(se[0]))
+
+    def test_padded_lanes_are_nan(self):
+        # zero-padded variant lanes (xtx == 0) must produce NaN, which the
+        # Rust runtime slices away
+        n, k, m_real, m_pad = 40, 2, 5, 8
+        rng = np.random.default_rng(5)
+        c = rng.normal(size=(n, k))
+        x = np.zeros((n, m_pad))
+        x[:, :m_real] = rng.normal(size=(n, m_real))
+        y = rng.normal(size=n)
+        q, _ = np.linalg.qr(c)
+        beta, se, t = scan_stats(
+            float(n),
+            float(k),
+            float(y @ y),
+            jnp.asarray(x.T @ y),
+            jnp.asarray(np.sum(x * x, axis=0)),
+            jnp.asarray(q.T @ y),
+            jnp.asarray(q.T @ x),
+        )
+        assert np.all(np.isfinite(np.asarray(beta[:m_real])))
+        assert np.all(np.isnan(np.asarray(beta[m_real:])))
+
+
+class TestFullPipeline:
+    def test_compress_project_scan_equals_ols(self):
+        """party_compress → R-projection → scan_stats == brute force."""
+        rng = np.random.default_rng(6)
+        n, k, m = 120, 5, 17
+        c = rng.normal(size=(n, k))
+        c[:, 0] = 1.0
+        x = rng.normal(size=(n, m))
+        y = 0.4 * x[:, 2] + rng.normal(size=n)
+
+        yty, cty, ctc, xty, xtx, ctx = party_compress(
+            jnp.asarray(y), jnp.asarray(c), jnp.asarray(x)
+        )
+        # combine-stage projection from compressed stats only
+        r = np.linalg.cholesky(np.asarray(ctc)).T
+        qty = np.linalg.solve(r.T, np.asarray(cty))
+        qtx = np.linalg.solve(r.T, np.asarray(ctx))
+        beta, se, t = scan_stats(
+            float(n), float(k), float(yty[0]),
+            xty, xtx, jnp.asarray(qty), jnp.asarray(qtx),
+        )
+        for j in [0, 2, m - 1]:
+            b_ref, se_ref = brute_force_ols(y, x[:, j], c)
+            np.testing.assert_allclose(float(beta[j]), b_ref, rtol=1e-9)
+            np.testing.assert_allclose(float(se[j]), se_ref, rtol=1e-9)
+
+    def test_multi_party_additivity_end_to_end(self):
+        """Sum of per-party compresses + Cholesky projection == pooled."""
+        rng = np.random.default_rng(7)
+        k, m = 4, 9
+        parts = []
+        for n_p in [50, 70, 30]:
+            c = rng.normal(size=(n_p, k))
+            c[:, 0] = 1.0
+            x = rng.normal(size=(n_p, m))
+            y = 0.3 * x[:, 1] + rng.normal(size=n_p)
+            parts.append((y, c, x))
+        comps = [
+            party_compress(jnp.asarray(y), jnp.asarray(c), jnp.asarray(x))
+            for (y, c, x) in parts
+        ]
+        agg = [sum(np.asarray(t[i]) for t in comps) for i in range(6)]
+        yty, cty, ctc, xty, xtx, ctx = agg
+        n = sum(len(p[0]) for p in parts)
+        r = np.linalg.cholesky(ctc).T
+        qty = np.linalg.solve(r.T, cty)
+        qtx = np.linalg.solve(r.T, ctx)
+        beta, se, t = scan_stats(
+            float(n), float(k), float(yty[0]),
+            jnp.asarray(xty), jnp.asarray(xtx), jnp.asarray(qty), jnp.asarray(qtx),
+        )
+        y_all = np.concatenate([p[0] for p in parts])
+        c_all = np.vstack([p[1] for p in parts])
+        x_all = np.vstack([p[2] for p in parts])
+        for j in range(m):
+            b_ref, se_ref = brute_force_ols(y_all, x_all[:, j], c_all)
+            np.testing.assert_allclose(float(beta[j]), b_ref, rtol=1e-8)
+            np.testing.assert_allclose(float(se[j]), se_ref, rtol=1e-8)

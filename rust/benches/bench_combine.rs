@@ -1,0 +1,133 @@
+//! E3 — combine-stage cost is independent of sample size: `O(PK² + K³)`
+//! (+ `O(K²M)` for the scan projection), and E10 aggregation-backend
+//! comparison at fixed layout.
+//!
+//! Rows regenerated:
+//!   combine/N=...        combine runtime flat across N (fixed K, M, P)
+//!   combine/K=...        growth in K at fixed M
+//!   combine/P=...        TSQR stack growth in party count
+//!   combine/backend=...  plaintext-sum vs masked-decode vs shamir-reconstruct
+
+use dash::linalg::Matrix;
+use dash::mpc::fixed::FixedCodec;
+use dash::mpc::masking::{aggregate_masked, PairwiseMasker};
+use dash::scan::{
+    combine_compressed, compress_party, flatten_for_sum, unflatten_sum, CombineOptions,
+    CompressedParty, RFactorMethod,
+};
+use dash::util::bench::Bench;
+use dash::util::rng::Rng;
+
+fn party(n: usize, k: usize, m: usize, seed: u64) -> CompressedParty {
+    let mut rng = Rng::new(seed);
+    let mut c = Matrix::randn(n, k, &mut rng);
+    for i in 0..n {
+        c[(i, 0)] = 1.0;
+    }
+    let x = Matrix::randn(n, m, &mut rng);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    compress_party(&y, &c, &x, 256, None)
+}
+
+fn aggregate(cps: &[CompressedParty]) -> dash::scan::AggregateSums {
+    let (layout, mut acc) = flatten_for_sum(&cps[0]);
+    for cp in &cps[1..] {
+        let (_, f) = flatten_for_sum(cp);
+        for (a, b) in acc.iter_mut().zip(&f) {
+            *a += b;
+        }
+    }
+    unflatten_sum(layout, &acc).unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("combine");
+    let k = 12;
+    let m = 2048;
+
+    // --- combine flat in N: same K/M layout, aggregates from various N ---
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let cp = party(n, k, m, 50);
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let rs = vec![cp.r.clone()];
+        b.case(&format!("N={n}"), || {
+            std::hint::black_box(
+                combine_compressed(&agg, Some(&rs), CombineOptions::default()).unwrap(),
+            );
+        });
+    }
+
+    // --- growth in K ---
+    for &kk in &[4usize, 12, 24] {
+        let cp = party(4000, kk, m, 51);
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let rs = vec![cp.r.clone()];
+        b.case(&format!("K={kk}"), || {
+            std::hint::black_box(
+                combine_compressed(&agg, Some(&rs), CombineOptions::default()).unwrap(),
+            );
+        });
+    }
+
+    // --- TSQR stack growth in P ---
+    for &p in &[2usize, 8, 32] {
+        let cps: Vec<CompressedParty> =
+            (0..p).map(|i| party(500, k, 64, 60 + i as u64)).collect();
+        let agg = aggregate(&cps);
+        let rs: Vec<Matrix> = cps.iter().map(|c| c.r.clone()).collect();
+        b.case(&format!("P={p}"), || {
+            std::hint::black_box(
+                combine_compressed(
+                    &agg,
+                    Some(&rs),
+                    CombineOptions { r_method: RFactorMethod::Tsqr },
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    // --- aggregation backends at fixed layout (P=4, K=12, M=2048) ---
+    let p = 4;
+    let cps: Vec<CompressedParty> = (0..p).map(|i| party(800, k, m, 70 + i as u64)).collect();
+    let flats: Vec<Vec<f64>> = cps.iter().map(|c| flatten_for_sum(c).1).collect();
+    let len = flats[0].len();
+
+    b.case_units("backend=plaintext-sum", Some(len as f64), "elem", || {
+        let mut acc = vec![0.0f64; len];
+        for f in &flats {
+            for (a, v) in acc.iter_mut().zip(f) {
+                *a += v;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    let codec = FixedCodec::default();
+    let mut rng = Rng::new(71);
+    let seeds = PairwiseMasker::session_seeds(p, &mut rng);
+    // pre-encode+mask (party-side cost measured in bench_mpc); here we
+    // time the leader: aggregate + decode
+    let masked: Vec<Vec<u64>> = flats
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let mut enc = codec.encode_vec(f).unwrap();
+            PairwiseMasker::new(i, p, seeds[i].clone()).mask_in_place(&mut enc);
+            enc
+        })
+        .collect();
+    b.case_units("backend=masked-leader", Some(len as f64), "elem", || {
+        let sum = aggregate_masked(&masked);
+        std::hint::black_box(codec.decode_vec(&sum));
+    });
+
+    // party-side masking cost for the same payload
+    b.case_units("backend=masked-party", Some(len as f64), "elem", || {
+        let mut enc = codec.encode_vec(&flats[0]).unwrap();
+        PairwiseMasker::new(0, p, seeds[0].clone()).mask_in_place(&mut enc);
+        std::hint::black_box(enc);
+    });
+
+    b.save_report();
+}

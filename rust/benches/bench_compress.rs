@@ -1,0 +1,89 @@
+//! E2 — compress-stage scaling: `O(N_p K²) + O(N K M / C)`.
+//!
+//! Rows regenerated:
+//!   compress/N=...        runtime linear in N (fixed K, M)
+//!   compress/threads=...  runtime ∝ 1/C (fixed N, K, M)
+//!   compress/K=...        quadratic-in-K term at fixed N·M
+//!   compress/engine=...   pure-Rust vs AOT-artifact path
+//!   roofline              bytes-read throughput vs machine copy bandwidth
+//!
+//! `DASH_BENCH_QUICK=1` shrinks measurement windows ~10x.
+
+use dash::linalg::Matrix;
+use dash::scan::compress_party;
+use dash::util::bench::Bench;
+use dash::util::rng::Rng;
+
+fn data(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let mut c = Matrix::randn(n, k, &mut rng);
+    for i in 0..n {
+        c[(i, 0)] = 1.0;
+    }
+    // genotype-like dosages: exercises the sparsity fast path realistically
+    let mut x = Matrix::zeros(n, m);
+    for v in x.data.iter_mut() {
+        *v = rng.binomial(2, 0.3) as f64;
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    (y, c, x)
+}
+
+fn main() {
+    let mut b = Bench::new("compress");
+    let k = 8;
+    let m = 1024;
+
+    // --- scaling in N (expect ~linear) ---
+    for &n in &[1024usize, 4096, 16384] {
+        let (y, c, x) = data(n, k, m, 42);
+        b.case_units(&format!("N={n}"), Some((n * m) as f64), "cell", || {
+            std::hint::black_box(compress_party(&y, &c, &x, 256, None));
+        });
+    }
+
+    // --- scaling in threads (expect ∝ 1/C) ---
+    let (y, c, x) = data(8192, k, m, 43);
+    for &threads in &[1usize, 2, 4, 8] {
+        b.case_units(
+            &format!("threads={threads}"),
+            Some((8192 * m) as f64),
+            "cell",
+            || {
+                std::hint::black_box(compress_party(&y, &c, &x, 128, Some(threads)));
+            },
+        );
+    }
+
+    // --- scaling in K at fixed N, M ---
+    for &kk in &[2usize, 8, 16] {
+        let (y, c, x) = data(4096, kk, m, 44);
+        b.case_units(&format!("K={kk}"), Some((4096 * m) as f64), "cell", || {
+            std::hint::black_box(compress_party(&y, &c, &x, 256, None));
+        });
+    }
+
+    // --- engine comparison: rust vs AOT artifacts ---
+    let (y, c, x) = data(2048, 8, 512, 45);
+    b.case_units("engine=rust", Some((2048 * 512) as f64), "cell", || {
+        std::hint::black_box(compress_party(&y, &c, &x, 256, None));
+    });
+    match dash::runtime::Engine::load("artifacts") {
+        Ok(engine) => {
+            b.case_units("engine=artifacts", Some((2048 * 512) as f64), "cell", || {
+                std::hint::black_box(engine.compress_party(&y, &c, &x).unwrap());
+            });
+        }
+        Err(e) => eprintln!("skipping artifact engine case: {e:#}"),
+    }
+
+    // --- roofline reference: how fast can this machine merely READ the
+    // data? (the paper's eq. 3: compress should be I/O-bound) ---
+    let flat = x.data.clone();
+    b.case_units("roofline-read", Some(flat.len() as f64), "cell", || {
+        let s: f64 = flat.iter().sum();
+        std::hint::black_box(s);
+    });
+
+    b.save_report();
+}

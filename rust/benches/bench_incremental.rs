@@ -1,0 +1,63 @@
+//! E7 — incremental updates at cost independent of the original N.
+//!
+//! Rows regenerated:
+//!   incremental/update/N_orig=...     fold-in + recombine (flat in N_orig)
+//!   incremental/scratch/N_orig=...    full recompression (linear in N_orig)
+
+use dash::coordinator::IncrementalAggregate;
+use dash::linalg::Matrix;
+use dash::scan::{compress_party, CompressedParty};
+use dash::util::bench::Bench;
+use dash::util::rng::Rng;
+
+fn party(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let mut c = Matrix::randn(n, k, &mut rng);
+    for i in 0..n {
+        c[(i, 0)] = 1.0;
+    }
+    let x = Matrix::randn(n, m, &mut rng);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    (y, c, x)
+}
+
+fn compress(d: &(Vec<f64>, Matrix, Matrix)) -> CompressedParty {
+    compress_party(&d.0, &d.1, &d.2, 256, None)
+}
+
+fn main() {
+    let mut b = Bench::new("incremental");
+    let k = 6;
+    let m = 1024;
+    let n_new = 1_000;
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let origs: &[usize] = if quick { &[4_000, 16_000] } else { &[4_000, 16_000, 64_000] };
+
+    let joiner = party(n_new, k, m, 999);
+    for &n_orig in origs {
+        // initial consortium of 4 parties
+        let originals: Vec<_> = (0..4).map(|i| party(n_orig / 4, k, m, 100 + i)).collect();
+        let initial: Vec<CompressedParty> = originals.iter().map(compress).collect();
+        let base = IncrementalAggregate::from_parties(&initial).unwrap();
+
+        // incremental path: compress ONLY the joiner, fold, recombine
+        b.case(&format!("update/N_orig={n_orig}"), || {
+            let mut inc = base.clone();
+            let jcp = compress(&joiner);
+            inc.add_parties(std::slice::from_ref(&jcp)).unwrap();
+            std::hint::black_box(inc.recombine().unwrap());
+        });
+
+        // from-scratch path: recompress everything
+        b.case(&format!("scratch/N_orig={n_orig}"), || {
+            let mut all: Vec<CompressedParty> = originals.iter().map(compress).collect();
+            all.push(compress(&joiner));
+            let agg = IncrementalAggregate::from_parties(&all).unwrap();
+            std::hint::black_box(agg.recombine().unwrap());
+        });
+    }
+
+    println!("\n(update rows are flat in N_orig — cost ∝ N_new + K²M only;");
+    println!(" scratch rows grow ∝ N_orig: the paper's fn.1 claim)");
+    b.save_report();
+}

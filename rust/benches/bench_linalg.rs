@@ -1,0 +1,100 @@
+//! E9 — combine-stage linear algebra: TSQR vs Gram+Cholesky ablation
+//! (accuracy under ill-conditioning + cost), plus substrate throughput.
+//!
+//! Rows regenerated:
+//!   linalg/qr/...            Householder QR cost (the O(N_p K²) term)
+//!   linalg/tsqr/P=...        stacked-R re-factorization cost
+//!   linalg/cholesky/K=...    Gram factorization cost
+//!   ablation table           ‖R−R_true‖/‖R‖ for TSQR vs Cholesky vs cond(C)
+
+use dash::linalg::{cholesky_upper, householder_qr, rel_err, tsqr_stack_r, Matrix};
+use dash::util::bench::Bench;
+use dash::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("linalg");
+    let mut rng = Rng::new(110);
+
+    // QR cost: the per-party compress term O(N_p K²)
+    for &(n, k) in &[(1_000usize, 8usize), (10_000, 8), (10_000, 24)] {
+        let a = Matrix::randn(n, k, &mut rng);
+        b.case_units(&format!("qr/N={n},K={k}"), Some((n * k * k) as f64), "flop", || {
+            std::hint::black_box(householder_qr(&a));
+        });
+    }
+
+    // TSQR stack cost vs party count
+    let k = 12;
+    for &p in &[4usize, 16, 64] {
+        let rs: Vec<Matrix> = (0..p)
+            .map(|i| householder_qr(&Matrix::randn(200, k, &mut rng.derive(i as u64))).r)
+            .collect();
+        b.case(&format!("tsqr/P={p},K={k}"), || {
+            std::hint::black_box(tsqr_stack_r(&rs));
+        });
+    }
+
+    // Cholesky cost vs K
+    for &kk in &[8usize, 16, 32] {
+        let a = Matrix::randn(4 * kk, kk, &mut rng);
+        let g = a.gram();
+        b.case(&format!("cholesky/K={kk}"), || {
+            std::hint::black_box(cholesky_upper(&g).unwrap());
+        });
+    }
+
+    // --- E9 ablation: accuracy vs conditioning ---
+    println!("\nE9 — R-factor accuracy vs conditioning (P=3, K=6, N_p=200):");
+    println!(
+        "{:>12} {:>16} {:>16} {:>12}",
+        "col_noise", "tsqr_rel_err", "chol_rel_err", "chol/tsqr"
+    );
+    let parties = 3;
+    let kk = 6;
+    let n_per = 200;
+    for &eps in &[1.0f64, 1e-3, 1e-5, 1e-7, 1e-9] {
+        let mut cs = Vec::new();
+        for i in 0..parties {
+            let mut c = Matrix::randn(n_per, kk, &mut rng.derive(1000 + i as u64));
+            for r in 0..n_per {
+                c[(r, 0)] = 1.0;
+                // last column nearly dependent on column 1
+                c[(r, kk - 1)] = c[(r, 1)] + eps * c[(r, kk - 1)];
+            }
+            cs.push(c);
+        }
+        let refs: Vec<&Matrix> = cs.iter().collect();
+        let r_true = householder_qr(&Matrix::vstack(&refs)).r;
+        let rs: Vec<Matrix> = cs.iter().map(|c| householder_qr(c).r).collect();
+        let r_tsqr = tsqr_stack_r(&rs);
+        let mut gram = Matrix::zeros(kk, kk);
+        for c in &cs {
+            gram = gram.add(&c.gram());
+        }
+        match cholesky_upper(&gram) {
+            Ok(r_chol) => {
+                let e_t = rel_err(&r_tsqr.data, &r_true.data);
+                let e_c = rel_err(&r_chol.data, &r_true.data);
+                println!(
+                    "{:>12.0e} {:>16.2e} {:>16.2e} {:>12.1}",
+                    eps,
+                    e_t,
+                    e_c,
+                    e_c / e_t.max(1e-18)
+                );
+            }
+            Err(_) => {
+                let e_t = rel_err(&r_tsqr.data, &r_true.data);
+                println!(
+                    "{:>12.0e} {:>16.2e} {:>16} {:>12}",
+                    eps, e_t, "FAILED (SPD)", "-"
+                );
+            }
+        }
+    }
+    println!("(TSQR tracks the true R as cond(C) degrades; Cholesky of the Gram");
+    println!(" matrix squares the condition number — why the plaintext path uses");
+    println!(" Lemma 4.1 and the secure path documents the trade-off)");
+
+    b.save_report();
+}

@@ -1,0 +1,244 @@
+//! Run configuration: JSON config files + CLI overrides → typed specs.
+//!
+//! The launcher accepts `--config run.json` plus per-field overrides;
+//! [`RunConfig`] is the single source of truth handed to the coordinator,
+//! and it serializes back to JSON for reproducible experiment records
+//! (every EXPERIMENTS.md row carries its config).
+
+use crate::gwas::CohortSpec;
+use crate::mpc::Backend;
+use crate::scan::{RFactorMethod, ScanConfig};
+use crate::util::json::Json;
+
+/// Full configuration of one scan run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub cohort: CohortSpec,
+    pub scan: ScanConfig,
+    pub seed: u64,
+    pub transport_tcp: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            cohort: CohortSpec::default_small(),
+            scan: ScanConfig::default(),
+            seed: 7,
+            transport_tcp: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON document (all fields optional; defaults apply).
+    pub fn from_json(v: &Json) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = s as u64;
+        }
+        if let Some(t) = v.get("transport").and_then(Json::as_str) {
+            cfg.transport_tcp = match t {
+                "tcp" => true,
+                "inproc" => false,
+                other => anyhow::bail!("unknown transport `{other}`"),
+            };
+        }
+        if let Some(c) = v.get("cohort") {
+            cfg.cohort = parse_cohort(c, cfg.cohort)?;
+        }
+        if let Some(s) = v.get("scan") {
+            cfg.scan = parse_scan(s, cfg.scan)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize for the experiment record.
+    pub fn to_json(&self) -> Json {
+        let mut cohort = Json::obj();
+        cohort
+            .set("party_sizes", self.cohort.party_sizes.clone())
+            .set("m_variants", self.cohort.m_variants)
+            .set("n_causal", self.cohort.n_causal)
+            .set("effect_sd", self.cohort.effect_sd)
+            .set("fst", self.cohort.fst)
+            .set("party_admixture", self.cohort.party_admixture.clone())
+            .set("ancestry_effect", self.cohort.ancestry_effect)
+            .set("batch_effect_sd", self.cohort.batch_effect_sd)
+            .set("n_pcs", self.cohort.n_pcs)
+            .set("noise_sd", self.cohort.noise_sd);
+        let mut scan = Json::obj();
+        scan.set("backend", self.scan.backend.name())
+            .set("frac_bits", self.scan.frac_bits as usize)
+            .set("block_m", self.scan.block_m)
+            .set("use_artifacts", self.scan.use_artifacts)
+            .set("artifacts_dir", self.scan.artifacts_dir.as_str())
+            .set(
+                "r_method",
+                match self.scan.r_method {
+                    RFactorMethod::Auto => "auto",
+                    RFactorMethod::Tsqr => "tsqr",
+                    RFactorMethod::Cholesky => "cholesky",
+                },
+            );
+        if let Some(t) = self.scan.threads {
+            scan.set("threads", t);
+        }
+        let mut o = Json::obj();
+        o.set("seed", self.seed)
+            .set("transport", if self.transport_tcp { "tcp" } else { "inproc" })
+            .set("cohort", cohort)
+            .set("scan", scan);
+        o
+    }
+}
+
+fn parse_usize_vec(v: &Json, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Arr(a)) => Ok(Some(
+            a.iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric element in {key}"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        )),
+        _ => anyhow::bail!("{key} must be an array"),
+    }
+}
+
+fn parse_f64_vec(v: &Json, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Arr(a)) => Ok(Some(
+            a.iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric element in {key}"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        )),
+        _ => anyhow::bail!("{key} must be an array"),
+    }
+}
+
+fn parse_cohort(v: &Json, mut c: CohortSpec) -> anyhow::Result<CohortSpec> {
+    if let Some(ps) = parse_usize_vec(v, "party_sizes")? {
+        c.party_sizes = ps;
+    }
+    if let Some(pa) = parse_f64_vec(v, "party_admixture")? {
+        c.party_admixture = pa;
+    } else if c.party_admixture.len() != c.party_sizes.len() {
+        // sensible default: evenly spaced admixture
+        let p = c.party_sizes.len();
+        c.party_admixture = (0..p)
+            .map(|i| if p == 1 { 0.5 } else { i as f64 / (p - 1) as f64 })
+            .collect();
+    }
+    for (key, slot) in [
+        ("m_variants", &mut c.m_variants as &mut usize),
+        ("n_causal", &mut c.n_causal),
+        ("n_pcs", &mut c.n_pcs),
+    ] {
+        if let Some(x) = v.get(key).and_then(Json::as_usize) {
+            *slot = x;
+        }
+    }
+    for (key, slot) in [
+        ("effect_sd", &mut c.effect_sd as &mut f64),
+        ("fst", &mut c.fst),
+        ("ancestry_effect", &mut c.ancestry_effect),
+        ("batch_effect_sd", &mut c.batch_effect_sd),
+        ("noise_sd", &mut c.noise_sd),
+    ] {
+        if let Some(x) = v.get(key).and_then(Json::as_f64) {
+            *slot = x;
+        }
+    }
+    Ok(c)
+}
+
+fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
+    if let Some(b) = v.get("backend").and_then(Json::as_str) {
+        // parties unknown here; threshold recomputed by launcher if needed
+        s.backend = Backend::parse(b, 3)?;
+    }
+    if let Some(x) = v.get("frac_bits").and_then(Json::as_usize) {
+        s.frac_bits = x as u32;
+    }
+    if let Some(x) = v.get("block_m").and_then(Json::as_usize) {
+        s.block_m = x;
+    }
+    if let Some(x) = v.get("threads").and_then(Json::as_usize) {
+        s.threads = Some(x);
+    }
+    if let Some(x) = v.get("use_artifacts").and_then(|j| j.as_bool()) {
+        s.use_artifacts = x;
+    }
+    if let Some(x) = v.get("artifacts_dir").and_then(Json::as_str) {
+        s.artifacts_dir = x.to_string();
+    }
+    if let Some(x) = v.get("r_method").and_then(Json::as_str) {
+        s.r_method = match x {
+            "auto" => RFactorMethod::Auto,
+            "tsqr" => RFactorMethod::Tsqr,
+            "cholesky" => RFactorMethod::Cholesky,
+            other => anyhow::bail!("unknown r_method `{other}`"),
+        };
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = RunConfig::default();
+        let j = cfg.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.cohort.party_sizes, cfg.cohort.party_sizes);
+        assert_eq!(back.scan.backend, cfg.scan.backend);
+        assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let j = Json::parse(
+            r#"{"seed": 42, "transport": "tcp",
+                "cohort": {"party_sizes": [100, 100], "m_variants": 50, "fst": 0.2},
+                "scan": {"backend": "shamir", "frac_bits": 20, "r_method": "cholesky"}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert!(cfg.transport_tcp);
+        assert_eq!(cfg.cohort.party_sizes, vec![100, 100]);
+        assert_eq!(cfg.cohort.party_admixture.len(), 2); // auto-filled
+        assert_eq!(cfg.cohort.m_variants, 50);
+        assert_eq!(cfg.scan.frac_bits, 20);
+        assert_eq!(cfg.scan.r_method, RFactorMethod::Cholesky);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_json(&Json::parse(r#"{"transport": "carrier-pigeon"}"#).unwrap())
+            .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"backend": "rot13"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"r_method": "qr-ish"}}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Leader-side protocol: session setup, contribution collection,
+//! secure aggregation, combine, result broadcast.
+
+use super::messages::*;
+use crate::mpc::field::Fe;
+use crate::mpc::fixed::FixedCodec;
+use crate::mpc::masking::{aggregate_masked, PairwiseMasker};
+use crate::mpc::Backend;
+use crate::net::{Endpoint, Frame};
+use crate::scan::{
+    combine_compressed, unflatten_sum, CombineOptions, FlatLayout, RFactorMethod, ScanConfig,
+    ScanOutput,
+};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Phase timings + communication tallies for one session.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    /// wall time from COMPRESS broadcast to last contribution received
+    pub compress_wall_s: f64,
+    /// leader-side combine time (aggregation + factorization + epilogue)
+    pub combine_s: f64,
+    /// total session wall time
+    pub total_s: f64,
+    /// bytes over all leader↔party links (both directions)
+    pub bytes_total: u64,
+    /// messages over all links
+    pub messages_total: u64,
+    /// bytes of the result broadcast alone (the O(M) downlink)
+    pub bytes_result: u64,
+}
+
+/// Leader state for one scan session over connected party endpoints.
+pub struct Leader<'a> {
+    pub endpoints: &'a [Endpoint],
+    pub cfg: &'a ScanConfig,
+    pub k: usize,
+    pub m: usize,
+}
+
+impl<'a> Leader<'a> {
+    /// Run the full session; returns scan output + metrics.
+    pub fn run(&self, seed: u64) -> anyhow::Result<(ScanOutput, SessionMetrics)> {
+        let t_start = Instant::now();
+        let parties = self.endpoints.len();
+        anyhow::ensure!(parties >= 1, "need at least one party");
+        let mut metrics = SessionMetrics::default();
+        let layout = FlatLayout { k: self.k, m: self.m };
+        let codec = FixedCodec::new(self.cfg.frac_bits);
+        let mut rng = Rng::new(seed);
+
+        // SETUP: pairwise seeds (simulated DH — delivered over the
+        // metered link so their cost is visible) + session params.
+        let backend_code = match self.cfg.backend {
+            Backend::Plaintext => 0u64,
+            Backend::Masked => 1,
+            Backend::Shamir { .. } => 2,
+        };
+        let threshold = match self.cfg.backend {
+            Backend::Shamir { threshold } => threshold,
+            _ => 0,
+        };
+        let seed_matrix = PairwiseMasker::session_seeds(parties, &mut rng);
+        for (p, ep) in self.endpoints.iter().enumerate() {
+            let setup = Setup {
+                party_index: p as u64,
+                parties: parties as u64,
+                backend: backend_code,
+                shamir_threshold: threshold as u64,
+                frac_bits: self.cfg.frac_bits as u64,
+                k: self.k as u64,
+                m: self.m as u64,
+                block_m: self.cfg.block_m as u64,
+                seeds: seed_matrix[p].clone(),
+            };
+            ep.send(&setup.to_frame())?;
+        }
+
+        // COMPRESS kick-off.
+        let t_compress = Instant::now();
+        for ep in self.endpoints {
+            ep.send(&Frame::new(TAG_COMPRESS))?;
+        }
+
+        // Collect contributions and aggregate by backend.
+        let (agg, party_rs) = match self.cfg.backend {
+            Backend::Plaintext => {
+                let mut sum = vec![0.0f64; layout.len()];
+                let mut rs = Vec::with_capacity(parties);
+                for ep in self.endpoints {
+                    let f = recv_ok(ep)?;
+                    let (flat, r) = parse_plain_stats(&f)?;
+                    anyhow::ensure!(flat.len() == layout.len(), "flat length mismatch");
+                    for (a, b) in sum.iter_mut().zip(&flat) {
+                        *a += b;
+                    }
+                    rs.push(r);
+                }
+                (unflatten_sum(layout, &sum)?, Some(rs))
+            }
+            Backend::Masked => {
+                let mut contributions = Vec::with_capacity(parties);
+                for ep in self.endpoints {
+                    let f = recv_ok(ep)?;
+                    let enc = parse_masked_stats(&f)?;
+                    anyhow::ensure!(enc.len() == layout.len(), "masked length mismatch");
+                    contributions.push(enc);
+                }
+                let ring_sum = aggregate_masked(&contributions);
+                (unflatten_sum(layout, &codec.decode_vec(&ring_sum))?, None)
+            }
+            Backend::Shamir { threshold } => {
+                // Round 1: collect each party's share fan-out.
+                let mut outgoing: Vec<Vec<Vec<u64>>> = Vec::with_capacity(parties);
+                for ep in self.endpoints {
+                    let f = recv_ok(ep)?;
+                    outgoing.push(parse_shamir_out(&f)?);
+                }
+                // Route: party q receives the q-th vector from every p.
+                for (q, ep) in self.endpoints.iter().enumerate() {
+                    let routed: Vec<Vec<u64>> =
+                        outgoing.iter().map(|o| o[q].clone()).collect();
+                    ep.send(&shamir_in_frame(&routed))?;
+                }
+                // Round 2: collect share-sums, reconstruct from the first
+                // `threshold` parties (any quorum works; tested).
+                let mut sums: Vec<Vec<u64>> = Vec::with_capacity(parties);
+                for ep in self.endpoints {
+                    let f = recv_ok(ep)?;
+                    sums.push(parse_shamir_sum(&f)?);
+                }
+                let quorum = threshold.min(parties);
+                let len = layout.len();
+                let mut flat = vec![0.0f64; len];
+                for (i, slot) in flat.iter_mut().enumerate() {
+                    let shares: Vec<crate::mpc::shamir::Share> = (0..quorum)
+                        .map(|q| crate::mpc::shamir::Share {
+                            x: q as u64 + 1,
+                            y: Fe(sums[q][i]),
+                        })
+                        .collect();
+                    let fe = crate::mpc::shamir::reconstruct(&shares);
+                    *slot = fe.to_i64() as f64 / codec.scale();
+                }
+                (unflatten_sum(layout, &flat)?, None)
+            }
+        };
+        metrics.compress_wall_s = t_compress.elapsed().as_secs_f64();
+
+        // COMBINE (leader-local, O(K³ + K²M), independent of N).
+        let t_combine = Instant::now();
+        let r_method = match (self.cfg.r_method, &party_rs) {
+            (RFactorMethod::Auto, Some(_)) => RFactorMethod::Tsqr,
+            (RFactorMethod::Auto, None) => RFactorMethod::Cholesky,
+            (m, _) => m,
+        };
+        let out = combine_compressed(
+            &agg,
+            party_rs.as_deref(),
+            CombineOptions { r_method },
+        )?;
+        metrics.combine_s = t_combine.elapsed().as_secs_f64();
+
+        // RESULT broadcast + shutdown (the O(M) downlink).
+        let bytes_before = self.total_bytes();
+        for ep in self.endpoints {
+            ep.send(&result_frame(&out.assoc.beta, &out.assoc.se))?;
+            ep.send(&Frame::new(TAG_SHUTDOWN))?;
+        }
+        metrics.bytes_result = self.total_bytes() - bytes_before;
+        metrics.total_s = t_start.elapsed().as_secs_f64();
+        metrics.bytes_total = self.total_bytes();
+        metrics.messages_total =
+            self.endpoints.iter().map(|e| e.meter().messages()).sum();
+        Ok((out, metrics))
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.endpoints.iter().map(|e| e.meter().bytes()).sum()
+    }
+}
+
+/// Receive a frame, converting a party-side ERROR report into an Err.
+fn recv_ok(ep: &Endpoint) -> anyhow::Result<Frame> {
+    let f = ep.recv()?;
+    if f.tag == TAG_ERROR {
+        anyhow::bail!("party error: {}", parse_error(&f));
+    }
+    Ok(f)
+}

@@ -1,0 +1,244 @@
+//! Protocol messages between leader and parties, over [`Frame`]s.
+//!
+//! One round-trip per phase: SETUP (session parameters + pairwise-mask
+//! seeds — in production these come from a DH exchange; the simulation
+//! delivers them in SETUP and the byte meter counts them), COMPRESS
+//! (kick off compress-within), one backend-specific contribution
+//! (PLAIN / MASKED / SHAMIR share routing), and RESULT broadcast.
+
+use crate::linalg::Matrix;
+use crate::net::Frame;
+
+pub const TAG_SETUP: u32 = 1;
+pub const TAG_COMPRESS: u32 = 2;
+pub const TAG_PLAIN_STATS: u32 = 3;
+pub const TAG_MASKED_STATS: u32 = 4;
+pub const TAG_SHAMIR_OUT: u32 = 5;
+pub const TAG_SHAMIR_IN: u32 = 6;
+pub const TAG_SHAMIR_SUM: u32 = 7;
+pub const TAG_RESULT: u32 = 8;
+pub const TAG_SHUTDOWN: u32 = 9;
+pub const TAG_ERROR: u32 = 10;
+
+/// Session parameters delivered to each party at SETUP.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Setup {
+    pub party_index: u64,
+    pub parties: u64,
+    /// 0 = plaintext, 1 = masked, 2 = shamir
+    pub backend: u64,
+    pub shamir_threshold: u64,
+    pub frac_bits: u64,
+    pub k: u64,
+    pub m: u64,
+    pub block_m: u64,
+    /// pairwise seeds, row `party_index` of the symmetric seed matrix
+    pub seeds: Vec<u64>,
+}
+
+impl Setup {
+    pub fn to_frame(&self) -> Frame {
+        let mut f = Frame::new(TAG_SETUP);
+        f.put_u64(self.party_index)
+            .put_u64(self.parties)
+            .put_u64(self.backend)
+            .put_u64(self.shamir_threshold)
+            .put_u64(self.frac_bits)
+            .put_u64(self.k)
+            .put_u64(self.m)
+            .put_u64(self.block_m)
+            .put_u64_slice(&self.seeds);
+        f
+    }
+
+    pub fn from_frame(f: &Frame) -> anyhow::Result<Setup> {
+        anyhow::ensure!(f.tag == TAG_SETUP, "expected SETUP, got tag {}", f.tag);
+        let mut r = f.reader();
+        Ok(Setup {
+            party_index: r.u64()?,
+            parties: r.u64()?,
+            backend: r.u64()?,
+            shamir_threshold: r.u64()?,
+            frac_bits: r.u64()?,
+            k: r.u64()?,
+            m: r.u64()?,
+            block_m: r.u64()?,
+            seeds: r.u64_vec()?,
+        })
+    }
+}
+
+/// Plaintext contribution: flat statistics + the party's R factor
+/// (for the TSQR combine path).
+pub fn plain_stats_frame(flat: &[f64], r: &Matrix) -> Frame {
+    let mut f = Frame::new(TAG_PLAIN_STATS);
+    f.put_f64_slice(flat);
+    f.put_u64(r.rows as u64);
+    f.put_f64_slice(&r.data);
+    f
+}
+
+pub fn parse_plain_stats(f: &Frame) -> anyhow::Result<(Vec<f64>, Matrix)> {
+    anyhow::ensure!(f.tag == TAG_PLAIN_STATS, "expected PLAIN_STATS");
+    let mut rd = f.reader();
+    let flat = rd.f64_vec()?;
+    let k = rd.u64()? as usize;
+    let data = rd.f64_vec()?;
+    anyhow::ensure!(data.len() == k * k, "R not square");
+    Ok((flat, Matrix::from_vec(k, k, data)))
+}
+
+/// Masked contribution: ring elements after fixed-point encode + masking.
+pub fn masked_stats_frame(masked: &[u64]) -> Frame {
+    let mut f = Frame::new(TAG_MASKED_STATS);
+    f.put_u64_slice(masked);
+    f
+}
+
+pub fn parse_masked_stats(f: &Frame) -> anyhow::Result<Vec<u64>> {
+    anyhow::ensure!(f.tag == TAG_MASKED_STATS, "expected MASKED_STATS");
+    f.reader().u64_vec()
+}
+
+/// Shamir share fan-out: the `parties` share vectors produced by this
+/// party, destined one per recipient (routed by the leader; encrypted
+/// pairwise in a real deployment).
+pub fn shamir_out_frame(share_ys: &[Vec<u64>]) -> Frame {
+    let mut f = Frame::new(TAG_SHAMIR_OUT);
+    f.put_u64(share_ys.len() as u64);
+    for v in share_ys {
+        f.put_u64_slice(v);
+    }
+    f
+}
+
+pub fn parse_shamir_out(f: &Frame) -> anyhow::Result<Vec<Vec<u64>>> {
+    anyhow::ensure!(f.tag == TAG_SHAMIR_OUT, "expected SHAMIR_OUT");
+    let mut rd = f.reader();
+    let p = rd.u64()? as usize;
+    (0..p).map(|_| rd.u64_vec()).collect()
+}
+
+/// Shares routed to one party: one vector per contributor.
+pub fn shamir_in_frame(shares: &[Vec<u64>]) -> Frame {
+    let mut f = Frame::new(TAG_SHAMIR_IN);
+    f.put_u64(shares.len() as u64);
+    for v in shares {
+        f.put_u64_slice(v);
+    }
+    f
+}
+
+pub fn parse_shamir_in(f: &Frame) -> anyhow::Result<Vec<Vec<u64>>> {
+    anyhow::ensure!(f.tag == TAG_SHAMIR_IN, "expected SHAMIR_IN");
+    let mut rd = f.reader();
+    let p = rd.u64()? as usize;
+    (0..p).map(|_| rd.u64_vec()).collect()
+}
+
+/// Per-party share-sum returned to the leader for reconstruction.
+pub fn shamir_sum_frame(sum: &[u64]) -> Frame {
+    let mut f = Frame::new(TAG_SHAMIR_SUM);
+    f.put_u64_slice(sum);
+    f
+}
+
+pub fn parse_shamir_sum(f: &Frame) -> anyhow::Result<Vec<u64>> {
+    anyhow::ensure!(f.tag == TAG_SHAMIR_SUM, "expected SHAMIR_SUM");
+    f.reader().u64_vec()
+}
+
+/// Result broadcast: β̂ and σ̂ per variant (the `O(M)` downlink).
+pub fn result_frame(beta: &[f64], se: &[f64]) -> Frame {
+    let mut f = Frame::new(TAG_RESULT);
+    f.put_f64_slice(beta);
+    f.put_f64_slice(se);
+    f
+}
+
+pub fn parse_result(f: &Frame) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+    anyhow::ensure!(f.tag == TAG_RESULT, "expected RESULT");
+    let mut rd = f.reader();
+    Ok((rd.f64_vec()?, rd.f64_vec()?))
+}
+
+/// Error report from a party.
+pub fn error_frame(msg: &str) -> Frame {
+    let mut f = Frame::new(TAG_ERROR);
+    f.put_bytes(msg.as_bytes());
+    f
+}
+
+pub fn parse_error(f: &Frame) -> String {
+    f.reader()
+        .bytes()
+        .ok()
+        .and_then(|b| String::from_utf8(b).ok())
+        .unwrap_or_else(|| "<malformed error>".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setup_roundtrip() {
+        let s = Setup {
+            party_index: 2,
+            parties: 5,
+            backend: 1,
+            shamir_threshold: 3,
+            frac_bits: 24,
+            k: 12,
+            m: 1000,
+            block_m: 256,
+            seeds: vec![1, 2, 3, 4, 5],
+        };
+        assert_eq!(Setup::from_frame(&s.to_frame()).unwrap(), s);
+    }
+
+    #[test]
+    fn plain_stats_roundtrip() {
+        let r = Matrix::from_rows(&[&[1.0, 2.0], &[0.0, 3.0]]);
+        let f = plain_stats_frame(&[1.5, -2.5], &r);
+        let (flat, r2) = parse_plain_stats(&f).unwrap();
+        assert_eq!(flat, vec![1.5, -2.5]);
+        assert_eq!(r2, r);
+    }
+
+    #[test]
+    fn masked_roundtrip() {
+        let f = masked_stats_frame(&[u64::MAX, 0, 42]);
+        assert_eq!(parse_masked_stats(&f).unwrap(), vec![u64::MAX, 0, 42]);
+    }
+
+    #[test]
+    fn shamir_roundtrips() {
+        let shares = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
+        assert_eq!(parse_shamir_out(&shamir_out_frame(&shares)).unwrap(), shares);
+        assert_eq!(parse_shamir_in(&shamir_in_frame(&shares)).unwrap(), shares);
+        assert_eq!(parse_shamir_sum(&shamir_sum_frame(&shares[0])).unwrap(), shares[0]);
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let f = result_frame(&[0.1, f64::NAN], &[1.0, 2.0]);
+        let (b, s) = parse_result(&f).unwrap();
+        assert_eq!(b[0], 0.1);
+        assert!(b[1].is_nan());
+        assert_eq!(s, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn wrong_tag_rejected() {
+        let f = Frame::new(TAG_COMPRESS);
+        assert!(parse_result(&f).is_err());
+        assert!(Setup::from_frame(&f).is_err());
+    }
+
+    #[test]
+    fn error_frame_roundtrip() {
+        let f = error_frame("boom");
+        assert_eq!(parse_error(&f), "boom");
+    }
+}

@@ -1,0 +1,233 @@
+//! Multi-party coordinator — the paper's system contribution.
+//!
+//! The leader ([`leader`]) orchestrates sessions over byte-metered
+//! endpoints; parties ([`party`]) run compress-within locally (pure Rust
+//! or the AOT artifacts) and participate in the secure combine.
+//! [`run_multi_party_scan`] wires an in-process deployment (one thread
+//! per party), which is also what the benches and examples drive;
+//! `--transport tcp` in the launcher swaps in localhost sockets with the
+//! same protocol bytes.
+
+pub mod messages;
+pub mod party;
+pub mod leader;
+pub mod incremental;
+
+pub use incremental::IncrementalAggregate;
+pub use leader::{Leader, SessionMetrics};
+pub use party::{ComputeBackend, PartyResult};
+
+use crate::gwas::Cohort;
+use crate::net::{duplex_pair, tcp_pair, ByteMeter};
+use crate::scan::{ScanConfig, ScanOutput};
+
+/// Which transport an in-process deployment uses between leader and
+/// parties.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    InProc,
+    Tcp,
+}
+
+/// Result of [`run_multi_party_scan`].
+pub struct MultiPartyScanResult {
+    pub output: ScanOutput,
+    pub metrics: SessionMetrics,
+    /// per-party link byte counts (uplink + downlink)
+    pub party_bytes: Vec<u64>,
+}
+
+/// Run a full multi-party scan over a cohort with one thread per party.
+pub fn run_multi_party_scan(
+    cohort: &Cohort,
+    cfg: &ScanConfig,
+) -> anyhow::Result<MultiPartyScanResult> {
+    run_multi_party_scan_t(cohort, cfg, Transport::InProc, 0xDA5 << 16)
+}
+
+/// As [`run_multi_party_scan`] with explicit transport and session seed.
+pub fn run_multi_party_scan_t(
+    cohort: &Cohort,
+    cfg: &ScanConfig,
+    transport: Transport,
+    seed: u64,
+) -> anyhow::Result<MultiPartyScanResult> {
+    let parties = cohort.parties.len();
+    let k = cohort.k();
+    let m = cohort.m();
+
+    let mut leader_eps = Vec::with_capacity(parties);
+    let mut party_eps = Vec::with_capacity(parties);
+    let mut meters = Vec::with_capacity(parties);
+    for _ in 0..parties {
+        let meter = ByteMeter::new();
+        let (l, p) = match transport {
+            Transport::InProc => duplex_pair(meter.clone()),
+            Transport::Tcp => tcp_pair(meter.clone())?,
+        };
+        leader_eps.push(l);
+        party_eps.push(p);
+        meters.push(meter);
+    }
+
+    let cfg2 = cfg.clone();
+    let output = std::thread::scope(|s| -> anyhow::Result<(ScanOutput, SessionMetrics)> {
+        let mut handles = Vec::with_capacity(parties);
+        for (idx, ep) in party_eps.into_iter().enumerate() {
+            let data = &cohort.parties[idx];
+            let cfg = &cfg2;
+            handles.push(s.spawn(move || -> anyhow::Result<PartyResult> {
+                let compute = if cfg.use_artifacts {
+                    // each party owns its engine (PJRT handles are !Send)
+                    party::ComputeBackend::Artifacts(Box::new(
+                        crate::runtime::Engine::load(&cfg.artifacts_dir)?,
+                    ))
+                } else {
+                    party::ComputeBackend::Rust { threads: cfg.threads }
+                };
+                party::serve(&ep, data, &compute)
+            }));
+        }
+        let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m };
+        let out = leader.run(seed);
+        for (i, h) in handles.into_iter().enumerate() {
+            let joined = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("party {i} thread panicked"))?;
+            joined.map_err(|e| anyhow::anyhow!("party {i}: {e:#}"))?;
+        }
+        out
+    })?;
+
+    Ok(MultiPartyScanResult {
+        output: output.0,
+        metrics: output.1,
+        party_bytes: meters.iter().map(|m| m.bytes()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::{generate_cohort, pool_cohort, CohortSpec};
+    use crate::linalg::rel_err;
+    use crate::mpc::Backend;
+    use crate::scan::{combine_compressed, compress_party, flatten_for_sum, unflatten_sum,
+        CombineOptions, RFactorMethod};
+
+    fn pooled_oracle(cohort: &crate::gwas::Cohort) -> crate::scan::ScanOutput {
+        let pooled = pool_cohort(cohort);
+        let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, Some(2));
+        let (layout, flat) = flatten_for_sum(&cp);
+        let agg = unflatten_sum(layout, &flat).unwrap();
+        combine_compressed(
+            &agg,
+            Some(std::slice::from_ref(&cp.r)),
+            CombineOptions { r_method: RFactorMethod::Tsqr },
+        )
+        .unwrap()
+    }
+
+    fn small_cfg(backend: Backend) -> ScanConfig {
+        ScanConfig { backend, block_m: 64, threads: Some(2), ..ScanConfig::default() }
+    }
+
+    #[test]
+    fn plaintext_backend_matches_pooled_oracle() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 160);
+        let res =
+            run_multi_party_scan(&cohort, &small_cfg(Backend::Plaintext)).unwrap();
+        let oracle = pooled_oracle(&cohort);
+        assert!(rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-10);
+        assert!(rel_err(&res.output.assoc.se, &oracle.assoc.se) < 1e-10);
+    }
+
+    #[test]
+    fn masked_backend_matches_oracle_to_fixed_point() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 161);
+        let res = run_multi_party_scan(&cohort, &small_cfg(Backend::Masked)).unwrap();
+        let oracle = pooled_oracle(&cohort);
+        // fixed-point: absolute error ~2^-24 on sums, relative ~1e-6 on stats
+        for j in 0..cohort.m() {
+            let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+            if a.is_finite() && b.is_finite() {
+                assert!(
+                    (a - b).abs() < 1e-4 * b.abs().max(1.0),
+                    "beta[{j}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shamir_backend_matches_oracle_to_fixed_point() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 162);
+        let res = run_multi_party_scan(
+            &cohort,
+            &small_cfg(Backend::Shamir { threshold: 2 }),
+        )
+        .unwrap();
+        let oracle = pooled_oracle(&cohort);
+        for j in 0..cohort.m() {
+            let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+            if a.is_finite() && b.is_finite() {
+                assert!(
+                    (a - b).abs() < 1e-4 * b.abs().max(1.0),
+                    "beta[{j}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_transport_gives_same_answer_and_bytes() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 163);
+        let cfg = small_cfg(Backend::Masked);
+        let a = run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 99).unwrap();
+        // The TCP run contends for sockets/threads with the rest of the
+        // parallel test suite; allow one retry before judging (the byte
+        // accounting itself is deterministic — see net::transport's
+        // byte_counts_match_across_transports).
+        let mut last = None;
+        for _attempt in 0..2 {
+            let b = run_multi_party_scan_t(&cohort, &cfg, Transport::Tcp, 99).unwrap();
+            let ok = rel_err(&a.output.assoc.beta, &b.output.assoc.beta) < 1e-12
+                && a.metrics.bytes_total == b.metrics.bytes_total;
+            last = Some((b.metrics.bytes_total, ok));
+            if ok {
+                return;
+            }
+        }
+        panic!(
+            "tcp mismatch after retry: inproc {} bytes vs tcp {:?}",
+            a.metrics.bytes_total, last
+        );
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 164);
+        let res = run_multi_party_scan(&cohort, &small_cfg(Backend::Masked)).unwrap();
+        assert!(res.metrics.bytes_total > 0);
+        assert!(res.metrics.bytes_result > 0);
+        assert!(res.metrics.total_s > 0.0);
+        assert_eq!(res.party_bytes.len(), 3);
+        assert!(res.party_bytes.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn detects_top_causal_hits() {
+        let mut spec = CohortSpec::default_small();
+        spec.effect_sd = 0.8;
+        spec.party_sizes = vec![400, 350, 300];
+        let cohort = generate_cohort(&spec, 165);
+        let res = run_multi_party_scan(&cohort, &small_cfg(Backend::Masked)).unwrap();
+        let hits = res.output.hits(1e-6);
+        // at least one strong causal variant should surface
+        assert!(
+            hits.iter().any(|h| cohort.truth.causal_idx.contains(h)),
+            "hits {hits:?} vs causal {:?}",
+            cohort.truth.causal_idx
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Party-side protocol state machine.
+//!
+//! A party owns its local `(y, C, X)` and an [`Endpoint`] to the leader.
+//! [`serve`] runs the session: SETUP → COMPRESS → backend-specific
+//! contribution → (shamir share routing) → RESULT → SHUTDOWN. The raw
+//! data never crosses the endpoint; only compressed (and, in secure
+//! modes, encoded+masked/shared) statistics do.
+
+use super::messages::*;
+use crate::gwas::PartyData;
+use crate::mpc::field::Fe;
+use crate::mpc::fixed::FixedCodec;
+use crate::mpc::masking::PairwiseMasker;
+use crate::mpc::shamir;
+use crate::net::Endpoint;
+use crate::runtime::Engine;
+use crate::scan::{compress_party, flatten_for_sum, CompressedParty};
+
+/// How a party computes its compress stage.
+pub enum ComputeBackend {
+    /// pure-Rust reference path
+    Rust { threads: Option<usize> },
+    /// AOT artifacts through the PJRT runtime
+    Artifacts(Box<Engine>),
+}
+
+impl ComputeBackend {
+    fn compress(
+        &self,
+        data: &PartyData,
+        block_m: usize,
+    ) -> anyhow::Result<CompressedParty> {
+        match self {
+            ComputeBackend::Rust { threads } => {
+                Ok(compress_party(&data.y, &data.c, &data.x, block_m, *threads))
+            }
+            ComputeBackend::Artifacts(engine) => engine.compress_party(&data.y, &data.c, &data.x),
+        }
+    }
+}
+
+/// Result a party receives at the end of a session.
+#[derive(Clone, Debug)]
+pub struct PartyResult {
+    pub beta: Vec<f64>,
+    pub se: Vec<f64>,
+}
+
+/// Run the party side of one scan session. Returns the broadcast result.
+pub fn serve(
+    endpoint: &Endpoint,
+    data: &PartyData,
+    compute: &ComputeBackend,
+) -> anyhow::Result<PartyResult> {
+    match serve_inner(endpoint, data, compute) {
+        Ok(r) => Ok(r),
+        Err(e) => {
+            // Best-effort error report so the leader can fail fast.
+            let _ = endpoint.send(&error_frame(&format!("{e:#}")));
+            Err(e)
+        }
+    }
+}
+
+fn serve_inner(
+    endpoint: &Endpoint,
+    data: &PartyData,
+    compute: &ComputeBackend,
+) -> anyhow::Result<PartyResult> {
+    let setup = Setup::from_frame(&endpoint.recv()?)?;
+    anyhow::ensure!(setup.k as usize == data.c.cols, "setup K mismatch");
+    anyhow::ensure!(setup.m as usize == data.x.cols, "setup M mismatch");
+
+    let f = endpoint.recv()?;
+    anyhow::ensure!(f.tag == TAG_COMPRESS, "expected COMPRESS, got {}", f.tag);
+
+    let cp = compute.compress(data, setup.block_m as usize)?;
+    let (_, flat) = flatten_for_sum(&cp);
+    let codec = FixedCodec::new(setup.frac_bits as u32);
+
+    match setup.backend {
+        0 => {
+            // plaintext: flat stats + R_p for the TSQR combine
+            endpoint.send(&plain_stats_frame(&flat, &cp.r))?;
+        }
+        1 => {
+            // masked secure aggregation
+            let mut enc = codec.encode_vec(&flat)?;
+            let mut masker = PairwiseMasker::new(
+                setup.party_index as usize,
+                setup.parties as usize,
+                setup.seeds.clone(),
+            );
+            masker.mask_in_place(&mut enc);
+            endpoint.send(&masked_stats_frame(&enc))?;
+        }
+        2 => {
+            // Shamir: share the encoded vector to all parties via leader
+            let parties = setup.parties as usize;
+            let threshold = setup.shamir_threshold as usize;
+            let mut rng = crate::util::rng::Rng::new(
+                setup.seeds.iter().fold(0x5A17u64, |a, &s| a ^ s.rotate_left(17))
+                    ^ setup.party_index.wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let secrets: Vec<Fe> = flat
+                .iter()
+                .map(|&v| Ok(Fe::from_i64(codec.encode(v)? as i64)))
+                .collect::<anyhow::Result<_>>()?;
+            let share_vecs = shamir::share_vec(&secrets, parties, threshold, &mut rng);
+            // ship y-values only; x is implied by recipient index + 1
+            let ys: Vec<Vec<u64>> = share_vecs
+                .iter()
+                .map(|sv| sv.iter().map(|s| s.y.0).collect())
+                .collect();
+            endpoint.send(&shamir_out_frame(&ys))?;
+            // receive the shares routed to me, sum share-wise, return
+            let incoming = parse_shamir_in(&endpoint.recv()?)?;
+            anyhow::ensure!(!incoming.is_empty(), "no shares routed");
+            let mut acc = vec![0u64; incoming[0].len()];
+            for sv in &incoming {
+                // field addition per element
+                anyhow::ensure!(sv.len() == acc.len(), "share length mismatch");
+                for (a, &s) in acc.iter_mut().zip(sv) {
+                    *a = Fe(*a).add(Fe(s)).0;
+                }
+            }
+            endpoint.send(&shamir_sum_frame(&acc))?;
+        }
+        b => anyhow::bail!("unknown backend {b}"),
+    }
+
+    let (beta, se) = parse_result(&endpoint.recv()?)?;
+    let f = endpoint.recv()?;
+    anyhow::ensure!(f.tag == TAG_SHUTDOWN, "expected SHUTDOWN");
+    Ok(PartyResult { beta, se })
+}

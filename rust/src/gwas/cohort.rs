@@ -1,0 +1,283 @@
+//! Multi-party cohort assembly: genotypes, covariates, traits, truth.
+
+use super::genotypes::{sample_allele_freqs, VariantFreqs};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Specification of a synthetic multi-center cohort.
+#[derive(Clone, Debug)]
+pub struct CohortSpec {
+    /// samples per party
+    pub party_sizes: Vec<usize>,
+    /// number of variants to scan (M)
+    pub m_variants: usize,
+    /// number of causal variants
+    pub n_causal: usize,
+    /// effect-size scale of causal variants (per standardized genotype)
+    pub effect_sd: f64,
+    /// population divergence
+    pub fst: f64,
+    /// per-party mean admixture of population 1 (length = parties);
+    /// heterogeneous values make ancestry a cross-party confounder
+    pub party_admixture: Vec<f64>,
+    /// strength of the ancestry → trait confounding path
+    pub ancestry_effect: f64,
+    /// per-party additive batch effect scale on the trait
+    pub batch_effect_sd: f64,
+    /// number of "PC score" covariates (noisy admixture projections)
+    pub n_pcs: usize,
+    /// residual noise sd
+    pub noise_sd: f64,
+}
+
+impl CohortSpec {
+    /// Small default (unit tests, quickstart): 3 parties, ~600 samples.
+    pub fn default_small() -> CohortSpec {
+        CohortSpec {
+            party_sizes: vec![250, 200, 150],
+            m_variants: 300,
+            n_causal: 5,
+            effect_sd: 0.35,
+            fst: 0.05,
+            party_admixture: vec![0.2, 0.5, 0.8],
+            ancestry_effect: 0.5,
+            batch_effect_sd: 0.2,
+            n_pcs: 2,
+            noise_sd: 1.0,
+        }
+    }
+
+    /// Number of permanent covariates K = intercept + age + sex + PCs.
+    pub fn k_covariates(&self) -> usize {
+        3 + self.n_pcs
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.party_sizes.iter().sum()
+    }
+
+    pub fn parties(&self) -> usize {
+        self.party_sizes.len()
+    }
+
+    fn validate(&self) {
+        assert!(!self.party_sizes.is_empty(), "need ≥1 party");
+        assert_eq!(
+            self.party_admixture.len(),
+            self.party_sizes.len(),
+            "party_admixture length must match party_sizes"
+        );
+        assert!(self.n_causal <= self.m_variants);
+        for &n in &self.party_sizes {
+            assert!(
+                n > self.k_covariates() + 1,
+                "party size {n} too small for K={} covariates",
+                self.k_covariates()
+            );
+        }
+    }
+}
+
+/// One party's local data (never leaves the party in secure modes).
+#[derive(Clone, Debug)]
+pub struct PartyData {
+    /// response vector, length N_p
+    pub y: Vec<f64>,
+    /// permanent covariates, N_p × K (column 0 = intercept)
+    pub c: Matrix,
+    /// transient covariates (genotypes), N_p × M
+    pub x: Matrix,
+}
+
+impl PartyData {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Ground truth of the simulation (for power/FDR evaluation only — not
+/// visible to the protocol).
+#[derive(Clone, Debug)]
+pub struct Truth {
+    pub causal_idx: Vec<usize>,
+    pub causal_beta: Vec<f64>,
+    pub freqs: Vec<VariantFreqs>,
+}
+
+/// A full multi-party cohort.
+#[derive(Clone, Debug)]
+pub struct Cohort {
+    pub spec: CohortSpec,
+    pub parties: Vec<PartyData>,
+    pub truth: Truth,
+}
+
+impl Cohort {
+    pub fn k(&self) -> usize {
+        self.spec.k_covariates()
+    }
+
+    pub fn m(&self) -> usize {
+        self.spec.m_variants
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.parties.iter().map(|p| p.n()).sum()
+    }
+}
+
+/// Generate a cohort from a spec, deterministically in `seed`.
+pub fn generate_cohort(spec: &CohortSpec, seed: u64) -> Cohort {
+    spec.validate();
+    let mut rng = Rng::new(seed);
+    let m = spec.m_variants;
+    let k = spec.k_covariates();
+    let freqs = sample_allele_freqs(m, spec.fst, 0.05, &mut rng);
+
+    // causal architecture
+    let mut idx: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut idx);
+    let causal_idx: Vec<usize> = idx[..spec.n_causal].to_vec();
+    let causal_beta: Vec<f64> =
+        (0..spec.n_causal).map(|_| rng.normal_ms(0.0, spec.effect_sd)).collect();
+
+    let mut parties = Vec::with_capacity(spec.parties());
+    for (p, &np) in spec.party_sizes.iter().enumerate() {
+        let mut prng = rng.derive(1000 + p as u64);
+        let batch = prng.normal_ms(0.0, spec.batch_effect_sd);
+        let mut c = Matrix::zeros(np, k);
+        let mut x = Matrix::zeros(np, m);
+        let mut y = vec![0.0; np];
+        for i in 0..np {
+            // individual admixture around the party mean
+            let theta = (spec.party_admixture[p] + prng.normal_ms(0.0, 0.1)).clamp(0.0, 1.0);
+            // covariates: intercept, age (standardized), sex ∈ {0,1}
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = prng.normal();
+            c[(i, 2)] = if prng.uniform() < 0.5 { 0.0 } else { 1.0 };
+            // "PC scores": noisy projections of ancestry, as produced by a
+            // public reference-panel projection (paper §1)
+            for pc in 0..spec.n_pcs {
+                let signal = if pc == 0 { theta } else { theta * theta };
+                c[(i, 3 + pc)] = signal + prng.normal_ms(0.0, 0.05);
+            }
+            // genotypes
+            for j in 0..m {
+                x[(i, j)] = freqs[j].genotype(theta, &mut prng);
+            }
+            // trait: causal effects on standardized genotypes + covariate
+            // effects + ancestry confounding + batch + noise
+            let mut v = 0.2 * c[(i, 1)] - 0.1 * c[(i, 2)]
+                + spec.ancestry_effect * theta
+                + batch
+                + prng.normal_ms(0.0, spec.noise_sd);
+            for (ci, &j) in causal_idx.iter().enumerate() {
+                let f = freqs[j].ancestral;
+                let sd = (2.0 * f * (1.0 - f)).sqrt();
+                v += causal_beta[ci] * (x[(i, j)] - 2.0 * f) / sd;
+            }
+            y[i] = v;
+        }
+        parties.push(PartyData { y, c, x });
+    }
+
+    Cohort { spec: spec.clone(), parties, truth: Truth { causal_idx, causal_beta, freqs } }
+}
+
+/// Pool a cohort into single-party matrices (oracle / baseline path).
+pub fn pool_cohort(cohort: &Cohort) -> PartyData {
+    let ys: Vec<f64> = cohort.parties.iter().flat_map(|p| p.y.iter().copied()).collect();
+    let cs: Vec<&Matrix> = cohort.parties.iter().map(|p| &p.c).collect();
+    let xs: Vec<&Matrix> = cohort.parties.iter().map(|p| &p.x).collect();
+    PartyData { y: ys, c: Matrix::vstack(&cs), x: Matrix::vstack(&xs) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_spec() {
+        let spec = CohortSpec::default_small();
+        let cohort = generate_cohort(&spec, 7);
+        assert_eq!(cohort.parties.len(), 3);
+        for (p, party) in cohort.parties.iter().enumerate() {
+            assert_eq!(party.n(), spec.party_sizes[p]);
+            assert_eq!(party.c.cols, spec.k_covariates());
+            assert_eq!(party.x.cols, spec.m_variants);
+        }
+        assert_eq!(cohort.truth.causal_idx.len(), spec.n_causal);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let spec = CohortSpec::default_small();
+        let a = generate_cohort(&spec, 9);
+        let b = generate_cohort(&spec, 9);
+        assert_eq!(a.parties[0].y, b.parties[0].y);
+        assert_eq!(a.parties[2].x.data, b.parties[2].x.data);
+        let c = generate_cohort(&spec, 10);
+        assert_ne!(a.parties[0].y, c.parties[0].y);
+    }
+
+    #[test]
+    fn genotypes_are_dosages() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 11);
+        for p in &cohort.parties {
+            for v in &p.x.data {
+                assert!(*v == 0.0 || *v == 1.0 || *v == 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn intercept_column_is_ones() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 12);
+        for p in &cohort.parties {
+            for i in 0..p.n() {
+                assert_eq!(p.c[(i, 0)], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_preserves_order_and_counts() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 13);
+        let pooled = pool_cohort(&cohort);
+        assert_eq!(pooled.n(), cohort.n_total());
+        assert_eq!(pooled.y[0], cohort.parties[0].y[0]);
+        let n0 = cohort.parties[0].n();
+        assert_eq!(pooled.y[n0], cohort.parties[1].y[0]);
+        assert_eq!(pooled.x.rows, cohort.n_total());
+    }
+
+    #[test]
+    fn admixture_differs_across_parties() {
+        // party 0 (theta≈0.2) should have different pop-1-allele load than
+        // party 2 (theta≈0.8) at highly diverged variants
+        let mut spec = CohortSpec::default_small();
+        spec.fst = 0.3;
+        let cohort = generate_cohort(&spec, 14);
+        let f = &cohort.truth.freqs;
+        // pick the most diverged variant
+        let j = (0..spec.m_variants)
+            .max_by(|&a, &b| {
+                let da = (f[a].pop[0] - f[a].pop[1]).abs();
+                let db = (f[b].pop[0] - f[b].pop[1]).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap();
+        let mean = |p: &PartyData| p.x.col(j).iter().sum::<f64>() / p.n() as f64;
+        let m0 = mean(&cohort.parties[0]);
+        let m2 = mean(&cohort.parties[2]);
+        assert!((m0 - m2).abs() > 0.1, "m0={m0} m2={m2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "party_admixture")]
+    fn mismatched_admixture_panics() {
+        let mut spec = CohortSpec::default_small();
+        spec.party_admixture = vec![0.5];
+        let _ = generate_cohort(&spec, 1);
+    }
+}

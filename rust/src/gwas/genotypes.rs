@@ -1,0 +1,114 @@
+//! Balding–Nichols allele-frequency model and genotype sampling.
+
+use crate::util::rng::Rng;
+
+/// Per-variant allele frequencies in two diverged populations.
+#[derive(Clone, Debug)]
+pub struct VariantFreqs {
+    /// ancestral minor-allele frequency
+    pub ancestral: f64,
+    /// population-specific frequencies [pop0, pop1]
+    pub pop: [f64; 2],
+}
+
+/// Sample `m` variants: ancestral MAF ~ U(maf_min, 0.5), population
+/// frequencies from the Balding–Nichols Beta with divergence `fst`.
+pub fn sample_allele_freqs(m: usize, fst: f64, maf_min: f64, rng: &mut Rng) -> Vec<VariantFreqs> {
+    assert!((0.0..1.0).contains(&fst));
+    assert!(maf_min > 0.0 && maf_min < 0.5);
+    (0..m)
+        .map(|_| {
+            let p = rng.uniform_range(maf_min, 0.5);
+            let pop = if fst == 0.0 {
+                [p, p]
+            } else {
+                let a = p * (1.0 - fst) / fst;
+                let b = (1.0 - p) * (1.0 - fst) / fst;
+                // clamp away from {0,1} so genotypes stay polymorphic
+                [
+                    rng.beta(a, b).clamp(0.01, 0.99),
+                    rng.beta(a, b).clamp(0.01, 0.99),
+                ]
+            };
+            VariantFreqs { ancestral: p, pop }
+        })
+        .collect()
+}
+
+impl VariantFreqs {
+    /// Allele frequency for an individual with admixture proportion
+    /// `theta` of population 1.
+    #[inline]
+    pub fn freq_for(&self, theta: f64) -> f64 {
+        (1.0 - theta) * self.pop[0] + theta * self.pop[1]
+    }
+
+    /// Draw a diploid genotype (0/1/2) for admixture `theta`.
+    #[inline]
+    pub fn genotype(&self, theta: f64, rng: &mut Rng) -> f64 {
+        rng.binomial(2, self.freq_for(theta)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freqs_in_range() {
+        let mut rng = Rng::new(120);
+        let fs = sample_allele_freqs(500, 0.1, 0.05, &mut rng);
+        assert_eq!(fs.len(), 500);
+        for f in &fs {
+            assert!((0.05..=0.5).contains(&f.ancestral));
+            for &p in &f.pop {
+                assert!((0.01..=0.99).contains(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_fst_means_identical_pops() {
+        let mut rng = Rng::new(121);
+        let fs = sample_allele_freqs(100, 0.0, 0.05, &mut rng);
+        for f in &fs {
+            assert_eq!(f.pop[0], f.pop[1]);
+        }
+    }
+
+    #[test]
+    fn higher_fst_more_divergence() {
+        let mut rng = Rng::new(122);
+        let div = |fst: f64, rng: &mut Rng| -> f64 {
+            sample_allele_freqs(2000, fst, 0.05, rng)
+                .iter()
+                .map(|f| (f.pop[0] - f.pop[1]).abs())
+                .sum::<f64>()
+                / 2000.0
+        };
+        let low = div(0.01, &mut rng);
+        let high = div(0.3, &mut rng);
+        assert!(high > 2.0 * low, "low={low} high={high}");
+    }
+
+    #[test]
+    fn genotype_mean_tracks_frequency() {
+        let mut rng = Rng::new(123);
+        let f = VariantFreqs { ancestral: 0.3, pop: [0.2, 0.6] };
+        let n = 20_000;
+        for &theta in &[0.0, 0.5, 1.0] {
+            let want = 2.0 * f.freq_for(theta);
+            let got: f64 =
+                (0..n).map(|_| f.genotype(theta, &mut rng)).sum::<f64>() / n as f64;
+            assert!((got - want).abs() < 0.02, "theta={theta}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn admixture_interpolates() {
+        let f = VariantFreqs { ancestral: 0.3, pop: [0.1, 0.9] };
+        assert!((f.freq_for(0.0) - 0.1).abs() < 1e-15);
+        assert!((f.freq_for(1.0) - 0.9).abs() < 1e-15);
+        assert!((f.freq_for(0.5) - 0.5).abs() < 1e-15);
+    }
+}

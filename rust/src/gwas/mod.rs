@@ -1,0 +1,17 @@
+//! Synthetic multi-center GWAS workload generator.
+//!
+//! Substitute for the private institutional data the paper's setting
+//! assumes (see DESIGN.md §Substitutions): genotypes follow a
+//! Balding–Nichols two-population model with configurable F_ST, parties
+//! differ in sample size and admixture (so ancestry is a real confounder,
+//! exactly the situation where the paper's pooled covariate-adjusted scan
+//! beats per-party meta-analysis), covariates include intercept, age,
+//! sex, and "reference-panel PC scores" (noisy individual admixture, as
+//! computed securely by each center in the paper's §1), and traits are
+//! linear in a sparse causal set plus ancestry and party batch effects.
+
+mod genotypes;
+mod cohort;
+
+pub use cohort::{generate_cohort, pool_cohort, Cohort, CohortSpec, PartyData, Truth};
+pub use genotypes::{sample_allele_freqs, VariantFreqs};

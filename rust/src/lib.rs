@@ -1,0 +1,33 @@
+//! # DASH — Distributed Association Scan Hammer
+//!
+//! A production-oriented implementation of *Secure multi-party linear
+//! regression at plaintext speed* (Jonathan M. Bloom, 2019).
+//!
+//! The library is organised in three layers:
+//!
+//! - **Layer 3 (this crate)** — the multi-party *coordinator*: party and
+//!   leader state machines ([`coordinator`]), an SMC substrate ([`mpc`]),
+//!   byte-metered transports ([`net`]), and the high-level scan engine
+//!   ([`scan`]).
+//! - **Layer 2** — a JAX model (`python/compile/model.py`) computing the
+//!   compressed sufficient statistics and the Lemma 3.1 epilogue, lowered
+//!   once to HLO text artifacts.
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   blocked Gram/cross-product hot spot, lowered into the same HLO.
+//!
+//! At runtime the Rust binary loads the artifacts through the PJRT C API
+//! ([`runtime`]); Python is never on the request path.
+
+pub mod util;
+pub mod linalg;
+pub mod stats;
+pub mod mpc;
+pub mod net;
+pub mod gwas;
+pub mod scan;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

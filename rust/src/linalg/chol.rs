@@ -1,0 +1,81 @@
+//! Cholesky factorization.
+//!
+//! Used by the *secure* combine path: under SMC the parties reveal only
+//! the aggregate Gram matrix `CᵀC = Σ_p C_pᵀC_p`, and `R = cholᵀ(CᵀC)`
+//! is mathematically the same `R` as Lemma 4.1's TSQR (both are the
+//! unique positive-diagonal Cholesky factor of `CᵀC`), at the cost of a
+//! squared condition number. The E9 ablation quantifies the gap.
+
+use super::dense::Matrix;
+
+/// Upper-triangular Cholesky factor `U` with `a = Uᵀ U`.
+/// Errors if `a` is not (numerically) symmetric positive definite.
+pub fn cholesky_upper(a: &Matrix) -> anyhow::Result<Matrix> {
+    let n = a.rows;
+    anyhow::ensure!(a.cols == n, "cholesky requires square input");
+    let mut u = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut sum = a[(i, j)];
+            for k in 0..i {
+                sum -= u[(k, i)] * u[(k, j)];
+            }
+            if i == j {
+                anyhow::ensure!(
+                    sum > 0.0,
+                    "matrix not positive definite at pivot {i} (got {sum:e}); \
+                     covariates are likely collinear"
+                );
+                u[(i, j)] = sum.sqrt();
+            } else {
+                u[(i, j)] = sum / u[(i, i)];
+            }
+        }
+    }
+    Ok(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{householder_qr, rel_err};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::new(20);
+        let b = Matrix::randn(30, 6, &mut rng);
+        let g = b.gram();
+        let u = cholesky_upper(&g).unwrap();
+        let back = u.t_matmul(&u);
+        assert!(rel_err(&back.data, &g.data) < 1e-12);
+        // upper triangular, positive diagonal
+        for i in 0..6 {
+            assert!(u[(i, i)] > 0.0);
+            for j in 0..i {
+                assert_eq!(u[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_qr_r_factor() {
+        // chol(CᵀC) == R from QR(C) — the identity the secure path uses.
+        let mut rng = Rng::new(21);
+        let c = Matrix::randn(80, 5, &mut rng);
+        let r_qr = householder_qr(&c).r;
+        let r_chol = cholesky_upper(&c.gram()).unwrap();
+        assert!(rel_err(&r_chol.data, &r_qr.data) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky_upper(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(cholesky_upper(&Matrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Dense linear algebra substrate for the combine stage.
+//!
+//! The combine stage of the paper is `O(PK² + K³)` work on small `K×K`
+//! matrices: stacking per-party `R_p` factors (TSQR, Lemma 4.1), QR /
+//! Cholesky factorizations, triangular solves, and the `R⁻ᵀ(CᵀX)`
+//! projection. These run on the Rust request path (no artifact round-trip
+//! is worth it at K ≤ 64), so they are implemented here and verified
+//! against the JAX oracle in the python tests and against analytic cases
+//! in unit tests.
+
+mod dense;
+mod qr;
+mod chol;
+mod tri;
+
+pub use dense::Matrix;
+pub use qr::{householder_qr, qt_from_compressed, tsqr_stack_r, QrFactors};
+pub use chol::cholesky_upper;
+pub use tri::{solve_lower, solve_upper, solve_rt_b, invert_upper};
+
+/// Frobenius norm of a slice.
+pub fn fro_norm(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Relative Frobenius error ‖a − b‖ / max(‖b‖, eps).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let diff: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    diff / fro_norm(b).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fro_and_rel() {
+        assert!((fro_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!(rel_err(&[1.0, 2.0], &[1.0, 2.0]) < 1e-15);
+        assert!(rel_err(&[1.1, 2.0], &[1.0, 2.0]) > 0.01);
+    }
+}

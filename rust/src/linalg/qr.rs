@@ -1,0 +1,233 @@
+//! Householder QR and the TSQR stacking step (paper Lemma 4.1).
+//!
+//! The multi-party combine stage needs the `R` factor of the stacked
+//! covariate matrix `C = [C_1; …; C_P]`. Lemma 4.1: QR of the stack of
+//! per-party `R_p` factors has the same `R` as QR of `C` itself (with the
+//! positive-diagonal convention that makes QR unique for full-column-rank
+//! input). [`householder_qr`] computes thin QR with that convention;
+//! [`tsqr_stack_r`] applies it to the `PK × K` stack.
+
+use super::dense::Matrix;
+use super::tri::solve_rt_b;
+
+/// Thin QR factors: `a = q · r`, `q` is `n × k` with orthonormal columns,
+/// `r` is `k × k` upper triangular with non-negative diagonal.
+#[derive(Clone, Debug)]
+pub struct QrFactors {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder thin QR with positive-diagonal normalization.
+///
+/// Complexity `O(n k²)` — this is the per-party compress-stage cost the
+/// paper counts as `O(N_p K²)`.
+pub fn householder_qr(a: &Matrix) -> QrFactors {
+    let n = a.rows;
+    let k = a.cols;
+    assert!(n >= k, "householder_qr requires n >= k (tall matrix), got {n}x{k}");
+    let mut r = a.clone(); // will be reduced in place
+    // Store Householder vectors to build thin Q afterwards.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Householder vector for column j below (and including) row j.
+        let mut norm2 = 0.0;
+        for i in j..n {
+            let x = r[(i, j)];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let x0 = r[(j, j)];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; n - j];
+        if norm > 0.0 {
+            v[0] = x0 - alpha;
+            for i in j + 1..n {
+                v[i - j] = r[(i, j)];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 0.0 {
+                // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing block of R.
+                for c in j..k {
+                    let mut dot = 0.0;
+                    for i in j..n {
+                        dot += v[i - j] * r[(i, c)];
+                    }
+                    let f = 2.0 * dot / vnorm2;
+                    for i in j..n {
+                        r[(i, c)] -= f * v[i - j];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build thin Q by applying the Householder reflectors to I(:, 0..k).
+    let mut q = Matrix::zeros(n, k);
+    for j in 0..k {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..n {
+                dot += v[i - j] * q[(i, c)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in j..n {
+                q[(i, c)] -= f * v[i - j];
+            }
+        }
+    }
+
+    // Normalize to positive diagonal (uniqueness convention from the
+    // paper: "requiring that R have positive diagonal entries").
+    let mut r_thin = Matrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    for i in 0..k {
+        if r_thin[(i, i)] < 0.0 {
+            for j in i..k {
+                r_thin[(i, j)] = -r_thin[(i, j)];
+            }
+            for rr in 0..n {
+                q[(rr, i)] = -q[(rr, i)];
+            }
+        }
+    }
+    QrFactors { q, r: r_thin }
+}
+
+/// TSQR combine: given per-party `R_p` factors (each `K × K`), stack them
+/// vertically and return the `R` of the stack — by Lemma 4.1 this equals
+/// the `R` of the full stacked covariate matrix. `O(P K³)` work,
+/// independent of sample size.
+pub fn tsqr_stack_r(rs: &[Matrix]) -> Matrix {
+    assert!(!rs.is_empty());
+    let k = rs[0].cols;
+    for r in rs {
+        assert_eq!(r.rows, k, "R_p must be K×K");
+        assert_eq!(r.cols, k, "R_p must be K×K");
+    }
+    let refs: Vec<&Matrix> = rs.iter().collect();
+    let stack = Matrix::vstack(&refs);
+    householder_qr(&stack).r
+}
+
+/// Compute `Qᵀ b` from compressed statistics without materializing `Q`:
+/// `Qᵀ b = R⁻ᵀ (Cᵀ b)` (since `C = QR` ⇒ `Cᵀ = RᵀQᵀ`). This is the
+/// combine-stage projection of §4; `ctb` is `K × m`.
+pub fn qt_from_compressed(r: &Matrix, ctb: &Matrix) -> Matrix {
+    solve_rt_b(r, ctb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::util::rng::Rng;
+
+    fn check_qr(a: &Matrix, tol: f64) {
+        let QrFactors { q, r } = householder_qr(a);
+        // Reconstruction
+        let qr = q.matmul(&r);
+        assert!(rel_err(&qr.data, &a.data) < tol, "reconstruction");
+        // Orthonormal columns
+        let qtq = q.gram();
+        let eye = Matrix::identity(a.cols);
+        assert!(rel_err(&qtq.data, &eye.data) < tol, "orthonormality");
+        // Upper triangular with positive diagonal
+        for i in 0..r.rows {
+            assert!(r[(i, i)] >= 0.0, "diag sign");
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0, "lower triangle");
+            }
+        }
+    }
+
+    #[test]
+    fn qr_random_tall() {
+        let mut rng = Rng::new(10);
+        for &(n, k) in &[(4usize, 4usize), (10, 3), (50, 8), (200, 12)] {
+            let a = Matrix::randn(n, k, &mut rng);
+            check_qr(&a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn qr_with_constant_column() {
+        // intercept column of ones — the GWAS default
+        let mut rng = Rng::new(11);
+        let mut a = Matrix::randn(30, 4, &mut rng);
+        for i in 0..30 {
+            a[(i, 0)] = 1.0;
+        }
+        check_qr(&a, 1e-12);
+    }
+
+    #[test]
+    fn qr_square_identity() {
+        let a = Matrix::identity(5);
+        let QrFactors { q, r } = householder_qr(&a);
+        assert!(rel_err(&q.data, &a.data) < 1e-14);
+        assert!(rel_err(&r.data, &a.data) < 1e-14);
+    }
+
+    #[test]
+    fn tsqr_matches_full_qr() {
+        // Lemma 4.1: R of stacked R_p equals R of stacked data.
+        let mut rng = Rng::new(12);
+        let k = 6;
+        let parts: Vec<Matrix> = [20usize, 35, 11]
+            .iter()
+            .map(|&n| Matrix::randn(n, k, &mut rng))
+            .collect();
+        let rs: Vec<Matrix> = parts.iter().map(|c| householder_qr(c).r).collect();
+        let r_tsqr = tsqr_stack_r(&rs);
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        let full = Matrix::vstack(&refs);
+        let r_full = householder_qr(&full).r;
+        assert!(
+            rel_err(&r_tsqr.data, &r_full.data) < 1e-11,
+            "err={}",
+            rel_err(&r_tsqr.data, &r_full.data)
+        );
+    }
+
+    #[test]
+    fn tsqr_single_party_is_identity_op() {
+        let mut rng = Rng::new(13);
+        let c = Matrix::randn(40, 5, &mut rng);
+        let r = householder_qr(&c).r;
+        let r2 = tsqr_stack_r(std::slice::from_ref(&r));
+        assert!(rel_err(&r2.data, &r.data) < 1e-12);
+    }
+
+    #[test]
+    fn qt_from_compressed_matches_direct() {
+        let mut rng = Rng::new(14);
+        let c = Matrix::randn(60, 5, &mut rng);
+        let x = Matrix::randn(60, 7, &mut rng);
+        let QrFactors { q, r } = householder_qr(&c);
+        let direct = q.t_matmul(&x);
+        let via_r = qt_from_compressed(&r, &c.t_matmul(&x));
+        assert!(rel_err(&via_r.data, &direct.data) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "n >= k")]
+    fn qr_wide_panics() {
+        let a = Matrix::zeros(2, 5);
+        let _ = householder_qr(&a);
+    }
+}

@@ -1,0 +1,149 @@
+//! Triangular solves — the `R⁻ᵀ(CᵀX)` projection of the combine stage.
+
+use super::dense::Matrix;
+
+/// Solve `L x = b` for lower-triangular `L` (forward substitution),
+/// column-wise over the `K × m` right-hand side.
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows;
+    assert_eq!(l.cols, n);
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for c in 0..b.cols {
+        for i in 0..n {
+            let mut sum = x[(i, c)];
+            for k in 0..i {
+                sum -= l[(i, k)] * x[(k, c)];
+            }
+            let d = l[(i, i)];
+            assert!(d != 0.0, "singular triangular system at {i}");
+            x[(i, c)] = sum / d;
+        }
+    }
+    x
+}
+
+/// Solve `U x = b` for upper-triangular `U` (back substitution).
+pub fn solve_upper(u: &Matrix, b: &Matrix) -> Matrix {
+    let n = u.rows;
+    assert_eq!(u.cols, n);
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for c in 0..b.cols {
+        for i in (0..n).rev() {
+            let mut sum = x[(i, c)];
+            for k in i + 1..n {
+                sum -= u[(i, k)] * x[(k, c)];
+            }
+            let d = u[(i, i)];
+            assert!(d != 0.0, "singular triangular system at {i}");
+            x[(i, c)] = sum / d;
+        }
+    }
+    x
+}
+
+/// Solve `Rᵀ x = b` for upper-triangular `R` — i.e. compute `R⁻ᵀ b`,
+/// the paper's `Qᵀy = R⁻ᵀ(Cᵀy)` / `QᵀX = R⁻ᵀ(CᵀX)` step. `Rᵀ` is lower
+/// triangular, so this is a forward substitution that reads `R` transposed
+/// in place (no copy).
+pub fn solve_rt_b(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for c in 0..b.cols {
+        for i in 0..n {
+            let mut sum = x[(i, c)];
+            for k in 0..i {
+                // (Rᵀ)[i,k] = R[k,i]
+                sum -= r[(k, i)] * x[(k, c)];
+            }
+            let d = r[(i, i)];
+            assert!(d != 0.0, "singular R at {i}");
+            x[(i, c)] = sum / d;
+        }
+    }
+    x
+}
+
+/// Invert an upper-triangular matrix (for `(CᵀC)⁻¹ = R⁻¹R⁻ᵀ` in the
+/// plain multi-party regression of §2).
+pub fn invert_upper(u: &Matrix) -> Matrix {
+    solve_upper(u, &Matrix::identity(u.rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{householder_qr, rel_err};
+    use crate::util::rng::Rng;
+
+    fn random_upper(n: usize, rng: &mut Rng) -> Matrix {
+        let mut u = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                u[(i, j)] = rng.normal();
+            }
+            u[(i, i)] = 1.0 + rng.uniform(); // well-conditioned diagonal
+        }
+        u
+    }
+
+    #[test]
+    fn solve_upper_roundtrip() {
+        let mut rng = Rng::new(30);
+        let u = random_upper(7, &mut rng);
+        let b = Matrix::randn(7, 3, &mut rng);
+        let x = solve_upper(&u, &b);
+        assert!(rel_err(&u.matmul(&x).data, &b.data) < 1e-12);
+    }
+
+    #[test]
+    fn solve_lower_roundtrip() {
+        let mut rng = Rng::new(31);
+        let l = random_upper(6, &mut rng).transpose();
+        let b = Matrix::randn(6, 2, &mut rng);
+        let x = solve_lower(&l, &b);
+        assert!(rel_err(&l.matmul(&x).data, &b.data) < 1e-12);
+    }
+
+    #[test]
+    fn solve_rt_b_matches_transpose_solve() {
+        let mut rng = Rng::new(32);
+        let r = random_upper(5, &mut rng);
+        let b = Matrix::randn(5, 4, &mut rng);
+        let fast = solve_rt_b(&r, &b);
+        let slow = solve_lower(&r.transpose(), &b);
+        assert!(rel_err(&fast.data, &slow.data) < 1e-13);
+    }
+
+    #[test]
+    fn invert_upper_gives_inverse() {
+        let mut rng = Rng::new(33);
+        let u = random_upper(8, &mut rng);
+        let inv = invert_upper(&u);
+        let eye = u.matmul(&inv);
+        assert!(rel_err(&eye.data, &Matrix::identity(8).data) < 1e-11);
+    }
+
+    #[test]
+    fn projection_identity_qr() {
+        // QᵀX == R⁻ᵀ CᵀX end-to-end with real QR factors.
+        let mut rng = Rng::new(34);
+        let c = Matrix::randn(50, 4, &mut rng);
+        let x = Matrix::randn(50, 9, &mut rng);
+        let f = householder_qr(&c);
+        let lhs = f.q.t_matmul(&x);
+        let rhs = solve_rt_b(&f.r, &c.t_matmul(&x));
+        assert!(rel_err(&rhs.data, &lhs.data) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn singular_panics() {
+        let mut u = Matrix::identity(3);
+        u[(1, 1)] = 0.0;
+        let _ = solve_upper(&u, &Matrix::identity(3));
+    }
+}

@@ -1,0 +1,266 @@
+//! `dash` — launcher for the DASH multi-party association scan.
+//!
+//! Subcommands:
+//!   scan         run a full multi-party scan on a synthetic cohort
+//!   regress      multi-party linear regression only (§2)
+//!   bench-comm   communication scaling rows (E4)
+//!   artifacts    report on the compiled artifact set
+//!
+//! Examples:
+//!   dash scan --parties 4 --n 8000 --m 20000 --backend masked
+//!   dash scan --config run.json --transport tcp
+//!   dash regress --parties 3 --n 3000
+
+use dash::config::RunConfig;
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::combine_regression;
+use dash::util::cli::Command;
+use dash::util::{human_bytes, human_secs};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let (sub, rest) = match args.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    match sub {
+        "scan" => cmd_scan(&rest),
+        "regress" => cmd_regress(&rest),
+        "bench-comm" => cmd_bench_comm(&rest),
+        "artifacts" => cmd_artifacts(&rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `{other}`\n{}", usage_text()),
+    }
+}
+
+fn usage_text() -> String {
+    "usage: dash <scan|regress|bench-comm|artifacts> [options]\n\
+     run `dash <subcommand> --help` for options"
+        .to_string()
+}
+
+fn print_usage() {
+    println!("{}", usage_text());
+}
+
+fn scan_command() -> Command {
+    Command::new("scan", "run a multi-party association scan")
+        .opt("config", "", "JSON config file (CLI flags override it)")
+        .opt("parties", "4", "number of parties")
+        .opt("n", "2000", "total samples (split across parties)")
+        .opt("m", "2000", "number of variants")
+        .opt("backend", "masked", "SMC backend: plaintext|masked|shamir")
+        .opt("seed", "7", "rng seed")
+        .opt("block-m", "256", "variant block width")
+        .opt("transport", "inproc", "inproc|tcp")
+        .opt("report", "", "write a JSON report to this path")
+        .flag("artifacts", "use the AOT artifact runtime for compression")
+        .opt("artifacts-dir", "artifacts", "artifact directory")
+        .opt("alpha", "5e-8", "significance threshold for reported hits")
+}
+
+fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
+    let a = scan_command().parse(raw)?;
+    let mut cfg = match a.get("config") {
+        Some("") | None => RunConfig::default(),
+        Some(path) => RunConfig::load(path)?,
+    };
+    // CLI overrides
+    let parties = a.get_usize("parties")?;
+    let n = a.get_usize("n")?;
+    let m = a.get_usize("m")?;
+    cfg.cohort.party_sizes = split_sizes(n, parties);
+    cfg.cohort.party_admixture = (0..parties)
+        .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
+        .collect();
+    cfg.cohort.m_variants = m;
+    cfg.cohort.n_causal = cfg.cohort.n_causal.min(m);
+    cfg.scan.backend = Backend::parse(a.get("backend").unwrap(), parties)?;
+    cfg.seed = a.get_u64("seed")?;
+    cfg.scan.block_m = a.get_usize("block-m")?;
+    cfg.transport_tcp = a.get("transport") == Some("tcp");
+    if a.flag("artifacts") {
+        cfg.scan.use_artifacts = true;
+        cfg.scan.artifacts_dir = a.get("artifacts-dir").unwrap().to_string();
+    }
+    let alpha = a.get_f64("alpha")?;
+
+    eprintln!(
+        "generating cohort: P={} N={} M={} K={} ...",
+        parties,
+        n,
+        m,
+        cfg.cohort.k_covariates()
+    );
+    let cohort = generate_cohort(&cfg.cohort, cfg.seed);
+    let transport = if cfg.transport_tcp { Transport::Tcp } else { Transport::InProc };
+    eprintln!(
+        "running scan: backend={} transport={:?} artifacts={}",
+        cfg.scan.backend.name(),
+        transport,
+        cfg.scan.use_artifacts
+    );
+    let res = run_multi_party_scan_t(&cohort, &cfg.scan, transport, cfg.seed)?;
+
+    println!("== dash scan ==");
+    println!("parties           {parties}");
+    println!("samples (N)       {}", cohort.n_total());
+    println!("variants (M)      {m}");
+    println!("covariates (K)    {}", cohort.k());
+    println!("backend           {}", cfg.scan.backend.name());
+    println!("compress wall     {}", human_secs(res.metrics.compress_wall_s));
+    println!("combine           {}", human_secs(res.metrics.combine_s));
+    println!("total             {}", human_secs(res.metrics.total_s));
+    println!("variants/sec      {:.0}", m as f64 / res.metrics.total_s);
+    println!("inter-party bytes {}", human_bytes(res.metrics.bytes_total));
+    println!(
+        "bytes/variant     {:.1}",
+        res.metrics.bytes_total as f64 / m as f64
+    );
+    let hits = res.output.hits(alpha);
+    println!("hits (p < {alpha:.1e}): {}", hits.len());
+    for &j in hits.iter().take(10) {
+        let is_causal = cohort.truth.causal_idx.contains(&j);
+        println!(
+            "  variant {:>6}  beta={:+.4}  se={:.4}  p={:.3e}{}",
+            j,
+            res.output.assoc.beta[j],
+            res.output.assoc.se[j],
+            res.output.assoc.p[j],
+            if is_causal { "  [causal]" } else { "" }
+        );
+    }
+
+    if let Some(path) = a.get("report") {
+        if !path.is_empty() {
+            let mut rep = dash::util::json::Json::obj();
+            rep.set("config", cfg.to_json())
+                .set("bytes_total", res.metrics.bytes_total)
+                .set("bytes_result", res.metrics.bytes_result)
+                .set("compress_wall_s", res.metrics.compress_wall_s)
+                .set("combine_s", res.metrics.combine_s)
+                .set("total_s", res.metrics.total_s)
+                .set("n_hits", hits.len())
+                .set("min_p", res.output.min_p_value().unwrap_or(f64::NAN));
+            std::fs::write(path, rep.to_pretty())?;
+            eprintln!("report written to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_regress(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("regress", "multi-party linear regression (§2)")
+        .opt("parties", "3", "number of parties")
+        .opt("n", "3000", "total samples")
+        .opt("seed", "7", "rng seed");
+    let a = cmd.parse(raw)?;
+    let parties = a.get_usize("parties")?;
+    let n = a.get_usize("n")?;
+    let mut spec = CohortSpec::default_small();
+    spec.party_sizes = split_sizes(n, parties);
+    spec.party_admixture = vec![0.5; parties];
+    spec.m_variants = 1;
+    spec.n_causal = 0;
+    let cohort = generate_cohort(&spec, a.get_u64("seed")?);
+    let cps: Vec<_> = cohort
+        .parties
+        .iter()
+        .map(|p| dash::scan::compress_party(&p.y, &p.c, &p.x, 1, None))
+        .collect();
+    let fit = combine_regression(&cps)?;
+    println!("== dash regress ==  N={} K={}", cohort.n_total(), cohort.k());
+    println!("{:>4} {:>12} {:>12} {:>10} {:>12}", "k", "gamma", "se", "t", "p");
+    for i in 0..fit.gamma.len() {
+        println!(
+            "{:>4} {:>12.5} {:>12.5} {:>10.3} {:>12.3e}",
+            i, fit.gamma[i], fit.se[i], fit.t[i], fit.p[i]
+        );
+    }
+    println!("tau^2 = {:.5}   df = {}", fit.tau2, fit.df);
+    Ok(())
+}
+
+fn cmd_bench_comm(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("bench-comm", "communication scaling rows (E4)")
+        .opt("parties", "3", "number of parties")
+        .opt("n", "600", "total samples")
+        .opt("ms", "250,500,1000,2000", "comma-separated variant counts")
+        .opt("backend", "masked", "SMC backend")
+        .opt("seed", "7", "rng seed");
+    let a = cmd.parse(raw)?;
+    let parties = a.get_usize("parties")?;
+    let n = a.get_usize("n")?;
+    let ms: Vec<usize> = a
+        .get("ms")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    println!(
+        "{:>8} {:>14} {:>14} {:>12}",
+        "M", "bytes_total", "bytes/variant", "result_bytes"
+    );
+    for &m in &ms {
+        let mut spec = CohortSpec::default_small();
+        spec.party_sizes = split_sizes(n, parties);
+        spec.party_admixture = vec![0.5; parties];
+        spec.m_variants = m;
+        spec.n_causal = spec.n_causal.min(m);
+        let cohort = generate_cohort(&spec, a.get_u64("seed")?);
+        let mut scan_cfg = dash::scan::ScanConfig::default();
+        scan_cfg.backend = Backend::parse(a.get("backend").unwrap(), parties)?;
+        let res = run_multi_party_scan_t(&cohort, &scan_cfg, Transport::InProc, 11)?;
+        println!(
+            "{:>8} {:>14} {:>14.1} {:>12}",
+            m,
+            res.metrics.bytes_total,
+            res.metrics.bytes_total as f64 / m as f64,
+            res.metrics.bytes_result
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("artifacts", "inspect the compiled artifact set")
+        .opt("dir", "artifacts", "artifact directory");
+    let a = cmd.parse(raw)?;
+    let dir = a.get("dir").unwrap();
+    let engine = dash::runtime::Engine::load(dir)?;
+    println!("platform    {}", engine.platform());
+    println!("entries     {}", engine.entry_count());
+    println!("n_block     {}", engine.manifest.n_block);
+    println!("m_block     {}", engine.manifest.m_block);
+    println!("k_pad       {}", engine.manifest.k_pad);
+    for (name, file) in &engine.manifest.entries {
+        println!("  {name:<14} {file}");
+    }
+    Ok(())
+}
+
+fn split_sizes(n: usize, parties: usize) -> Vec<usize> {
+    assert!(parties > 0);
+    let base = n / parties;
+    let extra = n % parties;
+    (0..parties).map(|i| base + usize::from(i < extra)).collect()
+}

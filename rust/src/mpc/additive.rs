@@ -1,0 +1,95 @@
+//! Additive secret sharing over Z_2^64.
+//!
+//! `share(v, P)` splits a ring element into `P` uniformly random shares
+//! summing (mod 2^64) to `v`; any `P−1` shares are jointly uniform and
+//! reveal nothing. Aggregation is share-wise wrapping addition; the sum
+//! of all parties' share-sums reconstructs Σv exactly.
+
+use crate::util::rng::Rng;
+
+/// Split `values` into `parties` share vectors.
+pub fn share_vec(values: &[u64], parties: usize, rng: &mut Rng) -> Vec<Vec<u64>> {
+    assert!(parties >= 1);
+    let mut shares: Vec<Vec<u64>> = (0..parties).map(|_| vec![0u64; values.len()]).collect();
+    for (i, &v) in values.iter().enumerate() {
+        let mut acc = 0u64;
+        for p in 0..parties - 1 {
+            let s = rng.next_u64();
+            shares[p][i] = s;
+            acc = acc.wrapping_add(s);
+        }
+        shares[parties - 1][i] = v.wrapping_sub(acc);
+    }
+    shares
+}
+
+/// Share-wise sum (in place into `acc`).
+pub fn add_assign(acc: &mut [u64], share: &[u64]) {
+    assert_eq!(acc.len(), share.len());
+    for (a, &s) in acc.iter_mut().zip(share) {
+        *a = a.wrapping_add(s);
+    }
+}
+
+/// Reconstruct from per-party share vectors.
+pub fn reconstruct(shares: &[Vec<u64>]) -> Vec<u64> {
+    assert!(!shares.is_empty());
+    let mut out = vec![0u64; shares[0].len()];
+    for s in shares {
+        add_assign(&mut out, s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, PropConfig};
+
+    #[test]
+    fn shares_reconstruct() {
+        let mut rng = Rng::new(70);
+        let vals: Vec<u64> = (0..100).map(|_| rng.next_u64()).collect();
+        for parties in [1usize, 2, 3, 7] {
+            let shares = share_vec(&vals, parties, &mut rng);
+            assert_eq!(shares.len(), parties);
+            assert_eq!(reconstruct(&shares), vals);
+        }
+    }
+
+    #[test]
+    fn single_share_looks_uniform() {
+        // crude uniformity check: mean of top bit ≈ 0.5
+        let mut rng = Rng::new(71);
+        let vals = vec![42u64; 4096];
+        let shares = share_vec(&vals, 3, &mut rng);
+        let ones: u32 = shares[0].iter().map(|s| (s >> 63) as u32).sum();
+        let frac = ones as f64 / 4096.0;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn additive_property_sum_of_partials() {
+        // Party-wise partial aggregation == reconstruct of all shares.
+        run_prop(
+            "additive-partial-sums",
+            PropConfig::default(),
+            |r| {
+                let n = 1 + r.below(50) as usize;
+                let p = 2 + r.below(6) as usize;
+                let vals: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                (vals, p, r.next_u64())
+            },
+            |(vals, parties, seed)| {
+                let mut rng = Rng::new(*seed);
+                let shares = share_vec(vals, *parties, &mut rng);
+                let rec = reconstruct(&shares);
+                if &rec == vals {
+                    Ok(())
+                } else {
+                    Err("reconstruction mismatch".to_string())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,186 @@
+//! Beaver-triple multiplication over GF(2^61 − 1).
+//!
+//! Extension beyond the paper's combine-by-summation: with multiplication
+//! we can evaluate the Lemma 3.1 *ratios* under MPC so the parties reveal
+//! only (β̂, σ̂) rather than the aggregate cross-products (`--smc-level
+//! full`). Triples are dealt by a trusted offline dealer (standard
+//! preprocessing model; in production they would come from OT/HE).
+//!
+//! Protocol (semi-honest, additive shares over the field): to multiply
+//! secrets x, y given triple (a, b, c=ab): parties open d = x−a and
+//! e = y−b, then each computes share `z_i = c_i + d·b_i + e·a_i` and one
+//! designated party adds `d·e`. Σz_i = xy.
+
+use super::field::{random_fe, Fe};
+use crate::util::rng::Rng;
+
+/// One multiplication triple, additively shared across parties.
+#[derive(Clone, Debug)]
+pub struct TripleShares {
+    /// a_i, b_i, c_i per party; Σa·Σb = Σc
+    pub a: Vec<Fe>,
+    pub b: Vec<Fe>,
+    pub c: Vec<Fe>,
+}
+
+/// Additive sharing of a field element across `parties`.
+pub fn additive_share_fe(v: Fe, parties: usize, rng: &mut Rng) -> Vec<Fe> {
+    let mut shares: Vec<Fe> = (0..parties - 1).map(|_| random_fe(rng)).collect();
+    let partial = shares.iter().fold(Fe(0), |acc, s| acc.add(*s));
+    shares.push(v.sub(partial));
+    shares
+}
+
+/// Reconstruct an additively shared element.
+pub fn additive_open(shares: &[Fe]) -> Fe {
+    shares.iter().fold(Fe(0), |acc, s| acc.add(*s))
+}
+
+/// Offline dealer: produce one random triple shared across `parties`.
+pub fn deal_triple(parties: usize, rng: &mut Rng) -> TripleShares {
+    let a = random_fe(rng);
+    let b = random_fe(rng);
+    let c = a.mul(b);
+    TripleShares {
+        a: additive_share_fe(a, parties, rng),
+        b: additive_share_fe(b, parties, rng),
+        c: additive_share_fe(c, parties, rng),
+    }
+}
+
+/// One party's state in a Beaver multiplication.
+pub struct BeaverParty {
+    pub index: usize,
+    pub x: Fe,
+    pub y: Fe,
+    pub a: Fe,
+    pub b: Fe,
+    pub c: Fe,
+}
+
+impl BeaverParty {
+    /// Round 1: masked openings (d_i, e_i) to broadcast.
+    pub fn openings(&self) -> (Fe, Fe) {
+        (self.x.sub(self.a), self.y.sub(self.b))
+    }
+
+    /// Round 2: local share of the product given opened d = Σd_i,
+    /// e = Σe_i.
+    pub fn product_share(&self, d: Fe, e: Fe) -> Fe {
+        let mut z = self.c.add(d.mul(self.b)).add(e.mul(self.a));
+        if self.index == 0 {
+            z = z.add(d.mul(e));
+        }
+        z
+    }
+}
+
+/// Run a full multiplication of two shared secrets (test/driver helper —
+/// the coordinator runs the same steps over the transport).
+pub fn multiply_shared(
+    x_shares: &[Fe],
+    y_shares: &[Fe],
+    triple: &TripleShares,
+) -> Vec<Fe> {
+    let parties = x_shares.len();
+    assert_eq!(y_shares.len(), parties);
+    let ps: Vec<BeaverParty> = (0..parties)
+        .map(|i| BeaverParty {
+            index: i,
+            x: x_shares[i],
+            y: y_shares[i],
+            a: triple.a[i],
+            b: triple.b[i],
+            c: triple.c[i],
+        })
+        .collect();
+    let (ds, es): (Vec<Fe>, Vec<Fe>) = ps.iter().map(|p| p.openings()).unzip();
+    let d = additive_open(&ds);
+    let e = additive_open(&es);
+    ps.iter().map(|p| p.product_share(d, e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, PropConfig};
+
+    #[test]
+    fn triple_is_consistent() {
+        let mut rng = Rng::new(100);
+        let t = deal_triple(4, &mut rng);
+        let a = additive_open(&t.a);
+        let b = additive_open(&t.b);
+        let c = additive_open(&t.c);
+        assert_eq!(a.mul(b), c);
+    }
+
+    #[test]
+    fn multiplication_correct() {
+        let mut rng = Rng::new(101);
+        for parties in [2usize, 3, 5] {
+            let x = random_fe(&mut rng);
+            let y = random_fe(&mut rng);
+            let xs = additive_share_fe(x, parties, &mut rng);
+            let ys = additive_share_fe(y, parties, &mut rng);
+            let t = deal_triple(parties, &mut rng);
+            let zs = multiply_shared(&xs, &ys, &t);
+            assert_eq!(additive_open(&zs), x.mul(y), "parties={parties}");
+        }
+    }
+
+    #[test]
+    fn multiplication_property() {
+        run_prop(
+            "beaver-mul",
+            PropConfig { cases: 40, ..Default::default() },
+            |r| (r.next_u64() % 1_000_000, r.next_u64() % 1_000_000, r.next_u64()),
+            |&(xv, yv, seed)| {
+                let mut rng = Rng::new(seed);
+                let x = Fe::new(xv);
+                let y = Fe::new(yv);
+                let xs = additive_share_fe(x, 3, &mut rng);
+                let ys = additive_share_fe(y, 3, &mut rng);
+                let t = deal_triple(3, &mut rng);
+                let z = additive_open(&multiply_shared(&xs, &ys, &t));
+                if z == x.mul(y) {
+                    Ok(())
+                } else {
+                    Err(format!("{}·{} gave {}", x.0, y.0, z.0))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn openings_hide_secrets() {
+        // d = x − a is uniform (a uniform) → d ≠ x almost surely.
+        let mut rng = Rng::new(102);
+        let x = Fe::new(42);
+        let xs = additive_share_fe(x, 2, &mut rng);
+        let ys = additive_share_fe(Fe::new(7), 2, &mut rng);
+        let t = deal_triple(2, &mut rng);
+        let p0 = BeaverParty {
+            index: 0,
+            x: xs[0],
+            y: ys[0],
+            a: t.a[0],
+            b: t.b[0],
+            c: t.c[0],
+        };
+        let (d, e) = p0.openings();
+        assert_ne!(d, xs[0]);
+        assert_ne!(e, ys[0]);
+    }
+
+    #[test]
+    fn additive_share_roundtrip() {
+        let mut rng = Rng::new(103);
+        for parties in [1usize, 2, 8] {
+            let v = random_fe(&mut rng);
+            let s = additive_share_fe(v, parties, &mut rng);
+            assert_eq!(s.len(), parties);
+            assert_eq!(additive_open(&s), v);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Arithmetic in the Mersenne-61 prime field GF(2^61 − 1).
+//!
+//! Used by the Shamir backend and Beaver-triple multiplication. The
+//! Mersenne modulus makes reduction two adds and a mask — fast enough
+//! that field arithmetic never appears in combine-stage profiles.
+
+/// The prime 2^61 − 1.
+pub const P: u64 = (1u64 << 61) - 1;
+
+/// A field element (always kept in `[0, P)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fe(pub u64);
+
+impl Fe {
+    #[inline]
+    pub fn new(v: u64) -> Fe {
+        Fe(v % P)
+    }
+
+    /// Map a signed 64-bit integer into the field (two's complement →
+    /// mod-P representative). Fixed-point values go through this.
+    #[inline]
+    pub fn from_i64(v: i64) -> Fe {
+        if v >= 0 {
+            Fe::new(v as u64)
+        } else {
+            Fe::new(P - ((-(v as i128)) as u64 % P))
+        }
+    }
+
+    /// Back to a signed integer, interpreting values > P/2 as negative.
+    #[inline]
+    pub fn to_i64(self) -> i64 {
+        if self.0 > P / 2 {
+            -((P - self.0) as i64)
+        } else {
+            self.0 as i64
+        }
+    }
+
+    #[inline]
+    pub fn add(self, o: Fe) -> Fe {
+        let s = self.0 + o.0; // ≤ 2P−2 < 2^62, no overflow
+        Fe(if s >= P { s - P } else { s })
+    }
+
+    #[inline]
+    pub fn sub(self, o: Fe) -> Fe {
+        Fe(if self.0 >= o.0 { self.0 - o.0 } else { self.0 + P - o.0 })
+    }
+
+    #[inline]
+    pub fn neg(self) -> Fe {
+        if self.0 == 0 {
+            self
+        } else {
+            Fe(P - self.0)
+        }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Fe) -> Fe {
+        let prod = self.0 as u128 * o.0 as u128;
+        // Mersenne reduction: x = hi·2^61 + lo ≡ hi + lo (mod 2^61−1)
+        let lo = (prod & P as u128) as u64;
+        let hi = (prod >> 61) as u64;
+        let s = lo + hi;
+        Fe(if s >= P { s - P } else { s })
+    }
+
+    /// Modular inverse via Fermat (exponent P−2).
+    pub fn inv(self) -> Fe {
+        assert!(self.0 != 0, "inverse of zero");
+        self.pow(P - 2)
+    }
+
+    pub fn pow(self, mut e: u64) -> Fe {
+        let mut base = self;
+        let mut acc = Fe(1);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+}
+
+/// Sample a uniform field element.
+pub fn random_fe(rng: &mut crate::util::rng::Rng) -> Fe {
+    // rejection sampling from 61 random bits
+    loop {
+        let v = rng.next_u64() >> 3; // 61 bits
+        if v < P {
+            return Fe(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn add_sub_inverse() {
+        let mut rng = Rng::new(60);
+        for _ in 0..1000 {
+            let a = random_fe(&mut rng);
+            let b = random_fe(&mut rng);
+            assert_eq!(a.add(b).sub(b), a);
+            assert_eq!(a.sub(a), Fe(0));
+            assert_eq!(a.add(a.neg()), Fe(0));
+        }
+    }
+
+    #[test]
+    fn mul_matches_u128_reference() {
+        let mut rng = Rng::new(61);
+        for _ in 0..1000 {
+            let a = random_fe(&mut rng);
+            let b = random_fe(&mut rng);
+            let want = ((a.0 as u128 * b.0 as u128) % P as u128) as u64;
+            assert_eq!(a.mul(b).0, want);
+        }
+    }
+
+    #[test]
+    fn mul_identity_and_zero() {
+        let a = Fe::new(123456789);
+        assert_eq!(a.mul(Fe(1)), a);
+        assert_eq!(a.mul(Fe(0)), Fe(0));
+    }
+
+    #[test]
+    fn inv_is_inverse() {
+        let mut rng = Rng::new(62);
+        for _ in 0..200 {
+            let a = random_fe(&mut rng);
+            if a.0 == 0 {
+                continue;
+            }
+            assert_eq!(a.mul(a.inv()), Fe(1));
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        // representable signed range is (−P/2, P/2)
+        let big = (P / 4) as i64;
+        for &v in &[0i64, 1, -1, 123456, -987654321, big, -big] {
+            assert_eq!(Fe::from_i64(v).to_i64(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn signed_addition_homomorphic() {
+        let a = -5_000i64;
+        let b = 12_345i64;
+        let s = Fe::from_i64(a).add(Fe::from_i64(b));
+        assert_eq!(s.to_i64(), a + b);
+    }
+
+    #[test]
+    fn pow_small_cases() {
+        assert_eq!(Fe(2).pow(10), Fe(1024));
+        assert_eq!(Fe(3).pow(0), Fe(1));
+    }
+
+    #[test]
+    fn boundary_values() {
+        assert_eq!(Fe::new(P), Fe(0));
+        assert_eq!(Fe(P - 1).add(Fe(1)), Fe(0));
+        assert_eq!(Fe(0).sub(Fe(1)), Fe(P - 1));
+    }
+}

@@ -1,0 +1,159 @@
+//! Fixed-point codec: reals ↔ ring elements.
+//!
+//! All secure-sum backends operate on integers (Z_2^64 or the Mersenne-61
+//! field). Statistics are encoded as two's-complement fixed point with
+//! `FRAC_BITS` fractional bits. The codec must satisfy, for any party
+//! values `v_p` within range: `decode(Σ encode(v_p)) = Σ round(v_p)`
+//! exactly in the ring — encoding is a ring homomorphism up to rounding,
+//! which is what makes share-wise addition compute the true sum.
+//!
+//! Range analysis: compressed statistics are sums of products of
+//! standardized data, magnitude ≤ N·max²  ≈ 2^20·2^6 = 2^26 for our
+//! largest workloads; with 24 fractional bits values fit comfortably in
+//! i64 (2^26+24 = 2^50 ≪ 2^63). [`FixedCodec::check_range`] enforces this
+//! at encode time rather than silently wrapping.
+
+/// Fixed-point parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedCodec {
+    pub frac_bits: u32,
+}
+
+impl Default for FixedCodec {
+    fn default() -> Self {
+        FixedCodec { frac_bits: 24 }
+    }
+}
+
+impl FixedCodec {
+    pub fn new(frac_bits: u32) -> Self {
+        assert!(frac_bits < 62);
+        FixedCodec { frac_bits }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Largest encodable magnitude (with headroom for summing across
+    /// up to 2^10 parties without overflow).
+    pub fn max_abs(&self) -> f64 {
+        ((1u64 << (62 - self.frac_bits - 10)) as f64).floor()
+    }
+
+    /// Encode one value into the ring Z_2^64 (two's complement).
+    #[inline]
+    pub fn encode(&self, v: f64) -> anyhow::Result<u64> {
+        self.check_range(v)?;
+        let scaled = (v * self.scale()).round() as i64;
+        Ok(scaled as u64)
+    }
+
+    /// Decode one ring element.
+    #[inline]
+    pub fn decode(&self, r: u64) -> f64 {
+        (r as i64) as f64 / self.scale()
+    }
+
+    pub fn check_range(&self, v: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            v.is_finite() && v.abs() <= self.max_abs(),
+            "value {v:e} outside fixed-point range ±{:e} (frac_bits={}); \
+             consider standardizing inputs or lowering frac_bits",
+            self.max_abs(),
+            self.frac_bits
+        );
+        Ok(())
+    }
+
+    /// Encode a slice.
+    pub fn encode_vec(&self, vs: &[f64]) -> anyhow::Result<Vec<u64>> {
+        vs.iter().map(|&v| self.encode(v)).collect()
+    }
+
+    /// Decode a slice.
+    pub fn decode_vec(&self, rs: &[u64]) -> Vec<f64> {
+        rs.iter().map(|&r| self.decode(r)).collect()
+    }
+
+    /// Worst-case absolute rounding error of a sum of `terms` encodings.
+    pub fn sum_error_bound(&self, terms: usize) -> f64 {
+        0.5 * terms as f64 / self.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_for_representable() {
+        let c = FixedCodec::default();
+        for &v in &[0.0, 1.0, -1.0, 0.5, -1234.0625, 1e6] {
+            let r = c.encode(v).unwrap();
+            assert_eq!(c.decode(r), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let c = FixedCodec::default();
+        let mut rng = Rng::new(50);
+        for _ in 0..10_000 {
+            let v = rng.normal_ms(0.0, 100.0);
+            let err = (c.decode(c.encode(v).unwrap()) - v).abs();
+            assert!(err <= 0.5 / c.scale() + 1e-15, "v={v} err={err:e}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition_matches_sum() {
+        // decode(Σ encode(v_p)) == Σ fixed(v_p) exactly
+        let c = FixedCodec::default();
+        let mut rng = Rng::new(51);
+        for _ in 0..1000 {
+            let vs: Vec<f64> = (0..8).map(|_| rng.normal_ms(0.0, 50.0)).collect();
+            let ring_sum = vs
+                .iter()
+                .map(|&v| c.encode(v).unwrap())
+                .fold(0u64, |a, b| a.wrapping_add(b));
+            let sum_rounded: f64 = vs
+                .iter()
+                .map(|&v| (v * c.scale()).round() / c.scale())
+                .sum();
+            assert!((c.decode(ring_sum) - sum_rounded).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn negative_values_wrap_correctly() {
+        let c = FixedCodec::default();
+        let r = c.encode(-3.25).unwrap();
+        assert!(r > u64::MAX / 2); // two's complement wrap
+        assert_eq!(c.decode(r), -3.25);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let c = FixedCodec::default();
+        assert!(c.encode(c.max_abs() * 2.0).is_err());
+        assert!(c.encode(f64::NAN).is_err());
+        assert!(c.encode(f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let c = FixedCodec::new(20);
+        let vs = vec![1.5, -2.25, 0.0, 1000.0];
+        let enc = c.encode_vec(&vs).unwrap();
+        assert_eq!(c.decode_vec(&enc), vs);
+    }
+
+    #[test]
+    fn error_bound_monotone() {
+        let c = FixedCodec::default();
+        assert!(c.sum_error_bound(10) < c.sum_error_bound(100));
+    }
+}

@@ -1,0 +1,75 @@
+//! Secure multi-party computation substrate for the combine stage.
+//!
+//! The paper's protocol needs exactly one cryptographic operation:
+//! **secure summation** of fixed-size compressed statistics across
+//! parties ("compress in plaintext, combine with crypto", §2). Three
+//! backends are provided, in increasing strength/cost:
+//!
+//! - [`additive`] — additive secret sharing over `Z_2^64` of fixed-point
+//!   values; a share vector per party, sums reconstruct exactly.
+//! - [`masking`] — Bonawitz-style pairwise-mask secure aggregation: each
+//!   ordered pair of parties derives a common PRG stream; party `i` adds
+//!   `+mask(i,j)` for `j > i` and `−mask(j,i)` for `j < i`. All masks
+//!   cancel in the sum, so the leader sees only the aggregate. One round,
+//!   no per-party share fan-out — `O(P·len)` total bytes.
+//! - [`shamir`] — t-of-P Shamir sharing over the Mersenne-61 prime field
+//!   with Lagrange reconstruction; tolerates up to `t−1` colluding
+//!   parties, at `O(P²·len)` bytes.
+//!
+//! [`beaver`] adds Beaver-triple multiplication over the field, used by
+//! the `full` SMC level to compute the Lemma 3.1 ratios without revealing
+//! the aggregate cross-products. [`fixed`] is the deterministic
+//! real ↔ ring codec shared by all backends, and [`naive`] implements the
+//! strawman the paper argues against: secret-sharing the raw `N×M` data.
+
+pub mod fixed;
+pub mod field;
+pub mod additive;
+pub mod masking;
+pub mod shamir;
+pub mod beaver;
+pub mod naive;
+
+/// Which SMC backend a combine session uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// No crypto: per-party statistics sent in the clear (simulation /
+    /// baseline mode; matches the paper's plaintext comparator).
+    Plaintext,
+    /// Pairwise-mask secure aggregation over Z_2^64 (default).
+    Masked,
+    /// Shamir t-of-P over Mersenne-61.
+    Shamir { threshold: usize },
+}
+
+impl Backend {
+    pub fn parse(s: &str, parties: usize) -> anyhow::Result<Backend> {
+        match s {
+            "plaintext" => Ok(Backend::Plaintext),
+            "masked" => Ok(Backend::Masked),
+            "shamir" => Ok(Backend::Shamir { threshold: parties.div_ceil(2) + 1 }),
+            other => anyhow::bail!("unknown SMC backend `{other}` (plaintext|masked|shamir)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Plaintext => "plaintext",
+            Backend::Masked => "masked",
+            Backend::Shamir { .. } => "shamir",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("plaintext", 4).unwrap(), Backend::Plaintext);
+        assert_eq!(Backend::parse("masked", 4).unwrap(), Backend::Masked);
+        assert_eq!(Backend::parse("shamir", 4).unwrap(), Backend::Shamir { threshold: 3 });
+        assert!(Backend::parse("bogus", 4).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Naive baseline: secret-share the *raw* N-dimensional data and compute
+//! the regression inside MPC.
+//!
+//! This is the comparator the paper's introduction argues against (its
+//! fn. 2: raw-data SMC methods "remain many orders of magnitude slower
+//! than plaintext"). We implement it faithfully enough to measure the
+//! asymptotics: every sample row is additively shared, and every inner
+//! product `O(N)` runs share-wise with Beaver multiplications, so both
+//! communication and computation scale with `N·M` instead of the
+//! compressed `K·M`. Used by E1/E4 to show the crossover.
+
+use super::beaver::{additive_open, additive_share_fe, deal_triple, multiply_shared};
+use super::field::Fe;
+use super::fixed::FixedCodec;
+use crate::util::rng::Rng;
+
+/// Cost counters for one naive secure dot product.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NaiveCost {
+    /// field elements communicated (openings: 2 per multiplication)
+    pub opened_elems: u64,
+    /// Beaver triples consumed
+    pub triples: u64,
+}
+
+/// Securely compute `x · y` where both vectors are additively shared
+/// across `parties`. Every coordinate costs one Beaver multiplication
+/// (two opened field elements) — `O(N)` communication per dot product,
+/// versus `O(1)` aggregate words for the compressed protocol.
+pub fn secure_dot(
+    x_shares: &[Vec<Fe>],
+    y_shares: &[Vec<Fe>],
+    parties: usize,
+    rng: &mut Rng,
+    cost: &mut NaiveCost,
+) -> Fe {
+    let n = x_shares[0].len();
+    assert!(x_shares.len() == parties && y_shares.len() == parties);
+    let mut acc_shares = vec![Fe(0); parties];
+    for i in 0..n {
+        let xi: Vec<Fe> = (0..parties).map(|p| x_shares[p][i]).collect();
+        let yi: Vec<Fe> = (0..parties).map(|p| y_shares[p][i]).collect();
+        let t = deal_triple(parties, rng);
+        let zi = multiply_shared(&xi, &yi, &t);
+        for p in 0..parties {
+            acc_shares[p] = acc_shares[p].add(zi[p]);
+        }
+        cost.opened_elems += 2 * parties as u64;
+        cost.triples += 1;
+    }
+    additive_open(&acc_shares)
+}
+
+/// Share a real vector into per-party additive field shares
+/// (fixed-point encoded).
+pub fn share_real_vec(
+    v: &[f64],
+    parties: usize,
+    codec: &FixedCodec,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<Vec<Fe>>> {
+    let mut out: Vec<Vec<Fe>> = (0..parties).map(|_| Vec::with_capacity(v.len())).collect();
+    for &x in v {
+        let fe = Fe::from_i64(codec.encode(x)? as i64);
+        for (p, s) in additive_share_fe(fe, parties, rng).into_iter().enumerate() {
+            out[p].push(s);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a field result of a single product of two fixed-point values
+/// (scale²) back to f64.
+pub fn decode_product(fe: Fe, codec: &FixedCodec) -> f64 {
+    fe.to_i64() as f64 / (codec.scale() * codec.scale())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secure_dot_matches_plaintext() {
+        let mut rng = Rng::new(110);
+        let codec = FixedCodec::new(16); // products need 2× frac bits of headroom
+        let n = 64;
+        let parties = 3;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let xs = share_real_vec(&x, parties, &codec, &mut rng).unwrap();
+        let ys = share_real_vec(&y, parties, &codec, &mut rng).unwrap();
+        let mut cost = NaiveCost::default();
+        let got = decode_product(
+            secure_dot(&xs, &ys, parties, &mut rng, &mut cost),
+            &codec,
+        );
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        assert_eq!(cost.triples, n as u64);
+        assert_eq!(cost.opened_elems, 2 * n as u64 * parties as u64);
+    }
+
+    #[test]
+    fn cost_scales_with_n() {
+        let mut rng = Rng::new(111);
+        let codec = FixedCodec::new(16);
+        let parties = 2;
+        let mut costs = Vec::new();
+        for n in [8usize, 16, 32] {
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let xs = share_real_vec(&x, parties, &codec, &mut rng).unwrap();
+            let mut cost = NaiveCost::default();
+            let _ = secure_dot(&xs, &xs, parties, &mut rng, &mut cost);
+            costs.push(cost.opened_elems);
+        }
+        assert_eq!(costs[1], 2 * costs[0]);
+        assert_eq!(costs[2], 2 * costs[1]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Shamir t-of-P secret sharing over GF(2^61 − 1).
+//!
+//! Stronger threat model than pairwise masking: any coalition of fewer
+//! than `threshold` parties learns nothing, and reconstruction succeeds
+//! from any `threshold` shares (robust to P − threshold dropouts).
+//! Costs `O(P)` shares per secret per party (`O(P²·len)` session bytes),
+//! measured in bench_mpc.
+
+use super::field::{random_fe, Fe};
+use crate::util::rng::Rng;
+
+/// A share: evaluation of the secret polynomial at x = party index + 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Share {
+    /// evaluation point (1-based party id)
+    pub x: u64,
+    pub y: Fe,
+}
+
+/// Split `secret` into `parties` shares with reconstruction threshold
+/// `threshold` (degree `threshold−1` polynomial).
+pub fn share(secret: Fe, parties: usize, threshold: usize, rng: &mut Rng) -> Vec<Share> {
+    assert!(threshold >= 1 && threshold <= parties, "1 ≤ t ≤ P");
+    // coefficients: [secret, a1, ..., a_{t-1}]
+    let coeffs: Vec<Fe> = std::iter::once(secret)
+        .chain((1..threshold).map(|_| random_fe(rng)))
+        .collect();
+    (1..=parties as u64)
+        .map(|x| {
+            // Horner evaluation at x
+            let fx = Fe::new(x);
+            let mut acc = Fe(0);
+            for &c in coeffs.iter().rev() {
+                acc = acc.mul(fx).add(c);
+            }
+            Share { x, y: acc }
+        })
+        .collect()
+}
+
+/// Share a vector: returns `parties` share vectors.
+pub fn share_vec(
+    secrets: &[Fe],
+    parties: usize,
+    threshold: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<Share>> {
+    let mut out: Vec<Vec<Share>> = (0..parties).map(|_| Vec::with_capacity(secrets.len())).collect();
+    for &s in secrets {
+        for (p, sh) in share(s, parties, threshold, rng).into_iter().enumerate() {
+            out[p].push(sh);
+        }
+    }
+    out
+}
+
+/// Lagrange reconstruction at x = 0 from any ≥ threshold shares
+/// (distinct evaluation points required).
+pub fn reconstruct(shares: &[Share]) -> Fe {
+    assert!(!shares.is_empty());
+    let mut acc = Fe(0);
+    for (i, si) in shares.iter().enumerate() {
+        let mut num = Fe(1);
+        let mut den = Fe(1);
+        for (j, sj) in shares.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            assert_ne!(si.x, sj.x, "duplicate evaluation points");
+            num = num.mul(Fe::new(sj.x).neg()); // (0 − x_j)
+            den = den.mul(Fe::new(si.x).sub(Fe::new(sj.x)));
+        }
+        acc = acc.add(si.y.mul(num.mul(den.inv())));
+    }
+    acc
+}
+
+/// Reconstruct a vector from per-party share vectors (first `threshold`
+/// parties' shares are used; pass exactly the surviving parties).
+pub fn reconstruct_vec(party_shares: &[&[Share]]) -> Vec<Fe> {
+    assert!(!party_shares.is_empty());
+    let len = party_shares[0].len();
+    (0..len)
+        .map(|i| {
+            let row: Vec<Share> = party_shares.iter().map(|p| p[i]).collect();
+            reconstruct(&row)
+        })
+        .collect()
+}
+
+/// Share-wise addition: add another party's contribution share-by-share
+/// (same evaluation points required).
+pub fn add_share_vecs(a: &mut [Share], b: &[Share]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        assert_eq!(x.x, y.x, "mismatched evaluation points");
+        x.y = x.y.add(y.y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        let mut rng = Rng::new(90);
+        for &(p, t) in &[(3usize, 2usize), (5, 3), (7, 7), (4, 1)] {
+            let secret = random_fe(&mut rng);
+            let shares = share(secret, p, t, &mut rng);
+            assert_eq!(reconstruct(&shares[..t]), secret, "p={p} t={t} (min quorum)");
+            assert_eq!(reconstruct(&shares), secret, "p={p} t={t} (all)");
+        }
+    }
+
+    #[test]
+    fn any_quorum_works() {
+        let mut rng = Rng::new(91);
+        let secret = Fe::new(123456789);
+        let shares = share(secret, 5, 3, &mut rng);
+        // every 3-subset
+        for a in 0..5 {
+            for b in a + 1..5 {
+                for c in b + 1..5 {
+                    let q = [shares[a], shares[b], shares[c]];
+                    assert_eq!(reconstruct(&q), secret);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn below_threshold_is_random_looking() {
+        // With t=3, two shares + wrong guess of third ≠ secret (sanity;
+        // information-theoretic privacy is by construction).
+        let mut rng = Rng::new(92);
+        let s1 = share(Fe::new(1111), 4, 3, &mut rng);
+        let s2 = share(Fe::new(2222), 4, 3, &mut rng);
+        // identical first-two-share prefixes can encode different secrets:
+        // reconstruct on 2 shares is under-determined — Lagrange on 2 pts
+        // of a degree-2 polynomial gives garbage, not either secret.
+        let r1 = reconstruct(&s1[..2]);
+        let r2 = reconstruct(&s2[..2]);
+        assert_ne!(r1, Fe::new(1111));
+        assert_ne!(r2, Fe::new(2222));
+    }
+
+    #[test]
+    fn homomorphic_sum() {
+        let mut rng = Rng::new(93);
+        let secrets = [Fe::new(100), Fe::new(250), Fe::new(7)];
+        let parties = 4;
+        let t = 3;
+        // each party ends up with the share-sum of all secrets
+        let mut acc: Option<Vec<Share>> = None;
+        for &s in &secrets {
+            let sh = share(s, parties, t, &mut rng);
+            match &mut acc {
+                None => acc = Some(sh),
+                Some(a) => add_share_vecs(a, &sh),
+            }
+        }
+        let total = reconstruct(&acc.unwrap()[..t]);
+        assert_eq!(total, Fe::new(357));
+    }
+
+    #[test]
+    fn vector_api_roundtrip() {
+        let mut rng = Rng::new(94);
+        let secrets: Vec<Fe> = (0..20).map(|_| random_fe(&mut rng)).collect();
+        let party_shares = share_vec(&secrets, 5, 3, &mut rng);
+        let quorum: Vec<&[Share]> = party_shares[..3].iter().map(|v| v.as_slice()).collect();
+        assert_eq!(reconstruct_vec(&quorum), secrets);
+    }
+
+    #[test]
+    fn signed_values_through_field() {
+        let mut rng = Rng::new(95);
+        let v = -123456i64;
+        let shares = share(Fe::from_i64(v), 3, 2, &mut rng);
+        assert_eq!(reconstruct(&shares[..2]).to_i64(), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate evaluation points")]
+    fn duplicate_points_panic() {
+        let s = Share { x: 1, y: Fe(5) };
+        let _ = reconstruct(&[s, s]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Binary message framing.
+//!
+//! Wire format: `[u32 tag][u64 payload_len][payload bytes]`, all
+//! little-endian. Payload helpers encode vectors of `u64`/`f64` and
+//! matrices with shape headers — enough structure for the protocol
+//! messages without a serde dependency.
+
+use std::io::{Read, Write};
+
+/// A tagged frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(tag: u32) -> Frame {
+        Frame { tag, payload: Vec::new() }
+    }
+
+    /// Total bytes on the wire for this frame.
+    pub fn wire_len(&self) -> u64 {
+        4 + 8 + self.payload.len() as u64
+    }
+
+    // ---- payload writers ----
+
+    pub fn put_u64(&mut self, v: u64) -> &mut Self {
+        self.payload.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn put_f64(&mut self, v: f64) -> &mut Self {
+        self.payload.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn put_u64_slice(&mut self, vs: &[u64]) -> &mut Self {
+        self.put_u64(vs.len() as u64);
+        self.payload.reserve(vs.len() * 8);
+        for &v in vs {
+            self.payload.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn put_f64_slice(&mut self, vs: &[f64]) -> &mut Self {
+        self.put_u64(vs.len() as u64);
+        self.payload.reserve(vs.len() * 8);
+        for &v in vs {
+            self.payload.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn put_bytes(&mut self, bs: &[u8]) -> &mut Self {
+        self.put_u64(bs.len() as u64);
+        self.payload.extend_from_slice(bs);
+        self
+    }
+
+    /// Cursor-based payload reader.
+    pub fn reader(&self) -> PayloadReader<'_> {
+        PayloadReader { buf: &self.payload, pos: 0 }
+    }
+}
+
+/// Sequential reader over a frame payload.
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "payload underrun");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u64_vec(&mut self) -> anyhow::Result<Vec<u64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f64_vec(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Write frames to any `Write`.
+pub struct FrameWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(w: W) -> Self {
+        FrameWriter { w }
+    }
+
+    pub fn write(&mut self, f: &Frame) -> anyhow::Result<u64> {
+        self.w.write_all(&f.tag.to_le_bytes())?;
+        self.w.write_all(&(f.payload.len() as u64).to_le_bytes())?;
+        self.w.write_all(&f.payload)?;
+        self.w.flush()?;
+        Ok(f.wire_len())
+    }
+}
+
+/// Read frames from any `Read`.
+pub struct FrameReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(r: R) -> Self {
+        FrameReader { r }
+    }
+
+    pub fn read(&mut self) -> anyhow::Result<Frame> {
+        let mut tag = [0u8; 4];
+        self.r.read_exact(&mut tag)?;
+        let mut len = [0u8; 8];
+        self.r.read_exact(&mut len)?;
+        let len = u64::from_le_bytes(len) as usize;
+        anyhow::ensure!(len <= 1 << 32, "frame too large: {len} bytes");
+        let mut payload = vec![0u8; len];
+        self.r.read_exact(&mut payload)?;
+        Ok(Frame { tag: u32::from_le_bytes(tag), payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_roundtrip() {
+        let mut f = Frame::new(7);
+        f.put_u64(42)
+            .put_f64(-1.5)
+            .put_u64_slice(&[1, 2, 3])
+            .put_f64_slice(&[0.5, 2.5])
+            .put_bytes(b"hello");
+        let mut r = f.reader();
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.f64().unwrap(), -1.5);
+        assert_eq!(r.u64_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f64_vec().unwrap(), vec![0.5, 2.5]);
+        assert_eq!(r.bytes().unwrap(), b"hello");
+        assert!(r.done());
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = FrameWriter::new(&mut buf);
+            let mut f1 = Frame::new(1);
+            f1.put_u64(10);
+            let mut f2 = Frame::new(2);
+            f2.put_f64_slice(&[1.0, 2.0, 3.0]);
+            w.write(&f1).unwrap();
+            w.write(&f2).unwrap();
+        }
+        let mut r = FrameReader::new(buf.as_slice());
+        let g1 = r.read().unwrap();
+        assert_eq!(g1.tag, 1);
+        assert_eq!(g1.reader().u64().unwrap(), 10);
+        let g2 = r.read().unwrap();
+        assert_eq!(g2.tag, 2);
+        assert_eq!(g2.reader().f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn wire_len_counts_header() {
+        let mut f = Frame::new(0);
+        f.put_u64(1);
+        assert_eq!(f.wire_len(), 4 + 8 + 8);
+    }
+
+    #[test]
+    fn underrun_is_error_not_panic() {
+        let f = Frame::new(1);
+        assert!(f.reader().u64().is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        let mut f = Frame::new(1);
+        f.put_u64_slice(&[1, 2, 3, 4]);
+        w.write(&f).unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut r = FrameReader::new(buf.as_slice());
+        assert!(r.read().is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Shared byte/message counters for E4.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe counter of bytes and messages crossing a party boundary.
+#[derive(Clone, Debug, Default)]
+pub struct ByteMeter {
+    inner: Arc<MeterInner>,
+}
+
+#[derive(Debug, Default)]
+struct MeterInner {
+    bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl ByteMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, bytes: u64) {
+        self.inner.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.inner.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.inner.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.inner.bytes.store(0, Ordering::Relaxed);
+        self.inner.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_resets() {
+        let m = ByteMeter::new();
+        m.record(100);
+        m.record(24);
+        assert_eq!(m.bytes(), 124);
+        assert_eq!(m.messages(), 2);
+        m.reset();
+        assert_eq!(m.bytes(), 0);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let m = ByteMeter::new();
+        let m2 = m.clone();
+        m2.record(8);
+        assert_eq!(m.bytes(), 8);
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let m = ByteMeter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.bytes(), 8000);
+        assert_eq!(m.messages(), 8000);
+    }
+}

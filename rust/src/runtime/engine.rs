@@ -1,0 +1,234 @@
+//! The artifact execution engine: compile-once, execute-many wrappers
+//! over the PJRT CPU client.
+
+use super::manifest::Manifest;
+use crate::linalg::{cholesky_upper, Matrix};
+use crate::scan::CompressedParty;
+use crate::stats::{t_two_sided_p, AssocResult};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Compiled artifact set. `!Send` by construction (PJRT raw pointers);
+/// create one per party thread.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load `<dir>/manifest.json`, compile every entry on the CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = BTreeMap::new();
+        for name in manifest.entries.keys() {
+            let path = manifest.entry_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine { manifest, client, executables })
+    }
+
+    /// Number of compiled entry points.
+    pub fn entry_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("entry `{name}` not compiled"))
+    }
+
+    /// Execute an entry returning the decomposed output tuple as f64 vecs.
+    /// Takes borrowed literals so callers can reuse block buffers across
+    /// calls without re-allocating.
+    fn run(&self, name: &str, args: &[&xla::Literal]) -> anyhow::Result<Vec<Vec<f64>>> {
+        let exe = self.exe(name)?;
+        let result = exe.execute::<&xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.into_iter().map(|p| Ok(p.to_vec::<f64>()?)).collect()
+    }
+
+    /// Compress one party's data through the AOT artifacts. Produces the
+    /// same `CompressedParty` as the pure-Rust path (verified by
+    /// integration tests to ~1e-12).
+    pub fn compress_party(
+        &self,
+        y: &[f64],
+        c: &Matrix,
+        x: &Matrix,
+    ) -> anyhow::Result<CompressedParty> {
+        let n = y.len();
+        anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
+        let k = c.cols;
+        let m = x.cols;
+        let (nb, mb, kp) = (self.manifest.n_block, self.manifest.m_block, self.manifest.k_pad);
+        anyhow::ensure!(
+            k <= kp,
+            "K={k} exceeds artifact k_pad={kp}; re-run `make artifacts` with --k-pad ≥ {k}"
+        );
+
+        let n_blocks = n.div_ceil(nb).max(1);
+        let m_blocks = m.div_ceil(mb).max(1);
+
+        let mut yty = 0.0;
+        let mut cty = vec![0.0; kp];
+        let mut ctc = vec![0.0; kp * kp];
+        let mut xty = vec![0.0; m];
+        let mut xtx = vec![0.0; m];
+        let mut ctx = Matrix::zeros(k, m);
+
+        // Reusable padded buffers.
+        let mut y_buf = vec![0.0f64; nb];
+        let mut c_buf = vec![0.0f64; nb * kp];
+        let mut x_buf = vec![0.0f64; nb * mb];
+
+        for bi in 0..n_blocks {
+            let r0 = bi * nb;
+            let r1 = (r0 + nb).min(n);
+            let rows = r1 - r0;
+            // pack y, C with zero padding
+            y_buf.fill(0.0);
+            y_buf[..rows].copy_from_slice(&y[r0..r1]);
+            c_buf.fill(0.0);
+            for i in 0..rows {
+                let src = c.row(r0 + i);
+                c_buf[i * kp..i * kp + k].copy_from_slice(src);
+            }
+            // build the y/C literals once per sample block — reshape
+            // allocates a fresh literal, so it must stay out of the
+            // variant loop (EXPERIMENTS.md §Perf iteration 3)
+            let y_lit = xla::Literal::vec1(&y_buf);
+            let c_lit = xla::Literal::vec1(&c_buf).reshape(&[nb as i64, kp as i64])?;
+
+            // covariate-side statistics once per sample block
+            let out = self.run("compress_yc", &[&y_lit, &c_lit])?;
+            yty += out[0][0];
+            for i in 0..kp {
+                cty[i] += out[1][i];
+            }
+            for i in 0..kp * kp {
+                ctc[i] += out[2][i];
+            }
+
+            // variant blocks
+            for bj in 0..m_blocks {
+                let c0 = bj * mb;
+                let c1 = (c0 + mb).min(m);
+                let cols = c1 - c0;
+                x_buf.fill(0.0);
+                for i in 0..rows {
+                    let src = &x.row(r0 + i)[c0..c1];
+                    x_buf[i * mb..i * mb + cols].copy_from_slice(src);
+                }
+                let x_lit = xla::Literal::vec1(&x_buf).reshape(&[nb as i64, mb as i64])?;
+                let out = self.run("compress_x", &[&y_lit, &c_lit, &x_lit])?;
+                // out: xty (mb), xtx (mb), ctx (kp × mb)
+                for j in 0..cols {
+                    xty[c0 + j] += out[0][j];
+                    xtx[c0 + j] += out[1][j];
+                }
+                for kk in 0..k {
+                    let row = ctx.row_mut(kk);
+                    for j in 0..cols {
+                        row[c0 + j] += out[2][kk * mb + j];
+                    }
+                }
+            }
+        }
+
+        // Slice covariate padding away.
+        let cty_k = cty[..k].to_vec();
+        let mut ctc_k = Matrix::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                ctc_k[(i, j)] = ctc[i * kp + j];
+            }
+        }
+        // R_p from the Gram matrix (same positive-diagonal factor as QR).
+        let r = cholesky_upper(&ctc_k)?;
+
+        Ok(CompressedParty { n, yty, cty: cty_k, ctc: ctc_k, r, xty, xtx, ctx })
+    }
+
+    /// Lemma 3.1 epilogue on aggregates through the artifact, with
+    /// p-values attached on the Rust side. `qty`/`qtx` are the projected
+    /// statistics (K-dim); all M-sized inputs are blocked and padded.
+    pub fn scan_stats(
+        &self,
+        n: usize,
+        k: usize,
+        yty: f64,
+        xty: &[f64],
+        xtx: &[f64],
+        qty: &[f64],
+        qtx: &Matrix,
+    ) -> anyhow::Result<AssocResult> {
+        let m = xty.len();
+        anyhow::ensure!(xtx.len() == m && qtx.cols == m && qtx.rows == k && qty.len() == k);
+        let (mb, kp) = (self.manifest.m_block, self.manifest.k_pad);
+        anyhow::ensure!(k <= kp, "K={k} exceeds artifact k_pad={kp}");
+        let m_blocks = m.div_ceil(mb).max(1);
+
+        // K-padded projected stats (zero rows contribute nothing).
+        let mut qty_p = vec![0.0; kp];
+        qty_p[..k].copy_from_slice(qty);
+
+        let mut beta = vec![f64::NAN; m];
+        let mut se = vec![f64::NAN; m];
+        let mut t = vec![f64::NAN; m];
+        let df = n as f64 - k as f64 - 1.0;
+
+        let mut xty_buf = vec![0.0f64; mb];
+        let mut xtx_buf = vec![0.0f64; mb];
+        let mut qtx_buf = vec![0.0f64; kp * mb];
+
+        for bj in 0..m_blocks {
+            let c0 = bj * mb;
+            let c1 = (c0 + mb).min(m);
+            let cols = c1 - c0;
+            xty_buf.fill(0.0);
+            xty_buf[..cols].copy_from_slice(&xty[c0..c1]);
+            xtx_buf.fill(0.0);
+            xtx_buf[..cols].copy_from_slice(&xtx[c0..c1]);
+            qtx_buf.fill(0.0);
+            for kk in 0..k {
+                let src = &qtx.row(kk)[c0..c1];
+                qtx_buf[kk * mb..kk * mb + cols].copy_from_slice(src);
+            }
+            let args = [
+                xla::Literal::scalar(n as f64),
+                xla::Literal::scalar(k as f64),
+                xla::Literal::scalar(yty),
+                xla::Literal::vec1(&xty_buf),
+                xla::Literal::vec1(&xtx_buf),
+                xla::Literal::vec1(&qty_p),
+                xla::Literal::vec1(&qtx_buf).reshape(&[kp as i64, mb as i64])?,
+            ];
+            let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+            let out = self.run("scan_stats", &arg_refs)?;
+            for j in 0..cols {
+                beta[c0 + j] = out[0][j];
+                se[c0 + j] = out[1][j];
+                t[c0 + j] = out[2][j];
+            }
+        }
+        let p: Vec<f64> = t
+            .iter()
+            .map(|&tv| if tv.is_finite() { t_two_sided_p(tv, df) } else { f64::NAN })
+            .collect();
+        Ok(AssocResult { beta, se, t, p, df })
+    }
+}

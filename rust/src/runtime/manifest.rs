@@ -1,0 +1,124 @@
+//! Artifact manifest: block geometry + entry-point file map.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_block: usize,
+    pub m_block: usize,
+    pub k_pad: usize,
+    pub dtype: String,
+    /// entry name → HLO text file (relative to `dir`)
+    pub entries: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let n_block = v.req_usize("n_block")?;
+        let m_block = v.req_usize("m_block")?;
+        let k_pad = v.req_usize("k_pad")?;
+        let dtype = v.req_str("dtype")?.to_string();
+        anyhow::ensure!(dtype == "f64", "runtime expects f64 artifacts, got {dtype}");
+        let mut entries = BTreeMap::new();
+        match v.get("entries") {
+            Some(Json::Obj(m)) => {
+                for (k, val) in m {
+                    let fname = val
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("entry `{k}` not a string"))?;
+                    let fpath = dir.join(fname);
+                    anyhow::ensure!(fpath.exists(), "missing artifact {}", fpath.display());
+                    entries.insert(k.clone(), fname.to_string());
+                }
+            }
+            _ => anyhow::bail!("manifest missing `entries` object"),
+        }
+        for required in ["compress_x", "compress_yc", "scan_stats"] {
+            anyhow::ensure!(entries.contains_key(required), "manifest missing entry `{required}`");
+        }
+        Ok(Manifest { dir, n_block, m_block, k_pad, dtype, entries })
+    }
+
+    pub fn entry_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        self.entries
+            .get(name)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry `{name}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake(dir: &Path, manifest: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dash-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        write_fake(
+            &d,
+            r#"{"version":1,"dtype":"f64","n_block":512,"m_block":256,"k_pad":16,
+                "entries":{"compress_x":"a.txt","compress_yc":"b.txt","scan_stats":"c.txt"}}"#,
+            &["a.txt", "b.txt", "c.txt"],
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.n_block, 512);
+        assert_eq!(m.m_block, 256);
+        assert_eq!(m.k_pad, 16);
+        assert!(m.entry_path("compress_x").unwrap().ends_with("a.txt"));
+        assert!(m.entry_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let d = tmpdir("missing");
+        write_fake(
+            &d,
+            r#"{"version":1,"dtype":"f64","n_block":512,"m_block":256,"k_pad":16,
+                "entries":{"compress_x":"a.txt","compress_yc":"b.txt","scan_stats":"gone.txt"}}"#,
+            &["a.txt", "b.txt"],
+        );
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let d = tmpdir("dtype");
+        write_fake(
+            &d,
+            r#"{"version":1,"dtype":"f32","n_block":512,"m_block":256,"k_pad":16,
+                "entries":{"compress_x":"a.txt","compress_yc":"b.txt","scan_stats":"c.txt"}}"#,
+            &["a.txt", "b.txt", "c.txt"],
+        );
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(tmpdir("nodir")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts and serves the compress /
+//! scan-stats hot path from Rust.
+//!
+//! `make artifacts` (Python, build-time only) writes
+//! `artifacts/{compress_x,compress_yc,scan_stats}.hlo.txt` plus
+//! `manifest.json` with the block geometry. This module loads the HLO
+//! *text* (`HloModuleProto::from_text_file` — the id-renumbering parser;
+//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1),
+//! compiles each entry once on the CPU PJRT client, and exposes typed
+//! wrappers that handle the padding/slicing contract:
+//!
+//! - sample blocks of `n_block` rows; tail blocks are zero-padded (exact:
+//!   every statistic is a sum of per-sample products),
+//! - covariates zero-padded to `k_pad` columns; the padded rows/cols of
+//!   `CᵀX`/`CᵀC` are sliced away before factorization,
+//! - variant blocks of `m_block` columns; padded lanes produce NaN in
+//!   `scan_stats` and are sliced away.
+//!
+//! The wrappers are `!Send` (PJRT pointers) — each party thread owns its
+//! own [`Engine`], mirroring the one-process-per-party deployment.
+
+mod manifest;
+mod engine;
+
+pub use engine::Engine;
+pub use manifest::Manifest;

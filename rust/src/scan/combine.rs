@@ -1,0 +1,260 @@
+//! Combine-across stage (§2/§4): from aggregate sums to exact statistics.
+//!
+//! Work here is `O(PK² + K³ + K²M)` and **independent of N** — the paper's
+//! central complexity claim (E3). Two ways to obtain the `R` factor of
+//! the stacked covariate matrix:
+//!
+//! - [`RFactorMethod::Tsqr`]: stack per-party `R_p` and re-QR (Lemma 4.1).
+//!   Numerically ideal, but requires the `R_p` in the clear.
+//! - [`RFactorMethod::Cholesky`]: `R = chol(Σ C_pᵀC_p)`. Works from the
+//!   securely-summed Gram matrix only; condition number is squared.
+//!
+//! `Auto` picks TSQR when per-party factors are available (plaintext
+//! mode) and Cholesky otherwise.
+
+use super::compressed::{AggregateSums, CompressedParty};
+use crate::linalg::{cholesky_upper, solve_rt_b, tsqr_stack_r, Matrix};
+use crate::stats::{
+    fit_from_sufficient, scan_stats_from_projected, AssocResult, RegressionFit, ScanStats,
+};
+
+/// How the combine stage obtains the stacked-R factor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RFactorMethod {
+    Auto,
+    Tsqr,
+    Cholesky,
+}
+
+/// Options for the combine stage.
+#[derive(Clone, Copy, Debug)]
+pub struct CombineOptions {
+    pub r_method: RFactorMethod,
+}
+
+impl Default for CombineOptions {
+    fn default() -> Self {
+        CombineOptions { r_method: RFactorMethod::Auto }
+    }
+}
+
+/// Output of a full association scan.
+#[derive(Clone, Debug)]
+pub struct ScanOutput {
+    pub assoc: AssocResult,
+    /// the covariate-only fit (γ̂ etc.) that comes for free from the sums
+    pub covariate_fit: RegressionFit,
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+impl ScanOutput {
+    pub fn min_p_value(&self) -> Option<f64> {
+        self.assoc.min_p()
+    }
+
+    /// Indices of variants passing a significance threshold, sorted by p.
+    pub fn hits(&self, alpha: f64) -> Vec<usize> {
+        let mut hs: Vec<usize> = (0..self.m)
+            .filter(|&j| self.assoc.p[j].is_finite() && self.assoc.p[j] < alpha)
+            .collect();
+        hs.sort_by(|&a, &b| self.assoc.p[a].partial_cmp(&self.assoc.p[b]).unwrap());
+        hs
+    }
+}
+
+/// Combine aggregate sums (and optionally per-party `R_p` factors for the
+/// TSQR path) into exact scan statistics.
+pub fn combine_compressed(
+    agg: &AggregateSums,
+    party_rs: Option<&[Matrix]>,
+    opts: CombineOptions,
+) -> anyhow::Result<ScanOutput> {
+    let k = agg.cty.len();
+    let m = agg.xty.len();
+    let method = match opts.r_method {
+        RFactorMethod::Auto => {
+            if party_rs.is_some() {
+                RFactorMethod::Tsqr
+            } else {
+                RFactorMethod::Cholesky
+            }
+        }
+        m => m,
+    };
+    let r = match method {
+        RFactorMethod::Tsqr => {
+            let rs = party_rs
+                .ok_or_else(|| anyhow::anyhow!("TSQR requires per-party R factors"))?;
+            tsqr_stack_r(rs)
+        }
+        RFactorMethod::Cholesky => cholesky_upper(&agg.ctc)?,
+        RFactorMethod::Auto => unreachable!(),
+    };
+
+    // Projection through Qᵀ without Q: Qᵀy = R⁻ᵀ(Cᵀy), QᵀX = R⁻ᵀ(CᵀX).
+    let qt_y = solve_rt_b(&r, &Matrix::from_vec(k, 1, agg.cty.clone())).data;
+    let qt_x = solve_rt_b(&r, &agg.ctx);
+
+    let assoc = scan_stats_from_projected(&ScanStats {
+        n: agg.n,
+        k,
+        yty: agg.yty,
+        xty: agg.xty.clone(),
+        xtx: agg.xtx.clone(),
+        qt_y,
+        qt_x,
+    });
+
+    let covariate_fit = fit_from_sufficient(agg.n, agg.yty, &agg.cty, &agg.ctc)?;
+
+    Ok(ScanOutput { assoc, covariate_fit, n: agg.n, k, m })
+}
+
+/// §2 only (no transient covariates): multi-party plain linear regression
+/// from per-party compressed statistics.
+pub fn combine_regression(parties: &[CompressedParty]) -> anyhow::Result<RegressionFit> {
+    anyhow::ensure!(!parties.is_empty());
+    let k = parties[0].k();
+    let n: usize = parties.iter().map(|p| p.n).sum();
+    let yty: f64 = parties.iter().map(|p| p.yty).sum();
+    let mut cty = vec![0.0; k];
+    let mut ctc = Matrix::zeros(k, k);
+    for p in parties {
+        anyhow::ensure!(p.k() == k, "covariate dimension mismatch across parties");
+        for i in 0..k {
+            cty[i] += p.cty[i];
+        }
+        ctc = ctc.add(&p.ctc);
+    }
+    fit_from_sufficient(n, yty, &cty, &ctc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::scan::compressed::{compress_party, flatten_for_sum, unflatten_sum};
+    use crate::util::rng::Rng;
+
+    fn party(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|i| 0.4 * x[(i, 0)] + rng.normal()).collect();
+        (y, c, x)
+    }
+
+    fn aggregate(cps: &[CompressedParty]) -> AggregateSums {
+        let (layout, mut acc) = flatten_for_sum(&cps[0]);
+        for cp in &cps[1..] {
+            let (_, f) = flatten_for_sum(cp);
+            for (a, b) in acc.iter_mut().zip(&f) {
+                *a += b;
+            }
+        }
+        unflatten_sum(layout, &acc).unwrap()
+    }
+
+    #[test]
+    fn multiparty_equals_pooled_tsqr_and_cholesky() {
+        let (y1, c1, x1) = party(40, 3, 8, 140);
+        let (y2, c2, x2) = party(55, 3, 8, 141);
+        let (y3, c3, x3) = party(33, 3, 8, 142);
+        let cps: Vec<CompressedParty> = [(&y1, &c1, &x1), (&y2, &c2, &x2), (&y3, &c3, &x3)]
+            .iter()
+            .map(|(y, c, x)| compress_party(y, c, x, 8, Some(1)))
+            .collect();
+        let agg = aggregate(&cps);
+        let rs: Vec<Matrix> = cps.iter().map(|p| p.r.clone()).collect();
+
+        // pooled oracle
+        let y: Vec<f64> = y1.iter().chain(&y2).chain(&y3).copied().collect();
+        let c = Matrix::vstack(&[&c1, &c2, &c3]);
+        let x = Matrix::vstack(&[&x1, &x2, &x3]);
+        let pooled_cp = compress_party(&y, &c, &x, 8, Some(1));
+        let pooled_agg = aggregate(std::slice::from_ref(&pooled_cp));
+        let oracle = combine_compressed(
+            &pooled_agg,
+            Some(std::slice::from_ref(&pooled_cp.r)),
+            CombineOptions { r_method: RFactorMethod::Tsqr },
+        )
+        .unwrap();
+
+        for method in [RFactorMethod::Tsqr, RFactorMethod::Cholesky] {
+            let got = combine_compressed(
+                &agg,
+                Some(&rs),
+                CombineOptions { r_method: method },
+            )
+            .unwrap();
+            assert!(
+                rel_err(&got.assoc.beta, &oracle.assoc.beta) < 1e-9,
+                "{method:?} beta"
+            );
+            assert!(rel_err(&got.assoc.se, &oracle.assoc.se) < 1e-9, "{method:?} se");
+        }
+    }
+
+    #[test]
+    fn auto_uses_cholesky_without_rs() {
+        let (y, c, x) = party(60, 4, 5, 143);
+        let cp = compress_party(&y, &c, &x, 5, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let out = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
+        assert_eq!(out.m, 5);
+        assert!(out.min_p_value().is_some());
+    }
+
+    #[test]
+    fn tsqr_without_rs_errors() {
+        let (y, c, x) = party(30, 3, 4, 144);
+        let cp = compress_party(&y, &c, &x, 4, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        assert!(combine_compressed(
+            &agg,
+            None,
+            CombineOptions { r_method: RFactorMethod::Tsqr }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn combine_regression_matches_pooled_fit() {
+        let (y1, c1, x1) = party(50, 4, 1, 145);
+        let (y2, c2, x2) = party(70, 4, 1, 146);
+        let cp1 = compress_party(&y1, &c1, &x1, 1, Some(1));
+        let cp2 = compress_party(&y2, &c2, &x2, 1, Some(1));
+        let fit = combine_regression(&[cp1, cp2]).unwrap();
+
+        let y: Vec<f64> = y1.iter().chain(&y2).copied().collect();
+        let c = Matrix::vstack(&[&c1, &c2]);
+        let oracle = fit_from_sufficient(
+            y.len(),
+            y.iter().map(|v| v * v).sum(),
+            &c.t_matvec(&y),
+            &c.gram(),
+        )
+        .unwrap();
+        assert!(rel_err(&fit.gamma, &oracle.gamma) < 1e-11);
+        assert!(rel_err(&fit.se, &oracle.se) < 1e-11);
+    }
+
+    #[test]
+    fn hits_sorted_by_p() {
+        let (y, c, x) = party(200, 3, 12, 147);
+        let cp = compress_party(&y, &c, &x, 12, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let out = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
+        let hits = out.hits(0.5);
+        for w in hits.windows(2) {
+            assert!(out.assoc.p[w[0]] <= out.assoc.p[w[1]]);
+        }
+        // variant 0 carries real signal → should be the top hit
+        assert_eq!(hits.first(), Some(&0));
+    }
+}

@@ -1,0 +1,296 @@
+//! Compress-within stage (§2/§4): per-party sufficient statistics.
+//!
+//! For party data `(y, C, X)` with `N_p` samples, `K` permanent and `M`
+//! transient covariates, compression produces
+//!
+//! `yᵀy, Cᵀy, CᵀC, Xᵀy, X·X (diag), CᵀX, R_p = qr(C_p).R`
+//!
+//! — `O(N_p K (K + M))` work, all local plaintext. The `M`-sized pieces
+//! are computed in parallel over variant blocks ([`parallel_for_chunks`]),
+//! which is the paper's `O(NKM/C)` term.
+
+use crate::linalg::{householder_qr, Matrix};
+use crate::util::threadpool::parallel_for_chunks;
+
+/// Per-party compressed statistics. The entire secure protocol operates
+/// on this — the `N_p`-row data never leaves the party.
+#[derive(Clone, Debug)]
+pub struct CompressedParty {
+    pub n: usize,
+    pub yty: f64,
+    /// Cᵀy, length K
+    pub cty: Vec<f64>,
+    /// CᵀC, K × K
+    pub ctc: Matrix,
+    /// R factor of QR(C_p), K × K (TSQR path; reveals C_pᵀC_p, so it is
+    /// only transmitted in plaintext mode — see DESIGN.md §Security)
+    pub r: Matrix,
+    /// Xᵀy, length M
+    pub xty: Vec<f64>,
+    /// per-variant X_m·X_m, length M
+    pub xtx: Vec<f64>,
+    /// CᵀX, K × M
+    pub ctx: Matrix,
+}
+
+impl CompressedParty {
+    pub fn k(&self) -> usize {
+        self.cty.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.xty.len()
+    }
+}
+
+/// Compress one party's data (pure-Rust reference path).
+///
+/// `block_m` controls the variant-block width for parallelism; `threads`
+/// caps the worker count (None = all cores).
+pub fn compress_party(
+    y: &[f64],
+    c: &Matrix,
+    x: &Matrix,
+    block_m: usize,
+    threads: Option<usize>,
+) -> CompressedParty {
+    let n = y.len();
+    assert_eq!(c.rows, n, "C rows != N");
+    assert_eq!(x.rows, n, "X rows != N");
+    let k = c.cols;
+    let m = x.cols;
+
+    let yty: f64 = y.iter().map(|v| v * v).sum();
+    let cty = c.t_matvec(y);
+    let ctc = c.gram();
+    let r = householder_qr(c).r;
+
+    // M-sized pieces, blocked over variants. Each chunk accumulates into
+    // a chunk-local contiguous buffer (xty/xtx/ctx interleaved per block)
+    // and writes back once — the strided `ctx[kk·m + j]` stores of the
+    // naive loop thrash the cache at K ≥ 16 (see EXPERIMENTS.md §Perf).
+    let mut xty = vec![0.0; m];
+    let mut xtx = vec![0.0; m];
+    let mut ctx = Matrix::zeros(k, m);
+    {
+        // Disjoint column blocks → safe shared-mutable access.
+        let xty_ptr = SendPtr(xty.as_mut_ptr());
+        let xtx_ptr = SendPtr(xtx.as_mut_ptr());
+        let ctx_ptr = SendPtr(ctx.data.as_mut_ptr());
+        parallel_for_chunks(m, block_m.max(1), threads, |j0, j1| {
+            let w = j1 - j0;
+            // local accumulators: [xty(w) | xtx(w) | ctx(k×w)]
+            let mut local = vec![0.0f64; w * (2 + k)];
+            for i in 0..n {
+                let yi = y[i];
+                let x_row = &x.row(i)[j0..j1];
+                let c_row = c.row(i);
+                let (xty_l, rest) = local.split_at_mut(w);
+                let (xtx_l, ctx_l) = rest.split_at_mut(w);
+                // branch-free axpy form: one vectorizable pass per output
+                // row (beats the per-element `if xv == 0` skip even at
+                // ~50% genotype sparsity — see EXPERIMENTS.md §Perf)
+                for (j, &xv) in x_row.iter().enumerate() {
+                    xty_l[j] += xv * yi;
+                    xtx_l[j] += xv * xv;
+                }
+                for (kk, &cv) in c_row.iter().enumerate() {
+                    let row = &mut ctx_l[kk * w..(kk + 1) * w];
+                    for (r, &xv) in row.iter_mut().zip(x_row) {
+                        *r += cv * xv;
+                    }
+                }
+            }
+            // single write-back into the shared outputs
+            // SAFETY: columns [j0, j1) are owned by this chunk.
+            unsafe {
+                for j in 0..w {
+                    *xty_ptr.at(j0 + j) = local[j];
+                    *xtx_ptr.at(j0 + j) = local[w + j];
+                }
+                for kk in 0..k {
+                    for j in 0..w {
+                        *ctx_ptr.at(kk * m + j0 + j) = local[(2 + kk) * w + j];
+                    }
+                }
+            }
+        });
+    }
+
+    CompressedParty { n, yty, cty, ctc, r, xty, xtx, ctx }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    /// SAFETY: caller guarantees disjoint indices across threads.
+    #[inline]
+    unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+/// Layout of the flattened statistics vector used by the secure-sum
+/// protocol. All parties must agree on `(K, M)`; the flattening is
+/// `[n, yty, cty(K), ctc(K²), xty(M), xtx(M), ctx(K·M)]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlatLayout {
+    pub k: usize,
+    pub m: usize,
+}
+
+impl FlatLayout {
+    pub fn len(&self) -> usize {
+        2 + self.k + self.k * self.k + 2 * self.m + self.k * self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// Flatten compressed statistics for share-wise summation. `n` rides in
+/// the same vector (as a real number) so the entire combine input is one
+/// secure sum.
+pub fn flatten_for_sum(cp: &CompressedParty) -> (FlatLayout, Vec<f64>) {
+    let layout = FlatLayout { k: cp.k(), m: cp.m() };
+    let mut v = Vec::with_capacity(layout.len());
+    v.push(cp.n as f64);
+    v.push(cp.yty);
+    v.extend_from_slice(&cp.cty);
+    v.extend_from_slice(&cp.ctc.data);
+    v.extend_from_slice(&cp.xty);
+    v.extend_from_slice(&cp.xtx);
+    v.extend_from_slice(&cp.ctx.data);
+    debug_assert_eq!(v.len(), layout.len());
+    (layout, v)
+}
+
+/// Aggregate sums, as reconstructed by the combine stage.
+#[derive(Clone, Debug)]
+pub struct AggregateSums {
+    pub n: usize,
+    pub yty: f64,
+    pub cty: Vec<f64>,
+    pub ctc: Matrix,
+    pub xty: Vec<f64>,
+    pub xtx: Vec<f64>,
+    pub ctx: Matrix,
+}
+
+/// Inverse of [`flatten_for_sum`] applied to a summed vector.
+pub fn unflatten_sum(layout: FlatLayout, v: &[f64]) -> anyhow::Result<AggregateSums> {
+    anyhow::ensure!(v.len() == layout.len(), "flat length mismatch");
+    let (k, m) = (layout.k, layout.m);
+    let mut pos = 0usize;
+    let mut take = |n: usize| {
+        let s = &v[pos..pos + n];
+        pos += n;
+        s
+    };
+    let n = take(1)[0].round() as usize;
+    let yty = take(1)[0];
+    let cty = take(k).to_vec();
+    let ctc = Matrix::from_vec(k, k, take(k * k).to_vec());
+    let xty = take(m).to_vec();
+    let xtx = take(m).to_vec();
+    let ctx = Matrix::from_vec(k, m, take(k * m).to_vec());
+    Ok(AggregateSums { n, yty, cty, ctc, xty, xtx, ctx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::util::rng::Rng;
+
+    fn make(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (y, c, x)
+    }
+
+    #[test]
+    fn matches_direct_computation() {
+        let (y, c, x) = make(80, 4, 17, 130);
+        let cp = compress_party(&y, &c, &x, 5, Some(3));
+        assert_eq!(cp.n, 80);
+        assert!(rel_err(&[cp.yty], &[y.iter().map(|v| v * v).sum::<f64>()]) < 1e-14);
+        assert!(rel_err(&cp.cty, &c.t_matvec(&y)) < 1e-13);
+        assert!(rel_err(&cp.ctc.data, &c.gram().data) < 1e-13);
+        assert!(rel_err(&cp.xty, &x.t_matvec(&y)) < 1e-13);
+        let xtx_direct: Vec<f64> =
+            (0..17).map(|j| x.col(j).iter().map(|v| v * v).sum()).collect();
+        assert!(rel_err(&cp.xtx, &xtx_direct) < 1e-13);
+        assert!(rel_err(&cp.ctx.data, &c.t_matmul(&x).data) < 1e-13);
+    }
+
+    #[test]
+    fn block_and_thread_invariance() {
+        let (y, c, x) = make(60, 3, 23, 131);
+        let a = compress_party(&y, &c, &x, 23, Some(1));
+        let b = compress_party(&y, &c, &x, 4, Some(4));
+        // identical up to fp addition order within a column (same order
+        // actually — rows are always scanned in order within a block)
+        assert!(rel_err(&a.xty, &b.xty) < 1e-14);
+        assert!(rel_err(&a.ctx.data, &b.ctx.data) < 1e-14);
+    }
+
+    #[test]
+    fn sparse_zero_columns_ok() {
+        let (y, c, mut x) = make(40, 3, 5, 132);
+        for i in 0..40 {
+            x[(i, 2)] = 0.0;
+        }
+        let cp = compress_party(&y, &c, &x, 2, Some(2));
+        assert_eq!(cp.xtx[2], 0.0);
+        assert_eq!(cp.xty[2], 0.0);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let (y, c, x) = make(50, 4, 9, 133);
+        let cp = compress_party(&y, &c, &x, 9, Some(1));
+        let (layout, flat) = flatten_for_sum(&cp);
+        assert_eq!(flat.len(), layout.len());
+        let agg = unflatten_sum(layout, &flat).unwrap();
+        assert_eq!(agg.n, cp.n);
+        assert!(rel_err(&agg.cty, &cp.cty) < 1e-15);
+        assert!(rel_err(&agg.ctx.data, &cp.ctx.data) < 1e-15);
+        assert!(rel_err(&agg.xtx, &cp.xtx) < 1e-15);
+    }
+
+    #[test]
+    fn flat_sum_equals_pooled_stats() {
+        // Σ_p flatten(party_p) == flatten-ish of pooled data
+        let (y1, c1, x1) = make(30, 3, 7, 134);
+        let (y2, c2, x2) = make(45, 3, 7, 135);
+        let cp1 = compress_party(&y1, &c1, &x1, 7, Some(1));
+        let cp2 = compress_party(&y2, &c2, &x2, 7, Some(1));
+        let (layout, f1) = flatten_for_sum(&cp1);
+        let (_, f2) = flatten_for_sum(&cp2);
+        let sum: Vec<f64> = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
+        let agg = unflatten_sum(layout, &sum).unwrap();
+
+        let y: Vec<f64> = y1.iter().chain(&y2).copied().collect();
+        let c = Matrix::vstack(&[&c1, &c2]);
+        let x = Matrix::vstack(&[&x1, &x2]);
+        let pooled = compress_party(&y, &c, &x, 7, Some(1));
+        assert_eq!(agg.n, 75);
+        assert!(rel_err(&agg.ctc.data, &pooled.ctc.data) < 1e-13);
+        assert!(rel_err(&agg.xty, &pooled.xty) < 1e-13);
+        assert!(rel_err(&agg.ctx.data, &pooled.ctx.data) < 1e-13);
+    }
+
+    #[test]
+    fn layout_len() {
+        let l = FlatLayout { k: 3, m: 10 };
+        assert_eq!(l.len(), 2 + 3 + 9 + 20 + 30);
+    }
+}

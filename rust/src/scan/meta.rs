@@ -1,0 +1,152 @@
+//! Inverse-variance meta-analysis baseline (what consortia do when data
+//! cannot be pooled — the comparator of §4's "analysts typically resort
+//! to meta-analyzing within-party estimates").
+//!
+//! Each party runs its own covariate-adjusted scan; effect estimates are
+//! combined as `β̂_meta = Σ w_p β̂_p / Σ w_p` with `w_p = 1/se_p²`. Exact
+//! when parties are homogeneous and large; loses power and can be biased
+//! under small per-party N or cross-party heterogeneity (Simpson's
+//! paradox) — quantified in E6 against the pooled DASH scan.
+
+use crate::gwas::Cohort;
+use crate::scan::compressed::compress_party;
+use crate::scan::combine::{combine_compressed, CombineOptions};
+use crate::scan::compressed::{flatten_for_sum, unflatten_sum};
+use crate::stats::t_two_sided_p;
+
+/// Meta-analysis result for M variants.
+#[derive(Clone, Debug)]
+pub struct MetaResult {
+    pub beta: Vec<f64>,
+    pub se: Vec<f64>,
+    pub z: Vec<f64>,
+    pub p: Vec<f64>,
+}
+
+/// Run per-party scans and inverse-variance combine.
+pub fn meta_analyze(cohort: &Cohort, block_m: usize) -> anyhow::Result<MetaResult> {
+    let m = cohort.m();
+    let mut wsum = vec![0.0; m];
+    let mut wbsum = vec![0.0; m];
+    for party in &cohort.parties {
+        let cp = compress_party(&party.y, &party.c, &party.x, block_m, None);
+        let (layout, flat) = flatten_for_sum(&cp);
+        let agg = unflatten_sum(layout, &flat)?;
+        let out = combine_compressed(
+            &agg,
+            Some(std::slice::from_ref(&cp.r)),
+            CombineOptions::default(),
+        )?;
+        for j in 0..m {
+            let (b, s) = (out.assoc.beta[j], out.assoc.se[j]);
+            if b.is_finite() && s.is_finite() && s > 0.0 {
+                let w = 1.0 / (s * s);
+                wsum[j] += w;
+                wbsum[j] += w * b;
+            }
+        }
+    }
+    let mut beta = vec![f64::NAN; m];
+    let mut se = vec![f64::NAN; m];
+    let mut z = vec![f64::NAN; m];
+    let mut p = vec![f64::NAN; m];
+    for j in 0..m {
+        if wsum[j] > 0.0 {
+            beta[j] = wbsum[j] / wsum[j];
+            se[j] = (1.0 / wsum[j]).sqrt();
+            z[j] = beta[j] / se[j];
+            // normal approximation, df → ∞ (standard in GWAS meta-analysis)
+            p[j] = t_two_sided_p(z[j], 1e9);
+        }
+    }
+    Ok(MetaResult { beta, se, z, p })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::{generate_cohort, pool_cohort, CohortSpec};
+    use crate::scan::compressed::compress_party;
+
+    fn pooled_scan(cohort: &Cohort) -> crate::scan::combine::ScanOutput {
+        let pooled = pool_cohort(cohort);
+        let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, None);
+        let (layout, flat) = flatten_for_sum(&cp);
+        let agg = unflatten_sum(layout, &flat).unwrap();
+        combine_compressed(
+            &agg,
+            Some(std::slice::from_ref(&cp.r)),
+            CombineOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn meta_close_to_pooled_when_homogeneous() {
+        // No batch effects, same admixture → meta ≈ pooled at causal SNPs
+        let spec = CohortSpec {
+            party_sizes: vec![400, 400],
+            m_variants: 60,
+            n_causal: 3,
+            effect_sd: 0.5,
+            fst: 0.01,
+            party_admixture: vec![0.5, 0.5],
+            ancestry_effect: 0.0,
+            batch_effect_sd: 0.0,
+            n_pcs: 1,
+            noise_sd: 1.0,
+        };
+        let cohort = generate_cohort(&spec, 150);
+        let meta = meta_analyze(&cohort, 30).unwrap();
+        let pooled = pooled_scan(&cohort);
+        for &j in &cohort.truth.causal_idx {
+            let d = (meta.beta[j] - pooled.assoc.beta[j]).abs();
+            let tol = 3.0 * pooled.assoc.se[j];
+            assert!(d < tol, "variant {j}: meta={} pooled={}", meta.beta[j], pooled.assoc.beta[j]);
+        }
+    }
+
+    #[test]
+    fn meta_se_larger_than_pooled_with_small_parties() {
+        // Many small parties: per-party df is low → meta se inflated.
+        let spec = CohortSpec {
+            party_sizes: vec![40; 8],
+            m_variants: 40,
+            n_causal: 2,
+            effect_sd: 0.5,
+            fst: 0.02,
+            party_admixture: vec![0.5; 8],
+            ancestry_effect: 0.0,
+            batch_effect_sd: 0.0,
+            n_pcs: 1,
+            noise_sd: 1.0,
+        };
+        let cohort = generate_cohort(&spec, 151);
+        let meta = meta_analyze(&cohort, 20).unwrap();
+        let pooled = pooled_scan(&cohort);
+        // median se ratio should favor pooled
+        let mut ratios: Vec<f64> = (0..spec.m_variants)
+            .filter(|&j| meta.se[j].is_finite() && pooled.assoc.se[j].is_finite())
+            .map(|j| meta.se[j] / pooled.assoc.se[j])
+            .collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = ratios[ratios.len() / 2];
+        assert!(median > 0.95, "median se ratio {median}");
+    }
+
+    #[test]
+    fn handles_nan_party_estimates() {
+        // A party with a monomorphic variant contributes NaN — meta must
+        // skip it rather than poison the combined estimate.
+        let spec = CohortSpec::default_small();
+        let mut cohort = generate_cohort(&spec, 152);
+        // make variant 0 monomorphic at party 0
+        let n0 = cohort.parties[0].n();
+        for i in 0..n0 {
+            cohort.parties[0].x[(i, 0)] = 0.0;
+        }
+        let meta = meta_analyze(&cohort, 64).unwrap();
+        // still finite thanks to the other parties
+        assert!(meta.beta[0].is_finite());
+    }
+}

@@ -1,0 +1,59 @@
+//! The paper's algorithms, end to end: compress-within, combine-across,
+//! and the association-scan epilogue — plus the meta-analysis baseline.
+//!
+//! Two compute paths produce identical `CompressedParty` values:
+//! a pure-Rust reference path (always available; used by tests and as the
+//! plaintext baseline) and the AOT-compiled XLA path driven by
+//! [`crate::runtime`] (the production hot path, loaded from
+//! `artifacts/*.hlo.txt`).
+
+pub mod compressed;
+mod combine;
+mod meta;
+mod multitrait;
+
+pub use multitrait::{
+    aggregate_multi, combine_multi, compress_party_multi, MultiTraitCompressed,
+};
+
+pub use compressed::{
+    compress_party, flatten_for_sum, unflatten_sum, AggregateSums, CompressedParty, FlatLayout,
+};
+pub use combine::{
+    combine_compressed, combine_regression, CombineOptions, RFactorMethod, ScanOutput,
+};
+pub use meta::{meta_analyze, MetaResult};
+
+pub use crate::mpc::Backend as SmcBackend;
+
+/// Top-level scan configuration.
+#[derive(Clone, Debug)]
+pub struct ScanConfig {
+    pub backend: SmcBackend,
+    /// fixed-point fractional bits for secure encoding
+    pub frac_bits: u32,
+    /// worker threads per party for the compress stage (None = auto)
+    pub threads: Option<usize>,
+    /// variant-block width for the compress stage
+    pub block_m: usize,
+    /// R-factor method for the combine stage (TSQR vs Gram+Cholesky)
+    pub r_method: RFactorMethod,
+    /// use the AOT artifacts runtime for compression when available
+    pub use_artifacts: bool,
+    /// directory holding artifacts/manifest.json
+    pub artifacts_dir: String,
+}
+
+impl Default for ScanConfig {
+    fn default() -> Self {
+        ScanConfig {
+            backend: SmcBackend::Masked,
+            frac_bits: 24,
+            threads: None,
+            block_m: 256,
+            r_method: RFactorMethod::Auto,
+            use_artifacts: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Statistics substrate: special functions, t-distribution tails, and
+//! the regression formulas of §2 / §3 evaluated on *compressed*
+//! sufficient statistics.
+
+mod tdist;
+mod regression;
+
+pub use tdist::{ln_gamma, betainc, t_sf, t_two_sided_p};
+pub use regression::{
+    RegressionFit, fit_from_sufficient, ScanStats, scan_stats_from_projected, AssocResult,
+};

@@ -1,0 +1,320 @@
+//! Linear-regression statistics computed from *compressed* sufficient
+//! statistics — the combine-stage math of the paper.
+//!
+//! §2: from `(N, yᵀy, Cᵀy, CᵀC)` recover `γ̂ = (CᵀC)⁻¹Cᵀy`,
+//! `τ̂² = (yᵀy − γ̂ᵀ(CᵀC)γ̂)/(N−K)`, and standard errors from the
+//! diagonal of `(CᵀC)⁻¹τ̂²`.
+//!
+//! §3 Lemma 3.1: from the projected quantities
+//! `(X·y, X·X, Qᵀy, QᵀX, yᵀy, N, K)` recover per-variant `β̂` and `σ̂`
+//! (plus t and p) without ever revisiting the N-dimensional data.
+
+use crate::linalg::{cholesky_upper, invert_upper, solve_rt_b, solve_upper, Matrix};
+use crate::stats::tdist::t_two_sided_p;
+
+/// Full regression fit of §2 from sufficient statistics.
+#[derive(Clone, Debug)]
+pub struct RegressionFit {
+    /// coefficient estimates γ̂ (length K)
+    pub gamma: Vec<f64>,
+    /// standard errors of γ̂ (length K)
+    pub se: Vec<f64>,
+    /// residual variance estimate τ̂²
+    pub tau2: f64,
+    /// t statistics γ̂ / se
+    pub t: Vec<f64>,
+    /// two-sided p-values (df = N − K)
+    pub p: Vec<f64>,
+    /// residual degrees of freedom
+    pub df: f64,
+}
+
+/// §2 combine stage: statistics from `(N, yᵀy, Cᵀy, CᵀC)`.
+///
+/// Uses the Cholesky factor of `CᵀC` (equivalently the `R` of `QR(C)`,
+/// Lemma 4.1) for all solves — `O(K³)`, independent of sample size.
+pub fn fit_from_sufficient(
+    n: usize,
+    yty: f64,
+    cty: &[f64],
+    ctc: &Matrix,
+) -> anyhow::Result<RegressionFit> {
+    let k = cty.len();
+    anyhow::ensure!(ctc.rows == k && ctc.cols == k, "CᵀC must be K×K");
+    anyhow::ensure!(n > k, "need N > K for residual df (N={n}, K={k})");
+    let r = cholesky_upper(ctc)?; // CᵀC = RᵀR
+    // γ̂ = (CᵀC)⁻¹ Cᵀy  solved as Rᵀ(Rγ̂)=Cᵀy
+    let cty_m = Matrix::from_vec(k, 1, cty.to_vec());
+    let w = solve_rt_b(&r, &cty_m); // w = R⁻ᵀ Cᵀy  (= Qᵀy)
+    let gamma_m = solve_upper(&r, &w); // γ̂ = R⁻¹ w
+    let gamma: Vec<f64> = gamma_m.data.clone();
+    // τ̂² = (yᵀy − γ̂ᵀ(CᵀC)γ̂)/(N−K); note γ̂ᵀ(CᵀC)γ̂ = |Rγ̂|² = |w|²
+    let fitted: f64 = w.data.iter().map(|v| v * v).sum();
+    let df = (n - k) as f64;
+    let tau2 = ((yty - fitted) / df).max(0.0);
+    // Var(γ̂) = (CᵀC)⁻¹ τ̂²; (CᵀC)⁻¹ = R⁻¹ R⁻ᵀ
+    let rinv = invert_upper(&r);
+    let mut se = Vec::with_capacity(k);
+    for i in 0..k {
+        // diag_i of R⁻¹R⁻ᵀ = Σ_j R⁻¹[i,j]²
+        let v: f64 = (0..k).map(|j| rinv[(i, j)] * rinv[(i, j)]).sum();
+        se.push((v * tau2).sqrt());
+    }
+    let t: Vec<f64> = gamma
+        .iter()
+        .zip(&se)
+        .map(|(g, s)| if *s > 0.0 { g / s } else { f64::INFINITY })
+        .collect();
+    let p: Vec<f64> = t.iter().map(|&tv| t_two_sided_p(tv, df)).collect();
+    Ok(RegressionFit { gamma, se, tau2, t, p, df })
+}
+
+/// Inputs for the Lemma 3.1 epilogue, already projected through `Qᵀ`.
+/// All vectors have length `M` (one entry per transient covariate);
+/// `qt_x` is `K × M`, `qt_y` has length `K`.
+#[derive(Clone, Debug)]
+pub struct ScanStats {
+    pub n: usize,
+    pub k: usize,
+    pub yty: f64,
+    pub xty: Vec<f64>,
+    pub xtx: Vec<f64>,
+    pub qt_y: Vec<f64>,
+    pub qt_x: Matrix,
+}
+
+/// Result of an association scan.
+#[derive(Clone, Debug)]
+pub struct AssocResult {
+    pub beta: Vec<f64>,
+    pub se: Vec<f64>,
+    pub t: Vec<f64>,
+    pub p: Vec<f64>,
+    /// residual df = N − K − 1
+    pub df: f64,
+}
+
+impl AssocResult {
+    pub fn min_p(&self) -> Option<f64> {
+        self.p.iter().copied().filter(|p| p.is_finite()).fold(None, |m, p| {
+            Some(match m {
+                None => p,
+                Some(m) => m.min(p),
+            })
+        })
+    }
+}
+
+/// Lemma 3.1 epilogue (pure Rust reference path; the artifact-backed path
+/// computes the same expression inside the AOT HLO):
+///
+/// β̂ = (X·y − QᵀX·Qᵀy) / (X·X − QᵀX·QᵀX)
+/// σ̂² = ((y·y − Qᵀy·Qᵀy)/(X·X − QᵀX·QᵀX) − β̂²) / (N−K−1)
+pub fn scan_stats_from_projected(s: &ScanStats) -> AssocResult {
+    let m = s.xty.len();
+    assert_eq!(s.xtx.len(), m);
+    assert_eq!(s.qt_x.rows, s.k);
+    assert_eq!(s.qt_x.cols, m);
+    assert_eq!(s.qt_y.len(), s.k);
+    let df = (s.n as f64) - (s.k as f64) - 1.0;
+    assert!(df > 0.0, "need N > K + 1");
+    let yy_resid = {
+        let qy2: f64 = s.qt_y.iter().map(|v| v * v).sum();
+        s.yty - qy2
+    };
+    let mut beta = vec![0.0; m];
+    let mut se = vec![0.0; m];
+    let mut t = vec![0.0; m];
+    let mut p = vec![1.0; m];
+    for j in 0..m {
+        // column j of QᵀX
+        let mut qx_qy = 0.0;
+        let mut qx_qx = 0.0;
+        for i in 0..s.k {
+            let q = s.qt_x[(i, j)];
+            qx_qy += q * s.qt_y[i];
+            qx_qx += q * q;
+        }
+        let denom = s.xtx[j] - qx_qx;
+        if denom <= 1e-12 * s.xtx[j].abs().max(1.0) {
+            // x_j is (numerically) in the span of C — no signal left.
+            beta[j] = f64::NAN;
+            se[j] = f64::NAN;
+            t[j] = f64::NAN;
+            p[j] = f64::NAN;
+            continue;
+        }
+        let b = (s.xty[j] - qx_qy) / denom;
+        let sigma2 = ((yy_resid / denom) - b * b) / df;
+        let sd = sigma2.max(0.0).sqrt();
+        beta[j] = b;
+        se[j] = sd;
+        t[j] = if sd > 0.0 { b / sd } else { f64::INFINITY };
+        p[j] = t_two_sided_p(t[j], df);
+    }
+    AssocResult { beta, se, t, p, df }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder_qr;
+    use crate::util::rng::Rng;
+
+    /// Brute-force OLS of y on [x | C] returning (β̂_x, se_x).
+    fn brute_force_single(x: &[f64], c: &Matrix, y: &[f64]) -> (f64, f64) {
+        let n = y.len();
+        let k = c.cols + 1;
+        let mut design = Matrix::zeros(n, k);
+        for i in 0..n {
+            design[(i, 0)] = x[i];
+            for j in 0..c.cols {
+                design[(i, j + 1)] = c[(i, j)];
+            }
+        }
+        let fit = fit_from_sufficient(
+            n,
+            y.iter().map(|v| v * v).sum(),
+            &design.t_matvec(y),
+            &design.gram(),
+        )
+        .unwrap();
+        (fit.gamma[0], fit.se[0])
+    }
+
+    fn make_data(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0; // intercept
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n)
+            .map(|i| 0.7 * x[(i, 0)] + 0.3 * c[(i, k - 1)] + rng.normal())
+            .collect();
+        (y, c, x)
+    }
+
+    #[test]
+    fn fit_from_sufficient_recovers_known_coefficients() {
+        // y = 2 + 3 c1 with tiny noise
+        let n = 500;
+        let mut rng = Rng::new(40);
+        let mut c = Matrix::zeros(n, 2);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = rng.normal();
+            y[i] = 2.0 + 3.0 * c[(i, 1)] + 0.01 * rng.normal();
+        }
+        let fit =
+            fit_from_sufficient(n, y.iter().map(|v| v * v).sum(), &c.t_matvec(&y), &c.gram())
+                .unwrap();
+        assert!((fit.gamma[0] - 2.0).abs() < 0.01);
+        assert!((fit.gamma[1] - 3.0).abs() < 0.01);
+        assert!(fit.tau2 < 2e-4);
+        assert!(fit.p[1] < 1e-100);
+    }
+
+    #[test]
+    fn fit_errors_on_underdetermined() {
+        let c = Matrix::identity(3);
+        assert!(fit_from_sufficient(3, 1.0, &[0.0; 3], &c).is_err());
+    }
+
+    #[test]
+    fn scan_matches_brute_force_ols() {
+        let (y, c, x) = make_data(120, 4, 6, 41);
+        let n = y.len();
+        let f = householder_qr(&c);
+        let qt_x = f.q.t_matmul(&x);
+        let qt_y = f.q.t_matvec(&y);
+        let stats = ScanStats {
+            n,
+            k: c.cols,
+            yty: y.iter().map(|v| v * v).sum(),
+            xty: x.t_matvec(&y),
+            xtx: (0..x.cols).map(|j| x.col(j).iter().map(|v| v * v).sum()).collect(),
+            qt_y,
+            qt_x,
+        };
+        let res = scan_stats_from_projected(&stats);
+        for j in 0..x.cols {
+            let (b_ref, se_ref) = brute_force_single(&x.col(j), &c, &y);
+            assert!(
+                (res.beta[j] - b_ref).abs() < 1e-9 * b_ref.abs().max(1.0),
+                "beta[{j}]: {} vs {}",
+                res.beta[j],
+                b_ref
+            );
+            assert!(
+                (res.se[j] - se_ref).abs() < 1e-9 * se_ref.abs().max(1.0),
+                "se[{j}]: {} vs {}",
+                res.se[j],
+                se_ref
+            );
+        }
+    }
+
+    #[test]
+    fn scan_flags_collinear_variant() {
+        let (y, c, _) = make_data(60, 3, 1, 42);
+        let n = y.len();
+        // x = copy of covariate column 1 → fully explained by C
+        let x = Matrix::from_vec(n, 1, c.col(1));
+        let f = householder_qr(&c);
+        let stats = ScanStats {
+            n,
+            k: c.cols,
+            yty: y.iter().map(|v| v * v).sum(),
+            xty: x.t_matvec(&y),
+            xtx: vec![x.col(0).iter().map(|v| v * v).sum()],
+            qt_y: f.q.t_matvec(&y),
+            qt_x: f.q.t_matmul(&x),
+        };
+        let res = scan_stats_from_projected(&stats);
+        assert!(res.beta[0].is_nan());
+        assert!(res.p[0].is_nan());
+    }
+
+    #[test]
+    fn null_variants_have_uniform_ish_p() {
+        // no signal → p-values should not pile up near 0
+        let n = 300;
+        let mut rng = Rng::new(43);
+        let mut c = Matrix::zeros(n, 2);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = rng.normal();
+        }
+        let m = 200;
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let f = householder_qr(&c);
+        let stats = ScanStats {
+            n,
+            k: 2,
+            yty: y.iter().map(|v| v * v).sum(),
+            xty: x.t_matvec(&y),
+            xtx: (0..m).map(|j| x.col(j).iter().map(|v| v * v).sum()).collect(),
+            qt_y: f.q.t_matvec(&y),
+            qt_x: f.q.t_matmul(&x),
+        };
+        let res = scan_stats_from_projected(&stats);
+        let frac_sig = res.p.iter().filter(|&&p| p < 0.05).count() as f64 / m as f64;
+        assert!(frac_sig < 0.12, "frac={frac_sig}"); // ≈0.05 expected
+        assert!(res.min_p().unwrap() > 1e-8);
+    }
+
+    #[test]
+    fn min_p_ignores_nan() {
+        let r = AssocResult {
+            beta: vec![1.0, f64::NAN],
+            se: vec![1.0, f64::NAN],
+            t: vec![1.0, f64::NAN],
+            p: vec![0.2, f64::NAN],
+            df: 10.0,
+        };
+        assert_eq!(r.min_p(), Some(0.2));
+    }
+}

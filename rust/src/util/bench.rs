@@ -1,0 +1,191 @@
+//! Micro/meso benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) built on
+//! this module. For each case we warm up, choose an iteration count that
+//! fills a target measurement window, collect per-iteration wall times,
+//! and report median, MAD, and throughput. Output is both a human table
+//! and machine-readable JSON lines (consumed by EXPERIMENTS.md tooling).
+
+use std::time::Instant;
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// median seconds per iteration
+    pub median_s: f64,
+    /// median absolute deviation, seconds
+    pub mad_s: f64,
+    pub iters: usize,
+    /// optional user-supplied work units per iteration (elements, bytes…)
+    pub units: Option<f64>,
+    pub unit_name: &'static str,
+}
+
+impl Measurement {
+    /// Work units per second (if `units` set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.units.map(|u| u / self.median_s)
+    }
+}
+
+/// Benchmark runner with a shared report.
+pub struct Bench {
+    pub group: String,
+    pub warmup_s: f64,
+    pub target_s: f64,
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Quick mode for CI: DASH_BENCH_QUICK=1 shrinks windows ~10x.
+        let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bench {
+            group: group.to_string(),
+            warmup_s: if quick { 0.05 } else { 0.3 },
+            target_s: if quick { 0.2 } else { 1.5 },
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one iteration of the case.
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.case_units(name, None, "", f)
+    }
+
+    /// Time `f` and report throughput in `units` per second.
+    pub fn case_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        unit_name: &'static str,
+        mut f: F,
+    ) -> &Measurement {
+        // Warmup and single-shot estimate.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut spent = once;
+        while spent < self.warmup_s {
+            f();
+            spent += once;
+        }
+        // Choose iteration count to fill the target window.
+        let iters = ((self.target_s / once).ceil() as usize).clamp(3, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        let m = Measurement {
+            name: name.to_string(),
+            median_s: median,
+            mad_s: mad,
+            iters,
+            units,
+            unit_name,
+        };
+        self.print_row(&m);
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    fn print_row(&self, m: &Measurement) {
+        let tp = match m.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:>8.2} G{}/s", t / 1e9, m.unit_name),
+            Some(t) if t >= 1e6 => format!("  {:>8.2} M{}/s", t / 1e6, m.unit_name),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} K{}/s", t / 1e3, m.unit_name),
+            Some(t) => format!("  {:>8.2} {}/s", t, m.unit_name),
+            None => String::new(),
+        };
+        println!(
+            "{:<52} {:>12} ± {:>10}  ({} iters){}",
+            format!("{}/{}", self.group, m.name),
+            crate::util::human_secs(m.median_s),
+            crate::util::human_secs(m.mad_s),
+            m.iters,
+            tp
+        );
+    }
+
+    /// Emit JSON-lines records for all cases (one per line).
+    pub fn json_lines(&self) -> String {
+        use crate::util::json::Json;
+        let mut out = String::new();
+        for m in &self.results {
+            let mut o = Json::obj();
+            o.set("group", self.group.as_str())
+                .set("name", m.name.as_str())
+                .set("median_s", m.median_s)
+                .set("mad_s", m.mad_s)
+                .set("iters", m.iters);
+            if let Some(u) = m.units {
+                o.set("units", u).set("unit_name", m.unit_name);
+            }
+            out.push_str(&o.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write the JSON-lines report under `target/bench-reports/`.
+    pub fn save_report(&self) {
+        let dir = std::path::Path::new("target/bench-reports");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.jsonl", self.group.replace('/', "_")));
+        if let Err(e) = std::fs::write(&path, self.json_lines()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("report: {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("DASH_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let m = b
+            .case("spin", || {
+                let mut x = 0u64;
+                for i in 0..1000 {
+                    x = x.wrapping_add(i);
+                }
+                std::hint::black_box(x);
+            })
+            .clone();
+        assert!(m.median_s > 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        std::env::set_var("DASH_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let m = b
+            .case_units("units", Some(1000.0), "elem", || {
+                std::hint::black_box((0..1000u64).sum::<u64>());
+            })
+            .clone();
+        assert!(m.throughput().unwrap() > 0.0);
+        let jl = b.json_lines();
+        assert!(jl.contains("\"units\""));
+    }
+}

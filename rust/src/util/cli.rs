@@ -1,0 +1,210 @@
+//! Declarative command-line parser (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults and typed accessors, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    vals: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.vals.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing option --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing option --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing option --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A subcommand with its option specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.vals.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    args.flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("option --{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    args.vals.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.opts {
+            if !spec.is_flag && spec.default.is_none() && !args.vals.contains_key(spec.name) {
+                anyhow::bail!("missing required option --{}\n{}", spec.name, self.help_text());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = o.default {
+                format!(" <val> (default: {d})")
+            } else {
+                " <val> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, kind, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("scan", "run a scan")
+            .opt("parties", "4", "number of parties")
+            .opt("seed", "7", "rng seed")
+            .req("out", "output path")
+            .flag("secure", "enable SMC")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.get_usize("parties").unwrap(), 4);
+        assert!(!a.flag("secure"));
+        let a = cmd()
+            .parse(&sv(&["--parties=9", "--secure", "--out", "y"]))
+            .unwrap();
+        assert_eq!(a.get_usize("parties").unwrap(), 9);
+        assert!(a.flag("secure"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&sv(&["--parties", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&sv(&["--nope", "1", "--out", "x"])).is_err());
+    }
+
+    #[test]
+    fn value_styles() {
+        let a = cmd().parse(&sv(&["--seed=123", "--out=o"])).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 123);
+        let a = cmd().parse(&sv(&["--seed", "99", "--out", "o"])).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 99);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&sv(&["--out", "o", "fileA", "fileB"])).unwrap();
+        assert_eq!(a.positional, vec!["fileA", "fileB"]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&sv(&["--secure=1", "--out", "o"])).is_err());
+    }
+}

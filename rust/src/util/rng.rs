@@ -1,0 +1,326 @@
+//! Deterministic, seedable PRNG substrate (no `rand` crate offline).
+//!
+//! [`Rng`] is xoshiro256++ seeded via SplitMix64 — fast, high quality, and
+//! reproducible across platforms, which matters because every experiment in
+//! EXPERIMENTS.md is keyed by an explicit seed. On top of the raw generator
+//! we provide the distributions the workload generator and the MPC masking
+//! layer need: uniform ranges, standard normal (Box–Muller with caching),
+//! binomial (inverse-CDF for small n, normal approximation for large n),
+//! and fills for mask vectors.
+
+/// SplitMix64 step — used for seeding and as a cheap stateless mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal draw from Box–Muller
+    normal_cache: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, normal_cache: None }
+    }
+
+    /// Derive an independent stream for a sub-task (party p, block b, ...).
+    /// Streams derived with distinct tags are statistically independent.
+    pub fn derive(&self, tag: u64) -> Rng {
+        let mut sm = self.s[0] ^ self.s[2] ^ tag.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, normal_cache: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire rejection, unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal draw (Box–Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.normal_cache.take() {
+            return z;
+        }
+        // Avoid u == 0 (log would blow up).
+        let mut u = self.uniform();
+        while u <= f64::MIN_POSITIVE {
+            u = self.uniform();
+        }
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.normal_cache = Some(r * s);
+        r * c
+    }
+
+    /// Normal with mean/sd.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Binomial(n, p) draw. Exact inversion for small n·p, normal
+    /// approximation with continuity correction for large n (adequate for
+    /// genotype simulation where n = 2).
+    pub fn binomial(&mut self, n: u32, p: f64) -> u32 {
+        debug_assert!((0.0..=1.0).contains(&p));
+        if p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if n <= 64 {
+            // Direct Bernoulli sum — n is tiny in our workloads (n = 2).
+            let mut k = 0;
+            for _ in 0..n {
+                if self.uniform() < p {
+                    k += 1;
+                }
+            }
+            k
+        } else {
+            let mean = n as f64 * p;
+            let sd = (n as f64 * p * (1.0 - p)).sqrt();
+            let z = self.normal_ms(mean, sd).round();
+            z.clamp(0.0, n as f64) as u32
+        }
+    }
+
+    /// Beta(a, b) via Jöhnk/gamma-ratio (Marsaglia–Tsang gamma).
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; boost for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: G(a) = G(a+1) * U^(1/a)
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Fill a slice with raw u64s (mask generation hot path).
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.next_u64();
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_streams_independent_of_parent_state() {
+        let parent = Rng::new(7);
+        let mut c1 = parent.derive(1);
+        let mut c2 = parent.derive(1);
+        assert_eq!(c1.next_u64(), c2.next_u64());
+        let mut c3 = parent.derive(2);
+        assert_ne!(c1.next_u64(), c3.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn binomial_small_n_mean() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let sum: u64 = (0..n).map(|_| r.binomial(2, 0.3) as u64).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 0.6).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn binomial_edges() {
+        let mut r = Rng::new(1);
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(21);
+        let n = 50_000;
+        let m: f64 = (0..n).map(|_| r.gamma(3.5)).sum::<f64>() / n as f64;
+        assert!((m - 3.5).abs() < 0.08, "m={m}");
+    }
+
+    #[test]
+    fn beta_in_unit_interval_and_mean() {
+        let mut r = Rng::new(22);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let b = r.beta(2.0, 6.0);
+            assert!((0.0..=1.0).contains(&b));
+            sum += b;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(33);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

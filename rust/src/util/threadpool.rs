@@ -1,0 +1,151 @@
+//! Scoped data-parallel helpers (no `rayon`/`tokio` offline).
+//!
+//! The compress stage parallelizes over column blocks within a party
+//! (the paper's `O(NKM/C)` term). [`parallel_for_chunks`] slices an index
+//! range into contiguous chunks and runs them on `std::thread::scope`
+//! threads; [`parallel_map`] is the collect-results variant. Thread count
+//! defaults to available parallelism and is overridable for the E2 core
+//! sweep (`DASH_THREADS` or explicit argument).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: explicit `n`, else `DASH_THREADS`,
+/// else `std::thread::available_parallelism()`.
+pub fn effective_threads(n: Option<usize>) -> usize {
+    if let Some(n) = n {
+        return n.max(1);
+    }
+    if let Ok(v) = std::env::var("DASH_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..len` on up to
+/// `threads` workers. Work is distributed dynamically (atomic cursor over
+/// fixed-size chunks) so uneven block costs balance out.
+pub fn parallel_for_chunks<F>(len: usize, chunk: usize, threads: Option<usize>, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    assert!(chunk > 0);
+    let nthreads = effective_threads(threads).min(len.div_ceil(chunk).max(1));
+    if len == 0 {
+        return;
+    }
+    if nthreads <= 1 {
+        let mut s = 0;
+        while s < len {
+            f(s, (s + chunk).min(len));
+            s += chunk;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads {
+            scope.spawn(|| loop {
+                let s = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if s >= len {
+                    break;
+                }
+                f(s, (s + chunk).min(len));
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>` in index order.
+pub fn parallel_map<T, F>(n: usize, threads: Option<usize>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = as_send_cells(&mut out);
+        parallel_for_chunks(n, 1, threads, |s, e| {
+            for i in s..e {
+                // SAFETY: each index is written by exactly one chunk.
+                unsafe { *slots.get(i) = Some(f(i)) };
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+}
+
+/// Helper granting disjoint-index mutable access across threads.
+struct SendCells<T>(*mut T, usize);
+unsafe impl<T: Send> Sync for SendCells<T> {}
+impl<T> SendCells<T> {
+    /// SAFETY: caller must ensure no two threads use the same index.
+    unsafe fn get(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.1);
+        &mut *self.0.add(i)
+    }
+}
+
+fn as_send_cells<T>(v: &mut [T]) -> SendCells<T> {
+    SendCells(v.as_mut_ptr(), v.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1000, 7, Some(4), |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(100, 13, Some(1), |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_for_chunks(0, 8, Some(4), |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(257, Some(8), |i| i * i);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn effective_threads_floor_one() {
+        assert_eq!(effective_threads(Some(0)), 1);
+        assert!(effective_threads(None) >= 1);
+    }
+
+    #[test]
+    fn sums_match_serial() {
+        let n = 10_000usize;
+        let total = AtomicU64::new(0);
+        parallel_for_chunks(n, 64, Some(6), |s, e| {
+            let local: u64 = (s..e).map(|i| i as u64).sum();
+            total.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration: experiment-level checks — E6 (meta vs pooled under
+//! heterogeneity), E7 (incremental update equivalence), E9 (TSQR vs
+//! Gram+Cholesky conditioning ablation).
+
+use dash::coordinator::IncrementalAggregate;
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::linalg::{cholesky_upper, householder_qr, rel_err, tsqr_stack_r, Matrix};
+use dash::scan::{compress_party, meta_analyze};
+use dash::util::rng::Rng;
+
+/// E6: under cross-party heterogeneity (confounded batch effects +
+/// divergent ancestry), pooled covariate-adjusted DASH keeps power that
+/// per-party meta-analysis loses.
+#[test]
+fn e6_meta_loses_power_under_heterogeneity() {
+    let spec = CohortSpec {
+        // many small parties: the regime where meta is weakest
+        party_sizes: vec![35; 10],
+        m_variants: 80,
+        n_causal: 8,
+        effect_sd: 0.35,
+        fst: 0.1,
+        party_admixture: (0..10).map(|i| i as f64 / 9.0).collect(),
+        ancestry_effect: 0.8,
+        batch_effect_sd: 0.5,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    };
+    let cohort = generate_cohort(&spec, 700);
+
+    // pooled scan (plaintext path suffices for the statistical claim)
+    let cfg = dash::scan::ScanConfig {
+        backend: dash::mpc::Backend::Plaintext,
+        block_m: 40,
+        threads: Some(2),
+        ..Default::default()
+    };
+    let pooled = dash::coordinator::run_multi_party_scan(&cohort, &cfg).unwrap();
+    let meta = meta_analyze(&cohort, 40).unwrap();
+
+    let alpha = 1e-3;
+    let causal: Vec<usize> = cohort.truth.causal_idx.clone();
+    let power = |ps: &[f64]| -> f64 {
+        causal.iter().filter(|&&j| ps[j].is_finite() && ps[j] < alpha).count() as f64
+            / causal.len() as f64
+    };
+    let pooled_power = power(&pooled.output.assoc.p);
+    let meta_power = power(&meta.p);
+    assert!(
+        pooled_power >= meta_power,
+        "pooled power {pooled_power} < meta power {meta_power}"
+    );
+    // and pooled must actually find something in this design
+    assert!(pooled_power > 0.3, "pooled power only {pooled_power}");
+}
+
+/// E7: incremental update equals full recompute, and the retained state
+/// is O(K·M) regardless of history.
+#[test]
+fn e7_incremental_matches_full_recompute() {
+    let mut rng = Rng::new(701);
+    let k = 4;
+    let m = 30;
+    let make = |n: usize, rng: &mut Rng| {
+        let mut c = Matrix::randn(n, k, rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, rng);
+        let y: Vec<f64> = (0..n).map(|i| 0.25 * x[(i, 1)] + rng.normal()).collect();
+        compress_party(&y, &c, &x, m, Some(1))
+    };
+    let initial: Vec<_> = (0..3).map(|_| make(90, &mut rng)).collect();
+    let joiners: Vec<_> = (0..2).map(|_| make(150, &mut rng)).collect();
+
+    let mut inc = IncrementalAggregate::from_parties(&initial).unwrap();
+    let before = inc.recombine().unwrap();
+    inc.add_parties(&joiners).unwrap();
+    let after = inc.recombine().unwrap();
+
+    let mut all = initial.clone();
+    all.extend(joiners.clone());
+    let full = IncrementalAggregate::from_parties(&all).unwrap().recombine().unwrap();
+
+    assert!(rel_err(&after.assoc.beta, &full.assoc.beta) < 1e-12);
+    assert!(rel_err(&after.assoc.se, &full.assoc.se) < 1e-12);
+    // more data → tighter intervals at the causal variant
+    assert!(after.assoc.se[1] < before.assoc.se[1]);
+}
+
+/// E9: TSQR and Gram+Cholesky agree on well-conditioned inputs and
+/// diverge as conditioning degrades — with TSQR tracking the true R
+/// better (that is the reason the plaintext path prefers it).
+#[test]
+fn e9_tsqr_vs_cholesky_conditioning() {
+    let mut rng = Rng::new(702);
+    let k = 6;
+    let n_per = 200;
+    let parties = 3;
+
+    let mut last_gap = 0.0;
+    for &cond_scale in &[1.0, 1e-4, 1e-7] {
+        // build per-party covariates with one nearly-dependent column
+        let mut cs = Vec::new();
+        for _ in 0..parties {
+            let mut c = Matrix::randn(n_per, k, &mut rng);
+            for i in 0..n_per {
+                c[(i, 0)] = 1.0;
+                // column k-1 = column 1 + tiny noise → condition blows up
+                c[(i, k - 1)] = c[(i, 1)] + cond_scale * c[(i, k - 1)];
+            }
+            cs.push(c);
+        }
+        let refs: Vec<&Matrix> = cs.iter().collect();
+        let full = Matrix::vstack(&refs);
+        let r_true = householder_qr(&full).r;
+
+        let rs: Vec<Matrix> = cs.iter().map(|c| householder_qr(c).r).collect();
+        let r_tsqr = tsqr_stack_r(&rs);
+
+        let mut gram = Matrix::zeros(k, k);
+        for c in &cs {
+            gram = gram.add(&c.gram());
+        }
+        let r_chol = cholesky_upper(&gram).unwrap();
+
+        let err_tsqr = rel_err(&r_tsqr.data, &r_true.data);
+        let err_chol = rel_err(&r_chol.data, &r_true.data);
+        // TSQR should never be (much) worse
+        assert!(
+            err_tsqr <= 10.0 * err_chol.max(1e-14),
+            "cond={cond_scale}: tsqr {err_tsqr} vs chol {err_chol}"
+        );
+        last_gap = err_chol / err_tsqr.max(1e-16);
+    }
+    // at the worst conditioning, Cholesky should be measurably worse
+    assert!(last_gap > 1.0, "expected Cholesky to degrade, gap={last_gap}");
+}
+
+/// E3 sanity at test scale: combine work does not grow with N.
+#[test]
+fn e3_combine_inputs_independent_of_n() {
+    let mut rng = Rng::new(703);
+    let k = 5;
+    let m = 40;
+    let sizes = [100usize, 1000];
+    let mut flat_lens = Vec::new();
+    for &n in &sizes {
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let cp = compress_party(&y, &c, &x, m, Some(1));
+        let (layout, flat) = dash::scan::flatten_for_sum(&cp);
+        assert_eq!(flat.len(), layout.len());
+        flat_lens.push(flat.len());
+    }
+    assert_eq!(flat_lens[0], flat_lens[1], "combine input size must not depend on N");
+}

@@ -1,0 +1,221 @@
+//! Integration: protocol-level properties across backends — E5 exactness
+//! (multi-party == pooled), E4 communication shape, privacy smoke checks,
+//! and randomized property sweeps over cohort shapes.
+
+use dash::coordinator::{run_multi_party_scan, run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, pool_cohort, CohortSpec};
+use dash::linalg::rel_err;
+use dash::mpc::Backend;
+use dash::scan::{
+    combine_compressed, compress_party, flatten_for_sum, unflatten_sum, CombineOptions,
+    RFactorMethod, ScanConfig, ScanOutput,
+};
+use dash::util::proptest::{run_prop, PropConfig};
+use dash::util::rng::Rng;
+
+fn pooled_oracle(cohort: &dash::gwas::Cohort) -> ScanOutput {
+    let pooled = pool_cohort(cohort);
+    let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, Some(2));
+    let (layout, flat) = flatten_for_sum(&cp);
+    let agg = unflatten_sum(layout, &flat).unwrap();
+    combine_compressed(
+        &agg,
+        Some(std::slice::from_ref(&cp.r)),
+        CombineOptions { r_method: RFactorMethod::Tsqr },
+    )
+    .unwrap()
+}
+
+fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_per; parties],
+        m_variants: m,
+        n_causal: 3.min(m),
+        effect_sd: 0.4,
+        fst: 0.05,
+        party_admixture: (0..parties)
+            .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
+            .collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+/// E5: exactness across party counts, plaintext backend (fp-exact path).
+#[test]
+fn e5_exactness_across_party_counts() {
+    for parties in [1usize, 2, 3, 5] {
+        let cohort = generate_cohort(&spec_for(parties, 120, 50), 500 + parties as u64);
+        let cfg = ScanConfig {
+            backend: Backend::Plaintext,
+            block_m: 16,
+            threads: Some(2),
+            ..Default::default()
+        };
+        let res = run_multi_party_scan(&cohort, &cfg).unwrap();
+        let oracle = pooled_oracle(&cohort);
+        assert!(
+            rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-9,
+            "P={parties} beta"
+        );
+        assert!(
+            rel_err(&res.output.assoc.se, &oracle.assoc.se) < 1e-9,
+            "P={parties} se"
+        );
+        // t and p too
+        let finite: Vec<usize> =
+            (0..cohort.m()).filter(|&j| oracle.assoc.p[j].is_finite()).collect();
+        for &j in &finite {
+            assert!((res.output.assoc.p[j] - oracle.assoc.p[j]).abs() < 1e-9, "p[{j}]");
+        }
+    }
+}
+
+/// E5 property sweep: random shapes, masked backend, fixed-point tolerance.
+#[test]
+fn e5_property_masked_random_shapes() {
+    run_prop(
+        "masked-matches-oracle",
+        PropConfig { cases: 8, ..Default::default() },
+        |r: &mut Rng| {
+            let parties = 2 + r.below(3) as usize;
+            let n_per = 60 + r.below(100) as usize;
+            let m = 10 + r.below(40) as usize;
+            (parties, n_per, m, r.next_u64())
+        },
+        |&(parties, n_per, m, seed)| {
+            let cohort = generate_cohort(&spec_for(parties, n_per, m), seed);
+            let cfg = ScanConfig {
+                backend: Backend::Masked,
+                block_m: 32,
+                threads: Some(1),
+                ..Default::default()
+            };
+            let res = run_multi_party_scan(&cohort, &cfg)
+                .map_err(|e| format!("scan failed: {e:#}"))?;
+            let oracle = pooled_oracle(&cohort);
+            for j in 0..m {
+                let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+                if a.is_finite() && b.is_finite() && (a - b).abs() > 2e-4 * b.abs().max(1.0) {
+                    return Err(format!("beta[{j}]: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// E4: per-party uplink bytes are O(M) — doubling M roughly doubles
+/// bytes; increasing N leaves bytes unchanged.
+#[test]
+fn e4_communication_scaling_shape() {
+    let cfg = ScanConfig { backend: Backend::Masked, block_m: 64, threads: Some(1), ..Default::default() };
+
+    let bytes_for = |n_per: usize, m: usize| -> u64 {
+        let cohort = generate_cohort(&spec_for(3, n_per, m), 600);
+        let res = run_multi_party_scan(&cohort, &cfg).unwrap();
+        res.metrics.bytes_total
+    };
+
+    let b_m200 = bytes_for(80, 200);
+    let b_m400 = bytes_for(80, 400);
+    let ratio = b_m400 as f64 / b_m200 as f64;
+    assert!((1.6..=2.4).contains(&ratio), "M-scaling ratio {ratio}");
+
+    // N independence: 4x samples, same M → identical protocol bytes
+    let b_n_small = bytes_for(60, 200);
+    let b_n_large = bytes_for(240, 200);
+    assert_eq!(b_n_small, b_n_large, "bytes must not depend on N");
+}
+
+/// Privacy smoke: in masked mode the leader's transcript of a single
+/// party contribution must not contain the party's plaintext statistics.
+#[test]
+fn masked_contribution_is_not_plaintext() {
+    use dash::mpc::fixed::FixedCodec;
+    use dash::mpc::masking::PairwiseMasker;
+
+    let cohort = generate_cohort(&spec_for(3, 100, 30), 601);
+    let p0 = &cohort.parties[0];
+    let cp = compress_party(&p0.y, &p0.c, &p0.x, 30, Some(1));
+    let (_, flat) = flatten_for_sum(&cp);
+    let codec = FixedCodec::default();
+    let plain_enc = codec.encode_vec(&flat).unwrap();
+
+    let mut rng = Rng::new(602);
+    let seeds = PairwiseMasker::session_seeds(3, &mut rng);
+    let mut masker = PairwiseMasker::new(0, 3, seeds[0].clone());
+    let mut masked = plain_enc.clone();
+    masker.mask_in_place(&mut masked);
+    let unchanged = plain_enc.iter().zip(&masked).filter(|(a, b)| a == b).count();
+    assert!(
+        unchanged <= 2,
+        "masked contribution leaks {unchanged} plaintext words"
+    );
+}
+
+/// Heterogeneous party sizes, tail-block shapes, single-variant edge.
+#[test]
+fn uneven_parties_and_edge_shapes() {
+    let spec = CohortSpec {
+        party_sizes: vec![33, 190, 71],
+        m_variants: 1,
+        n_causal: 1,
+        effect_sd: 0.6,
+        fst: 0.02,
+        party_admixture: vec![0.1, 0.4, 0.9],
+        ancestry_effect: 0.2,
+        batch_effect_sd: 0.0,
+        n_pcs: 1,
+        noise_sd: 1.0,
+    };
+    let cohort = generate_cohort(&spec, 603);
+    let cfg = ScanConfig {
+        backend: Backend::Plaintext,
+        block_m: 7,
+        threads: Some(3),
+        ..Default::default()
+    };
+    let res = run_multi_party_scan(&cohort, &cfg).unwrap();
+    let oracle = pooled_oracle(&cohort);
+    assert!(rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-9);
+}
+
+/// Shamir with a strict quorum gives the same answer as masked.
+#[test]
+fn shamir_quorum_equivalence() {
+    let cohort = generate_cohort(&spec_for(5, 80, 25), 604);
+    let masked = run_multi_party_scan(
+        &cohort,
+        &ScanConfig { backend: Backend::Masked, block_m: 25, threads: Some(1), ..Default::default() },
+    )
+    .unwrap();
+    let shamir = run_multi_party_scan(
+        &cohort,
+        &ScanConfig {
+            backend: Backend::Shamir { threshold: 3 },
+            block_m: 25,
+            threads: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for j in 0..cohort.m() {
+        let (a, b) = (masked.output.assoc.beta[j], shamir.output.assoc.beta[j]);
+        if a.is_finite() && b.is_finite() {
+            assert!((a - b).abs() < 1e-5 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
+        }
+    }
+}
+
+/// TCP transport: full protocol over real sockets.
+#[test]
+fn tcp_transport_end_to_end() {
+    let cohort = generate_cohort(&spec_for(3, 70, 20), 605);
+    let cfg = ScanConfig { backend: Backend::Masked, block_m: 20, threads: Some(1), ..Default::default() };
+    let res = run_multi_party_scan_t(&cohort, &cfg, Transport::Tcp, 77).unwrap();
+    assert!(res.output.min_p_value().is_some());
+    assert!(res.metrics.bytes_total > 0);
+}

@@ -1,0 +1,164 @@
+//! Integration: the AOT artifact runtime against the pure-Rust reference
+//! path. Requires `artifacts/` (run `make artifacts` first); tests skip
+//! with a notice when artifacts are absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::linalg::{rel_err, solve_rt_b, Matrix};
+use dash::runtime::Engine;
+use dash::scan::{compress_party, flatten_for_sum, unflatten_sum};
+use dash::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime integration test (no artifacts): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn engine_loads_and_reports() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.entry_count(), 3);
+    assert_eq!(e.platform(), "cpu");
+    assert!(e.manifest.n_block >= 64);
+    assert!(e.manifest.k_pad >= 4);
+}
+
+#[test]
+fn artifact_compress_matches_rust_path() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(400);
+    // sizes straddling block boundaries: n < nb, n == nb, n > nb (tail),
+    // m < mb, m > mb (tail)
+    let nb = e.manifest.n_block;
+    let mb = e.manifest.m_block;
+    for &(n, m) in &[(60usize, 40usize), (nb, mb), (nb + 37, mb + 19), (3 * nb - 1, 2 * mb + 5)] {
+        let k = 5;
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let fast = e.compress_party(&y, &c, &x).unwrap();
+        let slow = compress_party(&y, &c, &x, 64, Some(2));
+
+        assert_eq!(fast.n, slow.n);
+        assert!(rel_err(&[fast.yty], &[slow.yty]) < 1e-12, "yty n={n} m={m}");
+        assert!(rel_err(&fast.cty, &slow.cty) < 1e-12, "cty n={n} m={m}");
+        assert!(rel_err(&fast.ctc.data, &slow.ctc.data) < 1e-12, "ctc n={n} m={m}");
+        assert!(rel_err(&fast.xty, &slow.xty) < 1e-12, "xty n={n} m={m}");
+        assert!(rel_err(&fast.xtx, &slow.xtx) < 1e-12, "xtx n={n} m={m}");
+        assert!(rel_err(&fast.ctx.data, &slow.ctx.data) < 1e-12, "ctx n={n} m={m}");
+        // R factors agree (QR vs Cholesky of the same Gram)
+        assert!(rel_err(&fast.r.data, &slow.r.data) < 1e-9, "r n={n} m={m}");
+    }
+}
+
+#[test]
+fn artifact_scan_stats_matches_rust_epilogue() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(401);
+    let n = 300;
+    let k = 4;
+    for &m in &[10usize, e.manifest.m_block, e.manifest.m_block + 33] {
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let y: Vec<f64> = (0..n).map(|i| 0.3 * x[(i, 0)] + rng.normal()).collect();
+        let cp = compress_party(&y, &c, &x, 64, Some(2));
+        let (layout, flat) = flatten_for_sum(&cp);
+        let agg = unflatten_sum(layout, &flat).unwrap();
+        let r = dash::linalg::cholesky_upper(&agg.ctc).unwrap();
+        let qty = solve_rt_b(&r, &Matrix::from_vec(k, 1, agg.cty.clone())).data;
+        let qtx = solve_rt_b(&r, &agg.ctx);
+
+        let fast = e
+            .scan_stats(agg.n, k, agg.yty, &agg.xty, &agg.xtx, &qty, &qtx)
+            .unwrap();
+        let slow = dash::stats::scan_stats_from_projected(&dash::stats::ScanStats {
+            n: agg.n,
+            k,
+            yty: agg.yty,
+            xty: agg.xty.clone(),
+            xtx: agg.xtx.clone(),
+            qt_y: qty.clone(),
+            qt_x: qtx.clone(),
+        });
+        for j in 0..m {
+            assert!(
+                (fast.beta[j] - slow.beta[j]).abs() < 1e-10 * slow.beta[j].abs().max(1.0),
+                "beta[{j}] m={m}: {} vs {}",
+                fast.beta[j],
+                slow.beta[j]
+            );
+            assert!(
+                (fast.se[j] - slow.se[j]).abs() < 1e-10 * slow.se[j].abs().max(1.0),
+                "se[{j}] m={m}"
+            );
+            assert!(
+                (fast.p[j] - slow.p[j]).abs() < 1e-8,
+                "p[{j}] m={m}: {} vs {}",
+                fast.p[j],
+                slow.p[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_backed_multi_party_scan_matches_rust_backed() {
+    if engine().is_none() {
+        return;
+    }
+    let cohort = generate_cohort(&CohortSpec::default_small(), 402);
+    let mut cfg = dash::scan::ScanConfig {
+        backend: dash::mpc::Backend::Masked,
+        block_m: 64,
+        threads: Some(2),
+        ..Default::default()
+    };
+    let rust_res = dash::coordinator::run_multi_party_scan(&cohort, &cfg).unwrap();
+    cfg.use_artifacts = true;
+    let art_res = dash::coordinator::run_multi_party_scan(&cohort, &cfg).unwrap();
+    // Same protocol, same fixed-point encoding; only the compress compute
+    // engine differs → statistics agree to fixed-point noise.
+    for j in 0..cohort.m() {
+        let (a, b) = (art_res.output.assoc.beta[j], rust_res.output.assoc.beta[j]);
+        if a.is_finite() && b.is_finite() {
+            assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn genotype_dosage_compress_is_exact() {
+    // integer dosages are exactly representable in f64 → artifact and
+    // rust paths agree bit-for-bit on xtx
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(403);
+    let n = 700;
+    let m = 90;
+    let k = 3;
+    let mut c = Matrix::zeros(n, k);
+    let mut x = Matrix::zeros(n, m);
+    for i in 0..n {
+        c[(i, 0)] = 1.0;
+        c[(i, 1)] = rng.normal();
+        c[(i, 2)] = rng.below(2) as f64;
+        for j in 0..m {
+            x[(i, j)] = rng.below(3) as f64;
+        }
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let fast = e.compress_party(&y, &c, &x).unwrap();
+    let slow = compress_party(&y, &c, &x, 32, Some(1));
+    assert_eq!(fast.xtx, slow.xtx, "xtx must be exactly equal on dosages");
+}
