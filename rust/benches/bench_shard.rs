@@ -1,0 +1,142 @@
+//! Shard-width sweep: the streaming pipeline against the single-shot
+//! baseline (tentpole claim — bounded rounds, identical answers).
+//!
+//! For each shard width the full multi-party session is timed and its
+//! communication shape recorded. Expectations:
+//!
+//! - `bytes_total` is ~constant across widths (same statistics move,
+//!   plus a few bytes of per-shard framing);
+//! - `bytes_max_round` — the peak payload of any single contribution
+//!   round, which bounds leader/party working memory — scales with the
+//!   shard width, not with M;
+//! - outputs are bit-identical to the single-shot run at every width.
+//!
+//! Output: human table + JSON lines via `util::bench` appended with
+//! per-width communication rows, written to `BENCH_scan.json`.
+//!
+//! Run: `cargo bench --bench bench_shard` (DASH_BENCH_QUICK=1 for CI).
+
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::ScanConfig;
+use dash::util::bench::Bench;
+use dash::util::human_bytes;
+use dash::util::json::Json;
+
+fn spec(n_total: usize, parties: usize, m: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_total / parties; parties],
+        m_variants: m,
+        n_causal: 10.min(m),
+        effect_sd: 0.2,
+        fst: 0.05,
+        party_admixture: (0..parties).map(|i| i as f64 / (parties - 1) as f64).collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn cfg(shard_m: usize) -> ScanConfig {
+    ScanConfig { backend: Backend::Masked, shard_m, ..Default::default() }
+}
+
+fn main() {
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let parties = 3;
+    let (n, m) = if quick { (600, 4096) } else { (2000, 16384) };
+    // 0 = single-shot baseline (one shard over all of M)
+    let widths: &[usize] =
+        if quick { &[0, 512, 2048] } else { &[0, 256, 1024, 4096, 16384] };
+
+    eprintln!("generating cohort: P={parties} N={n} M={m} ...");
+    let cohort = generate_cohort(&spec(n, parties, m), 90);
+    let baseline = run_multi_party_scan_t(&cohort, &cfg(0), Transport::InProc, 5).unwrap();
+
+    let mut b = Bench::new("shard");
+    struct Row {
+        label: String,
+        width: usize,
+        shards: usize,
+        median_s: f64,
+        bytes_total: u64,
+        bytes_max_round: u64,
+        mismatches: usize,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &w in widths {
+        let label = if w == 0 { "single-shot".to_string() } else { format!("width={w}") };
+        let res = run_multi_party_scan_t(&cohort, &cfg(w), Transport::InProc, 5).unwrap();
+        // exactness: every width must reproduce the baseline bit-for-bit
+        let mismatches = (0..m)
+            .filter(|&j| {
+                res.output.assoc.beta[j].to_bits() != baseline.output.assoc.beta[j].to_bits()
+                    || res.output.assoc.se[j].to_bits()
+                        != baseline.output.assoc.se[j].to_bits()
+            })
+            .count();
+        let median_s = b
+            .case_units(&label, Some(m as f64), "var", || {
+                std::hint::black_box(
+                    run_multi_party_scan_t(&cohort, &cfg(w), Transport::InProc, 5).unwrap(),
+                );
+            })
+            .median_s;
+        rows.push(Row {
+            label,
+            width: if w == 0 { m } else { w },
+            shards: res.metrics.shards,
+            median_s,
+            bytes_total: res.metrics.bytes_total,
+            bytes_max_round: res.metrics.bytes_max_round,
+            mismatches,
+        });
+    }
+
+    println!("\nshard-width sweep (P={parties}, N={n}, M={m}, masked backend):");
+    println!(
+        "{:>12} {:>7} {:>10} {:>14} {:>16} {:>10}",
+        "width", "shards", "median_s", "bytes_total", "peak_round_bytes", "mismatch"
+    );
+    for r in &rows {
+        println!(
+            "{:>12} {:>7} {:>10.4} {:>14} {:>16} {:>10}",
+            r.width,
+            r.shards,
+            r.median_s,
+            human_bytes(r.bytes_total),
+            human_bytes(r.bytes_max_round),
+            r.mismatches
+        );
+    }
+    println!("(peak round bytes track the shard width, not M — the bounded-memory claim;");
+    println!(" mismatch must be 0: sharded == single-shot bit-for-bit)");
+
+    // Machine-readable report: bench measurements + per-width comm rows.
+    let mut report = b.json_lines();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("group", "shard")
+            .set("row", "comm")
+            .set("label", r.label.as_str())
+            .set("width", r.width)
+            .set("shards", r.shards)
+            .set("median_s", r.median_s)
+            .set("bytes_total", r.bytes_total)
+            .set("bytes_max_round", r.bytes_max_round)
+            .set("mismatches", r.mismatches);
+        report.push_str(&o.to_string());
+        report.push('\n');
+    }
+    if let Err(e) = std::fs::write("BENCH_scan.json", &report) {
+        eprintln!("warn: could not write BENCH_scan.json: {e}");
+    } else {
+        println!("report: BENCH_scan.json");
+    }
+
+    let any_mismatch = rows.iter().any(|r| r.mismatches > 0);
+    assert!(!any_mismatch, "sharded scan diverged from single-shot baseline");
+}

@@ -52,10 +52,15 @@ fn main() -> anyhow::Result<()> {
     let use_artifacts = dash::runtime::Engine::load("artifacts").is_ok();
     eprintln!("artifact runtime: {}", if use_artifacts { "ENABLED" } else { "not found (rust path)" });
 
-    // --- secure scan (the paper's protocol) ---
+    // --- secure scan (the paper's protocol, sharded streaming) ---
+    // 4096-variant shards: peak payload per round is O(K·4096), parties
+    // compress shard s+1 while the leader combines shard s, and the
+    // result is bit-identical to the single-shot run below.
+    let shard_m = 4096;
     let secure_cfg = ScanConfig {
         backend: Backend::Masked,
         use_artifacts,
+        shard_m,
         ..Default::default()
     };
     let secure = run_multi_party_scan_t(&cohort, &secure_cfg, Transport::InProc, seed)?;
@@ -95,13 +100,14 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== gwas_scan (end-to-end driver) ===");
     println!("parties {parties}  N {n_total}  M {m}  K {}", cohort.k());
     println!("compute engine          {}", if use_artifacts { "AOT artifacts (PJRT)" } else { "pure Rust" });
-    println!("--- secure (masked) ---");
+    println!("--- secure (masked, {} shards of {shard_m}) ---", secure.metrics.shards);
     println!("  compress wall         {}", human_secs(secure.metrics.compress_wall_s));
     println!("  combine               {}", human_secs(secure.metrics.combine_s));
     println!("  total                 {}", human_secs(secure.metrics.total_s));
     println!("  variants/sec          {:.0}", m as f64 / secure.metrics.total_s);
     println!("  inter-party bytes     {}", human_bytes(secure.metrics.bytes_total));
     println!("  bytes/variant         {:.1}", secure.metrics.bytes_total as f64 / m as f64);
+    println!("  peak round bytes      {}", human_bytes(secure.metrics.bytes_max_round));
     println!("--- plaintext comparator ---");
     println!("  total                 {}", human_secs(plain.metrics.total_s));
     println!("--- headline (E1) ---");

@@ -77,6 +77,7 @@ impl RunConfig {
         scan.set("backend", self.scan.backend.name())
             .set("frac_bits", self.scan.frac_bits as usize)
             .set("block_m", self.scan.block_m)
+            .set("shard_m", self.scan.shard_m)
             .set("use_artifacts", self.scan.use_artifacts)
             .set("artifacts_dir", self.scan.artifacts_dir.as_str())
             .set(
@@ -176,6 +177,9 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
     if let Some(x) = v.get("block_m").and_then(Json::as_usize) {
         s.block_m = x;
     }
+    if let Some(x) = v.get("shard_m").and_then(Json::as_usize) {
+        s.shard_m = x;
+    }
     if let Some(x) = v.get("threads").and_then(Json::as_usize) {
         s.threads = Some(x);
     }
@@ -215,7 +219,8 @@ mod tests {
         let j = Json::parse(
             r#"{"seed": 42, "transport": "tcp",
                 "cohort": {"party_sizes": [100, 100], "m_variants": 50, "fst": 0.2},
-                "scan": {"backend": "shamir", "frac_bits": 20, "r_method": "cholesky"}}"#,
+                "scan": {"backend": "shamir", "frac_bits": 20, "r_method": "cholesky",
+                         "shard_m": 4096}}"#,
         )
         .unwrap();
         let cfg = RunConfig::from_json(&j).unwrap();
@@ -226,6 +231,7 @@ mod tests {
         assert_eq!(cfg.cohort.m_variants, 50);
         assert_eq!(cfg.scan.frac_bits, 20);
         assert_eq!(cfg.scan.r_method, RFactorMethod::Cholesky);
+        assert_eq!(cfg.scan.shard_m, 4096);
     }
 
     #[test]

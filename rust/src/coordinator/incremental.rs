@@ -1,12 +1,20 @@
-//! Incremental updates: new centers or sample batches join after the
-//! initial combine at cost independent of the original N (paper §1 fn.1).
+//! Incremental folding of aggregate statistics — generalized from
+//! "add a cohort" to "add a shard".
 //!
-//! The leader retains only the aggregate sufficient statistics — a
-//! `O(K·M)` object. When a batch of new parties joins, they run a fresh
-//! secure-aggregation round among themselves; the leader adds the round's
-//! aggregate to the stored one and re-runs the `O(K³ + K²M)` combine. No
-//! original party participates, no original data is touched: the update
-//! cost depends only on the new batch's size (E7).
+//! Two fold units share this module:
+//!
+//! - **Cohort rounds** ([`IncrementalAggregate`]): new centers or sample
+//!   batches join after the initial combine at cost independent of the
+//!   original N (paper §1 fn.1). The leader retains only the aggregate
+//!   sufficient statistics — a `O(K·M)` object — and folds a joining
+//!   batch's securely-summed delta over the *full* layout.
+//! - **Variant shards** ([`IncrementalAggregate::add_shard_flat`] and
+//!   [`ScanAssembler`]): within one session, the sharded streaming
+//!   protocol delivers the same aggregate one `O(K·width)` column shard
+//!   at a time. `add_shard_flat` scatters a shard delta into the full
+//!   layout (for leaders that retain the aggregate for later cohort
+//!   joins); `ScanAssembler` is the bounded-memory path that combines
+//!   each shard on arrival and keeps only the `O(M)` outputs.
 //!
 //! Privacy note (DESIGN.md §Security): consecutive aggregates differ by
 //! the joining batch's total — with a *single* joining party that delta
@@ -14,11 +22,14 @@
 //! (difference of two published aggregates), not a protocol leak; batches
 //! of ≥ 2 parties have the same guarantee as the initial round.
 
+use crate::linalg::Matrix;
 use crate::scan::compressed::AggregateSums;
 use crate::scan::{
-    combine_compressed, flatten_for_sum, unflatten_sum, CombineOptions, CompressedParty,
-    FlatLayout, RFactorMethod, ScanOutput,
+    combine_base, combine_compressed, combine_shard, flatten_for_sum, unflatten_sum, BaseSums,
+    CombineContext, CombineOptions, CompressedParty, FlatLayout, RFactorMethod, ScanOutput,
+    ShardRange, ShardSums,
 };
+use crate::stats::AssocResult;
 
 /// The leader's retained state between rounds.
 #[derive(Clone, Debug)]
@@ -32,6 +43,19 @@ impl IncrementalAggregate {
     /// Start from a first round's aggregate flat vector.
     pub fn new(layout: FlatLayout, flat: Vec<f64>) -> anyhow::Result<Self> {
         anyhow::ensure!(flat.len() == layout.len(), "layout mismatch");
+        Ok(IncrementalAggregate { layout, flat, rounds: 1 })
+    }
+
+    /// Start a sharded session's aggregate: base sums known, variant
+    /// segments zeroed, shards folded in as they arrive
+    /// ([`add_shard_flat`](Self::add_shard_flat)).
+    pub fn from_base_flat(layout: FlatLayout, base_flat: &[f64]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            base_flat.len() == layout.xty_off(),
+            "base flat length mismatch"
+        );
+        let mut flat = vec![0.0; layout.len()];
+        flat[..base_flat.len()].copy_from_slice(base_flat);
         Ok(IncrementalAggregate { layout, flat, rounds: 1 })
     }
 
@@ -73,6 +97,32 @@ impl IncrementalAggregate {
         Ok(())
     }
 
+    /// Fold one shard's summed variant statistics (`[xty(w), xtx(w),
+    /// ctx(K·w)]`, see [`crate::scan::shard_flat_len`]) into the variant
+    /// segments of the full layout — the shard-shaped fold unit.
+    /// O(K·width); does not advance the cohort-round counter.
+    pub fn add_shard_flat(&mut self, range: ShardRange, flat: &[f64]) -> anyhow::Result<()> {
+        let (k, m) = (self.layout.k, self.layout.m);
+        let w = range.width();
+        anyhow::ensure!(range.j1 <= m, "shard range beyond layout");
+        anyhow::ensure!(
+            flat.len() == crate::scan::shard_flat_len(k, w),
+            "shard flat length mismatch"
+        );
+        let (xty_off, xtx_off, ctx_off) =
+            (self.layout.xty_off(), self.layout.xtx_off(), self.layout.ctx_off());
+        for j in 0..w {
+            self.flat[xty_off + range.j0 + j] += flat[j];
+            self.flat[xtx_off + range.j0 + j] += flat[w + j];
+        }
+        for kk in 0..k {
+            for j in 0..w {
+                self.flat[ctx_off + kk * m + range.j0 + j] += flat[(2 + kk) * w + j];
+            }
+        }
+        Ok(())
+    }
+
     /// Fold in new parties directly (plaintext-simulation convenience).
     pub fn add_parties(&mut self, parties: &[CompressedParty]) -> anyhow::Result<()> {
         anyhow::ensure!(!parties.is_empty());
@@ -97,11 +147,109 @@ impl IncrementalAggregate {
     }
 }
 
+/// Bounded-memory assembler for a sharded scan session.
+///
+/// Built from the session's aggregate *base* sums, it factorizes the
+/// covariate block once ([`combine_base`]) and then folds shard sums in
+/// scan order: each [`add_shard`](Self::add_shard) runs the Lemma 3.1
+/// epilogue for that shard (`O(K²·width)`) and appends into the `O(M)`
+/// output vectors — the shard sums themselves are dropped immediately,
+/// so peak state is `O(K² + K·width + M)` regardless of shard count.
+pub struct ScanAssembler {
+    ctx: CombineContext,
+    m: usize,
+    next_j0: usize,
+    /// residual df as reported by the per-shard epilogue (set on the
+    /// first shard; identical across shards by construction)
+    df: Option<f64>,
+    beta: Vec<f64>,
+    se: Vec<f64>,
+    t: Vec<f64>,
+    p: Vec<f64>,
+}
+
+impl ScanAssembler {
+    /// Factorize the covariate block and prepare to receive shards of an
+    /// `M`-variant scan.
+    pub fn new(
+        base: &BaseSums,
+        party_rs: Option<&[Matrix]>,
+        opts: CombineOptions,
+        m: usize,
+    ) -> anyhow::Result<ScanAssembler> {
+        let ctx = combine_base(base, party_rs, opts)?;
+        Ok(ScanAssembler {
+            ctx,
+            m,
+            next_j0: 0,
+            df: None,
+            beta: Vec::with_capacity(m),
+            se: Vec::with_capacity(m),
+            t: Vec::with_capacity(m),
+            p: Vec::with_capacity(m),
+        })
+    }
+
+    /// Number of variant columns assembled so far.
+    pub fn assembled(&self) -> usize {
+        self.next_j0
+    }
+
+    /// Combine one shard's aggregate sums and fold the partial result in.
+    /// Shards must arrive in scan order; returns the shard's association
+    /// statistics (for the partial-RESULT broadcast).
+    pub fn add_shard(
+        &mut self,
+        range: ShardRange,
+        sums: &ShardSums,
+    ) -> anyhow::Result<AssocResult> {
+        anyhow::ensure!(
+            range.j0 == self.next_j0,
+            "shard out of order: got [{}, {}), expected start {}",
+            range.j0,
+            range.j1,
+            self.next_j0
+        );
+        anyhow::ensure!(range.j1 <= self.m, "shard range beyond M");
+        anyhow::ensure!(sums.xty.len() == range.width(), "shard width mismatch");
+        let part = combine_shard(&self.ctx, sums);
+        self.df.get_or_insert(part.df);
+        self.beta.extend_from_slice(&part.beta);
+        self.se.extend_from_slice(&part.se);
+        self.t.extend_from_slice(&part.t);
+        self.p.extend_from_slice(&part.p);
+        self.next_j0 = range.j1;
+        Ok(part)
+    }
+
+    /// Finish the session, checking every column arrived.
+    pub fn finish(self) -> anyhow::Result<ScanOutput> {
+        anyhow::ensure!(
+            self.next_j0 == self.m,
+            "incomplete scan: {} of {} columns assembled",
+            self.next_j0,
+            self.m
+        );
+        // df comes from the per-shard epilogue (single source of truth in
+        // stats::regression); the fallback only fires for an M == 0 scan.
+        let df = self
+            .df
+            .unwrap_or((self.ctx.n as f64) - (self.ctx.k as f64) - 1.0);
+        Ok(ScanOutput {
+            assoc: AssocResult { beta: self.beta, se: self.se, t: self.t, p: self.p, df },
+            covariate_fit: self.ctx.covariate_fit,
+            n: self.ctx.n,
+            k: self.ctx.k,
+            m: self.m,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::{rel_err, Matrix};
-    use crate::scan::compress_party;
+    use crate::scan::{compress_party, ShardPlan};
     use crate::util::rng::Rng;
 
     fn party(n: usize, k: usize, m: usize, seed: u64) -> CompressedParty {
@@ -135,6 +283,107 @@ mod tests {
         assert!(rel_err(&inc_out.assoc.beta, &all_out.assoc.beta) < 1e-12);
         assert!(rel_err(&inc_out.assoc.se, &all_out.assoc.se) < 1e-12);
         assert_eq!(inc.rounds(), 2);
+    }
+
+    #[test]
+    fn shard_folds_equal_cohort_fold() {
+        // folding shard-by-shard reconstructs exactly the full aggregate
+        let p1 = party(70, 3, 12, 180);
+        let p2 = party(55, 3, 12, 181);
+        let full = IncrementalAggregate::from_parties(&[p1.clone(), p2.clone()]).unwrap();
+
+        let (layout, f1) = flatten_for_sum(&p1);
+        let (_, f2) = flatten_for_sum(&p2);
+        let summed: Vec<f64> = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
+        let base_flat = &summed[..layout.xty_off()];
+        let mut sharded = IncrementalAggregate::from_base_flat(layout, base_flat).unwrap();
+
+        let plan = ShardPlan::new(12, 5); // 3 shards, ragged tail
+        for r in plan.ranges() {
+            // build the shard's flat delta from the summed full vector
+            let w = r.width();
+            let mut flat = Vec::with_capacity(crate::scan::shard_flat_len(3, w));
+            flat.extend_from_slice(&summed[layout.xty_off() + r.j0..layout.xty_off() + r.j1]);
+            flat.extend_from_slice(&summed[layout.xtx_off() + r.j0..layout.xtx_off() + r.j1]);
+            for kk in 0..3 {
+                let off = layout.ctx_off() + kk * 12;
+                flat.extend_from_slice(&summed[off + r.j0..off + r.j1]);
+            }
+            sharded.add_shard_flat(r, &flat).unwrap();
+        }
+        assert_eq!(sharded.flat, full.flat);
+        let a = sharded.recombine().unwrap();
+        let b = full.recombine().unwrap();
+        assert_eq!(a.assoc.beta.len(), b.assoc.beta.len());
+        for j in 0..12 {
+            assert_eq!(a.assoc.beta[j].to_bits(), b.assoc.beta[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn assembler_matches_single_shot() {
+        let p1 = party(64, 4, 15, 182);
+        let p2 = party(48, 4, 15, 183);
+        let inc = IncrementalAggregate::from_parties(&[p1, p2]).unwrap();
+        let agg = inc.sums().unwrap();
+        let single = combine_compressed(
+            &agg,
+            None,
+            CombineOptions { r_method: RFactorMethod::Cholesky },
+        )
+        .unwrap();
+
+        let mut asm = ScanAssembler::new(
+            &agg.base(),
+            None,
+            CombineOptions { r_method: RFactorMethod::Cholesky },
+            15,
+        )
+        .unwrap();
+        let plan = ShardPlan::new(15, 4);
+        for r in plan.ranges() {
+            let sums = ShardSums {
+                xty: agg.xty[r.j0..r.j1].to_vec(),
+                xtx: agg.xtx[r.j0..r.j1].to_vec(),
+                ctx: agg.ctx.col_slice(r.j0, r.j1),
+            };
+            let part = asm.add_shard(r, &sums).unwrap();
+            assert_eq!(part.beta.len(), r.width());
+        }
+        let out = asm.finish().unwrap();
+        for j in 0..15 {
+            assert_eq!(out.assoc.beta[j].to_bits(), single.assoc.beta[j].to_bits());
+            assert_eq!(out.assoc.p[j].to_bits(), single.assoc.p[j].to_bits());
+        }
+        assert_eq!(out.assoc.df, single.assoc.df);
+    }
+
+    #[test]
+    fn assembler_rejects_out_of_order_and_incomplete() {
+        let p1 = party(40, 3, 8, 184);
+        let inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
+        let agg = inc.sums().unwrap();
+        let opts = CombineOptions { r_method: RFactorMethod::Cholesky };
+        let mut asm = ScanAssembler::new(&agg.base(), None, opts, 8).unwrap();
+        let plan = ShardPlan::new(8, 4);
+        // out of order: shard 1 first
+        let r1 = plan.range(1);
+        let sums = ShardSums {
+            xty: agg.xty[r1.j0..r1.j1].to_vec(),
+            xtx: agg.xtx[r1.j0..r1.j1].to_vec(),
+            ctx: agg.ctx.col_slice(r1.j0, r1.j1),
+        };
+        assert!(asm.add_shard(r1, &sums).is_err());
+        // incomplete: only shard 0 arrives
+        let r0 = plan.range(0);
+        let sums0 = ShardSums {
+            xty: agg.xty[r0.j0..r0.j1].to_vec(),
+            xtx: agg.xtx[r0.j0..r0.j1].to_vec(),
+            ctx: agg.ctx.col_slice(r0.j0, r0.j1),
+        };
+        asm.add_shard(r0, &sums0).unwrap();
+        assert_eq!(asm.assembled(), 4);
+        assert!(asm.finish().is_err());
     }
 
     #[test]

@@ -1,15 +1,26 @@
-//! Leader-side protocol: session setup, contribution collection,
-//! secure aggregation, combine, result broadcast.
+//! Leader-side protocol: session setup, streaming per-shard contribution
+//! collection, secure aggregation, incremental combine, result broadcast.
+//!
+//! The leader never materializes the `O(K·M)` aggregate: each shard's
+//! contributions are aggregated (`O(P·K·width)`), combined through the
+//! [`ScanAssembler`] (`O(K²·width)`), and dropped — while the parties
+//! are already compressing the next shard. Only the `O(M)` output
+//! vectors and the per-shard result frames accumulate. Partial results
+//! are broadcast after the last shard so the single leader↔party stream
+//! never carries traffic in both directions at once (no head-of-line
+//! deadlock over TCP, any shard width).
 
+use super::incremental::ScanAssembler;
 use super::messages::*;
 use crate::mpc::field::Fe;
 use crate::mpc::fixed::FixedCodec;
-use crate::mpc::masking::{aggregate_masked, PairwiseMasker};
+use crate::mpc::masking::aggregate_masked;
+use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::Backend;
-use crate::net::{Endpoint, Frame};
+use crate::net::{Endpoint, Frame, WireMessage};
 use crate::scan::{
-    combine_compressed, unflatten_sum, CombineOptions, FlatLayout, RFactorMethod, ScanConfig,
-    ScanOutput,
+    base_flat_len, shard_flat_len, unflatten_base, unflatten_shard, ScanConfig, ScanOutput,
+    ShardPlan,
 };
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -29,6 +40,13 @@ pub struct SessionMetrics {
     pub messages_total: u64,
     /// bytes of the result broadcast alone (the O(M) downlink)
     pub bytes_result: u64,
+    /// number of variant shards the scan streamed over
+    pub shards: usize,
+    /// peak wire bytes of any single contribution round (base or shard),
+    /// counted from the frames of that round — bounded by the shard
+    /// width, not by M (the memory claim, E4'). Deterministic across
+    /// transports and unaffected by parties streaming ahead.
+    pub bytes_max_round: u64,
 }
 
 /// Leader state for one scan session over connected party endpoints.
@@ -39,14 +57,15 @@ pub struct Leader<'a> {
     pub m: usize,
 }
 
-impl<'a> Leader<'a> {
+impl Leader<'_> {
     /// Run the full session; returns scan output + metrics.
     pub fn run(&self, seed: u64) -> anyhow::Result<(ScanOutput, SessionMetrics)> {
         let t_start = Instant::now();
         let parties = self.endpoints.len();
         anyhow::ensure!(parties >= 1, "need at least one party");
         let mut metrics = SessionMetrics::default();
-        let layout = FlatLayout { k: self.k, m: self.m };
+        let plan = ShardPlan::new(self.m, self.cfg.shard_m);
+        metrics.shards = plan.count();
         let codec = FixedCodec::new(self.cfg.frac_bits);
         let mut rng = Rng::new(seed);
 
@@ -72,6 +91,7 @@ impl<'a> Leader<'a> {
                 k: self.k as u64,
                 m: self.m as u64,
                 block_m: self.cfg.block_m as u64,
+                shard_m: self.cfg.shard_m as u64,
                 seeds: seed_matrix[p].clone(),
             };
             ep.send(&setup.to_frame())?;
@@ -80,59 +100,179 @@ impl<'a> Leader<'a> {
         // COMPRESS kick-off.
         let t_compress = Instant::now();
         for ep in self.endpoints {
-            ep.send(&Frame::new(TAG_COMPRESS))?;
+            ep.send(&Compress.to_frame())?;
         }
 
-        // Collect contributions and aggregate by backend.
-        let (agg, party_rs) = match self.cfg.backend {
+        // Base round: collect + aggregate the O(K²) covariate stats.
+        let (base_flat, party_rs, round_bytes) =
+            self.collect_round(&codec, 0, base_flat_len(self.k))?;
+        metrics.bytes_max_round = round_bytes;
+        let base = unflatten_base(self.k, &base_flat)?;
+
+        // Factorize the covariate block once (O(K³)). Auto resolution of
+        // the R-factor method (TSQR when per-party factors exist) lives
+        // in combine_base.
+        let t0 = Instant::now();
+        let mut asm = ScanAssembler::new(
+            &base,
+            party_rs.as_deref(),
+            crate::scan::CombineOptions { r_method: self.cfg.r_method },
+            self.m,
+        )?;
+        metrics.combine_s += t0.elapsed().as_secs_f64();
+
+        // Shard rounds: aggregate + combine each shard as it arrives;
+        // buffer the partial-result frames for the post-scan broadcast.
+        // compress_wall_s stops at the last contribution received, so it
+        // excludes the trailing combine (in pipelined runs the two phases
+        // overlap, so compress_wall_s + combine_s may exceed total_s).
+        let mut results = Vec::with_capacity(plan.count());
+        let mut last_contribution = Instant::now();
+        for range in plan.ranges() {
+            let w = range.width();
+            let (flat, _, round_bytes) =
+                self.collect_round(&codec, range.index + 1, shard_flat_len(self.k, w))?;
+            last_contribution = Instant::now();
+            metrics.bytes_max_round = metrics.bytes_max_round.max(round_bytes);
+            let t0 = Instant::now();
+            let sums = unflatten_shard(self.k, w, &flat)?;
+            let part = asm.add_shard(range, &sums)?;
+            metrics.combine_s += t0.elapsed().as_secs_f64();
+            results.push(ShardResult {
+                shard: range.index as u64,
+                j0: range.j0 as u64,
+                beta: part.beta,
+                se: part.se,
+            });
+        }
+        metrics.compress_wall_s = last_contribution.duration_since(t_compress).as_secs_f64();
+
+        let t0 = Instant::now();
+        let out = asm.finish()?;
+        metrics.combine_s += t0.elapsed().as_secs_f64();
+
+        // Per-shard RESULT broadcast + shutdown (the O(M) downlink).
+        let bytes_before = self.total_bytes();
+        for ep in self.endpoints {
+            for res in &results {
+                ep.send(&res.to_frame())?;
+            }
+            ep.send(&Shutdown.to_frame())?;
+        }
+        metrics.bytes_result = self.total_bytes() - bytes_before;
+        metrics.total_s = t_start.elapsed().as_secs_f64();
+        metrics.bytes_total = self.total_bytes();
+        metrics.messages_total =
+            self.endpoints.iter().map(|e| e.meter().messages()).sum();
+        Ok((out, metrics))
+    }
+
+    /// Collect one secure-sum round (round 0 = base, s+1 = shard s) from
+    /// every party and reduce it to the aggregate flat vector. Plaintext
+    /// round 0 additionally returns the per-party R factors for TSQR.
+    /// The third return value is the round's wire bytes, counted from
+    /// the round's own frames (meter deltas would also pick up shards
+    /// the parties have already streamed ahead).
+    fn collect_round(
+        &self,
+        codec: &FixedCodec,
+        round: usize,
+        expect_len: usize,
+    ) -> anyhow::Result<(Vec<f64>, Option<Vec<crate::linalg::Matrix>>, u64)> {
+        let parties = self.endpoints.len();
+        let mut round_bytes = 0u64;
+        match self.cfg.backend {
             Backend::Plaintext => {
-                let mut sum = vec![0.0f64; layout.len()];
+                let mut sum = vec![0.0f64; expect_len];
                 let mut rs = Vec::with_capacity(parties);
                 for ep in self.endpoints {
                     let f = recv_ok(ep)?;
-                    let (flat, r) = parse_plain_stats(&f)?;
-                    anyhow::ensure!(flat.len() == layout.len(), "flat length mismatch");
+                    round_bytes += f.wire_len();
+                    let flat = if round == 0 {
+                        let msg = PlainBase::from_frame(&f)?;
+                        rs.push(msg.r);
+                        msg.flat
+                    } else {
+                        let msg = PlainShard::from_frame(&f)?;
+                        anyhow::ensure!(
+                            msg.shard == (round - 1) as u64,
+                            "plain shard out of order: {} vs {}",
+                            msg.shard,
+                            round - 1
+                        );
+                        msg.flat
+                    };
+                    anyhow::ensure!(flat.len() == expect_len, "flat length mismatch");
                     for (a, b) in sum.iter_mut().zip(&flat) {
                         *a += b;
                     }
-                    rs.push(r);
                 }
-                (unflatten_sum(layout, &sum)?, Some(rs))
+                let rs = if round == 0 { Some(rs) } else { None };
+                Ok((sum, rs, round_bytes))
             }
             Backend::Masked => {
                 let mut contributions = Vec::with_capacity(parties);
                 for ep in self.endpoints {
                     let f = recv_ok(ep)?;
-                    let enc = parse_masked_stats(&f)?;
-                    anyhow::ensure!(enc.len() == layout.len(), "masked length mismatch");
+                    round_bytes += f.wire_len();
+                    let enc = if round == 0 {
+                        MaskedBase::from_frame(&f)?.enc
+                    } else {
+                        let msg = MaskedShard::from_frame(&f)?;
+                        anyhow::ensure!(
+                            msg.shard == (round - 1) as u64,
+                            "masked shard out of order: {} vs {}",
+                            msg.shard,
+                            round - 1
+                        );
+                        msg.enc
+                    };
+                    anyhow::ensure!(enc.len() == expect_len, "masked length mismatch");
                     contributions.push(enc);
                 }
                 let ring_sum = aggregate_masked(&contributions);
-                (unflatten_sum(layout, &codec.decode_vec(&ring_sum))?, None)
+                Ok((codec.decode_vec(&ring_sum), None, round_bytes))
             }
             Backend::Shamir { threshold } => {
-                // Round 1: collect each party's share fan-out.
+                // Round trip 1: collect each party's share fan-out.
                 let mut outgoing: Vec<Vec<Vec<u64>>> = Vec::with_capacity(parties);
                 for ep in self.endpoints {
                     let f = recv_ok(ep)?;
-                    outgoing.push(parse_shamir_out(&f)?);
+                    round_bytes += f.wire_len();
+                    let msg = ShamirOut::from_frame(&f)?;
+                    anyhow::ensure!(
+                        msg.round == round as u64,
+                        "shamir round out of sync: {} vs {round}",
+                        msg.round
+                    );
+                    anyhow::ensure!(msg.shares.len() == parties, "share fan-out mismatch");
+                    outgoing.push(msg.shares);
                 }
                 // Route: party q receives the q-th vector from every p.
                 for (q, ep) in self.endpoints.iter().enumerate() {
                     let routed: Vec<Vec<u64>> =
                         outgoing.iter().map(|o| o[q].clone()).collect();
-                    ep.send(&shamir_in_frame(&routed))?;
+                    let f = ShamirIn { round: round as u64, shares: routed }.to_frame();
+                    round_bytes += f.wire_len();
+                    ep.send(&f)?;
                 }
-                // Round 2: collect share-sums, reconstruct from the first
-                // `threshold` parties (any quorum works; tested).
+                // Round trip 2: collect share-sums, reconstruct from the
+                // first `threshold` parties (any quorum works; tested).
                 let mut sums: Vec<Vec<u64>> = Vec::with_capacity(parties);
                 for ep in self.endpoints {
                     let f = recv_ok(ep)?;
-                    sums.push(parse_shamir_sum(&f)?);
+                    round_bytes += f.wire_len();
+                    let msg = ShamirSum::from_frame(&f)?;
+                    anyhow::ensure!(
+                        msg.round == round as u64,
+                        "shamir sum round out of sync: {} vs {round}",
+                        msg.round
+                    );
+                    anyhow::ensure!(msg.sum.len() == expect_len, "share sum length mismatch");
+                    sums.push(msg.sum);
                 }
                 let quorum = threshold.min(parties);
-                let len = layout.len();
-                let mut flat = vec![0.0f64; len];
+                let mut flat = vec![0.0f64; expect_len];
                 for (i, slot) in flat.iter_mut().enumerate() {
                     let shares: Vec<crate::mpc::shamir::Share> = (0..quorum)
                         .map(|q| crate::mpc::shamir::Share {
@@ -143,37 +283,9 @@ impl<'a> Leader<'a> {
                     let fe = crate::mpc::shamir::reconstruct(&shares);
                     *slot = fe.to_i64() as f64 / codec.scale();
                 }
-                (unflatten_sum(layout, &flat)?, None)
+                Ok((flat, None, round_bytes))
             }
-        };
-        metrics.compress_wall_s = t_compress.elapsed().as_secs_f64();
-
-        // COMBINE (leader-local, O(K³ + K²M), independent of N).
-        let t_combine = Instant::now();
-        let r_method = match (self.cfg.r_method, &party_rs) {
-            (RFactorMethod::Auto, Some(_)) => RFactorMethod::Tsqr,
-            (RFactorMethod::Auto, None) => RFactorMethod::Cholesky,
-            (m, _) => m,
-        };
-        let out = combine_compressed(
-            &agg,
-            party_rs.as_deref(),
-            CombineOptions { r_method },
-        )?;
-        metrics.combine_s = t_combine.elapsed().as_secs_f64();
-
-        // RESULT broadcast + shutdown (the O(M) downlink).
-        let bytes_before = self.total_bytes();
-        for ep in self.endpoints {
-            ep.send(&result_frame(&out.assoc.beta, &out.assoc.se))?;
-            ep.send(&Frame::new(TAG_SHUTDOWN))?;
         }
-        metrics.bytes_result = self.total_bytes() - bytes_before;
-        metrics.total_s = t_start.elapsed().as_secs_f64();
-        metrics.bytes_total = self.total_bytes();
-        metrics.messages_total =
-            self.endpoints.iter().map(|e| e.meter().messages()).sum();
-        Ok((out, metrics))
     }
 
     fn total_bytes(&self) -> u64 {

@@ -2,9 +2,13 @@
 //!
 //! The leader ([`leader`]) orchestrates sessions over byte-metered
 //! endpoints; parties ([`party`]) run compress-within locally (pure Rust
-//! or the AOT artifacts) and participate in the secure combine.
-//! [`run_multi_party_scan`] wires an in-process deployment (one thread
-//! per party), which is also what the benches and examples drive;
+//! or the AOT artifacts) and participate in the secure combine. Sessions
+//! stream over a variant-shard plan ([`crate::scan::ShardPlan`],
+//! [`crate::scan::ScanConfig::shard_m`]): one secure-sum round per
+//! shard, parties compressing shard `s+1` while the leader combines
+//! shard `s`, with the single-shot protocol as the one-shard degenerate
+//! case. [`run_multi_party_scan`] wires an in-process deployment (one
+//! thread per party), which is also what the benches and examples drive;
 //! `--transport tcp` in the launcher swaps in localhost sockets with the
 //! same protocol bytes.
 
@@ -13,7 +17,7 @@ pub mod party;
 pub mod leader;
 pub mod incremental;
 
-pub use incremental::IncrementalAggregate;
+pub use incremental::{IncrementalAggregate, ScanAssembler};
 pub use leader::{Leader, SessionMetrics};
 pub use party::{ComputeBackend, PartyResult};
 

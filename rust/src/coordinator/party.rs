@@ -1,10 +1,28 @@
 //! Party-side protocol state machine.
 //!
 //! A party owns its local `(y, C, X)` and an [`Endpoint`] to the leader.
-//! [`serve`] runs the session: SETUP → COMPRESS → backend-specific
-//! contribution → (shamir share routing) → RESULT → SHUTDOWN. The raw
-//! data never crosses the endpoint; only compressed (and, in secure
-//! modes, encoded+masked/shared) statistics do.
+//! [`serve`] runs the sharded session: SETUP → COMPRESS → base
+//! contribution → one contribution per variant shard → per-shard RESULT
+//! frames → SHUTDOWN. The raw data never crosses the endpoint; only
+//! compressed (and, in secure modes, encoded+masked/shared) statistics
+//! do.
+//!
+//! ## Streaming and overlap
+//!
+//! In plaintext/masked mode the party pushes its shard contributions as
+//! fast as it can compress them and only then drains the per-shard
+//! results — so while the leader is aggregating + combining shard `s`,
+//! this thread is already compressing shard `s+1` (the transport
+//! buffers, or applies backpressure, in between). Peak memory here is
+//! `O(N_p·K)` input plus `O(K·width)` per-shard statistics; the full
+//! `O(K·M)` statistics block is never materialized. Shamir mode
+//! interposes a share-routing round trip per shard, which serializes
+//! parties per shard but keeps the same bounded-memory shape.
+//!
+//! The AOT artifact engine currently lowers the whole-`M` compress, so
+//! in artifact mode the party computes the full block once and slices
+//! shards out of it — protocol traffic stays shard-bounded, local
+//! memory does not (tracked in ROADMAP: per-shard artifact lowering).
 
 use super::messages::*;
 use crate::gwas::PartyData;
@@ -12,9 +30,12 @@ use crate::mpc::field::Fe;
 use crate::mpc::fixed::FixedCodec;
 use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::shamir;
-use crate::net::Endpoint;
+use crate::net::{Endpoint, WireMessage};
 use crate::runtime::Engine;
-use crate::scan::{compress_party, flatten_for_sum, CompressedParty};
+use crate::scan::{
+    compress_base, compress_variant_block, BaseStats, CompressedParty, ShardPlan, ShardRange,
+    VariantBlockStats,
+};
 
 /// How a party computes its compress stage.
 pub enum ComputeBackend {
@@ -24,17 +45,31 @@ pub enum ComputeBackend {
     Artifacts(Box<Engine>),
 }
 
-impl ComputeBackend {
-    fn compress(
-        &self,
-        data: &PartyData,
+/// Per-session compute state: either stream shard-by-shard (pure Rust)
+/// or slice a cached whole-`M` block (artifact engine).
+enum CompressState<'a> {
+    Streaming {
+        data: &'a PartyData,
         block_m: usize,
-    ) -> anyhow::Result<CompressedParty> {
+        threads: Option<usize>,
+    },
+    Cached(Box<CompressedParty>),
+}
+
+impl CompressState<'_> {
+    fn base(&self) -> BaseStats {
         match self {
-            ComputeBackend::Rust { threads } => {
-                Ok(compress_party(&data.y, &data.c, &data.x, block_m, *threads))
+            CompressState::Streaming { data, .. } => compress_base(&data.y, &data.c),
+            CompressState::Cached(cp) => cp.base(),
+        }
+    }
+
+    fn shard(&self, r: ShardRange) -> VariantBlockStats {
+        match self {
+            CompressState::Streaming { data, block_m, threads } => {
+                compress_variant_block(&data.y, &data.c, &data.x, r.j0, r.j1, *block_m, *threads)
             }
-            ComputeBackend::Artifacts(engine) => engine.compress_party(&data.y, &data.c, &data.x),
+            CompressState::Cached(cp) => cp.variant_block(r.j0, r.j1),
         }
     }
 }
@@ -46,7 +81,8 @@ pub struct PartyResult {
     pub se: Vec<f64>,
 }
 
-/// Run the party side of one scan session. Returns the broadcast result.
+/// Run the party side of one scan session. Returns the assembled
+/// broadcast result.
 pub fn serve(
     endpoint: &Endpoint,
     data: &PartyData,
@@ -70,67 +106,139 @@ fn serve_inner(
     let setup = Setup::from_frame(&endpoint.recv()?)?;
     anyhow::ensure!(setup.k as usize == data.c.cols, "setup K mismatch");
     anyhow::ensure!(setup.m as usize == data.x.cols, "setup M mismatch");
+    let m = setup.m as usize;
+    let plan = ShardPlan::new(m, setup.shard_m as usize);
 
-    let f = endpoint.recv()?;
-    anyhow::ensure!(f.tag == TAG_COMPRESS, "expected COMPRESS, got {}", f.tag);
+    Compress::from_frame(&endpoint.recv()?)?;
 
-    let cp = compute.compress(data, setup.block_m as usize)?;
-    let (_, flat) = flatten_for_sum(&cp);
+    let state = match compute {
+        ComputeBackend::Rust { threads } => CompressState::Streaming {
+            data,
+            block_m: setup.block_m as usize,
+            threads: *threads,
+        },
+        ComputeBackend::Artifacts(engine) => CompressState::Cached(Box::new(
+            engine.compress_party(&data.y, &data.c, &data.x)?,
+        )),
+    };
+
     let codec = FixedCodec::new(setup.frac_bits as u32);
+    let base = state.base();
 
-    match setup.backend {
-        0 => {
-            // plaintext: flat stats + R_p for the TSQR combine
-            endpoint.send(&plain_stats_frame(&flat, &cp.r))?;
-        }
-        1 => {
-            // masked secure aggregation
-            let mut enc = codec.encode_vec(&flat)?;
-            let mut masker = PairwiseMasker::new(
-                setup.party_index as usize,
-                setup.parties as usize,
-                setup.seeds.clone(),
-            );
-            masker.mask_in_place(&mut enc);
-            endpoint.send(&masked_stats_frame(&enc))?;
-        }
-        2 => {
-            // Shamir: share the encoded vector to all parties via leader
-            let parties = setup.parties as usize;
-            let threshold = setup.shamir_threshold as usize;
-            let mut rng = crate::util::rng::Rng::new(
+    // Backend-specific secure-sum context, shared by the base round and
+    // every shard round.
+    enum Secure {
+        Plain,
+        Masked(PairwiseMasker),
+        Shamir {
+            parties: usize,
+            threshold: usize,
+            rng: crate::util::rng::Rng,
+        },
+    }
+    let mut secure = match setup.backend {
+        0 => Secure::Plain,
+        1 => Secure::Masked(PairwiseMasker::new(
+            setup.party_index as usize,
+            setup.parties as usize,
+            setup.seeds.clone(),
+        )),
+        2 => Secure::Shamir {
+            parties: setup.parties as usize,
+            threshold: setup.shamir_threshold as usize,
+            rng: crate::util::rng::Rng::new(
                 setup.seeds.iter().fold(0x5A17u64, |a, &s| a ^ s.rotate_left(17))
                     ^ setup.party_index.wrapping_mul(0x9E3779B97F4A7C15),
-            );
-            let secrets: Vec<Fe> = flat
-                .iter()
-                .map(|&v| Ok(Fe::from_i64(codec.encode(v)? as i64)))
-                .collect::<anyhow::Result<_>>()?;
-            let share_vecs = shamir::share_vec(&secrets, parties, threshold, &mut rng);
-            // ship y-values only; x is implied by recipient index + 1
-            let ys: Vec<Vec<u64>> = share_vecs
-                .iter()
-                .map(|sv| sv.iter().map(|s| s.y.0).collect())
-                .collect();
-            endpoint.send(&shamir_out_frame(&ys))?;
-            // receive the shares routed to me, sum share-wise, return
-            let incoming = parse_shamir_in(&endpoint.recv()?)?;
-            anyhow::ensure!(!incoming.is_empty(), "no shares routed");
-            let mut acc = vec![0u64; incoming[0].len()];
-            for sv in &incoming {
-                // field addition per element
-                anyhow::ensure!(sv.len() == acc.len(), "share length mismatch");
-                for (a, &s) in acc.iter_mut().zip(sv) {
-                    *a = Fe(*a).add(Fe(s)).0;
+            ),
+        },
+        b => anyhow::bail!("unknown backend {b}"),
+    };
+
+    // One secure-sum contribution round: round 0 carries the base stats,
+    // round s+1 carries shard s.
+    let mut contribute = |flat: &[f64], round: usize| -> anyhow::Result<()> {
+        match &mut secure {
+            Secure::Plain => {
+                if round == 0 {
+                    endpoint
+                        .send(&PlainBase { flat: flat.to_vec(), r: base.r.clone() }.to_frame())?;
+                } else {
+                    endpoint.send(
+                        &PlainShard { shard: (round - 1) as u64, flat: flat.to_vec() }
+                            .to_frame(),
+                    )?;
                 }
             }
-            endpoint.send(&shamir_sum_frame(&acc))?;
+            Secure::Masked(masker) => {
+                let mut enc = codec.encode_vec(flat)?;
+                masker.mask_in_place(&mut enc);
+                if round == 0 {
+                    endpoint.send(&MaskedBase { enc }.to_frame())?;
+                } else {
+                    endpoint.send(&MaskedShard { shard: (round - 1) as u64, enc }.to_frame())?;
+                }
+            }
+            Secure::Shamir { parties, threshold, rng } => {
+                // Share the encoded vector to all parties via the leader.
+                let secrets: Vec<Fe> = flat
+                    .iter()
+                    .map(|&v| Ok(Fe::from_i64(codec.encode(v)? as i64)))
+                    .collect::<anyhow::Result<_>>()?;
+                let share_vecs = shamir::share_vec(&secrets, *parties, *threshold, rng);
+                // ship y-values only; x is implied by recipient index + 1
+                let ys: Vec<Vec<u64>> = share_vecs
+                    .iter()
+                    .map(|sv| sv.iter().map(|s| s.y.0).collect())
+                    .collect();
+                endpoint.send(&ShamirOut { round: round as u64, shares: ys }.to_frame())?;
+                // receive the shares routed to me, sum share-wise, return
+                let incoming = ShamirIn::from_frame(&endpoint.recv()?)?;
+                anyhow::ensure!(
+                    incoming.round == round as u64,
+                    "share routing out of sync (round {} vs {round})",
+                    incoming.round
+                );
+                anyhow::ensure!(!incoming.shares.is_empty(), "no shares routed");
+                let mut acc = vec![0u64; incoming.shares[0].len()];
+                for sv in &incoming.shares {
+                    // field addition per element
+                    anyhow::ensure!(sv.len() == acc.len(), "share length mismatch");
+                    for (a, &s) in acc.iter_mut().zip(sv) {
+                        *a = Fe(*a).add(Fe(s)).0;
+                    }
+                }
+                endpoint.send(&ShamirSum { round: round as u64, sum: acc }.to_frame())?;
+            }
         }
-        b => anyhow::bail!("unknown backend {b}"),
+        Ok(())
+    };
+
+    // Base round, then stream every shard. The leader consumes shards in
+    // order while we keep compressing ahead of it.
+    contribute(&base.flatten(), 0)?;
+    for r in plan.ranges() {
+        let flat = state.shard(r).flatten();
+        contribute(&flat, r.index + 1)?;
     }
 
-    let (beta, se) = parse_result(&endpoint.recv()?)?;
-    let f = endpoint.recv()?;
-    anyhow::ensure!(f.tag == TAG_SHUTDOWN, "expected SHUTDOWN");
+    // Drain the per-shard partial results in scan order.
+    let mut beta = Vec::with_capacity(m);
+    let mut se = Vec::with_capacity(m);
+    for r in plan.ranges() {
+        let sr = ShardResult::from_frame(&endpoint.recv()?)?;
+        anyhow::ensure!(
+            sr.shard == r.index as u64 && sr.j0 == r.j0 as u64,
+            "shard result out of order: got shard {} at j0={}, expected shard {} at j0={}",
+            sr.shard,
+            sr.j0,
+            r.index,
+            r.j0
+        );
+        anyhow::ensure!(sr.beta.len() == r.width(), "shard result width mismatch");
+        beta.extend_from_slice(&sr.beta);
+        se.extend_from_slice(&sr.se);
+    }
+
+    Shutdown::from_frame(&endpoint.recv()?)?;
     Ok(PartyResult { beta, se })
 }

@@ -8,7 +8,12 @@
 //! - **Layer 3 (this crate)** — the multi-party *coordinator*: party and
 //!   leader state machines ([`coordinator`]), an SMC substrate ([`mpc`]),
 //!   byte-metered transports ([`net`]), and the high-level scan engine
-//!   ([`scan`]).
+//!   ([`scan`]). Scans stream over a **variant-shard pipeline**
+//!   ([`scan::ShardPlan`], [`scan::ScanConfig::shard_m`]): each shard is
+//!   one secure-sum round of `O(K·width)` bytes, parties compress shard
+//!   `s+1` while the leader combines shard `s`, and the classic
+//!   single-shot protocol is the degenerate one-shard plan. Results are
+//!   bit-identical across shard widths.
 //! - **Layer 2** — a JAX model (`python/compile/model.py`) computing the
 //!   compressed sufficient statistics and the Lemma 3.1 epilogue, lowered
 //!   once to HLO text artifacts.

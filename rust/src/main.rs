@@ -71,6 +71,7 @@ fn scan_command() -> Command {
         .opt("backend", "masked", "SMC backend: plaintext|masked|shamir")
         .opt("seed", "7", "rng seed")
         .opt("block-m", "256", "variant block width")
+        .opt("shard-m", "0", "variant shard width for the streaming protocol (0 = single shot)")
         .opt("transport", "inproc", "inproc|tcp")
         .opt("report", "", "write a JSON report to this path")
         .flag("artifacts", "use the AOT artifact runtime for compression")
@@ -97,6 +98,7 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     cfg.scan.backend = Backend::parse(a.get("backend").unwrap(), parties)?;
     cfg.seed = a.get_u64("seed")?;
     cfg.scan.block_m = a.get_usize("block-m")?;
+    cfg.scan.shard_m = a.get_usize("shard-m")?;
     cfg.transport_tcp = a.get("transport") == Some("tcp");
     if a.flag("artifacts") {
         cfg.scan.use_artifacts = true;
@@ -127,11 +129,17 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     println!("variants (M)      {m}");
     println!("covariates (K)    {}", cohort.k());
     println!("backend           {}", cfg.scan.backend.name());
+    println!(
+        "shards            {} (width {})",
+        res.metrics.shards,
+        if cfg.scan.shard_m == 0 { m } else { cfg.scan.shard_m }
+    );
     println!("compress wall     {}", human_secs(res.metrics.compress_wall_s));
     println!("combine           {}", human_secs(res.metrics.combine_s));
     println!("total             {}", human_secs(res.metrics.total_s));
     println!("variants/sec      {:.0}", m as f64 / res.metrics.total_s);
     println!("inter-party bytes {}", human_bytes(res.metrics.bytes_total));
+    println!("peak round bytes  {}", human_bytes(res.metrics.bytes_max_round));
     println!(
         "bytes/variant     {:.1}",
         res.metrics.bytes_total as f64 / m as f64
@@ -159,6 +167,8 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
                 .set("compress_wall_s", res.metrics.compress_wall_s)
                 .set("combine_s", res.metrics.combine_s)
                 .set("total_s", res.metrics.total_s)
+                .set("shards", res.metrics.shards)
+                .set("bytes_max_round", res.metrics.bytes_max_round)
                 .set("n_hits", hits.len())
                 .set("min_p", res.output.min_p_value().unwrap_or(f64::NAN));
             std::fs::write(path, rep.to_pretty())?;

@@ -1,0 +1,390 @@
+//! Message codec: one field-level description per protocol message,
+//! many encodings.
+//!
+//! Protocol messages used to hand-roll `Frame::put_*` writers and
+//! `reader()` parsers in pairs; every new message doubled the ad-hoc
+//! serialization surface. Here a message implements [`WireMessage`] once
+//! — a tag plus a flat field walk through a [`FieldSink`]/[`FieldSource`]
+//! — and a [`Codec`] turns that description into bytes:
+//!
+//! - [`Codec::Binary`] — the production wire format: fields in walk
+//!   order through the [`Frame`] payload helpers, bit-exact and byte-
+//!   metered (identical across in-proc and TCP transports).
+//! - [`Codec::JsonDebug`] — a lossless JSON rendering (scalars as
+//!   decimal strings, floats via Rust's shortest-round-trip formatting,
+//!   bytes as hex) for protocol debugging and transcript inspection.
+//!   Never used on the hot path; round-trips exactly.
+//!
+//! Field names only exist in the JSON encoding; the binary codec ignores
+//! them, so naming costs nothing on the wire.
+
+use super::frame::{Frame, PayloadReader};
+use crate::util::json::Json;
+
+/// Write-side field walk: a message describes its payload as a sequence
+/// of named primitive fields.
+pub trait FieldSink {
+    fn u64(&mut self, name: &'static str, v: u64);
+    fn u64s(&mut self, name: &'static str, v: &[u64]);
+    fn f64s(&mut self, name: &'static str, v: &[f64]);
+    fn bytes(&mut self, name: &'static str, v: &[u8]);
+}
+
+/// Read-side field walk, mirroring [`FieldSink`] in the same order.
+pub trait FieldSource {
+    fn u64(&mut self, name: &'static str) -> anyhow::Result<u64>;
+    fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>>;
+    fn f64s(&mut self, name: &'static str) -> anyhow::Result<Vec<f64>>;
+    fn bytes(&mut self, name: &'static str) -> anyhow::Result<Vec<u8>>;
+}
+
+/// A protocol message: a frame tag plus a symmetric field walk.
+/// `write_fields` and `read_fields` must visit the same fields in the
+/// same order — the round-trip tests in `coordinator::messages` hold
+/// every implementation to that.
+pub trait WireMessage: Sized {
+    const TAG: u32;
+    /// Human-readable name (error messages, JSON debug encoding).
+    const NAME: &'static str;
+
+    fn write_fields<S: FieldSink>(&self, sink: &mut S);
+    fn read_fields<S: FieldSource>(source: &mut S) -> anyhow::Result<Self>;
+
+    /// Encode with the production binary codec.
+    fn to_frame(&self) -> Frame {
+        Codec::Binary.encode(self)
+    }
+
+    /// Decode from a frame (binary codec), checking the tag.
+    fn from_frame(f: &Frame) -> anyhow::Result<Self> {
+        Codec::Binary.decode(f)
+    }
+}
+
+/// Available frame encodings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Tagged little-endian binary (the wire format).
+    #[default]
+    Binary,
+    /// Lossless JSON text payload, for debugging only.
+    JsonDebug,
+}
+
+impl Codec {
+    /// Encode a message into a frame with this codec.
+    pub fn encode<M: WireMessage>(&self, m: &M) -> Frame {
+        match self {
+            Codec::Binary => {
+                let mut sink = BinarySink { f: Frame::new(M::TAG) };
+                m.write_fields(&mut sink);
+                sink.f
+            }
+            Codec::JsonDebug => {
+                let mut sink = JsonSink { fields: Vec::new() };
+                m.write_fields(&mut sink);
+                let mut o = Json::obj();
+                o.set("msg", M::NAME).set("fields", Json::Arr(sink.fields));
+                let mut f = Frame::new(M::TAG);
+                f.put_bytes(o.to_string().as_bytes());
+                f
+            }
+        }
+    }
+
+    /// Decode a message from a frame with this codec, checking the tag.
+    pub fn decode<M: WireMessage>(&self, f: &Frame) -> anyhow::Result<M> {
+        anyhow::ensure!(
+            f.tag == M::TAG,
+            "expected {} (tag {}), got tag {}",
+            M::NAME,
+            M::TAG,
+            f.tag
+        );
+        match self {
+            Codec::Binary => {
+                let mut src = BinarySource { r: f.reader() };
+                M::read_fields(&mut src)
+            }
+            Codec::JsonDebug => {
+                let text = String::from_utf8(f.reader().bytes()?)
+                    .map_err(|_| anyhow::anyhow!("JSON debug payload not utf-8"))?;
+                let v = Json::parse(&text)?;
+                let name = v.req_str("msg")?;
+                anyhow::ensure!(name == M::NAME, "expected {} message, got {name}", M::NAME);
+                let fields = v.req_arr("fields")?;
+                let mut src = JsonSource { fields, pos: 0 };
+                M::read_fields(&mut src)
+            }
+        }
+    }
+
+    /// Render a message as its JSON debug text (for logs).
+    pub fn debug_string<M: WireMessage>(m: &M) -> String {
+        let f = Codec::JsonDebug.encode(m);
+        let mut r = f.reader();
+        String::from_utf8(r.bytes().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+// ---- binary codec ----
+
+struct BinarySink {
+    f: Frame,
+}
+
+impl FieldSink for BinarySink {
+    fn u64(&mut self, _name: &'static str, v: u64) {
+        self.f.put_u64(v);
+    }
+    fn u64s(&mut self, _name: &'static str, v: &[u64]) {
+        self.f.put_u64_slice(v);
+    }
+    fn f64s(&mut self, _name: &'static str, v: &[f64]) {
+        self.f.put_f64_slice(v);
+    }
+    fn bytes(&mut self, _name: &'static str, v: &[u8]) {
+        self.f.put_bytes(v);
+    }
+}
+
+struct BinarySource<'a> {
+    r: PayloadReader<'a>,
+}
+
+impl FieldSource for BinarySource<'_> {
+    fn u64(&mut self, name: &'static str) -> anyhow::Result<u64> {
+        self.r.u64().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
+    }
+    fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>> {
+        self.r.u64_vec().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
+    }
+    fn f64s(&mut self, name: &'static str) -> anyhow::Result<Vec<f64>> {
+        self.r.f64_vec().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
+    }
+    fn bytes(&mut self, name: &'static str) -> anyhow::Result<Vec<u8>> {
+        self.r.bytes().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
+    }
+}
+
+// ---- JSON debug codec ----
+//
+// Lossless by construction: u64 as decimal strings (JSON numbers are
+// f64 and would truncate), f64 via Rust's shortest round-trip `{:?}`
+// formatting, bytes as lowercase hex.
+
+fn f64_to_json(v: f64) -> Json {
+    Json::Str(format!("{v:?}"))
+}
+
+fn f64_from_json(j: &Json) -> anyhow::Result<f64> {
+    let s = j.as_str().ok_or_else(|| anyhow::anyhow!("expected float string"))?;
+    s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad float `{s}`"))
+}
+
+struct JsonSink {
+    /// `[name, value]` pairs in walk order (an array, not an object —
+    /// repeated field names are legal in the walk).
+    fields: Vec<Json>,
+}
+
+impl JsonSink {
+    fn push(&mut self, name: &'static str, value: Json) {
+        self.fields.push(Json::Arr(vec![Json::Str(name.to_string()), value]));
+    }
+}
+
+impl FieldSink for JsonSink {
+    fn u64(&mut self, name: &'static str, v: u64) {
+        self.push(name, Json::Str(v.to_string()));
+    }
+    fn u64s(&mut self, name: &'static str, v: &[u64]) {
+        self.push(name, Json::Arr(v.iter().map(|x| Json::Str(x.to_string())).collect()));
+    }
+    fn f64s(&mut self, name: &'static str, v: &[f64]) {
+        self.push(name, Json::Arr(v.iter().map(|&x| f64_to_json(x)).collect()));
+    }
+    fn bytes(&mut self, name: &'static str, v: &[u8]) {
+        let hex: String = v.iter().map(|b| format!("{b:02x}")).collect();
+        self.push(name, Json::Str(hex));
+    }
+}
+
+struct JsonSource<'a> {
+    fields: &'a [Json],
+    pos: usize,
+}
+
+impl JsonSource<'_> {
+    fn next(&mut self, name: &'static str) -> anyhow::Result<&Json> {
+        let entry = self
+            .fields
+            .get(self.pos)
+            .ok_or_else(|| anyhow::anyhow!("missing field {name}"))?;
+        self.pos += 1;
+        let pair = entry
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("field entry for {name} not a pair"))?;
+        anyhow::ensure!(pair.len() == 2, "field entry for {name} not a pair");
+        let got = pair[0]
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field name for {name} not a string"))?;
+        anyhow::ensure!(got == name, "expected field {name}, found {got}");
+        Ok(&pair[1])
+    }
+}
+
+impl FieldSource for JsonSource<'_> {
+    fn u64(&mut self, name: &'static str) -> anyhow::Result<u64> {
+        let v = self.next(name)?;
+        let s = v.as_str().ok_or_else(|| anyhow::anyhow!("field {name} not a string"))?;
+        s.parse::<u64>().map_err(|_| anyhow::anyhow!("field {name}: bad u64 `{s}`"))
+    }
+    fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>> {
+        let v = self.next(name)?;
+        let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("field {name} not an array"))?;
+        arr.iter()
+            .map(|j| {
+                let s = j.as_str().ok_or_else(|| anyhow::anyhow!("field {name}: non-string"))?;
+                s.parse::<u64>().map_err(|_| anyhow::anyhow!("field {name}: bad u64 `{s}`"))
+            })
+            .collect()
+    }
+    fn f64s(&mut self, name: &'static str) -> anyhow::Result<Vec<f64>> {
+        let v = self.next(name)?;
+        let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("field {name} not an array"))?;
+        arr.iter().map(f64_from_json).collect()
+    }
+    fn bytes(&mut self, name: &'static str) -> anyhow::Result<Vec<u8>> {
+        let v = self.next(name)?;
+        let s = v.as_str().ok_or_else(|| anyhow::anyhow!("field {name} not a string"))?;
+        anyhow::ensure!(s.len() % 2 == 0, "field {name}: odd hex length");
+        // byte-wise (not char-wise) so malformed multi-byte input errors
+        // instead of panicking on a char boundary
+        fn nibble(b: u8) -> Option<u8> {
+            match b {
+                b'0'..=b'9' => Some(b - b'0'),
+                b'a'..=b'f' => Some(b - b'a' + 10),
+                b'A'..=b'F' => Some(b - b'A' + 10),
+                _ => None,
+            }
+        }
+        s.as_bytes()
+            .chunks_exact(2)
+            .map(|c| {
+                match (nibble(c[0]), nibble(c[1])) {
+                    (Some(hi), Some(lo)) => Ok(hi << 4 | lo),
+                    _ => Err(anyhow::anyhow!("field {name}: bad hex")),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Probe {
+        a: u64,
+        xs: Vec<u64>,
+        fs: Vec<f64>,
+        blob: Vec<u8>,
+    }
+
+    impl WireMessage for Probe {
+        const TAG: u32 = 900;
+        const NAME: &'static str = "PROBE";
+
+        fn write_fields<S: FieldSink>(&self, s: &mut S) {
+            s.u64("a", self.a);
+            s.u64s("xs", &self.xs);
+            s.f64s("fs", &self.fs);
+            s.bytes("blob", &self.blob);
+        }
+
+        fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+            Ok(Probe {
+                a: s.u64("a")?,
+                xs: s.u64s("xs")?,
+                fs: s.f64s("fs")?,
+                blob: s.bytes("blob")?,
+            })
+        }
+    }
+
+    fn probe() -> Probe {
+        Probe {
+            a: u64::MAX,
+            xs: vec![0, 1, u64::MAX - 1],
+            fs: vec![0.1, -1.5e300, f64::NAN, f64::INFINITY, -0.0],
+            blob: vec![0x00, 0xff, 0x7f],
+        }
+    }
+
+    fn probes_equal(a: &Probe, b: &Probe) -> bool {
+        a.a == b.a
+            && a.xs == b.xs
+            && a.blob == b.blob
+            && a.fs.len() == b.fs.len()
+            && a.fs.iter().zip(&b.fs).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let p = probe();
+        let f = Codec::Binary.encode(&p);
+        assert_eq!(f.tag, 900);
+        let q: Probe = Codec::Binary.decode(&f).unwrap();
+        assert!(probes_equal(&p, &q));
+    }
+
+    #[test]
+    fn binary_matches_hand_rolled_frame() {
+        // The codec must produce exactly the bytes the old put_* code
+        // produced — byte counts are part of the E4 measurements.
+        let p = probe();
+        let via_codec = Codec::Binary.encode(&p);
+        let mut by_hand = Frame::new(900);
+        by_hand.put_u64(p.a).put_u64_slice(&p.xs).put_f64_slice(&p.fs).put_bytes(&p.blob);
+        assert_eq!(via_codec, by_hand);
+    }
+
+    #[test]
+    fn json_debug_roundtrip_is_lossless() {
+        let p = probe();
+        let f = Codec::JsonDebug.encode(&p);
+        let q: Probe = Codec::JsonDebug.decode(&f).unwrap();
+        assert!(probes_equal(&p, &q), "{:?} vs {:?}", p, q);
+        let text = Codec::debug_string(&p);
+        assert!(text.contains("\"PROBE\""));
+        assert!(text.contains("blob"));
+    }
+
+    #[test]
+    fn wrong_tag_rejected() {
+        let mut f = Codec::Binary.encode(&probe());
+        f.tag = 901;
+        assert!(Codec::Binary.decode::<Probe>(&f).is_err());
+        assert!(Probe::from_frame(&f).is_err());
+    }
+
+    #[test]
+    fn codecs_do_not_cross_decode() {
+        let p = probe();
+        let bin = Codec::Binary.encode(&p);
+        assert!(Codec::JsonDebug.decode::<Probe>(&bin).is_err());
+        let js = Codec::JsonDebug.encode(&p);
+        assert!(probes_equal(&p, &Codec::JsonDebug.decode::<Probe>(&js).unwrap()));
+    }
+
+    #[test]
+    fn truncated_binary_names_the_field() {
+        let p = probe();
+        let mut f = Codec::Binary.encode(&p);
+        f.payload.truncate(4);
+        let err = format!("{:#}", Codec::Binary.decode::<Probe>(&f).unwrap_err());
+        assert!(err.contains("field a") || err.contains("field xs"), "{err}");
+    }
+}

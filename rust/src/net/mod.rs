@@ -6,12 +6,17 @@
 //! transports are in-process channels (default, used by benches for
 //! deterministic timing) and localhost TCP (`--transport tcp`, proving
 //! the protocol is genuinely message-passing). Every send is counted by
-//! a shared [`ByteMeter`].
+//! a shared [`ByteMeter`]. Protocol messages describe their payload once
+//! through the codec layer ([`WireMessage`] / [`Codec`]), which renders
+//! to the binary wire format (or a lossless JSON-debug form for
+//! transcripts).
 
+mod codec;
 mod frame;
 mod transport;
 mod meter;
 
-pub use frame::{Frame, FrameReader, FrameWriter};
+pub use codec::{Codec, FieldSink, FieldSource, WireMessage};
+pub use frame::{Frame, FrameReader, FrameWriter, PayloadReader};
 pub use meter::ByteMeter;
 pub use transport::{duplex_pair, tcp_pair, Endpoint};

@@ -1,0 +1,64 @@
+//! Stub artifact engine, compiled when the `xla-runtime` feature is off.
+//!
+//! Presents the same API as the real PJRT-backed engine so callers,
+//! benches, and tests compile unchanged; `load` always fails with an
+//! explanatory error, and every caller already treats a failed load as
+//! "artifacts unavailable — use the pure-Rust compute path".
+
+use super::manifest::Manifest;
+use crate::linalg::Matrix;
+use crate::scan::CompressedParty;
+use crate::stats::AssocResult;
+use std::path::Path;
+
+/// Artifact engine stub (build lacks the `xla-runtime` feature).
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails: this build has no PJRT client. The manifest is
+    /// still validated first so configuration errors surface the same
+    /// way in both builds.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let _manifest = Manifest::load(dir)?;
+        anyhow::bail!(
+            "artifact runtime unavailable: dash was built without the \
+             `xla-runtime` feature (rebuild with `--features xla-runtime` \
+             after adding the `xla` crate to rust/Cargo.toml)"
+        )
+    }
+
+    pub fn entry_count(&self) -> usize {
+        0
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unreachable in practice — `load` never returns an `Engine`.
+    pub fn compress_party(
+        &self,
+        _y: &[f64],
+        _c: &Matrix,
+        _x: &Matrix,
+    ) -> anyhow::Result<CompressedParty> {
+        anyhow::bail!("artifact runtime unavailable (xla-runtime feature off)")
+    }
+
+    /// Unreachable in practice — `load` never returns an `Engine`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scan_stats(
+        &self,
+        _n: usize,
+        _k: usize,
+        _yty: f64,
+        _xty: &[f64],
+        _xtx: &[f64],
+        _qty: &[f64],
+        _qtx: &Matrix,
+    ) -> anyhow::Result<AssocResult> {
+        anyhow::bail!("artifact runtime unavailable (xla-runtime feature off)")
+    }
+}

@@ -18,8 +18,23 @@
 //!
 //! The wrappers are `!Send` (PJRT pointers) — each party thread owns its
 //! own [`Engine`], mirroring the one-process-per-party deployment.
+//!
+//! ## Feature gating
+//!
+//! The real engine needs the `xla` native bindings, which cannot be
+//! vendored. It compiles only with `--features xla-runtime` (after adding
+//! the `xla` crate to `rust/Cargo.toml` by hand). Without the feature a
+//! stub [`Engine`] with the same API is compiled whose `load` always
+//! errors — callers already treat a failed load as "artifacts
+//! unavailable, use the pure-Rust compute path", so the whole pipeline
+//! (including the sharded scan) works in either build.
 
 mod manifest;
+
+#[cfg(feature = "xla-runtime")]
+mod engine;
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "engine_stub.rs"]
 mod engine;
 
 pub use engine::Engine;

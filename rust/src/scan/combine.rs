@@ -11,8 +11,16 @@
 //!
 //! `Auto` picks TSQR when per-party factors are available (plaintext
 //! mode) and Cholesky otherwise.
+//!
+//! The stage is split for the sharded streaming pipeline: [`combine_base`]
+//! factorizes the covariate block once into a [`CombineContext`]
+//! (`O(K³)`), and [`combine_shard`] runs the Lemma 3.1 epilogue on one
+//! shard's `O(K·width)` sums. Because the epilogue is per-variant, a
+//! shard-by-shard combine is bit-identical to the single-shot
+//! [`combine_compressed`] — which is itself now implemented as the
+//! one-shard degenerate case.
 
-use super::compressed::{AggregateSums, CompressedParty};
+use super::compressed::{AggregateSums, BaseSums, CompressedParty, ShardSums};
 use crate::linalg::{cholesky_upper, solve_rt_b, tsqr_stack_r, Matrix};
 use crate::stats::{
     fit_from_sufficient, scan_stats_from_projected, AssocResult, RegressionFit, ScanStats,
@@ -64,15 +72,28 @@ impl ScanOutput {
     }
 }
 
-/// Combine aggregate sums (and optionally per-party `R_p` factors for the
-/// TSQR path) into exact scan statistics.
-pub fn combine_compressed(
-    agg: &AggregateSums,
+/// The factorized covariate block, reused across every shard of a scan:
+/// everything the Lemma 3.1 epilogue needs besides a shard's own sums.
+#[derive(Clone, Debug)]
+pub struct CombineContext {
+    pub n: usize,
+    pub k: usize,
+    pub yty: f64,
+    /// R factor of the stacked covariate matrix
+    pub r: Matrix,
+    /// Qᵀy = R⁻ᵀ(Cᵀy), length K
+    pub qt_y: Vec<f64>,
+    /// covariate-only fit (γ̂ etc.), computed once per session
+    pub covariate_fit: RegressionFit,
+}
+
+/// Factorize the aggregate covariate block — `O(K³)`, once per scan.
+pub fn combine_base(
+    base: &BaseSums,
     party_rs: Option<&[Matrix]>,
     opts: CombineOptions,
-) -> anyhow::Result<ScanOutput> {
-    let k = agg.cty.len();
-    let m = agg.xty.len();
+) -> anyhow::Result<CombineContext> {
+    let k = base.cty.len();
     let method = match opts.r_method {
         RFactorMethod::Auto => {
             if party_rs.is_some() {
@@ -89,27 +110,59 @@ pub fn combine_compressed(
                 .ok_or_else(|| anyhow::anyhow!("TSQR requires per-party R factors"))?;
             tsqr_stack_r(rs)
         }
-        RFactorMethod::Cholesky => cholesky_upper(&agg.ctc)?,
+        RFactorMethod::Cholesky => cholesky_upper(&base.ctc)?,
         RFactorMethod::Auto => unreachable!(),
     };
 
-    // Projection through Qᵀ without Q: Qᵀy = R⁻ᵀ(Cᵀy), QᵀX = R⁻ᵀ(CᵀX).
-    let qt_y = solve_rt_b(&r, &Matrix::from_vec(k, 1, agg.cty.clone())).data;
-    let qt_x = solve_rt_b(&r, &agg.ctx);
+    // Projection through Qᵀ without Q: Qᵀy = R⁻ᵀ(Cᵀy).
+    let qt_y = solve_rt_b(&r, &Matrix::from_vec(k, 1, base.cty.clone())).data;
+    let covariate_fit = fit_from_sufficient(base.n, base.yty, &base.cty, &base.ctc)?;
 
-    let assoc = scan_stats_from_projected(&ScanStats {
-        n: agg.n,
-        k,
-        yty: agg.yty,
-        xty: agg.xty.clone(),
-        xtx: agg.xtx.clone(),
-        qt_y,
+    Ok(CombineContext { n: base.n, k, yty: base.yty, r, qt_y, covariate_fit })
+}
+
+/// Lemma 3.1 epilogue on one shard's aggregate sums — `O(K²·width)`,
+/// per-variant independent, so shard results concatenate into exactly
+/// the single-shot answer.
+pub fn combine_shard(ctx: &CombineContext, shard: &ShardSums) -> AssocResult {
+    combine_shard_parts(ctx, &shard.xty, &shard.xtx, &shard.ctx)
+}
+
+/// Borrowed-parts form of [`combine_shard`], so the degenerate full-M
+/// path can feed the aggregate's own slices without cloning them into a
+/// `ShardSums` first.
+fn combine_shard_parts(
+    cx: &CombineContext,
+    xty: &[f64],
+    xtx: &[f64],
+    ctx_cols: &Matrix,
+) -> AssocResult {
+    // QᵀX = R⁻ᵀ(CᵀX), columns of this shard only.
+    let qt_x = solve_rt_b(&cx.r, ctx_cols);
+    scan_stats_from_projected(&ScanStats {
+        n: cx.n,
+        k: cx.k,
+        yty: cx.yty,
+        xty: xty.to_vec(),
+        xtx: xtx.to_vec(),
+        qt_y: cx.qt_y.clone(),
         qt_x,
-    });
+    })
+}
 
-    let covariate_fit = fit_from_sufficient(agg.n, agg.yty, &agg.cty, &agg.ctc)?;
-
-    Ok(ScanOutput { assoc, covariate_fit, n: agg.n, k, m })
+/// Combine aggregate sums (and optionally per-party `R_p` factors for the
+/// TSQR path) into exact scan statistics — the one-shard degenerate case
+/// of the streaming pipeline.
+pub fn combine_compressed(
+    agg: &AggregateSums,
+    party_rs: Option<&[Matrix]>,
+    opts: CombineOptions,
+) -> anyhow::Result<ScanOutput> {
+    let k = agg.cty.len();
+    let m = agg.xty.len();
+    let cx = combine_base(&agg.base(), party_rs, opts)?;
+    let assoc = combine_shard_parts(&cx, &agg.xty, &agg.xtx, &agg.ctx);
+    Ok(ScanOutput { assoc, covariate_fit: cx.covariate_fit, n: agg.n, k, m })
 }
 
 /// §2 only (no transient covariates): multi-party plain linear regression
@@ -136,6 +189,7 @@ mod tests {
     use super::*;
     use crate::linalg::rel_err;
     use crate::scan::compressed::{compress_party, flatten_for_sum, unflatten_sum};
+    use crate::scan::ShardPlan;
     use crate::util::rng::Rng;
 
     fn party(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
@@ -197,6 +251,34 @@ mod tests {
                 "{method:?} beta"
             );
             assert!(rel_err(&got.assoc.se, &oracle.assoc.se) < 1e-9, "{method:?} se");
+        }
+    }
+
+    #[test]
+    fn shard_by_shard_combine_is_bit_identical() {
+        let (y, c, x) = party(90, 4, 21, 148);
+        let cp = compress_party(&y, &c, &x, 21, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let single = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
+
+        let ctx = combine_base(&agg.base(), None, CombineOptions::default()).unwrap();
+        let plan = ShardPlan::new(21, 6); // 4 shards, ragged tail
+        let mut beta = Vec::new();
+        let mut se = Vec::new();
+        for r in plan.ranges() {
+            let sums = ShardSums {
+                xty: agg.xty[r.j0..r.j1].to_vec(),
+                xtx: agg.xtx[r.j0..r.j1].to_vec(),
+                ctx: agg.ctx.col_slice(r.j0, r.j1),
+            };
+            let part = combine_shard(&ctx, &sums);
+            beta.extend_from_slice(&part.beta);
+            se.extend_from_slice(&part.se);
+        }
+        // per-variant epilogue + column-wise triangular solve → bit-equal
+        for j in 0..21 {
+            assert_eq!(beta[j].to_bits(), single.assoc.beta[j].to_bits(), "beta[{j}]");
+            assert_eq!(se[j].to_bits(), single.assoc.se[j].to_bits(), "se[{j}]");
         }
     }
 

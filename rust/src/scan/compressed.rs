@@ -8,6 +8,19 @@
 //! — `O(N_p K (K + M))` work, all local plaintext. The `M`-sized pieces
 //! are computed in parallel over variant blocks ([`parallel_for_chunks`]),
 //! which is the paper's `O(NKM/C)` term.
+//!
+//! The stage is split to serve the sharded streaming pipeline
+//! ([`crate::scan::ShardPlan`]):
+//!
+//! - [`compress_base`] — the variant-independent part
+//!   (`N, yᵀy, Cᵀy, CᵀC, R_p`), computed once per session;
+//! - [`compress_variant_block`] — the `[j0, j1)` column slice of the
+//!   variant-sized statistics (`Xᵀy, X·X, CᵀX`), computed once per shard
+//!   with `O(K·width)` memory.
+//!
+//! [`compress_party`] composes the two over the full column range and is
+//! bit-identical to compressing shard-by-shard and concatenating (per-
+//! variant sums never mix across columns).
 
 use crate::linalg::{householder_qr, Matrix};
 use crate::util::threadpool::parallel_for_chunks;
@@ -41,52 +54,202 @@ impl CompressedParty {
     pub fn m(&self) -> usize {
         self.xty.len()
     }
+
+    /// The variant-independent part of these statistics.
+    pub fn base(&self) -> BaseStats {
+        BaseStats {
+            n: self.n,
+            yty: self.yty,
+            cty: self.cty.clone(),
+            ctc: self.ctc.clone(),
+            r: self.r.clone(),
+        }
+    }
+
+    /// Column slice `[j0, j1)` of the variant-sized statistics — used by
+    /// compute engines that materialize all `M` columns at once (the AOT
+    /// artifact path) to feed the sharded protocol.
+    pub fn variant_block(&self, j0: usize, j1: usize) -> VariantBlockStats {
+        assert!(j0 <= j1 && j1 <= self.m(), "bad column range {j0}..{j1}");
+        VariantBlockStats {
+            j0,
+            xty: self.xty[j0..j1].to_vec(),
+            xtx: self.xtx[j0..j1].to_vec(),
+            ctx: self.ctx.col_slice(j0, j1),
+        }
+    }
 }
 
-/// Compress one party's data (pure-Rust reference path).
+/// Variant-independent compressed statistics (`O(K²)` floats).
+#[derive(Clone, Debug)]
+pub struct BaseStats {
+    pub n: usize,
+    pub yty: f64,
+    /// Cᵀy, length K
+    pub cty: Vec<f64>,
+    /// CᵀC, K × K
+    pub ctc: Matrix,
+    /// R factor of QR(C_p) (plaintext/TSQR path only)
+    pub r: Matrix,
+}
+
+impl BaseStats {
+    pub fn k(&self) -> usize {
+        self.cty.len()
+    }
+
+    /// Flatten for secure summation: `[n, yᵀy, Cᵀy(K), CᵀC(K²)]`.
+    /// (`R_p` is deliberately excluded — it is never securely summed.)
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(base_flat_len(self.k()));
+        v.push(self.n as f64);
+        v.push(self.yty);
+        v.extend_from_slice(&self.cty);
+        v.extend_from_slice(&self.ctc.data);
+        debug_assert_eq!(v.len(), base_flat_len(self.k()));
+        v
+    }
+}
+
+/// Length of the flattened base vector for `K` covariates.
+pub fn base_flat_len(k: usize) -> usize {
+    2 + k + k * k
+}
+
+/// Aggregate of the variant-independent statistics across parties.
+#[derive(Clone, Debug)]
+pub struct BaseSums {
+    pub n: usize,
+    pub yty: f64,
+    pub cty: Vec<f64>,
+    pub ctc: Matrix,
+}
+
+/// Inverse of [`BaseStats::flatten`] applied to a summed vector.
+pub fn unflatten_base(k: usize, v: &[f64]) -> anyhow::Result<BaseSums> {
+    anyhow::ensure!(v.len() == base_flat_len(k), "base flat length mismatch");
+    Ok(BaseSums {
+        n: v[0].round() as usize,
+        yty: v[1],
+        cty: v[2..2 + k].to_vec(),
+        ctc: Matrix::from_vec(k, k, v[2 + k..].to_vec()),
+    })
+}
+
+/// One shard's slice of the variant-sized statistics (`O(K·width)`).
+#[derive(Clone, Debug)]
+pub struct VariantBlockStats {
+    /// first absolute variant column covered by this block
+    pub j0: usize,
+    /// Xᵀy for columns `[j0, j0+width)`
+    pub xty: Vec<f64>,
+    /// per-variant X·X for the same columns
+    pub xtx: Vec<f64>,
+    /// CᵀX, K × width
+    pub ctx: Matrix,
+}
+
+impl VariantBlockStats {
+    pub fn width(&self) -> usize {
+        self.xty.len()
+    }
+
+    /// Flatten for secure summation: `[Xᵀy(w), X·X(w), CᵀX(K·w)]`.
+    pub fn flatten(&self) -> Vec<f64> {
+        let k = self.ctx.rows;
+        let mut v = Vec::with_capacity(shard_flat_len(k, self.width()));
+        v.extend_from_slice(&self.xty);
+        v.extend_from_slice(&self.xtx);
+        v.extend_from_slice(&self.ctx.data);
+        debug_assert_eq!(v.len(), shard_flat_len(k, self.width()));
+        v
+    }
+}
+
+/// Length of the flattened shard vector for `K` covariates and shard
+/// width `w`.
+pub fn shard_flat_len(k: usize, w: usize) -> usize {
+    w * (2 + k)
+}
+
+/// Aggregate of one shard's variant statistics across parties.
+#[derive(Clone, Debug)]
+pub struct ShardSums {
+    pub xty: Vec<f64>,
+    pub xtx: Vec<f64>,
+    /// CᵀX, K × width
+    pub ctx: Matrix,
+}
+
+/// Inverse of [`VariantBlockStats::flatten`] applied to a summed vector.
+pub fn unflatten_shard(k: usize, w: usize, v: &[f64]) -> anyhow::Result<ShardSums> {
+    anyhow::ensure!(v.len() == shard_flat_len(k, w), "shard flat length mismatch");
+    Ok(ShardSums {
+        xty: v[..w].to_vec(),
+        xtx: v[w..2 * w].to_vec(),
+        ctx: Matrix::from_vec(k, w, v[2 * w..].to_vec()),
+    })
+}
+
+/// Compress the variant-independent statistics of one party.
+pub fn compress_base(y: &[f64], c: &Matrix) -> BaseStats {
+    let n = y.len();
+    assert_eq!(c.rows, n, "C rows != N");
+    BaseStats {
+        n,
+        yty: y.iter().map(|v| v * v).sum(),
+        cty: c.t_matvec(y),
+        ctc: c.gram(),
+        r: householder_qr(c).r,
+    }
+}
+
+/// Compress the variant statistics for columns `[j0, j1)` of `X`
+/// (pure-Rust reference path).
 ///
 /// `block_m` controls the variant-block width for parallelism; `threads`
-/// caps the worker count (None = all cores).
-pub fn compress_party(
+/// caps the worker count (None = all cores). Results are bit-identical
+/// to the corresponding slice of a full-range compression: each output
+/// column is a sum over samples in a fixed order, independent of how the
+/// columns are chunked.
+pub fn compress_variant_block(
     y: &[f64],
     c: &Matrix,
     x: &Matrix,
+    j0: usize,
+    j1: usize,
     block_m: usize,
     threads: Option<usize>,
-) -> CompressedParty {
+) -> VariantBlockStats {
     let n = y.len();
     assert_eq!(c.rows, n, "C rows != N");
     assert_eq!(x.rows, n, "X rows != N");
+    assert!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
     let k = c.cols;
-    let m = x.cols;
+    let w = j1 - j0;
 
-    let yty: f64 = y.iter().map(|v| v * v).sum();
-    let cty = c.t_matvec(y);
-    let ctc = c.gram();
-    let r = householder_qr(c).r;
-
-    // M-sized pieces, blocked over variants. Each chunk accumulates into
-    // a chunk-local contiguous buffer (xty/xtx/ctx interleaved per block)
-    // and writes back once — the strided `ctx[kk·m + j]` stores of the
-    // naive loop thrash the cache at K ≥ 16 (see EXPERIMENTS.md §Perf).
-    let mut xty = vec![0.0; m];
-    let mut xtx = vec![0.0; m];
-    let mut ctx = Matrix::zeros(k, m);
+    // Blocked over variants. Each chunk accumulates into a chunk-local
+    // contiguous buffer (xty/xtx/ctx interleaved per block) and writes
+    // back once — the strided `ctx[kk·w + j]` stores of the naive loop
+    // thrash the cache at K ≥ 16 (see EXPERIMENTS.md §Perf).
+    let mut xty = vec![0.0; w];
+    let mut xtx = vec![0.0; w];
+    let mut ctx = Matrix::zeros(k, w);
     {
         // Disjoint column blocks → safe shared-mutable access.
         let xty_ptr = SendPtr(xty.as_mut_ptr());
         let xtx_ptr = SendPtr(xtx.as_mut_ptr());
         let ctx_ptr = SendPtr(ctx.data.as_mut_ptr());
-        parallel_for_chunks(m, block_m.max(1), threads, |j0, j1| {
-            let w = j1 - j0;
-            // local accumulators: [xty(w) | xtx(w) | ctx(k×w)]
-            let mut local = vec![0.0f64; w * (2 + k)];
+        parallel_for_chunks(w, block_m.max(1), threads, |b0, b1| {
+            let bw = b1 - b0;
+            // local accumulators: [xty(bw) | xtx(bw) | ctx(k×bw)]
+            let mut local = vec![0.0f64; bw * (2 + k)];
             for i in 0..n {
                 let yi = y[i];
-                let x_row = &x.row(i)[j0..j1];
+                let x_row = &x.row(i)[j0 + b0..j0 + b1];
                 let c_row = c.row(i);
-                let (xty_l, rest) = local.split_at_mut(w);
-                let (xtx_l, ctx_l) = rest.split_at_mut(w);
+                let (xty_l, rest) = local.split_at_mut(bw);
+                let (xtx_l, ctx_l) = rest.split_at_mut(bw);
                 // branch-free axpy form: one vectorizable pass per output
                 // row (beats the per-element `if xv == 0` skip even at
                 // ~50% genotype sparsity — see EXPERIMENTS.md §Perf)
@@ -95,29 +258,53 @@ pub fn compress_party(
                     xtx_l[j] += xv * xv;
                 }
                 for (kk, &cv) in c_row.iter().enumerate() {
-                    let row = &mut ctx_l[kk * w..(kk + 1) * w];
+                    let row = &mut ctx_l[kk * bw..(kk + 1) * bw];
                     for (r, &xv) in row.iter_mut().zip(x_row) {
                         *r += cv * xv;
                     }
                 }
             }
             // single write-back into the shared outputs
-            // SAFETY: columns [j0, j1) are owned by this chunk.
+            // SAFETY: columns [b0, b1) are owned by this chunk.
             unsafe {
-                for j in 0..w {
-                    *xty_ptr.at(j0 + j) = local[j];
-                    *xtx_ptr.at(j0 + j) = local[w + j];
+                for j in 0..bw {
+                    *xty_ptr.at(b0 + j) = local[j];
+                    *xtx_ptr.at(b0 + j) = local[bw + j];
                 }
                 for kk in 0..k {
-                    for j in 0..w {
-                        *ctx_ptr.at(kk * m + j0 + j) = local[(2 + kk) * w + j];
+                    for j in 0..bw {
+                        *ctx_ptr.at(kk * w + b0 + j) = local[(2 + kk) * bw + j];
                     }
                 }
             }
         });
     }
 
-    CompressedParty { n, yty, cty, ctc, r, xty, xtx, ctx }
+    VariantBlockStats { j0, xty, xtx, ctx }
+}
+
+/// Compress one party's data (pure-Rust reference path): the base stage
+/// plus the full-range variant stage — the one-shard degenerate case of
+/// the streaming pipeline.
+pub fn compress_party(
+    y: &[f64],
+    c: &Matrix,
+    x: &Matrix,
+    block_m: usize,
+    threads: Option<usize>,
+) -> CompressedParty {
+    let base = compress_base(y, c);
+    let vb = compress_variant_block(y, c, x, 0, x.cols, block_m, threads);
+    CompressedParty {
+        n: base.n,
+        yty: base.yty,
+        cty: base.cty,
+        ctc: base.ctc,
+        r: base.r,
+        xty: vb.xty,
+        xtx: vb.xtx,
+        ctx: vb.ctx,
+    }
 }
 
 struct SendPtr<T>(*mut T);
@@ -133,7 +320,8 @@ impl<T> SendPtr<T> {
 
 /// Layout of the flattened statistics vector used by the secure-sum
 /// protocol. All parties must agree on `(K, M)`; the flattening is
-/// `[n, yty, cty(K), ctc(K²), xty(M), xtx(M), ctx(K·M)]`.
+/// `[n, yty, cty(K), ctc(K²), xty(M), xtx(M), ctx(K·M)]` — i.e. the base
+/// segment followed by the single full-width shard segment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FlatLayout {
     pub k: usize,
@@ -142,11 +330,26 @@ pub struct FlatLayout {
 
 impl FlatLayout {
     pub fn len(&self) -> usize {
-        2 + self.k + self.k * self.k + 2 * self.m + self.k * self.m
+        base_flat_len(self.k) + shard_flat_len(self.k, self.m)
     }
 
     pub fn is_empty(&self) -> bool {
         false
+    }
+
+    /// Offset of the `xty` segment (== length of the base segment).
+    pub fn xty_off(&self) -> usize {
+        base_flat_len(self.k)
+    }
+
+    /// Offset of the `xtx` segment.
+    pub fn xtx_off(&self) -> usize {
+        self.xty_off() + self.m
+    }
+
+    /// Offset of the `ctx` segment (K rows × M cols, row-major).
+    pub fn ctx_off(&self) -> usize {
+        self.xtx_off() + self.m
     }
 }
 
@@ -177,6 +380,18 @@ pub struct AggregateSums {
     pub xty: Vec<f64>,
     pub xtx: Vec<f64>,
     pub ctx: Matrix,
+}
+
+impl AggregateSums {
+    /// The variant-independent part of the aggregate.
+    pub fn base(&self) -> BaseSums {
+        BaseSums {
+            n: self.n,
+            yty: self.yty,
+            cty: self.cty.clone(),
+            ctc: self.ctc.clone(),
+        }
+    }
 }
 
 /// Inverse of [`flatten_for_sum`] applied to a summed vector.
@@ -243,6 +458,50 @@ mod tests {
     }
 
     #[test]
+    fn sharded_compress_is_bit_identical_to_full() {
+        let (y, c, x) = make(50, 4, 29, 136);
+        let full = compress_party(&y, &c, &x, 7, Some(2));
+        // three ragged shards: [0,10), [10,20), [20,29)
+        for (j0, j1) in [(0usize, 10usize), (10, 20), (20, 29)] {
+            let vb = compress_variant_block(&y, &c, &x, j0, j1, 7, Some(2));
+            assert_eq!(vb.xty, full.xty[j0..j1], "xty {j0}..{j1}");
+            assert_eq!(vb.xtx, full.xtx[j0..j1], "xtx {j0}..{j1}");
+            assert_eq!(vb.ctx.data, full.ctx.col_slice(j0, j1).data, "ctx {j0}..{j1}");
+            // and the cached-engine slicing path agrees too
+            let sliced = full.variant_block(j0, j1);
+            assert_eq!(sliced.xty, vb.xty);
+            assert_eq!(sliced.ctx.data, vb.ctx.data);
+        }
+    }
+
+    #[test]
+    fn base_flatten_roundtrip() {
+        let (y, c, _) = make(40, 3, 2, 137);
+        let base = compress_base(&y, &c);
+        let flat = base.flatten();
+        assert_eq!(flat.len(), base_flat_len(3));
+        let sums = unflatten_base(3, &flat).unwrap();
+        assert_eq!(sums.n, 40);
+        assert_eq!(sums.yty, base.yty);
+        assert_eq!(sums.cty, base.cty);
+        assert_eq!(sums.ctc.data, base.ctc.data);
+        assert!(unflatten_base(4, &flat).is_err());
+    }
+
+    #[test]
+    fn shard_flatten_roundtrip() {
+        let (y, c, x) = make(30, 3, 12, 138);
+        let vb = compress_variant_block(&y, &c, &x, 4, 9, 3, Some(1));
+        let flat = vb.flatten();
+        assert_eq!(flat.len(), shard_flat_len(3, 5));
+        let sums = unflatten_shard(3, 5, &flat).unwrap();
+        assert_eq!(sums.xty, vb.xty);
+        assert_eq!(sums.xtx, vb.xtx);
+        assert_eq!(sums.ctx.data, vb.ctx.data);
+        assert!(unflatten_shard(3, 6, &flat).is_err());
+    }
+
+    #[test]
     fn sparse_zero_columns_ok() {
         let (y, c, mut x) = make(40, 3, 5, 132);
         for i in 0..40 {
@@ -264,6 +523,19 @@ mod tests {
         assert!(rel_err(&agg.cty, &cp.cty) < 1e-15);
         assert!(rel_err(&agg.ctx.data, &cp.ctx.data) < 1e-15);
         assert!(rel_err(&agg.xtx, &cp.xtx) < 1e-15);
+    }
+
+    #[test]
+    fn full_flat_is_base_then_shard_segments() {
+        // the full layout is exactly [base | xty | xtx | ctx]; the shard
+        // machinery relies on these offsets to scatter shard deltas
+        let (y, c, x) = make(35, 3, 8, 139);
+        let cp = compress_party(&y, &c, &x, 8, Some(1));
+        let (layout, flat) = flatten_for_sum(&cp);
+        assert_eq!(&flat[..layout.xty_off()], cp.base().flatten().as_slice());
+        let vb = cp.variant_block(0, 8);
+        assert_eq!(&flat[layout.xty_off()..], vb.flatten().as_slice());
+        assert_eq!(layout.ctx_off() + layout.k * layout.m, layout.len());
     }
 
     #[test]
@@ -292,5 +564,8 @@ mod tests {
     fn layout_len() {
         let l = FlatLayout { k: 3, m: 10 };
         assert_eq!(l.len(), 2 + 3 + 9 + 20 + 30);
+        assert_eq!(l.xty_off(), 14);
+        assert_eq!(l.xtx_off(), 24);
+        assert_eq!(l.ctx_off(), 34);
     }
 }

@@ -1,6 +1,25 @@
 //! The paper's algorithms, end to end: compress-within, combine-across,
 //! and the association-scan epilogue — plus the meta-analysis baseline.
 //!
+//! ## The sharded streaming pipeline
+//!
+//! Scans run as a **variant-shard pipeline**: a [`ShardPlan`] splits the
+//! `M` transient covariates into fixed-width column shards
+//! ([`ScanConfig::shard_m`]), and each stage is factored to match:
+//!
+//! - compress = [`compress_base`] (once) + [`compress_variant_block`]
+//!   (per shard, `O(K·width)` memory);
+//! - secure aggregation sums one base round plus one round per shard;
+//! - combine = [`combine_base`] (factorize once, `O(K³)`) +
+//!   [`combine_shard`] (Lemma 3.1 epilogue per shard).
+//!
+//! Parties compress shard `s+1` while the leader is still combining
+//! shard `s`, so peak payload per round and leader working memory are
+//! bounded by the shard width instead of `M`. Because every per-variant
+//! statistic is independent of how columns are chunked, the sharded scan
+//! is **bit-identical** to the single-shot scan — and the single-shot
+//! path *is* the degenerate one-shard plan (`shard_m == 0`).
+//!
 //! Two compute paths produce identical `CompressedParty` values:
 //! a pure-Rust reference path (always available; used by tests and as the
 //! plaintext baseline) and the AOT-compiled XLA path driven by
@@ -11,18 +30,23 @@ pub mod compressed;
 mod combine;
 mod meta;
 mod multitrait;
+mod shard;
 
 pub use multitrait::{
     aggregate_multi, combine_multi, compress_party_multi, MultiTraitCompressed,
 };
 
 pub use compressed::{
-    compress_party, flatten_for_sum, unflatten_sum, AggregateSums, CompressedParty, FlatLayout,
+    base_flat_len, compress_base, compress_party, compress_variant_block, flatten_for_sum,
+    shard_flat_len, unflatten_base, unflatten_shard, unflatten_sum, AggregateSums, BaseStats,
+    BaseSums, CompressedParty, FlatLayout, ShardSums, VariantBlockStats,
 };
 pub use combine::{
-    combine_compressed, combine_regression, CombineOptions, RFactorMethod, ScanOutput,
+    combine_base, combine_compressed, combine_regression, combine_shard, CombineContext,
+    CombineOptions, RFactorMethod, ScanOutput,
 };
 pub use meta::{meta_analyze, MetaResult};
+pub use shard::{ShardPlan, ShardRange};
 
 pub use crate::mpc::Backend as SmcBackend;
 
@@ -34,8 +58,13 @@ pub struct ScanConfig {
     pub frac_bits: u32,
     /// worker threads per party for the compress stage (None = auto)
     pub threads: Option<usize>,
-    /// variant-block width for the compress stage
+    /// variant-block width for the compress stage (intra-shard
+    /// parallelism granularity)
     pub block_m: usize,
+    /// variant-shard width for the streaming protocol: each shard is one
+    /// contribution round, bounding peak payload and leader memory at
+    /// `O(K·shard_m)`. `0` = single-shot (one shard spanning all of `M`).
+    pub shard_m: usize,
     /// R-factor method for the combine stage (TSQR vs Gram+Cholesky)
     pub r_method: RFactorMethod,
     /// use the AOT artifacts runtime for compression when available
@@ -51,6 +80,7 @@ impl Default for ScanConfig {
             frac_bits: 24,
             threads: None,
             block_m: 256,
+            shard_m: 0,
             r_method: RFactorMethod::Auto,
             use_artifacts: false,
             artifacts_dir: "artifacts".to_string(),

@@ -1,0 +1,132 @@
+//! Variant-shard planning for the streaming scan pipeline.
+//!
+//! A [`ShardPlan`] splits the `M` transient covariates into fixed-width
+//! column shards. The protocol runs one contribution round per shard, so
+//! peak payload and leader-side working memory are `O(K·width)` instead
+//! of `O(K·M)`, and parties can compress shard `s+1` while the leader is
+//! still combining shard `s`. `width == 0` (or `width ≥ M`) degenerates
+//! to the single-shot pipeline: exactly one shard covering all of `M`.
+
+/// Immutable split of `M` variants into fixed-width column shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    m: usize,
+    width: usize,
+}
+
+impl ShardPlan {
+    /// Plan a scan over `m` variants with shard width `width`.
+    /// `width == 0` means "no sharding": one shard spanning all of `m`.
+    pub fn new(m: usize, width: usize) -> ShardPlan {
+        let width = if width == 0 { m.max(1) } else { width };
+        ShardPlan { m, width }
+    }
+
+    /// Total variants covered by the plan.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Shard width (last shard may be narrower).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of shards (≥ 1, even for `m == 0`, so every session has at
+    /// least one contribution round and the degenerate case stays on the
+    /// same code path).
+    pub fn count(&self) -> usize {
+        self.m.div_ceil(self.width).max(1)
+    }
+
+    /// Column range of shard `s`.
+    pub fn range(&self, s: usize) -> ShardRange {
+        assert!(s < self.count(), "shard {s} out of range (count {})", self.count());
+        let j0 = s * self.width;
+        let j1 = (j0 + self.width).min(self.m);
+        ShardRange { index: s, j0, j1 }
+    }
+
+    /// Iterate all shard ranges in scan order.
+    pub fn ranges(self) -> impl Iterator<Item = ShardRange> {
+        (0..self.count()).map(move |s| self.range(s))
+    }
+}
+
+/// One shard's column range `[j0, j1)` within the full variant axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    pub index: usize,
+    pub j0: usize,
+    pub j1: usize,
+}
+
+impl ShardRange {
+    /// Number of variant columns in this shard.
+    pub fn width(&self) -> usize {
+        self.j1 - self.j0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_width_is_single_shot() {
+        let p = ShardPlan::new(1000, 0);
+        assert_eq!(p.count(), 1);
+        let r = p.range(0);
+        assert_eq!((r.j0, r.j1, r.width()), (0, 1000, 1000));
+    }
+
+    #[test]
+    fn exact_division() {
+        let p = ShardPlan::new(1024, 256);
+        assert_eq!(p.count(), 4);
+        assert_eq!(p.range(3), ShardRange { index: 3, j0: 768, j1: 1024 });
+        assert!(p.ranges().all(|r| r.width() == 256));
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let p = ShardPlan::new(1000, 300);
+        assert_eq!(p.count(), 4);
+        let last = p.range(3);
+        assert_eq!((last.j0, last.j1, last.width()), (900, 1000, 100));
+        let total: usize = p.ranges().map(|r| r.width()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn width_larger_than_m() {
+        let p = ShardPlan::new(10, 4096);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.range(0).width(), 10);
+    }
+
+    #[test]
+    fn empty_m_still_has_one_round() {
+        let p = ShardPlan::new(0, 0);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.range(0).width(), 0);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_and_ordered() {
+        let p = ShardPlan::new(77, 8);
+        let mut expect = 0;
+        for r in p.ranges() {
+            assert_eq!(r.j0, expect);
+            assert!(r.j1 > r.j0 || p.m() == 0);
+            expect = r.j1;
+        }
+        assert_eq!(expect, 77);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_shard_panics() {
+        ShardPlan::new(10, 5).range(2);
+    }
+}

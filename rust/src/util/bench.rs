@@ -146,10 +146,16 @@ impl Bench {
         let dir = std::path::Path::new("target/bench-reports");
         let _ = std::fs::create_dir_all(dir);
         let path = dir.join(format!("{}.jsonl", self.group.replace('/', "_")));
-        if let Err(e) = std::fs::write(&path, self.json_lines()) {
-            eprintln!("warn: could not write {}: {e}", path.display());
+        self.save_report_to(path.to_str().unwrap_or("bench-report.jsonl"));
+    }
+
+    /// Write the JSON-lines report to an explicit path (e.g. the
+    /// `BENCH_*.json` files consumed by EXPERIMENTS.md tooling).
+    pub fn save_report_to(&self, path: &str) {
+        if let Err(e) = std::fs::write(path, self.json_lines()) {
+            eprintln!("warn: could not write {path}: {e}");
         } else {
-            println!("report: {}", path.display());
+            println!("report: {path}");
         }
     }
 }

@@ -1,0 +1,196 @@
+//! Integration: the sharded streaming pipeline — exactness of the
+//! shard decomposition across all three MPC backends, bounded per-round
+//! communication, and transport equivalence (acceptance criteria of the
+//! shard-pipeline tentpole).
+
+use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::{ScanConfig, ShardPlan};
+
+fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_per; parties],
+        m_variants: m,
+        n_causal: 3.min(m),
+        effect_sd: 0.4,
+        fst: 0.05,
+        party_admixture: (0..parties)
+            .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
+            .collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn cfg(backend: Backend, shard_m: usize) -> ScanConfig {
+    ScanConfig { backend, shard_m, block_m: 32, threads: Some(2), ..Default::default() }
+}
+
+fn run(
+    cohort: &dash::gwas::Cohort,
+    backend: Backend,
+    shard_m: usize,
+    seed: u64,
+) -> MultiPartyScanResult {
+    run_multi_party_scan_t(cohort, &cfg(backend, shard_m), Transport::InProc, seed).unwrap()
+}
+
+/// Bit-level equality, NaN-safe (identical computations must produce
+/// identical bit patterns, including NaN payloads for collinear
+/// variants).
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for j in 0..a.len() {
+        assert_eq!(
+            a[j].to_bits(),
+            b[j].to_bits(),
+            "{what}[{j}]: {} vs {}",
+            a[j],
+            b[j]
+        );
+    }
+}
+
+/// Acceptance: a sharded scan over ≥ 4 shards produces an output
+/// identical to the single-shot path for all three backends.
+#[test]
+fn sharded_matches_single_shot_all_backends() {
+    let m = 64;
+    let width = 16; // 4 shards
+    assert_eq!(ShardPlan::new(m, width).count(), 4);
+    let cohort = generate_cohort(&spec_for(3, 90, m), 700);
+    for backend in [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }] {
+        let single = run(&cohort, backend, 0, 41);
+        let sharded = run(&cohort, backend, width, 41);
+        assert_eq!(single.metrics.shards, 1, "{backend:?}");
+        assert_eq!(sharded.metrics.shards, 4, "{backend:?}");
+        assert_bits_eq(&sharded.output.assoc.beta, &single.output.assoc.beta, "beta");
+        assert_bits_eq(&sharded.output.assoc.se, &single.output.assoc.se, "se");
+        assert_bits_eq(&sharded.output.assoc.p, &single.output.assoc.p, "p");
+        assert_eq!(sharded.output.n, single.output.n);
+        // covariate fit comes from the (identical) base round
+        assert_bits_eq(
+            &sharded.output.covariate_fit.gamma,
+            &single.output.covariate_fit.gamma,
+            "gamma",
+        );
+    }
+}
+
+/// Shard width is a pure execution parameter: any width (including a
+/// ragged tail and width > M) reproduces the same answer.
+#[test]
+fn shard_width_invariance() {
+    let m = 100;
+    let cohort = generate_cohort(&spec_for(3, 80, m), 701);
+    let baseline = run(&cohort, Backend::Masked, 0, 42);
+    for width in [7usize, 16, 33, 100, 4096] {
+        let res = run(&cohort, Backend::Masked, width, 42);
+        assert_eq!(res.metrics.shards, ShardPlan::new(m, width).count(), "width {width}");
+        assert_bits_eq(&res.output.assoc.beta, &baseline.output.assoc.beta, "beta");
+        assert_bits_eq(&res.output.assoc.se, &baseline.output.assoc.se, "se");
+    }
+}
+
+/// Acceptance: peak payload bytes per contribution round are bounded by
+/// the shard width, not by total M.
+#[test]
+fn peak_round_bytes_bounded_by_shard_width() {
+    let m = 256;
+    let cohort = generate_cohort(&spec_for(3, 70, m), 702);
+    let single = run(&cohort, Backend::Masked, 0, 43);
+    let sharded = run(&cohort, Backend::Masked, 32, 43);
+    assert_eq!(sharded.metrics.shards, 8);
+    assert!(single.metrics.bytes_max_round > 0);
+    // 8× narrower rounds → ≥ 4× smaller peak round (framing overhead
+    // keeps it from the full 8×)
+    assert!(
+        sharded.metrics.bytes_max_round * 4 <= single.metrics.bytes_max_round,
+        "peak round bytes not bounded: sharded {} vs single-shot {}",
+        sharded.metrics.bytes_max_round,
+        single.metrics.bytes_max_round
+    );
+    // total bytes stay within a few percent (same statistics + per-shard
+    // framing)
+    let (a, b) = (sharded.metrics.bytes_total as f64, single.metrics.bytes_total as f64);
+    assert!(a / b < 1.1, "sharding blew up total bytes: {a} vs {b}");
+}
+
+/// The sharded protocol is byte-identical across transports: an in-proc
+/// session and a TCP session serialize exactly the same frames.
+#[test]
+fn tcp_and_inproc_sessions_byte_identical() {
+    let cohort = generate_cohort(&spec_for(3, 60, 48), 703);
+    let cfg = cfg(Backend::Masked, 12); // 4 shards
+    let inproc = run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 44).unwrap();
+    // TCP contends for sockets with the parallel test suite; allow one
+    // retry before judging (byte accounting itself is deterministic).
+    let mut last_err = String::new();
+    for _attempt in 0..2 {
+        let tcp = run_multi_party_scan_t(&cohort, &cfg, Transport::Tcp, 44).unwrap();
+        if tcp.metrics.bytes_total == inproc.metrics.bytes_total
+            && tcp.metrics.messages_total == inproc.metrics.messages_total
+        {
+            assert_bits_eq(&tcp.output.assoc.beta, &inproc.output.assoc.beta, "beta");
+            assert_eq!(tcp.metrics.shards, inproc.metrics.shards);
+            return;
+        }
+        last_err = format!(
+            "bytes {} vs {}, messages {} vs {}",
+            tcp.metrics.bytes_total,
+            inproc.metrics.bytes_total,
+            tcp.metrics.messages_total,
+            inproc.metrics.messages_total
+        );
+    }
+    panic!("tcp/in-proc transcript mismatch after retry: {last_err}");
+}
+
+/// Shamir with a strict quorum agrees with masked through the sharded
+/// path (fixed-point tolerance — different ring/field encodings).
+#[test]
+fn sharded_shamir_quorum_matches_masked() {
+    let cohort = generate_cohort(&spec_for(5, 60, 40), 704);
+    let masked = run(&cohort, Backend::Masked, 10, 45);
+    let shamir = run(&cohort, Backend::Shamir { threshold: 3 }, 10, 45);
+    for j in 0..40 {
+        let (a, b) = (masked.output.assoc.beta[j], shamir.output.assoc.beta[j]);
+        if a.is_finite() && b.is_finite() {
+            assert!((a - b).abs() < 1e-5 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
+        }
+    }
+}
+
+/// Single-variant and single-party edge shapes survive sharding.
+#[test]
+fn edge_shapes_sharded() {
+    // M = 1 with a wide shard plan → one 1-column shard
+    let cohort = generate_cohort(&spec_for(2, 50, 1), 705);
+    let res = run(&cohort, Backend::Masked, 64, 46);
+    assert_eq!(res.metrics.shards, 1);
+    assert_eq!(res.output.assoc.beta.len(), 1);
+
+    // single party, 3 shards
+    let cohort1 = generate_cohort(&spec_for(1, 80, 12), 706);
+    let single = run(&cohort1, Backend::Plaintext, 0, 47);
+    let sharded = run(&cohort1, Backend::Plaintext, 4, 47);
+    assert_bits_eq(&sharded.output.assoc.beta, &single.output.assoc.beta, "beta");
+}
+
+/// Every party receives the same assembled per-shard results it would
+/// have gotten from a single RESULT broadcast (checked implicitly by the
+/// protocol: width/order mismatches fail the session).
+#[test]
+fn metrics_reflect_shard_plan() {
+    let cohort = generate_cohort(&spec_for(3, 60, 30), 707);
+    let res = run(&cohort, Backend::Masked, 8, 48);
+    assert_eq!(res.metrics.shards, 4);
+    assert!(res.metrics.bytes_result > 0);
+    assert!(res.metrics.bytes_max_round > 0);
+    assert!(res.metrics.bytes_total >= res.metrics.bytes_result);
+    assert_eq!(res.party_bytes.len(), 3);
+    assert!(res.party_bytes.iter().all(|&b| b > 0));
+}

@@ -1,0 +1,177 @@
+//! Minimal, API-compatible subset of the `anyhow` crate.
+//!
+//! Provides exactly the surface the `dash` crate uses — [`Result`],
+//! [`Error`], and the `anyhow!` / `bail!` / `ensure!` macros — so the
+//! workspace builds hermetically without a crates.io registry. The
+//! design mirrors upstream `anyhow`: `Error` deliberately does **not**
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+//!
+//! Differences from upstream (none observable to this workspace):
+//! no backtraces, no downcasting, no `Context` extension trait.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a message plus an optional chain of sources.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Chain a new high-level message in front of this error.
+    pub fn context<M: fmt::Display>(self, m: M) -> Error {
+        Error { msg: m.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` prints the whole chain
+    /// separated by `": "` (matching upstream's alternate formatting).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()` panics and `fn main() -> Result<()>` exits print
+        // through Debug — show the full chain there.
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as rendered messages.
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            let r: std::io::Result<()> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "disk on fire");
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(x: usize) -> Result<usize> {
+            ensure!(x > 1);
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(5).unwrap(), 5);
+        assert!(format!("{}", fails(1).unwrap_err()).contains("condition failed"));
+        assert_eq!(format!("{}", fails(2).unwrap_err()), "x too small: 2");
+        assert_eq!(format!("{}", fails(200).unwrap_err()), "x too big: 200");
+        let e = anyhow!("plain {} message", 7);
+        assert_eq!(format!("{e}"), "plain 7 message");
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let e = Error::msg("a").context("b").context("c");
+        let msgs: Vec<&str> = e.chain().collect();
+        assert_eq!(msgs, vec!["c", "b", "a"]);
+    }
+}
