@@ -25,8 +25,8 @@ fn party(n: usize, k: usize, m: usize, seed: u64) -> CompressedParty {
         c[(i, 0)] = 1.0;
     }
     let x = Matrix::randn(n, m, &mut rng);
-    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    compress_party(&y, &c, &x, 256, None)
+    let ys = Matrix::from_col((0..n).map(|_| rng.normal()).collect());
+    compress_party(&ys, &c, &x, 256, None)
 }
 
 fn aggregate(cps: &[CompressedParty]) -> dash::scan::AggregateSums {

@@ -14,7 +14,7 @@ use dash::scan::compress_party;
 use dash::util::bench::Bench;
 use dash::util::rng::Rng;
 
-fn data(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+fn data(n: usize, k: usize, m: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
     let mut rng = Rng::new(seed);
     let mut c = Matrix::randn(n, k, &mut rng);
     for i in 0..n {
@@ -25,8 +25,8 @@ fn data(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
     for v in x.data.iter_mut() {
         *v = rng.binomial(2, 0.3) as f64;
     }
-    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    (y, c, x)
+    let ys = Matrix::from_col((0..n).map(|_| rng.normal()).collect());
+    (ys, c, x)
 }
 
 fn main() {

@@ -10,18 +10,18 @@ use dash::scan::{compress_party, CompressedParty};
 use dash::util::bench::Bench;
 use dash::util::rng::Rng;
 
-fn party(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+fn party(n: usize, k: usize, m: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
     let mut rng = Rng::new(seed);
     let mut c = Matrix::randn(n, k, &mut rng);
     for i in 0..n {
         c[(i, 0)] = 1.0;
     }
     let x = Matrix::randn(n, m, &mut rng);
-    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    (y, c, x)
+    let ys = Matrix::from_col((0..n).map(|_| rng.normal()).collect());
+    (ys, c, x)
 }
 
-fn compress(d: &(Vec<f64>, Matrix, Matrix)) -> CompressedParty {
+fn compress(d: &(Matrix, Matrix, Matrix)) -> CompressedParty {
     compress_party(&d.0, &d.1, &d.2, 256, None)
 }
 

@@ -1,0 +1,139 @@
+//! Trait-amortization sweep (§3): one secure session scanning T traits
+//! versus T independent single-trait sessions.
+//!
+//! The economics the paper pitches for biobank PheWAS / eQTL: the
+//! `O(NKM)` genotype-side compression and the `O(K²M)` projection are
+//! paid once per session, each extra trait adds only `O(N(M+K))` —
+//! so the **marginal per-trait cost must fall as T grows**. For each
+//! T ∈ {1, 16, 256, 4096} we time the full multi-party session (masked
+//! backend, in-process transport) and record wall time, bytes, and the
+//! amortized per-trait figures.
+//!
+//! Output: human table + JSON lines written to `BENCH_multitrait.json`.
+//!
+//! Run: `cargo bench --bench bench_multitrait` (DASH_BENCH_QUICK=1 for a
+//! reduced sweep).
+
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::ScanConfig;
+use dash::util::bench::Bench;
+use dash::util::human_bytes;
+use dash::util::json::Json;
+
+fn spec(n_total: usize, parties: usize, m: usize, t: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_total / parties; parties],
+        m_variants: m,
+        n_traits: t,
+        n_causal: 5.min(m),
+        effect_sd: 0.2,
+        fst: 0.05,
+        party_admixture: (0..parties).map(|i| i as f64 / (parties - 1) as f64).collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let parties = 3;
+    let (n, m) = if quick { (300, 256) } else { (1200, 1024) };
+    let ts: &[usize] = if quick { &[1, 16, 256] } else { &[1, 16, 256, 4096] };
+    let shard_m = 128;
+
+    let mut b = Bench::new("multitrait");
+    struct Row {
+        t: usize,
+        median_s: f64,
+        per_trait_s: f64,
+        bytes_total: u64,
+        bytes_per_trait: f64,
+        bytes_max_round: u64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &t in ts {
+        eprintln!("generating cohort: P={parties} N={n} M={m} T={t} ...");
+        let cohort = generate_cohort(&spec(n, parties, m, t), 95);
+        let cfg = ScanConfig { backend: Backend::Masked, shard_m, ..Default::default() };
+        let res = run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 5).unwrap();
+        assert_eq!(res.output.t(), t);
+        let median_s = b
+            .case_units(&format!("T={t}"), Some((m * t) as f64), "assoc", || {
+                std::hint::black_box(
+                    run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 5).unwrap(),
+                );
+            })
+            .median_s;
+        rows.push(Row {
+            t,
+            median_s,
+            per_trait_s: median_s / t as f64,
+            bytes_total: res.metrics.bytes_total,
+            bytes_per_trait: res.metrics.bytes_total as f64 / t as f64,
+            bytes_max_round: res.metrics.bytes_max_round,
+        });
+    }
+
+    println!("\ntrait-amortization sweep (P={parties}, N={n}, M={m}, masked, shard={shard_m}):");
+    println!(
+        "{:>7} {:>10} {:>14} {:>14} {:>16} {:>16}",
+        "T", "median_s", "per_trait_s", "bytes_total", "bytes/trait", "peak_round"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>10.4} {:>14.6} {:>14} {:>16.1} {:>16}",
+            r.t,
+            r.median_s,
+            r.per_trait_s,
+            human_bytes(r.bytes_total),
+            r.bytes_per_trait,
+            human_bytes(r.bytes_max_round)
+        );
+    }
+    println!("(per-trait wall time and bytes fall with T: the genotype-side");
+    println!(" compression, projection, and CᵀX/X·X traffic are paid once)");
+
+    let mut report = b.json_lines();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("group", "multitrait")
+            .set("row", "amortization")
+            .set("t", r.t)
+            .set("median_s", r.median_s)
+            .set("per_trait_s", r.per_trait_s)
+            .set("bytes_total", r.bytes_total)
+            .set("bytes_per_trait", r.bytes_per_trait)
+            .set("bytes_max_round", r.bytes_max_round);
+        report.push_str(&o.to_string());
+        report.push('\n');
+    }
+    if let Err(e) = std::fs::write("BENCH_multitrait.json", &report) {
+        eprintln!("warn: could not write BENCH_multitrait.json: {e}");
+    } else {
+        println!("report: BENCH_multitrait.json");
+    }
+
+    // The amortization claim, asserted: marginal per-trait cost falls
+    // monotonically across the sweep, in both time and bytes.
+    for pair in rows.windows(2) {
+        assert!(
+            pair[1].per_trait_s < pair[0].per_trait_s,
+            "per-trait time did not fall: T={} {:.6}s vs T={} {:.6}s",
+            pair[0].t,
+            pair[0].per_trait_s,
+            pair[1].t,
+            pair[1].per_trait_s
+        );
+        assert!(
+            pair[1].bytes_per_trait < pair[0].bytes_per_trait,
+            "per-trait bytes did not fall: T={} vs T={}",
+            pair[0].t,
+            pair[1].t
+        );
+    }
+}

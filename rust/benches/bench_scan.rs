@@ -17,6 +17,7 @@ fn spec(n_total: usize, parties: usize, m: usize) -> CohortSpec {
     CohortSpec {
         party_sizes: vec![n_total / parties; parties],
         m_variants: m,
+        n_traits: 1,
         n_causal: 10.min(m),
         effect_sd: 0.2,
         fst: 0.05,

@@ -28,6 +28,7 @@ fn spec(n_total: usize, parties: usize, m: usize) -> CohortSpec {
     CohortSpec {
         party_sizes: vec![n_total / parties; parties],
         m_variants: m,
+        n_traits: 1,
         n_causal: 10.min(m),
         effect_sd: 0.2,
         fst: 0.05,
@@ -73,9 +74,9 @@ fn main() {
         // exactness: every width must reproduce the baseline bit-for-bit
         let mismatches = (0..m)
             .filter(|&j| {
-                res.output.assoc.beta[j].to_bits() != baseline.output.assoc.beta[j].to_bits()
-                    || res.output.assoc.se[j].to_bits()
-                        != baseline.output.assoc.se[j].to_bits()
+                res.output.assoc[0].beta[j].to_bits() != baseline.output.assoc[0].beta[j].to_bits()
+                    || res.output.assoc[0].se[j].to_bits()
+                        != baseline.output.assoc[0].se[j].to_bits()
             })
             .count();
         let median_s = b

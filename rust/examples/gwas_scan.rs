@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let spec = CohortSpec {
         party_sizes: vec![n_total / parties; parties],
         m_variants: m,
+        n_traits: 1,
         n_causal: 25,
         effect_sd: 0.12,
         fst: 0.08,
@@ -53,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!("artifact runtime: {}", if use_artifacts { "ENABLED" } else { "not found (rust path)" });
 
     // --- secure scan (the paper's protocol, sharded streaming) ---
-    // 4096-variant shards: peak payload per round is O(K·4096), parties
+    // 4096-variant shards: peak payload per round is O((K+T)·4096), parties
     // compress shard s+1 while the leader combines shard s, and the
     // result is bit-identical to the single-shot run below.
     let shard_m = 4096;
@@ -76,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     // --- pooled oracle for exactness (E5) ---
     eprintln!("computing pooled oracle ...");
     let pooled = pool_cohort(&cohort);
-    let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 256, None);
+    let cp = compress_party(&pooled.ys, &pooled.c, &pooled.x, 256, None);
     let (layout, flat) = flatten_for_sum(&cp);
     let agg = unflatten_sum(layout, &flat)?;
     let oracle = combine_compressed(
@@ -88,11 +89,11 @@ fn main() -> anyhow::Result<()> {
     let mut max_rel_beta: f64 = 0.0;
     let mut max_abs_p: f64 = 0.0;
     for j in 0..m {
-        let (a, b) = (secure.output.assoc.beta[j], oracle.assoc.beta[j]);
+        let (a, b) = (secure.output.assoc[0].beta[j], oracle.assoc[0].beta[j]);
         if a.is_finite() && b.is_finite() {
             max_rel_beta = max_rel_beta.max((a - b).abs() / b.abs().max(1.0));
             max_abs_p =
-                max_abs_p.max((secure.output.assoc.p[j] - oracle.assoc.p[j]).abs());
+                max_abs_p.max((secure.output.assoc[0].p[j] - oracle.assoc[0].p[j]).abs());
         }
     }
 
@@ -125,9 +126,9 @@ fn main() -> anyhow::Result<()> {
         println!(
             "  variant {:>6}  beta={:+.4}  se={:.4}  p={:.3e}{}",
             j,
-            secure.output.assoc.beta[j],
-            secure.output.assoc.se[j],
-            secure.output.assoc.p[j],
+            secure.output.assoc[0].beta[j],
+            secure.output.assoc[0].se[j],
+            secure.output.assoc[0].p[j],
             if cohort.truth.causal_idx.contains(&j) { "  [causal]" } else { "" }
         );
     }

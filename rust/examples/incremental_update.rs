@@ -2,7 +2,7 @@
 //! fn.1 claim that statistics update "at incremental cost ... independent
 //! of the original number of samples".
 //!
-//! We combine an initial consortium, store only the O(K·M) aggregate,
+//! We combine an initial consortium, store only the O((K+T)·M) aggregate,
 //! then time the update as a new center joins, for increasingly large
 //! original cohorts. The update time stays flat while a from-scratch
 //! recompute grows linearly.
@@ -20,6 +20,7 @@ fn spec(party_sizes: Vec<usize>, m: usize) -> CohortSpec {
     CohortSpec {
         party_sizes,
         m_variants: m,
+        n_traits: 1,
         n_causal: 5,
         effect_sd: 0.3,
         fst: 0.05,
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         let initial: Vec<_> = cohort
             .parties
             .iter()
-            .map(|p| compress_party(&p.y, &p.c, &p.x, 256, None))
+            .map(|p| compress_party(&p.ys, &p.c, &p.x, 256, None))
             .collect();
         let mut inc = IncrementalAggregate::from_parties(&initial)?;
         let _ = inc.recombine()?;
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         let joiner_cohort = generate_cohort(&spec(vec![n_new], m), 901);
         let jp = &joiner_cohort.parties[0];
         let t_update = Instant::now();
-        let joiner_cp = compress_party(&jp.y, &jp.c, &jp.x, 256, None);
+        let joiner_cp = compress_party(&jp.ys, &jp.c, &jp.x, 256, None);
         inc.add_parties(std::slice::from_ref(&joiner_cp))?;
         let update_time = t_update.elapsed().as_secs_f64();
 
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         let re: Vec<_> = cohort
             .parties
             .iter()
-            .map(|p| compress_party(&p.y, &p.c, &p.x, 256, None))
+            .map(|p| compress_party(&p.ys, &p.c, &p.x, 256, None))
             .collect();
         all.clear();
         all.extend(re);
@@ -79,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         let scratch_time = t_scratch.elapsed().as_secs_f64();
 
         // equivalence check
-        let err = dash::linalg::rel_err(&updated.assoc.beta, &scratch.assoc.beta);
+        let err = dash::linalg::rel_err(&updated.assoc[0].beta, &scratch.assoc[0].beta);
         assert!(err < 1e-10, "incremental != scratch: {err}");
 
         println!(

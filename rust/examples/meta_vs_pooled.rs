@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             let spec = CohortSpec {
                 party_sizes: vec![n_total / parties; parties],
                 m_variants: m,
+                n_traits: 1,
                 n_causal,
                 effect_sd: 0.25,
                 fst: 0.1,
@@ -66,8 +67,8 @@ fn main() -> anyhow::Result<()> {
                 let mut s = 0.0;
                 let mut c = 0;
                 for &j in causal {
-                    if betas[j].is_finite() && pooled.output.assoc.beta[j].is_finite() {
-                        s += (betas[j] - pooled.output.assoc.beta[j]).abs();
+                    if betas[j].is_finite() && pooled.output.assoc[0].beta[j].is_finite() {
+                        s += (betas[j] - pooled.output.assoc[0].beta[j]).abs();
                         c += 1;
                     }
                 }
@@ -85,11 +86,11 @@ fn main() -> anyhow::Result<()> {
                     as f64
                     / nulls.len() as f64
             };
-            acc[0] += power(&pooled.output.assoc.p);
+            acc[0] += power(&pooled.output.assoc[0].p);
             acc[1] += power(&meta.p);
-            acc[2] += fpr(&pooled.output.assoc.p);
+            acc[2] += fpr(&pooled.output.assoc[0].p);
             acc[3] += fpr(&meta.p);
-            acc[4] += bias(&pooled.output.assoc.beta);
+            acc[4] += bias(&pooled.output.assoc[0].beta);
             acc[5] += bias(&meta.beta);
         }
         let r = replicates as f64;

@@ -1,5 +1,7 @@
 //! Quickstart: three hospitals jointly fit a linear regression and run a
-//! small secure association scan — in ~40 lines of library calls.
+//! small secure association scan — in ~40 lines of library calls. The
+//! scan is trait-major: here three phenotypes ride the same session, and
+//! the genotype-side cost is paid once for all of them.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -9,49 +11,59 @@ use dash::mpc::Backend;
 use dash::scan::{combine_regression, compress_party, ScanConfig};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Three centers with private cohorts (synthetic here).
-    let spec = CohortSpec::default_small();
+    // 1. Three centers with private cohorts (synthetic here), each
+    //    carrying T = 3 phenotypes per sample.
+    let mut spec = CohortSpec::default_small();
+    spec.n_traits = 3;
     let cohort = generate_cohort(&spec, 42);
     println!(
-        "cohort: {} parties, N={}, M={}, K={}",
+        "cohort: {} parties, N={}, M={}, T={}, K={}",
         cohort.parties.len(),
         cohort.n_total(),
         cohort.m(),
+        cohort.t(),
         cohort.k()
     );
 
     // 2. Multi-party linear regression (§2): compress within each party,
-    //    combine across. Nothing sample-sized ever leaves a party.
+    //    combine across — one fit per trait. Nothing sample-sized ever
+    //    leaves a party.
     let compressed: Vec<_> = cohort
         .parties
         .iter()
-        .map(|p| compress_party(&p.y, &p.c, &p.x, 64, None))
+        .map(|p| compress_party(&p.ys, &p.c, &p.x, 64, None))
         .collect();
-    let fit = combine_regression(&compressed)?;
-    println!("\ncovariate fit (γ̂ ± se):");
+    let fits = combine_regression(&compressed)?;
+    let fit = &fits[0];
+    println!("\ncovariate fit, trait 0 (γ̂ ± se):");
     for (i, (g, s)) in fit.gamma.iter().zip(&fit.se).enumerate() {
         println!("  γ[{i}] = {g:+.4} ± {s:.4}   p = {:.2e}", fit.p[i]);
     }
 
-    // 3. Secure multi-party association scan (§4): pairwise-mask secure
-    //    aggregation; the leader sees only aggregate statistics.
+    // 3. Secure multi-party association scan (§3/§4): pairwise-mask
+    //    secure aggregation; the leader sees only aggregate statistics.
+    //    All T traits are scanned in one session — the expensive
+    //    genotype-side compression is shared.
     let cfg = ScanConfig { backend: Backend::Masked, ..Default::default() };
     let res = run_multi_party_scan(&cohort, &cfg)?;
     println!(
-        "\nsecure scan: {} variants in {:.1} ms, {} bytes inter-party",
+        "\nsecure scan: {} variants × {} traits in {:.1} ms, {} bytes inter-party",
         cohort.m(),
+        cohort.t(),
         res.metrics.total_s * 1e3,
         res.metrics.bytes_total
     );
-    let hits = res.output.hits(1e-6);
-    println!("top hits (p < 1e-6):");
-    for &j in hits.iter().take(5) {
-        println!(
-            "  variant {j:>4}  β̂ = {:+.4}  p = {:.2e}{}",
-            res.output.assoc.beta[j],
-            res.output.assoc.p[j],
-            if cohort.truth.causal_idx.contains(&j) { "  [truly causal]" } else { "" }
-        );
+    for tt in 0..cohort.t() {
+        let hits = res.output.hits_for(tt, 1e-6);
+        println!("trait {tt}: {} hits (p < 1e-6)", hits.len());
+        for &j in hits.iter().take(3) {
+            println!(
+                "  variant {j:>4}  β̂ = {:+.4}  p = {:.2e}{}",
+                res.output.assoc[tt].beta[j],
+                res.output.assoc[tt].p[j],
+                if cohort.truth.causal_idx.contains(&j) { "  [truly causal]" } else { "" }
+            );
+        }
     }
     Ok(())
 }

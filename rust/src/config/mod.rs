@@ -65,6 +65,7 @@ impl RunConfig {
         cohort
             .set("party_sizes", self.cohort.party_sizes.clone())
             .set("m_variants", self.cohort.m_variants)
+            .set("n_traits", self.cohort.n_traits)
             .set("n_causal", self.cohort.n_causal)
             .set("effect_sd", self.cohort.effect_sd)
             .set("fst", self.cohort.fst)
@@ -145,6 +146,7 @@ fn parse_cohort(v: &Json, mut c: CohortSpec) -> anyhow::Result<CohortSpec> {
     }
     for (key, slot) in [
         ("m_variants", &mut c.m_variants as &mut usize),
+        ("n_traits", &mut c.n_traits),
         ("n_causal", &mut c.n_causal),
         ("n_pcs", &mut c.n_pcs),
     ] {
@@ -218,7 +220,8 @@ mod tests {
     fn overrides_apply() {
         let j = Json::parse(
             r#"{"seed": 42, "transport": "tcp",
-                "cohort": {"party_sizes": [100, 100], "m_variants": 50, "fst": 0.2},
+                "cohort": {"party_sizes": [100, 100], "m_variants": 50, "n_traits": 8,
+                           "fst": 0.2},
                 "scan": {"backend": "shamir", "frac_bits": 20, "r_method": "cholesky",
                          "shard_m": 4096}}"#,
         )
@@ -229,6 +232,7 @@ mod tests {
         assert_eq!(cfg.cohort.party_sizes, vec![100, 100]);
         assert_eq!(cfg.cohort.party_admixture.len(), 2); // auto-filled
         assert_eq!(cfg.cohort.m_variants, 50);
+        assert_eq!(cfg.cohort.n_traits, 8);
         assert_eq!(cfg.scan.frac_bits, 20);
         assert_eq!(cfg.scan.r_method, RFactorMethod::Cholesky);
         assert_eq!(cfg.scan.shard_m, 4096);

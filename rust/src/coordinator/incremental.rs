@@ -1,20 +1,24 @@
 //! Incremental folding of aggregate statistics — generalized from
-//! "add a cohort" to "add a shard".
+//! "add a cohort" to "add a shard", trait-major throughout.
 //!
 //! Two fold units share this module:
 //!
 //! - **Cohort rounds** ([`IncrementalAggregate`]): new centers or sample
 //!   batches join after the initial combine at cost independent of the
 //!   original N (paper §1 fn.1). The leader retains only the aggregate
-//!   sufficient statistics — a `O(K·M)` object — and folds a joining
+//!   sufficient statistics — a `O((K+T)·M)` object — and folds a joining
 //!   batch's securely-summed delta over the *full* layout.
 //! - **Variant shards** ([`IncrementalAggregate::add_shard_flat`] and
 //!   [`ScanAssembler`]): within one session, the sharded streaming
-//!   protocol delivers the same aggregate one `O(K·width)` column shard
-//!   at a time. `add_shard_flat` scatters a shard delta into the full
-//!   layout (for leaders that retain the aggregate for later cohort
+//!   protocol delivers the same aggregate one `O((K+T)·width)` column
+//!   shard at a time. `add_shard_flat` scatters a shard delta into the
+//!   full layout (for leaders that retain the aggregate for later cohort
 //!   joins); `ScanAssembler` is the bounded-memory path that combines
-//!   each shard on arrival and keeps only the `O(M)` outputs.
+//!   each shard on arrival and keeps only the `O(M·T)` outputs. The
+//!   assembler is **order-agnostic**: shards scatter into place by
+//!   column range, so delayed or reordered per-shard frames assemble the
+//!   same scan (disjointness is still enforced — a duplicate or
+//!   overlapping shard fails the session).
 //!
 //! Privacy note (DESIGN.md §Security): consecutive aggregates differ by
 //! the joining batch's total — with a *single* joining party that delta
@@ -97,27 +101,32 @@ impl IncrementalAggregate {
         Ok(())
     }
 
-    /// Fold one shard's summed variant statistics (`[xty(w), xtx(w),
+    /// Fold one shard's summed variant statistics (`[xty(w·T), xtx(w),
     /// ctx(K·w)]`, see [`crate::scan::shard_flat_len`]) into the variant
     /// segments of the full layout — the shard-shaped fold unit.
-    /// O(K·width); does not advance the cohort-round counter.
+    /// O((K+T)·width); does not advance the cohort-round counter.
     pub fn add_shard_flat(&mut self, range: ShardRange, flat: &[f64]) -> anyhow::Result<()> {
-        let (k, m) = (self.layout.k, self.layout.m);
+        let (k, m, t) = (self.layout.k, self.layout.m, self.layout.t);
         let w = range.width();
         anyhow::ensure!(range.j1 <= m, "shard range beyond layout");
         anyhow::ensure!(
-            flat.len() == crate::scan::shard_flat_len(k, w),
+            flat.len() == crate::scan::shard_flat_len(k, t, w),
             "shard flat length mismatch"
         );
         let (xty_off, xtx_off, ctx_off) =
             (self.layout.xty_off(), self.layout.xtx_off(), self.layout.ctx_off());
+        // xty: rows [j0, j1) of the M × T trait-major block
         for j in 0..w {
-            self.flat[xty_off + range.j0 + j] += flat[j];
-            self.flat[xtx_off + range.j0 + j] += flat[w + j];
+            for tt in 0..t {
+                self.flat[xty_off + (range.j0 + j) * t + tt] += flat[j * t + tt];
+            }
+        }
+        for j in 0..w {
+            self.flat[xtx_off + range.j0 + j] += flat[w * t + j];
         }
         for kk in 0..k {
             for j in 0..w {
-                self.flat[ctx_off + kk * m + range.j0 + j] += flat[(2 + kk) * w + j];
+                self.flat[ctx_off + kk * m + range.j0 + j] += flat[w * (t + 1) + kk * w + j];
             }
         }
         Ok(())
@@ -136,7 +145,7 @@ impl IncrementalAggregate {
         unflatten_sum(self.layout, &self.flat)
     }
 
-    /// Re-run the combine on the current aggregate — `O(K³ + K²M)`,
+    /// Re-run the combine on the current aggregate — `O(K³ + K²M + KMT)`,
     /// independent of total N (secure path: Gram + Cholesky).
     pub fn recombine(&self) -> anyhow::Result<ScanOutput> {
         combine_compressed(
@@ -147,25 +156,35 @@ impl IncrementalAggregate {
     }
 }
 
-/// Bounded-memory assembler for a sharded scan session.
-///
-/// Built from the session's aggregate *base* sums, it factorizes the
-/// covariate block once ([`combine_base`]) and then folds shard sums in
-/// scan order: each [`add_shard`](Self::add_shard) runs the Lemma 3.1
-/// epilogue for that shard (`O(K²·width)`) and appends into the `O(M)`
-/// output vectors — the shard sums themselves are dropped immediately,
-/// so peak state is `O(K² + K·width + M)` regardless of shard count.
-pub struct ScanAssembler {
-    ctx: CombineContext,
-    m: usize,
-    next_j0: usize,
-    /// residual df as reported by the per-shard epilogue (set on the
-    /// first shard; identical across shards by construction)
-    df: Option<f64>,
+/// Per-trait output accumulators of a sharded scan session.
+struct TraitAcc {
     beta: Vec<f64>,
     se: Vec<f64>,
     t: Vec<f64>,
     p: Vec<f64>,
+}
+
+/// Bounded-memory assembler for a sharded scan session.
+///
+/// Built from the session's aggregate *base* sums, it factorizes the
+/// covariate block once ([`combine_base`]) and then folds shard sums in
+/// any order: each [`add_shard`](Self::add_shard) runs the Lemma 3.1
+/// epilogue for that shard (`O((K² + KT)·width)`, the `QᵀX` projection
+/// shared across traits) and scatters into the `O(M·T)` output vectors
+/// by column range — the shard sums themselves are dropped immediately,
+/// so peak state is `O(K² + (K+T)·width + M·T)` regardless of shard
+/// count. Out-of-order and delayed shard frames assemble identically;
+/// overlapping or duplicate shards are rejected.
+pub struct ScanAssembler {
+    ctx: CombineContext,
+    m: usize,
+    /// per-column arrival mask (disjointness + completeness check)
+    filled: Vec<bool>,
+    assembled: usize,
+    /// residual df as reported by the per-shard epilogue (set on the
+    /// first shard; identical across shards by construction)
+    df: Option<f64>,
+    traits: Vec<TraitAcc>,
 }
 
 impl ScanAssembler {
@@ -178,56 +197,59 @@ impl ScanAssembler {
         m: usize,
     ) -> anyhow::Result<ScanAssembler> {
         let ctx = combine_base(base, party_rs, opts)?;
-        Ok(ScanAssembler {
-            ctx,
-            m,
-            next_j0: 0,
-            df: None,
-            beta: Vec::with_capacity(m),
-            se: Vec::with_capacity(m),
-            t: Vec::with_capacity(m),
-            p: Vec::with_capacity(m),
-        })
+        let traits = (0..ctx.t())
+            .map(|_| TraitAcc {
+                beta: vec![f64::NAN; m],
+                se: vec![f64::NAN; m],
+                t: vec![f64::NAN; m],
+                p: vec![f64::NAN; m],
+            })
+            .collect();
+        Ok(ScanAssembler { ctx, m, filled: vec![false; m], assembled: 0, df: None, traits })
     }
 
     /// Number of variant columns assembled so far.
     pub fn assembled(&self) -> usize {
-        self.next_j0
+        self.assembled
     }
 
-    /// Combine one shard's aggregate sums and fold the partial result in.
-    /// Shards must arrive in scan order; returns the shard's association
-    /// statistics (for the partial-RESULT broadcast).
+    /// Combine one shard's aggregate sums and scatter the partial result
+    /// into place. Shards may arrive in any order but must be disjoint;
+    /// returns the shard's per-trait association statistics (for the
+    /// partial-RESULT broadcast).
     pub fn add_shard(
         &mut self,
         range: ShardRange,
         sums: &ShardSums,
-    ) -> anyhow::Result<AssocResult> {
-        anyhow::ensure!(
-            range.j0 == self.next_j0,
-            "shard out of order: got [{}, {}), expected start {}",
-            range.j0,
-            range.j1,
-            self.next_j0
-        );
+    ) -> anyhow::Result<Vec<AssocResult>> {
         anyhow::ensure!(range.j1 <= self.m, "shard range beyond M");
-        anyhow::ensure!(sums.xty.len() == range.width(), "shard width mismatch");
-        let part = combine_shard(&self.ctx, sums);
-        self.df.get_or_insert(part.df);
-        self.beta.extend_from_slice(&part.beta);
-        self.se.extend_from_slice(&part.se);
-        self.t.extend_from_slice(&part.t);
-        self.p.extend_from_slice(&part.p);
-        self.next_j0 = range.j1;
-        Ok(part)
+        anyhow::ensure!(sums.width() == range.width(), "shard width mismatch");
+        anyhow::ensure!(sums.t() == self.ctx.t(), "shard trait-count mismatch");
+        anyhow::ensure!(
+            !self.filled[range.j0..range.j1].iter().any(|&f| f),
+            "shard [{}, {}) overlaps columns already assembled",
+            range.j0,
+            range.j1
+        );
+        let parts = combine_shard(&self.ctx, sums);
+        for (acc, part) in self.traits.iter_mut().zip(&parts) {
+            self.df.get_or_insert(part.df);
+            acc.beta[range.j0..range.j1].copy_from_slice(&part.beta);
+            acc.se[range.j0..range.j1].copy_from_slice(&part.se);
+            acc.t[range.j0..range.j1].copy_from_slice(&part.t);
+            acc.p[range.j0..range.j1].copy_from_slice(&part.p);
+        }
+        self.filled[range.j0..range.j1].fill(true);
+        self.assembled += range.width();
+        Ok(parts)
     }
 
     /// Finish the session, checking every column arrived.
     pub fn finish(self) -> anyhow::Result<ScanOutput> {
         anyhow::ensure!(
-            self.next_j0 == self.m,
+            self.assembled == self.m,
             "incomplete scan: {} of {} columns assembled",
-            self.next_j0,
+            self.assembled,
             self.m
         );
         // df comes from the per-shard epilogue (single source of truth in
@@ -235,8 +257,13 @@ impl ScanAssembler {
         let df = self
             .df
             .unwrap_or((self.ctx.n as f64) - (self.ctx.k as f64) - 1.0);
+        let assoc = self
+            .traits
+            .into_iter()
+            .map(|a| AssocResult { beta: a.beta, se: a.se, t: a.t, p: a.p, df })
+            .collect();
         Ok(ScanOutput {
-            assoc: AssocResult { beta: self.beta, se: self.se, t: self.t, p: self.p, df },
+            assoc,
             covariate_fit: self.ctx.covariate_fit,
             n: self.ctx.n,
             k: self.ctx.k,
@@ -252,15 +279,22 @@ mod tests {
     use crate::scan::{compress_party, ShardPlan};
     use crate::util::rng::Rng;
 
-    fn party(n: usize, k: usize, m: usize, seed: u64) -> CompressedParty {
+    fn party_t(n: usize, k: usize, m: usize, t: usize, seed: u64) -> CompressedParty {
         let mut rng = Rng::new(seed);
         let mut c = Matrix::randn(n, k, &mut rng);
         for i in 0..n {
             c[(i, 0)] = 1.0;
         }
         let x = Matrix::randn(n, m, &mut rng);
-        let y: Vec<f64> = (0..n).map(|i| 0.3 * x[(i, 0)] + rng.normal()).collect();
-        compress_party(&y, &c, &x, m, Some(1))
+        let mut ys = Matrix::randn(n, t, &mut rng);
+        for i in 0..n {
+            ys[(i, 0)] += 0.3 * x[(i, 0)];
+        }
+        compress_party(&ys, &c, &x, m, Some(1))
+    }
+
+    fn party(n: usize, k: usize, m: usize, seed: u64) -> CompressedParty {
+        party_t(n, k, m, 1, seed)
     }
 
     #[test]
@@ -280,16 +314,17 @@ mod tests {
         let all_out = all.recombine().unwrap();
 
         assert_eq!(inc.n_total(), all.n_total());
-        assert!(rel_err(&inc_out.assoc.beta, &all_out.assoc.beta) < 1e-12);
-        assert!(rel_err(&inc_out.assoc.se, &all_out.assoc.se) < 1e-12);
+        assert!(rel_err(&inc_out.assoc[0].beta, &all_out.assoc[0].beta) < 1e-12);
+        assert!(rel_err(&inc_out.assoc[0].se, &all_out.assoc[0].se) < 1e-12);
         assert_eq!(inc.rounds(), 2);
     }
 
     #[test]
     fn shard_folds_equal_cohort_fold() {
-        // folding shard-by-shard reconstructs exactly the full aggregate
-        let p1 = party(70, 3, 12, 180);
-        let p2 = party(55, 3, 12, 181);
+        // folding shard-by-shard reconstructs exactly the full aggregate,
+        // trait dimension included
+        let p1 = party_t(70, 3, 12, 2, 180);
+        let p2 = party_t(55, 3, 12, 2, 181);
         let full = IncrementalAggregate::from_parties(&[p1.clone(), p2.clone()]).unwrap();
 
         let (layout, f1) = flatten_for_sum(&p1);
@@ -299,11 +334,14 @@ mod tests {
         let mut sharded = IncrementalAggregate::from_base_flat(layout, base_flat).unwrap();
 
         let plan = ShardPlan::new(12, 5); // 3 shards, ragged tail
+        let t = layout.t;
         for r in plan.ranges() {
             // build the shard's flat delta from the summed full vector
             let w = r.width();
-            let mut flat = Vec::with_capacity(crate::scan::shard_flat_len(3, w));
-            flat.extend_from_slice(&summed[layout.xty_off() + r.j0..layout.xty_off() + r.j1]);
+            let mut flat = Vec::with_capacity(crate::scan::shard_flat_len(3, t, w));
+            flat.extend_from_slice(
+                &summed[layout.xty_off() + r.j0 * t..layout.xty_off() + r.j1 * t],
+            );
             flat.extend_from_slice(&summed[layout.xtx_off() + r.j0..layout.xtx_off() + r.j1]);
             for kk in 0..3 {
                 let off = layout.ctx_off() + kk * 12;
@@ -314,16 +352,18 @@ mod tests {
         assert_eq!(sharded.flat, full.flat);
         let a = sharded.recombine().unwrap();
         let b = full.recombine().unwrap();
-        assert_eq!(a.assoc.beta.len(), b.assoc.beta.len());
-        for j in 0..12 {
-            assert_eq!(a.assoc.beta[j].to_bits(), b.assoc.beta[j].to_bits());
+        assert_eq!(a.t(), 2);
+        for tt in 0..2 {
+            for j in 0..12 {
+                assert_eq!(a.assoc[tt].beta[j].to_bits(), b.assoc[tt].beta[j].to_bits());
+            }
         }
     }
 
     #[test]
     fn assembler_matches_single_shot() {
-        let p1 = party(64, 4, 15, 182);
-        let p2 = party(48, 4, 15, 183);
+        let p1 = party_t(64, 4, 15, 3, 182);
+        let p2 = party_t(48, 4, 15, 3, 183);
         let inc = IncrementalAggregate::from_parties(&[p1, p2]).unwrap();
         let agg = inc.sums().unwrap();
         let single = combine_compressed(
@@ -342,47 +382,68 @@ mod tests {
         .unwrap();
         let plan = ShardPlan::new(15, 4);
         for r in plan.ranges() {
-            let sums = ShardSums {
-                xty: agg.xty[r.j0..r.j1].to_vec(),
-                xtx: agg.xtx[r.j0..r.j1].to_vec(),
-                ctx: agg.ctx.col_slice(r.j0, r.j1),
-            };
-            let part = asm.add_shard(r, &sums).unwrap();
-            assert_eq!(part.beta.len(), r.width());
+            let parts = asm.add_shard(r, &agg.shard_sums(r.j0, r.j1)).unwrap();
+            assert_eq!(parts.len(), 3);
+            assert_eq!(parts[0].beta.len(), r.width());
         }
         let out = asm.finish().unwrap();
-        for j in 0..15 {
-            assert_eq!(out.assoc.beta[j].to_bits(), single.assoc.beta[j].to_bits());
-            assert_eq!(out.assoc.p[j].to_bits(), single.assoc.p[j].to_bits());
+        for tt in 0..3 {
+            for j in 0..15 {
+                assert_eq!(
+                    out.assoc[tt].beta[j].to_bits(),
+                    single.assoc[tt].beta[j].to_bits()
+                );
+                assert_eq!(out.assoc[tt].p[j].to_bits(), single.assoc[tt].p[j].to_bits());
+            }
+            assert_eq!(out.assoc[tt].df, single.assoc[tt].df);
         }
-        assert_eq!(out.assoc.df, single.assoc.df);
     }
 
     #[test]
-    fn assembler_rejects_out_of_order_and_incomplete() {
+    fn assembler_accepts_out_of_order_shards() {
+        // per-shard frames delivered out of scan order scatter into the
+        // same output as in-order delivery
+        let p1 = party_t(80, 3, 13, 2, 190);
+        let inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
+        let agg = inc.sums().unwrap();
+        let opts = CombineOptions { r_method: RFactorMethod::Cholesky };
+        let plan = ShardPlan::new(13, 4); // shards [0,4) [4,8) [8,12) [12,13)
+
+        let mut in_order = ScanAssembler::new(&agg.base(), None, opts, 13).unwrap();
+        for r in plan.ranges() {
+            in_order.add_shard(r, &agg.shard_sums(r.j0, r.j1)).unwrap();
+        }
+        let a = in_order.finish().unwrap();
+
+        let mut shuffled = ScanAssembler::new(&agg.base(), None, opts, 13).unwrap();
+        for s in [2usize, 0, 3, 1] {
+            let r = plan.range(s);
+            shuffled.add_shard(r, &agg.shard_sums(r.j0, r.j1)).unwrap();
+        }
+        assert_eq!(shuffled.assembled(), 13);
+        let b = shuffled.finish().unwrap();
+        for tt in 0..2 {
+            for j in 0..13 {
+                assert_eq!(a.assoc[tt].beta[j].to_bits(), b.assoc[tt].beta[j].to_bits());
+                assert_eq!(a.assoc[tt].p[j].to_bits(), b.assoc[tt].p[j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_rejects_duplicate_and_incomplete() {
         let p1 = party(40, 3, 8, 184);
         let inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
         let agg = inc.sums().unwrap();
         let opts = CombineOptions { r_method: RFactorMethod::Cholesky };
         let mut asm = ScanAssembler::new(&agg.base(), None, opts, 8).unwrap();
         let plan = ShardPlan::new(8, 4);
-        // out of order: shard 1 first
-        let r1 = plan.range(1);
-        let sums = ShardSums {
-            xty: agg.xty[r1.j0..r1.j1].to_vec(),
-            xtx: agg.xtx[r1.j0..r1.j1].to_vec(),
-            ctx: agg.ctx.col_slice(r1.j0, r1.j1),
-        };
-        assert!(asm.add_shard(r1, &sums).is_err());
-        // incomplete: only shard 0 arrives
         let r0 = plan.range(0);
-        let sums0 = ShardSums {
-            xty: agg.xty[r0.j0..r0.j1].to_vec(),
-            xtx: agg.xtx[r0.j0..r0.j1].to_vec(),
-            ctx: agg.ctx.col_slice(r0.j0, r0.j1),
-        };
-        asm.add_shard(r0, &sums0).unwrap();
+        asm.add_shard(r0, &agg.shard_sums(r0.j0, r0.j1)).unwrap();
         assert_eq!(asm.assembled(), 4);
+        // duplicate shard: overlaps already-assembled columns
+        assert!(asm.add_shard(r0, &agg.shard_sums(r0.j0, r0.j1)).is_err());
+        // incomplete: only shard 0 arrived
         assert!(asm.finish().is_err());
     }
 
@@ -400,13 +461,15 @@ mod tests {
     fn layout_mismatch_rejected() {
         let p1 = party(60, 3, 5, 176);
         let p2 = party(40, 4, 5, 177); // different K
+        let p3 = party_t(40, 3, 5, 2, 179); // different T
         let mut inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
         assert!(inc.add_parties(std::slice::from_ref(&p2)).is_err());
+        assert!(inc.add_parties(std::slice::from_ref(&p3)).is_err());
     }
 
     #[test]
     fn update_cost_independent_of_history() {
-        // add_round_flat touches only the O(K·M) aggregate — its cost
+        // add_round_flat touches only the O((K+T)·M) aggregate — its cost
         // can't depend on how many samples are already folded in. Here we
         // just assert the state size is constant across rounds.
         let p = party(50, 3, 20, 178);

@@ -1,11 +1,12 @@
 //! Leader-side protocol: session setup, streaming per-shard contribution
 //! collection, secure aggregation, incremental combine, result broadcast.
 //!
-//! The leader never materializes the `O(K·M)` aggregate: each shard's
-//! contributions are aggregated (`O(P·K·width)`), combined through the
-//! [`ScanAssembler`] (`O(K²·width)`), and dropped — while the parties
-//! are already compressing the next shard. Only the `O(M)` output
-//! vectors and the per-shard result frames accumulate. Partial results
+//! The leader never materializes the `O((K+T)·M)` aggregate: each
+//! shard's contributions are aggregated (`O(P·(K+T)·width)`), combined
+//! through the [`ScanAssembler`] (`O((K² + KT)·width)`, the `QᵀX`
+//! projection shared across all T traits), and dropped — while the
+//! parties are already compressing the next shard. Only the `O(M·T)`
+//! output vectors and the per-shard result frames accumulate. Partial results
 //! are broadcast after the last shard so the single leader↔party stream
 //! never carries traffic in both directions at once (no head-of-line
 //! deadlock over TCP, any shard width).
@@ -55,6 +56,8 @@ pub struct Leader<'a> {
     pub cfg: &'a ScanConfig,
     pub k: usize,
     pub m: usize,
+    /// trait count T (1 = classic single-trait scan)
+    pub t: usize,
 }
 
 impl Leader<'_> {
@@ -90,6 +93,7 @@ impl Leader<'_> {
                 frac_bits: self.cfg.frac_bits as u64,
                 k: self.k as u64,
                 m: self.m as u64,
+                t: self.t as u64,
                 block_m: self.cfg.block_m as u64,
                 shard_m: self.cfg.shard_m as u64,
                 seeds: seed_matrix[p].clone(),
@@ -103,11 +107,12 @@ impl Leader<'_> {
             ep.send(&Compress.to_frame())?;
         }
 
-        // Base round: collect + aggregate the O(K²) covariate stats.
+        // Base round: collect + aggregate the O(K² + KT) covariate and
+        // trait stats.
         let (base_flat, party_rs, round_bytes) =
-            self.collect_round(&codec, 0, base_flat_len(self.k))?;
+            self.collect_round(&codec, 0, base_flat_len(self.k, self.t))?;
         metrics.bytes_max_round = round_bytes;
-        let base = unflatten_base(self.k, &base_flat)?;
+        let base = unflatten_base(self.k, self.t, &base_flat)?;
 
         // Factorize the covariate block once (O(K³)). Auto resolution of
         // the R-factor method (TSQR when per-party factors exist) lives
@@ -130,19 +135,30 @@ impl Leader<'_> {
         let mut last_contribution = Instant::now();
         for range in plan.ranges() {
             let w = range.width();
-            let (flat, _, round_bytes) =
-                self.collect_round(&codec, range.index + 1, shard_flat_len(self.k, w))?;
+            let (flat, _, round_bytes) = self.collect_round(
+                &codec,
+                range.index + 1,
+                shard_flat_len(self.k, self.t, w),
+            )?;
             last_contribution = Instant::now();
             metrics.bytes_max_round = metrics.bytes_max_round.max(round_bytes);
             let t0 = Instant::now();
-            let sums = unflatten_shard(self.k, w, &flat)?;
-            let part = asm.add_shard(range, &sums)?;
+            let sums = unflatten_shard(self.k, self.t, w, &flat)?;
+            let parts = asm.add_shard(range, &sums)?;
             metrics.combine_s += t0.elapsed().as_secs_f64();
+            // trait-major concatenation: [trait 0's w values | trait 1's | ...]
+            let mut beta = Vec::with_capacity(w * self.t);
+            let mut se = Vec::with_capacity(w * self.t);
+            for part in &parts {
+                beta.extend_from_slice(&part.beta);
+                se.extend_from_slice(&part.se);
+            }
             results.push(ShardResult {
                 shard: range.index as u64,
                 j0: range.j0 as u64,
-                beta: part.beta,
-                se: part.se,
+                traits: self.t as u64,
+                beta,
+                se,
             });
         }
         metrics.compress_wall_s = last_contribution.duration_since(t_compress).as_secs_f64();
@@ -151,7 +167,7 @@ impl Leader<'_> {
         let out = asm.finish()?;
         metrics.combine_s += t0.elapsed().as_secs_f64();
 
-        // Per-shard RESULT broadcast + shutdown (the O(M) downlink).
+        // Per-shard RESULT broadcast + shutdown (the O(M·T) downlink).
         let bytes_before = self.total_bytes();
         for ep in self.endpoints {
             for res in &results {

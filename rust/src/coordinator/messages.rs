@@ -5,20 +5,23 @@
 //! for debugging). The sharded session shape is:
 //!
 //! ```text
-//! SETUP            session params incl. shard plan + pairwise-mask seeds
+//! SETUP            session params incl. shard plan, trait count T,
+//!                  pairwise-mask seeds
 //! COMPRESS         kick off the streaming compress
-//! base round       one backend-specific contribution of the O(K²) base
-//!                  stats (PLAIN_BASE / MASKED_BASE / SHAMIR_* round 0)
-//! shard round s    one contribution per variant shard, O(K·width)
+//! base round       one backend-specific contribution of the O(K² + KT)
+//!                  base stats (PLAIN_BASE / MASKED_BASE / SHAMIR_*
+//!                  round 0)
+//! shard round s    one contribution per variant shard, O((K+T)·width)
 //!                  (PLAIN_SHARD / MASKED_SHARD / SHAMIR_* round s+1)
-//! SHARD_RESULT s   per-shard partial results (β̂, σ̂ for that shard)
+//! SHARD_RESULT s   per-shard partial results (β̂, σ̂ per trait)
 //! SHUTDOWN
 //! ```
 //!
-//! The single-shot protocol is the degenerate one-shard case of the
-//! same message flow. In production the pairwise-mask seeds come from a
-//! DH exchange; the simulation delivers them in SETUP and the byte meter
-//! counts them.
+//! The single-shot protocol is the degenerate one-shard case of the same
+//! message flow, and the single-trait protocol is the degenerate `T = 1`
+//! case of the same frames (identical flattened statistics layout). In
+//! production the pairwise-mask seeds come from a DH exchange; the
+//! simulation delivers them in SETUP and the byte meter counts them.
 
 use crate::linalg::Matrix;
 use crate::net::{FieldSink, FieldSource, Frame, WireMessage};
@@ -47,6 +50,8 @@ pub struct Setup {
     pub frac_bits: u64,
     pub k: u64,
     pub m: u64,
+    /// trait count T (1 = classic single-trait scan)
+    pub t: u64,
     pub block_m: u64,
     /// variant-shard width (0 = single shot, one shard over all of M)
     pub shard_m: u64,
@@ -66,6 +71,7 @@ impl WireMessage for Setup {
         s.u64("frac_bits", self.frac_bits);
         s.u64("k", self.k);
         s.u64("m", self.m);
+        s.u64("t", self.t);
         s.u64("block_m", self.block_m);
         s.u64("shard_m", self.shard_m);
         s.u64s("seeds", &self.seeds);
@@ -80,6 +86,7 @@ impl WireMessage for Setup {
             frac_bits: s.u64("frac_bits")?,
             k: s.u64("k")?,
             m: s.u64("m")?,
+            t: s.u64("t")?,
             block_m: s.u64("block_m")?,
             shard_m: s.u64("shard_m")?,
             seeds: s.u64s("seeds")?,
@@ -284,13 +291,37 @@ fn read_share_vecs<S: FieldSource>(s: &mut S) -> anyhow::Result<Vec<Vec<u64>>> {
 }
 
 /// Partial-result broadcast for one shard: β̂ and σ̂ for variant columns
-/// `[j0, j0 + beta.len())` (the per-shard slice of the `O(M)` downlink).
+/// `[j0, j0 + width)` across all `traits` traits (the per-shard slice of
+/// the `O(M·T)` downlink). `beta`/`se` are trait-major concatenations:
+/// `[trait 0's width values | trait 1's | ...]` — for `traits == 1` this
+/// is exactly the historical single-trait frame plus the count field.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardResult {
     pub shard: u64,
     pub j0: u64,
+    /// trait count T (≥ 1); beta/se carry `width · T` values each
+    pub traits: u64,
     pub beta: Vec<f64>,
     pub se: Vec<f64>,
+}
+
+impl ShardResult {
+    /// Variant columns covered by this frame.
+    pub fn width(&self) -> usize {
+        self.beta.len() / self.traits.max(1) as usize
+    }
+
+    /// Slice of `beta` belonging to trait `tt`.
+    pub fn beta_for(&self, tt: usize) -> &[f64] {
+        let w = self.width();
+        &self.beta[tt * w..(tt + 1) * w]
+    }
+
+    /// Slice of `se` belonging to trait `tt`.
+    pub fn se_for(&self, tt: usize) -> &[f64] {
+        let w = self.width();
+        &self.se[tt * w..(tt + 1) * w]
+    }
 }
 
 impl WireMessage for ShardResult {
@@ -300,6 +331,7 @@ impl WireMessage for ShardResult {
     fn write_fields<S: FieldSink>(&self, s: &mut S) {
         s.u64("shard", self.shard);
         s.u64("j0", self.j0);
+        s.u64("traits", self.traits);
         s.f64s("beta", &self.beta);
         s.f64s("se", &self.se);
     }
@@ -308,10 +340,16 @@ impl WireMessage for ShardResult {
         let r = ShardResult {
             shard: s.u64("shard")?,
             j0: s.u64("j0")?,
+            traits: s.u64("traits")?,
             beta: s.f64s("beta")?,
             se: s.f64s("se")?,
         };
         anyhow::ensure!(r.beta.len() == r.se.len(), "beta/se length mismatch");
+        anyhow::ensure!(r.traits >= 1, "trait count must be ≥ 1");
+        anyhow::ensure!(
+            r.beta.len() % r.traits as usize == 0,
+            "beta length not divisible by trait count"
+        );
         Ok(r)
     }
 }
@@ -364,6 +402,7 @@ mod tests {
             frac_bits: 24,
             k: 12,
             m: 1000,
+            t: 4,
             block_m: 256,
             shard_m: 128,
             seeds: vec![1, 2, 3, 4, u64::MAX],
@@ -428,6 +467,7 @@ mod tests {
         let m = ShardResult {
             shard: 2,
             j0: 512,
+            traits: 2,
             beta: vec![0.1, f64::NAN],
             se: vec![1.0, 2.0],
         };
@@ -435,6 +475,11 @@ mod tests {
         let got = ShardResult::from_frame(&m.to_frame()).unwrap();
         assert_eq!(got.shard, 2);
         assert_eq!(got.j0, 512);
+        assert_eq!(got.traits, 2);
+        assert_eq!(got.width(), 1);
+        assert_eq!(got.beta_for(0), &[0.1]);
+        assert!(got.beta_for(1)[0].is_nan());
+        assert_eq!(got.se_for(1), &[2.0]);
         assert_eq!(got.beta[0], 0.1);
         assert!(got.beta[1].is_nan());
         assert_eq!(got.se, vec![1.0, 2.0]);
@@ -447,7 +492,31 @@ mod tests {
     #[test]
     fn shard_result_rejects_mismatched_lengths() {
         let mut f = Frame::new(TAG_SHARD_RESULT);
-        f.put_u64(0).put_u64(0).put_f64_slice(&[1.0, 2.0]).put_f64_slice(&[1.0]);
+        f.put_u64(0)
+            .put_u64(0)
+            .put_u64(1)
+            .put_f64_slice(&[1.0, 2.0])
+            .put_f64_slice(&[1.0]);
+        assert!(ShardResult::from_frame(&f).is_err());
+    }
+
+    #[test]
+    fn shard_result_rejects_bad_trait_count() {
+        // traits = 0
+        let mut f = Frame::new(TAG_SHARD_RESULT);
+        f.put_u64(0)
+            .put_u64(0)
+            .put_u64(0)
+            .put_f64_slice(&[1.0, 2.0])
+            .put_f64_slice(&[1.0, 2.0]);
+        assert!(ShardResult::from_frame(&f).is_err());
+        // length not divisible by traits
+        let mut f = Frame::new(TAG_SHARD_RESULT);
+        f.put_u64(0)
+            .put_u64(0)
+            .put_u64(3)
+            .put_f64_slice(&[1.0, 2.0])
+            .put_f64_slice(&[1.0, 2.0]);
         assert!(ShardResult::from_frame(&f).is_err());
     }
 

@@ -59,6 +59,7 @@ pub fn run_multi_party_scan_t(
     let parties = cohort.parties.len();
     let k = cohort.k();
     let m = cohort.m();
+    let t = cohort.t();
 
     let mut leader_eps = Vec::with_capacity(parties);
     let mut party_eps = Vec::with_capacity(parties);
@@ -92,7 +93,7 @@ pub fn run_multi_party_scan_t(
                 party::serve(&ep, data, &compute)
             }));
         }
-        let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m };
+        let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m, t };
         let out = leader.run(seed);
         for (i, h) in handles.into_iter().enumerate() {
             let joined = h
@@ -121,7 +122,7 @@ mod tests {
 
     fn pooled_oracle(cohort: &crate::gwas::Cohort) -> crate::scan::ScanOutput {
         let pooled = pool_cohort(cohort);
-        let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, Some(2));
+        let cp = compress_party(&pooled.ys, &pooled.c, &pooled.x, 64, Some(2));
         let (layout, flat) = flatten_for_sum(&cp);
         let agg = unflatten_sum(layout, &flat).unwrap();
         combine_compressed(
@@ -142,8 +143,8 @@ mod tests {
         let res =
             run_multi_party_scan(&cohort, &small_cfg(Backend::Plaintext)).unwrap();
         let oracle = pooled_oracle(&cohort);
-        assert!(rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-10);
-        assert!(rel_err(&res.output.assoc.se, &oracle.assoc.se) < 1e-10);
+        assert!(rel_err(&res.output.assoc[0].beta, &oracle.assoc[0].beta) < 1e-10);
+        assert!(rel_err(&res.output.assoc[0].se, &oracle.assoc[0].se) < 1e-10);
     }
 
     #[test]
@@ -153,7 +154,7 @@ mod tests {
         let oracle = pooled_oracle(&cohort);
         // fixed-point: absolute error ~2^-24 on sums, relative ~1e-6 on stats
         for j in 0..cohort.m() {
-            let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+            let (a, b) = (res.output.assoc[0].beta[j], oracle.assoc[0].beta[j]);
             if a.is_finite() && b.is_finite() {
                 assert!(
                     (a - b).abs() < 1e-4 * b.abs().max(1.0),
@@ -173,7 +174,7 @@ mod tests {
         .unwrap();
         let oracle = pooled_oracle(&cohort);
         for j in 0..cohort.m() {
-            let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+            let (a, b) = (res.output.assoc[0].beta[j], oracle.assoc[0].beta[j]);
             if a.is_finite() && b.is_finite() {
                 assert!(
                     (a - b).abs() < 1e-4 * b.abs().max(1.0),
@@ -195,7 +196,7 @@ mod tests {
         let mut last = None;
         for _attempt in 0..2 {
             let b = run_multi_party_scan_t(&cohort, &cfg, Transport::Tcp, 99).unwrap();
-            let ok = rel_err(&a.output.assoc.beta, &b.output.assoc.beta) < 1e-12
+            let ok = rel_err(&a.output.assoc[0].beta, &b.output.assoc[0].beta) < 1e-12
                 && a.metrics.bytes_total == b.metrics.bytes_total;
             last = Some((b.metrics.bytes_total, ok));
             if ok {

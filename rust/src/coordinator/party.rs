@@ -1,11 +1,12 @@
 //! Party-side protocol state machine.
 //!
-//! A party owns its local `(y, C, X)` and an [`Endpoint`] to the leader.
-//! [`serve`] runs the sharded session: SETUP → COMPRESS → base
-//! contribution → one contribution per variant shard → per-shard RESULT
-//! frames → SHUTDOWN. The raw data never crosses the endpoint; only
-//! compressed (and, in secure modes, encoded+masked/shared) statistics
-//! do.
+//! A party owns its local `(Y, C, X)` — `Y` being the `N_p × T` trait
+//! matrix, `T = 1` for a classic single-trait scan — and an [`Endpoint`]
+//! to the leader. [`serve`] runs the sharded session: SETUP → COMPRESS →
+//! base contribution → one contribution per variant shard → per-shard
+//! RESULT frames → SHUTDOWN. The raw data never crosses the endpoint;
+//! only compressed (and, in secure modes, encoded+masked/shared)
+//! statistics do.
 //!
 //! ## Streaming and overlap
 //!
@@ -14,15 +15,18 @@
 //! results — so while the leader is aggregating + combining shard `s`,
 //! this thread is already compressing shard `s+1` (the transport
 //! buffers, or applies backpressure, in between). Peak memory here is
-//! `O(N_p·K)` input plus `O(K·width)` per-shard statistics; the full
-//! `O(K·M)` statistics block is never materialized. Shamir mode
+//! `O(N_p·(K+T))` input plus `O((K+T)·width)` per-shard statistics; the
+//! full `O((K+T)·M)` statistics block is never materialized. Shamir mode
 //! interposes a share-routing round trip per shard, which serializes
 //! parties per shard but keeps the same bounded-memory shape.
 //!
 //! The AOT artifact engine currently lowers the whole-`M` compress, so
-//! in artifact mode the party computes the full block once and slices
-//! shards out of it — protocol traffic stays shard-bounded, local
-//! memory does not (tracked in ROADMAP: per-shard artifact lowering).
+//! in artifact mode the party computes the full block once, pre-splits
+//! it into per-shard column blocks, and **releases each shard's columns
+//! as soon as its contribution is sent** — local memory decays over the
+//! session instead of holding the whole block to the end. The remaining
+//! gap is the transient whole-`M` materialization at compress time
+//! (tracked in ROADMAP: per-shard artifact lowering).
 
 use super::messages::*;
 use crate::gwas::PartyData;
@@ -33,7 +37,7 @@ use crate::mpc::shamir;
 use crate::net::{Endpoint, WireMessage};
 use crate::runtime::Engine;
 use crate::scan::{
-    compress_base, compress_variant_block, BaseStats, CompressedParty, ShardPlan, ShardRange,
+    compress_base, compress_variant_block, BaseStats, ShardPlan, ShardRange,
     VariantBlockStats,
 };
 
@@ -46,39 +50,55 @@ pub enum ComputeBackend {
 }
 
 /// Per-session compute state: either stream shard-by-shard (pure Rust)
-/// or slice a cached whole-`M` block (artifact engine).
+/// or serve pre-split blocks of a whole-`M` compression (artifact
+/// engine), releasing each block once its contribution is sent.
 enum CompressState<'a> {
     Streaming {
         data: &'a PartyData,
         block_m: usize,
         threads: Option<usize>,
     },
-    Cached(Box<CompressedParty>),
+    Cached {
+        base: BaseStats,
+        /// per-shard column blocks; `take()`n (and thus freed) as each
+        /// shard's contribution goes out
+        shards: Vec<Option<VariantBlockStats>>,
+    },
 }
 
 impl CompressState<'_> {
     fn base(&self) -> BaseStats {
         match self {
-            CompressState::Streaming { data, .. } => compress_base(&data.y, &data.c),
-            CompressState::Cached(cp) => cp.base(),
+            CompressState::Streaming { data, .. } => compress_base(&data.ys, &data.c),
+            CompressState::Cached { base, .. } => base.clone(),
         }
     }
 
-    fn shard(&self, r: ShardRange) -> VariantBlockStats {
+    fn shard(&mut self, r: ShardRange) -> VariantBlockStats {
         match self {
-            CompressState::Streaming { data, block_m, threads } => {
-                compress_variant_block(&data.y, &data.c, &data.x, r.j0, r.j1, *block_m, *threads)
-            }
-            CompressState::Cached(cp) => cp.variant_block(r.j0, r.j1),
+            CompressState::Streaming { data, block_m, threads } => compress_variant_block(
+                &data.ys,
+                &data.c,
+                &data.x,
+                r.j0,
+                r.j1,
+                *block_m,
+                *threads,
+            ),
+            CompressState::Cached { shards, .. } => shards[r.index]
+                .take()
+                .expect("shard contribution requested twice"),
         }
     }
 }
 
-/// Result a party receives at the end of a session.
+/// Result a party receives at the end of a session: per-trait β̂ / σ̂
+/// vectors (index `[trait][variant]`; `T = 1` sessions have exactly one
+/// entry each).
 #[derive(Clone, Debug)]
 pub struct PartyResult {
-    pub beta: Vec<f64>,
-    pub se: Vec<f64>,
+    pub beta: Vec<Vec<f64>>,
+    pub se: Vec<Vec<f64>>,
 }
 
 /// Run the party side of one scan session. Returns the assembled
@@ -106,20 +126,42 @@ fn serve_inner(
     let setup = Setup::from_frame(&endpoint.recv()?)?;
     anyhow::ensure!(setup.k as usize == data.c.cols, "setup K mismatch");
     anyhow::ensure!(setup.m as usize == data.x.cols, "setup M mismatch");
+    anyhow::ensure!(setup.t as usize == data.ys.cols, "setup trait-count mismatch");
     let m = setup.m as usize;
+    let t = setup.t as usize;
     let plan = ShardPlan::new(m, setup.shard_m as usize);
 
     Compress::from_frame(&endpoint.recv()?)?;
 
-    let state = match compute {
+    let mut state = match compute {
         ComputeBackend::Rust { threads } => CompressState::Streaming {
             data,
             block_m: setup.block_m as usize,
             threads: *threads,
         },
-        ComputeBackend::Artifacts(engine) => CompressState::Cached(Box::new(
-            engine.compress_party(&data.y, &data.c, &data.x)?,
-        )),
+        ComputeBackend::Artifacts(engine) => {
+            // The artifact lowers the whole-M compress; pre-split into
+            // per-shard blocks so each can be freed after its round.
+            // Splitting peels the block tail-first: the trait-major
+            // `XᵀY` (the T-dominant piece) and `X·X` are *moved* out
+            // shard by shard, never duplicated — only the K×M `CᵀX`
+            // is briefly held alongside its per-shard copies.
+            let mut cp = engine.compress_party(&data.ys, &data.c, &data.x)?;
+            let base = cp.base();
+            let ranges: Vec<ShardRange> = plan.ranges().collect();
+            let mut shards: Vec<Option<VariantBlockStats>> = vec![None; ranges.len()];
+            // Reverse order: each split_off leaves exactly [0, j0), so
+            // the next (earlier) shard's tail is again the full suffix.
+            for r in ranges.into_iter().rev() {
+                shards[r.index] = Some(VariantBlockStats {
+                    j0: r.j0,
+                    xty: cp.xty.split_off_rows(r.j0),
+                    xtx: cp.xtx.split_off(r.j0),
+                    ctx: cp.ctx.col_slice(r.j0, r.j1),
+                });
+            }
+            CompressState::Cached { base, shards }
+        }
     };
 
     let codec = FixedCodec::new(setup.frac_bits as u32);
@@ -214,16 +256,18 @@ fn serve_inner(
     };
 
     // Base round, then stream every shard. The leader consumes shards in
-    // order while we keep compressing ahead of it.
+    // order while we keep compressing ahead of it; in cached mode each
+    // shard's columns are freed right after this send.
     contribute(&base.flatten(), 0)?;
     for r in plan.ranges() {
         let flat = state.shard(r).flatten();
         contribute(&flat, r.index + 1)?;
     }
 
-    // Drain the per-shard partial results in scan order.
-    let mut beta = Vec::with_capacity(m);
-    let mut se = Vec::with_capacity(m);
+    // Drain the per-shard partial results in scan order, de-interleaving
+    // the trait-major frames into per-trait vectors.
+    let mut beta = vec![Vec::with_capacity(m); t];
+    let mut se = vec![Vec::with_capacity(m); t];
     for r in plan.ranges() {
         let sr = ShardResult::from_frame(&endpoint.recv()?)?;
         anyhow::ensure!(
@@ -234,9 +278,12 @@ fn serve_inner(
             r.index,
             r.j0
         );
-        anyhow::ensure!(sr.beta.len() == r.width(), "shard result width mismatch");
-        beta.extend_from_slice(&sr.beta);
-        se.extend_from_slice(&sr.se);
+        anyhow::ensure!(sr.traits as usize == t, "shard result trait-count mismatch");
+        anyhow::ensure!(sr.width() == r.width(), "shard result width mismatch");
+        for tt in 0..t {
+            beta[tt].extend_from_slice(sr.beta_for(tt));
+            se[tt].extend_from_slice(sr.se_for(tt));
+        }
     }
 
     Shutdown::from_frame(&endpoint.recv()?)?;

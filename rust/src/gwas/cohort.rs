@@ -11,6 +11,9 @@ pub struct CohortSpec {
     pub party_sizes: Vec<usize>,
     /// number of variants to scan (M)
     pub m_variants: usize,
+    /// number of traits scanned jointly (T; 1 = classic single-trait
+    /// GWAS, ~4K = biobank PheWAS, ~20K = eQTL)
+    pub n_traits: usize,
     /// number of causal variants
     pub n_causal: usize,
     /// effect-size scale of causal variants (per standardized genotype)
@@ -36,6 +39,7 @@ impl CohortSpec {
         CohortSpec {
             party_sizes: vec![250, 200, 150],
             m_variants: 300,
+            n_traits: 1,
             n_causal: 5,
             effect_sd: 0.35,
             fst: 0.05,
@@ -62,6 +66,7 @@ impl CohortSpec {
 
     fn validate(&self) {
         assert!(!self.party_sizes.is_empty(), "need ≥1 party");
+        assert!(self.n_traits >= 1, "need ≥1 trait");
         assert_eq!(
             self.party_admixture.len(),
             self.party_sizes.len(),
@@ -81,8 +86,9 @@ impl CohortSpec {
 /// One party's local data (never leaves the party in secure modes).
 #[derive(Clone, Debug)]
 pub struct PartyData {
-    /// response vector, length N_p
-    pub y: Vec<f64>,
+    /// trait matrix, N_p × T (column 0 = the primary trait; T = 1 for a
+    /// classic single-trait scan)
+    pub ys: Matrix,
     /// permanent covariates, N_p × K (column 0 = intercept)
     pub c: Matrix,
     /// transient covariates (genotypes), N_p × M
@@ -91,7 +97,12 @@ pub struct PartyData {
 
 impl PartyData {
     pub fn n(&self) -> usize {
-        self.y.len()
+        self.ys.rows
+    }
+
+    /// Number of traits carried by this party's data.
+    pub fn t(&self) -> usize {
+        self.ys.cols
     }
 }
 
@@ -100,7 +111,9 @@ impl PartyData {
 #[derive(Clone, Debug)]
 pub struct Truth {
     pub causal_idx: Vec<usize>,
-    pub causal_beta: Vec<f64>,
+    /// per-trait causal effects, `n_traits × n_causal` (row 0 = the
+    /// primary trait)
+    pub causal_beta: Matrix,
     pub freqs: Vec<VariantFreqs>,
 }
 
@@ -121,33 +134,59 @@ impl Cohort {
         self.spec.m_variants
     }
 
+    pub fn t(&self) -> usize {
+        self.spec.n_traits
+    }
+
     pub fn n_total(&self) -> usize {
         self.parties.iter().map(|p| p.n()).sum()
     }
 }
 
 /// Generate a cohort from a spec, deterministically in `seed`.
+///
+/// Trait 0 reproduces the historical single-trait generator draw-for-draw
+/// (a `n_traits = 1` cohort is bit-identical to what the pre-trait-major
+/// generator produced). Extra traits share the causal variant set with
+/// per-trait effect sizes and their own noise, all drawn from *derived*
+/// RNG streams so they never perturb trait 0, the covariates, or the
+/// genotypes.
 pub fn generate_cohort(spec: &CohortSpec, seed: u64) -> Cohort {
     spec.validate();
     let mut rng = Rng::new(seed);
     let m = spec.m_variants;
     let k = spec.k_covariates();
+    let t = spec.n_traits;
     let freqs = sample_allele_freqs(m, spec.fst, 0.05, &mut rng);
 
     // causal architecture
     let mut idx: Vec<usize> = (0..m).collect();
     rng.shuffle(&mut idx);
     let causal_idx: Vec<usize> = idx[..spec.n_causal].to_vec();
-    let causal_beta: Vec<f64> =
-        (0..spec.n_causal).map(|_| rng.normal_ms(0.0, spec.effect_sd)).collect();
+    let mut causal_beta = Matrix::zeros(t, spec.n_causal);
+    for ci in 0..spec.n_causal {
+        causal_beta[(0, ci)] = rng.normal_ms(0.0, spec.effect_sd);
+    }
+    // extra-trait effects from a derived stream (leaves `rng` untouched)
+    let mut beta_rng = rng.derive(0xBE7A);
+    for tt in 1..t {
+        for ci in 0..spec.n_causal {
+            causal_beta[(tt, ci)] = beta_rng.normal_ms(0.0, spec.effect_sd);
+        }
+    }
 
     let mut parties = Vec::with_capacity(spec.parties());
     for (p, &np) in spec.party_sizes.iter().enumerate() {
         let mut prng = rng.derive(1000 + p as u64);
+        // extra-trait noise/batch stream, derived so trait 0 stays on the
+        // historical draw sequence
+        let mut trng = prng.derive(0x712A17);
         let batch = prng.normal_ms(0.0, spec.batch_effect_sd);
+        let extra_batch: Vec<f64> =
+            (1..t).map(|_| trng.normal_ms(0.0, spec.batch_effect_sd)).collect();
         let mut c = Matrix::zeros(np, k);
         let mut x = Matrix::zeros(np, m);
-        let mut y = vec![0.0; np];
+        let mut ys = Matrix::zeros(np, t);
         for i in 0..np {
             // individual admixture around the party mean
             let theta = (spec.party_admixture[p] + prng.normal_ms(0.0, 0.1)).clamp(0.0, 1.0);
@@ -165,20 +204,30 @@ pub fn generate_cohort(spec: &CohortSpec, seed: u64) -> Cohort {
             for j in 0..m {
                 x[(i, j)] = freqs[j].genotype(theta, &mut prng);
             }
-            // trait: causal effects on standardized genotypes + covariate
-            // effects + ancestry confounding + batch + noise
-            let mut v = 0.2 * c[(i, 1)] - 0.1 * c[(i, 2)]
-                + spec.ancestry_effect * theta
-                + batch
-                + prng.normal_ms(0.0, spec.noise_sd);
+            // trait 0: causal effects on standardized genotypes +
+            // covariate effects + ancestry confounding + batch + noise
+            let fixed = 0.2 * c[(i, 1)] - 0.1 * c[(i, 2)] + spec.ancestry_effect * theta;
+            let mut v = fixed + batch + prng.normal_ms(0.0, spec.noise_sd);
             for (ci, &j) in causal_idx.iter().enumerate() {
                 let f = freqs[j].ancestral;
                 let sd = (2.0 * f * (1.0 - f)).sqrt();
-                v += causal_beta[ci] * (x[(i, j)] - 2.0 * f) / sd;
+                v += causal_beta[(0, ci)] * (x[(i, j)] - 2.0 * f) / sd;
             }
-            y[i] = v;
+            ys[(i, 0)] = v;
+            // extra traits: same structural model, per-trait effects and
+            // noise from the derived stream
+            for tt in 1..t {
+                let mut vt =
+                    fixed + extra_batch[tt - 1] + trng.normal_ms(0.0, spec.noise_sd);
+                for (ci, &j) in causal_idx.iter().enumerate() {
+                    let f = freqs[j].ancestral;
+                    let sd = (2.0 * f * (1.0 - f)).sqrt();
+                    vt += causal_beta[(tt, ci)] * (x[(i, j)] - 2.0 * f) / sd;
+                }
+                ys[(i, tt)] = vt;
+            }
         }
-        parties.push(PartyData { y, c, x });
+        parties.push(PartyData { ys, c, x });
     }
 
     Cohort { spec: spec.clone(), parties, truth: Truth { causal_idx, causal_beta, freqs } }
@@ -186,10 +235,10 @@ pub fn generate_cohort(spec: &CohortSpec, seed: u64) -> Cohort {
 
 /// Pool a cohort into single-party matrices (oracle / baseline path).
 pub fn pool_cohort(cohort: &Cohort) -> PartyData {
-    let ys: Vec<f64> = cohort.parties.iter().flat_map(|p| p.y.iter().copied()).collect();
+    let ys: Vec<&Matrix> = cohort.parties.iter().map(|p| &p.ys).collect();
     let cs: Vec<&Matrix> = cohort.parties.iter().map(|p| &p.c).collect();
     let xs: Vec<&Matrix> = cohort.parties.iter().map(|p| &p.x).collect();
-    PartyData { y: ys, c: Matrix::vstack(&cs), x: Matrix::vstack(&xs) }
+    PartyData { ys: Matrix::vstack(&ys), c: Matrix::vstack(&cs), x: Matrix::vstack(&xs) }
 }
 
 #[cfg(test)]
@@ -203,6 +252,7 @@ mod tests {
         assert_eq!(cohort.parties.len(), 3);
         for (p, party) in cohort.parties.iter().enumerate() {
             assert_eq!(party.n(), spec.party_sizes[p]);
+            assert_eq!(party.t(), 1);
             assert_eq!(party.c.cols, spec.k_covariates());
             assert_eq!(party.x.cols, spec.m_variants);
         }
@@ -210,14 +260,38 @@ mod tests {
     }
 
     #[test]
+    fn multi_trait_shapes_and_trait0_invariance() {
+        let mut spec = CohortSpec::default_small();
+        let single = generate_cohort(&spec, 21);
+        spec.n_traits = 4;
+        let multi = generate_cohort(&spec, 21);
+        for (a, b) in single.parties.iter().zip(&multi.parties) {
+            assert_eq!(b.t(), 4);
+            // trait 0, covariates, and genotypes are bit-identical to the
+            // single-trait cohort from the same seed
+            assert_eq!(a.ys.col(0), b.ys.col(0));
+            assert_eq!(a.c.data, b.c.data);
+            assert_eq!(a.x.data, b.x.data);
+            // extra traits actually differ from trait 0
+            assert_ne!(b.ys.col(0), b.ys.col(1));
+        }
+        assert_eq!(multi.truth.causal_beta.rows, 4);
+        assert_eq!(
+            single.truth.causal_beta.data,
+            multi.truth.causal_beta.row_slice(0, 1).data
+        );
+    }
+
+    #[test]
     fn deterministic_in_seed() {
-        let spec = CohortSpec::default_small();
+        let mut spec = CohortSpec::default_small();
+        spec.n_traits = 3;
         let a = generate_cohort(&spec, 9);
         let b = generate_cohort(&spec, 9);
-        assert_eq!(a.parties[0].y, b.parties[0].y);
+        assert_eq!(a.parties[0].ys.data, b.parties[0].ys.data);
         assert_eq!(a.parties[2].x.data, b.parties[2].x.data);
         let c = generate_cohort(&spec, 10);
-        assert_ne!(a.parties[0].y, c.parties[0].y);
+        assert_ne!(a.parties[0].ys.data, c.parties[0].ys.data);
     }
 
     #[test]
@@ -242,12 +316,15 @@ mod tests {
 
     #[test]
     fn pool_preserves_order_and_counts() {
-        let cohort = generate_cohort(&CohortSpec::default_small(), 13);
+        let mut spec = CohortSpec::default_small();
+        spec.n_traits = 2;
+        let cohort = generate_cohort(&spec, 13);
         let pooled = pool_cohort(&cohort);
         assert_eq!(pooled.n(), cohort.n_total());
-        assert_eq!(pooled.y[0], cohort.parties[0].y[0]);
+        assert_eq!(pooled.t(), 2);
+        assert_eq!(pooled.ys[(0, 0)], cohort.parties[0].ys[(0, 0)]);
         let n0 = cohort.parties[0].n();
-        assert_eq!(pooled.y[n0], cohort.parties[1].y[0]);
+        assert_eq!(pooled.ys[(n0, 1)], cohort.parties[1].ys[(0, 1)]);
         assert_eq!(pooled.x.rows, cohort.n_total());
     }
 
@@ -278,6 +355,14 @@ mod tests {
     fn mismatched_admixture_panics() {
         let mut spec = CohortSpec::default_small();
         spec.party_admixture = vec![0.5];
+        let _ = generate_cohort(&spec, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "≥1 trait")]
+    fn zero_traits_panics() {
+        let mut spec = CohortSpec::default_small();
+        spec.n_traits = 0;
         let _ = generate_cohort(&spec, 1);
     }
 }

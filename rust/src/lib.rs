@@ -8,12 +8,16 @@
 //! - **Layer 3 (this crate)** — the multi-party *coordinator*: party and
 //!   leader state machines ([`coordinator`]), an SMC substrate ([`mpc`]),
 //!   byte-metered transports ([`net`]), and the high-level scan engine
-//!   ([`scan`]). Scans stream over a **variant-shard pipeline**
-//!   ([`scan::ShardPlan`], [`scan::ScanConfig::shard_m`]): each shard is
-//!   one secure-sum round of `O(K·width)` bytes, parties compress shard
-//!   `s+1` while the leader combines shard `s`, and the classic
-//!   single-shot protocol is the degenerate one-shard plan. Results are
-//!   bit-identical across shard widths.
+//!   ([`scan`]). The protocol is **trait-major**: all statistics carry a
+//!   trait dimension `T` (§3's "promote y to a matrix Y"), the
+//!   genotype-sized pieces are shared across traits, and the classic
+//!   single-trait scan is the degenerate `T = 1` case. Scans stream over
+//!   a **variant-shard pipeline** ([`scan::ShardPlan`],
+//!   [`scan::ScanConfig::shard_m`]): each shard is one secure-sum round
+//!   of `O((K+T)·width)` bytes, parties compress shard `s+1` while the
+//!   leader combines shard `s`, and the classic single-shot protocol is
+//!   the degenerate one-shard plan. Results are bit-identical across
+//!   shard widths and across trait batching.
 //! - **Layer 2** — a JAX model (`python/compile/model.py`) computing the
 //!   compressed sufficient statistics and the Lemma 3.1 epilogue, lowered
 //!   once to HLO text artifacts.

@@ -39,6 +39,11 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Single-column matrix from a vector — the `T = 1` trait matrix.
+    pub fn from_col(data: Vec<f64>) -> Matrix {
+        Matrix { rows: data.len(), cols: 1, data }
+    }
+
     /// i.i.d. standard normal entries (workload + test generator).
     pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
         let mut m = Matrix::zeros(rows, cols);
@@ -57,8 +62,25 @@ impl Matrix {
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Column `j` as an owned vector. Reads the backing storage with a
+    /// single row stride instead of per-element `Index` calls (bounds
+    /// checks once, vectorizable gather).
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        assert!(j < self.cols, "col {j} out of range ({} cols)", self.cols);
+        if self.rows == 0 {
+            return Vec::new();
+        }
+        self.data[j..].iter().step_by(self.cols).copied().collect()
+    }
+
+    /// Iterate columns `range` in order as owned vectors — the trait-dim
+    /// slicing used to peel per-trait columns out of `Y`, `CᵀY`, `XᵀY`.
+    pub fn cols(
+        &self,
+        range: std::ops::Range<usize>,
+    ) -> impl Iterator<Item = Vec<f64>> + '_ {
+        assert!(range.end <= self.cols, "cols range beyond {} cols", self.cols);
+        range.map(move |j| self.col(j))
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -215,6 +237,21 @@ impl Matrix {
         }
     }
 
+    /// Split off rows `[r, rows)` into a new matrix, keeping `[0, r)` in
+    /// place — the retained prefix is never copied, so peeling a
+    /// row-major block apart tail-first is allocation-moving, not
+    /// duplicating (used to shard the cached `M × T` trait block).
+    pub fn split_off_rows(&mut self, r: usize) -> Matrix {
+        assert!(r <= self.rows, "split row {r} beyond {} rows", self.rows);
+        let tail = Matrix {
+            rows: self.rows - r,
+            cols: self.cols,
+            data: self.data.split_off(r * self.cols),
+        };
+        self.rows = r;
+        tail
+    }
+
     /// Max absolute entry.
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
@@ -307,6 +344,46 @@ mod tests {
         assert_eq!(s.row(2), &[5.0, 6.0]);
         assert_eq!(s.row_slice(1, 3).data, b.data);
         assert_eq!(s.col_slice(1, 2).col(0), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn col_and_cols_range() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(m.col(0), vec![1.0, 4.0]);
+        assert_eq!(m.col(2), vec![3.0, 6.0]);
+        let mid: Vec<Vec<f64>> = m.cols(1..3).collect();
+        assert_eq!(mid, vec![vec![2.0, 5.0], vec![3.0, 6.0]]);
+        assert_eq!(m.cols(0..0).count(), 0);
+        // empty matrix edge
+        let e = Matrix::zeros(0, 2);
+        assert_eq!(e.col(1), Vec::<f64>::new());
+        // single-column view round-trips through from_col
+        assert_eq!(Matrix::from_col(m.col(1)).data, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn col_out_of_range_panics() {
+        let _ = Matrix::zeros(2, 2).col(2);
+    }
+
+    #[test]
+    fn split_off_rows_partitions_without_copying_prefix() {
+        let full = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let mut m = full.clone();
+        let tail = m.split_off_rows(1);
+        assert_eq!((m.rows, m.cols), (1, 2));
+        assert_eq!(m.data, vec![1.0, 2.0]);
+        assert_eq!((tail.rows, tail.cols), (2, 2));
+        assert_eq!(tail.data, full.row_slice(1, 3).data);
+        // degenerate splits
+        let mut m2 = full.clone();
+        assert_eq!(m2.split_off_rows(3).rows, 0);
+        assert_eq!(m2.rows, 3);
+        let mut m3 = full.clone();
+        let all = m3.split_off_rows(0);
+        assert_eq!(all.data, full.data);
+        assert_eq!(m3.rows, 0);
     }
 
     #[test]

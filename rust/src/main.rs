@@ -68,6 +68,7 @@ fn scan_command() -> Command {
         .opt("parties", "4", "number of parties")
         .opt("n", "2000", "total samples (split across parties)")
         .opt("m", "2000", "number of variants")
+        .opt("traits", "1", "number of traits scanned jointly (T; the genotype-side cost is shared across traits)")
         .opt("backend", "masked", "SMC backend: plaintext|masked|shamir")
         .opt("seed", "7", "rng seed")
         .opt("block-m", "256", "variant block width")
@@ -94,6 +95,9 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
         .collect();
     cfg.cohort.m_variants = m;
+    let traits = a.get_usize("traits")?;
+    anyhow::ensure!(traits >= 1, "--traits must be ≥ 1");
+    cfg.cohort.n_traits = traits;
     cfg.cohort.n_causal = cfg.cohort.n_causal.min(m);
     cfg.scan.backend = Backend::parse(a.get("backend").unwrap(), parties)?;
     cfg.seed = a.get_u64("seed")?;
@@ -107,10 +111,11 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     let alpha = a.get_f64("alpha")?;
 
     eprintln!(
-        "generating cohort: P={} N={} M={} K={} ...",
+        "generating cohort: P={} N={} M={} T={} K={} ...",
         parties,
         n,
         m,
+        cfg.cohort.n_traits,
         cfg.cohort.k_covariates()
     );
     let cohort = generate_cohort(&cfg.cohort, cfg.seed);
@@ -127,6 +132,7 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     println!("parties           {parties}");
     println!("samples (N)       {}", cohort.n_total());
     println!("variants (M)      {m}");
+    println!("traits (T)        {}", cohort.t());
     println!("covariates (K)    {}", cohort.k());
     println!("backend           {}", cfg.scan.backend.name());
     println!(
@@ -137,25 +143,33 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     println!("compress wall     {}", human_secs(res.metrics.compress_wall_s));
     println!("combine           {}", human_secs(res.metrics.combine_s));
     println!("total             {}", human_secs(res.metrics.total_s));
-    println!("variants/sec      {:.0}", m as f64 / res.metrics.total_s);
+    println!(
+        "variant·traits/s  {:.0}",
+        (m * cohort.t()) as f64 / res.metrics.total_s
+    );
     println!("inter-party bytes {}", human_bytes(res.metrics.bytes_total));
     println!("peak round bytes  {}", human_bytes(res.metrics.bytes_max_round));
     println!(
-        "bytes/variant     {:.1}",
-        res.metrics.bytes_total as f64 / m as f64
+        "bytes/(variant·trait) {:.1}",
+        res.metrics.bytes_total as f64 / (m * cohort.t()) as f64
     );
     let hits = res.output.hits(alpha);
-    println!("hits (p < {alpha:.1e}): {}", hits.len());
+    println!("hits, trait 0 (p < {alpha:.1e}): {}", hits.len());
     for &j in hits.iter().take(10) {
         let is_causal = cohort.truth.causal_idx.contains(&j);
         println!(
             "  variant {:>6}  beta={:+.4}  se={:.4}  p={:.3e}{}",
             j,
-            res.output.assoc.beta[j],
-            res.output.assoc.se[j],
-            res.output.assoc.p[j],
+            res.output.assoc[0].beta[j],
+            res.output.assoc[0].se[j],
+            res.output.assoc[0].p[j],
             if is_causal { "  [causal]" } else { "" }
         );
+    }
+    if cohort.t() > 1 {
+        let total_hits: usize =
+            (0..cohort.t()).map(|tt| res.output.hits_for(tt, alpha).len()).sum();
+        println!("hits, all {} traits: {}", cohort.t(), total_hits);
     }
 
     if let Some(path) = a.get("report") {
@@ -168,6 +182,7 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
                 .set("combine_s", res.metrics.combine_s)
                 .set("total_s", res.metrics.total_s)
                 .set("shards", res.metrics.shards)
+                .set("traits", cohort.t())
                 .set("bytes_max_round", res.metrics.bytes_max_round)
                 .set("n_hits", hits.len())
                 .set("min_p", res.output.min_p_value().unwrap_or(f64::NAN));
@@ -195,9 +210,10 @@ fn cmd_regress(raw: &[String]) -> anyhow::Result<()> {
     let cps: Vec<_> = cohort
         .parties
         .iter()
-        .map(|p| dash::scan::compress_party(&p.y, &p.c, &p.x, 1, None))
+        .map(|p| dash::scan::compress_party(&p.ys, &p.c, &p.x, 1, None))
         .collect();
-    let fit = combine_regression(&cps)?;
+    let fits = combine_regression(&cps)?;
+    let fit = &fits[0];
     println!("== dash regress ==  N={} K={}", cohort.n_total(), cohort.k());
     println!("{:>4} {:>12} {:>12} {:>10} {:>12}", "k", "gamma", "se", "t", "p");
     for i in 0..fit.gamma.len() {

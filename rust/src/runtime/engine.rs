@@ -61,19 +61,28 @@ impl Engine {
         parts.into_iter().map(|p| Ok(p.to_vec::<f64>()?)).collect()
     }
 
-    /// Compress one party's data through the AOT artifacts. Produces the
-    /// same `CompressedParty` as the pure-Rust path (verified by
-    /// integration tests to ~1e-12).
+    /// Compress one party's data through the AOT artifacts. `ys` is the
+    /// `N × T` trait matrix; produces the same trait-major
+    /// `CompressedParty` as the pure-Rust path (verified by integration
+    /// tests to ~1e-12).
+    ///
+    /// The artifact entries are single-trait, so trait columns are fed
+    /// through `compress_yc`/`compress_x` one at a time; the shared
+    /// genotype statistics (`X·X`, `CᵀX`, `CᵀC`) are taken from trait 0
+    /// only. A trait-batched `compress_xy` entry would amortize the `X`
+    /// passes (tracked in ROADMAP next to per-shard artifact lowering).
     pub fn compress_party(
         &self,
-        y: &[f64],
+        ys: &Matrix,
         c: &Matrix,
         x: &Matrix,
     ) -> anyhow::Result<CompressedParty> {
-        let n = y.len();
+        let n = ys.rows;
         anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
+        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
         let k = c.cols;
         let m = x.cols;
+        let t_count = ys.cols;
         let (nb, mb, kp) = (self.manifest.n_block, self.manifest.m_block, self.manifest.k_pad);
         anyhow::ensure!(
             k <= kp,
@@ -83,10 +92,10 @@ impl Engine {
         let n_blocks = n.div_ceil(nb).max(1);
         let m_blocks = m.div_ceil(mb).max(1);
 
-        let mut yty = 0.0;
-        let mut cty = vec![0.0; kp];
+        let mut yty = vec![0.0; t_count];
+        let mut cty_pad = vec![0.0; kp * t_count]; // kp rows × T, row-major
         let mut ctc = vec![0.0; kp * kp];
-        let mut xty = vec![0.0; m];
+        let mut xty = Matrix::zeros(m, t_count);
         let mut xtx = vec![0.0; m];
         let mut ctx = Matrix::zeros(k, m);
 
@@ -99,9 +108,7 @@ impl Engine {
             let r0 = bi * nb;
             let r1 = (r0 + nb).min(n);
             let rows = r1 - r0;
-            // pack y, C with zero padding
-            y_buf.fill(0.0);
-            y_buf[..rows].copy_from_slice(&y[r0..r1]);
+            // pack C with zero padding
             c_buf.fill(0.0);
             for i in 0..rows {
                 let src = c.row(r0 + i);
@@ -110,17 +117,28 @@ impl Engine {
             // build the y/C literals once per sample block — reshape
             // allocates a fresh literal, so it must stay out of the
             // variant loop (EXPERIMENTS.md §Perf iteration 3)
-            let y_lit = xla::Literal::vec1(&y_buf);
             let c_lit = xla::Literal::vec1(&c_buf).reshape(&[nb as i64, kp as i64])?;
-
-            // covariate-side statistics once per sample block
-            let out = self.run("compress_yc", &[&y_lit, &c_lit])?;
-            yty += out[0][0];
-            for i in 0..kp {
-                cty[i] += out[1][i];
+            let mut y_lits = Vec::with_capacity(t_count);
+            for tt in 0..t_count {
+                y_buf.fill(0.0);
+                for i in 0..rows {
+                    y_buf[i] = ys[(r0 + i, tt)];
+                }
+                y_lits.push(xla::Literal::vec1(&y_buf));
             }
-            for i in 0..kp * kp {
-                ctc[i] += out[2][i];
+
+            // covariate-side statistics once per sample block per trait
+            for (tt, y_lit) in y_lits.iter().enumerate() {
+                let out = self.run("compress_yc", &[y_lit, &c_lit])?;
+                yty[tt] += out[0][0];
+                for i in 0..kp {
+                    cty_pad[i * t_count + tt] += out[1][i];
+                }
+                if tt == 0 {
+                    for i in 0..kp * kp {
+                        ctc[i] += out[2][i];
+                    }
+                }
             }
 
             // variant blocks
@@ -134,23 +152,34 @@ impl Engine {
                     x_buf[i * mb..i * mb + cols].copy_from_slice(src);
                 }
                 let x_lit = xla::Literal::vec1(&x_buf).reshape(&[nb as i64, mb as i64])?;
-                let out = self.run("compress_x", &[&y_lit, &c_lit, &x_lit])?;
-                // out: xty (mb), xtx (mb), ctx (kp × mb)
-                for j in 0..cols {
-                    xty[c0 + j] += out[0][j];
-                    xtx[c0 + j] += out[1][j];
-                }
-                for kk in 0..k {
-                    let row = ctx.row_mut(kk);
+                for (tt, y_lit) in y_lits.iter().enumerate() {
+                    let out = self.run("compress_x", &[y_lit, &c_lit, &x_lit])?;
+                    // out: xty (mb), xtx (mb), ctx (kp × mb)
                     for j in 0..cols {
-                        row[c0 + j] += out[2][kk * mb + j];
+                        xty[(c0 + j, tt)] += out[0][j];
+                    }
+                    if tt == 0 {
+                        for j in 0..cols {
+                            xtx[c0 + j] += out[1][j];
+                        }
+                        for kk in 0..k {
+                            let row = ctx.row_mut(kk);
+                            for j in 0..cols {
+                                row[c0 + j] += out[2][kk * mb + j];
+                            }
+                        }
                     }
                 }
             }
         }
 
         // Slice covariate padding away.
-        let cty_k = cty[..k].to_vec();
+        let mut cty_k = Matrix::zeros(k, t_count);
+        for i in 0..k {
+            for tt in 0..t_count {
+                cty_k[(i, tt)] = cty_pad[i * t_count + tt];
+            }
+        }
         let mut ctc_k = Matrix::zeros(k, k);
         for i in 0..k {
             for j in 0..k {

@@ -38,9 +38,10 @@ impl Engine {
     }
 
     /// Unreachable in practice — `load` never returns an `Engine`.
+    /// `ys` is the `N × T` trait matrix, matching the real engine.
     pub fn compress_party(
         &self,
-        _y: &[f64],
+        _ys: &Matrix,
         _c: &Matrix,
         _x: &Matrix,
     ) -> anyhow::Result<CompressedParty> {

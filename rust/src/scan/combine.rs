@@ -1,8 +1,8 @@
 //! Combine-across stage (§2/§4): from aggregate sums to exact statistics.
 //!
-//! Work here is `O(PK² + K³ + K²M)` and **independent of N** — the paper's
-//! central complexity claim (E3). Two ways to obtain the `R` factor of
-//! the stacked covariate matrix:
+//! Work here is `O(PK² + K³ + K²M + KMT)` and **independent of N** — the
+//! paper's central complexity claim (E3). Two ways to obtain the `R`
+//! factor of the stacked covariate matrix:
 //!
 //! - [`RFactorMethod::Tsqr`]: stack per-party `R_p` and re-QR (Lemma 4.1).
 //!   Numerically ideal, but requires the `R_p` in the clear.
@@ -14,16 +14,20 @@
 //!
 //! The stage is split for the sharded streaming pipeline: [`combine_base`]
 //! factorizes the covariate block once into a [`CombineContext`]
-//! (`O(K³)`), and [`combine_shard`] runs the Lemma 3.1 epilogue on one
-//! shard's `O(K·width)` sums. Because the epilogue is per-variant, a
-//! shard-by-shard combine is bit-identical to the single-shot
-//! [`combine_compressed`] — which is itself now implemented as the
-//! one-shard degenerate case.
+//! (`O(K³)`, plus one `O(K²)` projection and covariate fit per trait),
+//! and [`combine_shard`] runs the Lemma 3.1 epilogue on one shard's
+//! `O((K+T)·width)` sums — the `QᵀX = R⁻ᵀ(CᵀX)` projection is computed
+//! **once per shard and shared by all T traits**, which is the paper's
+//! §3 amortization. Because the epilogue is per-variant and per-trait,
+//! a shard-by-shard combine is bit-identical to the single-shot
+//! [`combine_compressed`] — which is itself implemented as the one-shard
+//! degenerate case — and trait `t` of a T-trait combine is bit-identical
+//! to a `T = 1` combine of that trait.
 
 use super::compressed::{AggregateSums, BaseSums, CompressedParty, ShardSums};
 use crate::linalg::{cholesky_upper, solve_rt_b, tsqr_stack_r, Matrix};
 use crate::stats::{
-    fit_from_sufficient, scan_stats_from_projected, AssocResult, RegressionFit, ScanStats,
+    fit_from_sufficient, scan_stats_from_projected_parts, AssocResult, RegressionFit,
 };
 
 /// How the combine stage obtains the stacked-R factor.
@@ -46,28 +50,46 @@ impl Default for CombineOptions {
     }
 }
 
-/// Output of a full association scan.
+/// Output of a full association scan: one [`AssocResult`] per trait
+/// (`assoc.len() == T`; a classic single-trait scan is `T = 1` and its
+/// result lives at `assoc[0]`).
 #[derive(Clone, Debug)]
 pub struct ScanOutput {
-    pub assoc: AssocResult,
-    /// the covariate-only fit (γ̂ etc.) that comes for free from the sums
-    pub covariate_fit: RegressionFit,
+    /// per-trait association statistics, length T
+    pub assoc: Vec<AssocResult>,
+    /// per-trait covariate-only fits (γ̂ etc.) that come for free from
+    /// the sums, length T
+    pub covariate_fit: Vec<RegressionFit>,
     pub n: usize,
     pub k: usize,
     pub m: usize,
 }
 
 impl ScanOutput {
-    pub fn min_p_value(&self) -> Option<f64> {
-        self.assoc.min_p()
+    /// Number of traits scanned.
+    pub fn t(&self) -> usize {
+        self.assoc.len()
     }
 
-    /// Indices of variants passing a significance threshold, sorted by p.
+    /// Minimum finite p-value of trait 0 (the primary trait).
+    pub fn min_p_value(&self) -> Option<f64> {
+        self.assoc[0].min_p()
+    }
+
+    /// Indices of trait-0 variants passing a significance threshold,
+    /// sorted by p. See [`hits_for`](Self::hits_for) for other traits.
     pub fn hits(&self, alpha: f64) -> Vec<usize> {
+        self.hits_for(0, alpha)
+    }
+
+    /// Indices of trait `tt`'s variants passing a significance
+    /// threshold, sorted by p.
+    pub fn hits_for(&self, tt: usize, alpha: f64) -> Vec<usize> {
+        let assoc = &self.assoc[tt];
         let mut hs: Vec<usize> = (0..self.m)
-            .filter(|&j| self.assoc.p[j].is_finite() && self.assoc.p[j] < alpha)
+            .filter(|&j| assoc.p[j].is_finite() && assoc.p[j] < alpha)
             .collect();
-        hs.sort_by(|&a, &b| self.assoc.p[a].partial_cmp(&self.assoc.p[b]).unwrap());
+        hs.sort_by(|&a, &b| assoc.p[a].partial_cmp(&assoc.p[b]).unwrap());
         hs
     }
 }
@@ -78,22 +100,32 @@ impl ScanOutput {
 pub struct CombineContext {
     pub n: usize,
     pub k: usize,
-    pub yty: f64,
+    /// YᵀY diag, length T
+    pub yty: Vec<f64>,
     /// R factor of the stacked covariate matrix
     pub r: Matrix,
-    /// Qᵀy = R⁻ᵀ(Cᵀy), length K
-    pub qt_y: Vec<f64>,
-    /// covariate-only fit (γ̂ etc.), computed once per session
-    pub covariate_fit: RegressionFit,
+    /// QᵀY = R⁻ᵀ(CᵀY), K × T
+    pub qt_y: Matrix,
+    /// per-trait covariate-only fits (γ̂ etc.), computed once per session
+    pub covariate_fit: Vec<RegressionFit>,
 }
 
-/// Factorize the aggregate covariate block — `O(K³)`, once per scan.
+impl CombineContext {
+    pub fn t(&self) -> usize {
+        self.yty.len()
+    }
+}
+
+/// Factorize the aggregate covariate block — `O(K³)` plus `O(K²)` per
+/// trait, once per scan.
 pub fn combine_base(
     base: &BaseSums,
     party_rs: Option<&[Matrix]>,
     opts: CombineOptions,
 ) -> anyhow::Result<CombineContext> {
-    let k = base.cty.len();
+    let k = base.cty.rows;
+    let t = base.t();
+    anyhow::ensure!(base.cty.cols == t, "CᵀY trait dimension mismatch");
     let method = match opts.r_method {
         RFactorMethod::Auto => {
             if party_rs.is_some() {
@@ -114,40 +146,51 @@ pub fn combine_base(
         RFactorMethod::Auto => unreachable!(),
     };
 
-    // Projection through Qᵀ without Q: Qᵀy = R⁻ᵀ(Cᵀy).
-    let qt_y = solve_rt_b(&r, &Matrix::from_vec(k, 1, base.cty.clone())).data;
-    let covariate_fit = fit_from_sufficient(base.n, base.yty, &base.cty, &base.ctc)?;
+    // Projection through Qᵀ without Q: QᵀY = R⁻ᵀ(CᵀY) — one triangular
+    // solve over all T trait columns (column-independent, so trait t is
+    // bit-identical to a solo K×1 solve of that trait).
+    let qt_y = solve_rt_b(&r, &base.cty);
+    let covariate_fit = (0..t)
+        .map(|tt| fit_from_sufficient(base.n, base.yty[tt], &base.cty.col(tt), &base.ctc))
+        .collect::<anyhow::Result<Vec<_>>>()?;
 
-    Ok(CombineContext { n: base.n, k, yty: base.yty, r, qt_y, covariate_fit })
+    Ok(CombineContext { n: base.n, k, yty: base.yty.clone(), r, qt_y, covariate_fit })
 }
 
-/// Lemma 3.1 epilogue on one shard's aggregate sums — `O(K²·width)`,
-/// per-variant independent, so shard results concatenate into exactly
-/// the single-shot answer.
-pub fn combine_shard(ctx: &CombineContext, shard: &ShardSums) -> AssocResult {
+/// Lemma 3.1 epilogue on one shard's aggregate sums — `O((K² + KT)·width)`,
+/// per-variant and per-trait independent, so shard results concatenate
+/// into exactly the single-shot answer. Returns one [`AssocResult`] per
+/// trait; the `QᵀX` projection is computed once and shared across traits.
+pub fn combine_shard(ctx: &CombineContext, shard: &ShardSums) -> Vec<AssocResult> {
     combine_shard_parts(ctx, &shard.xty, &shard.xtx, &shard.ctx)
 }
 
 /// Borrowed-parts form of [`combine_shard`], so the degenerate full-M
-/// path can feed the aggregate's own slices without cloning them into a
+/// path can feed the aggregate's own pieces without cloning them into a
 /// `ShardSums` first.
 fn combine_shard_parts(
     cx: &CombineContext,
-    xty: &[f64],
+    xty: &Matrix,
     xtx: &[f64],
     ctx_cols: &Matrix,
-) -> AssocResult {
-    // QᵀX = R⁻ᵀ(CᵀX), columns of this shard only.
+) -> Vec<AssocResult> {
+    // QᵀX = R⁻ᵀ(CᵀX), columns of this shard only — computed ONCE and
+    // borrowed by every trait's epilogue (no per-trait clone of the
+    // K×width projection or the shared X·X).
     let qt_x = solve_rt_b(&cx.r, ctx_cols);
-    scan_stats_from_projected(&ScanStats {
-        n: cx.n,
-        k: cx.k,
-        yty: cx.yty,
-        xty: xty.to_vec(),
-        xtx: xtx.to_vec(),
-        qt_y: cx.qt_y.clone(),
-        qt_x,
-    })
+    (0..cx.t())
+        .map(|tt| {
+            scan_stats_from_projected_parts(
+                cx.n,
+                cx.k,
+                cx.yty[tt],
+                &xty.col(tt),
+                xtx,
+                &cx.qt_y.col(tt),
+                &qt_x,
+            )
+        })
+        .collect()
 }
 
 /// Combine aggregate sums (and optionally per-party `R_p` factors for the
@@ -158,30 +201,36 @@ pub fn combine_compressed(
     party_rs: Option<&[Matrix]>,
     opts: CombineOptions,
 ) -> anyhow::Result<ScanOutput> {
-    let k = agg.cty.len();
-    let m = agg.xty.len();
+    let k = agg.cty.rows;
+    let m = agg.xtx.len();
     let cx = combine_base(&agg.base(), party_rs, opts)?;
     let assoc = combine_shard_parts(&cx, &agg.xty, &agg.xtx, &agg.ctx);
     Ok(ScanOutput { assoc, covariate_fit: cx.covariate_fit, n: agg.n, k, m })
 }
 
 /// §2 only (no transient covariates): multi-party plain linear regression
-/// from per-party compressed statistics.
-pub fn combine_regression(parties: &[CompressedParty]) -> anyhow::Result<RegressionFit> {
+/// from per-party compressed statistics — one [`RegressionFit`] per
+/// trait.
+pub fn combine_regression(parties: &[CompressedParty]) -> anyhow::Result<Vec<RegressionFit>> {
     anyhow::ensure!(!parties.is_empty());
     let k = parties[0].k();
+    let t = parties[0].t();
     let n: usize = parties.iter().map(|p| p.n).sum();
-    let yty: f64 = parties.iter().map(|p| p.yty).sum();
-    let mut cty = vec![0.0; k];
+    let mut yty = vec![0.0; t];
+    let mut cty = Matrix::zeros(k, t);
     let mut ctc = Matrix::zeros(k, k);
     for p in parties {
         anyhow::ensure!(p.k() == k, "covariate dimension mismatch across parties");
-        for i in 0..k {
-            cty[i] += p.cty[i];
+        anyhow::ensure!(p.t() == t, "trait dimension mismatch across parties");
+        for (a, b) in yty.iter_mut().zip(&p.yty) {
+            *a += b;
         }
+        cty = cty.add(&p.cty);
         ctc = ctc.add(&p.ctc);
     }
-    fit_from_sufficient(n, yty, &cty, &ctc)
+    (0..t)
+        .map(|tt| fit_from_sufficient(n, yty[tt], &cty.col(tt), &ctc))
+        .collect()
 }
 
 #[cfg(test)]
@@ -192,15 +241,18 @@ mod tests {
     use crate::scan::ShardPlan;
     use crate::util::rng::Rng;
 
-    fn party(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+    fn party(n: usize, k: usize, m: usize, t: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
         let mut rng = Rng::new(seed);
         let mut c = Matrix::randn(n, k, &mut rng);
         for i in 0..n {
             c[(i, 0)] = 1.0;
         }
         let x = Matrix::randn(n, m, &mut rng);
-        let y: Vec<f64> = (0..n).map(|i| 0.4 * x[(i, 0)] + rng.normal()).collect();
-        (y, c, x)
+        let mut ys = Matrix::randn(n, t, &mut rng);
+        for i in 0..n {
+            ys[(i, 0)] += 0.4 * x[(i, 0)];
+        }
+        (ys, c, x)
     }
 
     fn aggregate(cps: &[CompressedParty]) -> AggregateSums {
@@ -216,9 +268,9 @@ mod tests {
 
     #[test]
     fn multiparty_equals_pooled_tsqr_and_cholesky() {
-        let (y1, c1, x1) = party(40, 3, 8, 140);
-        let (y2, c2, x2) = party(55, 3, 8, 141);
-        let (y3, c3, x3) = party(33, 3, 8, 142);
+        let (y1, c1, x1) = party(40, 3, 8, 1, 140);
+        let (y2, c2, x2) = party(55, 3, 8, 1, 141);
+        let (y3, c3, x3) = party(33, 3, 8, 1, 142);
         let cps: Vec<CompressedParty> = [(&y1, &c1, &x1), (&y2, &c2, &x2), (&y3, &c3, &x3)]
             .iter()
             .map(|(y, c, x)| compress_party(y, c, x, 8, Some(1)))
@@ -227,10 +279,10 @@ mod tests {
         let rs: Vec<Matrix> = cps.iter().map(|p| p.r.clone()).collect();
 
         // pooled oracle
-        let y: Vec<f64> = y1.iter().chain(&y2).chain(&y3).copied().collect();
+        let ys = Matrix::vstack(&[&y1, &y2, &y3]);
         let c = Matrix::vstack(&[&c1, &c2, &c3]);
         let x = Matrix::vstack(&[&x1, &x2, &x3]);
-        let pooled_cp = compress_party(&y, &c, &x, 8, Some(1));
+        let pooled_cp = compress_party(&ys, &c, &x, 8, Some(1));
         let pooled_agg = aggregate(std::slice::from_ref(&pooled_cp));
         let oracle = combine_compressed(
             &pooled_agg,
@@ -247,45 +299,104 @@ mod tests {
             )
             .unwrap();
             assert!(
-                rel_err(&got.assoc.beta, &oracle.assoc.beta) < 1e-9,
+                rel_err(&got.assoc[0].beta, &oracle.assoc[0].beta) < 1e-9,
                 "{method:?} beta"
             );
-            assert!(rel_err(&got.assoc.se, &oracle.assoc.se) < 1e-9, "{method:?} se");
+            assert!(rel_err(&got.assoc[0].se, &oracle.assoc[0].se) < 1e-9, "{method:?} se");
         }
     }
 
     #[test]
     fn shard_by_shard_combine_is_bit_identical() {
-        let (y, c, x) = party(90, 4, 21, 148);
-        let cp = compress_party(&y, &c, &x, 21, Some(1));
+        let (ys, c, x) = party(90, 4, 21, 2, 148);
+        let cp = compress_party(&ys, &c, &x, 21, Some(1));
         let agg = aggregate(std::slice::from_ref(&cp));
         let single = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
 
         let ctx = combine_base(&agg.base(), None, CombineOptions::default()).unwrap();
         let plan = ShardPlan::new(21, 6); // 4 shards, ragged tail
-        let mut beta = Vec::new();
-        let mut se = Vec::new();
+        let mut beta = vec![Vec::new(), Vec::new()];
+        let mut se = vec![Vec::new(), Vec::new()];
         for r in plan.ranges() {
-            let sums = ShardSums {
-                xty: agg.xty[r.j0..r.j1].to_vec(),
-                xtx: agg.xtx[r.j0..r.j1].to_vec(),
-                ctx: agg.ctx.col_slice(r.j0, r.j1),
-            };
-            let part = combine_shard(&ctx, &sums);
-            beta.extend_from_slice(&part.beta);
-            se.extend_from_slice(&part.se);
+            let parts = combine_shard(&ctx, &agg.shard_sums(r.j0, r.j1));
+            assert_eq!(parts.len(), 2);
+            for tt in 0..2 {
+                beta[tt].extend_from_slice(&parts[tt].beta);
+                se[tt].extend_from_slice(&parts[tt].se);
+            }
         }
         // per-variant epilogue + column-wise triangular solve → bit-equal
-        for j in 0..21 {
-            assert_eq!(beta[j].to_bits(), single.assoc.beta[j].to_bits(), "beta[{j}]");
-            assert_eq!(se[j].to_bits(), single.assoc.se[j].to_bits(), "se[{j}]");
+        for tt in 0..2 {
+            for j in 0..21 {
+                assert_eq!(
+                    beta[tt][j].to_bits(),
+                    single.assoc[tt].beta[j].to_bits(),
+                    "beta[{tt}][{j}]"
+                );
+                assert_eq!(
+                    se[tt][j].to_bits(),
+                    single.assoc[tt].se[j].to_bits(),
+                    "se[{tt}][{j}]"
+                );
+            }
         }
+    }
+
+    /// Trait `t` of a multi-trait combine is bit-identical to a T = 1
+    /// combine of that trait alone (the §3 amortization changes cost,
+    /// never values).
+    #[test]
+    fn per_trait_combine_bit_identical_to_single_trait() {
+        let (ys, c, x) = party(120, 4, 12, 3, 149);
+        let multi_cp = compress_party(&ys, &c, &x, 12, Some(1));
+        let multi_agg = aggregate(std::slice::from_ref(&multi_cp));
+        let multi = combine_compressed(&multi_agg, None, CombineOptions::default()).unwrap();
+        assert_eq!(multi.t(), 3);
+        for tt in 0..3 {
+            let cp = compress_party(&Matrix::from_col(ys.col(tt)), &c, &x, 12, Some(1));
+            let agg = aggregate(std::slice::from_ref(&cp));
+            let single = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
+            for j in 0..12 {
+                assert_eq!(
+                    multi.assoc[tt].beta[j].to_bits(),
+                    single.assoc[0].beta[j].to_bits(),
+                    "beta[{tt}][{j}]"
+                );
+                assert_eq!(
+                    multi.assoc[tt].p[j].to_bits(),
+                    single.assoc[0].p[j].to_bits(),
+                    "p[{tt}][{j}]"
+                );
+            }
+            assert_eq!(
+                multi.covariate_fit[tt].gamma, single.covariate_fit[0].gamma,
+                "gamma[{tt}]"
+            );
+        }
+    }
+
+    /// The signal trait detects its causal variant; null traits don't.
+    #[test]
+    fn signal_isolated_to_correct_trait() {
+        let (ys, c, x) = party(400, 3, 20, 3, 213);
+        let cp = compress_party(&ys, &c, &x, 20, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let res = combine_compressed(
+            &agg,
+            Some(std::slice::from_ref(&cp.r)),
+            CombineOptions::default(),
+        )
+        .unwrap();
+        assert!(res.assoc[0].p[0] < 1e-8, "signal trait p={}", res.assoc[0].p[0]);
+        assert!(res.assoc[1].p[0] > 1e-4, "null trait 1 p={}", res.assoc[1].p[0]);
+        assert!(res.assoc[2].p[0] > 1e-4, "null trait 2 p={}", res.assoc[2].p[0]);
+        assert_eq!(res.hits_for(0, 1e-8).first(), Some(&0));
     }
 
     #[test]
     fn auto_uses_cholesky_without_rs() {
-        let (y, c, x) = party(60, 4, 5, 143);
-        let cp = compress_party(&y, &c, &x, 5, Some(1));
+        let (ys, c, x) = party(60, 4, 5, 1, 143);
+        let cp = compress_party(&ys, &c, &x, 5, Some(1));
         let agg = aggregate(std::slice::from_ref(&cp));
         let out = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
         assert_eq!(out.m, 5);
@@ -294,8 +405,8 @@ mod tests {
 
     #[test]
     fn tsqr_without_rs_errors() {
-        let (y, c, x) = party(30, 3, 4, 144);
-        let cp = compress_party(&y, &c, &x, 4, Some(1));
+        let (ys, c, x) = party(30, 3, 4, 1, 144);
+        let cp = compress_party(&ys, &c, &x, 4, Some(1));
         let agg = aggregate(std::slice::from_ref(&cp));
         assert!(combine_compressed(
             &agg,
@@ -307,34 +418,38 @@ mod tests {
 
     #[test]
     fn combine_regression_matches_pooled_fit() {
-        let (y1, c1, x1) = party(50, 4, 1, 145);
-        let (y2, c2, x2) = party(70, 4, 1, 146);
+        let (y1, c1, x1) = party(50, 4, 1, 2, 145);
+        let (y2, c2, x2) = party(70, 4, 1, 2, 146);
         let cp1 = compress_party(&y1, &c1, &x1, 1, Some(1));
         let cp2 = compress_party(&y2, &c2, &x2, 1, Some(1));
-        let fit = combine_regression(&[cp1, cp2]).unwrap();
+        let fits = combine_regression(&[cp1, cp2]).unwrap();
+        assert_eq!(fits.len(), 2);
 
-        let y: Vec<f64> = y1.iter().chain(&y2).copied().collect();
+        let ys = Matrix::vstack(&[&y1, &y2]);
         let c = Matrix::vstack(&[&c1, &c2]);
-        let oracle = fit_from_sufficient(
-            y.len(),
-            y.iter().map(|v| v * v).sum(),
-            &c.t_matvec(&y),
-            &c.gram(),
-        )
-        .unwrap();
-        assert!(rel_err(&fit.gamma, &oracle.gamma) < 1e-11);
-        assert!(rel_err(&fit.se, &oracle.se) < 1e-11);
+        for tt in 0..2 {
+            let y = ys.col(tt);
+            let oracle = fit_from_sufficient(
+                y.len(),
+                y.iter().map(|v| v * v).sum(),
+                &c.t_matvec(&y),
+                &c.gram(),
+            )
+            .unwrap();
+            assert!(rel_err(&fits[tt].gamma, &oracle.gamma) < 1e-11, "trait {tt}");
+            assert!(rel_err(&fits[tt].se, &oracle.se) < 1e-11, "trait {tt}");
+        }
     }
 
     #[test]
     fn hits_sorted_by_p() {
-        let (y, c, x) = party(200, 3, 12, 147);
-        let cp = compress_party(&y, &c, &x, 12, Some(1));
+        let (ys, c, x) = party(200, 3, 12, 1, 147);
+        let cp = compress_party(&ys, &c, &x, 12, Some(1));
         let agg = aggregate(std::slice::from_ref(&cp));
         let out = combine_compressed(&agg, None, CombineOptions::default()).unwrap();
         let hits = out.hits(0.5);
         for w in hits.windows(2) {
-            assert!(out.assoc.p[w[0]] <= out.assoc.p[w[1]]);
+            assert!(out.assoc[0].p[w[0]] <= out.assoc[0].p[w[1]]);
         }
         // variant 0 carries real signal → should be the top hit
         assert_eq!(hits.first(), Some(&0));

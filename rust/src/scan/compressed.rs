@@ -1,65 +1,80 @@
-//! Compress-within stage (§2/§4): per-party sufficient statistics.
+//! Compress-within stage (§2/§3/§4): per-party sufficient statistics,
+//! trait-major.
 //!
-//! For party data `(y, C, X)` with `N_p` samples, `K` permanent and `M`
-//! transient covariates, compression produces
+//! The paper's §3 extension promotes the trait vector `y` to a matrix
+//! `Y` (`N × T`): biobank studies test ~4K traits, eQTL ~20K. For party
+//! data `(Y, C, X)` with `N_p` samples, `T` traits, `K` permanent and
+//! `M` transient covariates, compression produces
 //!
-//! `yᵀy, Cᵀy, CᵀC, Xᵀy, X·X (diag), CᵀX, R_p = qr(C_p).R`
+//! `YᵀY (diag, T), CᵀY (K×T), CᵀC, XᵀY (M×T), X·X (diag, M), CᵀX,
+//! R_p = qr(C_p).R`
 //!
-//! — `O(N_p K (K + M))` work, all local plaintext. The `M`-sized pieces
-//! are computed in parallel over variant blocks ([`parallel_for_chunks`]),
-//! which is the paper's `O(NKM/C)` term.
+//! — all local plaintext. `X·X`, `CᵀX`, `CᵀC` are **shared across
+//! traits**, which is the economy the paper points at: the expensive
+//! `O(NKM)` genotype-side compression is paid once, each extra trait
+//! costs only `O(N(M+K))`. The single-trait scan is exactly the `T = 1`
+//! degenerate case — same structs, same flattened layout, bit-identical
+//! values.
 //!
 //! The stage is split to serve the sharded streaming pipeline
 //! ([`crate::scan::ShardPlan`]):
 //!
 //! - [`compress_base`] — the variant-independent part
-//!   (`N, yᵀy, Cᵀy, CᵀC, R_p`), computed once per session;
+//!   (`N, YᵀY, CᵀY, CᵀC, R_p`), computed once per session;
 //! - [`compress_variant_block`] — the `[j0, j1)` column slice of the
-//!   variant-sized statistics (`Xᵀy, X·X, CᵀX`), computed once per shard
-//!   with `O(K·width)` memory.
+//!   variant-sized statistics (`XᵀY, X·X, CᵀX`), computed once per shard
+//!   with `O((K+T)·width)` memory.
 //!
 //! [`compress_party`] composes the two over the full column range and is
 //! bit-identical to compressing shard-by-shard and concatenating (per-
-//! variant sums never mix across columns).
+//! variant sums never mix across columns), and per-trait bit-identical
+//! to a `T = 1` compression of each trait column (per-trait sums never
+//! mix across traits).
 
 use crate::linalg::{householder_qr, Matrix};
 use crate::util::threadpool::parallel_for_chunks;
 
-/// Per-party compressed statistics. The entire secure protocol operates
-/// on this — the `N_p`-row data never leaves the party.
+/// Per-party compressed statistics for `T` traits. The entire secure
+/// protocol operates on this — the `N_p`-row data never leaves the
+/// party.
 #[derive(Clone, Debug)]
 pub struct CompressedParty {
     pub n: usize,
-    pub yty: f64,
-    /// Cᵀy, length K
-    pub cty: Vec<f64>,
+    /// Y_tᵀY_t per trait, length T
+    pub yty: Vec<f64>,
+    /// CᵀY, K × T
+    pub cty: Matrix,
     /// CᵀC, K × K
     pub ctc: Matrix,
     /// R factor of QR(C_p), K × K (TSQR path; reveals C_pᵀC_p, so it is
     /// only transmitted in plaintext mode — see DESIGN.md §Security)
     pub r: Matrix,
-    /// Xᵀy, length M
-    pub xty: Vec<f64>,
-    /// per-variant X_m·X_m, length M
+    /// XᵀY, M × T (row-major: variant-major, traits contiguous)
+    pub xty: Matrix,
+    /// per-variant X_m·X_m, length M (shared across traits)
     pub xtx: Vec<f64>,
-    /// CᵀX, K × M
+    /// CᵀX, K × M (shared across traits)
     pub ctx: Matrix,
 }
 
 impl CompressedParty {
     pub fn k(&self) -> usize {
-        self.cty.len()
+        self.ctc.rows
     }
 
     pub fn m(&self) -> usize {
-        self.xty.len()
+        self.xtx.len()
+    }
+
+    pub fn t(&self) -> usize {
+        self.yty.len()
     }
 
     /// The variant-independent part of these statistics.
     pub fn base(&self) -> BaseStats {
         BaseStats {
             n: self.n,
-            yty: self.yty,
+            yty: self.yty.clone(),
             cty: self.cty.clone(),
             ctc: self.ctc.clone(),
             r: self.r.clone(),
@@ -73,20 +88,21 @@ impl CompressedParty {
         assert!(j0 <= j1 && j1 <= self.m(), "bad column range {j0}..{j1}");
         VariantBlockStats {
             j0,
-            xty: self.xty[j0..j1].to_vec(),
+            xty: self.xty.row_slice(j0, j1),
             xtx: self.xtx[j0..j1].to_vec(),
             ctx: self.ctx.col_slice(j0, j1),
         }
     }
 }
 
-/// Variant-independent compressed statistics (`O(K²)` floats).
+/// Variant-independent compressed statistics (`O(K² + KT)` floats).
 #[derive(Clone, Debug)]
 pub struct BaseStats {
     pub n: usize,
-    pub yty: f64,
-    /// Cᵀy, length K
-    pub cty: Vec<f64>,
+    /// YᵀY diag, length T
+    pub yty: Vec<f64>,
+    /// CᵀY, K × T
+    pub cty: Matrix,
     /// CᵀC, K × K
     pub ctc: Matrix,
     /// R factor of QR(C_p) (plaintext/TSQR path only)
@@ -95,54 +111,70 @@ pub struct BaseStats {
 
 impl BaseStats {
     pub fn k(&self) -> usize {
-        self.cty.len()
+        self.ctc.rows
     }
 
-    /// Flatten for secure summation: `[n, yᵀy, Cᵀy(K), CᵀC(K²)]`.
+    pub fn t(&self) -> usize {
+        self.yty.len()
+    }
+
+    /// Flatten for secure summation: `[n, YᵀY(T), CᵀY(K·T), CᵀC(K²)]`.
     /// (`R_p` is deliberately excluded — it is never securely summed.)
+    /// For `T = 1` this is byte-identical to the historical single-trait
+    /// layout `[n, yᵀy, Cᵀy(K), CᵀC(K²)]`.
     pub fn flatten(&self) -> Vec<f64> {
-        let mut v = Vec::with_capacity(base_flat_len(self.k()));
+        let mut v = Vec::with_capacity(base_flat_len(self.k(), self.t()));
         v.push(self.n as f64);
-        v.push(self.yty);
-        v.extend_from_slice(&self.cty);
+        v.extend_from_slice(&self.yty);
+        v.extend_from_slice(&self.cty.data);
         v.extend_from_slice(&self.ctc.data);
-        debug_assert_eq!(v.len(), base_flat_len(self.k()));
+        debug_assert_eq!(v.len(), base_flat_len(self.k(), self.t()));
         v
     }
 }
 
-/// Length of the flattened base vector for `K` covariates.
-pub fn base_flat_len(k: usize) -> usize {
-    2 + k + k * k
+/// Length of the flattened base vector for `K` covariates and `T`
+/// traits.
+pub fn base_flat_len(k: usize, t: usize) -> usize {
+    1 + t + k * t + k * k
 }
 
 /// Aggregate of the variant-independent statistics across parties.
 #[derive(Clone, Debug)]
 pub struct BaseSums {
     pub n: usize,
-    pub yty: f64,
-    pub cty: Vec<f64>,
+    /// YᵀY diag, length T
+    pub yty: Vec<f64>,
+    /// CᵀY, K × T
+    pub cty: Matrix,
     pub ctc: Matrix,
 }
 
+impl BaseSums {
+    pub fn t(&self) -> usize {
+        self.yty.len()
+    }
+}
+
 /// Inverse of [`BaseStats::flatten`] applied to a summed vector.
-pub fn unflatten_base(k: usize, v: &[f64]) -> anyhow::Result<BaseSums> {
-    anyhow::ensure!(v.len() == base_flat_len(k), "base flat length mismatch");
+pub fn unflatten_base(k: usize, t: usize, v: &[f64]) -> anyhow::Result<BaseSums> {
+    anyhow::ensure!(v.len() == base_flat_len(k, t), "base flat length mismatch");
     Ok(BaseSums {
         n: v[0].round() as usize,
-        yty: v[1],
-        cty: v[2..2 + k].to_vec(),
-        ctc: Matrix::from_vec(k, k, v[2 + k..].to_vec()),
+        yty: v[1..1 + t].to_vec(),
+        cty: Matrix::from_vec(k, t, v[1 + t..1 + t + k * t].to_vec()),
+        ctc: Matrix::from_vec(k, k, v[1 + t + k * t..].to_vec()),
     })
 }
 
-/// One shard's slice of the variant-sized statistics (`O(K·width)`).
+/// One shard's slice of the variant-sized statistics
+/// (`O((K+T)·width)`).
 #[derive(Clone, Debug)]
 pub struct VariantBlockStats {
     /// first absolute variant column covered by this block
     pub j0: usize,
-    /// Xᵀy for columns `[j0, j0+width)`
-    pub xty: Vec<f64>,
+    /// XᵀY for columns `[j0, j0+width)` — width × T
+    pub xty: Matrix,
     /// per-variant X·X for the same columns
     pub xtx: Vec<f64>,
     /// CᵀX, K × width
@@ -151,69 +183,102 @@ pub struct VariantBlockStats {
 
 impl VariantBlockStats {
     pub fn width(&self) -> usize {
-        self.xty.len()
+        self.xtx.len()
     }
 
-    /// Flatten for secure summation: `[Xᵀy(w), X·X(w), CᵀX(K·w)]`.
+    pub fn t(&self) -> usize {
+        self.xty.cols
+    }
+
+    /// Flatten for secure summation: `[XᵀY(w·T), X·X(w), CᵀX(K·w)]` —
+    /// `O((K+T)·w)`, the per-round payload bound of the streaming
+    /// protocol. For `T = 1` this is byte-identical to the historical
+    /// `[Xᵀy(w), X·X(w), CᵀX(K·w)]`.
     pub fn flatten(&self) -> Vec<f64> {
         let k = self.ctx.rows;
-        let mut v = Vec::with_capacity(shard_flat_len(k, self.width()));
-        v.extend_from_slice(&self.xty);
+        let mut v = Vec::with_capacity(shard_flat_len(k, self.t(), self.width()));
+        v.extend_from_slice(&self.xty.data);
         v.extend_from_slice(&self.xtx);
         v.extend_from_slice(&self.ctx.data);
-        debug_assert_eq!(v.len(), shard_flat_len(k, self.width()));
+        debug_assert_eq!(v.len(), shard_flat_len(k, self.t(), self.width()));
         v
     }
 }
 
-/// Length of the flattened shard vector for `K` covariates and shard
-/// width `w`.
-pub fn shard_flat_len(k: usize, w: usize) -> usize {
-    w * (2 + k)
+/// Length of the flattened shard vector for `K` covariates, `T` traits
+/// and shard width `w`.
+pub fn shard_flat_len(k: usize, t: usize, w: usize) -> usize {
+    w * (1 + t + k)
 }
 
 /// Aggregate of one shard's variant statistics across parties.
 #[derive(Clone, Debug)]
 pub struct ShardSums {
-    pub xty: Vec<f64>,
+    /// XᵀY, width × T
+    pub xty: Matrix,
     pub xtx: Vec<f64>,
     /// CᵀX, K × width
     pub ctx: Matrix,
 }
 
-/// Inverse of [`VariantBlockStats::flatten`] applied to a summed vector.
-pub fn unflatten_shard(k: usize, w: usize, v: &[f64]) -> anyhow::Result<ShardSums> {
-    anyhow::ensure!(v.len() == shard_flat_len(k, w), "shard flat length mismatch");
-    Ok(ShardSums {
-        xty: v[..w].to_vec(),
-        xtx: v[w..2 * w].to_vec(),
-        ctx: Matrix::from_vec(k, w, v[2 * w..].to_vec()),
-    })
-}
+impl ShardSums {
+    pub fn width(&self) -> usize {
+        self.xtx.len()
+    }
 
-/// Compress the variant-independent statistics of one party.
-pub fn compress_base(y: &[f64], c: &Matrix) -> BaseStats {
-    let n = y.len();
-    assert_eq!(c.rows, n, "C rows != N");
-    BaseStats {
-        n,
-        yty: y.iter().map(|v| v * v).sum(),
-        cty: c.t_matvec(y),
-        ctc: c.gram(),
-        r: householder_qr(c).r,
+    pub fn t(&self) -> usize {
+        self.xty.cols
     }
 }
 
-/// Compress the variant statistics for columns `[j0, j1)` of `X`
-/// (pure-Rust reference path).
+/// Inverse of [`VariantBlockStats::flatten`] applied to a summed vector.
+pub fn unflatten_shard(
+    k: usize,
+    t: usize,
+    w: usize,
+    v: &[f64],
+) -> anyhow::Result<ShardSums> {
+    anyhow::ensure!(v.len() == shard_flat_len(k, t, w), "shard flat length mismatch");
+    Ok(ShardSums {
+        xty: Matrix::from_vec(w, t, v[..w * t].to_vec()),
+        xtx: v[w * t..w * t + w].to_vec(),
+        ctx: Matrix::from_vec(k, w, v[w * t + w..].to_vec()),
+    })
+}
+
+/// Compress the variant-independent statistics of one party. `ys` is
+/// `N × T` (row-major samples × traits).
+pub fn compress_base(ys: &Matrix, c: &Matrix) -> BaseStats {
+    let n = ys.rows;
+    assert_eq!(c.rows, n, "C rows != N");
+    assert!(ys.cols >= 1, "need at least one trait column");
+    let k = c.cols;
+    let t = ys.cols;
+    // Per-trait columns through the same accumulation as the historical
+    // single-trait path, so trait `t` of a T-trait compression is
+    // bit-identical to a T = 1 compression of that trait.
+    let mut yty = Vec::with_capacity(t);
+    let mut cty = Matrix::zeros(k, t);
+    for (tt, y) in ys.cols(0..t).enumerate() {
+        yty.push(y.iter().map(|v| v * v).sum());
+        for (i, v) in c.t_matvec(&y).into_iter().enumerate() {
+            cty[(i, tt)] = v;
+        }
+    }
+    BaseStats { n, yty, cty, ctc: c.gram(), r: householder_qr(c).r }
+}
+
+/// Compress the variant statistics for columns `[j0, j1)` of `X` across
+/// all `T` trait columns of `ys` (pure-Rust reference path).
 ///
 /// `block_m` controls the variant-block width for parallelism; `threads`
 /// caps the worker count (None = all cores). Results are bit-identical
 /// to the corresponding slice of a full-range compression: each output
-/// column is a sum over samples in a fixed order, independent of how the
-/// columns are chunked.
+/// is a sum over samples in a fixed order, independent of how the
+/// columns are chunked — and independent per trait, so trait `t` of the
+/// result is bit-identical to compressing that trait alone.
 pub fn compress_variant_block(
-    y: &[f64],
+    ys: &Matrix,
     c: &Matrix,
     x: &Matrix,
     j0: usize,
@@ -221,41 +286,47 @@ pub fn compress_variant_block(
     block_m: usize,
     threads: Option<usize>,
 ) -> VariantBlockStats {
-    let n = y.len();
+    let n = ys.rows;
     assert_eq!(c.rows, n, "C rows != N");
     assert_eq!(x.rows, n, "X rows != N");
     assert!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
+    assert!(ys.cols >= 1, "need at least one trait column");
     let k = c.cols;
+    let t = ys.cols;
     let w = j1 - j0;
 
     // Blocked over variants. Each chunk accumulates into a chunk-local
     // contiguous buffer (xty/xtx/ctx interleaved per block) and writes
     // back once — the strided `ctx[kk·w + j]` stores of the naive loop
     // thrash the cache at K ≥ 16 (see EXPERIMENTS.md §Perf).
-    let mut xty = vec![0.0; w];
+    let mut xty = Matrix::zeros(w, t);
     let mut xtx = vec![0.0; w];
     let mut ctx = Matrix::zeros(k, w);
     {
         // Disjoint column blocks → safe shared-mutable access.
-        let xty_ptr = SendPtr(xty.as_mut_ptr());
+        let xty_ptr = SendPtr(xty.data.as_mut_ptr());
         let xtx_ptr = SendPtr(xtx.as_mut_ptr());
         let ctx_ptr = SendPtr(ctx.data.as_mut_ptr());
         parallel_for_chunks(w, block_m.max(1), threads, |b0, b1| {
             let bw = b1 - b0;
-            // local accumulators: [xty(bw) | xtx(bw) | ctx(k×bw)]
-            let mut local = vec![0.0f64; bw * (2 + k)];
+            // local accumulators: [xty(bw·T) | xtx(bw) | ctx(k×bw)]
+            let mut local = vec![0.0f64; bw * (1 + t + k)];
             for i in 0..n {
-                let yi = y[i];
+                let y_row = ys.row(i);
                 let x_row = &x.row(i)[j0 + b0..j0 + b1];
                 let c_row = c.row(i);
-                let (xty_l, rest) = local.split_at_mut(bw);
+                let (xty_l, rest) = local.split_at_mut(bw * t);
                 let (xtx_l, ctx_l) = rest.split_at_mut(bw);
                 // branch-free axpy form: one vectorizable pass per output
                 // row (beats the per-element `if xv == 0` skip even at
-                // ~50% genotype sparsity — see EXPERIMENTS.md §Perf)
+                // ~50% genotype sparsity — see EXPERIMENTS.md §Perf); the
+                // trait loop vectorizes over the contiguous trait lane
                 for (j, &xv) in x_row.iter().enumerate() {
-                    xty_l[j] += xv * yi;
                     xtx_l[j] += xv * xv;
+                    let lane = &mut xty_l[j * t..(j + 1) * t];
+                    for (o, &yv) in lane.iter_mut().zip(y_row) {
+                        *o += xv * yv;
+                    }
                 }
                 for (kk, &cv) in c_row.iter().enumerate() {
                     let row = &mut ctx_l[kk * bw..(kk + 1) * bw];
@@ -268,12 +339,14 @@ pub fn compress_variant_block(
             // SAFETY: columns [b0, b1) are owned by this chunk.
             unsafe {
                 for j in 0..bw {
-                    *xty_ptr.at(b0 + j) = local[j];
-                    *xtx_ptr.at(b0 + j) = local[bw + j];
+                    for tt in 0..t {
+                        *xty_ptr.at((b0 + j) * t + tt) = local[j * t + tt];
+                    }
+                    *xtx_ptr.at(b0 + j) = local[bw * t + j];
                 }
                 for kk in 0..k {
                     for j in 0..bw {
-                        *ctx_ptr.at(kk * w + b0 + j) = local[(2 + kk) * bw + j];
+                        *ctx_ptr.at(kk * w + b0 + j) = local[bw * (1 + t) + kk * bw + j];
                     }
                 }
             }
@@ -285,16 +358,17 @@ pub fn compress_variant_block(
 
 /// Compress one party's data (pure-Rust reference path): the base stage
 /// plus the full-range variant stage — the one-shard degenerate case of
-/// the streaming pipeline.
+/// the streaming pipeline. `ys` is `N × T`; pass a `N × 1` matrix
+/// ([`Matrix::from_col`]) for a single-trait scan.
 pub fn compress_party(
-    y: &[f64],
+    ys: &Matrix,
     c: &Matrix,
     x: &Matrix,
     block_m: usize,
     threads: Option<usize>,
 ) -> CompressedParty {
-    let base = compress_base(y, c);
-    let vb = compress_variant_block(y, c, x, 0, x.cols, block_m, threads);
+    let base = compress_base(ys, c);
+    let vb = compress_variant_block(ys, c, x, 0, x.cols, block_m, threads);
     CompressedParty {
         n: base.n,
         yty: base.yty,
@@ -319,18 +393,21 @@ impl<T> SendPtr<T> {
 }
 
 /// Layout of the flattened statistics vector used by the secure-sum
-/// protocol. All parties must agree on `(K, M)`; the flattening is
-/// `[n, yty, cty(K), ctc(K²), xty(M), xtx(M), ctx(K·M)]` — i.e. the base
-/// segment followed by the single full-width shard segment.
+/// protocol. All parties must agree on `(K, M, T)`; the flattening is
+/// `[n, yty(T), cty(K·T), ctc(K²), xty(M·T), xtx(M), ctx(K·M)]` — i.e.
+/// the base segment followed by the single full-width shard segment.
+/// `T = 1` reproduces the historical single-trait layout exactly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FlatLayout {
     pub k: usize,
     pub m: usize,
+    /// trait count (1 = classic single-trait scan)
+    pub t: usize,
 }
 
 impl FlatLayout {
     pub fn len(&self) -> usize {
-        base_flat_len(self.k) + shard_flat_len(self.k, self.m)
+        base_flat_len(self.k, self.t) + shard_flat_len(self.k, self.t, self.m)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -339,12 +416,12 @@ impl FlatLayout {
 
     /// Offset of the `xty` segment (== length of the base segment).
     pub fn xty_off(&self) -> usize {
-        base_flat_len(self.k)
+        base_flat_len(self.k, self.t)
     }
 
     /// Offset of the `xtx` segment.
     pub fn xtx_off(&self) -> usize {
-        self.xty_off() + self.m
+        self.xty_off() + self.m * self.t
     }
 
     /// Offset of the `ctx` segment (K rows × M cols, row-major).
@@ -357,13 +434,13 @@ impl FlatLayout {
 /// the same vector (as a real number) so the entire combine input is one
 /// secure sum.
 pub fn flatten_for_sum(cp: &CompressedParty) -> (FlatLayout, Vec<f64>) {
-    let layout = FlatLayout { k: cp.k(), m: cp.m() };
+    let layout = FlatLayout { k: cp.k(), m: cp.m(), t: cp.t() };
     let mut v = Vec::with_capacity(layout.len());
     v.push(cp.n as f64);
-    v.push(cp.yty);
-    v.extend_from_slice(&cp.cty);
+    v.extend_from_slice(&cp.yty);
+    v.extend_from_slice(&cp.cty.data);
     v.extend_from_slice(&cp.ctc.data);
-    v.extend_from_slice(&cp.xty);
+    v.extend_from_slice(&cp.xty.data);
     v.extend_from_slice(&cp.xtx);
     v.extend_from_slice(&cp.ctx.data);
     debug_assert_eq!(v.len(), layout.len());
@@ -374,22 +451,40 @@ pub fn flatten_for_sum(cp: &CompressedParty) -> (FlatLayout, Vec<f64>) {
 #[derive(Clone, Debug)]
 pub struct AggregateSums {
     pub n: usize,
-    pub yty: f64,
-    pub cty: Vec<f64>,
+    /// YᵀY diag, length T
+    pub yty: Vec<f64>,
+    /// CᵀY, K × T
+    pub cty: Matrix,
     pub ctc: Matrix,
-    pub xty: Vec<f64>,
+    /// XᵀY, M × T
+    pub xty: Matrix,
     pub xtx: Vec<f64>,
+    /// CᵀX, K × M
     pub ctx: Matrix,
 }
 
 impl AggregateSums {
+    pub fn t(&self) -> usize {
+        self.yty.len()
+    }
+
     /// The variant-independent part of the aggregate.
     pub fn base(&self) -> BaseSums {
         BaseSums {
             n: self.n,
-            yty: self.yty,
+            yty: self.yty.clone(),
             cty: self.cty.clone(),
             ctc: self.ctc.clone(),
+        }
+    }
+
+    /// Column slice `[j0, j1)` of the variant-sized sums, as one shard's
+    /// [`ShardSums`] (test/simulation convenience).
+    pub fn shard_sums(&self, j0: usize, j1: usize) -> ShardSums {
+        ShardSums {
+            xty: self.xty.row_slice(j0, j1),
+            xtx: self.xtx[j0..j1].to_vec(),
+            ctx: self.ctx.col_slice(j0, j1),
         }
     }
 }
@@ -397,7 +492,7 @@ impl AggregateSums {
 /// Inverse of [`flatten_for_sum`] applied to a summed vector.
 pub fn unflatten_sum(layout: FlatLayout, v: &[f64]) -> anyhow::Result<AggregateSums> {
     anyhow::ensure!(v.len() == layout.len(), "flat length mismatch");
-    let (k, m) = (layout.k, layout.m);
+    let (k, m, t) = (layout.k, layout.m, layout.t);
     let mut pos = 0usize;
     let mut take = |n: usize| {
         let s = &v[pos..pos + n];
@@ -405,10 +500,10 @@ pub fn unflatten_sum(layout: FlatLayout, v: &[f64]) -> anyhow::Result<AggregateS
         s
     };
     let n = take(1)[0].round() as usize;
-    let yty = take(1)[0];
-    let cty = take(k).to_vec();
+    let yty = take(t).to_vec();
+    let cty = Matrix::from_vec(k, t, take(k * t).to_vec());
     let ctc = Matrix::from_vec(k, k, take(k * k).to_vec());
-    let xty = take(m).to_vec();
+    let xty = Matrix::from_vec(m, t, take(m * t).to_vec());
     let xtx = take(m).to_vec();
     let ctx = Matrix::from_vec(k, m, take(k * m).to_vec());
     Ok(AggregateSums { n, yty, cty, ctc, xty, xtx, ctx })
@@ -420,26 +515,28 @@ mod tests {
     use crate::linalg::rel_err;
     use crate::util::rng::Rng;
 
-    fn make(n: usize, k: usize, m: usize, seed: u64) -> (Vec<f64>, Matrix, Matrix) {
+    fn make(n: usize, k: usize, m: usize, t: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
         let mut rng = Rng::new(seed);
         let mut c = Matrix::randn(n, k, &mut rng);
         for i in 0..n {
             c[(i, 0)] = 1.0;
         }
         let x = Matrix::randn(n, m, &mut rng);
-        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        (y, c, x)
+        let ys = Matrix::randn(n, t, &mut rng);
+        (ys, c, x)
     }
 
     #[test]
     fn matches_direct_computation() {
-        let (y, c, x) = make(80, 4, 17, 130);
-        let cp = compress_party(&y, &c, &x, 5, Some(3));
+        let (ys, c, x) = make(80, 4, 17, 1, 130);
+        let y = ys.col(0);
+        let cp = compress_party(&ys, &c, &x, 5, Some(3));
         assert_eq!(cp.n, 80);
-        assert!(rel_err(&[cp.yty], &[y.iter().map(|v| v * v).sum::<f64>()]) < 1e-14);
-        assert!(rel_err(&cp.cty, &c.t_matvec(&y)) < 1e-13);
+        assert_eq!((cp.k(), cp.m(), cp.t()), (4, 17, 1));
+        assert!(rel_err(&cp.yty, &[y.iter().map(|v| v * v).sum::<f64>()]) < 1e-14);
+        assert!(rel_err(&cp.cty.data, &c.t_matvec(&y)) < 1e-13);
         assert!(rel_err(&cp.ctc.data, &c.gram().data) < 1e-13);
-        assert!(rel_err(&cp.xty, &x.t_matvec(&y)) < 1e-13);
+        assert!(rel_err(&cp.xty.data, &x.t_matvec(&y)) < 1e-13);
         let xtx_direct: Vec<f64> =
             (0..17).map(|j| x.col(j).iter().map(|v| v * v).sum()).collect();
         assert!(rel_err(&cp.xtx, &xtx_direct) < 1e-13);
@@ -447,81 +544,118 @@ mod tests {
     }
 
     #[test]
+    fn multi_trait_matches_direct_computation() {
+        let (ys, c, x) = make(70, 3, 11, 4, 230);
+        let cp = compress_party(&ys, &c, &x, 4, Some(2));
+        assert_eq!((cp.k(), cp.m(), cp.t()), (3, 11, 4));
+        assert!(rel_err(&cp.cty.data, &c.t_matmul(&ys).data) < 1e-13);
+        assert!(rel_err(&cp.xty.data, &x.t_matmul(&ys).data) < 1e-13);
+        for tt in 0..4 {
+            let y = ys.col(tt);
+            assert!(
+                rel_err(&[cp.yty[tt]], &[y.iter().map(|v| v * v).sum::<f64>()]) < 1e-14,
+                "trait {tt}"
+            );
+        }
+    }
+
+    /// Trait `t` of a T-trait compression is bit-identical to compressing
+    /// that trait alone — the per-trait exactness the protocol relies on.
+    #[test]
+    fn per_trait_slices_bit_identical_to_single_trait() {
+        let (ys, c, x) = make(60, 3, 14, 3, 231);
+        let multi = compress_party(&ys, &c, &x, 5, Some(2));
+        for tt in 0..3 {
+            let single = compress_party(&Matrix::from_col(ys.col(tt)), &c, &x, 5, Some(2));
+            assert_eq!(multi.yty[tt].to_bits(), single.yty[0].to_bits(), "yty {tt}");
+            assert_eq!(multi.cty.col(tt), single.cty.data, "cty {tt}");
+            assert_eq!(multi.xty.col(tt), single.xty.data, "xty {tt}");
+            // shared pieces identical regardless of T
+            assert_eq!(multi.xtx, single.xtx);
+            assert_eq!(multi.ctx.data, single.ctx.data);
+            assert_eq!(multi.ctc.data, single.ctc.data);
+        }
+    }
+
+    #[test]
     fn block_and_thread_invariance() {
-        let (y, c, x) = make(60, 3, 23, 131);
-        let a = compress_party(&y, &c, &x, 23, Some(1));
-        let b = compress_party(&y, &c, &x, 4, Some(4));
+        let (ys, c, x) = make(60, 3, 23, 2, 131);
+        let a = compress_party(&ys, &c, &x, 23, Some(1));
+        let b = compress_party(&ys, &c, &x, 4, Some(4));
         // identical up to fp addition order within a column (same order
         // actually — rows are always scanned in order within a block)
-        assert!(rel_err(&a.xty, &b.xty) < 1e-14);
+        assert!(rel_err(&a.xty.data, &b.xty.data) < 1e-14);
         assert!(rel_err(&a.ctx.data, &b.ctx.data) < 1e-14);
     }
 
     #[test]
     fn sharded_compress_is_bit_identical_to_full() {
-        let (y, c, x) = make(50, 4, 29, 136);
-        let full = compress_party(&y, &c, &x, 7, Some(2));
+        let (ys, c, x) = make(50, 4, 29, 2, 136);
+        let full = compress_party(&ys, &c, &x, 7, Some(2));
         // three ragged shards: [0,10), [10,20), [20,29)
         for (j0, j1) in [(0usize, 10usize), (10, 20), (20, 29)] {
-            let vb = compress_variant_block(&y, &c, &x, j0, j1, 7, Some(2));
-            assert_eq!(vb.xty, full.xty[j0..j1], "xty {j0}..{j1}");
+            let vb = compress_variant_block(&ys, &c, &x, j0, j1, 7, Some(2));
+            assert_eq!(vb.xty.data, full.xty.row_slice(j0, j1).data, "xty {j0}..{j1}");
             assert_eq!(vb.xtx, full.xtx[j0..j1], "xtx {j0}..{j1}");
             assert_eq!(vb.ctx.data, full.ctx.col_slice(j0, j1).data, "ctx {j0}..{j1}");
             // and the cached-engine slicing path agrees too
             let sliced = full.variant_block(j0, j1);
-            assert_eq!(sliced.xty, vb.xty);
+            assert_eq!(sliced.xty.data, vb.xty.data);
             assert_eq!(sliced.ctx.data, vb.ctx.data);
         }
     }
 
     #[test]
     fn base_flatten_roundtrip() {
-        let (y, c, _) = make(40, 3, 2, 137);
-        let base = compress_base(&y, &c);
+        let (ys, c, _) = make(40, 3, 2, 2, 137);
+        let base = compress_base(&ys, &c);
         let flat = base.flatten();
-        assert_eq!(flat.len(), base_flat_len(3));
-        let sums = unflatten_base(3, &flat).unwrap();
+        assert_eq!(flat.len(), base_flat_len(3, 2));
+        let sums = unflatten_base(3, 2, &flat).unwrap();
         assert_eq!(sums.n, 40);
         assert_eq!(sums.yty, base.yty);
-        assert_eq!(sums.cty, base.cty);
+        assert_eq!(sums.cty.data, base.cty.data);
         assert_eq!(sums.ctc.data, base.ctc.data);
-        assert!(unflatten_base(4, &flat).is_err());
+        assert!(unflatten_base(4, 2, &flat).is_err());
+        assert!(unflatten_base(3, 3, &flat).is_err());
     }
 
     #[test]
     fn shard_flatten_roundtrip() {
-        let (y, c, x) = make(30, 3, 12, 138);
-        let vb = compress_variant_block(&y, &c, &x, 4, 9, 3, Some(1));
+        let (ys, c, x) = make(30, 3, 12, 3, 138);
+        let vb = compress_variant_block(&ys, &c, &x, 4, 9, 3, Some(1));
         let flat = vb.flatten();
-        assert_eq!(flat.len(), shard_flat_len(3, 5));
-        let sums = unflatten_shard(3, 5, &flat).unwrap();
-        assert_eq!(sums.xty, vb.xty);
+        assert_eq!(flat.len(), shard_flat_len(3, 3, 5));
+        let sums = unflatten_shard(3, 3, 5, &flat).unwrap();
+        assert_eq!(sums.xty.data, vb.xty.data);
         assert_eq!(sums.xtx, vb.xtx);
         assert_eq!(sums.ctx.data, vb.ctx.data);
-        assert!(unflatten_shard(3, 6, &flat).is_err());
+        assert!(unflatten_shard(3, 3, 6, &flat).is_err());
+        assert!(unflatten_shard(3, 2, 5, &flat).is_err());
     }
 
     #[test]
     fn sparse_zero_columns_ok() {
-        let (y, c, mut x) = make(40, 3, 5, 132);
+        let (ys, c, mut x) = make(40, 3, 5, 1, 132);
         for i in 0..40 {
             x[(i, 2)] = 0.0;
         }
-        let cp = compress_party(&y, &c, &x, 2, Some(2));
+        let cp = compress_party(&ys, &c, &x, 2, Some(2));
         assert_eq!(cp.xtx[2], 0.0);
-        assert_eq!(cp.xty[2], 0.0);
+        assert_eq!(cp.xty[(2, 0)], 0.0);
     }
 
     #[test]
     fn flatten_roundtrip() {
-        let (y, c, x) = make(50, 4, 9, 133);
-        let cp = compress_party(&y, &c, &x, 9, Some(1));
+        let (ys, c, x) = make(50, 4, 9, 2, 133);
+        let cp = compress_party(&ys, &c, &x, 9, Some(1));
         let (layout, flat) = flatten_for_sum(&cp);
         assert_eq!(flat.len(), layout.len());
         let agg = unflatten_sum(layout, &flat).unwrap();
         assert_eq!(agg.n, cp.n);
-        assert!(rel_err(&agg.cty, &cp.cty) < 1e-15);
+        assert!(rel_err(&agg.cty.data, &cp.cty.data) < 1e-15);
         assert!(rel_err(&agg.ctx.data, &cp.ctx.data) < 1e-15);
+        assert!(rel_err(&agg.xty.data, &cp.xty.data) < 1e-15);
         assert!(rel_err(&agg.xtx, &cp.xtx) < 1e-15);
     }
 
@@ -529,8 +663,8 @@ mod tests {
     fn full_flat_is_base_then_shard_segments() {
         // the full layout is exactly [base | xty | xtx | ctx]; the shard
         // machinery relies on these offsets to scatter shard deltas
-        let (y, c, x) = make(35, 3, 8, 139);
-        let cp = compress_party(&y, &c, &x, 8, Some(1));
+        let (ys, c, x) = make(35, 3, 8, 2, 139);
+        let cp = compress_party(&ys, &c, &x, 8, Some(1));
         let (layout, flat) = flatten_for_sum(&cp);
         assert_eq!(&flat[..layout.xty_off()], cp.base().flatten().as_slice());
         let vb = cp.variant_block(0, 8);
@@ -540,32 +674,44 @@ mod tests {
 
     #[test]
     fn flat_sum_equals_pooled_stats() {
-        // Σ_p flatten(party_p) == flatten-ish of pooled data
-        let (y1, c1, x1) = make(30, 3, 7, 134);
-        let (y2, c2, x2) = make(45, 3, 7, 135);
-        let cp1 = compress_party(&y1, &c1, &x1, 7, Some(1));
-        let cp2 = compress_party(&y2, &c2, &x2, 7, Some(1));
+        // Σ_p flatten(party_p) == flatten-ish of pooled data, per trait
+        let (ys1, c1, x1) = make(30, 3, 7, 2, 134);
+        let (ys2, c2, x2) = make(45, 3, 7, 2, 135);
+        let cp1 = compress_party(&ys1, &c1, &x1, 7, Some(1));
+        let cp2 = compress_party(&ys2, &c2, &x2, 7, Some(1));
         let (layout, f1) = flatten_for_sum(&cp1);
         let (_, f2) = flatten_for_sum(&cp2);
         let sum: Vec<f64> = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
         let agg = unflatten_sum(layout, &sum).unwrap();
 
-        let y: Vec<f64> = y1.iter().chain(&y2).copied().collect();
+        let ys = Matrix::vstack(&[&ys1, &ys2]);
         let c = Matrix::vstack(&[&c1, &c2]);
         let x = Matrix::vstack(&[&x1, &x2]);
-        let pooled = compress_party(&y, &c, &x, 7, Some(1));
+        let pooled = compress_party(&ys, &c, &x, 7, Some(1));
         assert_eq!(agg.n, 75);
         assert!(rel_err(&agg.ctc.data, &pooled.ctc.data) < 1e-13);
-        assert!(rel_err(&agg.xty, &pooled.xty) < 1e-13);
+        assert!(rel_err(&agg.xty.data, &pooled.xty.data) < 1e-13);
         assert!(rel_err(&agg.ctx.data, &pooled.ctx.data) < 1e-13);
     }
 
     #[test]
-    fn layout_len() {
-        let l = FlatLayout { k: 3, m: 10 };
+    fn layout_len_single_trait_matches_historical() {
+        let l = FlatLayout { k: 3, m: 10, t: 1 };
         assert_eq!(l.len(), 2 + 3 + 9 + 20 + 30);
         assert_eq!(l.xty_off(), 14);
         assert_eq!(l.xtx_off(), 24);
         assert_eq!(l.ctx_off(), 34);
+        assert_eq!(base_flat_len(3, 1), 2 + 3 + 9);
+        assert_eq!(shard_flat_len(3, 1, 10), 10 * (2 + 3));
+    }
+
+    #[test]
+    fn layout_len_multi_trait() {
+        let l = FlatLayout { k: 3, m: 10, t: 4 };
+        // [n | yty(4) | cty(12) | ctc(9) | xty(40) | xtx(10) | ctx(30)]
+        assert_eq!(l.xty_off(), 1 + 4 + 12 + 9);
+        assert_eq!(l.xtx_off(), l.xty_off() + 40);
+        assert_eq!(l.ctx_off(), l.xtx_off() + 10);
+        assert_eq!(l.len(), l.ctx_off() + 30);
     }
 }

@@ -23,13 +23,15 @@ pub struct MetaResult {
     pub p: Vec<f64>,
 }
 
-/// Run per-party scans and inverse-variance combine.
+/// Run per-party scans and inverse-variance combine. Operates on trait 0
+/// (the meta-analysis baseline is a single-trait comparator; the pooled
+/// scan is the path that amortizes across traits).
 pub fn meta_analyze(cohort: &Cohort, block_m: usize) -> anyhow::Result<MetaResult> {
     let m = cohort.m();
     let mut wsum = vec![0.0; m];
     let mut wbsum = vec![0.0; m];
     for party in &cohort.parties {
-        let cp = compress_party(&party.y, &party.c, &party.x, block_m, None);
+        let cp = compress_party(&party.ys, &party.c, &party.x, block_m, None);
         let (layout, flat) = flatten_for_sum(&cp);
         let agg = unflatten_sum(layout, &flat)?;
         let out = combine_compressed(
@@ -38,7 +40,7 @@ pub fn meta_analyze(cohort: &Cohort, block_m: usize) -> anyhow::Result<MetaResul
             CombineOptions::default(),
         )?;
         for j in 0..m {
-            let (b, s) = (out.assoc.beta[j], out.assoc.se[j]);
+            let (b, s) = (out.assoc[0].beta[j], out.assoc[0].se[j]);
             if b.is_finite() && s.is_finite() && s > 0.0 {
                 let w = 1.0 / (s * s);
                 wsum[j] += w;
@@ -70,7 +72,7 @@ mod tests {
 
     fn pooled_scan(cohort: &Cohort) -> crate::scan::combine::ScanOutput {
         let pooled = pool_cohort(cohort);
-        let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, None);
+        let cp = compress_party(&pooled.ys, &pooled.c, &pooled.x, 64, None);
         let (layout, flat) = flatten_for_sum(&cp);
         let agg = unflatten_sum(layout, &flat).unwrap();
         combine_compressed(
@@ -87,6 +89,7 @@ mod tests {
         let spec = CohortSpec {
             party_sizes: vec![400, 400],
             m_variants: 60,
+            n_traits: 1,
             n_causal: 3,
             effect_sd: 0.5,
             fst: 0.01,
@@ -100,9 +103,9 @@ mod tests {
         let meta = meta_analyze(&cohort, 30).unwrap();
         let pooled = pooled_scan(&cohort);
         for &j in &cohort.truth.causal_idx {
-            let d = (meta.beta[j] - pooled.assoc.beta[j]).abs();
-            let tol = 3.0 * pooled.assoc.se[j];
-            assert!(d < tol, "variant {j}: meta={} pooled={}", meta.beta[j], pooled.assoc.beta[j]);
+            let d = (meta.beta[j] - pooled.assoc[0].beta[j]).abs();
+            let tol = 3.0 * pooled.assoc[0].se[j];
+            assert!(d < tol, "variant {j}: meta={} pooled={}", meta.beta[j], pooled.assoc[0].beta[j]);
         }
     }
 
@@ -112,6 +115,7 @@ mod tests {
         let spec = CohortSpec {
             party_sizes: vec![40; 8],
             m_variants: 40,
+            n_traits: 1,
             n_causal: 2,
             effect_sd: 0.5,
             fst: 0.02,
@@ -126,8 +130,8 @@ mod tests {
         let pooled = pooled_scan(&cohort);
         // median se ratio should favor pooled
         let mut ratios: Vec<f64> = (0..spec.m_variants)
-            .filter(|&j| meta.se[j].is_finite() && pooled.assoc.se[j].is_finite())
-            .map(|j| meta.se[j] / pooled.assoc.se[j])
+            .filter(|&j| meta.se[j].is_finite() && pooled.assoc[0].se[j].is_finite())
+            .map(|j| meta.se[j] / pooled.assoc[0].se[j])
             .collect();
         ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = ratios[ratios.len() / 2];

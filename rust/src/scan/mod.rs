@@ -1,24 +1,34 @@
 //! The paper's algorithms, end to end: compress-within, combine-across,
 //! and the association-scan epilogue — plus the meta-analysis baseline.
 //!
-//! ## The sharded streaming pipeline
+//! ## The trait-major sharded streaming pipeline
+//!
+//! Every stage is **trait-major**: statistics carry a trait dimension
+//! `T` (§3's "promote y to a matrix Y"), and the classic single-trait
+//! scan is exactly the degenerate `T = 1` case — same structs, same
+//! wire layout, bit-identical values. The genotype-sized statistics
+//! (`X·X`, `CᵀX`, `CᵀC`) are shared across traits, so the `O(NKM)`
+//! compression and the `O(K²M)` projection are paid once and each extra
+//! trait costs only `O(N(M+K))` — the amortization that makes biobank
+//! PheWAS (~4K traits) and eQTL (~20K) economical.
 //!
 //! Scans run as a **variant-shard pipeline**: a [`ShardPlan`] splits the
 //! `M` transient covariates into fixed-width column shards
 //! ([`ScanConfig::shard_m`]), and each stage is factored to match:
 //!
 //! - compress = [`compress_base`] (once) + [`compress_variant_block`]
-//!   (per shard, `O(K·width)` memory);
+//!   (per shard, `O((K+T)·width)` memory);
 //! - secure aggregation sums one base round plus one round per shard;
-//! - combine = [`combine_base`] (factorize once, `O(K³)`) +
-//!   [`combine_shard`] (Lemma 3.1 epilogue per shard).
+//! - combine = [`combine_base`] (factorize once, `O(K³)` + `O(K²)` per
+//!   trait) + [`combine_shard`] (Lemma 3.1 epilogue per shard, `QᵀX`
+//!   projection shared across traits).
 //!
 //! Parties compress shard `s+1` while the leader is still combining
 //! shard `s`, so peak payload per round and leader working memory are
-//! bounded by the shard width instead of `M`. Because every per-variant
-//! statistic is independent of how columns are chunked, the sharded scan
-//! is **bit-identical** to the single-shot scan — and the single-shot
-//! path *is* the degenerate one-shard plan (`shard_m == 0`).
+//! bounded by `O((K+T)·width)` instead of `O((K+T)·M)`. Because every
+//! per-variant statistic is independent of how columns are chunked, the
+//! sharded scan is **bit-identical** to the single-shot scan — and the
+//! single-shot path *is* the degenerate one-shard plan (`shard_m == 0`).
 //!
 //! Two compute paths produce identical `CompressedParty` values:
 //! a pure-Rust reference path (always available; used by tests and as the
@@ -29,12 +39,7 @@
 pub mod compressed;
 mod combine;
 mod meta;
-mod multitrait;
 mod shard;
-
-pub use multitrait::{
-    aggregate_multi, combine_multi, compress_party_multi, MultiTraitCompressed,
-};
 
 pub use compressed::{
     base_flat_len, compress_base, compress_party, compress_variant_block, flatten_for_sum,
@@ -63,7 +68,8 @@ pub struct ScanConfig {
     pub block_m: usize,
     /// variant-shard width for the streaming protocol: each shard is one
     /// contribution round, bounding peak payload and leader memory at
-    /// `O(K·shard_m)`. `0` = single-shot (one shard spanning all of `M`).
+    /// `O((K+T)·shard_m)`. `0` = single-shot (one shard spanning all of
+    /// `M`).
     pub shard_m: usize,
     /// R-factor method for the combine stage (TSQR vs Gram+Cholesky)
     pub r_method: RFactorMethod,

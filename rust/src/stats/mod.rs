@@ -7,5 +7,6 @@ mod regression;
 
 pub use tdist::{ln_gamma, betainc, t_sf, t_two_sided_p};
 pub use regression::{
-    RegressionFit, fit_from_sufficient, ScanStats, scan_stats_from_projected, AssocResult,
+    RegressionFit, fit_from_sufficient, ScanStats, scan_stats_from_projected,
+    scan_stats_from_projected_parts, AssocResult,
 };

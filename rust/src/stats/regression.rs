@@ -111,16 +111,32 @@ impl AssocResult {
 /// β̂ = (X·y − QᵀX·Qᵀy) / (X·X − QᵀX·QᵀX)
 /// σ̂² = ((y·y − Qᵀy·Qᵀy)/(X·X − QᵀX·QᵀX) − β̂²) / (N−K−1)
 pub fn scan_stats_from_projected(s: &ScanStats) -> AssocResult {
-    let m = s.xty.len();
-    assert_eq!(s.xtx.len(), m);
-    assert_eq!(s.qt_x.rows, s.k);
-    assert_eq!(s.qt_x.cols, m);
-    assert_eq!(s.qt_y.len(), s.k);
-    let df = (s.n as f64) - (s.k as f64) - 1.0;
+    scan_stats_from_projected_parts(s.n, s.k, s.yty, &s.xty, &s.xtx, &s.qt_y, &s.qt_x)
+}
+
+/// Borrowed-parts form of [`scan_stats_from_projected`], for callers
+/// that share the projected inputs across invocations — the multi-trait
+/// combine runs this once per trait against the *same* `QᵀX` without
+/// cloning it.
+pub fn scan_stats_from_projected_parts(
+    n: usize,
+    k: usize,
+    yty: f64,
+    xty: &[f64],
+    xtx: &[f64],
+    qt_y: &[f64],
+    qt_x: &Matrix,
+) -> AssocResult {
+    let m = xty.len();
+    assert_eq!(xtx.len(), m);
+    assert_eq!(qt_x.rows, k);
+    assert_eq!(qt_x.cols, m);
+    assert_eq!(qt_y.len(), k);
+    let df = (n as f64) - (k as f64) - 1.0;
     assert!(df > 0.0, "need N > K + 1");
     let yy_resid = {
-        let qy2: f64 = s.qt_y.iter().map(|v| v * v).sum();
-        s.yty - qy2
+        let qy2: f64 = qt_y.iter().map(|v| v * v).sum();
+        yty - qy2
     };
     let mut beta = vec![0.0; m];
     let mut se = vec![0.0; m];
@@ -130,13 +146,13 @@ pub fn scan_stats_from_projected(s: &ScanStats) -> AssocResult {
         // column j of QᵀX
         let mut qx_qy = 0.0;
         let mut qx_qx = 0.0;
-        for i in 0..s.k {
-            let q = s.qt_x[(i, j)];
-            qx_qy += q * s.qt_y[i];
+        for i in 0..k {
+            let q = qt_x[(i, j)];
+            qx_qy += q * qt_y[i];
             qx_qx += q * q;
         }
-        let denom = s.xtx[j] - qx_qx;
-        if denom <= 1e-12 * s.xtx[j].abs().max(1.0) {
+        let denom = xtx[j] - qx_qx;
+        if denom <= 1e-12 * xtx[j].abs().max(1.0) {
             // x_j is (numerically) in the span of C — no signal left.
             beta[j] = f64::NAN;
             se[j] = f64::NAN;
@@ -144,7 +160,7 @@ pub fn scan_stats_from_projected(s: &ScanStats) -> AssocResult {
             p[j] = f64::NAN;
             continue;
         }
-        let b = (s.xty[j] - qx_qy) / denom;
+        let b = (xty[j] - qx_qy) / denom;
         let sigma2 = ((yy_resid / denom) - b * b) / df;
         let sd = sigma2.max(0.0).sqrt();
         beta[j] = b;

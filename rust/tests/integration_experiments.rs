@@ -17,6 +17,7 @@ fn e6_meta_loses_power_under_heterogeneity() {
         // many small parties: the regime where meta is weakest
         party_sizes: vec![35; 10],
         m_variants: 80,
+        n_traits: 1,
         n_causal: 8,
         effect_sd: 0.35,
         fst: 0.1,
@@ -44,7 +45,7 @@ fn e6_meta_loses_power_under_heterogeneity() {
         causal.iter().filter(|&&j| ps[j].is_finite() && ps[j] < alpha).count() as f64
             / causal.len() as f64
     };
-    let pooled_power = power(&pooled.output.assoc.p);
+    let pooled_power = power(&pooled.output.assoc[0].p);
     let meta_power = power(&meta.p);
     assert!(
         pooled_power >= meta_power,
@@ -68,7 +69,7 @@ fn e7_incremental_matches_full_recompute() {
         }
         let x = Matrix::randn(n, m, rng);
         let y: Vec<f64> = (0..n).map(|i| 0.25 * x[(i, 1)] + rng.normal()).collect();
-        compress_party(&y, &c, &x, m, Some(1))
+        compress_party(&Matrix::from_col(y), &c, &x, m, Some(1))
     };
     let initial: Vec<_> = (0..3).map(|_| make(90, &mut rng)).collect();
     let joiners: Vec<_> = (0..2).map(|_| make(150, &mut rng)).collect();
@@ -82,10 +83,10 @@ fn e7_incremental_matches_full_recompute() {
     all.extend(joiners.clone());
     let full = IncrementalAggregate::from_parties(&all).unwrap().recombine().unwrap();
 
-    assert!(rel_err(&after.assoc.beta, &full.assoc.beta) < 1e-12);
-    assert!(rel_err(&after.assoc.se, &full.assoc.se) < 1e-12);
+    assert!(rel_err(&after.assoc[0].beta, &full.assoc[0].beta) < 1e-12);
+    assert!(rel_err(&after.assoc[0].se, &full.assoc[0].se) < 1e-12);
     // more data → tighter intervals at the causal variant
-    assert!(after.assoc.se[1] < before.assoc.se[1]);
+    assert!(after.assoc[0].se[1] < before.assoc[0].se[1]);
 }
 
 /// E9: TSQR and Gram+Cholesky agree on well-conditioned inputs and
@@ -152,7 +153,7 @@ fn e3_combine_inputs_independent_of_n() {
         }
         let x = Matrix::randn(n, m, &mut rng);
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let cp = compress_party(&y, &c, &x, m, Some(1));
+        let cp = compress_party(&Matrix::from_col(y), &c, &x, m, Some(1));
         let (layout, flat) = dash::scan::flatten_for_sum(&cp);
         assert_eq!(flat.len(), layout.len());
         flat_lens.push(flat.len());

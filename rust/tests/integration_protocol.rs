@@ -15,7 +15,7 @@ use dash::util::rng::Rng;
 
 fn pooled_oracle(cohort: &dash::gwas::Cohort) -> ScanOutput {
     let pooled = pool_cohort(cohort);
-    let cp = compress_party(&pooled.y, &pooled.c, &pooled.x, 64, Some(2));
+    let cp = compress_party(&pooled.ys, &pooled.c, &pooled.x, 64, Some(2));
     let (layout, flat) = flatten_for_sum(&cp);
     let agg = unflatten_sum(layout, &flat).unwrap();
     combine_compressed(
@@ -30,6 +30,7 @@ fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
     CohortSpec {
         party_sizes: vec![n_per; parties],
         m_variants: m,
+        n_traits: 1,
         n_causal: 3.min(m),
         effect_sd: 0.4,
         fst: 0.05,
@@ -57,18 +58,18 @@ fn e5_exactness_across_party_counts() {
         let res = run_multi_party_scan(&cohort, &cfg).unwrap();
         let oracle = pooled_oracle(&cohort);
         assert!(
-            rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-9,
+            rel_err(&res.output.assoc[0].beta, &oracle.assoc[0].beta) < 1e-9,
             "P={parties} beta"
         );
         assert!(
-            rel_err(&res.output.assoc.se, &oracle.assoc.se) < 1e-9,
+            rel_err(&res.output.assoc[0].se, &oracle.assoc[0].se) < 1e-9,
             "P={parties} se"
         );
         // t and p too
         let finite: Vec<usize> =
-            (0..cohort.m()).filter(|&j| oracle.assoc.p[j].is_finite()).collect();
+            (0..cohort.m()).filter(|&j| oracle.assoc[0].p[j].is_finite()).collect();
         for &j in &finite {
-            assert!((res.output.assoc.p[j] - oracle.assoc.p[j]).abs() < 1e-9, "p[{j}]");
+            assert!((res.output.assoc[0].p[j] - oracle.assoc[0].p[j]).abs() < 1e-9, "p[{j}]");
         }
     }
 }
@@ -97,7 +98,7 @@ fn e5_property_masked_random_shapes() {
                 .map_err(|e| format!("scan failed: {e:#}"))?;
             let oracle = pooled_oracle(&cohort);
             for j in 0..m {
-                let (a, b) = (res.output.assoc.beta[j], oracle.assoc.beta[j]);
+                let (a, b) = (res.output.assoc[0].beta[j], oracle.assoc[0].beta[j]);
                 if a.is_finite() && b.is_finite() && (a - b).abs() > 2e-4 * b.abs().max(1.0) {
                     return Err(format!("beta[{j}]: {a} vs {b}"));
                 }
@@ -139,7 +140,7 @@ fn masked_contribution_is_not_plaintext() {
 
     let cohort = generate_cohort(&spec_for(3, 100, 30), 601);
     let p0 = &cohort.parties[0];
-    let cp = compress_party(&p0.y, &p0.c, &p0.x, 30, Some(1));
+    let cp = compress_party(&p0.ys, &p0.c, &p0.x, 30, Some(1));
     let (_, flat) = flatten_for_sum(&cp);
     let codec = FixedCodec::default();
     let plain_enc = codec.encode_vec(&flat).unwrap();
@@ -162,6 +163,7 @@ fn uneven_parties_and_edge_shapes() {
     let spec = CohortSpec {
         party_sizes: vec![33, 190, 71],
         m_variants: 1,
+        n_traits: 1,
         n_causal: 1,
         effect_sd: 0.6,
         fst: 0.02,
@@ -180,7 +182,7 @@ fn uneven_parties_and_edge_shapes() {
     };
     let res = run_multi_party_scan(&cohort, &cfg).unwrap();
     let oracle = pooled_oracle(&cohort);
-    assert!(rel_err(&res.output.assoc.beta, &oracle.assoc.beta) < 1e-9);
+    assert!(rel_err(&res.output.assoc[0].beta, &oracle.assoc[0].beta) < 1e-9);
 }
 
 /// Shamir with a strict quorum gives the same answer as masked.
@@ -203,7 +205,7 @@ fn shamir_quorum_equivalence() {
     )
     .unwrap();
     for j in 0..cohort.m() {
-        let (a, b) = (masked.output.assoc.beta[j], shamir.output.assoc.beta[j]);
+        let (a, b) = (masked.output.assoc[0].beta[j], shamir.output.assoc[0].beta[j]);
         if a.is_finite() && b.is_finite() {
             assert!((a - b).abs() < 1e-5 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
         }

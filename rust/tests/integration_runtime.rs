@@ -43,16 +43,18 @@ fn artifact_compress_matches_rust_path() {
             c[(i, 0)] = 1.0;
         }
         let x = Matrix::randn(n, m, &mut rng);
-        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // two traits: exercises the per-trait artifact loop
+        let ys = Matrix::randn(n, 2, &mut rng);
 
-        let fast = e.compress_party(&y, &c, &x).unwrap();
-        let slow = compress_party(&y, &c, &x, 64, Some(2));
+        let fast = e.compress_party(&ys, &c, &x).unwrap();
+        let slow = compress_party(&ys, &c, &x, 64, Some(2));
 
         assert_eq!(fast.n, slow.n);
-        assert!(rel_err(&[fast.yty], &[slow.yty]) < 1e-12, "yty n={n} m={m}");
-        assert!(rel_err(&fast.cty, &slow.cty) < 1e-12, "cty n={n} m={m}");
+        assert_eq!(fast.t(), 2);
+        assert!(rel_err(&fast.yty, &slow.yty) < 1e-12, "yty n={n} m={m}");
+        assert!(rel_err(&fast.cty.data, &slow.cty.data) < 1e-12, "cty n={n} m={m}");
         assert!(rel_err(&fast.ctc.data, &slow.ctc.data) < 1e-12, "ctc n={n} m={m}");
-        assert!(rel_err(&fast.xty, &slow.xty) < 1e-12, "xty n={n} m={m}");
+        assert!(rel_err(&fast.xty.data, &slow.xty.data) < 1e-12, "xty n={n} m={m}");
         assert!(rel_err(&fast.xtx, &slow.xtx) < 1e-12, "xtx n={n} m={m}");
         assert!(rel_err(&fast.ctx.data, &slow.ctx.data) < 1e-12, "ctx n={n} m={m}");
         // R factors agree (QR vs Cholesky of the same Gram)
@@ -73,21 +75,22 @@ fn artifact_scan_stats_matches_rust_epilogue() {
         }
         let x = Matrix::randn(n, m, &mut rng);
         let y: Vec<f64> = (0..n).map(|i| 0.3 * x[(i, 0)] + rng.normal()).collect();
-        let cp = compress_party(&y, &c, &x, 64, Some(2));
+        let cp = compress_party(&Matrix::from_col(y), &c, &x, 64, Some(2));
         let (layout, flat) = flatten_for_sum(&cp);
         let agg = unflatten_sum(layout, &flat).unwrap();
         let r = dash::linalg::cholesky_upper(&agg.ctc).unwrap();
-        let qty = solve_rt_b(&r, &Matrix::from_vec(k, 1, agg.cty.clone())).data;
+        let qty = solve_rt_b(&r, &agg.cty).data;
         let qtx = solve_rt_b(&r, &agg.ctx);
+        let xty0 = agg.xty.col(0);
 
         let fast = e
-            .scan_stats(agg.n, k, agg.yty, &agg.xty, &agg.xtx, &qty, &qtx)
+            .scan_stats(agg.n, k, agg.yty[0], &xty0, &agg.xtx, &qty, &qtx)
             .unwrap();
         let slow = dash::stats::scan_stats_from_projected(&dash::stats::ScanStats {
             n: agg.n,
             k,
-            yty: agg.yty,
-            xty: agg.xty.clone(),
+            yty: agg.yty[0],
+            xty: xty0.clone(),
             xtx: agg.xtx.clone(),
             qt_y: qty.clone(),
             qt_x: qtx.clone(),
@@ -131,7 +134,7 @@ fn artifact_backed_multi_party_scan_matches_rust_backed() {
     // Same protocol, same fixed-point encoding; only the compress compute
     // engine differs → statistics agree to fixed-point noise.
     for j in 0..cohort.m() {
-        let (a, b) = (art_res.output.assoc.beta[j], rust_res.output.assoc.beta[j]);
+        let (a, b) = (art_res.output.assoc[0].beta[j], rust_res.output.assoc[0].beta[j]);
         if a.is_finite() && b.is_finite() {
             assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
         }
@@ -157,8 +160,8 @@ fn genotype_dosage_compress_is_exact() {
             x[(i, j)] = rng.below(3) as f64;
         }
     }
-    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let fast = e.compress_party(&y, &c, &x).unwrap();
-    let slow = compress_party(&y, &c, &x, 32, Some(1));
+    let ys = Matrix::from_col((0..n).map(|_| rng.normal()).collect());
+    let fast = e.compress_party(&ys, &c, &x).unwrap();
+    let slow = compress_party(&ys, &c, &x, 32, Some(1));
     assert_eq!(fast.xtx, slow.xtx, "xtx must be exactly equal on dosages");
 }

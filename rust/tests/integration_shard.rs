@@ -12,6 +12,7 @@ fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
     CohortSpec {
         party_sizes: vec![n_per; parties],
         m_variants: m,
+        n_traits: 1,
         n_causal: 3.min(m),
         effect_sd: 0.4,
         fst: 0.05,
@@ -67,14 +68,14 @@ fn sharded_matches_single_shot_all_backends() {
         let sharded = run(&cohort, backend, width, 41);
         assert_eq!(single.metrics.shards, 1, "{backend:?}");
         assert_eq!(sharded.metrics.shards, 4, "{backend:?}");
-        assert_bits_eq(&sharded.output.assoc.beta, &single.output.assoc.beta, "beta");
-        assert_bits_eq(&sharded.output.assoc.se, &single.output.assoc.se, "se");
-        assert_bits_eq(&sharded.output.assoc.p, &single.output.assoc.p, "p");
+        assert_bits_eq(&sharded.output.assoc[0].beta, &single.output.assoc[0].beta, "beta");
+        assert_bits_eq(&sharded.output.assoc[0].se, &single.output.assoc[0].se, "se");
+        assert_bits_eq(&sharded.output.assoc[0].p, &single.output.assoc[0].p, "p");
         assert_eq!(sharded.output.n, single.output.n);
         // covariate fit comes from the (identical) base round
         assert_bits_eq(
-            &sharded.output.covariate_fit.gamma,
-            &single.output.covariate_fit.gamma,
+            &sharded.output.covariate_fit[0].gamma,
+            &single.output.covariate_fit[0].gamma,
             "gamma",
         );
     }
@@ -90,8 +91,8 @@ fn shard_width_invariance() {
     for width in [7usize, 16, 33, 100, 4096] {
         let res = run(&cohort, Backend::Masked, width, 42);
         assert_eq!(res.metrics.shards, ShardPlan::new(m, width).count(), "width {width}");
-        assert_bits_eq(&res.output.assoc.beta, &baseline.output.assoc.beta, "beta");
-        assert_bits_eq(&res.output.assoc.se, &baseline.output.assoc.se, "se");
+        assert_bits_eq(&res.output.assoc[0].beta, &baseline.output.assoc[0].beta, "beta");
+        assert_bits_eq(&res.output.assoc[0].se, &baseline.output.assoc[0].se, "se");
     }
 }
 
@@ -134,7 +135,7 @@ fn tcp_and_inproc_sessions_byte_identical() {
         if tcp.metrics.bytes_total == inproc.metrics.bytes_total
             && tcp.metrics.messages_total == inproc.metrics.messages_total
         {
-            assert_bits_eq(&tcp.output.assoc.beta, &inproc.output.assoc.beta, "beta");
+            assert_bits_eq(&tcp.output.assoc[0].beta, &inproc.output.assoc[0].beta, "beta");
             assert_eq!(tcp.metrics.shards, inproc.metrics.shards);
             return;
         }
@@ -157,7 +158,7 @@ fn sharded_shamir_quorum_matches_masked() {
     let masked = run(&cohort, Backend::Masked, 10, 45);
     let shamir = run(&cohort, Backend::Shamir { threshold: 3 }, 10, 45);
     for j in 0..40 {
-        let (a, b) = (masked.output.assoc.beta[j], shamir.output.assoc.beta[j]);
+        let (a, b) = (masked.output.assoc[0].beta[j], shamir.output.assoc[0].beta[j]);
         if a.is_finite() && b.is_finite() {
             assert!((a - b).abs() < 1e-5 * b.abs().max(1.0), "beta[{j}]: {a} vs {b}");
         }
@@ -171,13 +172,13 @@ fn edge_shapes_sharded() {
     let cohort = generate_cohort(&spec_for(2, 50, 1), 705);
     let res = run(&cohort, Backend::Masked, 64, 46);
     assert_eq!(res.metrics.shards, 1);
-    assert_eq!(res.output.assoc.beta.len(), 1);
+    assert_eq!(res.output.assoc[0].beta.len(), 1);
 
     // single party, 3 shards
     let cohort1 = generate_cohort(&spec_for(1, 80, 12), 706);
     let single = run(&cohort1, Backend::Plaintext, 0, 47);
     let sharded = run(&cohort1, Backend::Plaintext, 4, 47);
-    assert_bits_eq(&sharded.output.assoc.beta, &single.output.assoc.beta, "beta");
+    assert_bits_eq(&sharded.output.assoc[0].beta, &single.output.assoc[0].beta, "beta");
 }
 
 /// Every party receives the same assembled per-shard results it would
