@@ -1,0 +1,142 @@
+//! SELECT-round cost vs a fresh re-scan baseline (E9).
+//!
+//! The tentpole claim: after the scan, each forward-stepwise round
+//! costs one `O(lanes·H)` secure sum — independent of M — instead of
+//! the `O((K+T)·M)` a fresh scan (the Chen et al. per-iteration shape)
+//! would pay. Measured on real wire bytes and wall time:
+//!
+//! - `bytes_max_select_round` ≪ `bytes_max_round` (one scan shard
+//!   round), and ≪ `bytes_total / shards`;
+//! - the marginal wall time of `select_k` rounds is far below a scan.
+//!
+//! Output: human table + JSON lines → `BENCH_select.json`.
+//!
+//! Run: `cargo bench --bench bench_select` (DASH_BENCH_QUICK=1 for CI).
+
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::scan::ScanConfig;
+use dash::util::bench::Bench;
+use dash::util::human_bytes;
+use dash::util::json::Json;
+
+fn spec(n_total: usize, parties: usize, m: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_total / parties; parties],
+        m_variants: m,
+        n_traits: 1,
+        n_causal: 8.min(m),
+        effect_sd: 0.5,
+        fst: 0.05,
+        party_admixture: (0..parties).map(|i| i as f64 / (parties - 1) as f64).collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn cfg(select_k: usize) -> ScanConfig {
+    ScanConfig {
+        backend: Backend::Masked,
+        shard_m: 512,
+        select_k,
+        // permissive stop rule so every bench round actually runs
+        select_alpha: 0.9,
+        select_candidates: 32,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let parties = 3;
+    let (n, m) = if quick { (600, 4096) } else { (1500, 16384) };
+    let k_rounds = 3usize;
+
+    eprintln!("generating cohort: P={parties} N={n} M={m} ...");
+    let cohort = generate_cohort(&spec(n, parties, m), 91);
+
+    // one instrumented run for the communication shape
+    let probe = run_multi_party_scan_t(&cohort, &cfg(k_rounds), Transport::InProc, 6).unwrap();
+    assert_eq!(
+        probe.metrics.select_rounds, k_rounds,
+        "permissive stop rule should fill all rounds"
+    );
+    let sel = probe.select.as_ref().expect("select output");
+
+    let mut b = Bench::new("select");
+    let scan_only = b
+        .case_units("scan-only", Some(m as f64), "var", || {
+            std::hint::black_box(
+                run_multi_party_scan_t(&cohort, &cfg(0), Transport::InProc, 6).unwrap(),
+            );
+        })
+        .median_s;
+    let scan_select = b
+        .case_units(&format!("scan+select-k{k_rounds}"), Some(m as f64), "var", || {
+            std::hint::black_box(
+                run_multi_party_scan_t(&cohort, &cfg(k_rounds), Transport::InProc, 6).unwrap(),
+            );
+        })
+        .median_s;
+    let marginal_round_s = (scan_select - scan_only).max(0.0) / k_rounds as f64;
+
+    println!("\nSELECT cost vs fresh-scan baseline (P={parties}, N={n}, M={m}, masked):");
+    println!("  selected: {:?}", sel.selected(0));
+    println!(
+        "  scan bytes_total {}   peak scan round {}   peak SELECT round {}",
+        human_bytes(probe.metrics.bytes_total),
+        human_bytes(probe.metrics.bytes_max_round),
+        human_bytes(probe.metrics.bytes_max_select_round),
+    );
+    println!(
+        "  SELECT phase bytes {}   marginal wall per round {:.2} ms (scan {:.2} ms)",
+        human_bytes(probe.metrics.bytes_select),
+        marginal_round_s * 1e3,
+        scan_only * 1e3,
+    );
+    println!("  (a SELECT round must be ≪ a fresh scan: bytes AND wall time)");
+
+    let mut report = b.json_lines();
+    let mut o = Json::obj();
+    o.set("group", "select")
+        .set("row", "comm")
+        .set("m", m)
+        .set("select_k", k_rounds)
+        .set("candidates", sel.candidates.len())
+        .set("bytes_total", probe.metrics.bytes_total)
+        .set("bytes_max_round", probe.metrics.bytes_max_round)
+        .set("bytes_max_select_round", probe.metrics.bytes_max_select_round)
+        .set("bytes_select", probe.metrics.bytes_select)
+        .set("scan_only_s", scan_only)
+        .set("scan_select_s", scan_select)
+        .set("marginal_round_s", marginal_round_s);
+    report.push_str(&o.to_string());
+    report.push('\n');
+    if let Err(e) = std::fs::write("BENCH_select.json", &report) {
+        eprintln!("warn: could not write BENCH_select.json: {e}");
+    } else {
+        println!("report: BENCH_select.json");
+    }
+
+    // E9 assertions: a SELECT round r+1 is cheaper than a fresh scan on
+    // every axis the protocol can measure.
+    assert!(
+        probe.metrics.bytes_max_select_round * 8 < probe.metrics.bytes_max_round,
+        "select round bytes {} not ≪ scan round bytes {}",
+        probe.metrics.bytes_max_select_round,
+        probe.metrics.bytes_max_round
+    );
+    assert!(
+        probe.metrics.bytes_select * 8 < probe.metrics.bytes_total,
+        "select phase bytes {} not ≪ scan total {}",
+        probe.metrics.bytes_select,
+        probe.metrics.bytes_total
+    );
+    assert!(
+        marginal_round_s < scan_only,
+        "marginal select round {marginal_round_s}s not cheaper than a fresh scan {scan_only}s"
+    );
+}

@@ -7,7 +7,7 @@
 
 use crate::gwas::CohortSpec;
 use crate::mpc::Backend;
-use crate::scan::{RFactorMethod, ScanConfig};
+use crate::scan::{RFactorMethod, ScanConfig, SelectPolicy};
 use crate::util::json::Json;
 
 /// Full configuration of one scan run.
@@ -79,6 +79,10 @@ impl RunConfig {
             .set("frac_bits", self.scan.frac_bits as usize)
             .set("block_m", self.scan.block_m)
             .set("shard_m", self.scan.shard_m)
+            .set("select_k", self.scan.select_k)
+            .set("select_alpha", self.scan.select_alpha)
+            .set("select_policy", self.scan.select_policy.name())
+            .set("select_candidates", self.scan.select_candidates)
             .set("use_artifacts", self.scan.use_artifacts)
             .set("artifacts_dir", self.scan.artifacts_dir.as_str())
             .set(
@@ -182,6 +186,19 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
     if let Some(x) = v.get("shard_m").and_then(Json::as_usize) {
         s.shard_m = x;
     }
+    if let Some(x) = v.get("select_k").and_then(Json::as_usize) {
+        s.select_k = x;
+    }
+    if let Some(x) = v.get("select_alpha").and_then(Json::as_f64) {
+        anyhow::ensure!(x > 0.0 && x <= 1.0, "select_alpha must be in (0, 1]");
+        s.select_alpha = x;
+    }
+    if let Some(x) = v.get("select_policy").and_then(Json::as_str) {
+        s.select_policy = SelectPolicy::parse(x)?;
+    }
+    if let Some(x) = v.get("select_candidates").and_then(Json::as_usize) {
+        s.select_candidates = x;
+    }
     if let Some(x) = v.get("threads").and_then(Json::as_usize) {
         s.threads = Some(x);
     }
@@ -223,7 +240,8 @@ mod tests {
                 "cohort": {"party_sizes": [100, 100], "m_variants": 50, "n_traits": 8,
                            "fst": 0.2},
                 "scan": {"backend": "shamir", "frac_bits": 20, "r_method": "cholesky",
-                         "shard_m": 4096}}"#,
+                         "shard_m": 4096, "select_k": 3, "select_alpha": 0.001,
+                         "select_policy": "per-trait", "select_candidates": 16}}"#,
         )
         .unwrap();
         let cfg = RunConfig::from_json(&j).unwrap();
@@ -236,6 +254,23 @@ mod tests {
         assert_eq!(cfg.scan.frac_bits, 20);
         assert_eq!(cfg.scan.r_method, RFactorMethod::Cholesky);
         assert_eq!(cfg.scan.shard_m, 4096);
+        assert_eq!(cfg.scan.select_k, 3);
+        assert_eq!(cfg.scan.select_alpha, 0.001);
+        assert_eq!(cfg.scan.select_policy, SelectPolicy::PerTrait);
+        assert_eq!(cfg.scan.select_candidates, 16);
+    }
+
+    #[test]
+    fn select_config_roundtrips_through_json() {
+        let mut cfg = RunConfig::default();
+        cfg.scan.select_k = 2;
+        cfg.scan.select_policy = SelectPolicy::PerTrait;
+        cfg.scan.select_candidates = 8;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scan.select_k, 2);
+        assert_eq!(back.scan.select_policy, SelectPolicy::PerTrait);
+        assert_eq!(back.scan.select_candidates, 8);
+        assert_eq!(back.scan.select_alpha, cfg.scan.select_alpha);
     }
 
     #[test]
@@ -248,6 +283,14 @@ mod tests {
         .is_err());
         assert!(RunConfig::from_json(
             &Json::parse(r#"{"scan": {"r_method": "qr-ish"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"select_policy": "greedy-ish"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"select_alpha": 0.0}}"#).unwrap()
         )
         .is_err());
     }

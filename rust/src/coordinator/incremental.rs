@@ -41,13 +41,18 @@ pub struct IncrementalAggregate {
     layout: FlatLayout,
     flat: Vec<f64>,
     rounds: usize,
+    /// per-column arrival mask for the current sharded session: a
+    /// re-delivered or overlapping shard delta is a protocol error, not
+    /// a silent double-count. `None` for aggregates built whole (every
+    /// column already present).
+    shard_filled: Option<Vec<bool>>,
 }
 
 impl IncrementalAggregate {
     /// Start from a first round's aggregate flat vector.
     pub fn new(layout: FlatLayout, flat: Vec<f64>) -> anyhow::Result<Self> {
         anyhow::ensure!(flat.len() == layout.len(), "layout mismatch");
-        Ok(IncrementalAggregate { layout, flat, rounds: 1 })
+        Ok(IncrementalAggregate { layout, flat, rounds: 1, shard_filled: None })
     }
 
     /// Start a sharded session's aggregate: base sums known, variant
@@ -60,7 +65,12 @@ impl IncrementalAggregate {
         );
         let mut flat = vec![0.0; layout.len()];
         flat[..base_flat.len()].copy_from_slice(base_flat);
-        Ok(IncrementalAggregate { layout, flat, rounds: 1 })
+        Ok(IncrementalAggregate {
+            layout,
+            flat,
+            rounds: 1,
+            shard_filled: Some(vec![false; layout.m]),
+        })
     }
 
     /// Convenience: build from per-party compressed statistics.
@@ -104,15 +114,27 @@ impl IncrementalAggregate {
     /// Fold one shard's summed variant statistics (`[xty(w·T), xtx(w),
     /// ctx(K·w)]`, see [`crate::scan::shard_flat_len`]) into the variant
     /// segments of the full layout — the shard-shaped fold unit.
-    /// O((K+T)·width); does not advance the cohort-round counter.
+    /// O((K+T)·width); does not advance the cohort-round counter. Within
+    /// a sharded session a re-delivered or overlapping shard is rejected
+    /// (it would otherwise double-count silently).
     pub fn add_shard_flat(&mut self, range: ShardRange, flat: &[f64]) -> anyhow::Result<()> {
         let (k, m, t) = (self.layout.k, self.layout.m, self.layout.t);
+        anyhow::ensure!(range.j0 <= range.j1, "degenerate shard range");
         let w = range.width();
         anyhow::ensure!(range.j1 <= m, "shard range beyond layout");
         anyhow::ensure!(
             flat.len() == crate::scan::shard_flat_len(k, t, w),
             "shard flat length mismatch"
         );
+        if let Some(filled) = &mut self.shard_filled {
+            anyhow::ensure!(
+                !filled[range.j0..range.j1].iter().any(|&f| f),
+                "shard [{}, {}) overlaps columns already folded",
+                range.j0,
+                range.j1
+            );
+            filled[range.j0..range.j1].fill(true);
+        }
         let (xty_off, xtx_off, ctx_off) =
             (self.layout.xty_off(), self.layout.xtx_off(), self.layout.ctx_off());
         // xty: rows [j0, j1) of the M × T trait-major block
@@ -222,6 +244,12 @@ impl ScanAssembler {
         range: ShardRange,
         sums: &ShardSums,
     ) -> anyhow::Result<Vec<AssocResult>> {
+        anyhow::ensure!(
+            range.j0 <= range.j1,
+            "degenerate shard range [{}, {})",
+            range.j0,
+            range.j1
+        );
         anyhow::ensure!(range.j1 <= self.m, "shard range beyond M");
         anyhow::ensure!(sums.width() == range.width(), "shard width mismatch");
         anyhow::ensure!(sums.t() == self.ctx.t(), "shard trait-count mismatch");
@@ -246,6 +274,13 @@ impl ScanAssembler {
 
     /// Finish the session, checking every column arrived.
     pub fn finish(self) -> anyhow::Result<ScanOutput> {
+        Ok(self.finish_with_context()?.0)
+    }
+
+    /// As [`finish`](Self::finish), additionally handing back the
+    /// factorized [`CombineContext`] so follow-on phases (SELECT rounds)
+    /// can keep growing the cached basis instead of re-deriving it.
+    pub fn finish_with_context(self) -> anyhow::Result<(ScanOutput, CombineContext)> {
         anyhow::ensure!(
             self.assembled == self.m,
             "incomplete scan: {} of {} columns assembled",
@@ -262,13 +297,14 @@ impl ScanAssembler {
             .into_iter()
             .map(|a| AssocResult { beta: a.beta, se: a.se, t: a.t, p: a.p, df })
             .collect();
-        Ok(ScanOutput {
+        let out = ScanOutput {
             assoc,
-            covariate_fit: self.ctx.covariate_fit,
+            covariate_fit: self.ctx.covariate_fit.clone(),
             n: self.ctx.n,
             k: self.ctx.k,
             m: self.m,
-        })
+        };
+        Ok((out, self.ctx))
     }
 }
 
@@ -445,6 +481,68 @@ mod tests {
         assert!(asm.add_shard(r0, &agg.shard_sums(r0.j0, r0.j1)).is_err());
         // incomplete: only shard 0 arrived
         assert!(asm.finish().is_err());
+    }
+
+    /// Regression (duplicate/overlapping frame handling): a partially
+    /// overlapping or degenerate column range must yield a clean error —
+    /// never a panic or a silent double-count.
+    #[test]
+    fn assembler_rejects_overlapping_and_degenerate_ranges() {
+        let p1 = party(40, 3, 8, 186);
+        let inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
+        let agg = inc.sums().unwrap();
+        let opts = CombineOptions { r_method: RFactorMethod::Cholesky };
+        let mut asm = ScanAssembler::new(&agg.base(), None, opts, 8).unwrap();
+        asm.add_shard(ShardRange { index: 0, j0: 0, j1: 4 }, &agg.shard_sums(0, 4)).unwrap();
+        // partial overlap [2, 6) with already-assembled [0, 4)
+        assert!(asm
+            .add_shard(ShardRange { index: 1, j0: 2, j1: 6 }, &agg.shard_sums(2, 6))
+            .is_err());
+        // inverted range: error, not an arithmetic panic
+        assert!(asm
+            .add_shard(ShardRange { index: 2, j0: 5, j1: 4 }, &agg.shard_sums(4, 5))
+            .is_err());
+        // beyond M
+        assert!(asm
+            .add_shard(ShardRange { index: 3, j0: 6, j1: 9 }, &agg.shard_sums(5, 8))
+            .is_err());
+        // the valid disjoint remainder still lands
+        asm.add_shard(ShardRange { index: 4, j0: 4, j1: 8 }, &agg.shard_sums(4, 8)).unwrap();
+        assert_eq!(asm.assembled(), 8);
+        assert!(asm.finish().is_ok());
+    }
+
+    /// Regression: folding the same shard delta twice into a sharded
+    /// session's aggregate must error (it used to double-count).
+    #[test]
+    fn shard_fold_rejects_redelivery() {
+        let p = party_t(50, 3, 6, 2, 187);
+        let (layout, flat) = flatten_for_sum(&p);
+        let base_flat = &flat[..layout.xty_off()];
+        let mut inc = IncrementalAggregate::from_base_flat(layout, base_flat).unwrap();
+        let r0 = ShardRange { index: 0, j0: 0, j1: 3 };
+        let delta = vec![0.5; crate::scan::shard_flat_len(3, 2, 3)];
+        inc.add_shard_flat(r0, &delta).unwrap();
+        // exact re-delivery
+        assert!(inc.add_shard_flat(r0, &delta).is_err());
+        // partial overlap
+        let r_overlap = ShardRange { index: 1, j0: 2, j1: 5 };
+        assert!(inc
+            .add_shard_flat(r_overlap, &vec![0.5; crate::scan::shard_flat_len(3, 2, 3)])
+            .is_err());
+        // degenerate range
+        assert!(inc
+            .add_shard_flat(ShardRange { index: 2, j0: 4, j1: 3 }, &[])
+            .is_err());
+        // the disjoint remainder is fine
+        inc.add_shard_flat(
+            ShardRange { index: 3, j0: 3, j1: 6 },
+            &vec![0.25; crate::scan::shard_flat_len(3, 2, 3)],
+        )
+        .unwrap();
+        // whole-cohort folds (a later joining batch) remain unrestricted
+        let p2 = party_t(40, 3, 6, 2, 188);
+        inc.add_parties(std::slice::from_ref(&p2)).unwrap();
     }
 
     #[test]

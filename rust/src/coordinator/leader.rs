@@ -20,8 +20,8 @@ use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::Backend;
 use crate::net::{Endpoint, Frame, WireMessage};
 use crate::scan::{
-    base_flat_len, shard_flat_len, unflatten_base, unflatten_shard, ScanConfig, ScanOutput,
-    ShardPlan,
+    base_flat_len, choose_candidates, shard_flat_len, unflatten_base, unflatten_shard,
+    CombineContext, ScanConfig, ScanOutput, SelectOutput, SelectPolicy, SelectState, ShardPlan,
 };
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -48,6 +48,18 @@ pub struct SessionMetrics {
     /// width, not by M (the memory claim, E4'). Deterministic across
     /// transports and unaffected by parties streaming ahead.
     pub bytes_max_round: u64,
+    /// completed SELECT promote rounds (0 when `select_k == 0` or
+    /// nothing passed the stop rule)
+    pub select_rounds: usize,
+    /// total wire bytes of the SELECT phase uplink/control traffic
+    /// (setup broadcast, candidate round, promote rounds, done frames);
+    /// the post-scan SELECT_RESULT broadcast is counted in
+    /// `bytes_result` alongside the shard results
+    pub bytes_select: u64,
+    /// peak wire bytes of any single SELECT promote round (PROMOTE
+    /// broadcast + cross-product sums) — `O(lanes·H)`, independent of M
+    /// (the E9 claim, asserted in `integration_select.rs`)
+    pub bytes_max_select_round: u64,
 }
 
 /// Leader state for one scan session over connected party endpoints.
@@ -61,8 +73,31 @@ pub struct Leader<'a> {
 }
 
 impl Leader<'_> {
-    /// Run the full session; returns scan output + metrics.
-    pub fn run(&self, seed: u64) -> anyhow::Result<(ScanOutput, SessionMetrics)> {
+    /// Run the full session; returns scan output, SELECT output (when
+    /// `select_k > 0` and the shortlist was non-empty) and metrics.
+    pub fn run(
+        &self,
+        seed: u64,
+    ) -> anyhow::Result<(ScanOutput, Option<SelectOutput>, SessionMetrics)> {
+        match self.run_inner(seed) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                // Best-effort protocol ErrorMsg so parties fail fast on a
+                // leader-side protocol violation (duplicate/out-of-order
+                // frames, bad lengths, …) instead of hanging on a dead
+                // stream.
+                for ep in self.endpoints {
+                    let _ = ep.send(&error_frame(&format!("{e:#}")));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn run_inner(
+        &self,
+        seed: u64,
+    ) -> anyhow::Result<(ScanOutput, Option<SelectOutput>, SessionMetrics)> {
         let t_start = Instant::now();
         let parties = self.endpoints.len();
         anyhow::ensure!(parties >= 1, "need at least one party");
@@ -96,6 +131,7 @@ impl Leader<'_> {
                 t: self.t as u64,
                 block_m: self.cfg.block_m as u64,
                 shard_m: self.cfg.shard_m as u64,
+                select_k: self.cfg.select_k as u64,
                 seeds: seed_matrix[p].clone(),
             };
             ep.send(&setup.to_frame())?;
@@ -164,14 +200,27 @@ impl Leader<'_> {
         metrics.compress_wall_s = last_contribution.duration_since(t_compress).as_secs_f64();
 
         let t0 = Instant::now();
-        let out = asm.finish()?;
+        let (out, cx) = asm.finish_with_context()?;
         metrics.combine_s += t0.elapsed().as_secs_f64();
 
-        // Per-shard RESULT broadcast + shutdown (the O(M·T) downlink).
+        // SELECT phase: iterative forward stepwise over the cached
+        // context (rank-1 basis growth, O(lanes·H) traffic per round).
+        let mut select_results: Vec<SelectResult> = Vec::new();
+        let select = if self.cfg.select_k > 0 {
+            self.select_phase(&codec, &out, cx, plan.count(), &mut metrics, &mut select_results)?
+        } else {
+            None
+        };
+
+        // Per-shard RESULT + per-round SELECT_RESULT broadcast + shutdown
+        // (the O(M·T) downlink).
         let bytes_before = self.total_bytes();
         for ep in self.endpoints {
             for res in &results {
                 ep.send(&res.to_frame())?;
+            }
+            for sr in &select_results {
+                ep.send(&sr.to_frame())?;
             }
             ep.send(&Shutdown.to_frame())?;
         }
@@ -180,7 +229,106 @@ impl Leader<'_> {
         metrics.bytes_total = self.total_bytes();
         metrics.messages_total =
             self.endpoints.iter().map(|e| e.meter().messages()).sum();
-        Ok((out, metrics))
+        Ok((out, select, metrics))
+    }
+
+    /// Run the SELECT rounds: broadcast the candidate shortlist, collect
+    /// the shard-shaped candidate sums, then per round broadcast the
+    /// promotions and fold the returning cross-product sums into the
+    /// grown bases. Returns `None` when the shortlist is empty (nothing
+    /// with a finite scan p-value).
+    fn select_phase(
+        &self,
+        codec: &FixedCodec,
+        out: &ScanOutput,
+        cx: CombineContext,
+        shards: usize,
+        metrics: &mut SessionMetrics,
+        results: &mut Vec<SelectResult>,
+    ) -> anyhow::Result<Option<SelectOutput>> {
+        let cand = choose_candidates(out, self.cfg.select_candidates.max(1));
+        let lanes = match self.cfg.select_policy {
+            SelectPolicy::Union => 1,
+            SelectPolicy::PerTrait => self.t,
+        };
+        let mut bytes_select = 0u64;
+        let setup = SelectSetup {
+            k: self.cfg.select_k as u64,
+            policy: self.cfg.select_policy.code(),
+            lanes: lanes as u64,
+            p_enter: self.cfg.select_alpha,
+            candidates: cand.iter().map(|&c| c as u64).collect(),
+        };
+        let sf = setup.to_frame();
+        for ep in self.endpoints {
+            bytes_select += sf.wire_len();
+            ep.send(&sf)?;
+        }
+        if cand.is_empty() {
+            let done = SelectDone { rounds: 0 }.to_frame();
+            for ep in self.endpoints {
+                bytes_select += done.wire_len();
+                ep.send(&done)?;
+            }
+            metrics.bytes_select = bytes_select;
+            return Ok(None);
+        }
+        let h = cand.len();
+
+        // Candidate round: one shard-shaped secure sum over the gathered
+        // shortlist columns (all of it already in the parties' cached
+        // compressed statistics — no fresh O(N·M·K) compress).
+        let (flat, _, rb) =
+            self.collect_round(codec, shards + 1, shard_flat_len(self.k, self.t, h))?;
+        bytes_select += rb;
+        let sums = unflatten_shard(self.k, self.t, h, &flat)?;
+        let mut st =
+            SelectState::new(&cx, cand, &sums, self.cfg.select_policy, self.cfg.select_alpha)?;
+
+        for round in 1..=self.cfg.select_k {
+            let picks = st.propose();
+            if picks.iter().all(|p| p.is_none()) {
+                break;
+            }
+            let promote = Promote {
+                round: round as u64,
+                variants: picks
+                    .iter()
+                    .map(|p| p.as_ref().map_or(LANE_INACTIVE, |p| p.variant as u64))
+                    .collect(),
+            };
+            let pf = promote.to_frame();
+            let mut round_bytes = 0u64;
+            for ep in self.endpoints {
+                round_bytes += pf.wire_len();
+                ep.send(&pf)?;
+            }
+            let (flat, _, rb) =
+                self.collect_round(codec, shards + 1 + round, promote.active() * h)?;
+            round_bytes += rb;
+            st.fold(&picks, &flat)?;
+            metrics.select_rounds += 1;
+            metrics.bytes_max_select_round = metrics.bytes_max_select_round.max(round_bytes);
+            bytes_select += round_bytes;
+            results.push(SelectResult {
+                round: round as u64,
+                variants: promote.variants.clone(),
+                traits: picks
+                    .iter()
+                    .map(|p| p.as_ref().map_or(LANE_INACTIVE, |p| p.trait_idx as u64))
+                    .collect(),
+                beta: picks.iter().map(|p| p.as_ref().map_or(f64::NAN, |p| p.beta)).collect(),
+                se: picks.iter().map(|p| p.as_ref().map_or(f64::NAN, |p| p.se)).collect(),
+                p: picks.iter().map(|p| p.as_ref().map_or(f64::NAN, |p| p.p)).collect(),
+            });
+        }
+        let done = SelectDone { rounds: results.len() as u64 }.to_frame();
+        for ep in self.endpoints {
+            bytes_select += done.wire_len();
+            ep.send(&done)?;
+        }
+        metrics.bytes_select = bytes_select;
+        Ok(Some(st.into_output()))
     }
 
     /// Collect one secure-sum round (round 0 = base, s+1 = shard s) from

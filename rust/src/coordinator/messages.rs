@@ -13,7 +13,14 @@
 //!                  round 0)
 //! shard round s    one contribution per variant shard, O((K+T)·width)
 //!                  (PLAIN_SHARD / MASKED_SHARD / SHAMIR_* round s+1)
+//! SELECT_SETUP     [select_k > 0] candidate shortlist; parties answer
+//!                  with one shard-shaped round over the H candidates
+//! PROMOTE r        [per SELECT round] per-lane promoted variants;
+//!                  parties answer with O(lanes·H) cross-product sums
+//!                  (secure-sum round shards+1+r)
+//! SELECT_DONE      number of completed SELECT rounds
 //! SHARD_RESULT s   per-shard partial results (β̂, σ̂ per trait)
+//! SELECT_RESULT r  per-round promoted variants + entry statistics
 //! SHUTDOWN
 //! ```
 //!
@@ -38,6 +45,14 @@ pub const TAG_SHUTDOWN: u32 = 9;
 pub const TAG_ERROR: u32 = 10;
 pub const TAG_PLAIN_SHARD: u32 = 11;
 pub const TAG_MASKED_SHARD: u32 = 12;
+pub const TAG_SELECT_SETUP: u32 = 13;
+pub const TAG_PROMOTE: u32 = 14;
+pub const TAG_SELECT_RESULT: u32 = 15;
+pub const TAG_SELECT_DONE: u32 = 16;
+
+/// Sentinel variant index in PROMOTE/SELECT_RESULT lane vectors: the
+/// lane has already stopped and promotes nothing this round.
+pub const LANE_INACTIVE: u64 = u64::MAX;
 
 /// Session parameters delivered to each party at SETUP.
 #[derive(Clone, Debug, PartialEq)]
@@ -55,6 +70,9 @@ pub struct Setup {
     pub block_m: u64,
     /// variant-shard width (0 = single shot, one shard over all of M)
     pub shard_m: u64,
+    /// maximum SELECT rounds after the scan (0 = scan only; > 0 tells
+    /// the party to expect a SELECT_SETUP frame after its shard rounds)
+    pub select_k: u64,
     /// pairwise seeds, row `party_index` of the symmetric seed matrix
     pub seeds: Vec<u64>,
 }
@@ -74,6 +92,7 @@ impl WireMessage for Setup {
         s.u64("t", self.t);
         s.u64("block_m", self.block_m);
         s.u64("shard_m", self.shard_m);
+        s.u64("select_k", self.select_k);
         s.u64s("seeds", &self.seeds);
     }
 
@@ -89,6 +108,7 @@ impl WireMessage for Setup {
             t: s.u64("t")?,
             block_m: s.u64("block_m")?,
             shard_m: s.u64("shard_m")?,
+            select_k: s.u64("select_k")?,
             seeds: s.u64s("seeds")?,
         })
     }
@@ -354,6 +374,161 @@ impl WireMessage for ShardResult {
     }
 }
 
+/// SELECT-phase kickoff: the leader's candidate shortlist (absolute
+/// variant indices, strictly increasing) plus the selection parameters.
+/// Parties answer with one shard-shaped secure-sum round over the
+/// gathered candidate columns (`[XᵀY(H·T), X·X(H), CᵀX(K·H)]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectSetup {
+    /// maximum SELECT rounds
+    pub k: u64,
+    /// [`crate::scan::SelectPolicy`] wire code (0 = union, 1 = per-trait)
+    pub policy: u64,
+    /// number of selection lanes (1 for union, T for per-trait)
+    pub lanes: u64,
+    /// entry p-value threshold (stop rule)
+    pub p_enter: f64,
+    pub candidates: Vec<u64>,
+}
+
+impl WireMessage for SelectSetup {
+    const TAG: u32 = TAG_SELECT_SETUP;
+    const NAME: &'static str = "SELECT_SETUP";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("k", self.k);
+        s.u64("policy", self.policy);
+        s.u64("lanes", self.lanes);
+        s.f64("p_enter", self.p_enter);
+        s.u64s("candidates", &self.candidates);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = SelectSetup {
+            k: s.u64("k")?,
+            policy: s.u64("policy")?,
+            lanes: s.u64("lanes")?,
+            p_enter: s.f64("p_enter")?,
+            candidates: s.u64s("candidates")?,
+        };
+        anyhow::ensure!(m.lanes >= 1, "need at least one selection lane");
+        for w in m.candidates.windows(2) {
+            anyhow::ensure!(w[0] < w[1], "candidates must be strictly increasing");
+        }
+        Ok(m)
+    }
+}
+
+/// One SELECT round's promotion broadcast: the variant each lane
+/// promotes ([`LANE_INACTIVE`] = lane already stopped). Parties answer
+/// with the secure sum of each *active* lane's promoted-column
+/// cross-products against the shortlist, concatenated in lane order
+/// (`O(lanes·H)` — independent of M).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Promote {
+    /// 1-based SELECT round
+    pub round: u64,
+    /// per-lane promoted variant (absolute index), length = lanes
+    pub variants: Vec<u64>,
+}
+
+impl Promote {
+    /// Lanes that actually promote this round.
+    pub fn active(&self) -> usize {
+        self.variants.iter().filter(|&&v| v != LANE_INACTIVE).count()
+    }
+}
+
+impl WireMessage for Promote {
+    const TAG: u32 = TAG_PROMOTE;
+    const NAME: &'static str = "PROMOTE";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("round", self.round);
+        s.u64s("variants", &self.variants);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = Promote { round: s.u64("round")?, variants: s.u64s("variants")? };
+        anyhow::ensure!(m.round >= 1, "promote rounds are 1-based");
+        anyhow::ensure!(m.active() >= 1, "promote frame with no active lane");
+        Ok(m)
+    }
+}
+
+/// End of the SELECT phase: how many promote rounds completed (the
+/// party then expects that many SELECT_RESULT frames after the shard
+/// results).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SelectDone {
+    pub rounds: u64,
+}
+
+impl WireMessage for SelectDone {
+    const TAG: u32 = TAG_SELECT_DONE;
+    const NAME: &'static str = "SELECT_DONE";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("rounds", self.rounds);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        Ok(SelectDone { rounds: s.u64("rounds")? })
+    }
+}
+
+/// Per-round SELECT result broadcast: what each lane promoted and the
+/// released entry statistics (β̂, σ̂, p at entry) — the same leakage
+/// class as the scan's SHARD_RESULT release, one argmax index plus its
+/// published statistics per lane per round. Inactive lanes carry
+/// [`LANE_INACTIVE`] and NaN statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectResult {
+    /// 1-based SELECT round
+    pub round: u64,
+    /// per-lane promoted variant, length = lanes
+    pub variants: Vec<u64>,
+    /// per-lane winning trait index
+    pub traits: Vec<u64>,
+    pub beta: Vec<f64>,
+    pub se: Vec<f64>,
+    pub p: Vec<f64>,
+}
+
+impl WireMessage for SelectResult {
+    const TAG: u32 = TAG_SELECT_RESULT;
+    const NAME: &'static str = "SELECT_RESULT";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("round", self.round);
+        s.u64s("variants", &self.variants);
+        s.u64s("traits", &self.traits);
+        s.f64s("beta", &self.beta);
+        s.f64s("se", &self.se);
+        s.f64s("p", &self.p);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = SelectResult {
+            round: s.u64("round")?,
+            variants: s.u64s("variants")?,
+            traits: s.u64s("traits")?,
+            beta: s.f64s("beta")?,
+            se: s.f64s("se")?,
+            p: s.f64s("p")?,
+        };
+        let lanes = m.variants.len();
+        anyhow::ensure!(
+            m.traits.len() == lanes
+                && m.beta.len() == lanes
+                && m.se.len() == lanes
+                && m.p.len() == lanes,
+            "select result lane-vector length mismatch"
+        );
+        Ok(m)
+    }
+}
+
 /// Error report from a party.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ErrorMsg {
@@ -405,6 +580,7 @@ mod tests {
             t: 4,
             block_m: 256,
             shard_m: 128,
+            select_k: 3,
             seeds: vec![1, 2, 3, 4, u64::MAX],
         }
     }
@@ -529,6 +705,65 @@ mod tests {
     }
 
     #[test]
+    fn select_frames_roundtrip() {
+        roundtrip(&SelectSetup {
+            k: 3,
+            policy: 1,
+            lanes: 4,
+            p_enter: 1e-4,
+            candidates: vec![0, 7, 9, 1000],
+        });
+        roundtrip(&Promote { round: 1, variants: vec![7, LANE_INACTIVE, 9, 0] });
+        roundtrip(&SelectDone { rounds: 2 });
+        let sr = SelectResult {
+            round: 2,
+            variants: vec![7, LANE_INACTIVE],
+            traits: vec![0, LANE_INACTIVE],
+            beta: vec![0.25, f64::NAN],
+            se: vec![0.1, f64::NAN],
+            p: vec![1e-9, f64::NAN],
+        };
+        // NaN breaks PartialEq — check fields on the binary path
+        let got = SelectResult::from_frame(&sr.to_frame()).unwrap();
+        assert_eq!(got.round, 2);
+        assert_eq!(got.variants, sr.variants);
+        assert_eq!(got.beta[0], 0.25);
+        assert!(got.beta[1].is_nan());
+        let js = Codec::JsonDebug.encode(&sr);
+        let got2: SelectResult = Codec::JsonDebug.decode(&js).unwrap();
+        assert_eq!(got2.p[1].to_bits(), sr.p[1].to_bits());
+    }
+
+    #[test]
+    fn select_frames_reject_malformed() {
+        // non-increasing candidate list
+        let mut f = Frame::new(TAG_SELECT_SETUP);
+        f.put_u64(2).put_u64(0).put_u64(1).put_f64(0.5).put_u64_slice(&[3, 3]);
+        assert!(SelectSetup::from_frame(&f).is_err());
+        // zero lanes
+        let mut f = Frame::new(TAG_SELECT_SETUP);
+        f.put_u64(2).put_u64(0).put_u64(0).put_f64(0.5).put_u64_slice(&[3]);
+        assert!(SelectSetup::from_frame(&f).is_err());
+        // promote with no active lane
+        let mut f = Frame::new(TAG_PROMOTE);
+        f.put_u64(1).put_u64_slice(&[LANE_INACTIVE]);
+        assert!(Promote::from_frame(&f).is_err());
+        // 0-based promote round
+        let mut f = Frame::new(TAG_PROMOTE);
+        f.put_u64(0).put_u64_slice(&[5]);
+        assert!(Promote::from_frame(&f).is_err());
+        // lane-vector length mismatch
+        let mut f = Frame::new(TAG_SELECT_RESULT);
+        f.put_u64(1)
+            .put_u64_slice(&[1, 2])
+            .put_u64_slice(&[0])
+            .put_f64_slice(&[0.1, 0.2])
+            .put_f64_slice(&[0.1, 0.2])
+            .put_f64_slice(&[0.5, 0.5]);
+        assert!(SelectResult::from_frame(&f).is_err());
+    }
+
+    #[test]
     fn error_frame_roundtrip() {
         let f = error_frame("boom");
         assert_eq!(parse_error(&f), "boom");
@@ -550,6 +785,10 @@ mod tests {
             TAG_ERROR,
             TAG_PLAIN_SHARD,
             TAG_MASKED_SHARD,
+            TAG_SELECT_SETUP,
+            TAG_PROMOTE,
+            TAG_SELECT_RESULT,
+            TAG_SELECT_DONE,
         ];
         for (i, a) in tags.iter().enumerate() {
             for b in &tags[i + 1..] {

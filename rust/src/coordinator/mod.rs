@@ -23,7 +23,7 @@ pub use party::{ComputeBackend, PartyResult};
 
 use crate::gwas::Cohort;
 use crate::net::{duplex_pair, tcp_pair, ByteMeter};
-use crate::scan::{ScanConfig, ScanOutput};
+use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
 
 /// Which transport an in-process deployment uses between leader and
 /// parties.
@@ -36,6 +36,10 @@ pub enum Transport {
 /// Result of [`run_multi_party_scan`].
 pub struct MultiPartyScanResult {
     pub output: ScanOutput,
+    /// SELECT-phase output (forward stepwise), present when
+    /// `ScanConfig::select_k > 0` and the candidate shortlist was
+    /// non-empty
+    pub select: Option<SelectOutput>,
     pub metrics: SessionMetrics,
     /// per-party link byte counts (uplink + downlink)
     pub party_bytes: Vec<u64>,
@@ -76,37 +80,40 @@ pub fn run_multi_party_scan_t(
     }
 
     let cfg2 = cfg.clone();
-    let output = std::thread::scope(|s| -> anyhow::Result<(ScanOutput, SessionMetrics)> {
-        let mut handles = Vec::with_capacity(parties);
-        for (idx, ep) in party_eps.into_iter().enumerate() {
-            let data = &cohort.parties[idx];
-            let cfg = &cfg2;
-            handles.push(s.spawn(move || -> anyhow::Result<PartyResult> {
-                let compute = if cfg.use_artifacts {
-                    // each party owns its engine (PJRT handles are !Send)
-                    party::ComputeBackend::Artifacts(Box::new(
-                        crate::runtime::Engine::load(&cfg.artifacts_dir)?,
-                    ))
-                } else {
-                    party::ComputeBackend::Rust { threads: cfg.threads }
-                };
-                party::serve(&ep, data, &compute)
-            }));
-        }
-        let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m, t };
-        let out = leader.run(seed);
-        for (i, h) in handles.into_iter().enumerate() {
-            let joined = h
-                .join()
-                .map_err(|_| anyhow::anyhow!("party {i} thread panicked"))?;
-            joined.map_err(|e| anyhow::anyhow!("party {i}: {e:#}"))?;
-        }
-        out
-    })?;
+    let output = std::thread::scope(
+        |s| -> anyhow::Result<(ScanOutput, Option<SelectOutput>, SessionMetrics)> {
+            let mut handles = Vec::with_capacity(parties);
+            for (idx, ep) in party_eps.into_iter().enumerate() {
+                let data = &cohort.parties[idx];
+                let cfg = &cfg2;
+                handles.push(s.spawn(move || -> anyhow::Result<PartyResult> {
+                    let compute = if cfg.use_artifacts {
+                        // each party owns its engine (PJRT handles are !Send)
+                        party::ComputeBackend::Artifacts(Box::new(
+                            crate::runtime::Engine::load(&cfg.artifacts_dir)?,
+                        ))
+                    } else {
+                        party::ComputeBackend::Rust { threads: cfg.threads }
+                    };
+                    party::serve(&ep, data, &compute)
+                }));
+            }
+            let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m, t };
+            let out = leader.run(seed);
+            for (i, h) in handles.into_iter().enumerate() {
+                let joined = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("party {i} thread panicked"))?;
+                joined.map_err(|e| anyhow::anyhow!("party {i}: {e:#}"))?;
+            }
+            out
+        },
+    )?;
 
     Ok(MultiPartyScanResult {
         output: output.0,
-        metrics: output.1,
+        select: output.1,
+        metrics: output.2,
         party_bytes: meters.iter().map(|m| m.bytes()).collect(),
     })
 }

@@ -34,10 +34,10 @@ use crate::mpc::field::Fe;
 use crate::mpc::fixed::FixedCodec;
 use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::shamir;
-use crate::net::{Endpoint, WireMessage};
+use crate::net::{Endpoint, Frame, WireMessage};
 use crate::runtime::Engine;
 use crate::scan::{
-    compress_base, compress_variant_block, BaseStats, ShardPlan, ShardRange,
+    compress_base, compress_variant_block, cross_products, BaseStats, ShardPlan, ShardRange,
     VariantBlockStats,
 };
 
@@ -94,11 +94,13 @@ impl CompressState<'_> {
 
 /// Result a party receives at the end of a session: per-trait β̂ / σ̂
 /// vectors (index `[trait][variant]`; `T = 1` sessions have exactly one
-/// entry each).
+/// entry each) plus the per-round SELECT results (empty when the
+/// session ran without a SELECT phase).
 #[derive(Clone, Debug)]
 pub struct PartyResult {
     pub beta: Vec<Vec<f64>>,
     pub se: Vec<Vec<f64>>,
+    pub select: Vec<SelectResult>,
 }
 
 /// Run the party side of one scan session. Returns the assembled
@@ -123,7 +125,7 @@ fn serve_inner(
     data: &PartyData,
     compute: &ComputeBackend,
 ) -> anyhow::Result<PartyResult> {
-    let setup = Setup::from_frame(&endpoint.recv()?)?;
+    let setup = Setup::from_frame(&recv_checked(endpoint)?)?;
     anyhow::ensure!(setup.k as usize == data.c.cols, "setup K mismatch");
     anyhow::ensure!(setup.m as usize == data.x.cols, "setup M mismatch");
     anyhow::ensure!(setup.t as usize == data.ys.cols, "setup trait-count mismatch");
@@ -131,7 +133,7 @@ fn serve_inner(
     let t = setup.t as usize;
     let plan = ShardPlan::new(m, setup.shard_m as usize);
 
-    Compress::from_frame(&endpoint.recv()?)?;
+    Compress::from_frame(&recv_checked(endpoint)?)?;
 
     let mut state = match compute {
         ComputeBackend::Rust { threads } => CompressState::Streaming {
@@ -234,7 +236,7 @@ fn serve_inner(
                     .collect();
                 endpoint.send(&ShamirOut { round: round as u64, shares: ys }.to_frame())?;
                 // receive the shares routed to me, sum share-wise, return
-                let incoming = ShamirIn::from_frame(&endpoint.recv()?)?;
+                let incoming = ShamirIn::from_frame(&recv_checked(endpoint)?)?;
                 anyhow::ensure!(
                     incoming.round == round as u64,
                     "share routing out of sync (round {} vs {round})",
@@ -264,12 +266,69 @@ fn serve_inner(
         contribute(&flat, r.index + 1)?;
     }
 
+    // SELECT phase: the leader drives, we answer. Round `shards + 1`
+    // carries the candidate shortlist's cached column statistics (a
+    // shard-shaped flatten over the gathered columns — no fresh compress
+    // of the full block); each PROMOTE round `r` answers with the
+    // promoted columns' cross-products against the shortlist, an
+    // O(lanes·H) vector independent of M.
+    let mut select_rounds = 0u64;
+    if setup.select_k > 0 {
+        let ss = SelectSetup::from_frame(&recv_checked(endpoint)?)?;
+        let idx: Vec<usize> = ss.candidates.iter().map(|&c| c as usize).collect();
+        for &j in &idx {
+            anyhow::ensure!(j < m, "candidate {j} beyond M={m}");
+        }
+        if idx.is_empty() {
+            select_rounds = SelectDone::from_frame(&recv_checked(endpoint)?)?.rounds;
+            anyhow::ensure!(select_rounds == 0, "select rounds without candidates");
+        } else {
+            let xs = data.x.gather_cols(&idx);
+            let vb = compress_variant_block(
+                &data.ys,
+                &data.c,
+                &xs,
+                0,
+                xs.cols,
+                setup.block_m as usize,
+                select_threads(compute),
+            );
+            contribute(&vb.flatten(), plan.count() + 1)?;
+            loop {
+                let f = recv_checked(endpoint)?;
+                match f.tag {
+                    TAG_PROMOTE => {
+                        let pr = Promote::from_frame(&f)?;
+                        anyhow::ensure!(
+                            pr.variants.len() as u64 == ss.lanes,
+                            "promote lane-count mismatch"
+                        );
+                        let mut flat = Vec::with_capacity(pr.active() * idx.len());
+                        for &v in &pr.variants {
+                            if v == LANE_INACTIVE {
+                                continue;
+                            }
+                            anyhow::ensure!((v as usize) < m, "promoted variant beyond M");
+                            flat.extend(cross_products(&data.x, v as usize, &xs));
+                        }
+                        contribute(&flat, plan.count() + 1 + pr.round as usize)?;
+                    }
+                    TAG_SELECT_DONE => {
+                        select_rounds = SelectDone::from_frame(&f)?.rounds;
+                        break;
+                    }
+                    other => anyhow::bail!("unexpected frame tag {other} in SELECT phase"),
+                }
+            }
+        }
+    }
+
     // Drain the per-shard partial results in scan order, de-interleaving
     // the trait-major frames into per-trait vectors.
     let mut beta = vec![Vec::with_capacity(m); t];
     let mut se = vec![Vec::with_capacity(m); t];
     for r in plan.ranges() {
-        let sr = ShardResult::from_frame(&endpoint.recv()?)?;
+        let sr = ShardResult::from_frame(&recv_checked(endpoint)?)?;
         anyhow::ensure!(
             sr.shard == r.index as u64 && sr.j0 == r.j0 as u64,
             "shard result out of order: got shard {} at j0={}, expected shard {} at j0={}",
@@ -286,6 +345,34 @@ fn serve_inner(
         }
     }
 
-    Shutdown::from_frame(&endpoint.recv()?)?;
-    Ok(PartyResult { beta, se })
+    // Then the per-round SELECT results announced by SELECT_DONE.
+    let mut select = Vec::with_capacity(select_rounds as usize);
+    for r in 0..select_rounds {
+        let sr = SelectResult::from_frame(&recv_checked(endpoint)?)?;
+        anyhow::ensure!(sr.round == r + 1, "select result out of order");
+        select.push(sr);
+    }
+
+    Shutdown::from_frame(&recv_checked(endpoint)?)?;
+    Ok(PartyResult { beta, se, select })
+}
+
+/// Worker threads for the SELECT-phase column gather: the shortlist is
+/// small (`H` columns), so the pure-Rust kernel serves both compute
+/// backends — artifact-mode lowering of the gathered compress is the
+/// open ROADMAP item alongside per-shard artifact lowering.
+fn select_threads(compute: &ComputeBackend) -> Option<usize> {
+    match compute {
+        ComputeBackend::Rust { threads } => *threads,
+        ComputeBackend::Artifacts(_) => Some(1),
+    }
+}
+
+/// Receive a frame, converting a leader-side ERROR broadcast into an Err.
+fn recv_checked(ep: &Endpoint) -> anyhow::Result<Frame> {
+    let f = ep.recv()?;
+    if f.tag == TAG_ERROR {
+        anyhow::bail!("leader error: {}", parse_error(&f));
+    }
+    Ok(f)
 }

@@ -227,6 +227,23 @@ impl Matrix {
         out
     }
 
+    /// Gather an arbitrary (possibly non-contiguous) set of columns into
+    /// a new `rows × idx.len()` matrix — the SELECT-phase candidate
+    /// shortlist extraction. Indices may repeat; order is preserved.
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        for &j in idx {
+            assert!(j < self.cols, "gather col {j} out of range ({} cols)", self.cols);
+        }
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            for (o, &j) in out.row_mut(i).iter_mut().zip(idx) {
+                *o = src[j];
+            }
+        }
+        out
+    }
+
     /// Row slice `[i0, i1)`.
     pub fn row_slice(&self, i0: usize, i1: usize) -> Matrix {
         assert!(i0 <= i1 && i1 <= self.rows);
@@ -365,6 +382,21 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn col_out_of_range_panics() {
         let _ = Matrix::zeros(2, 2).col(2);
+    }
+
+    #[test]
+    fn gather_cols_selects_in_order() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let g = m.gather_cols(&[2, 0, 2]);
+        assert_eq!((g.rows, g.cols), (2, 3));
+        assert_eq!(g.data, vec![3.0, 1.0, 3.0, 6.0, 4.0, 6.0]);
+        assert_eq!(m.gather_cols(&[]).cols, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn gather_cols_out_of_range_panics() {
+        let _ = Matrix::zeros(2, 2).gather_cols(&[0, 2]);
     }
 
     #[test]

@@ -14,9 +14,11 @@ mod chol;
 mod tri;
 
 pub use dense::Matrix;
-pub use qr::{householder_qr, qt_from_compressed, tsqr_stack_r, QrFactors};
+pub use qr::{
+    householder_qr, qr_append, qt_from_compressed, tsqr_stack_r, QrFactors, QR_APPEND_TOL,
+};
 pub use chol::cholesky_upper;
-pub use tri::{solve_lower, solve_upper, solve_rt_b, invert_upper};
+pub use tri::{invert_upper, project_append, solve_lower, solve_rt_b, solve_upper};
 
 /// Frobenius norm of a slice.
 pub fn fro_norm(xs: &[f64]) -> f64 {

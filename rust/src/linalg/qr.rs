@@ -131,6 +131,49 @@ pub fn qt_from_compressed(r: &Matrix, ctb: &Matrix) -> Matrix {
     solve_rt_b(r, ctb)
 }
 
+/// Relative residual-norm threshold below which an appended column is
+/// treated as lying in the span of the existing basis (matches the
+/// collinearity guard of the Lemma 3.1 epilogue in `stats::regression`).
+pub const QR_APPEND_TOL: f64 = 1e-12;
+
+/// Rank-1 QR extension (the SELECT-phase "promote a variant into the
+/// covariate basis" step): given the `K × K` factor `R` of `QR(B)`, the
+/// projection `u = Qᵀb` of a new column `b`, and `d = b·b`, return the
+/// `(K+1) × (K+1)` factor of `QR([B | b])`:
+///
+/// ```text
+/// R' = [ R  u ]      ρ = ‖(I − QQᵀ)b‖ = √(d − ‖u‖²)
+///      [ 0  ρ ]
+/// ```
+///
+/// No pass over the `N`-row data and no re-factorization — `O(K²)` to
+/// copy plus `O(K)` new entries. Errors (rather than producing a
+/// numerically-singular factor) when the residual `d − ‖u‖²` is below
+/// [`QR_APPEND_TOL`] relative to `d`, i.e. the column is already in the
+/// span of the basis.
+pub fn qr_append(r: &Matrix, u: &[f64], d: f64) -> anyhow::Result<Matrix> {
+    let k = r.rows;
+    anyhow::ensure!(r.cols == k, "qr_append needs a square R, got {}x{}", r.rows, r.cols);
+    anyhow::ensure!(u.len() == k, "projection length {} != K={k}", u.len());
+    let unorm2: f64 = u.iter().map(|x| x * x).sum();
+    let resid = d - unorm2;
+    anyhow::ensure!(
+        resid > QR_APPEND_TOL * d.abs().max(1.0),
+        "appended column is (numerically) in the span of the basis \
+         (residual {resid:e} vs ‖b‖² {d:e})"
+    );
+    let rho = resid.sqrt();
+    let mut out = Matrix::zeros(k + 1, k + 1);
+    for i in 0..k {
+        for j in i..k {
+            out[(i, j)] = r[(i, j)];
+        }
+        out[(i, k)] = u[i];
+    }
+    out[(k, k)] = rho;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +272,53 @@ mod tests {
     fn qr_wide_panics() {
         let a = Matrix::zeros(2, 5);
         let _ = householder_qr(&a);
+    }
+
+    #[test]
+    fn qr_append_matches_full_refactorization() {
+        // R' of [C | b] from the rank-1 append equals the R of a fresh QR
+        // of the augmented matrix (positive-diagonal convention on both).
+        let mut rng = Rng::new(15);
+        let c = Matrix::randn(60, 5, &mut rng);
+        let b = Matrix::randn(60, 1, &mut rng);
+        let QrFactors { q, r } = householder_qr(&c);
+        let u = q.t_matvec(&b.col(0));
+        let d: f64 = b.col(0).iter().map(|x| x * x).sum();
+        let r_app = qr_append(&r, &u, d).unwrap();
+
+        let full = Matrix::vstack(&[&c.transpose(), &b.transpose()]).transpose();
+        assert_eq!((full.rows, full.cols), (60, 6));
+        let r_full = householder_qr(&full).r;
+        assert!(
+            rel_err(&r_app.data, &r_full.data) < 1e-10,
+            "err={}",
+            rel_err(&r_app.data, &r_full.data)
+        );
+        // chained appends keep agreeing with the full factorization
+        let b2 = Matrix::randn(60, 1, &mut rng);
+        let q2 = householder_qr(&full).q;
+        let u2 = q2.t_matvec(&b2.col(0));
+        let d2: f64 = b2.col(0).iter().map(|x| x * x).sum();
+        let r_app2 = qr_append(&r_app, &u2, d2).unwrap();
+        let full2 = Matrix::vstack(&[&full.transpose(), &b2.transpose()]).transpose();
+        let r_full2 = householder_qr(&full2).r;
+        assert!(rel_err(&r_app2.data, &r_full2.data) < 1e-9);
+    }
+
+    #[test]
+    fn qr_append_rejects_collinear_column() {
+        // appending a column already in the span must error, not produce
+        // a singular factor
+        let mut rng = Rng::new(16);
+        let c = Matrix::randn(40, 4, &mut rng);
+        let QrFactors { q, r } = householder_qr(&c);
+        // b = C · w lies exactly in the span
+        let w = vec![1.0, -2.0, 0.5, 3.0];
+        let b = c.matvec(&w);
+        let u = q.t_matvec(&b);
+        let d: f64 = b.iter().map(|x| x * x).sum();
+        assert!(qr_append(&r, &u, d).is_err());
+        // and shape mismatches error too
+        assert!(qr_append(&r, &u[..3], d).is_err());
     }
 }

@@ -73,6 +73,27 @@ pub fn invert_upper(u: &Matrix) -> Matrix {
     solve_upper(u, &Matrix::identity(u.rows))
 }
 
+/// Extend a projection through a rank-1 QR append without re-solving.
+///
+/// When the basis `B` grows by a column `b` (`linalg::qr_append`), the
+/// new orthonormal direction is `q = (b − QQᵀb)/ρ` with `ρ = √(b·b −
+/// ‖Qᵀb‖²)`. For any vector `x` whose projection `u_x = Qᵀx` against the
+/// *old* basis is already known, the augmented projection is `[u_x; e]`
+/// with the single new entry
+///
+/// `e = qᵀx = (b·x − (Qᵀb)·(Qᵀx)) / ρ`
+///
+/// — `O(K)` per vector instead of an `O(K²)` fresh triangular solve, and
+/// needing only the raw cross-product `b·x`. This is what lets the
+/// SELECT phase re-project every cached statistic against the grown
+/// basis from `O(K+T+H)` numbers per round.
+pub fn project_append(u_b: &[f64], rho: f64, u_x: &[f64], btx: f64) -> f64 {
+    assert_eq!(u_b.len(), u_x.len(), "projection length mismatch");
+    assert!(rho > 0.0, "non-positive residual norm {rho}");
+    let dot: f64 = u_b.iter().zip(u_x).map(|(a, b)| a * b).sum();
+    (btx - dot) / rho
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +166,32 @@ mod tests {
         let mut u = Matrix::identity(3);
         u[(1, 1)] = 0.0;
         let _ = solve_upper(&u, &Matrix::identity(3));
+    }
+
+    #[test]
+    fn project_append_matches_fresh_solve() {
+        // Appending b to the basis and re-projecting x from scratch must
+        // agree with the O(K) incremental entry.
+        let mut rng = Rng::new(35);
+        let c = Matrix::randn(50, 4, &mut rng);
+        let b = Matrix::randn(50, 1, &mut rng).col(0);
+        let x = Matrix::randn(50, 1, &mut rng).col(0);
+        let f = householder_qr(&c);
+        let u_b = f.q.t_matvec(&b);
+        let u_x = f.q.t_matvec(&x);
+        let d: f64 = b.iter().map(|v| v * v).sum();
+        let rho = (d - u_b.iter().map(|v| v * v).sum::<f64>()).sqrt();
+        let btx: f64 = b.iter().zip(&x).map(|(a, c)| a * c).sum();
+        let e = project_append(&u_b, rho, &u_x, btx);
+
+        // fresh solve against the augmented basis
+        let aug = Matrix::vstack(&[&c.transpose(), &Matrix::from_col(b.clone()).transpose()])
+            .transpose();
+        let qa = householder_qr(&aug).q;
+        let full = qa.t_matvec(&x);
+        assert!((full[4] - e).abs() < 1e-9, "{} vs {e}", full[4]);
+        for i in 0..4 {
+            assert!((full[i] - u_x[i]).abs() < 1e-9);
+        }
     }
 }

@@ -78,6 +78,10 @@ fn scan_command() -> Command {
         .flag("artifacts", "use the AOT artifact runtime for compression")
         .opt("artifacts-dir", "artifacts", "artifact directory")
         .opt("alpha", "5e-8", "significance threshold for reported hits")
+        .opt("select-k", "0", "forward-stepwise SELECT rounds after the scan (0 = scan only)")
+        .opt("select-alpha", "1e-4", "SELECT stop rule: entry p-value threshold")
+        .opt("select-policy", "union", "SELECT lane policy: union|per-trait")
+        .opt("select-candidates", "32", "SELECT candidate-shortlist cap per trait")
 }
 
 fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
@@ -108,6 +112,14 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         cfg.scan.use_artifacts = true;
         cfg.scan.artifacts_dir = a.get("artifacts-dir").unwrap().to_string();
     }
+    cfg.scan.select_k = a.get_usize("select-k")?;
+    cfg.scan.select_alpha = a.get_f64("select-alpha")?;
+    anyhow::ensure!(
+        cfg.scan.select_alpha > 0.0 && cfg.scan.select_alpha <= 1.0,
+        "--select-alpha must be in (0, 1]"
+    );
+    cfg.scan.select_policy = dash::scan::SelectPolicy::parse(a.get("select-policy").unwrap())?;
+    cfg.scan.select_candidates = a.get_usize("select-candidates")?;
     let alpha = a.get_f64("alpha")?;
 
     eprintln!(
@@ -172,6 +184,40 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         println!("hits, all {} traits: {}", cohort.t(), total_hits);
     }
 
+    if cfg.scan.select_k > 0 {
+        println!(
+            "select            policy={} k={} alpha={:.1e} rounds={} peak round {}",
+            cfg.scan.select_policy.name(),
+            cfg.scan.select_k,
+            cfg.scan.select_alpha,
+            res.metrics.select_rounds,
+            human_bytes(res.metrics.bytes_max_select_round)
+        );
+        match &res.select {
+            Some(sel) => {
+                for round in &sel.rounds {
+                    for (lane, pick) in round.picks.iter().enumerate() {
+                        let Some(p) = pick else { continue };
+                        let is_causal = cohort.truth.causal_idx.contains(&p.variant);
+                        println!(
+                            "  round {} lane {lane}: variant {:>6} (trait {}) beta={:+.4} p={:.3e}{}",
+                            round.round,
+                            p.variant,
+                            p.trait_idx,
+                            p.beta,
+                            p.p,
+                            if is_causal { "  [causal]" } else { "" }
+                        );
+                    }
+                }
+                if sel.rounds.is_empty() {
+                    println!("  (no variant passed the entry threshold)");
+                }
+            }
+            None => println!("  (empty candidate shortlist — nothing to select)"),
+        }
+    }
+
     if let Some(path) = a.get("report") {
         if !path.is_empty() {
             let mut rep = dash::util::json::Json::obj();
@@ -186,6 +232,18 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
                 .set("bytes_max_round", res.metrics.bytes_max_round)
                 .set("n_hits", hits.len())
                 .set("min_p", res.output.min_p_value().unwrap_or(f64::NAN));
+            if cfg.scan.select_k > 0 {
+                rep.set("select_rounds", res.metrics.select_rounds)
+                    .set("bytes_select", res.metrics.bytes_select)
+                    .set("bytes_max_select_round", res.metrics.bytes_max_select_round);
+                if let Some(sel) = &res.select {
+                    // one list per lane, so per-trait selections stay
+                    // attributable (lanes may pick the same variant)
+                    let selected: Vec<Vec<usize>> =
+                        (0..sel.lanes()).map(|lane| sel.selected(lane)).collect();
+                    rep.set("selected", selected);
+                }
+            }
             std::fs::write(path, rep.to_pretty())?;
             eprintln!("report written to {path}");
         }

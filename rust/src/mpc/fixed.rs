@@ -12,6 +12,21 @@
 //! largest workloads; with 24 fractional bits values fit comfortably in
 //! i64 (2^26+24 = 2^50 ≪ 2^63). [`FixedCodec::check_range`] enforces this
 //! at encode time rather than silently wrapping.
+//!
+//! ## Precision contract (pinned by `tests/integration_precision.rs`)
+//!
+//! Per encoded element the rounding error is ≤ `0.5 / 2^frac_bits`, and
+//! a sum across `P` parties inherits ≤ `P` such roundings
+//! ([`FixedCodec::sum_error_bound`]) — the masked ring (Z_2^64) and the
+//! Shamir field (Mersenne-61) add **no** further error; both are exact
+//! on the encoded integers. Downstream, with the default
+//! `frac_bits = 24`, the envelope test sweeps joint trait/genotype
+//! magnitudes across decades (scale 0.03 … 100, the widest band the
+//! range check admits for its cohort) and pins the secure backends to
+//! the plaintext scan within **1e-3 relative (floor 0.05 absolute) on
+//! β̂ and σ̂** for every finite variant. Magnitudes past
+//! [`FixedCodec::max_abs`] are rejected at encode time, never silently
+//! wrapped.
 
 /// Fixed-point parameters.
 #[derive(Clone, Copy, Debug)]

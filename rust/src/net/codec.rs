@@ -25,6 +25,7 @@ use crate::util::json::Json;
 /// of named primitive fields.
 pub trait FieldSink {
     fn u64(&mut self, name: &'static str, v: u64);
+    fn f64(&mut self, name: &'static str, v: f64);
     fn u64s(&mut self, name: &'static str, v: &[u64]);
     fn f64s(&mut self, name: &'static str, v: &[f64]);
     fn bytes(&mut self, name: &'static str, v: &[u8]);
@@ -33,6 +34,7 @@ pub trait FieldSink {
 /// Read-side field walk, mirroring [`FieldSink`] in the same order.
 pub trait FieldSource {
     fn u64(&mut self, name: &'static str) -> anyhow::Result<u64>;
+    fn f64(&mut self, name: &'static str) -> anyhow::Result<f64>;
     fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>>;
     fn f64s(&mut self, name: &'static str) -> anyhow::Result<Vec<f64>>;
     fn bytes(&mut self, name: &'static str) -> anyhow::Result<Vec<u8>>;
@@ -137,6 +139,9 @@ impl FieldSink for BinarySink {
     fn u64(&mut self, _name: &'static str, v: u64) {
         self.f.put_u64(v);
     }
+    fn f64(&mut self, _name: &'static str, v: f64) {
+        self.f.put_f64(v);
+    }
     fn u64s(&mut self, _name: &'static str, v: &[u64]) {
         self.f.put_u64_slice(v);
     }
@@ -155,6 +160,9 @@ struct BinarySource<'a> {
 impl FieldSource for BinarySource<'_> {
     fn u64(&mut self, name: &'static str) -> anyhow::Result<u64> {
         self.r.u64().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
+    }
+    fn f64(&mut self, name: &'static str) -> anyhow::Result<f64> {
+        self.r.f64().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
     }
     fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>> {
         self.r.u64_vec().map_err(|e| anyhow::anyhow!("field {name}: {e}"))
@@ -198,6 +206,9 @@ impl FieldSink for JsonSink {
     fn u64(&mut self, name: &'static str, v: u64) {
         self.push(name, Json::Str(v.to_string()));
     }
+    fn f64(&mut self, name: &'static str, v: f64) {
+        self.push(name, f64_to_json(v));
+    }
     fn u64s(&mut self, name: &'static str, v: &[u64]) {
         self.push(name, Json::Arr(v.iter().map(|x| Json::Str(x.to_string())).collect()));
     }
@@ -239,6 +250,10 @@ impl FieldSource for JsonSource<'_> {
         let v = self.next(name)?;
         let s = v.as_str().ok_or_else(|| anyhow::anyhow!("field {name} not a string"))?;
         s.parse::<u64>().map_err(|_| anyhow::anyhow!("field {name}: bad u64 `{s}`"))
+    }
+    fn f64(&mut self, name: &'static str) -> anyhow::Result<f64> {
+        let v = self.next(name)?;
+        f64_from_json(v).map_err(|e| anyhow::anyhow!("field {name}: {e}"))
     }
     fn u64s(&mut self, name: &'static str) -> anyhow::Result<Vec<u64>> {
         let v = self.next(name)?;
@@ -288,6 +303,7 @@ mod tests {
     #[derive(Clone, Debug, PartialEq)]
     struct Probe {
         a: u64,
+        scalar: f64,
         xs: Vec<u64>,
         fs: Vec<f64>,
         blob: Vec<u8>,
@@ -299,6 +315,7 @@ mod tests {
 
         fn write_fields<S: FieldSink>(&self, s: &mut S) {
             s.u64("a", self.a);
+            s.f64("scalar", self.scalar);
             s.u64s("xs", &self.xs);
             s.f64s("fs", &self.fs);
             s.bytes("blob", &self.blob);
@@ -307,6 +324,7 @@ mod tests {
         fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
             Ok(Probe {
                 a: s.u64("a")?,
+                scalar: s.f64("scalar")?,
                 xs: s.u64s("xs")?,
                 fs: s.f64s("fs")?,
                 blob: s.bytes("blob")?,
@@ -317,6 +335,7 @@ mod tests {
     fn probe() -> Probe {
         Probe {
             a: u64::MAX,
+            scalar: -2.5e-308,
             xs: vec![0, 1, u64::MAX - 1],
             fs: vec![0.1, -1.5e300, f64::NAN, f64::INFINITY, -0.0],
             blob: vec![0x00, 0xff, 0x7f],
@@ -325,6 +344,7 @@ mod tests {
 
     fn probes_equal(a: &Probe, b: &Probe) -> bool {
         a.a == b.a
+            && a.scalar.to_bits() == b.scalar.to_bits()
             && a.xs == b.xs
             && a.blob == b.blob
             && a.fs.len() == b.fs.len()
@@ -347,7 +367,12 @@ mod tests {
         let p = probe();
         let via_codec = Codec::Binary.encode(&p);
         let mut by_hand = Frame::new(900);
-        by_hand.put_u64(p.a).put_u64_slice(&p.xs).put_f64_slice(&p.fs).put_bytes(&p.blob);
+        by_hand
+            .put_u64(p.a)
+            .put_f64(p.scalar)
+            .put_u64_slice(&p.xs)
+            .put_f64_slice(&p.fs)
+            .put_bytes(&p.blob);
         assert_eq!(via_codec, by_hand);
     }
 

@@ -74,8 +74,13 @@ pub struct PayloadReader<'a> {
 
 impl<'a> PayloadReader<'a> {
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
-        anyhow::ensure!(self.pos + n <= self.buf.len(), "payload underrun");
-        let s = &self.buf[self.pos..self.pos + n];
+        // checked: a corrupted length can put pos + n past usize::MAX
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("payload underrun"))?;
+        anyhow::ensure!(end <= self.buf.len(), "payload underrun");
+        let s = &self.buf[self.pos..end];
         self.pos += n;
         Ok(s)
     }
@@ -88,9 +93,17 @@ impl<'a> PayloadReader<'a> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    pub fn u64_vec(&mut self) -> anyhow::Result<Vec<u64>> {
+    /// Length prefix of a vector, overflow-checked: a corrupted prefix
+    /// near `u64::MAX` must surface as a clean error, not an arithmetic
+    /// panic (debug) or a silently-wrapped short read (release).
+    fn vec_bytes(&mut self) -> anyhow::Result<usize> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 8)?;
+        n.checked_mul(8).ok_or_else(|| anyhow::anyhow!("implausible vector length {n}"))
+    }
+
+    pub fn u64_vec(&mut self) -> anyhow::Result<Vec<u64>> {
+        let bytes = self.vec_bytes()?;
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
@@ -98,8 +111,8 @@ impl<'a> PayloadReader<'a> {
     }
 
     pub fn f64_vec(&mut self) -> anyhow::Result<Vec<f64>> {
-        let n = self.u64()? as usize;
-        let raw = self.take(n * 8)?;
+        let bytes = self.vec_bytes()?;
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
@@ -211,6 +224,22 @@ mod tests {
     fn underrun_is_error_not_panic() {
         let f = Frame::new(1);
         assert!(f.reader().u64().is_err());
+    }
+
+    #[test]
+    fn corrupted_length_prefix_is_error_not_panic() {
+        // a vector length prefix near u64::MAX must not overflow the
+        // byte-count arithmetic (debug panic / release wraparound)
+        let mut f = Frame::new(1);
+        f.put_u64(u64::MAX).put_u64(42);
+        assert!(f.reader().u64_vec().is_err());
+        assert!(f.reader().f64_vec().is_err());
+        assert!(f.reader().bytes().is_err());
+        // length prefixes that wrap pos + n
+        let mut g = Frame::new(1);
+        g.put_u64(u64::MAX / 8);
+        assert!(g.reader().u64_vec().is_err());
+        assert!(g.reader().bytes().is_err());
     }
 
     #[test]

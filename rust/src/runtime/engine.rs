@@ -1,5 +1,12 @@
 //! The artifact execution engine: compile-once, execute-many wrappers
 //! over the PJRT CPU client.
+//!
+//! SELECT-phase note: the stepwise rounds touch only `O(H)` gathered
+//! shortlist columns (and `O(H)` cross-products per promotion), so the
+//! party serves them from the pure-Rust kernels in both compute
+//! backends — there is no whole-`M` pass left to lower. A gathered-
+//! columns artifact entry is tracked in ROADMAP next to per-shard
+//! artifact lowering, for deployments where `N_p·H` is itself large.
 
 use super::manifest::Manifest;
 use crate::linalg::{cholesky_upper, Matrix};

@@ -3,7 +3,10 @@
 //! Presents the same API as the real PJRT-backed engine so callers,
 //! benches, and tests compile unchanged; `load` always fails with an
 //! explanatory error, and every caller already treats a failed load as
-//! "artifacts unavailable — use the pure-Rust compute path".
+//! "artifacts unavailable — use the pure-Rust compute path". SELECT
+//! rounds never dispatch here at all: their `O(H)` gathered-column and
+//! cross-product kernels run pure-Rust in both compute backends (see
+//! `runtime/engine.rs`).
 
 use super::manifest::Manifest;
 use crate::linalg::Matrix;

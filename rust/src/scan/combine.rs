@@ -25,7 +25,9 @@
 //! to a `T = 1` combine of that trait.
 
 use super::compressed::{AggregateSums, BaseSums, CompressedParty, ShardSums};
-use crate::linalg::{cholesky_upper, solve_rt_b, tsqr_stack_r, Matrix};
+use crate::linalg::{
+    cholesky_upper, project_append, qr_append, solve_rt_b, tsqr_stack_r, Matrix,
+};
 use crate::stats::{
     fit_from_sufficient, scan_stats_from_projected_parts, AssocResult, RegressionFit,
 };
@@ -113,6 +115,46 @@ pub struct CombineContext {
 impl CombineContext {
     pub fn t(&self) -> usize {
         self.yty.len()
+    }
+
+    /// Current basis width: the `K` permanent covariates plus every
+    /// column promoted by [`append_column`](Self::append_column).
+    pub fn basis_k(&self) -> usize {
+        self.r.rows
+    }
+
+    /// Promote a variant into the covariate basis (the SELECT-phase
+    /// rank-1 extension): grow the cached `R` factor by one column via
+    /// [`qr_append`] and extend every trait's `QᵀY` projection by its one
+    /// new entry — no pass over party data and no re-factorization.
+    ///
+    /// `u` is the promoted column's projection against the *current*
+    /// basis (`Qᵀx`, length [`basis_k`](Self::basis_k)), `xtx` its `x·x`,
+    /// and `xty` its `xᵀY` cross-products (length `T`) — all of which sit
+    /// in the cached compressed sums. Returns the residual norm `ρ` so
+    /// callers can extend their own cached projections with
+    /// [`project_append`]. Errors if the column is numerically in the
+    /// span of the basis. `covariate_fit` deliberately keeps the
+    /// session's original covariate-only fits.
+    pub fn append_column(&mut self, u: &[f64], xtx: f64, xty: &[f64]) -> anyhow::Result<f64> {
+        let kb = self.basis_k();
+        anyhow::ensure!(u.len() == kb, "projection length {} != basis {kb}", u.len());
+        anyhow::ensure!(xty.len() == self.t(), "xᵀY trait-count mismatch");
+        let r = qr_append(&self.r, u, xtx)?;
+        let rho = r[(kb, kb)];
+        let mut qt_y = Matrix::zeros(kb + 1, self.t());
+        for i in 0..kb {
+            for tt in 0..self.t() {
+                qt_y[(i, tt)] = self.qt_y[(i, tt)];
+            }
+        }
+        for tt in 0..self.t() {
+            qt_y[(kb, tt)] = project_append(u, rho, &self.qt_y.col(tt), xty[tt]);
+        }
+        self.r = r;
+        self.qt_y = qt_y;
+        self.k += 1;
+        Ok(rho)
     }
 }
 
@@ -439,6 +481,75 @@ mod tests {
             assert!(rel_err(&fits[tt].gamma, &oracle.gamma) < 1e-11, "trait {tt}");
             assert!(rel_err(&fits[tt].se, &oracle.se) < 1e-11, "trait {tt}");
         }
+    }
+
+    /// Promoting a variant via the rank-1 append yields the same epilogue
+    /// statistics as compressing with that variant as a permanent
+    /// covariate from the start.
+    #[test]
+    fn append_column_matches_recompressed_covariate() {
+        use crate::linalg::project_append;
+        use crate::stats::scan_stats_from_projected_parts;
+        let (ys, c, x) = party(150, 3, 6, 150);
+        let cp = compress_party(&ys, &c, &x, 6, Some(1));
+        let agg = aggregate(std::slice::from_ref(&cp));
+        let mut cx = combine_base(&agg.base(), None, CombineOptions::default()).unwrap();
+
+        // promote variant 0 using only cached sums
+        let promoted = 0usize;
+        let u = crate::linalg::solve_rt_b(
+            &cx.r,
+            &agg.ctx.col_slice(promoted, promoted + 1),
+        )
+        .col(0);
+        let rho = cx.append_column(&u, agg.xtx[promoted], agg.xty.row(promoted)).unwrap();
+        assert!(rho > 0.0);
+        assert_eq!(cx.basis_k(), 4);
+        assert_eq!(cx.k, 4);
+
+        // oracle: recompress with [C | x_0] as the covariate block
+        let c_aug = Matrix::vstack(&[&c.transpose(), &Matrix::from_col(x.col(0)).transpose()])
+            .transpose();
+        let cp2 = compress_party(&ys, &c_aug, &x, 6, Some(1));
+        let agg2 = aggregate(std::slice::from_ref(&cp2));
+        let cx2 = combine_base(&agg2.base(), None, CombineOptions::default()).unwrap();
+        assert!(rel_err(&cx.r.data, &cx2.r.data) < 1e-9);
+        assert!(rel_err(&cx.qt_y.data, &cx2.qt_y.data) < 1e-9);
+
+        // epilogue for another variant against the augmented basis: the
+        // appended projection row comes from the raw cross-product
+        let probe = 3usize;
+        let u_probe = crate::linalg::solve_rt_b(&cx2.r, &agg2.ctx.col_slice(probe, probe + 1));
+        let mut u_inc = crate::linalg::solve_rt_b(
+            &combine_base(&agg.base(), None, CombineOptions::default()).unwrap().r,
+            &agg.ctx.col_slice(probe, probe + 1),
+        )
+        .col(0);
+        let btx: f64 = x.col(promoted).iter().zip(&x.col(probe)).map(|(a, b)| a * b).sum();
+        let e = project_append(&u, rho, &u_inc, btx);
+        u_inc.push(e);
+        assert!(rel_err(&u_inc, &u_probe.col(0)) < 1e-9);
+
+        let a = scan_stats_from_projected_parts(
+            cx.n,
+            cx.k,
+            cx.yty[0],
+            &agg.xty.col(0)[probe..probe + 1],
+            &agg.xtx[probe..probe + 1],
+            &cx.qt_y.col(0),
+            &Matrix::from_col(u_inc),
+        );
+        let b = scan_stats_from_projected_parts(
+            cx2.n,
+            cx2.k,
+            cx2.yty[0],
+            &agg2.xty.col(0)[probe..probe + 1],
+            &agg2.xtx[probe..probe + 1],
+            &cx2.qt_y.col(0),
+            &u_probe,
+        );
+        assert!((a.beta[0] - b.beta[0]).abs() < 1e-8 * b.beta[0].abs().max(1.0));
+        assert!((a.se[0] - b.se[0]).abs() < 1e-8 * b.se[0].abs().max(1.0));
     }
 
     #[test]

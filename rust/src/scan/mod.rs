@@ -35,10 +35,20 @@
 //! plaintext baseline) and the AOT-compiled XLA path driven by
 //! [`crate::runtime`] (the production hot path, loaded from
 //! `artifacts/*.hlo.txt`).
+//!
+//! ## The SELECT phase (iterative forward stepwise)
+//!
+//! `ScanConfig::select_k > 0` appends multi-round forward stepwise
+//! selection to the session ([`SelectState`], `--select-k`): each round
+//! promotes the best-scoring variant into the covariate basis via a
+//! rank-1 QR append and re-scores a bounded candidate shortlist against
+//! the grown basis — `O(lanes·H)` traffic per round, independent of M,
+//! with no re-compression at the parties.
 
 pub mod compressed;
 mod combine;
 mod meta;
+mod select;
 mod shard;
 
 pub use compressed::{
@@ -51,6 +61,10 @@ pub use combine::{
     CombineOptions, RFactorMethod, ScanOutput,
 };
 pub use meta::{meta_analyze, MetaResult};
+pub use select::{
+    choose_candidates, cross_products, SelectOutput, SelectPick, SelectPolicy, SelectRound,
+    SelectState,
+};
 pub use shard::{ShardPlan, ShardRange};
 
 pub use crate::mpc::Backend as SmcBackend;
@@ -77,6 +91,16 @@ pub struct ScanConfig {
     pub use_artifacts: bool,
     /// directory holding artifacts/manifest.json
     pub artifacts_dir: String,
+    /// maximum SELECT rounds after the scan (0 = scan only)
+    pub select_k: usize,
+    /// SELECT stop rule: a round only promotes a variant whose entry
+    /// p-value is below this threshold
+    pub select_alpha: f64,
+    /// how SELECT lanes map onto traits
+    pub select_policy: SelectPolicy,
+    /// candidate-shortlist cap per trait (bounds per-round SELECT
+    /// traffic at `O(H)` independent of M; ≥ M = unrestricted stepwise)
+    pub select_candidates: usize,
 }
 
 impl Default for ScanConfig {
@@ -90,6 +114,10 @@ impl Default for ScanConfig {
             r_method: RFactorMethod::Auto,
             use_artifacts: false,
             artifacts_dir: "artifacts".to_string(),
+            select_k: 0,
+            select_alpha: 1e-4,
+            select_policy: SelectPolicy::Union,
+            select_candidates: 32,
         }
     }
 }

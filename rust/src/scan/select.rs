@@ -1,0 +1,649 @@
+//! Forward stepwise feature selection over cached compressed statistics
+//! — the iterative half of the paper's contribution ("…linear regression
+//! **and feature selection** at plaintext speed").
+//!
+//! After a scan, SELECT runs multi-round forward stepwise: each round
+//! promotes the best-scoring variant into the covariate basis and
+//! re-scores the remaining candidates against the grown basis. The
+//! geometric insight is that promotion is a **rank-1 extension of the
+//! shared QR** ([`crate::linalg::qr_append`],
+//! [`CombineContext::append_column`]): the promoted column's
+//! cross-products against the permanent covariates and the traits
+//! (`Cᵀx`, `xᵀY`, `x·x`) already sit inside the compressed sums, so no
+//! party re-runs compress and no `O(N·M·K)` pass recurs.
+//!
+//! The one statistic genuinely *outside* the compressed sums is the
+//! promoted column's cross-product against other variants (`xᵀx'` —
+//! compression keeps only the `X·X` diagonal). Exact stepwise therefore
+//! scores a bounded **candidate shortlist** chosen from the scan's
+//! p-values (`ScanConfig::select_candidates`, the COJO-style conditional
+//! analysis shape): per round, the parties secure-sum one `O(H)` vector
+//! of the promoted column's cross-products against the `H` shortlisted
+//! columns — independent of `M` — and every other projection update is
+//! `O(K+T+H)` leader-side arithmetic ([`crate::linalg::project_append`]).
+//! With `H = M` this is textbook forward stepwise; the shortlist is what
+//! keeps per-round traffic `O(K+T+H+round)` instead of `O(M)`.
+//!
+//! Selection is **policy-driven** over lanes: [`SelectPolicy::Union`]
+//! runs one lane whose basis is shared by all `T` traits (each round
+//! promotes the best variant across traits); [`SelectPolicy::PerTrait`]
+//! runs `T` independent lanes, each bit-identical to a `T = 1` session
+//! of its trait. The scoring inside a lane is the unchanged Lemma 3.1
+//! epilogue against the augmented basis — `combine_shard`'s math with
+//! `K` grown by the promoted columns.
+
+use super::combine::{CombineContext, ScanOutput};
+use super::compressed::ShardSums;
+use crate::linalg::{project_append, solve_rt_b, Matrix};
+use crate::stats::scan_stats_from_projected_parts;
+use std::collections::BTreeSet;
+
+/// How SELECT lanes map onto traits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectPolicy {
+    /// One lane, one shared basis: each round promotes the variant with
+    /// the best score across all traits.
+    Union,
+    /// `T` independent lanes, one per trait — lane `t` is bit-identical
+    /// to a `T = 1` selection on that trait.
+    PerTrait,
+}
+
+impl SelectPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectPolicy::Union => "union",
+            SelectPolicy::PerTrait => "per-trait",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<SelectPolicy> {
+        match s {
+            "union" => Ok(SelectPolicy::Union),
+            "per-trait" => Ok(SelectPolicy::PerTrait),
+            other => anyhow::bail!("unknown select policy `{other}` (union|per-trait)"),
+        }
+    }
+
+    /// Wire encoding (SETUP/SELECT_SETUP frames).
+    pub fn code(&self) -> u64 {
+        match self {
+            SelectPolicy::Union => 0,
+            SelectPolicy::PerTrait => 1,
+        }
+    }
+
+    pub fn from_code(c: u64) -> anyhow::Result<SelectPolicy> {
+        match c {
+            0 => Ok(SelectPolicy::Union),
+            1 => Ok(SelectPolicy::PerTrait),
+            other => anyhow::bail!("unknown select policy code {other}"),
+        }
+    }
+}
+
+/// One promoted variant: which column entered which lane's basis, with
+/// its association statistics *at entry* (scored against the basis of
+/// the round it was promoted in).
+#[derive(Clone, Debug)]
+pub struct SelectPick {
+    /// absolute variant index
+    pub variant: usize,
+    /// candidate-shortlist slot of the variant
+    pub slot: usize,
+    /// trait whose score won the round (for per-trait lanes, the lane's
+    /// own trait)
+    pub trait_idx: usize,
+    pub beta: f64,
+    pub se: f64,
+    pub t: f64,
+    pub p: f64,
+}
+
+/// One SELECT round: at most one pick per lane (`None` = lane already
+/// stopped).
+#[derive(Clone, Debug)]
+pub struct SelectRound {
+    /// 1-based round index
+    pub round: usize,
+    pub picks: Vec<Option<SelectPick>>,
+}
+
+/// Result of a SELECT phase.
+#[derive(Clone, Debug)]
+pub struct SelectOutput {
+    pub policy: SelectPolicy,
+    /// candidate shortlist (absolute variant indices, strictly
+    /// increasing)
+    pub candidates: Vec<usize>,
+    /// number of selection lanes (1 for union, T for per-trait)
+    pub lanes: usize,
+    pub rounds: Vec<SelectRound>,
+}
+
+impl SelectOutput {
+    /// Number of selection lanes (1 for union, T for per-trait).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Variants promoted into lane `lane`, in promotion order.
+    pub fn selected(&self, lane: usize) -> Vec<usize> {
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        self.rounds
+            .iter()
+            .filter_map(|r| r.picks[lane].as_ref().map(|p| p.variant))
+            .collect()
+    }
+}
+
+/// Rank the scan's variants and return the candidate shortlist: the
+/// union over traits of the `cap` smallest finite p-values, as a
+/// strictly-increasing index list. The shortlist bounds every SELECT
+/// round's traffic at `O(H)` independent of `M`; `cap ≥ M` recovers
+/// unrestricted forward stepwise.
+pub fn choose_candidates(out: &ScanOutput, cap: usize) -> Vec<usize> {
+    let mut set = BTreeSet::new();
+    for assoc in &out.assoc {
+        let mut ranked: Vec<usize> = (0..out.m).filter(|&j| assoc.p[j].is_finite()).collect();
+        ranked.sort_by(|&a, &b| assoc.p[a].partial_cmp(&assoc.p[b]).unwrap().then(a.cmp(&b)));
+        for &j in ranked.iter().take(cap) {
+            set.insert(j);
+        }
+    }
+    set.into_iter().collect()
+}
+
+/// Party-side kernel of a Promote round: cross-products of column `j`
+/// of `x` against every column of the gathered shortlist `xs`, summed
+/// over rows in row order (bit-identical to the compress kernel's
+/// accumulation, so `v[slot_of_j] == x_j·x_j` exactly).
+pub fn cross_products(x: &Matrix, j: usize, xs: &Matrix) -> Vec<f64> {
+    assert!(j < x.cols, "variant {j} out of range ({} cols)", x.cols);
+    assert_eq!(x.rows, xs.rows, "row mismatch");
+    let mut v = vec![0.0; xs.cols];
+    for i in 0..x.rows {
+        let xj = x[(i, j)];
+        if xj == 0.0 {
+            continue;
+        }
+        for (o, &b) in v.iter_mut().zip(xs.row(i)) {
+            *o += xj * b;
+        }
+    }
+    v
+}
+
+/// One selection lane: a basis (grown per promotion) plus the projected
+/// candidate columns against it.
+struct Lane {
+    /// trait columns this lane scores
+    traits: Vec<usize>,
+    /// factorized (and grown) basis + per-trait `QᵀY`
+    ctx: CombineContext,
+    /// `QᵀX_S` against the lane's current basis, `basis_k × H`
+    qt_c: Matrix,
+    /// promoted shortlist slots, in promotion order
+    promoted: Vec<usize>,
+    done: bool,
+}
+
+/// Leader-side SELECT engine, protocol-agnostic: fed the aggregate
+/// shortlist statistics once and one aggregate cross-product vector per
+/// promotion, it reproduces forward stepwise exactly. The wire layers
+/// (any backend) only move those two kinds of sums.
+pub struct SelectState {
+    policy: SelectPolicy,
+    /// p-value entry threshold (stop rule)
+    p_enter: f64,
+    n: usize,
+    cand: Vec<usize>,
+    /// aggregate `X_SᵀY`, `H × T`
+    xty_s: Matrix,
+    /// aggregate `X_S·X_S`, length `H`
+    xtx_s: Vec<f64>,
+    lanes: Vec<Lane>,
+    rounds: Vec<SelectRound>,
+}
+
+impl SelectState {
+    /// Build from the session's combine context and the aggregate
+    /// shortlist sums (`ShardSums` over the gathered candidate columns —
+    /// the same wire shape as a variant shard).
+    pub fn new(
+        cx: &CombineContext,
+        cand: Vec<usize>,
+        sums: &ShardSums,
+        policy: SelectPolicy,
+        p_enter: f64,
+    ) -> anyhow::Result<SelectState> {
+        anyhow::ensure!(sums.width() == cand.len(), "candidate stats width mismatch");
+        anyhow::ensure!(sums.t() == cx.t(), "candidate stats trait-count mismatch");
+        anyhow::ensure!(p_enter > 0.0, "entry threshold must be positive");
+        for w in cand.windows(2) {
+            anyhow::ensure!(w[0] < w[1], "candidates must be strictly increasing");
+        }
+        let qt_c = solve_rt_b(&cx.r, &sums.ctx);
+        let lane_traits: Vec<Vec<usize>> = match policy {
+            SelectPolicy::Union => vec![(0..cx.t()).collect()],
+            SelectPolicy::PerTrait => (0..cx.t()).map(|tt| vec![tt]).collect(),
+        };
+        let lanes = lane_traits
+            .into_iter()
+            .map(|traits| Lane {
+                traits,
+                ctx: cx.clone(),
+                qt_c: qt_c.clone(),
+                promoted: Vec::new(),
+                done: false,
+            })
+            .collect();
+        Ok(SelectState {
+            policy,
+            p_enter,
+            n: cx.n,
+            cand,
+            xty_s: sums.xty.clone(),
+            xtx_s: sums.xtx.clone(),
+            lanes,
+            rounds: Vec::new(),
+        })
+    }
+
+    /// Shortlist size `H`.
+    pub fn h(&self) -> usize {
+        self.cand.len()
+    }
+
+    /// Number of selection lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Rounds folded so far.
+    pub fn rounds(&self) -> &[SelectRound] {
+        &self.rounds
+    }
+
+    /// Score one lane's candidates against its current basis — the
+    /// Lemma 3.1 epilogue with `K` grown by the promoted columns — and
+    /// return the best pick passing the stop rule, ties to the earlier
+    /// trait then the lower variant index.
+    fn score_lane(&self, li: usize) -> Option<SelectPick> {
+        let lane = &self.lanes[li];
+        let kb = lane.ctx.basis_k();
+        // residual df after one more covariate must stay positive
+        if (self.n as f64) - (kb as f64) - 1.0 < 1.0 {
+            return None;
+        }
+        let mut best: Option<SelectPick> = None;
+        for &tt in &lane.traits {
+            let assoc = scan_stats_from_projected_parts(
+                self.n,
+                kb,
+                lane.ctx.yty[tt],
+                &self.xty_s.col(tt),
+                &self.xtx_s,
+                &lane.ctx.qt_y.col(tt),
+                &lane.qt_c,
+            );
+            for slot in 0..self.cand.len() {
+                if lane.promoted.contains(&slot) {
+                    continue;
+                }
+                let p = assoc.p[slot];
+                if !p.is_finite() || p > self.p_enter {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(b) => p < b.p,
+                };
+                if better {
+                    best = Some(SelectPick {
+                        variant: self.cand[slot],
+                        slot,
+                        trait_idx: tt,
+                        beta: assoc.beta[slot],
+                        se: assoc.se[slot],
+                        t: assoc.t[slot],
+                        p,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Score every lane and return this round's proposed picks (`None`
+    /// marks a lane as stopped). The leader broadcasts the picks as a
+    /// `PROMOTE` frame; [`fold`](Self::fold) applies them once the
+    /// cross-product sums return.
+    pub fn propose(&mut self) -> Vec<Option<SelectPick>> {
+        let mut picks = Vec::with_capacity(self.lanes.len());
+        for li in 0..self.lanes.len() {
+            if self.lanes[li].done {
+                picks.push(None);
+                continue;
+            }
+            let pick = self.score_lane(li);
+            if pick.is_none() {
+                self.lanes[li].done = true;
+            }
+            picks.push(pick);
+        }
+        picks
+    }
+
+    /// Apply one round: `flat` is the securely-summed concatenation, in
+    /// lane order, of each *active* lane's promoted-column cross-products
+    /// against the shortlist (`H` values per active lane). Grows each
+    /// active lane's basis by its promoted column and extends every
+    /// cached projection by one entry.
+    pub fn fold(&mut self, picks: &[Option<SelectPick>], flat: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(picks.len() == self.lanes.len(), "lane count mismatch");
+        let h = self.cand.len();
+        let active = picks.iter().filter(|p| p.is_some()).count();
+        anyhow::ensure!(flat.len() == active * h, "cross-product round length mismatch");
+        let mut off = 0usize;
+        for (li, pick) in picks.iter().enumerate() {
+            let Some(pick) = pick else { continue };
+            let v = &flat[off..off + h];
+            off += h;
+            let slot = pick.slot;
+            anyhow::ensure!(slot < h, "promoted slot out of range");
+            anyhow::ensure!(
+                !self.lanes[li].promoted.contains(&slot),
+                "slot {slot} already promoted in lane {li}"
+            );
+            // the promoted column's self cross-product must reproduce the
+            // cached X·X entry (same sums, same order) — a cheap
+            // integrity check on the round
+            anyhow::ensure!(
+                (v[slot] - self.xtx_s[slot]).abs() <= 1e-6 * self.xtx_s[slot].abs().max(1.0),
+                "promote round inconsistent: self cross-product {} vs cached X·X {}",
+                v[slot],
+                self.xtx_s[slot]
+            );
+            let lane = &mut self.lanes[li];
+            let u = lane.qt_c.col(slot);
+            let rho = lane.ctx.append_column(&u, self.xtx_s[slot], self.xty_s.row(slot))?;
+            let kb = lane.qt_c.rows;
+            let mut qt_c = Matrix::zeros(kb + 1, h);
+            qt_c.data[..kb * h].copy_from_slice(&lane.qt_c.data);
+            for c in 0..h {
+                qt_c[(kb, c)] = project_append(&u, rho, &lane.qt_c.col(c), v[c]);
+            }
+            lane.qt_c = qt_c;
+            lane.promoted.push(slot);
+        }
+        let round = self.rounds.len() + 1;
+        self.rounds.push(SelectRound { round, picks: picks.to_vec() });
+        Ok(())
+    }
+
+    /// Finish, consuming the state.
+    pub fn into_output(self) -> SelectOutput {
+        SelectOutput {
+            policy: self.policy,
+            candidates: self.cand,
+            lanes: self.lanes.len(),
+            rounds: self.rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder_qr;
+    use crate::scan::compressed::{compress_party, flatten_for_sum, unflatten_sum};
+    use crate::scan::{combine_base, CombineOptions, RFactorMethod};
+    use crate::util::rng::Rng;
+
+    /// Test data with two planted effects on trait 0 and a different one
+    /// on trait 1 (when T > 1) so stepwise has a deterministic story.
+    fn data(n: usize, k: usize, m: usize, t: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(n, m, &mut rng);
+        let mut ys = Matrix::randn(n, t, &mut rng);
+        for i in 0..n {
+            ys[(i, 0)] += 0.5 * x[(i, 0)] + 0.3 * x[(i, 2)];
+            if t > 1 {
+                ys[(i, 1)] += 0.6 * x[(i, 1)];
+            }
+        }
+        (ys, c, x)
+    }
+
+    fn hstack_col(a: &Matrix, col: Vec<f64>) -> Matrix {
+        Matrix::vstack(&[&a.transpose(), &Matrix::from_col(col).transpose()]).transpose()
+    }
+
+    /// Brute-force forward stepwise on the raw data, same scoring rule:
+    /// per round, min-p over (traits, candidates) with ties to the
+    /// earlier trait then lower variant index; stop at `p > alpha`.
+    fn oracle_stepwise(
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        traits: &[usize],
+        cand: &[usize],
+        k_max: usize,
+        alpha: f64,
+    ) -> Vec<(usize, usize, f64, f64, f64)> {
+        let n = ys.rows;
+        let xs = x.gather_cols(cand);
+        let xtx: Vec<f64> = (0..xs.cols)
+            .map(|j| xs.col(j).iter().map(|v| v * v).sum())
+            .collect();
+        let mut basis = c.clone();
+        let mut chosen_slots: Vec<usize> = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..k_max {
+            let f = householder_qr(&basis);
+            let qt_x = f.q.t_matmul(&xs);
+            let mut best: Option<(usize, usize, f64, f64, f64)> = None;
+            for &tt in traits {
+                let y = ys.col(tt);
+                let yty: f64 = y.iter().map(|v| v * v).sum();
+                let assoc = crate::stats::scan_stats_from_projected_parts(
+                    n,
+                    basis.cols,
+                    yty,
+                    &xs.t_matvec(&y),
+                    &xtx,
+                    &f.q.t_matvec(&y),
+                    &qt_x,
+                );
+                for slot in 0..xs.cols {
+                    if chosen_slots.contains(&slot) {
+                        continue;
+                    }
+                    let p = assoc.p[slot];
+                    if !p.is_finite() || p > alpha {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => p < b.4,
+                    };
+                    if better {
+                        best = Some((cand[slot], slot, assoc.beta[slot], assoc.se[slot], p));
+                    }
+                }
+            }
+            let Some(b) = best else { break };
+            chosen_slots.push(b.1);
+            basis = hstack_col(&basis, x.col(b.0));
+            out.push(b);
+        }
+        out
+    }
+
+    fn aggregate_of(ys: &Matrix, c: &Matrix, x: &Matrix) -> crate::scan::AggregateSums {
+        let cp = compress_party(ys, c, x, x.cols.max(1), Some(1));
+        let (layout, flat) = flatten_for_sum(&cp);
+        unflatten_sum(layout, &flat).unwrap()
+    }
+
+    /// Drive a SelectState exactly as the leader does, feeding it exact
+    /// plaintext sums and cross-products.
+    fn run_select(
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        cand: Vec<usize>,
+        policy: SelectPolicy,
+        alpha: f64,
+        k_max: usize,
+    ) -> SelectOutput {
+        let agg = aggregate_of(ys, c, x);
+        let cx = combine_base(
+            &agg.base(),
+            None,
+            CombineOptions { r_method: RFactorMethod::Cholesky },
+        )
+        .unwrap();
+        let xs = x.gather_cols(&cand);
+        let sub = compress_party(ys, c, &xs, xs.cols.max(1), Some(1));
+        let sums = crate::scan::ShardSums {
+            xty: sub.xty.clone(),
+            xtx: sub.xtx.clone(),
+            ctx: sub.ctx.clone(),
+        };
+        let mut st = SelectState::new(&cx, cand, &sums, policy, alpha).unwrap();
+        for _ in 0..k_max {
+            let picks = st.propose();
+            if picks.iter().all(|p| p.is_none()) {
+                break;
+            }
+            let mut flat = Vec::new();
+            for p in picks.iter().flatten() {
+                flat.extend(cross_products(x, p.variant, &xs));
+            }
+            st.fold(&picks, &flat).unwrap();
+        }
+        st.into_output()
+    }
+
+    #[test]
+    fn select_matches_bruteforce_oracle() {
+        let (ys, c, x) = data(220, 3, 12, 1, 400);
+        let cand: Vec<usize> = (0..12).collect();
+        let got = run_select(&ys, &c, &x, cand.clone(), SelectPolicy::Union, 0.05, 3);
+        let want = oracle_stepwise(&ys, &c, &x, &[0], &cand, 3, 0.05);
+        assert!(!want.is_empty(), "oracle selected nothing");
+        assert_eq!(got.rounds.len(), want.len());
+        for (r, w) in got.rounds.iter().zip(&want) {
+            let p = r.picks[0].as_ref().unwrap();
+            assert_eq!(p.variant, w.0, "round {}", r.round);
+            assert!((p.beta - w.2).abs() < 1e-8 * w.2.abs().max(1.0), "beta");
+            assert!((p.se - w.3).abs() < 1e-8 * w.3.abs().max(1.0), "se");
+            assert!((p.p - w.4).abs() < 1e-6 * w.4.max(1e-30), "p");
+        }
+        assert_eq!(got.selected(0), want.iter().map(|w| w.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_trait_lanes_match_independent_single_trait_runs() {
+        let (ys, c, x) = data(200, 3, 10, 2, 401);
+        let cand: Vec<usize> = (0..10).collect();
+        let joint = run_select(&ys, &c, &x, cand.clone(), SelectPolicy::PerTrait, 0.1, 2);
+        assert_eq!(joint.lanes(), 2);
+        for tt in 0..2 {
+            let solo_ys = Matrix::from_col(ys.col(tt));
+            let solo =
+                run_select(&solo_ys, &c, &x, cand.clone(), SelectPolicy::Union, 0.1, 2);
+            assert_eq!(joint.selected(tt), solo.selected(0), "trait {tt}");
+            for (jr, sr) in joint.rounds.iter().zip(&solo.rounds) {
+                match (&jr.picks[tt], &sr.picks[0]) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.variant, b.variant);
+                        assert_eq!(a.beta.to_bits(), b.beta.to_bits(), "beta bits");
+                        assert_eq!(a.p.to_bits(), b.p.to_bits(), "p bits");
+                    }
+                    (None, None) => {}
+                    other => panic!("lane/solo divergence: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn union_policy_promotes_across_traits() {
+        let (ys, c, x) = data(260, 3, 8, 2, 402);
+        let cand: Vec<usize> = (0..8).collect();
+        let got = run_select(&ys, &c, &x, cand, SelectPolicy::Union, 0.05, 3);
+        assert_eq!(got.lanes(), 1);
+        let sel = got.selected(0);
+        assert!(!sel.is_empty());
+        // the planted effects live on variants 0/2 (trait 0) and 1
+        // (trait 1); the union lane should surface a mix
+        for v in &sel {
+            assert!([0usize, 1, 2].contains(v), "unexpected selection {v}");
+        }
+        let traits: BTreeSet<usize> = got
+            .rounds
+            .iter()
+            .filter_map(|r| r.picks[0].as_ref().map(|p| p.trait_idx))
+            .collect();
+        assert!(traits.len() > 1, "expected picks from more than one trait: {traits:?}");
+    }
+
+    #[test]
+    fn stop_rule_and_exhaustion() {
+        let (ys, c, x) = data(150, 3, 5, 1, 403);
+        // impossible threshold → nothing selected, lane marked done
+        let got = run_select(&ys, &c, &x, (0..5).collect(), SelectPolicy::Union, 1e-300, 4);
+        assert!(got.rounds.is_empty());
+        // permissive threshold → selection exhausts the shortlist
+        let got = run_select(&ys, &c, &x, (0..3).collect(), SelectPolicy::Union, 0.9999, 10);
+        assert!(got.rounds.len() <= 3);
+        let sel = got.selected(0);
+        let uniq: BTreeSet<usize> = sel.iter().copied().collect();
+        assert_eq!(uniq.len(), sel.len(), "no variant promoted twice");
+    }
+
+    #[test]
+    fn fold_rejects_inconsistent_cross_products() {
+        let (ys, c, x) = data(120, 3, 6, 1, 404);
+        let cand: Vec<usize> = (0..6).collect();
+        let agg = aggregate_of(&ys, &c, &x);
+        let cx = combine_base(&agg.base(), None, CombineOptions::default()).unwrap();
+        let sums = agg.shard_sums(0, 6);
+        let mut st =
+            SelectState::new(&cx, cand, &sums, SelectPolicy::Union, 0.5).unwrap();
+        let picks = st.propose();
+        assert!(picks[0].is_some());
+        // wrong length
+        assert!(st.fold(&picks, &[0.0; 3]).is_err());
+        // self cross-product that contradicts the cached X·X
+        let mut flat = cross_products(&x, picks[0].as_ref().unwrap().variant, &x);
+        flat[picks[0].as_ref().unwrap().slot] += 1.0;
+        assert!(st.fold(&picks, &flat).is_err());
+    }
+
+    #[test]
+    fn choose_candidates_ranks_and_unions() {
+        let (ys, c, x) = data(180, 3, 9, 2, 405);
+        let agg = aggregate_of(&ys, &c, &x);
+        let out = crate::scan::combine_compressed(&agg, None, CombineOptions::default())
+            .unwrap();
+        let cand = choose_candidates(&out, 2);
+        // strictly increasing, bounded by 2 per trait
+        for w in cand.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(!cand.is_empty() && cand.len() <= 4);
+        // the planted top hits are shortlisted
+        assert!(cand.contains(&0), "trait-0 top hit missing from {cand:?}");
+        assert!(cand.contains(&1), "trait-1 top hit missing from {cand:?}");
+        // cap ≥ M keeps every finite-p variant
+        assert_eq!(choose_candidates(&out, 9).len(), 9);
+    }
+}

@@ -1,0 +1,232 @@
+//! Property-style codec fuzzing: randomized `WireMessage`s (every
+//! variant, including the SELECT frames and degenerate empty shapes)
+//! must (a) round-trip the binary codec bit-exactly, (b) agree
+//! semantically between the binary and JSON-debug codecs, and (c) fail
+//! *cleanly* — an `Err`, never a panic — on truncated or bit-flipped
+//! frames.
+
+use dash::coordinator::messages::*;
+use dash::linalg::Matrix;
+use dash::net::{Codec, WireMessage};
+use dash::util::rng::Rng;
+
+fn rand_u64s(rng: &mut Rng, max: usize) -> Vec<u64> {
+    let n = (rng.next_u64() as usize) % (max + 1);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// Arbitrary f64 bit patterns with NaNs canonicalized: the JSON-debug
+/// codec is lossless for every value Rust can *format* distinctly
+/// (±0.0, subnormals, infinities, shortest-round-trip decimals); NaN
+/// payload bits have no textual form, so all NaNs print as `NaN`.
+fn rand_f64s(rng: &mut Rng, max: usize) -> Vec<f64> {
+    let n = (rng.next_u64() as usize) % (max + 1);
+    (0..n)
+        .map(|_| {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_nan() {
+                f64::NAN
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+fn rand_f64(rng: &mut Rng) -> f64 {
+    let v = f64::from_bits(rng.next_u64());
+    if v.is_nan() {
+        f64::NAN
+    } else {
+        v
+    }
+}
+
+/// Round-trip + truncation + corruption battery for one message.
+fn check<M: WireMessage>(m: &M, rng: &mut Rng) {
+    // binary round-trip, compared by re-encoding (bit-exact even for
+    // messages whose f64s break PartialEq)
+    let f = m.to_frame();
+    let back = M::from_frame(&f).expect("binary decode of a valid frame");
+    assert_eq!(back.to_frame(), f, "binary re-encode mismatch");
+
+    // binary ↔ JSON-debug semantic equality
+    let js = Codec::JsonDebug.encode(m);
+    let jback: M = Codec::JsonDebug.decode(&js).expect("json decode of a valid frame");
+    assert_eq!(jback.to_frame(), f, "json↔binary semantic mismatch");
+
+    // strict truncation ⇒ clean Err (length prefixes inside the payload
+    // are unchanged, so some read must run off the end)
+    if !f.payload.is_empty() {
+        for _ in 0..4 {
+            let cut = (rng.next_u64() as usize) % f.payload.len();
+            let mut t = f.clone();
+            t.payload.truncate(cut);
+            assert!(M::from_frame(&t).is_err(), "truncated frame decoded");
+        }
+        // bit flips ⇒ no panic (Ok or Err both fine: a flipped f64 is
+        // still a valid f64, a flipped length prefix must error)
+        for _ in 0..8 {
+            let mut cbin = f.clone();
+            let i = (rng.next_u64() as usize) % cbin.payload.len();
+            cbin.payload[i] ^= 1 << (rng.next_u64() % 8);
+            let _ = M::from_frame(&cbin);
+        }
+    }
+    // corrupted JSON text ⇒ no panic
+    if !js.payload.is_empty() {
+        for _ in 0..4 {
+            let mut cjs = js.clone();
+            let i = (rng.next_u64() as usize) % cjs.payload.len();
+            cjs.payload[i] ^= 1 << (rng.next_u64() % 8);
+            let _ = Codec::JsonDebug.decode::<M>(&cjs);
+        }
+    }
+}
+
+#[test]
+fn fuzz_all_wire_messages() {
+    let mut rng = Rng::new(0xC0DEC);
+    for iter in 0..150u64 {
+        let r = &mut rng;
+
+        check(
+            &Setup {
+                party_index: r.next_u64(),
+                parties: r.next_u64(),
+                backend: r.next_u64() % 4,
+                shamir_threshold: r.next_u64(),
+                frac_bits: r.next_u64() % 64,
+                k: r.next_u64(),
+                m: r.next_u64(),
+                t: r.next_u64(),
+                block_m: r.next_u64(),
+                shard_m: r.next_u64(),
+                select_k: r.next_u64(),
+                seeds: rand_u64s(r, 8), // incl. the 0-seed degenerate
+            },
+            r,
+        );
+        check(&Compress, r);
+        check(&Shutdown, r);
+
+        // PlainBase: square R of side 0..=3 (side 0 = K=0 degenerate)
+        let k = (r.next_u64() as usize) % 4;
+        let r_data: Vec<f64> = (0..k * k).map(|_| rand_f64(r)).collect();
+        check(
+            &PlainBase { flat: rand_f64s(r, 12), r: Matrix::from_vec(k, k, r_data) },
+            r,
+        );
+        check(&MaskedBase { enc: rand_u64s(r, 16) }, r);
+        check(&PlainShard { shard: r.next_u64(), flat: rand_f64s(r, 16) }, r);
+        check(&MaskedShard { shard: r.next_u64(), enc: rand_u64s(r, 16) }, r);
+
+        let shares: Vec<Vec<u64>> =
+            (0..(r.next_u64() as usize) % 4).map(|_| rand_u64s(r, 6)).collect();
+        check(&ShamirOut { round: r.next_u64(), shares: shares.clone() }, r);
+        check(&ShamirIn { round: r.next_u64(), shares }, r);
+        check(&ShamirSum { round: r.next_u64(), sum: rand_u64s(r, 16) }, r);
+
+        // ShardResult: trait-major, width possibly 0 (the T-adjacent
+        // degenerate shapes)
+        let traits = 1 + (r.next_u64() % 3);
+        let w = (r.next_u64() as usize) % 5;
+        let len = w * traits as usize;
+        let beta: Vec<f64> = (0..len).map(|_| rand_f64(r)).collect();
+        let se: Vec<f64> = (0..len).map(|_| rand_f64(r)).collect();
+        check(&ShardResult { shard: r.next_u64(), j0: r.next_u64(), traits, beta, se }, r);
+
+        // SELECT frames: strictly-increasing candidates (possibly empty)
+        let mut cand = rand_u64s(r, 10);
+        cand.sort_unstable();
+        cand.dedup();
+        check(
+            &SelectSetup {
+                k: r.next_u64(),
+                policy: r.next_u64() % 2,
+                lanes: 1 + r.next_u64() % 5,
+                p_enter: rand_f64(r),
+                candidates: cand,
+            },
+            r,
+        );
+        // Promote: ≥ 1 active lane
+        let mut variants = rand_u64s(r, 4);
+        variants.push(r.next_u64() % 1000); // guaranteed active (≠ MAX)
+        check(&Promote { round: 1 + r.next_u64() % 100, variants }, r);
+        check(&SelectDone { rounds: r.next_u64() }, r);
+        let lanes = (r.next_u64() as usize) % 4; // 0-lane degenerate incl.
+        let sr = SelectResult {
+            round: r.next_u64(),
+            variants: (0..lanes).map(|_| r.next_u64()).collect(),
+            traits: (0..lanes).map(|_| r.next_u64()).collect(),
+            beta: (0..lanes).map(|_| rand_f64(r)).collect(),
+            se: (0..lanes).map(|_| rand_f64(r)).collect(),
+            p: (0..lanes).map(|_| rand_f64(r)).collect(),
+        };
+        check(&sr, r);
+
+        let msg: String = match iter % 3 {
+            0 => String::new(),
+            1 => "plain ascii error".to_string(),
+            _ => "üñïçødé → boom 💥".to_string(),
+        };
+        check(&ErrorMsg { msg }, r);
+    }
+}
+
+/// Cross-tag confusion: every frame decoded as every *other* message
+/// type must error cleanly on the tag check.
+#[test]
+fn fuzz_wrong_tag_always_clean_error() {
+    let mut rng = Rng::new(0x7A6);
+    let frames = vec![
+        Setup {
+            party_index: 0,
+            parties: 2,
+            backend: 1,
+            shamir_threshold: 0,
+            frac_bits: 24,
+            k: 3,
+            m: 5,
+            t: 1,
+            block_m: 4,
+            shard_m: 0,
+            select_k: 2,
+            seeds: vec![1, 2],
+        }
+        .to_frame(),
+        Compress.to_frame(),
+        PlainShard { shard: 0, flat: vec![1.0] }.to_frame(),
+        SelectSetup { k: 1, policy: 0, lanes: 1, p_enter: 0.5, candidates: vec![3] }
+            .to_frame(),
+        Promote { round: 1, variants: vec![3] }.to_frame(),
+        SelectDone { rounds: 1 }.to_frame(),
+        error_frame("x"),
+    ];
+    for f in &frames {
+        // decode under a deliberately wrong type for each
+        if f.tag != TAG_SETUP {
+            assert!(Setup::from_frame(f).is_err());
+        }
+        if f.tag != TAG_PROMOTE {
+            assert!(Promote::from_frame(f).is_err());
+        }
+        if f.tag != TAG_SELECT_RESULT {
+            assert!(SelectResult::from_frame(f).is_err());
+        }
+        if f.tag != TAG_MASKED_SHARD {
+            assert!(MaskedShard::from_frame(f).is_err());
+        }
+    }
+    // and a randomized tag sweep over one payload must never panic
+    let base = PlainShard { shard: 7, flat: vec![0.5, -0.5] }.to_frame();
+    for _ in 0..64 {
+        let mut f = base.clone();
+        f.tag = (rng.next_u64() % 32) as u32;
+        let _ = Setup::from_frame(&f);
+        let _ = ShardResult::from_frame(&f);
+        let _ = SelectSetup::from_frame(&f);
+        let _ = ErrorMsg::from_frame(&f);
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-point precision envelope (the contract documented in
+//! `mpc/fixed.rs`): sweep joint trait/genotype magnitudes across
+//! decades and pin the masked and Shamir backends to the plaintext scan
+//! within the documented tolerance — plus codec-level error bounds per
+//! decade. Nothing else in the suite stresses the encoding range; this
+//! is what makes `frac_bits = 24` a contract instead of a hope.
+
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{Cohort, CohortSpec, PartyData, Truth};
+use dash::linalg::Matrix;
+use dash::mpc::fixed::FixedCodec;
+use dash::mpc::Backend;
+use dash::scan::ScanConfig;
+use dash::util::rng::Rng;
+
+/// Documented envelope: β̂/σ̂ agreement of the secure backends with
+/// plaintext, relative with a small absolute floor (see mpc/fixed.rs).
+const TOL_REL: f64 = 1e-3;
+const TOL_ABS: f64 = 0.05;
+
+/// Two-party cohort whose traits and genotypes are jointly scaled by
+/// `s`: β̂, σ̂, t, p are scale-invariant, while every secure-summed
+/// statistic scales by `s²` — exactly the fixed-point stressor.
+fn scaled_cohort(scale: f64, m: usize, seed: u64) -> Cohort {
+    let mut spec = CohortSpec::default_small();
+    spec.party_sizes = vec![150, 130];
+    spec.party_admixture = vec![0.5; 2];
+    spec.m_variants = m;
+    spec.n_traits = 1;
+    spec.n_causal = 0;
+    spec.n_pcs = 1; // K = 4
+    let k = spec.k_covariates();
+    let mut rng = Rng::new(seed);
+    let mut parties = Vec::new();
+    for &np in &spec.party_sizes {
+        let mut c = Matrix::randn(np, k, &mut rng);
+        for i in 0..np {
+            c[(i, 0)] = 1.0;
+        }
+        let mut x = Matrix::randn(np, m, &mut rng);
+        let mut ys = Matrix::randn(np, 1, &mut rng);
+        for i in 0..np {
+            ys[(i, 0)] += 0.4 * x[(i, 0)]; // planted effect, scale-free β
+        }
+        // joint scaling: y ← s·y, x ← s·x
+        for v in ys.data.iter_mut() {
+            *v *= scale;
+        }
+        for v in x.data.iter_mut() {
+            *v *= scale;
+        }
+        parties.push(PartyData { ys, c, x });
+    }
+    Cohort {
+        spec,
+        parties,
+        truth: Truth { causal_idx: vec![0], causal_beta: Matrix::zeros(1, 0), freqs: vec![] },
+    }
+}
+
+fn close(a: f64, b: f64, what: &str, scale: f64, j: usize) {
+    assert!(
+        (a - b).abs() <= TOL_REL * b.abs().max(TOL_ABS),
+        "{what}[{j}] at scale {scale}: secure {a} vs plaintext {b}"
+    );
+}
+
+/// The envelope itself: five decades of joint magnitude, both secure
+/// backends vs plaintext, β̂/σ̂ within (TOL_REL, TOL_ABS) and the
+/// selected top hit identical.
+#[test]
+fn fixed_point_envelope_across_decades() {
+    for (di, &scale) in [0.03f64, 0.3, 1.0, 10.0, 100.0].iter().enumerate() {
+        let cohort = scaled_cohort(scale, 18, 950 + di as u64);
+        let cfg = |backend| ScanConfig {
+            backend,
+            shard_m: 6,
+            block_m: 8,
+            threads: Some(2),
+            ..Default::default()
+        };
+        let plain = run_multi_party_scan_t(
+            &cohort,
+            &cfg(Backend::Plaintext),
+            Transport::InProc,
+            70,
+        )
+        .unwrap();
+        for backend in [Backend::Masked, Backend::Shamir { threshold: 2 }] {
+            let res =
+                run_multi_party_scan_t(&cohort, &cfg(backend), Transport::InProc, 70).unwrap();
+            for j in 0..cohort.m() {
+                let (a, b) = (res.output.assoc[0].beta[j], plain.output.assoc[0].beta[j]);
+                if !b.is_finite() {
+                    continue;
+                }
+                close(a, b, "beta", scale, j);
+                close(res.output.assoc[0].se[j], plain.output.assoc[0].se[j], "se", scale, j);
+            }
+            // the planted hit survives the encoding at every decade
+            assert_eq!(
+                res.output.hits(1e-6).first(),
+                plain.output.hits(1e-6).first(),
+                "{backend:?} top hit at scale {scale}"
+            );
+        }
+    }
+}
+
+/// Codec-level decade sweep: per-element round-trip error obeys the
+/// 0.5/2^frac_bits bound at every magnitude the range check admits, and
+/// the sum homomorphism holds exactly in the ring.
+#[test]
+fn codec_error_bound_across_decades() {
+    let codec = FixedCodec::default();
+    let mut rng = Rng::new(951);
+    let mut mag = 1e-6f64;
+    while mag <= 1e7 {
+        if mag < codec.max_abs() {
+            for _ in 0..500 {
+                let v = rng.normal_ms(0.0, mag);
+                if v.abs() > codec.max_abs() {
+                    continue;
+                }
+                let err = (codec.decode(codec.encode(v).unwrap()) - v).abs();
+                assert!(
+                    err <= 0.5 / codec.scale() + 1e-15,
+                    "mag {mag}: v={v} err={err:e}"
+                );
+            }
+            // homomorphism: decode(Σ encode) == Σ rounded, exactly
+            let vs: Vec<f64> = (0..6).map(|_| rng.normal_ms(0.0, mag)).collect();
+            if vs.iter().all(|v| v.abs() <= codec.max_abs()) {
+                let ring = vs
+                    .iter()
+                    .map(|&v| codec.encode(v).unwrap())
+                    .fold(0u64, |a, b| a.wrapping_add(b));
+                let want: f64 =
+                    vs.iter().map(|&v| (v * codec.scale()).round() / codec.scale()).sum();
+                assert!((codec.decode(ring) - want).abs() < 1e-9, "mag {mag}");
+            }
+        }
+        mag *= 10.0;
+    }
+    // past the admitted range: clean rejection, never silent wrap
+    assert!(codec.encode(codec.max_abs() * 1.01).is_err());
+    assert!(codec.encode(-codec.max_abs() * 1.01).is_err());
+}

@@ -1,0 +1,358 @@
+//! Integration: the SELECT phase (forward stepwise over cached
+//! compressed statistics) — oracle equality across all three MPC
+//! backends, per-trait-policy decomposition, the E9 communication bound
+//! (per-round SELECT traffic independent of M), and the
+//! duplicate-frame → protocol-ErrorMsg regression.
+
+use dash::coordinator::messages::{
+    error_frame, Compress, PlainBase, PlainShard, Setup, TAG_ERROR,
+};
+use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
+use dash::gwas::{pool_cohort, Cohort, CohortSpec, PartyData, Truth};
+use dash::linalg::{householder_qr, Matrix};
+use dash::mpc::Backend;
+use dash::net::{duplex_pair, ByteMeter, WireMessage};
+use dash::scan::{compress_party, ScanConfig, SelectPolicy, ShardPlan};
+use dash::stats::scan_stats_from_projected_parts;
+use dash::util::rng::Rng;
+
+/// Hand-built cohort with *planted, well-separated* effects so stepwise
+/// selection is deterministic across fixed-point backends. `effects` is
+/// `(trait, variant, beta)`.
+fn synth_cohort(
+    party_sizes: &[usize],
+    m: usize,
+    t: usize,
+    seed: u64,
+    effects: &[(usize, usize, f64)],
+) -> Cohort {
+    let mut spec = CohortSpec::default_small();
+    spec.party_sizes = party_sizes.to_vec();
+    spec.party_admixture = vec![0.5; party_sizes.len()];
+    spec.m_variants = m;
+    spec.n_traits = t;
+    spec.n_causal = 0;
+    spec.n_pcs = 1; // K = 4
+    let k = spec.k_covariates();
+    let mut rng = Rng::new(seed);
+    let mut parties = Vec::with_capacity(party_sizes.len());
+    for &np in party_sizes {
+        let mut c = Matrix::randn(np, k, &mut rng);
+        for i in 0..np {
+            c[(i, 0)] = 1.0;
+        }
+        let x = Matrix::randn(np, m, &mut rng);
+        let mut ys = Matrix::randn(np, t, &mut rng);
+        for &(tt, j, beta) in effects {
+            for i in 0..np {
+                ys[(i, tt)] += beta * x[(i, j)];
+            }
+        }
+        parties.push(PartyData { ys, c, x });
+    }
+    Cohort {
+        spec,
+        parties,
+        truth: Truth {
+            causal_idx: effects.iter().map(|e| e.1).collect(),
+            causal_beta: Matrix::zeros(t, 0),
+            freqs: vec![],
+        },
+    }
+}
+
+fn cfg(backend: Backend, m: usize, select_k: usize, alpha: f64) -> ScanConfig {
+    ScanConfig {
+        backend,
+        shard_m: 16,
+        block_m: 32,
+        threads: Some(2),
+        select_k,
+        select_alpha: alpha,
+        select_candidates: m, // unrestricted: shortlist = all finite-p variants
+        ..Default::default()
+    }
+}
+
+fn run(cohort: &Cohort, cfg: &ScanConfig, seed: u64) -> MultiPartyScanResult {
+    run_multi_party_scan_t(cohort, cfg, Transport::InProc, seed).unwrap()
+}
+
+/// Brute-force forward stepwise on the pooled raw data, same scoring
+/// rule as the protocol: per round, min entry p-value over (traits ×
+/// candidates), ties to the earlier trait then lower variant index;
+/// stop at `p > alpha`. Returns `(variant, trait, beta, se, p)`.
+fn oracle_stepwise(
+    pooled: &PartyData,
+    traits: &[usize],
+    cand: &[usize],
+    k_max: usize,
+    alpha: f64,
+) -> Vec<(usize, usize, f64, f64, f64)> {
+    let n = pooled.ys.rows;
+    let xs = pooled.x.gather_cols(cand);
+    let xtx: Vec<f64> = (0..xs.cols).map(|j| xs.col(j).iter().map(|v| v * v).sum()).collect();
+    let mut basis = pooled.c.clone();
+    let mut chosen: Vec<usize> = Vec::new();
+    let mut out = Vec::new();
+    for _ in 0..k_max {
+        let f = householder_qr(&basis);
+        let qt_x = f.q.t_matmul(&xs);
+        let mut best: Option<(usize, usize, f64, f64, f64)> = None;
+        for &tt in traits {
+            let y = pooled.ys.col(tt);
+            let yty: f64 = y.iter().map(|v| v * v).sum();
+            let assoc = scan_stats_from_projected_parts(
+                n,
+                basis.cols,
+                yty,
+                &xs.t_matvec(&y),
+                &xtx,
+                &f.q.t_matvec(&y),
+                &qt_x,
+            );
+            for slot in 0..xs.cols {
+                if chosen.contains(&slot) {
+                    continue;
+                }
+                let p = assoc.p[slot];
+                if !p.is_finite() || p > alpha {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => p < b.4,
+                };
+                if better {
+                    best = Some((cand[slot], tt, assoc.beta[slot], assoc.se[slot], p));
+                }
+            }
+        }
+        let Some(b) = best else { break };
+        chosen.push(cand.iter().position(|&c| c == b.0).unwrap());
+        basis = Matrix::vstack(&[
+            &basis.transpose(),
+            &Matrix::from_col(pooled.x.col(b.0)).transpose(),
+        ])
+        .transpose();
+        out.push(b);
+    }
+    out
+}
+
+/// Acceptance: the stepwise selection sequence is identical across all
+/// three backends and matches the plaintext pooled-data oracle for
+/// k ∈ {1, 2, 3}; plaintext entry statistics match the oracle tightly,
+/// secure backends within fixed-point tolerance.
+#[test]
+fn selection_equals_oracle_all_backends() {
+    let cohort = synth_cohort(
+        &[110, 90, 100],
+        24,
+        1,
+        900,
+        &[(0, 3, 0.7), (0, 11, 0.45), (0, 17, 0.3)],
+    );
+    let pooled = pool_cohort(&cohort);
+    for k in 1..=3usize {
+        let plain = run(&cohort, &cfg(Backend::Plaintext, 24, k, 1e-3), 60);
+        let sel = plain.select.as_ref().expect("plaintext select output");
+        let want = oracle_stepwise(&pooled, &[0], &sel.candidates, k, 1e-3);
+        assert_eq!(want.len(), k, "oracle should fill all {k} rounds");
+        assert_eq!(
+            sel.selected(0),
+            want.iter().map(|w| w.0).collect::<Vec<_>>(),
+            "plaintext selection vs oracle, k={k}"
+        );
+        for (round, w) in sel.rounds.iter().zip(&want) {
+            let p = round.picks[0].as_ref().unwrap();
+            assert!((p.beta - w.2).abs() < 1e-6 * w.2.abs().max(1.0), "beta k={k}");
+            assert!((p.se - w.3).abs() < 1e-6 * w.3.abs().max(1.0), "se k={k}");
+        }
+
+        for backend in [Backend::Masked, Backend::Shamir { threshold: 2 }] {
+            let res = run(&cohort, &cfg(backend, 24, k, 1e-3), 60);
+            let s = res.select.as_ref().expect("secure select output");
+            assert_eq!(
+                s.selected(0),
+                sel.selected(0),
+                "{backend:?} selection sequence, k={k}"
+            );
+            for (a, b) in s.rounds.iter().zip(&sel.rounds) {
+                let (pa, pb) = (a.picks[0].as_ref().unwrap(), b.picks[0].as_ref().unwrap());
+                assert!(
+                    (pa.beta - pb.beta).abs() < 1e-3 * pb.beta.abs().max(1.0),
+                    "{backend:?} entry beta"
+                );
+            }
+        }
+    }
+}
+
+/// Per-trait policy: a T = 2 session's lane `t` reproduces an
+/// independent T = 1 session of that trait, bit-for-bit on the released
+/// entry statistics.
+#[test]
+fn per_trait_policy_matches_independent_runs() {
+    let effects = [(0usize, 2usize, 0.6f64), (0, 7, 0.35), (1, 5, 0.55), (1, 9, 0.4)];
+    let joint = synth_cohort(&[120, 100], 16, 2, 901, &effects);
+    for backend in [Backend::Plaintext, Backend::Masked] {
+        let mut c = cfg(backend, 16, 2, 1e-2);
+        c.select_policy = SelectPolicy::PerTrait;
+        let res = run(&joint, &c, 61);
+        let sel = res.select.as_ref().expect("select output");
+        assert_eq!(sel.lanes(), 2);
+
+        for tt in 0..2usize {
+            // same parties, single trait column
+            let mut solo = joint.clone();
+            solo.spec.n_traits = 1;
+            for p in &mut solo.parties {
+                p.ys = Matrix::from_col(p.ys.col(tt));
+            }
+            let solo_res = run(&solo, &cfg(backend, 16, 2, 1e-2), 61);
+            let solo_sel = solo_res.select.as_ref().expect("solo select output");
+            assert_eq!(sel.selected(tt), solo_sel.selected(0), "{backend:?} trait {tt}");
+            for (a, b) in sel.rounds.iter().zip(&solo_sel.rounds) {
+                match (&a.picks[tt], &b.picks[0]) {
+                    (Some(pa), Some(pb)) => {
+                        assert_eq!(pa.variant, pb.variant);
+                        assert_eq!(pa.beta.to_bits(), pb.beta.to_bits(), "{backend:?} beta");
+                        assert_eq!(pa.p.to_bits(), pb.p.to_bits(), "{backend:?} p");
+                    }
+                    (None, None) => {}
+                    other => panic!("{backend:?} lane/solo divergence: {other:?}"),
+                }
+            }
+        }
+    }
+}
+
+/// E9 acceptance: per-SELECT-round wire bytes depend on (K, T, H,
+/// lanes), **not** on M — byte-identical rounds at 4× the variant count
+/// — and a SELECT round is ≫ cheaper than a scan contribution round.
+#[test]
+fn select_round_bytes_independent_of_m() {
+    let mk = |m: usize| {
+        let cohort =
+            synth_cohort(&[90, 80, 70], m, 1, 902, &[(0, 1, 0.6), (0, 5, 0.4)]);
+        let mut c = cfg(Backend::Masked, m, 2, 0.9);
+        c.select_candidates = 8; // bounded shortlist H = 8
+        c.shard_m = 64;
+        run(&cohort, &c, 62)
+    };
+    let small = mk(120);
+    let large = mk(480);
+    assert_eq!(small.metrics.select_rounds, 2);
+    assert_eq!(large.metrics.select_rounds, 2);
+    assert_eq!(small.select.as_ref().unwrap().candidates.len(), 8);
+    assert_eq!(large.select.as_ref().unwrap().candidates.len(), 8);
+    // identical per-round SELECT bytes at 4× M
+    assert!(small.metrics.bytes_max_select_round > 0);
+    assert_eq!(
+        small.metrics.bytes_max_select_round, large.metrics.bytes_max_select_round,
+        "per-round SELECT bytes must not scale with M"
+    );
+    // and each SELECT round is far below a scan shard round
+    assert!(
+        small.metrics.bytes_max_select_round * 4 < small.metrics.bytes_max_round,
+        "select round {} vs scan round {}",
+        small.metrics.bytes_max_select_round,
+        small.metrics.bytes_max_round
+    );
+    // the whole SELECT phase is far below the scan's total traffic
+    assert!(large.metrics.bytes_select * 4 < large.metrics.bytes_total);
+}
+
+/// Selection runs unchanged over TCP with identical bytes and picks.
+#[test]
+fn select_tcp_matches_inproc() {
+    let cohort = synth_cohort(&[80, 70], 20, 1, 903, &[(0, 4, 0.6), (0, 13, 0.4)]);
+    let c = cfg(Backend::Masked, 20, 2, 1e-2);
+    let a = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 63).unwrap();
+    let mut last_err = String::new();
+    for _attempt in 0..2 {
+        let b = run_multi_party_scan_t(&cohort, &c, Transport::Tcp, 63).unwrap();
+        if b.metrics.bytes_total == a.metrics.bytes_total {
+            assert_eq!(
+                a.select.as_ref().unwrap().selected(0),
+                b.select.as_ref().unwrap().selected(0)
+            );
+            assert_eq!(
+                a.metrics.bytes_max_select_round,
+                b.metrics.bytes_max_select_round
+            );
+            return;
+        }
+        last_err =
+            format!("bytes {} vs {}", b.metrics.bytes_total, a.metrics.bytes_total);
+    }
+    panic!("tcp/in-proc select mismatch after retry: {last_err}");
+}
+
+/// A threshold no variant passes → zero rounds, empty-but-present
+/// select output, and the session still completes cleanly.
+#[test]
+fn select_stop_rule_yields_zero_rounds() {
+    let cohort = synth_cohort(&[100, 90], 12, 1, 904, &[(0, 2, 0.5)]);
+    let res = run(&cohort, &cfg(Backend::Masked, 12, 3, 1e-300), 64);
+    assert_eq!(res.metrics.select_rounds, 0);
+    let sel = res.select.as_ref().expect("shortlist existed");
+    assert!(sel.rounds.is_empty());
+    assert!(res.output.min_p_value().is_some());
+}
+
+/// Regression (duplicate-frame handling): a party re-delivering a shard
+/// frame must make the leader fail the session with a protocol
+/// `ErrorMsg` broadcast — not a panic, not a silent double-count. We
+/// play the (single) party by hand over an in-proc link.
+#[test]
+fn duplicate_shard_frame_yields_protocol_error() {
+    let cohort = synth_cohort(&[80], 8, 1, 905, &[(0, 1, 0.5)]);
+    let data = cohort.parties[0].clone();
+    let c = ScanConfig {
+        backend: Backend::Plaintext,
+        shard_m: 4, // 2 shards
+        block_m: 8,
+        threads: Some(1),
+        ..Default::default()
+    };
+    let meter = ByteMeter::new();
+    let (leader_ep, party_ep) = duplex_pair(meter);
+    let leader_eps = vec![leader_ep];
+
+    let handle = std::thread::spawn(move || {
+        let leader = dash::coordinator::Leader {
+            endpoints: &leader_eps,
+            cfg: &c,
+            k: 4,
+            m: 8,
+            t: 1,
+        };
+        leader.run(99)
+    });
+
+    // Play the party: consume SETUP + COMPRESS, send a valid base
+    // round, then deliver shard 0 twice.
+    let setup = Setup::from_frame(&party_ep.recv().unwrap()).unwrap();
+    assert_eq!(setup.m, 8);
+    Compress::from_frame(&party_ep.recv().unwrap()).unwrap();
+    let cp = compress_party(&data.ys, &data.c, &data.x, 8, Some(1));
+    party_ep
+        .send(&PlainBase { flat: cp.base().flatten(), r: cp.r.clone() }.to_frame())
+        .unwrap();
+    let plan = ShardPlan::new(8, 4);
+    let r0 = plan.range(0);
+    let flat0 = cp.variant_block(r0.j0, r0.j1).flatten();
+    party_ep.send(&PlainShard { shard: 0, flat: flat0.clone() }.to_frame()).unwrap();
+    // re-delivery: the leader expects shard 1 next
+    party_ep.send(&PlainShard { shard: 0, flat: flat0 }.to_frame()).unwrap();
+
+    let err = handle.join().unwrap().unwrap_err();
+    assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+    // the leader's failure reaches the party as a protocol ErrorMsg
+    let f = party_ep.recv().unwrap();
+    assert_eq!(f.tag, TAG_ERROR, "expected ERROR frame, got tag {}", f.tag);
+    // and error frames built party-side still round-trip (sanity)
+    assert_eq!(f.tag, error_frame("x").tag);
+}
