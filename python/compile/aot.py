@@ -25,7 +25,11 @@ jax.config.update("jax_enable_x64", True)  # statistics in f64, matching L3
 import jax.numpy as jnp  # noqa: E402
 from jax._src.lib import xla_client as xc  # noqa: E402
 
-from .model import ENTRY_FNS, make_specs  # noqa: E402
+from .model import entry_fn_for, make_specs  # noqa: E402
+
+# Default ShapePolicy ladders, mirrored from rust/src/runtime/kernels.rs.
+DEFAULT_WIDTHS = (64, 256, 1024, 4096)
+DEFAULT_TRAIT_BATCHES = (1, 4, 16, 64)
 
 
 def to_hlo_text(lowered) -> str:
@@ -37,12 +41,15 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_all(n_block: int, k_pad: int, m_block: int):
-    """Lower every entry point; returns {name: hlo_text}."""
-    specs = make_specs(n_block, k_pad, m_block, dtype=jnp.float64)
+def lower_all(n_block: int, k_pad: int, m_block: int,
+              widths=DEFAULT_WIDTHS, trait_batches=DEFAULT_TRAIT_BATCHES):
+    """Lower every entry point (legacy trio + parameterized suite);
+    returns {name: hlo_text}."""
+    specs = make_specs(n_block, k_pad, m_block, dtype=jnp.float64,
+                       widths=widths, trait_batches=trait_batches)
     out = {}
-    for name, fn in ENTRY_FNS.items():
-        lowered = jax.jit(fn).lower(*specs[name])
+    for name, spec in specs.items():
+        lowered = jax.jit(entry_fn_for(name)).lower(*spec)
         out[name] = to_hlo_text(lowered)
     return out
 
@@ -53,10 +60,18 @@ def main() -> None:
     ap.add_argument("--n-block", type=int, default=512)
     ap.add_argument("--m-block", type=int, default=256)
     ap.add_argument("--k-pad", type=int, default=16)
+    ap.add_argument("--widths", default=",".join(map(str, DEFAULT_WIDTHS)),
+                    help="canonical shard-width ladder (CSV) for the suite")
+    ap.add_argument("--trait-batches",
+                    default=",".join(map(str, DEFAULT_TRAIT_BATCHES)),
+                    help="canonical trait-batch ladder (CSV) for the suite")
     args = ap.parse_args()
 
+    widths = tuple(int(w) for w in args.widths.split(","))
+    trait_batches = tuple(int(t) for t in args.trait_batches.split(","))
     os.makedirs(args.out, exist_ok=True)
-    texts = lower_all(args.n_block, args.k_pad, args.m_block)
+    texts = lower_all(args.n_block, args.k_pad, args.m_block,
+                      widths=widths, trait_batches=trait_batches)
 
     entries = {}
     for name, text in texts.items():
@@ -68,11 +83,13 @@ def main() -> None:
         print(f"wrote {path} ({len(text)} chars)")
 
     manifest = {
-        "version": 1,
+        "version": 2,
         "dtype": "f64",
         "n_block": args.n_block,
         "m_block": args.m_block,
         "k_pad": args.k_pad,
+        "widths": list(widths),
+        "trait_batches": list(trait_batches),
         "entries": entries,
     }
     mpath = os.path.join(args.out, "manifest.json")

@@ -74,10 +74,66 @@ def scan_stats(n, k, yty, xty, xtx, qty, qtx):
     return beta, se, tstat
 
 
-def make_specs(n_block, k_pad, m_block, dtype=jnp.float64):
-    """ShapeDtypeStructs for each AOT entry point."""
+def compress_xy_batched(ys, c):
+    """Trait-batched covariate-side entry (`compress_xy.t{T}`).
+
+    Args:
+      ys: (N_b, T) trait-column block.
+      c: (N_b, K) permanent covariates.
+
+    Returns additive partials: yty (T,), cty (K, T), ctc (K, K).
+    One Y-side pass covers every trait; the Rust runtime accumulates
+    across sample blocks (zero-padded trait lanes contribute zero and
+    are sliced away).
+    """
+    yty = jnp.sum(ys * ys, axis=0)
+    cty = c.T @ ys
+    ctc = c.T @ c
+    return yty, cty, ctc
+
+
+def compress_x_batched(ys, c, x):
+    """Shard-width / trait-batched variant-side entry
+    (`compress_x.w{W}.t{T}`).
+
+    Args:
+      ys: (N_b, T) trait-column block.
+      c: (N_b, K) permanent covariates.
+      x: (N_b, W) one variant shard (canonical width, zero-padded tail).
+
+    Returns additive partials: xty (W, T), xtx (W,), ctx (K, W) — one
+    X-side pass amortized across all T traits.
+    """
+    xty = x.T @ ys
+    xtx = jnp.sum(x * x, axis=0)
+    ctx = c.T @ x
+    return xty, xtx, ctx
+
+
+def select_gather(xj, xs):
+    """Gathered-columns SELECT entry (`select_gather.h{H}`): one promoted
+    column's cross-products against the H shortlisted columns.
+
+    Args:
+      xj: (N_b,) the promoted variant column.
+      xs: (N_b, H) gathered shortlist block (canonical width).
+
+    Returns (v,): v (H,) = xjᵀ X_S.
+    """
+    return (xs.T @ xj,)
+
+
+def make_specs(n_block, k_pad, m_block, dtype=jnp.float64,
+               widths=(), trait_batches=()):
+    """ShapeDtypeStructs for each AOT entry point.
+
+    The legacy fixed trio is always present; pass ``widths`` and
+    ``trait_batches`` (the ShapePolicy ladders) to add the parameterized
+    suite entries keyed ``compress_xy.t{T}`` / ``compress_x.w{W}.t{T}`` /
+    ``select_gather.h{H}``.
+    """
     f = lambda *shape: jax.ShapeDtypeStruct(shape, dtype)
-    return {
+    specs = {
         "compress_x": (f(n_block), f(n_block, k_pad), f(n_block, m_block)),
         "compress_yc": (f(n_block), f(n_block, k_pad)),
         "scan_stats": (
@@ -86,6 +142,15 @@ def make_specs(n_block, k_pad, m_block, dtype=jnp.float64):
             f(k_pad), f(k_pad, m_block),     # qty, qtx
         ),
     }
+    for t in trait_batches:
+        specs[f"compress_xy.t{t}"] = (f(n_block, t), f(n_block, k_pad))
+        for w in widths:
+            specs[f"compress_x.w{w}.t{t}"] = (
+                f(n_block, t), f(n_block, k_pad), f(n_block, w),
+            )
+    for w in widths:
+        specs[f"select_gather.h{w}"] = (f(n_block), f(n_block, w))
+    return specs
 
 
 ENTRY_FNS = {
@@ -93,3 +158,16 @@ ENTRY_FNS = {
     "compress_yc": compress_yc_only,
     "scan_stats": scan_stats,
 }
+
+
+def entry_fn_for(name):
+    """Entry function for a (possibly parameterized) entry name."""
+    if name in ENTRY_FNS:
+        return ENTRY_FNS[name]
+    if name.startswith("compress_xy.t"):
+        return compress_xy_batched
+    if name.startswith("compress_x.w"):
+        return compress_x_batched
+    if name.startswith("select_gather.h"):
+        return select_gather
+    raise KeyError(f"unknown entry {name!r}")

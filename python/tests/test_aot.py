@@ -23,8 +23,16 @@ N_B, K_PAD, M_B = 64, 8, 32  # small variant for fast tests
 
 
 def test_lower_all_produces_all_entries():
-    texts = lower_all(N_B, K_PAD, M_B)
-    assert set(texts) == set(ENTRY_FNS)
+    texts = lower_all(N_B, K_PAD, M_B, widths=(16,), trait_batches=(1, 2))
+    # legacy trio plus the parameterized suite for the given ladders
+    want = set(ENTRY_FNS) | {
+        "compress_xy.t1",
+        "compress_xy.t2",
+        "compress_x.w16.t1",
+        "compress_x.w16.t2",
+        "select_gather.h16",
+    }
+    assert set(texts) == want
     for name, text in texts.items():
         assert text.startswith("HloModule"), name
         assert "f64" in text, f"{name} must be lowered in f64"
@@ -35,7 +43,7 @@ def test_hlo_text_reparses():
     family the Rust side's HloModuleProto::from_text_file uses (which
     reassigns instruction ids; execution numerics are verified by the
     Rust integration tests against this module's live-JAX outputs)."""
-    texts = lower_all(N_B, K_PAD, M_B)
+    texts = lower_all(N_B, K_PAD, M_B, widths=(16,), trait_batches=(2,))
     for name, text in texts.items():
         module = xc._xla.hlo_module_from_text(text)
         reparsed = module.to_string()
@@ -44,10 +52,36 @@ def test_hlo_text_reparses():
         assert len(module.as_serialized_hlo_module_proto()) > 0, name
 
 
+def test_suite_entries_match_reference_numerics():
+    """The trait-batched / gathered entries compute the same statistics
+    as the single-trait reference oracles, trait by trait."""
+    from compile.model import compress_x_batched, compress_xy_batched, select_gather
+
+    rng = np.random.default_rng(7)
+    n, k, w, t = 48, 5, 12, 3
+    ys = jnp.asarray(rng.normal(size=(n, t)))
+    c = jnp.asarray(rng.normal(size=(n, k)))
+    x = jnp.asarray(rng.normal(size=(n, w)))
+    yty, cty, ctc = compress_xy_batched(ys, c)
+    xty, xtx, ctx = compress_x_batched(ys, c, x)
+    for tt in range(t):
+        y = ys[:, tt]
+        ryty, rcty, rctc = [np.asarray(v) for v in (jnp.sum(y * y), c.T @ y, c.T @ c)]
+        rxty, rxtx, rctx = [np.asarray(v) for v in (x.T @ y, jnp.sum(x * x, axis=0), c.T @ x)]
+        np.testing.assert_allclose(np.asarray(yty)[tt], ryty, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(cty)[:, tt], rcty, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(ctc), rctc, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(xty)[:, tt], rxty, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(xtx), rxtx, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(ctx), rctx, rtol=1e-12)
+    (v,) = select_gather(x[:, 2], x)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(x.T @ x[:, 2]), rtol=1e-12)
+
+
 def test_compress_x_entry_layout():
     """Entry computation signature matches the manifest contract the Rust
     runtime is written against."""
-    texts = lower_all(N_B, K_PAD, M_B)
+    texts = lower_all(N_B, K_PAD, M_B, widths=(), trait_batches=())
     head = texts["compress_x"].splitlines()[0]
     assert f"f64[{N_B}]" in head  # y
     assert f"f64[{N_B},{K_PAD}]" in head  # c
@@ -57,7 +91,7 @@ def test_compress_x_entry_layout():
 
 
 def test_scan_stats_entry_layout():
-    texts = lower_all(N_B, K_PAD, M_B)
+    texts = lower_all(N_B, K_PAD, M_B, widths=(), trait_batches=())
     head = texts["scan_stats"].splitlines()[0]
     # three scalars + (M,) + (M,) + (K,) + (K,M) inputs
     assert head.count("f64[]") >= 3
@@ -92,6 +126,10 @@ def test_manifest_written(tmp_path):
             "16",
             "--k-pad",
             "4",
+            "--widths",
+            "16",
+            "--trait-batches",
+            "1,2",
         ],
         check=True,
         cwd=str(__import__("pathlib").Path(__file__).parent.parent),
@@ -100,6 +138,10 @@ def test_manifest_written(tmp_path):
     assert manifest["n_block"] == 32
     assert manifest["m_block"] == 16
     assert manifest["k_pad"] == 4
+    assert manifest["widths"] == [16]
+    assert manifest["trait_batches"] == [1, 2]
+    assert "compress_x.w16.t2" in manifest["entries"]
+    assert "select_gather.h16" in manifest["entries"]
     for fname in manifest["entries"].values():
         text = (out / fname).read_text()
         assert text.startswith("HloModule")

@@ -4,13 +4,18 @@
 //!   compress/N=...        runtime linear in N (fixed K, M)
 //!   compress/threads=...  runtime ∝ 1/C (fixed N, K, M)
 //!   compress/K=...        quadratic-in-K term at fixed N·M
-//!   compress/engine=...   pure-Rust vs AOT-artifact path
+//!   compress/engine=...   pure-Rust vs artifact kernel-suite paths
 //!   roofline              bytes-read throughput vs machine copy bandwidth
+//!
+//! Plus the artifact-suite rows (E10) → `BENCH_artifact.json`:
+//!   artifact/whole-M vs artifact/per-shard (streaming entry dispatch)
+//!   artifact/T=...        trait batching: one X-side pass regardless of T
 //!
 //! `DASH_BENCH_QUICK=1` shrinks measurement windows ~10x.
 
 use dash::linalg::Matrix;
-use dash::scan::compress_party;
+use dash::runtime::{Engine, KernelMeter, ShapePolicy};
+use dash::scan::{compress_party, ShardPlan};
 use dash::util::bench::Bench;
 use dash::util::rng::Rng;
 
@@ -63,18 +68,22 @@ fn main() {
         });
     }
 
-    // --- engine comparison: rust vs AOT artifacts ---
+    // --- engine comparison: rust vs artifact kernel suite ---
     let (y, c, x) = data(2048, 8, 512, 45);
     b.case_units("engine=rust", Some((2048 * 512) as f64), "cell", || {
         std::hint::black_box(compress_party(&y, &c, &x, 256, None));
     });
-    match dash::runtime::Engine::load("artifacts") {
+    let reference = Engine::reference(ShapePolicy::default(), KernelMeter::new()).unwrap();
+    b.case_units("engine=reference", Some((2048 * 512) as f64), "cell", || {
+        std::hint::black_box(reference.compress_party(&y, &c, &x).unwrap());
+    });
+    match Engine::load("artifacts") {
         Ok(engine) => {
-            b.case_units("engine=artifacts", Some((2048 * 512) as f64), "cell", || {
+            b.case_units("engine=pjrt", Some((2048 * 512) as f64), "cell", || {
                 std::hint::black_box(engine.compress_party(&y, &c, &x).unwrap());
             });
         }
-        Err(e) => eprintln!("skipping artifact engine case: {e:#}"),
+        Err(e) => eprintln!("skipping PJRT engine case: {e:#}"),
     }
 
     // --- roofline reference: how fast can this machine merely READ the
@@ -86,4 +95,60 @@ fn main() {
     });
 
     b.save_report();
+    artifact_suite_rows();
+}
+
+/// E10 — artifact kernel-suite rows: per-shard streaming dispatch vs a
+/// whole-M pass, and trait batching (X-side work independent of T).
+/// Written to `BENCH_artifact.json`; runs the reference executor, which
+/// shares the suite's dispatch/padding machinery with the PJRT path.
+fn artifact_suite_rows() {
+    let mut b = Bench::new("artifact");
+    let (n, k, m, shard_w) = (2048usize, 8usize, 1024usize, 256usize);
+    let (y, c, x) = data(n, k, m, 46);
+
+    let whole = Engine::reference(ShapePolicy::default(), KernelMeter::new()).unwrap();
+    b.case_units("whole-M", Some((n * m) as f64), "cell", || {
+        std::hint::black_box(whole.compress_party(&y, &c, &x).unwrap());
+    });
+
+    let sharded = Engine::reference(ShapePolicy::default(), KernelMeter::new()).unwrap();
+    let plan = ShardPlan::new(m, shard_w);
+    b.case_units("per-shard", Some((n * m) as f64), "cell", || {
+        std::hint::black_box(sharded.compress_base(&y, &c).unwrap());
+        for r in plan.ranges() {
+            std::hint::black_box(
+                sharded.compress_shard(&y, &c, &x, r.j0, r.j1).unwrap(),
+            );
+        }
+    });
+    // streaming keeps the resident block O(shard_w·N), not O(M·N)
+    assert!(
+        sharded.meter().peak_block_bytes() * 2 <= whole.meter().peak_block_bytes(),
+        "per-shard peak {} not below whole-M peak {}",
+        sharded.meter().peak_block_bytes(),
+        whole.meter().peak_block_bytes()
+    );
+
+    // trait batching: the X-side pass count is one per call regardless
+    // of T, and per-(variant·trait) cost falls as T grows
+    let mut rng = Rng::new(47);
+    for &t in &[1usize, 16] {
+        let ys = Matrix::randn(n, t, &mut rng);
+        let e = Engine::reference(ShapePolicy::default(), KernelMeter::new()).unwrap();
+        b.case_units(&format!("T={t}"), Some((n * m * t) as f64), "cell·trait", || {
+            std::hint::black_box(e.compress_shard(&ys, &c, &x, 0, m).unwrap());
+        });
+        // one metered dispatch = exactly one X-side pass, any T
+        let probe = Engine::reference(ShapePolicy::default(), KernelMeter::new()).unwrap();
+        probe.compress_shard(&ys, &c, &x, 0, m).unwrap();
+        assert_eq!(probe.meter().xside_passes(), 1, "T={t}: one X-side pass per dispatch");
+    }
+
+    let report = b.json_lines();
+    if let Err(e) = std::fs::write("BENCH_artifact.json", &report) {
+        eprintln!("warn: could not write BENCH_artifact.json: {e}");
+    } else {
+        println!("report: BENCH_artifact.json");
+    }
 }

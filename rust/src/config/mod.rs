@@ -85,6 +85,10 @@ impl RunConfig {
             .set("select_candidates", self.scan.select_candidates)
             .set("use_artifacts", self.scan.use_artifacts)
             .set("artifacts_dir", self.scan.artifacts_dir.as_str())
+            .set("artifact_exec", self.scan.artifact_exec.name())
+            .set("entry_widths", self.scan.entry_widths.clone())
+            .set("entry_traits", self.scan.entry_traits.clone())
+            .set("entry_k_pad", self.scan.entry_k_pad)
             .set(
                 "r_method",
                 match self.scan.r_method {
@@ -208,6 +212,19 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
     if let Some(x) = v.get("artifacts_dir").and_then(Json::as_str) {
         s.artifacts_dir = x.to_string();
     }
+    if let Some(x) = v.get("artifact_exec").and_then(Json::as_str) {
+        s.artifact_exec = crate::runtime::ArtifactExec::parse(x)?;
+    }
+    if let Some(x) = parse_usize_vec(v, "entry_widths")? {
+        s.entry_widths = x;
+    }
+    if let Some(x) = parse_usize_vec(v, "entry_traits")? {
+        s.entry_traits = x;
+    }
+    if let Some(x) = v.get("entry_k_pad").and_then(Json::as_usize) {
+        s.entry_k_pad = x;
+    }
+    s.entry_policy().validate()?;
     if let Some(x) = v.get("r_method").and_then(Json::as_str) {
         s.r_method = match x {
             "auto" => RFactorMethod::Auto,
@@ -271,6 +288,34 @@ mod tests {
         assert_eq!(back.scan.select_policy, SelectPolicy::PerTrait);
         assert_eq!(back.scan.select_candidates, 8);
         assert_eq!(back.scan.select_alpha, cfg.scan.select_alpha);
+    }
+
+    #[test]
+    fn artifact_suite_config_roundtrips() {
+        let j = Json::parse(
+            r#"{"scan": {"use_artifacts": true, "artifact_exec": "reference",
+                         "entry_widths": [8, 32], "entry_traits": [1, 8],
+                         "entry_k_pad": 8}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert!(cfg.scan.use_artifacts);
+        assert_eq!(cfg.scan.artifact_exec, crate::runtime::ArtifactExec::Reference);
+        assert_eq!(cfg.scan.entry_widths, vec![8, 32]);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scan.artifact_exec, cfg.scan.artifact_exec);
+        assert_eq!(back.scan.entry_widths, cfg.scan.entry_widths);
+        assert_eq!(back.scan.entry_traits, cfg.scan.entry_traits);
+        assert_eq!(back.scan.entry_k_pad, 8);
+        // malformed shape policies are rejected at parse time
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"entry_widths": [32, 32]}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"artifact_exec": "gpu"}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

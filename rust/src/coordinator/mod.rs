@@ -23,6 +23,7 @@ pub use party::{ComputeBackend, PartyResult};
 
 use crate::gwas::Cohort;
 use crate::net::{duplex_pair, tcp_pair, ByteMeter};
+use crate::runtime::{EngineOptions, KernelMeter};
 use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
 
 /// Which transport an in-process deployment uses between leader and
@@ -43,6 +44,10 @@ pub struct MultiPartyScanResult {
     pub metrics: SessionMetrics,
     /// per-party link byte counts (uplink + downlink)
     pub party_bytes: Vec<u64>,
+    /// per-party artifact kernel-suite telemetry (lowering cache, pass
+    /// counts, peak resident block bytes); all-zero for Rust-path
+    /// sessions
+    pub party_kernels: Vec<KernelMeter>,
 }
 
 /// Run a full multi-party scan over a cohort with one thread per party.
@@ -80,17 +85,25 @@ pub fn run_multi_party_scan_t(
     }
 
     let cfg2 = cfg.clone();
+    let kernel_meters: Vec<KernelMeter> = (0..parties).map(|_| KernelMeter::new()).collect();
     let output = std::thread::scope(
         |s| -> anyhow::Result<(ScanOutput, Option<SelectOutput>, SessionMetrics)> {
             let mut handles = Vec::with_capacity(parties);
             for (idx, ep) in party_eps.into_iter().enumerate() {
                 let data = &cohort.parties[idx];
                 let cfg = &cfg2;
+                let kernel_meter = kernel_meters[idx].clone();
                 handles.push(s.spawn(move || -> anyhow::Result<PartyResult> {
                     let compute = if cfg.use_artifacts {
-                        // each party owns its engine (PJRT handles are !Send)
+                        // each party owns its engine (PJRT handles are
+                        // !Send); telemetry flows out via the shared meter
                         party::ComputeBackend::Artifacts(Box::new(
-                            crate::runtime::Engine::load(&cfg.artifacts_dir)?,
+                            crate::runtime::Engine::open(&EngineOptions {
+                                dir: cfg.artifacts_dir.clone(),
+                                exec: cfg.artifact_exec,
+                                policy: cfg.entry_policy(),
+                                meter: kernel_meter,
+                            })?,
                         ))
                     } else {
                         party::ComputeBackend::Rust { threads: cfg.threads }
@@ -115,6 +128,7 @@ pub fn run_multi_party_scan_t(
         select: output.1,
         metrics: output.2,
         party_bytes: meters.iter().map(|m| m.bytes()).collect(),
+        party_kernels: kernel_meters,
     })
 }
 

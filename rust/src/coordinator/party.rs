@@ -20,13 +20,13 @@
 //! interposes a share-routing round trip per shard, which serializes
 //! parties per shard but keeps the same bounded-memory shape.
 //!
-//! The AOT artifact engine currently lowers the whole-`M` compress, so
-//! in artifact mode the party computes the full block once, pre-splits
-//! it into per-shard column blocks, and **releases each shard's columns
-//! as soon as its contribution is sent** — local memory decays over the
-//! session instead of holding the whole block to the end. The remaining
-//! gap is the transient whole-`M` materialization at compress time
-//! (tracked in ROADMAP: per-shard artifact lowering).
+//! Artifact mode streams the same way: the parameterized kernel suite
+//! ([`crate::runtime`]) serves a shard-width entry per shard
+//! (`CompressState::Cached` dispatches it directly, with the lowering
+//! cache de-duplicating canonical shapes), so peak artifact-side block
+//! memory is `O(shard_m·N_p)` — no transient whole-`M` materialization
+//! at compress time. SELECT rounds dispatch the gathered-columns and
+//! cross-product entries through the same engine.
 
 use super::messages::*;
 use crate::gwas::PartyData;
@@ -45,38 +45,42 @@ use crate::scan::{
 pub enum ComputeBackend {
     /// pure-Rust reference path
     Rust { threads: Option<usize> },
-    /// AOT artifacts through the PJRT runtime
+    /// the artifact kernel suite (PJRT or reference executor — see
+    /// [`crate::runtime::ArtifactExec`])
     Artifacts(Box<Engine>),
 }
 
-/// Per-session compute state: either stream shard-by-shard (pure Rust)
-/// or serve pre-split blocks of a whole-`M` compression (artifact
-/// engine), releasing each block once its contribution is sent.
+/// Per-session compute state: stream shard-by-shard through the
+/// pure-Rust kernels, or through the engine's cached (lowered-once,
+/// executed-per-shard) parameterized artifact entries.
 enum CompressState<'a> {
     Streaming {
         data: &'a PartyData,
         block_m: usize,
         threads: Option<usize>,
     },
+    /// Artifact suite: each shard dispatches the shard-width
+    /// `compress_x` entry directly; the engine's lowering cache keyed on
+    /// canonical shapes makes shard `s+1` a cache hit of shard `s`.
     Cached {
-        base: BaseStats,
-        /// per-shard column blocks; `take()`n (and thus freed) as each
-        /// shard's contribution goes out
-        shards: Vec<Option<VariantBlockStats>>,
+        engine: &'a Engine,
+        data: &'a PartyData,
     },
 }
 
 impl CompressState<'_> {
-    fn base(&self) -> BaseStats {
+    fn base(&self) -> anyhow::Result<BaseStats> {
         match self {
-            CompressState::Streaming { data, .. } => compress_base(&data.ys, &data.c),
-            CompressState::Cached { base, .. } => base.clone(),
+            CompressState::Streaming { data, .. } => Ok(compress_base(&data.ys, &data.c)),
+            CompressState::Cached { engine, data } => {
+                engine.compress_base(&data.ys, &data.c)
+            }
         }
     }
 
-    fn shard(&mut self, r: ShardRange) -> VariantBlockStats {
+    fn shard(&self, r: ShardRange) -> anyhow::Result<VariantBlockStats> {
         match self {
-            CompressState::Streaming { data, block_m, threads } => compress_variant_block(
+            CompressState::Streaming { data, block_m, threads } => Ok(compress_variant_block(
                 &data.ys,
                 &data.c,
                 &data.x,
@@ -84,10 +88,10 @@ impl CompressState<'_> {
                 r.j1,
                 *block_m,
                 *threads,
-            ),
-            CompressState::Cached { shards, .. } => shards[r.index]
-                .take()
-                .expect("shard contribution requested twice"),
+            )),
+            CompressState::Cached { engine, data } => {
+                engine.compress_shard(&data.ys, &data.c, &data.x, r.j0, r.j1)
+            }
         }
     }
 }
@@ -135,39 +139,19 @@ fn serve_inner(
 
     Compress::from_frame(&recv_checked(endpoint)?)?;
 
-    let mut state = match compute {
+    let state = match compute {
         ComputeBackend::Rust { threads } => CompressState::Streaming {
             data,
             block_m: setup.block_m as usize,
             threads: *threads,
         },
         ComputeBackend::Artifacts(engine) => {
-            // The artifact lowers the whole-M compress; pre-split into
-            // per-shard blocks so each can be freed after its round.
-            // Splitting peels the block tail-first: the trait-major
-            // `XᵀY` (the T-dominant piece) and `X·X` are *moved* out
-            // shard by shard, never duplicated — only the K×M `CᵀX`
-            // is briefly held alongside its per-shard copies.
-            let mut cp = engine.compress_party(&data.ys, &data.c, &data.x)?;
-            let base = cp.base();
-            let ranges: Vec<ShardRange> = plan.ranges().collect();
-            let mut shards: Vec<Option<VariantBlockStats>> = vec![None; ranges.len()];
-            // Reverse order: each split_off leaves exactly [0, j0), so
-            // the next (earlier) shard's tail is again the full suffix.
-            for r in ranges.into_iter().rev() {
-                shards[r.index] = Some(VariantBlockStats {
-                    j0: r.j0,
-                    xty: cp.xty.split_off_rows(r.j0),
-                    xtx: cp.xtx.split_off(r.j0),
-                    ctx: cp.ctx.col_slice(r.j0, r.j1),
-                });
-            }
-            CompressState::Cached { base, shards }
+            CompressState::Cached { engine: engine.as_ref(), data }
         }
     };
 
     let codec = FixedCodec::new(setup.frac_bits as u32);
-    let base = state.base();
+    let base = state.base()?;
 
     // Backend-specific secure-sum context, shared by the base round and
     // every shard round.
@@ -262,7 +246,7 @@ fn serve_inner(
     // shard's columns are freed right after this send.
     contribute(&base.flatten(), 0)?;
     for r in plan.ranges() {
-        let flat = state.shard(r).flatten();
+        let flat = state.shard(r)?.flatten();
         contribute(&flat, r.index + 1)?;
     }
 
@@ -284,15 +268,23 @@ fn serve_inner(
             anyhow::ensure!(select_rounds == 0, "select rounds without candidates");
         } else {
             let xs = data.x.gather_cols(&idx);
-            let vb = compress_variant_block(
-                &data.ys,
-                &data.c,
-                &xs,
-                0,
-                xs.cols,
-                setup.block_m as usize,
-                select_threads(compute),
-            );
+            // Candidate round: gathered-shortlist statistics — the
+            // `compress_x` entry family in artifact mode, the streaming
+            // kernel otherwise.
+            let vb = match compute {
+                ComputeBackend::Rust { threads } => compress_variant_block(
+                    &data.ys,
+                    &data.c,
+                    &xs,
+                    0,
+                    xs.cols,
+                    setup.block_m as usize,
+                    *threads,
+                ),
+                ComputeBackend::Artifacts(engine) => {
+                    engine.compress_gathered(&data.ys, &data.c, &xs)?
+                }
+            };
             contribute(&vb.flatten(), plan.count() + 1)?;
             loop {
                 let f = recv_checked(endpoint)?;
@@ -309,7 +301,17 @@ fn serve_inner(
                                 continue;
                             }
                             anyhow::ensure!((v as usize) < m, "promoted variant beyond M");
-                            flat.extend(cross_products(&data.x, v as usize, &xs));
+                            // promote round: the gathered-columns SELECT
+                            // entry in artifact mode
+                            let cp = match compute {
+                                ComputeBackend::Rust { .. } => {
+                                    cross_products(&data.x, v as usize, &xs)
+                                }
+                                ComputeBackend::Artifacts(engine) => {
+                                    engine.cross_products(&data.x, v as usize, &xs)?
+                                }
+                            };
+                            flat.extend(cp);
                         }
                         contribute(&flat, plan.count() + 1 + pr.round as usize)?;
                     }
@@ -355,17 +357,6 @@ fn serve_inner(
 
     Shutdown::from_frame(&recv_checked(endpoint)?)?;
     Ok(PartyResult { beta, se, select })
-}
-
-/// Worker threads for the SELECT-phase column gather: the shortlist is
-/// small (`H` columns), so the pure-Rust kernel serves both compute
-/// backends — artifact-mode lowering of the gathered compress is the
-/// open ROADMAP item alongside per-shard artifact lowering.
-fn select_threads(compute: &ComputeBackend) -> Option<usize> {
-    match compute {
-        ComputeBackend::Rust { threads } => *threads,
-        ComputeBackend::Artifacts(_) => Some(1),
-    }
 }
 
 /// Receive a frame, converting a leader-side ERROR broadcast into an Err.

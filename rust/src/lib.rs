@@ -24,8 +24,11 @@
 //! - **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
 //!   blocked Gram/cross-product hot spot, lowered into the same HLO.
 //!
-//! At runtime the Rust binary loads the artifacts through the PJRT C API
-//! ([`runtime`]); Python is never on the request path.
+//! At runtime the Rust binary dispatches a parameterized artifact kernel
+//! suite ([`runtime`]) keyed on `(kind, shard width, trait batch)`:
+//! compiled HLO entries through the PJRT C API when available, else a
+//! bit-identical pure-Rust reference executor. Python is never on the
+//! request path.
 
 pub mod util;
 pub mod linalg;

@@ -75,8 +75,12 @@ fn scan_command() -> Command {
         .opt("shard-m", "0", "variant shard width for the streaming protocol (0 = single shot)")
         .opt("transport", "inproc", "inproc|tcp")
         .opt("report", "", "write a JSON report to this path")
-        .flag("artifacts", "use the AOT artifact runtime for compression")
+        .flag("artifacts", "use the artifact kernel suite for compression")
         .opt("artifacts-dir", "artifacts", "artifact directory")
+        .opt("artifact-exec", "auto", "artifact executor: auto|pjrt|reference")
+        .opt("entry-widths", "64,256,1024,4096", "canonical shard widths of the artifact entry-shape policy (CSV ladder)")
+        .opt("entry-traits", "1,4,16,64", "canonical trait batches of the artifact entry-shape policy (CSV ladder)")
+        .opt("entry-k-pad", "16", "covariate padding of the artifact entries")
         .opt("alpha", "5e-8", "significance threshold for reported hits")
         .opt("select-k", "0", "forward-stepwise SELECT rounds after the scan (0 = scan only)")
         .opt("select-alpha", "1e-4", "SELECT stop rule: entry p-value threshold")
@@ -112,6 +116,14 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         cfg.scan.use_artifacts = true;
         cfg.scan.artifacts_dir = a.get("artifacts-dir").unwrap().to_string();
     }
+    cfg.scan.artifact_exec =
+        dash::runtime::ArtifactExec::parse(a.get("artifact-exec").unwrap())?;
+    cfg.scan.entry_widths =
+        dash::runtime::ShapePolicy::parse_ladder(a.get("entry-widths").unwrap(), "--entry-widths")?;
+    cfg.scan.entry_traits =
+        dash::runtime::ShapePolicy::parse_ladder(a.get("entry-traits").unwrap(), "--entry-traits")?;
+    cfg.scan.entry_k_pad = a.get_usize("entry-k-pad")?;
+    cfg.scan.entry_policy().validate()?;
     cfg.scan.select_k = a.get_usize("select-k")?;
     cfg.scan.select_alpha = a.get_f64("select-alpha")?;
     anyhow::ensure!(
@@ -161,6 +173,18 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     );
     println!("inter-party bytes {}", human_bytes(res.metrics.bytes_total));
     println!("peak round bytes  {}", human_bytes(res.metrics.bytes_max_round));
+    if cfg.scan.use_artifacts {
+        let lowered: u64 = res.party_kernels.iter().map(|k| k.lowered_entries()).sum();
+        let cache_hits: u64 = res.party_kernels.iter().map(|k| k.cache_hits()).sum();
+        let xside: u64 = res.party_kernels.iter().map(|k| k.xside_passes()).sum();
+        let peak = res.party_kernels.iter().map(|k| k.peak_block_bytes()).max().unwrap_or(0);
+        println!(
+            "artifact suite    exec={} entries={lowered} cache-hits={cache_hits} \
+             x-passes={xside} peak block {}",
+            cfg.scan.artifact_exec.name(),
+            human_bytes(peak)
+        );
+    }
     println!(
         "bytes/(variant·trait) {:.1}",
         res.metrics.bytes_total as f64 / (m * cohort.t()) as f64
@@ -326,18 +350,36 @@ fn cmd_bench_comm(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_artifacts(raw: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("artifacts", "inspect the compiled artifact set")
-        .opt("dir", "artifacts", "artifact directory");
+    let cmd = Command::new("artifacts", "inspect the artifact kernel suite")
+        .opt("dir", "artifacts", "artifact directory")
+        .opt("exec", "auto", "artifact executor: auto|pjrt|reference");
     let a = cmd.parse(raw)?;
-    let dir = a.get("dir").unwrap();
-    let engine = dash::runtime::Engine::load(dir)?;
+    let opts = dash::runtime::EngineOptions {
+        dir: a.get("dir").unwrap().to_string(),
+        exec: dash::runtime::ArtifactExec::parse(a.get("exec").unwrap())?,
+        ..Default::default()
+    };
+    let engine = dash::runtime::Engine::open(&opts)?;
     println!("platform    {}", engine.platform());
-    println!("entries     {}", engine.entry_count());
-    println!("n_block     {}", engine.manifest.n_block);
-    println!("m_block     {}", engine.manifest.m_block);
-    println!("k_pad       {}", engine.manifest.k_pad);
-    for (name, file) in &engine.manifest.entries {
-        println!("  {name:<14} {file}");
+    let policy = engine.policy();
+    println!("widths      {:?}", policy.widths);
+    println!("traits      {:?}", policy.trait_batches);
+    println!("k_pad       {}", policy.k_pad);
+    match &engine.manifest {
+        Some(m) => {
+            println!("n_block     {}", m.n_block);
+            println!("m_block     {}", m.m_block);
+            println!("compiled artifact entries:");
+            for (name, file) in &m.entries {
+                println!("  {name:<22} {file}");
+            }
+        }
+        None => {
+            println!("no compiled artifact set — reference executor suite:");
+            for key in policy.suite() {
+                println!("  {}", key.entry_name());
+            }
+        }
     }
     Ok(())
 }

@@ -1,190 +1,217 @@
-//! The artifact execution engine: compile-once, execute-many wrappers
-//! over the PJRT CPU client.
+//! The PJRT-backed artifact engine: compile-once, execute-many wrappers
+//! over the CPU client, dispatching the parameterized kernel suite.
 //!
-//! SELECT-phase note: the stepwise rounds touch only `O(H)` gathered
-//! shortlist columns (and `O(H)` cross-products per promotion), so the
-//! party serves them from the pure-Rust kernels in both compute
-//! backends — there is no whole-`M` pass left to lower. A gathered-
-//! columns artifact entry is tracked in ROADMAP next to per-shard
-//! artifact lowering, for deployments where `N_p·H` is itself large.
+//! Every dispatch canonicalizes its requested shape through the
+//! [`ShapePolicy`] and looks the entry up in the lowering cache; entries
+//! present in the artifact manifest are compiled on first use, and any
+//! entry the artifact set lacks falls back to the reference executor
+//! ([`RefExec`]) for that call — so partially-lowered artifact sets (or
+//! legacy two-entry sets predating the suite) degrade gracefully instead
+//! of erroring. All padding/slicing follows the same contract as the
+//! reference executor; PJRT results match the Rust kernels to fp
+//! tolerance (block-level accumulation), while the reference executor is
+//! bit-identical.
 
+use super::kernels::{
+    ArtifactExec, EngineOptions, KernelKind, KernelMeter, PassKind, RefExec,
+    ShapePolicy,
+};
 use super::manifest::Manifest;
-use crate::linalg::{cholesky_upper, Matrix};
-use crate::scan::CompressedParty;
+use crate::linalg::{householder_qr, Matrix};
+use crate::scan::{BaseStats, CompressedParty, VariantBlockStats};
 use crate::stats::{t_two_sided_p, AssocResult};
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// Compiled artifact set. `!Send` by construction (PJRT raw pointers);
-/// create one per party thread.
-pub struct Engine {
-    pub manifest: Manifest,
+/// PJRT state: client plus the entry lowering cache. `!Send` by
+/// construction (PJRT raw pointers); create one per party thread.
+struct Pjrt {
     client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// entry name → compiled executable, compiled on first dispatch
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+/// Compiled artifact engine.
+pub struct Engine {
+    pub manifest: Option<Manifest>,
+    pjrt: Option<Pjrt>,
+    exec: RefExec,
 }
 
 impl Engine {
-    /// Load `<dir>/manifest.json`, compile every entry on the CPU client.
+    /// Load `<dir>/manifest.json` and bring up the PJRT CPU client.
+    /// Entries compile lazily on first dispatch (the parameterized suite
+    /// can hold dozens of shapes; a session touches a handful).
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = BTreeMap::new();
-        for name in manifest.entries.keys() {
-            let path = manifest.entry_path(name)?;
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            executables.insert(name.clone(), exe);
-        }
-        Ok(Engine { manifest, client, executables })
+        Self::open_pjrt(dir.as_ref(), &ShapePolicy::default(), KernelMeter::new())
     }
 
-    /// Number of compiled entry points.
+    /// Open an engine per the requested executor.
+    pub fn open(opts: &EngineOptions) -> anyhow::Result<Engine> {
+        match opts.exec {
+            ArtifactExec::Pjrt => {
+                Self::open_pjrt(Path::new(&opts.dir), &opts.policy, opts.meter.clone())
+            }
+            ArtifactExec::Auto => {
+                match Self::open_pjrt(Path::new(&opts.dir), &opts.policy, opts.meter.clone())
+                {
+                    Ok(e) => Ok(e),
+                    Err(_) => Self::reference(opts.policy.clone(), opts.meter.clone()),
+                }
+            }
+            ArtifactExec::Reference => {
+                Self::reference(opts.policy.clone(), opts.meter.clone())
+            }
+        }
+    }
+
+    fn open_pjrt(dir: &Path, policy: &ShapePolicy, meter: KernelMeter) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut policy = policy.clone();
+        // Compiled entries are fixed-shape: the artifact set's geometry
+        // is authoritative, never the requested policy (a K too large
+        // for it fails at dispatch with a re-run-make-artifacts error).
+        policy.k_pad = manifest.k_pad;
+        if let Some(w) = &manifest.widths {
+            policy.widths = w.clone();
+        }
+        if let Some(t) = &manifest.trait_batches {
+            policy.trait_batches = t.clone();
+        }
+        Ok(Engine {
+            manifest: Some(manifest),
+            pjrt: Some(Pjrt { client, executables: RefCell::new(BTreeMap::new()) }),
+            exec: RefExec::new(policy, meter)?,
+        })
+    }
+
+    /// Reference engine with an explicit policy (tests/benches).
+    pub fn reference(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<Engine> {
+        Ok(Engine { manifest: None, pjrt: None, exec: RefExec::new(policy, meter)? })
+    }
+
+    /// Entries lowered (compiled / planned) so far.
     pub fn entry_count(&self) -> usize {
-        self.executables.len()
+        match &self.pjrt {
+            Some(p) => p.executables.borrow().len() + self.exec.lowered_count(),
+            None => self.exec.lowered_count(),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.pjrt {
+            Some(p) => p.client.platform_name(),
+            None => "reference".to_string(),
+        }
     }
 
-    fn exe(&self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
-        self.executables
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("entry `{name}` not compiled"))
+    /// Shared kernel-suite telemetry.
+    pub fn meter(&self) -> KernelMeter {
+        self.exec.meter()
     }
 
-    /// Execute an entry returning the decomposed output tuple as f64 vecs.
-    /// Takes borrowed literals so callers can reuse block buffers across
-    /// calls without re-allocating.
+    pub fn policy(&self) -> &ShapePolicy {
+        self.exec.policy()
+    }
+
+    /// Compile (or fetch) the executable for an entry name; `None` when
+    /// the artifact set does not carry it (→ reference fallback). First
+    /// compilation counts as a lowering, later dispatches as cache hits
+    /// — the same accounting the reference executor keeps.
+    fn entry(&self, name: &str) -> anyhow::Result<Option<()>> {
+        let (Some(pjrt), Some(manifest)) = (&self.pjrt, &self.manifest) else {
+            return Ok(None);
+        };
+        if pjrt.executables.borrow().contains_key(name) {
+            self.exec.meter().record_hit();
+            return Ok(Some(()));
+        }
+        let Some(path) = manifest.entry_path_opt(name) else {
+            return Ok(None);
+        };
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = pjrt.client.compile(&comp)?;
+        pjrt.executables.borrow_mut().insert(name.to_string(), exe);
+        self.exec.meter().record_lower();
+        Ok(Some(()))
+    }
+
+    /// Execute a compiled entry returning the decomposed output tuple.
     fn run(&self, name: &str, args: &[&xla::Literal]) -> anyhow::Result<Vec<Vec<f64>>> {
-        let exe = self.exe(name)?;
+        let pjrt = self.pjrt.as_ref().expect("run without pjrt");
+        let cache = pjrt.executables.borrow();
+        let exe = cache
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("entry `{name}` not compiled"))?;
         let result = exe.execute::<&xla::Literal>(args)?;
         let lit = result[0][0].to_literal_sync()?;
         let parts = lit.to_tuple()?;
         parts.into_iter().map(|p| Ok(p.to_vec::<f64>()?)).collect()
     }
 
-    /// Compress one party's data through the AOT artifacts. `ys` is the
-    /// `N × T` trait matrix; produces the same trait-major
-    /// `CompressedParty` as the pure-Rust path (verified by integration
-    /// tests to ~1e-12).
-    ///
-    /// The artifact entries are single-trait, so trait columns are fed
-    /// through `compress_yc`/`compress_x` one at a time; the shared
-    /// genotype statistics (`X·X`, `CᵀX`, `CᵀC`) are taken from trait 0
-    /// only. A trait-batched `compress_xy` entry would amortize the `X`
-    /// passes (tracked in ROADMAP next to per-shard artifact lowering).
-    pub fn compress_party(
-        &self,
-        ys: &Matrix,
-        c: &Matrix,
-        x: &Matrix,
-    ) -> anyhow::Result<CompressedParty> {
+    /// Variant-independent statistics through the trait-batched
+    /// `compress_xy` entry (one Y-side pass for all `T` traits). `R_p`
+    /// (plaintext-mode TSQR input only) is computed host-side.
+    pub fn compress_base(&self, ys: &Matrix, c: &Matrix) -> anyhow::Result<BaseStats> {
         let n = ys.rows;
-        anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
-        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
-        let k = c.cols;
-        let m = x.cols;
-        let t_count = ys.cols;
-        let (nb, mb, kp) = (self.manifest.n_block, self.manifest.m_block, self.manifest.k_pad);
+        anyhow::ensure!(c.rows == n, "row mismatch");
+        let (k, t) = (c.cols, ys.cols);
+        let policy = self.exec.policy().clone();
+        let kp = policy.k_pad;
+        let tc = policy.canon_traits(t);
+        let key = policy.canon_key(KernelKind::CompressXy, 0, t);
+        if self.entry(&key.entry_name())?.is_none() {
+            return {
+                let (yty, cty, ctc) = self.exec.compress_xy(ys, c)?;
+                Ok(BaseStats { n, yty, cty, ctc, r: householder_qr(c).r })
+            };
+        }
         anyhow::ensure!(
             k <= kp,
             "K={k} exceeds artifact k_pad={kp}; re-run `make artifacts` with --k-pad ≥ {k}"
         );
-
+        let meter = self.exec.meter();
+        meter.record_pass(KernelKind::CompressXy, PassKind::Scan);
+        let nb = self.manifest.as_ref().map_or(n.max(1), |m| m.n_block);
         let n_blocks = n.div_ceil(nb).max(1);
-        let m_blocks = m.div_ceil(mb).max(1);
+        let block_bytes = 8 * (nb * (tc + kp) + tc + kp * tc + kp * kp) as u64;
+        meter.enter_block(block_bytes);
 
-        let mut yty = vec![0.0; t_count];
-        let mut cty_pad = vec![0.0; kp * t_count]; // kp rows × T, row-major
+        let mut yty = vec![0.0; tc];
+        let mut cty_pad = vec![0.0; kp * tc];
         let mut ctc = vec![0.0; kp * kp];
-        let mut xty = Matrix::zeros(m, t_count);
-        let mut xtx = vec![0.0; m];
-        let mut ctx = Matrix::zeros(k, m);
-
-        // Reusable padded buffers.
-        let mut y_buf = vec![0.0f64; nb];
+        let mut y_buf = vec![0.0f64; nb * tc];
         let mut c_buf = vec![0.0f64; nb * kp];
-        let mut x_buf = vec![0.0f64; nb * mb];
-
         for bi in 0..n_blocks {
             let r0 = bi * nb;
             let r1 = (r0 + nb).min(n);
-            let rows = r1 - r0;
-            // pack C with zero padding
-            c_buf.fill(0.0);
-            for i in 0..rows {
-                let src = c.row(r0 + i);
-                c_buf[i * kp..i * kp + k].copy_from_slice(src);
-            }
-            // build the y/C literals once per sample block — reshape
-            // allocates a fresh literal, so it must stay out of the
-            // variant loop (EXPERIMENTS.md §Perf iteration 3)
+            pack_rows(ys, r0, r1, tc, &mut y_buf);
+            pack_rows(c, r0, r1, kp, &mut c_buf);
+            let y_lit = xla::Literal::vec1(&y_buf).reshape(&[nb as i64, tc as i64])?;
             let c_lit = xla::Literal::vec1(&c_buf).reshape(&[nb as i64, kp as i64])?;
-            let mut y_lits = Vec::with_capacity(t_count);
-            for tt in 0..t_count {
-                y_buf.fill(0.0);
-                for i in 0..rows {
-                    y_buf[i] = ys[(r0 + i, tt)];
-                }
-                y_lits.push(xla::Literal::vec1(&y_buf));
+            let out = self.run(&key.entry_name(), &[&y_lit, &c_lit])?;
+            for (a, b) in yty.iter_mut().zip(&out[0]) {
+                *a += b;
             }
-
-            // covariate-side statistics once per sample block per trait
-            for (tt, y_lit) in y_lits.iter().enumerate() {
-                let out = self.run("compress_yc", &[y_lit, &c_lit])?;
-                yty[tt] += out[0][0];
-                for i in 0..kp {
-                    cty_pad[i * t_count + tt] += out[1][i];
-                }
-                if tt == 0 {
-                    for i in 0..kp * kp {
-                        ctc[i] += out[2][i];
-                    }
-                }
+            for (a, b) in cty_pad.iter_mut().zip(&out[1]) {
+                *a += b;
             }
-
-            // variant blocks
-            for bj in 0..m_blocks {
-                let c0 = bj * mb;
-                let c1 = (c0 + mb).min(m);
-                let cols = c1 - c0;
-                x_buf.fill(0.0);
-                for i in 0..rows {
-                    let src = &x.row(r0 + i)[c0..c1];
-                    x_buf[i * mb..i * mb + cols].copy_from_slice(src);
-                }
-                let x_lit = xla::Literal::vec1(&x_buf).reshape(&[nb as i64, mb as i64])?;
-                for (tt, y_lit) in y_lits.iter().enumerate() {
-                    let out = self.run("compress_x", &[y_lit, &c_lit, &x_lit])?;
-                    // out: xty (mb), xtx (mb), ctx (kp × mb)
-                    for j in 0..cols {
-                        xty[(c0 + j, tt)] += out[0][j];
-                    }
-                    if tt == 0 {
-                        for j in 0..cols {
-                            xtx[c0 + j] += out[1][j];
-                        }
-                        for kk in 0..k {
-                            let row = ctx.row_mut(kk);
-                            for j in 0..cols {
-                                row[c0 + j] += out[2][kk * mb + j];
-                            }
-                        }
-                    }
-                }
+            for (a, b) in ctc.iter_mut().zip(&out[2]) {
+                *a += b;
             }
         }
-
-        // Slice covariate padding away.
-        let mut cty_k = Matrix::zeros(k, t_count);
+        meter.exit_block(block_bytes);
+        yty.truncate(t);
+        let mut cty_k = Matrix::zeros(k, t);
         for i in 0..k {
-            for tt in 0..t_count {
-                cty_k[(i, tt)] = cty_pad[i * t_count + tt];
+            for tt in 0..t {
+                cty_k[(i, tt)] = cty_pad[i * tc + tt];
             }
         }
         let mut ctc_k = Matrix::zeros(k, k);
@@ -193,15 +220,176 @@ impl Engine {
                 ctc_k[(i, j)] = ctc[i * kp + j];
             }
         }
-        // R_p from the Gram matrix (same positive-diagonal factor as QR).
-        let r = cholesky_upper(&ctc_k)?;
-
-        Ok(CompressedParty { n, yty, cty: cty_k, ctc: ctc_k, r, xty, xtx, ctx })
+        Ok(BaseStats { n, yty, cty: cty_k, ctc: ctc_k, r: householder_qr(c).r })
     }
 
-    /// Lemma 3.1 epilogue on aggregates through the artifact, with
-    /// p-values attached on the Rust side. `qty`/`qtx` are the projected
-    /// statistics (K-dim); all M-sized inputs are blocked and padded.
+    /// One shard's variant statistics through the shard-width-
+    /// parameterized `compress_x` entry — one X-side pass for all `T`
+    /// traits, `O(shard_m·N_p)` resident block memory.
+    pub fn compress_shard(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<VariantBlockStats> {
+        self.compress_x_dispatch(ys, c, x, j0, j1, PassKind::Scan)
+    }
+
+    /// SELECT candidate round through the `compress_x` entry family.
+    pub fn compress_gathered(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        xs: &Matrix,
+    ) -> anyhow::Result<VariantBlockStats> {
+        self.compress_x_dispatch(ys, c, xs, 0, xs.cols, PassKind::Select)
+    }
+
+    fn compress_x_dispatch(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        j0: usize,
+        j1: usize,
+        pass: PassKind,
+    ) -> anyhow::Result<VariantBlockStats> {
+        let n = ys.rows;
+        anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
+        anyhow::ensure!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
+        let (k, t, w) = (c.cols, ys.cols, j1 - j0);
+        let policy = self.exec.policy().clone();
+        let key = policy.canon_key(KernelKind::CompressX, w, t);
+        if w == 0 || self.entry(&key.entry_name())?.is_none() {
+            return self.exec.compress_x(ys, c, x, j0, j1, pass);
+        }
+        let (kp, wc, tc) = (policy.k_pad, key.shard_w, key.n_traits);
+        anyhow::ensure!(
+            k <= kp,
+            "K={k} exceeds artifact k_pad={kp}; re-run `make artifacts` with --k-pad ≥ {k}"
+        );
+        let meter = self.exec.meter();
+        meter.record_pass(KernelKind::CompressX, pass);
+        let nb = self.manifest.as_ref().map_or(n.max(1), |m| m.n_block);
+        let n_blocks = n.div_ceil(nb).max(1);
+        let block_bytes = 8 * (nb * (wc + tc + kp) + wc * tc + wc + kp * wc) as u64;
+        meter.enter_block(block_bytes);
+
+        let mut xty = vec![0.0; wc * tc];
+        let mut xtx = vec![0.0; wc];
+        let mut ctx = vec![0.0; kp * wc];
+        let mut y_buf = vec![0.0f64; nb * tc];
+        let mut c_buf = vec![0.0f64; nb * kp];
+        let mut x_buf = vec![0.0f64; nb * wc];
+        for bi in 0..n_blocks {
+            let r0 = bi * nb;
+            let r1 = (r0 + nb).min(n);
+            pack_rows(ys, r0, r1, tc, &mut y_buf);
+            pack_rows(c, r0, r1, kp, &mut c_buf);
+            x_buf.fill(0.0);
+            for i in 0..(r1 - r0) {
+                x_buf[i * wc..i * wc + w].copy_from_slice(&x.row(r0 + i)[j0..j1]);
+            }
+            let y_lit = xla::Literal::vec1(&y_buf).reshape(&[nb as i64, tc as i64])?;
+            let c_lit = xla::Literal::vec1(&c_buf).reshape(&[nb as i64, kp as i64])?;
+            let x_lit = xla::Literal::vec1(&x_buf).reshape(&[nb as i64, wc as i64])?;
+            let out = self.run(&key.entry_name(), &[&y_lit, &c_lit, &x_lit])?;
+            for (a, b) in xty.iter_mut().zip(&out[0]) {
+                *a += b;
+            }
+            for (a, b) in xtx.iter_mut().zip(&out[1]) {
+                *a += b;
+            }
+            for (a, b) in ctx.iter_mut().zip(&out[2]) {
+                *a += b;
+            }
+        }
+        meter.exit_block(block_bytes);
+        let mut xty_m = Matrix::zeros(w, t);
+        for j in 0..w {
+            xty_m.row_mut(j).copy_from_slice(&xty[j * tc..j * tc + t]);
+        }
+        xtx.truncate(w);
+        let mut ctx_m = Matrix::zeros(k, w);
+        for kk in 0..k {
+            ctx_m.row_mut(kk).copy_from_slice(&ctx[kk * wc..kk * wc + w]);
+        }
+        Ok(VariantBlockStats { j0, xty: xty_m, xtx, ctx: ctx_m })
+    }
+
+    /// SELECT promote round through the gathered-columns entry.
+    pub fn cross_products(
+        &self,
+        x: &Matrix,
+        j: usize,
+        xs: &Matrix,
+    ) -> anyhow::Result<Vec<f64>> {
+        let policy = self.exec.policy().clone();
+        let key = policy.canon_key(KernelKind::SelectGather, xs.cols, 1);
+        if self.entry(&key.entry_name())?.is_none() {
+            return self.exec.select_gather(x, j, xs);
+        }
+        anyhow::ensure!(j < x.cols, "variant {j} out of range");
+        anyhow::ensure!(x.rows == xs.rows, "row mismatch");
+        let meter = self.exec.meter();
+        meter.record_pass(KernelKind::SelectGather, PassKind::Select);
+        let (n, h, hc) = (x.rows, xs.cols, key.shard_w);
+        let nb = self.manifest.as_ref().map_or(n.max(1), |m| m.n_block);
+        let n_blocks = n.div_ceil(nb).max(1);
+        let block_bytes = 8 * (nb * hc + nb + hc) as u64;
+        meter.enter_block(block_bytes);
+        let mut v = vec![0.0; hc];
+        let mut xj_buf = vec![0.0f64; nb];
+        let mut xs_buf = vec![0.0f64; nb * hc];
+        for bi in 0..n_blocks {
+            let r0 = bi * nb;
+            let r1 = (r0 + nb).min(n);
+            xj_buf.fill(0.0);
+            xs_buf.fill(0.0);
+            for i in 0..(r1 - r0) {
+                xj_buf[i] = x[(r0 + i, j)];
+                xs_buf[i * hc..i * hc + h].copy_from_slice(xs.row(r0 + i));
+            }
+            let xj_lit = xla::Literal::vec1(&xj_buf);
+            let xs_lit = xla::Literal::vec1(&xs_buf).reshape(&[nb as i64, hc as i64])?;
+            let out = self.run(&key.entry_name(), &[&xj_lit, &xs_lit])?;
+            for (a, b) in v.iter_mut().zip(&out[0]) {
+                *a += b;
+            }
+        }
+        meter.exit_block(block_bytes);
+        v.truncate(h);
+        Ok(v)
+    }
+
+    /// Whole-block compress: the base entry plus one full-width shard
+    /// entry (single-shot callers / benches).
+    pub fn compress_party(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+    ) -> anyhow::Result<CompressedParty> {
+        let base = self.compress_base(ys, c)?;
+        let vb = self.compress_shard(ys, c, x, 0, x.cols)?;
+        Ok(CompressedParty {
+            n: base.n,
+            yty: base.yty,
+            cty: base.cty,
+            ctc: base.ctc,
+            r: base.r,
+            xty: vb.xty,
+            xtx: vb.xtx,
+            ctx: vb.ctx,
+        })
+    }
+
+    /// Lemma 3.1 epilogue on aggregates through the `scan_stats`
+    /// artifact (legacy fixed-shape entry), with p-values attached on
+    /// the Rust side.
+    #[allow(clippy::too_many_arguments)]
     pub fn scan_stats(
         &self,
         n: usize,
@@ -214,14 +402,18 @@ impl Engine {
     ) -> anyhow::Result<AssocResult> {
         let m = xty.len();
         anyhow::ensure!(xtx.len() == m && qtx.cols == m && qtx.rows == k && qty.len() == k);
-        let (mb, kp) = (self.manifest.m_block, self.manifest.k_pad);
+        // the legacy fixed-shape entry goes through the same lazy
+        // compile-and-cache path as the suite entries
+        if self.entry("scan_stats")?.is_none() {
+            return self.exec_scan_stats(n, k, yty, xty, xtx, qty, qtx);
+        }
+        let manifest = self.manifest.as_ref().expect("entry without manifest");
+        let (mb, kp) = (manifest.m_block, manifest.k_pad);
         anyhow::ensure!(k <= kp, "K={k} exceeds artifact k_pad={kp}");
         let m_blocks = m.div_ceil(mb).max(1);
 
-        // K-padded projected stats (zero rows contribute nothing).
         let mut qty_p = vec![0.0; kp];
         qty_p[..k].copy_from_slice(qty);
-
         let mut beta = vec![f64::NAN; m];
         let mut se = vec![f64::NAN; m];
         let mut t = vec![f64::NAN; m];
@@ -230,7 +422,6 @@ impl Engine {
         let mut xty_buf = vec![0.0f64; mb];
         let mut xtx_buf = vec![0.0f64; mb];
         let mut qtx_buf = vec![0.0f64; kp * mb];
-
         for bj in 0..m_blocks {
             let c0 = bj * mb;
             let c1 = (c0 + mb).min(m);
@@ -266,5 +457,29 @@ impl Engine {
             .map(|&tv| if tv.is_finite() { t_two_sided_p(tv, df) } else { f64::NAN })
             .collect();
         Ok(AssocResult { beta, se, t, p, df })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_scan_stats(
+        &self,
+        n: usize,
+        k: usize,
+        yty: f64,
+        xty: &[f64],
+        xtx: &[f64],
+        qty: &[f64],
+        qtx: &Matrix,
+    ) -> anyhow::Result<AssocResult> {
+        Ok(crate::stats::scan_stats_from_projected_parts(n, k, yty, xty, xtx, qty, qtx))
+    }
+}
+
+/// Pack rows `[r0, r1)` of `a` into `buf` (`nb × cols` row-major,
+/// zero-padded on both axes).
+fn pack_rows(a: &Matrix, r0: usize, r1: usize, cols: usize, buf: &mut [f64]) {
+    buf.fill(0.0);
+    for i in 0..(r1 - r0) {
+        let src = a.row(r0 + i);
+        buf[i * cols..i * cols + src.len()].copy_from_slice(src);
     }
 }

@@ -1,26 +1,32 @@
-//! Stub artifact engine, compiled when the `xla-runtime` feature is off.
+//! Artifact engine for builds without the `xla-runtime` feature.
 //!
-//! Presents the same API as the real PJRT-backed engine so callers,
-//! benches, and tests compile unchanged; `load` always fails with an
-//! explanatory error, and every caller already treats a failed load as
-//! "artifacts unavailable — use the pure-Rust compute path". SELECT
-//! rounds never dispatch here at all: their `O(H)` gathered-column and
-//! cross-product kernels run pure-Rust in both compute backends (see
-//! `runtime/engine.rs`).
+//! Signature-parallel with the PJRT-backed engine so callers, benches,
+//! and tests compile unchanged. [`Engine::load`] (the PJRT entry point)
+//! still fails with an explanatory error — callers treating a failed
+//! load as "compiled artifacts unavailable" keep working — but
+//! [`Engine::open`] with [`ArtifactExec::Auto`]/[`ArtifactExec::Reference`]
+//! returns a fully functional engine driven by the pure-Rust reference
+//! executor ([`RefExec`]), which executes the parameterized kernel suite
+//! under the identical padding/canonical-shape contract and is
+//! bit-identical to the streaming Rust kernels (the conformance-matrix
+//! anchor).
 
+use super::kernels::{ArtifactExec, EngineOptions, KernelMeter, PassKind, RefExec, ShapePolicy};
 use super::manifest::Manifest;
-use crate::linalg::Matrix;
-use crate::scan::CompressedParty;
-use crate::stats::AssocResult;
+use crate::linalg::{householder_qr, Matrix};
+use crate::scan::{BaseStats, CompressedParty, VariantBlockStats};
+use crate::stats::{scan_stats_from_projected_parts, AssocResult};
 use std::path::Path;
 
-/// Artifact engine stub (build lacks the `xla-runtime` feature).
+/// Artifact engine (reference executor only in this build).
 pub struct Engine {
-    pub manifest: Manifest,
+    /// manifest of a compiled artifact set, when one was present
+    pub manifest: Option<Manifest>,
+    exec: RefExec,
 }
 
 impl Engine {
-    /// Always fails: this build has no PJRT client. The manifest is
+    /// PJRT entry point — always fails in this build. The manifest is
     /// still validated first so configuration errors surface the same
     /// way in both builds.
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
@@ -28,41 +34,139 @@ impl Engine {
         anyhow::bail!(
             "artifact runtime unavailable: dash was built without the \
              `xla-runtime` feature (rebuild with `--features xla-runtime` \
-             after adding the `xla` crate to rust/Cargo.toml)"
+             after adding the `xla` crate to rust/Cargo.toml, or use \
+             `--artifact-exec reference`)"
         )
     }
 
+    /// Open an engine per the requested executor. `Pjrt` fails in this
+    /// build; `Auto` and `Reference` return the reference engine.
+    pub fn open(opts: &EngineOptions) -> anyhow::Result<Engine> {
+        match opts.exec {
+            ArtifactExec::Pjrt => Self::load(&opts.dir),
+            ArtifactExec::Auto | ArtifactExec::Reference => {
+                // a manifest is optional for the reference executor; use
+                // its geometry when present so both executors agree
+                let manifest = Manifest::load(&opts.dir).ok();
+                let mut policy = opts.policy.clone();
+                if let Some(m) = &manifest {
+                    policy.k_pad = policy.k_pad.max(m.k_pad);
+                }
+                Ok(Engine {
+                    manifest,
+                    exec: RefExec::new(policy, opts.meter.clone())?,
+                })
+            }
+        }
+    }
+
+    /// Reference engine with an explicit policy (tests/benches).
+    pub fn reference(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<Engine> {
+        Ok(Engine { manifest: None, exec: RefExec::new(policy, meter)? })
+    }
+
+    /// Entries lowered (planned) so far.
     pub fn entry_count(&self) -> usize {
-        0
+        self.exec.lowered_count()
     }
 
     pub fn platform(&self) -> String {
-        "unavailable".to_string()
+        "reference".to_string()
     }
 
-    /// Unreachable in practice — `load` never returns an `Engine`.
-    /// `ys` is the `N × T` trait matrix, matching the real engine.
+    /// Shared kernel-suite telemetry.
+    pub fn meter(&self) -> KernelMeter {
+        self.exec.meter()
+    }
+
+    pub fn policy(&self) -> &ShapePolicy {
+        self.exec.policy()
+    }
+
+    /// Variant-independent statistics through the trait-batched
+    /// `compress_xy` entry. `R_p` (plaintext-mode TSQR input only) is a
+    /// host-side `O(N_p K²)` factorization, not part of the lowered
+    /// suite.
+    pub fn compress_base(&self, ys: &Matrix, c: &Matrix) -> anyhow::Result<BaseStats> {
+        let (yty, cty, ctc) = self.exec.compress_xy(ys, c)?;
+        Ok(BaseStats { n: ys.rows, yty, cty, ctc, r: householder_qr(c).r })
+    }
+
+    /// One shard's variant statistics through the shard-width-
+    /// parameterized `compress_x` entry — a single X-side pass covering
+    /// all `T` traits, `O(shard_m·N_p)` resident block memory.
+    pub fn compress_shard(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<VariantBlockStats> {
+        self.exec.compress_x(ys, c, x, j0, j1, PassKind::Scan)
+    }
+
+    /// SELECT candidate round: gathered-shortlist statistics through the
+    /// same `compress_x` entry family (accounted as a SELECT pass).
+    pub fn compress_gathered(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        xs: &Matrix,
+    ) -> anyhow::Result<VariantBlockStats> {
+        self.exec.compress_x(ys, c, xs, 0, xs.cols, PassKind::Select)
+    }
+
+    /// SELECT promote round: the gathered-columns cross-product entry.
+    pub fn cross_products(
+        &self,
+        x: &Matrix,
+        j: usize,
+        xs: &Matrix,
+    ) -> anyhow::Result<Vec<f64>> {
+        self.exec.select_gather(x, j, xs)
+    }
+
+    /// Whole-block compress (benches / single-shot callers): the base
+    /// entry plus one full-width shard entry.
     pub fn compress_party(
         &self,
-        _ys: &Matrix,
-        _c: &Matrix,
-        _x: &Matrix,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
     ) -> anyhow::Result<CompressedParty> {
-        anyhow::bail!("artifact runtime unavailable (xla-runtime feature off)")
+        let base = self.compress_base(ys, c)?;
+        let vb = self.compress_shard(ys, c, x, 0, x.cols)?;
+        Ok(CompressedParty {
+            n: base.n,
+            yty: base.yty,
+            cty: base.cty,
+            ctc: base.ctc,
+            r: base.r,
+            xty: vb.xty,
+            xtx: vb.xtx,
+            ctx: vb.ctx,
+        })
     }
 
-    /// Unreachable in practice — `load` never returns an `Engine`.
+    /// Lemma 3.1 epilogue on aggregates (reference implementation — the
+    /// PJRT build serves this from the `scan_stats` artifact).
     #[allow(clippy::too_many_arguments)]
     pub fn scan_stats(
         &self,
-        _n: usize,
-        _k: usize,
-        _yty: f64,
-        _xty: &[f64],
-        _xtx: &[f64],
-        _qty: &[f64],
-        _qtx: &Matrix,
+        n: usize,
+        k: usize,
+        yty: f64,
+        xty: &[f64],
+        xtx: &[f64],
+        qty: &[f64],
+        qtx: &Matrix,
     ) -> anyhow::Result<AssocResult> {
-        anyhow::bail!("artifact runtime unavailable (xla-runtime feature off)")
+        let m = xty.len();
+        anyhow::ensure!(
+            xtx.len() == m && qtx.cols == m && qtx.rows == k && qty.len() == k,
+            "scan_stats shape mismatch"
+        );
+        Ok(scan_stats_from_projected_parts(n, k, yty, xty, xtx, qty, qtx))
     }
 }

@@ -1,0 +1,726 @@
+//! The parameterized artifact kernel suite: entry keys, shape policy,
+//! lowering-cache telemetry, and the reference executor.
+//!
+//! The AOT engine no longer serves two fixed whole-`M` entries
+//! (`compress_yc`/`compress_x`). Instead every artifact dispatch is keyed
+//! by an [`EntryKey`] `(kind, shard_w, n_traits)`:
+//!
+//! - [`KernelKind::CompressXy`] — the trait-batched covariate-side entry:
+//!   takes the whole `N × T` trait matrix and produces
+//!   `YᵀY (T), CᵀY (K×T), CᵀC` in one pass, instead of looping `T`
+//!   single-trait runs;
+//! - [`KernelKind::CompressX`] — the shard-width-parameterized
+//!   variant-side entry: takes one `N × w` column shard and produces
+//!   `XᵀY (w×T), X·X (w), CᵀX (K×w)`, so artifact-mode parties lower and
+//!   execute **per shard** with no transient whole-`M` materialization
+//!   (peak resident block memory is `O(shard_m·N_p)`, matching the
+//!   pure-Rust streaming path);
+//! - [`KernelKind::SelectGather`] — the gathered-columns SELECT entry:
+//!   one promoted column's cross-products against the `H` shortlisted
+//!   columns, the `O(N_p·H)` kernel of a stepwise promote round.
+//!
+//! ## Shape policy
+//!
+//! Lowered entries have static shapes, so a [`ShapePolicy`] rounds every
+//! requested `(shard_w, n_traits)` up to a small ladder of canonical
+//! shapes (`--entry-widths` / `--entry-traits`): ragged tail shards and
+//! odd trait counts are zero-padded into the nearest canonical entry and
+//! the padded lanes sliced away — exact, because every statistic is a sum
+//! of per-sample products and zero rows/columns contribute nothing. The
+//! ladder bounds the lowering cache at a handful of compiled entries per
+//! session no matter how ragged the shard plan is.
+//!
+//! ## Executors
+//!
+//! Two executors serve the suite. The PJRT executor (feature
+//! `xla-runtime`) compiles HLO artifacts and matches the Rust kernels to
+//! fp tolerance. The **reference executor** (this module, always
+//! available) executes the identical padding/blocking contract in pure
+//! Rust with the *same per-element accumulation order* as the streaming
+//! kernels in [`crate::scan::compressed`] — so artifact-mode sessions
+//! driven by it are **bit-identical** to Rust-mode sessions, which is the
+//! anchor the cross-backend conformance matrix (`tests/conformance.rs`)
+//! asserts. Telemetry ([`KernelMeter`]) records lowering-cache behavior,
+//! per-kind pass counts, and peak resident padded-block bytes, shared
+//! with the session plumbing the way [`crate::net::ByteMeter`] is.
+
+use crate::linalg::Matrix;
+use crate::scan::{cross_products, VariantBlockStats};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which kernel an artifact entry implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelKind {
+    /// Trait-batched covariate-side compress: `Y, C → YᵀY, CᵀY, CᵀC`.
+    CompressXy,
+    /// Shard-width-parameterized variant-side compress:
+    /// `Y, C, X_shard → XᵀY, X·X, CᵀX`.
+    CompressX,
+    /// Gathered-columns SELECT cross-products: `x_j, X_S → x_jᵀX_S`.
+    SelectGather,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::CompressXy => "compress_xy",
+            KernelKind::CompressX => "compress_x",
+            KernelKind::SelectGather => "select_gather",
+        }
+    }
+}
+
+/// Cache key of one lowered artifact entry. `shard_w` is the canonical
+/// variant-column width (0 for the width-free `CompressXy`); `n_traits`
+/// the canonical trait-batch width (1 for `SelectGather`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EntryKey {
+    pub kind: KernelKind,
+    pub shard_w: usize,
+    pub n_traits: usize,
+}
+
+impl EntryKey {
+    /// Manifest/file name of this entry (`compress_x.w64.t16`,
+    /// `compress_xy.t4`, `select_gather.h256`).
+    pub fn entry_name(&self) -> String {
+        match self.kind {
+            KernelKind::CompressXy => format!("compress_xy.t{}", self.n_traits),
+            KernelKind::CompressX => {
+                format!("compress_x.w{}.t{}", self.shard_w, self.n_traits)
+            }
+            KernelKind::SelectGather => format!("select_gather.h{}", self.shard_w),
+        }
+    }
+}
+
+/// Canonical entry shapes: requested widths/trait counts are rounded up
+/// the ladder; requests beyond the top rung round up to a multiple of it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapePolicy {
+    /// canonical shard widths (strictly ascending)
+    pub widths: Vec<usize>,
+    /// canonical trait-batch widths (strictly ascending)
+    pub trait_batches: Vec<usize>,
+    /// covariate padding (entries are lowered at `K = k_pad`)
+    pub k_pad: usize,
+}
+
+impl Default for ShapePolicy {
+    fn default() -> Self {
+        ShapePolicy {
+            widths: vec![64, 256, 1024, 4096],
+            trait_batches: vec![1, 4, 16, 64],
+            k_pad: 16,
+        }
+    }
+}
+
+impl ShapePolicy {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (what, ladder) in
+            [("entry widths", &self.widths), ("entry trait batches", &self.trait_batches)]
+        {
+            anyhow::ensure!(!ladder.is_empty(), "{what}: empty ladder");
+            anyhow::ensure!(ladder[0] > 0, "{what}: zero rung");
+            for w in ladder.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "{what}: ladder must be strictly ascending");
+            }
+        }
+        anyhow::ensure!(self.k_pad >= 1, "k_pad must be ≥ 1");
+        Ok(())
+    }
+
+    fn canon(v: usize, ladder: &[usize]) -> usize {
+        match ladder.iter().find(|&&r| r >= v) {
+            Some(&r) => r,
+            // beyond the top rung: round up to a multiple of it, so e.g.
+            // a whole-M single-shot still lowers exactly one entry
+            None => {
+                let top = *ladder.last().expect("validated non-empty");
+                v.div_ceil(top) * top
+            }
+        }
+    }
+
+    /// Canonical shard width covering `w` columns.
+    pub fn canon_width(&self, w: usize) -> usize {
+        Self::canon(w, &self.widths)
+    }
+
+    /// Canonical trait batch covering `t` traits.
+    pub fn canon_traits(&self, t: usize) -> usize {
+        Self::canon(t, &self.trait_batches)
+    }
+
+    /// Canonical key for a requested dispatch shape.
+    pub fn canon_key(&self, kind: KernelKind, w: usize, t: usize) -> EntryKey {
+        match kind {
+            KernelKind::CompressXy => {
+                EntryKey { kind, shard_w: 0, n_traits: self.canon_traits(t) }
+            }
+            KernelKind::CompressX => EntryKey {
+                kind,
+                shard_w: self.canon_width(w),
+                n_traits: self.canon_traits(t),
+            },
+            KernelKind::SelectGather => {
+                EntryKey { kind, shard_w: self.canon_width(w), n_traits: 1 }
+            }
+        }
+    }
+
+    /// The full pre-lowerable suite for this policy (what `make
+    /// artifacts` exports; on-ladder shapes only — beyond-ladder shapes
+    /// are lowered on demand).
+    pub fn suite(&self) -> Vec<EntryKey> {
+        let mut keys = Vec::new();
+        for &t in &self.trait_batches {
+            keys.push(EntryKey { kind: KernelKind::CompressXy, shard_w: 0, n_traits: t });
+            for &w in &self.widths {
+                keys.push(EntryKey { kind: KernelKind::CompressX, shard_w: w, n_traits: t });
+            }
+        }
+        for &w in &self.widths {
+            keys.push(EntryKey { kind: KernelKind::SelectGather, shard_w: w, n_traits: 1 });
+        }
+        keys
+    }
+
+    /// Parse a `64,256,1024` CSV ladder (CLI/config).
+    pub fn parse_ladder(s: &str, what: &str) -> anyhow::Result<Vec<usize>> {
+        let v: Vec<usize> = s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("{what}: bad rung `{x}`: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!v.is_empty(), "{what}: empty ladder");
+        Ok(v)
+    }
+}
+
+/// Which executor serves the artifact suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ArtifactExec {
+    /// PJRT when the build + artifact set allow it, reference otherwise.
+    #[default]
+    Auto,
+    /// PJRT only — error when the `xla-runtime` feature/artifacts are
+    /// unavailable.
+    Pjrt,
+    /// The pure-Rust reference executor (bit-identical to the streaming
+    /// kernels; always available).
+    Reference,
+}
+
+impl ArtifactExec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArtifactExec::Auto => "auto",
+            ArtifactExec::Pjrt => "pjrt",
+            ArtifactExec::Reference => "reference",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ArtifactExec> {
+        match s {
+            "auto" => Ok(ArtifactExec::Auto),
+            "pjrt" => Ok(ArtifactExec::Pjrt),
+            "reference" => Ok(ArtifactExec::Reference),
+            other => anyhow::bail!("unknown artifact exec `{other}` (auto|pjrt|reference)"),
+        }
+    }
+}
+
+/// How to open an artifact [`crate::runtime::Engine`].
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// directory holding `manifest.json` (PJRT executor; optional for
+    /// the reference executor)
+    pub dir: String,
+    pub exec: ArtifactExec,
+    pub policy: ShapePolicy,
+    /// shared telemetry sink (clone of the session's per-party meter)
+    pub meter: KernelMeter,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            dir: "artifacts".to_string(),
+            exec: ArtifactExec::Auto,
+            policy: ShapePolicy::default(),
+            meter: KernelMeter::new(),
+        }
+    }
+}
+
+/// Which pass a `CompressX` execution is accounted to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PassKind {
+    /// scan-phase shard compress
+    Scan,
+    /// SELECT candidate-round gathered compress
+    Select,
+}
+
+/// Thread-safe kernel-suite telemetry, shared with the session plumbing
+/// the way [`crate::net::ByteMeter`] is: lowering-cache behavior, pass
+/// counts per kernel kind, and peak resident padded-block bytes. The
+/// peak is the memory-regression handle: in a sharded artifact session
+/// it must track `O(shard_m·N_p)`, not `O(M·N_p)`.
+#[derive(Clone, Debug, Default)]
+pub struct KernelMeter {
+    inner: Arc<MeterInner>,
+}
+
+#[derive(Debug, Default)]
+struct MeterInner {
+    lowered: AtomicU64,
+    cache_hits: AtomicU64,
+    xside_passes: AtomicU64,
+    yside_passes: AtomicU64,
+    select_passes: AtomicU64,
+    cur_block_bytes: AtomicU64,
+    peak_block_bytes: AtomicU64,
+}
+
+impl KernelMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn record_lower(&self) {
+        self.inner.lowered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_hit(&self) {
+        self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_pass(&self, kind: KernelKind, pass: PassKind) {
+        let slot = match (kind, pass) {
+            (KernelKind::CompressX, PassKind::Scan) => &self.inner.xside_passes,
+            (KernelKind::CompressXy, _) => &self.inner.yside_passes,
+            _ => &self.inner.select_passes,
+        };
+        slot.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn enter_block(&self, bytes: u64) {
+        let cur = self.inner.cur_block_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.peak_block_bytes.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub(crate) fn exit_block(&self, bytes: u64) {
+        self.inner.cur_block_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Distinct entries lowered (compiled / planned) so far.
+    pub fn lowered_entries(&self) -> u64 {
+        self.inner.lowered.load(Ordering::Relaxed)
+    }
+
+    /// Dispatches served from the lowering cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.inner.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Scan-phase `CompressX` executions — one per shard, **independent
+    /// of T** (the trait-batching claim asserted by the conformance
+    /// matrix).
+    pub fn xside_passes(&self) -> u64 {
+        self.inner.xside_passes.load(Ordering::Relaxed)
+    }
+
+    /// `CompressXy` executions — one per session.
+    pub fn yside_passes(&self) -> u64 {
+        self.inner.yside_passes.load(Ordering::Relaxed)
+    }
+
+    /// SELECT-phase executions (candidate gather + promote rounds).
+    pub fn select_passes(&self) -> u64 {
+        self.inner.select_passes.load(Ordering::Relaxed)
+    }
+
+    /// Peak bytes of padded kernel blocks resident at once.
+    pub fn peak_block_bytes(&self) -> u64 {
+        self.inner.peak_block_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// The reference executor: pure-Rust execution of the parameterized
+/// suite under the exact padding contract of the lowered artifacts, with
+/// per-element accumulation order identical to the streaming kernels in
+/// [`crate::scan::compressed`] — bit-identical outputs by construction
+/// (padded rows/columns contribute exact zeros; see module docs).
+#[derive(Debug)]
+pub struct RefExec {
+    policy: ShapePolicy,
+    meter: KernelMeter,
+    lowered: Mutex<BTreeSet<EntryKey>>,
+}
+
+impl RefExec {
+    pub fn new(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<RefExec> {
+        policy.validate()?;
+        Ok(RefExec { policy, meter, lowered: Mutex::new(BTreeSet::new()) })
+    }
+
+    pub fn policy(&self) -> &ShapePolicy {
+        &self.policy
+    }
+
+    pub fn meter(&self) -> KernelMeter {
+        self.meter.clone()
+    }
+
+    /// Entries lowered (planned) so far.
+    pub fn lowered_count(&self) -> usize {
+        self.lowered.lock().expect("lowering cache poisoned").len()
+    }
+
+    /// Lowering-cache touch: first dispatch of a key "lowers" it (for
+    /// the reference executor, planning the padded loop; for PJRT,
+    /// compiling the artifact), later dispatches hit the cache.
+    fn touch(&self, key: EntryKey) {
+        let mut cache = self.lowered.lock().expect("lowering cache poisoned");
+        if cache.insert(key) {
+            self.meter.record_lower();
+        } else {
+            self.meter.record_hit();
+        }
+    }
+
+    fn ensure_k(&self, k: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            k <= self.policy.k_pad,
+            "K={k} exceeds entry k_pad={} (raise --entry-k-pad / re-run `make artifacts`)",
+            self.policy.k_pad
+        );
+        Ok(())
+    }
+
+    /// Trait-batched covariate-side entry: `(YᵀY, CᵀY, CᵀC)` with the
+    /// trait axis padded to the canonical batch and sliced back.
+    pub fn compress_xy(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+    ) -> anyhow::Result<(Vec<f64>, Matrix, Matrix)> {
+        let n = ys.rows;
+        anyhow::ensure!(c.rows == n, "C rows != N");
+        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
+        let (k, t) = (c.cols, ys.cols);
+        self.ensure_k(k)?;
+        let kp = self.policy.k_pad;
+        let tc = self.policy.canon_traits(t);
+        let key = self.policy.canon_key(KernelKind::CompressXy, 0, t);
+        self.touch(key);
+        self.meter.record_pass(KernelKind::CompressXy, PassKind::Scan);
+
+        let block_bytes = 8 * (n * (tc + kp) + tc + kp * tc + kp * kp) as u64;
+        self.meter.enter_block(block_bytes);
+        let ys_p = pad_cols(ys, tc);
+        let c_p = pad_cols(c, kp);
+        // Same per-element accumulation as `compress_base`: ordered fold
+        // over samples for YᵀY, `t_matvec` per trait column for CᵀY,
+        // `gram` for CᵀC — zero-padded lanes feed zero products only.
+        let mut yty_p = Vec::with_capacity(tc);
+        let mut cty_p = Matrix::zeros(kp, tc);
+        for tt in 0..tc {
+            let y = ys_p.col(tt);
+            yty_p.push(y.iter().map(|v| v * v).sum());
+            for (i, v) in c_p.t_matvec(&y).into_iter().enumerate() {
+                cty_p[(i, tt)] = v;
+            }
+        }
+        let ctc_p = c_p.gram();
+        self.meter.exit_block(block_bytes);
+
+        yty_p.truncate(t);
+        let mut cty = Matrix::zeros(k, t);
+        for i in 0..k {
+            for tt in 0..t {
+                cty[(i, tt)] = cty_p[(i, tt)];
+            }
+        }
+        let mut ctc = Matrix::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                ctc[(i, j)] = ctc_p[(i, j)];
+            }
+        }
+        Ok((yty_p, cty, ctc))
+    }
+
+    /// Shard-width-parameterized variant-side entry over columns
+    /// `[j0, j1)` of `x`, all `T` traits in one pass.
+    pub fn compress_x(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        j0: usize,
+        j1: usize,
+        pass: PassKind,
+    ) -> anyhow::Result<VariantBlockStats> {
+        let n = ys.rows;
+        anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
+        anyhow::ensure!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
+        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
+        let (k, t, w) = (c.cols, ys.cols, j1 - j0);
+        self.ensure_k(k)?;
+        if w == 0 {
+            // zero-width shard of an empty plan: nothing to lower
+            return Ok(VariantBlockStats {
+                j0,
+                xty: Matrix::zeros(0, t),
+                xtx: vec![],
+                ctx: Matrix::zeros(k, 0),
+            });
+        }
+        let kp = self.policy.k_pad;
+        let wc = self.policy.canon_width(w);
+        let tc = self.policy.canon_traits(t);
+        let key = self.policy.canon_key(KernelKind::CompressX, w, t);
+        self.touch(key);
+        self.meter.record_pass(KernelKind::CompressX, pass);
+
+        let block_bytes = 8 * (n * (wc + tc + kp) + wc * tc + wc + kp * wc) as u64;
+        self.meter.enter_block(block_bytes);
+        let mut x_p = Matrix::zeros(n, wc);
+        for i in 0..n {
+            x_p.row_mut(i)[..w].copy_from_slice(&x.row(i)[j0..j1]);
+        }
+        let ys_p = pad_cols(ys, tc);
+        let c_p = pad_cols(c, kp);
+
+        // Dense axpy accumulation in sample order — the exact per-element
+        // order of `compress_variant_block` (each output element is a sum
+        // over samples `i = 0..n` ascending).
+        let mut xty_p = Matrix::zeros(wc, tc);
+        let mut xtx_p = vec![0.0f64; wc];
+        let mut ctx_p = Matrix::zeros(kp, wc);
+        for i in 0..n {
+            let y_row = ys_p.row(i);
+            let x_row = x_p.row(i);
+            let c_row = c_p.row(i);
+            for (j, &xv) in x_row.iter().enumerate() {
+                xtx_p[j] += xv * xv;
+                let lane = &mut xty_p.data[j * tc..(j + 1) * tc];
+                for (o, &yv) in lane.iter_mut().zip(y_row) {
+                    *o += xv * yv;
+                }
+            }
+            for (kk, &cv) in c_row.iter().enumerate() {
+                let row = ctx_p.row_mut(kk);
+                for (r, &xv) in row.iter_mut().zip(x_row) {
+                    *r += cv * xv;
+                }
+            }
+        }
+        self.meter.exit_block(block_bytes);
+
+        // Slice the canonical padding away.
+        let mut xty = Matrix::zeros(w, t);
+        for j in 0..w {
+            xty.row_mut(j).copy_from_slice(&xty_p.row(j)[..t]);
+        }
+        xtx_p.truncate(w);
+        let mut ctx = Matrix::zeros(k, w);
+        for kk in 0..k {
+            ctx.row_mut(kk).copy_from_slice(&ctx_p.row(kk)[..w]);
+        }
+        Ok(VariantBlockStats { j0, xty, xtx: xtx_p, ctx })
+    }
+
+    /// Gathered-columns SELECT entry: cross-products of column `j` of
+    /// `x` against the gathered shortlist `xs`, padded to the canonical
+    /// width and sliced back.
+    pub fn select_gather(&self, x: &Matrix, j: usize, xs: &Matrix) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(j < x.cols, "variant {j} out of range");
+        anyhow::ensure!(x.rows == xs.rows, "row mismatch");
+        anyhow::ensure!(xs.cols >= 1, "empty shortlist");
+        let h = xs.cols;
+        let hc = self.policy.canon_width(h);
+        let key = self.policy.canon_key(KernelKind::SelectGather, h, 1);
+        self.touch(key);
+        self.meter.record_pass(KernelKind::SelectGather, PassKind::Select);
+
+        let block_bytes = 8 * (xs.rows * hc + hc) as u64;
+        self.meter.enter_block(block_bytes);
+        let xs_p = pad_cols(xs, hc);
+        // same accumulation (and zero-skip) as the pure-Rust kernel
+        let mut v = cross_products(x, j, &xs_p);
+        self.meter.exit_block(block_bytes);
+        v.truncate(h);
+        Ok(v)
+    }
+}
+
+/// Zero-pad a matrix on the right to `cols` columns.
+fn pad_cols(a: &Matrix, cols: usize) -> Matrix {
+    debug_assert!(cols >= a.cols);
+    let mut out = Matrix::zeros(a.rows, cols);
+    for i in 0..a.rows {
+        out.row_mut(i)[..a.cols].copy_from_slice(a.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::{compress_base, compress_variant_block};
+    use crate::util::rng::Rng;
+
+    fn make(n: usize, k: usize, m: usize, t: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+        }
+        (Matrix::randn(n, t, &mut rng), c, Matrix::randn(n, m, &mut rng))
+    }
+
+    fn exec() -> RefExec {
+        RefExec::new(ShapePolicy::default(), KernelMeter::new()).unwrap()
+    }
+
+    #[test]
+    fn canonical_rounding() {
+        let p = ShapePolicy::default();
+        assert_eq!(p.canon_width(1), 64);
+        assert_eq!(p.canon_width(64), 64);
+        assert_eq!(p.canon_width(65), 256);
+        assert_eq!(p.canon_width(4096), 4096);
+        // beyond the ladder: round up to a multiple of the top rung
+        assert_eq!(p.canon_width(5000), 8192);
+        assert_eq!(p.canon_traits(1), 1);
+        assert_eq!(p.canon_traits(5), 16);
+        assert_eq!(p.canon_traits(200), 256);
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(ShapePolicy::default().validate().is_ok());
+        let bad = ShapePolicy { widths: vec![64, 64], ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ShapePolicy { trait_batches: vec![], ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ShapePolicy { widths: vec![0, 4], ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn entry_names_and_suite() {
+        let p = ShapePolicy {
+            widths: vec![8, 32],
+            trait_batches: vec![1, 4],
+            k_pad: 8,
+        };
+        let key = p.canon_key(KernelKind::CompressX, 7, 3);
+        assert_eq!(key.entry_name(), "compress_x.w8.t4");
+        assert_eq!(
+            p.canon_key(KernelKind::CompressXy, 99, 1).entry_name(),
+            "compress_xy.t1"
+        );
+        assert_eq!(
+            p.canon_key(KernelKind::SelectGather, 9, 7).entry_name(),
+            "select_gather.h32"
+        );
+        // suite: |T|·(1 + |W|) compress entries + |W| select entries
+        assert_eq!(p.suite().len(), 2 * (1 + 2) + 2);
+    }
+
+    #[test]
+    fn compress_xy_bit_identical_to_rust_base() {
+        let (ys, c, _) = make(83, 5, 3, 7, 9001);
+        let (yty, cty, ctc) = exec().compress_xy(&ys, &c).unwrap();
+        let base = compress_base(&ys, &c);
+        assert_eq!(yty.len(), 7);
+        for tt in 0..7 {
+            assert_eq!(yty[tt].to_bits(), base.yty[tt].to_bits(), "yty {tt}");
+        }
+        assert_eq!(cty.data, base.cty.data);
+        assert_eq!(ctc.data, base.ctc.data);
+    }
+
+    #[test]
+    fn compress_x_bit_identical_to_rust_shard() {
+        let (ys, c, x) = make(70, 4, 41, 3, 9002);
+        let e = exec();
+        for (j0, j1) in [(0usize, 41usize), (0, 7), (7, 40), (40, 41)] {
+            let fast = e.compress_x(&ys, &c, &x, j0, j1, PassKind::Scan).unwrap();
+            let slow = compress_variant_block(&ys, &c, &x, j0, j1, 16, Some(2));
+            assert_eq!(fast.xty.data, slow.xty.data, "xty {j0}..{j1}");
+            assert_eq!(fast.xtx, slow.xtx, "xtx {j0}..{j1}");
+            assert_eq!(fast.ctx.data, slow.ctx.data, "ctx {j0}..{j1}");
+        }
+    }
+
+    #[test]
+    fn select_gather_bit_identical_to_rust_kernel() {
+        let (_, _, x) = make(60, 2, 12, 1, 9003);
+        let xs = x.gather_cols(&[1, 4, 9]);
+        let fast = exec().select_gather(&x, 4, &xs).unwrap();
+        let slow = cross_products(&x, 4, &xs);
+        assert_eq!(fast.len(), 3);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn lowering_cache_dedups_ragged_shapes() {
+        let (ys, c, x) = make(50, 3, 30, 2, 9004);
+        let e = exec();
+        // three ragged shards, all canonicalized to the w=64 entry
+        for (j0, j1) in [(0usize, 10usize), (10, 23), (23, 30)] {
+            e.compress_x(&ys, &c, &x, j0, j1, PassKind::Scan).unwrap();
+        }
+        assert_eq!(e.lowered_count(), 1);
+        let m = e.meter();
+        assert_eq!(m.lowered_entries(), 1);
+        assert_eq!(m.cache_hits(), 2);
+        assert_eq!(m.xside_passes(), 3);
+    }
+
+    #[test]
+    fn meter_tracks_peak_block_bytes() {
+        let (ys, c, x) = make(40, 3, 100, 1, 9005);
+        let e = exec();
+        e.compress_x(&ys, &c, &x, 0, 10, PassKind::Scan).unwrap();
+        let narrow = e.meter().peak_block_bytes();
+        assert!(narrow > 0);
+        e.compress_x(&ys, &c, &x, 0, 100, PassKind::Scan).unwrap();
+        let wide = e.meter().peak_block_bytes();
+        // canon(10)=64 vs canon(100)=256 input blocks
+        assert!(wide > narrow, "peak should grow with shard width: {narrow} vs {wide}");
+    }
+
+    #[test]
+    fn k_pad_overflow_rejected() {
+        let (ys, c, x) = make(20, 5, 4, 1, 9006);
+        let policy = ShapePolicy { k_pad: 4, ..Default::default() };
+        let e = RefExec::new(policy, KernelMeter::new()).unwrap();
+        assert!(e.compress_xy(&ys, &c).is_err());
+        assert!(e.compress_x(&ys, &c, &x, 0, 4, PassKind::Scan).is_err());
+    }
+
+    #[test]
+    fn zero_width_shard_is_noop() {
+        let (ys, c, x) = make(20, 3, 4, 2, 9007);
+        let e = exec();
+        let vb = e.compress_x(&ys, &c, &x, 2, 2, PassKind::Scan).unwrap();
+        assert_eq!(vb.width(), 0);
+        assert_eq!(vb.t(), 2);
+        assert_eq!(e.lowered_count(), 0, "no entry lowered for empty shard");
+    }
+}

@@ -1,4 +1,14 @@
 //! Artifact manifest: block geometry + entry-point file map.
+//!
+//! Two generations of artifact sets are accepted:
+//!
+//! - **suite manifests** (current): parameterized entries named by their
+//!   canonical shape — `compress_xy.t{T}`, `compress_x.w{W}.t{T}`,
+//!   `select_gather.h{H}` — plus optional `widths`/`trait_batches`
+//!   arrays recording the shape-policy ladder they were lowered for;
+//! - **legacy manifests**: the fixed `compress_x`/`compress_yc`/
+//!   `scan_stats` trio. The engine serves suite dispatches that a legacy
+//!   set lacks from the reference executor.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -12,6 +22,10 @@ pub struct Manifest {
     pub m_block: usize,
     pub k_pad: usize,
     pub dtype: String,
+    /// canonical shard widths the suite was lowered for (suite manifests)
+    pub widths: Option<Vec<usize>>,
+    /// canonical trait batches the suite was lowered for (suite manifests)
+    pub trait_batches: Option<Vec<usize>>,
     /// entry name → HLO text file (relative to `dir`)
     pub entries: BTreeMap<String, String>,
 }
@@ -29,6 +43,8 @@ impl Manifest {
         let k_pad = v.req_usize("k_pad")?;
         let dtype = v.req_str("dtype")?.to_string();
         anyhow::ensure!(dtype == "f64", "runtime expects f64 artifacts, got {dtype}");
+        let widths = parse_ladder(&v, "widths")?;
+        let trait_batches = parse_ladder(&v, "trait_batches")?;
         let mut entries = BTreeMap::new();
         match v.get("entries") {
             Some(Json::Obj(m)) => {
@@ -43,17 +59,47 @@ impl Manifest {
             }
             _ => anyhow::bail!("manifest missing `entries` object"),
         }
-        for required in ["compress_x", "compress_yc", "scan_stats"] {
-            anyhow::ensure!(entries.contains_key(required), "manifest missing entry `{required}`");
-        }
-        Ok(Manifest { dir, n_block, m_block, k_pad, dtype, entries })
+        let legacy = ["compress_x", "compress_yc", "scan_stats"]
+            .iter()
+            .all(|r| entries.contains_key(*r));
+        let suite = entries
+            .keys()
+            .any(|k| k.starts_with("compress_xy.") || k.starts_with("compress_x.w"));
+        anyhow::ensure!(
+            legacy || suite,
+            "manifest carries neither the legacy entry trio nor any \
+             parameterized suite entry (re-run `make artifacts`)"
+        );
+        Ok(Manifest { dir, n_block, m_block, k_pad, dtype, widths, trait_batches, entries })
     }
 
     pub fn entry_path(&self, name: &str) -> anyhow::Result<PathBuf> {
-        self.entries
-            .get(name)
-            .map(|f| self.dir.join(f))
+        self.entry_path_opt(name)
             .ok_or_else(|| anyhow::anyhow!("no artifact entry `{name}`"))
+    }
+
+    /// Path of an entry, `None` when the artifact set does not carry it
+    /// (the engine falls back to the reference executor).
+    pub fn entry_path_opt(&self, name: &str) -> Option<PathBuf> {
+        self.entries.get(name).map(|f| self.dir.join(f))
+    }
+}
+
+fn parse_ladder(v: &Json, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Arr(a)) => {
+            let ladder: Vec<usize> = a
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric element in {key}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(!ladder.is_empty(), "{key} must be non-empty");
+            Ok(Some(ladder))
+        }
+        _ => anyhow::bail!("{key} must be an array"),
     }
 }
 
@@ -76,7 +122,7 @@ mod tests {
     }
 
     #[test]
-    fn loads_valid_manifest() {
+    fn loads_valid_legacy_manifest() {
         let d = tmpdir("ok");
         write_fake(
             &d,
@@ -88,8 +134,40 @@ mod tests {
         assert_eq!(m.n_block, 512);
         assert_eq!(m.m_block, 256);
         assert_eq!(m.k_pad, 16);
+        assert!(m.widths.is_none());
         assert!(m.entry_path("compress_x").unwrap().ends_with("a.txt"));
         assert!(m.entry_path("nope").is_err());
+        assert!(m.entry_path_opt("compress_x.w64.t1").is_none());
+    }
+
+    #[test]
+    fn loads_suite_manifest() {
+        let d = tmpdir("suite");
+        write_fake(
+            &d,
+            r#"{"version":2,"dtype":"f64","n_block":512,"m_block":256,"k_pad":16,
+                "widths":[64,256],"trait_batches":[1,16],
+                "entries":{"compress_xy.t1":"xy1.txt","compress_x.w64.t1":"x641.txt",
+                           "select_gather.h64":"sg64.txt"}}"#,
+            &["xy1.txt", "x641.txt", "sg64.txt"],
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.widths.as_deref(), Some(&[64, 256][..]));
+        assert_eq!(m.trait_batches.as_deref(), Some(&[1, 16][..]));
+        assert!(m.entry_path_opt("compress_x.w64.t1").is_some());
+        assert!(m.entry_path_opt("compress_x.w256.t16").is_none());
+    }
+
+    #[test]
+    fn rejects_entryless_manifest() {
+        let d = tmpdir("noentries");
+        write_fake(
+            &d,
+            r#"{"version":2,"dtype":"f64","n_block":512,"m_block":256,"k_pad":16,
+                "entries":{"something_else":"a.txt"}}"#,
+            &["a.txt"],
+        );
+        assert!(Manifest::load(&d).is_err());
     }
 
     #[test]

@@ -1,34 +1,44 @@
-//! PJRT runtime: loads the AOT artifacts and serves the compress /
-//! scan-stats hot path from Rust.
+//! Artifact runtime: the parameterized kernel suite behind the compress /
+//! SELECT hot paths.
 //!
-//! `make artifacts` (Python, build-time only) writes
-//! `artifacts/{compress_x,compress_yc,scan_stats}.hlo.txt` plus
-//! `manifest.json` with the block geometry. This module loads the HLO
-//! *text* (`HloModuleProto::from_text_file` — the id-renumbering parser;
-//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1),
-//! compiles each entry once on the CPU PJRT client, and exposes typed
-//! wrappers that handle the padding/slicing contract:
+//! Every artifact dispatch is keyed by an [`EntryKey`]
+//! `(kind, shard_w, n_traits)` and canonicalized through a
+//! [`ShapePolicy`] (a small ladder of canonical shard widths and trait
+//! batches; ragged shapes are zero-padded into the nearest entry and the
+//! padding sliced away — exact, since every statistic is a sum of
+//! per-sample products). The suite has three kinds
+//! ([`KernelKind`]): the trait-batched covariate-side `compress_xy`, the
+//! shard-width-parameterized variant-side `compress_x` (one X-side pass
+//! per shard covering all `T` traits, `O(shard_m·N_p)` resident block
+//! memory), and the gathered-columns `select_gather` serving the SELECT
+//! promote rounds.
 //!
-//! - sample blocks of `n_block` rows; tail blocks are zero-padded (exact:
-//!   every statistic is a sum of per-sample products),
-//! - covariates zero-padded to `k_pad` columns; the padded rows/cols of
-//!   `CᵀX`/`CᵀC` are sliced away before factorization,
-//! - variant blocks of `m_block` columns; padded lanes produce NaN in
-//!   `scan_stats` and are sliced away.
+//! Two executors serve the suite behind one [`Engine`] API:
 //!
-//! The wrappers are `!Send` (PJRT pointers) — each party thread owns its
-//! own [`Engine`], mirroring the one-process-per-party deployment.
+//! - the **PJRT executor** (`--features xla-runtime`, the production hot
+//!   path): `make artifacts` (Python, build-time only) lowers the suite
+//!   to `artifacts/*.hlo.txt` + `manifest.json`; entries compile once on
+//!   the CPU PJRT client and execute per sample block. HLO *text* is the
+//!   interchange format (`HloModuleProto::from_text_file`, the
+//!   id-renumbering parser — serialized protos from jax ≥ 0.5 are
+//!   rejected by xla_extension 0.5.1). Matches the Rust kernels to fp
+//!   tolerance. The engine is `!Send` (PJRT pointers) — each party
+//!   thread owns its own [`Engine`], mirroring the one-process-per-party
+//!   deployment.
+//! - the **reference executor** (always available, both builds): the
+//!   same padding/canonical-shape contract executed in pure Rust with
+//!   per-element accumulation order identical to the streaming kernels —
+//!   **bit-identical** to the Rust compute path, which is what the
+//!   cross-backend conformance matrix pins down.
 //!
-//! ## Feature gating
-//!
-//! The real engine needs the `xla` native bindings, which cannot be
-//! vendored. It compiles only with `--features xla-runtime` (after adding
-//! the `xla` crate to `rust/Cargo.toml` by hand). Without the feature a
-//! stub [`Engine`] with the same API is compiled whose `load` always
-//! errors — callers already treat a failed load as "artifacts
-//! unavailable, use the pure-Rust compute path", so the whole pipeline
-//! (including the sharded scan) works in either build.
+//! [`Engine::open`] picks the executor per [`ArtifactExec`]
+//! (`auto`/`pjrt`/`reference`); without the `xla-runtime` feature `pjrt`
+//! fails with an explanatory error and `auto` resolves to the reference
+//! executor, so artifact-mode sessions run in every build. Per-dispatch
+//! telemetry (lowering-cache hits, per-kind pass counts, peak resident
+//! padded-block bytes) flows through the shared [`KernelMeter`].
 
+mod kernels;
 mod manifest;
 
 #[cfg(feature = "xla-runtime")]
@@ -38,4 +48,7 @@ mod engine;
 mod engine;
 
 pub use engine::Engine;
+pub use kernels::{
+    ArtifactExec, EngineOptions, EntryKey, KernelKind, KernelMeter, PassKind, ShapePolicy,
+};
 pub use manifest::Manifest;

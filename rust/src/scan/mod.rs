@@ -30,11 +30,15 @@
 //! sharded scan is **bit-identical** to the single-shot scan — and the
 //! single-shot path *is* the degenerate one-shard plan (`shard_m == 0`).
 //!
-//! Two compute paths produce identical `CompressedParty` values:
-//! a pure-Rust reference path (always available; used by tests and as the
-//! plaintext baseline) and the AOT-compiled XLA path driven by
-//! [`crate::runtime`] (the production hot path, loaded from
-//! `artifacts/*.hlo.txt`).
+//! Two compute paths produce identical `CompressedParty` values: the
+//! pure-Rust streaming kernels in this module, and the parameterized
+//! artifact kernel suite driven by [`crate::runtime`] — per-shard
+//! `compress_x` entries, a trait-batched `compress_xy` entry, and a
+//! gathered-columns SELECT entry, served by the PJRT executor (the
+//! production hot path, `artifacts/*.hlo.txt`) or by the bit-identical
+//! pure-Rust reference executor (always available; the conformance
+//! matrix in `tests/conformance.rs` pins artifact-mode sessions to the
+//! Rust path bit-for-bit).
 //!
 //! ## The SELECT phase (iterative forward stepwise)
 //!
@@ -87,10 +91,18 @@ pub struct ScanConfig {
     pub shard_m: usize,
     /// R-factor method for the combine stage (TSQR vs Gram+Cholesky)
     pub r_method: RFactorMethod,
-    /// use the AOT artifacts runtime for compression when available
+    /// use the artifact kernel suite for compression
     pub use_artifacts: bool,
     /// directory holding artifacts/manifest.json
     pub artifacts_dir: String,
+    /// which executor serves the artifact suite (auto|pjrt|reference)
+    pub artifact_exec: crate::runtime::ArtifactExec,
+    /// canonical shard widths of the artifact entry-shape policy
+    pub entry_widths: Vec<usize>,
+    /// canonical trait batches of the artifact entry-shape policy
+    pub entry_traits: Vec<usize>,
+    /// covariate padding of the artifact entries
+    pub entry_k_pad: usize,
     /// maximum SELECT rounds after the scan (0 = scan only)
     pub select_k: usize,
     /// SELECT stop rule: a round only promotes a variant whose entry
@@ -114,10 +126,25 @@ impl Default for ScanConfig {
             r_method: RFactorMethod::Auto,
             use_artifacts: false,
             artifacts_dir: "artifacts".to_string(),
+            artifact_exec: crate::runtime::ArtifactExec::Auto,
+            entry_widths: crate::runtime::ShapePolicy::default().widths,
+            entry_traits: crate::runtime::ShapePolicy::default().trait_batches,
+            entry_k_pad: crate::runtime::ShapePolicy::default().k_pad,
             select_k: 0,
             select_alpha: 1e-4,
             select_policy: SelectPolicy::Union,
             select_candidates: 32,
+        }
+    }
+}
+
+impl ScanConfig {
+    /// Entry-shape policy of the artifact kernel suite for this config.
+    pub fn entry_policy(&self) -> crate::runtime::ShapePolicy {
+        crate::runtime::ShapePolicy {
+            widths: self.entry_widths.clone(),
+            trait_batches: self.entry_traits.clone(),
+            k_pad: self.entry_k_pad,
         }
     }
 }

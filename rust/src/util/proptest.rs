@@ -47,6 +47,23 @@ pub fn run_prop<T: std::fmt::Debug>(
     }
 }
 
+/// Generator: an `f64` exactly representable in `frac_bits` fixed point,
+/// uniform over `±2^mag_bits` on the fixed-point grid. Secure-sum
+/// round-trips of such values are *lossless* (encode/decode is exact and
+/// ring/field sums are exact integers), so properties over them can
+/// assert bit-identity rather than tolerance.
+pub fn fixed_repr(rng: &mut Rng, frac_bits: u32, mag_bits: u32) -> f64 {
+    assert!(frac_bits + mag_bits < 52, "grid must stay exactly representable");
+    let span = 1u64 << (frac_bits + mag_bits);
+    let raw = rng.below(2 * span + 1) as i64 - span as i64;
+    raw as f64 / (1u64 << frac_bits) as f64
+}
+
+/// Generator: a vector of fixed-point-representable values.
+pub fn fixed_repr_vec(rng: &mut Rng, len: usize, frac_bits: u32, mag_bits: u32) -> Vec<f64> {
+    (0..len).map(|_| fixed_repr(rng, frac_bits, mag_bits)).collect()
+}
+
 /// Helper: assert two floats are close (absolute + relative tolerance).
 pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
     let scale = a.abs().max(b.abs()).max(1.0);
@@ -91,6 +108,20 @@ mod tests {
             |r| r.uniform(),
             |_| Err("nope".to_string()),
         );
+    }
+
+    #[test]
+    fn fixed_repr_is_lossless_under_codec() {
+        use crate::mpc::fixed::FixedCodec;
+        let codec = FixedCodec::new(24);
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let v = fixed_repr(&mut rng, 24, 6);
+            assert!(v.abs() <= 64.0 + 1e-9);
+            let back = codec.decode(codec.encode(v).unwrap());
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} not on the codec grid");
+        }
+        assert_eq!(fixed_repr_vec(&mut rng, 7, 24, 6).len(), 7);
     }
 
     #[test]

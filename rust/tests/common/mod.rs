@@ -1,0 +1,317 @@
+//! Shared conformance/test harness for the integration suites.
+//!
+//! One scenario definition ([`Scenario`]) runs across the full matrix
+//! {plaintext, masked, Shamir} × {in-proc, TCP} × {Rust, artifact} via
+//! [`run_conformance`], asserting bit-identical scan + SELECT statistics
+//! against the Rust/in-proc baseline of each backend — the contract the
+//! artifact kernel suite (reference executor) is pinned to. The
+//! per-backend loops previously copy-pasted across
+//! `integration_shard.rs` / `integration_multitrait.rs` /
+//! `integration_select.rs` live here instead ([`backends`], [`spec_for`],
+//! [`cfg`], [`run`], [`assert_bits_eq`]).
+//!
+//! Each integration test crate pulls this in with `mod common;`, so any
+//! single crate only uses a subset of the helpers.
+
+#![allow(dead_code)]
+
+use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
+use dash::gwas::{generate_cohort, Cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::runtime::ArtifactExec;
+use dash::scan::{ScanConfig, SelectPolicy, ShardPlan};
+
+/// The three MPC backends of the conformance matrix.
+pub fn backends() -> [Backend; 3] {
+    [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }]
+}
+
+/// Which compute engine the parties run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compute {
+    /// pure-Rust streaming kernels
+    Rust,
+    /// artifact kernel suite, reference executor (bit-identical contract)
+    Artifact,
+}
+
+impl Compute {
+    pub fn all() -> [Compute; 2] {
+        [Compute::Rust, Compute::Artifact]
+    }
+}
+
+/// Standard synthetic cohort used by the integration suites.
+pub fn spec_for(parties: usize, n_per: usize, m: usize, t: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_per; parties],
+        m_variants: m,
+        n_traits: t,
+        n_causal: 3.min(m),
+        effect_sd: 0.4,
+        fst: 0.05,
+        party_admixture: (0..parties)
+            .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
+            .collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+/// Standard scan config of the integration suites (Rust compute path).
+pub fn cfg(backend: Backend, shard_m: usize) -> ScanConfig {
+    ScanConfig { backend, shard_m, block_m: 32, threads: Some(2), ..Default::default() }
+}
+
+/// Scan config for a conformance-matrix cell.
+pub fn cfg_compute(backend: Backend, shard_m: usize, compute: Compute) -> ScanConfig {
+    let mut c = cfg(backend, shard_m);
+    if compute == Compute::Artifact {
+        c.use_artifacts = true;
+        // pin the executor: conformance is a bit-level contract, which
+        // only the reference executor guarantees
+        c.artifact_exec = ArtifactExec::Reference;
+    }
+    c
+}
+
+/// Run one session (panics on protocol errors — conformance scenarios
+/// are all well-formed).
+pub fn run(
+    cohort: &Cohort,
+    cfg: &ScanConfig,
+    transport: Transport,
+    seed: u64,
+) -> MultiPartyScanResult {
+    run_multi_party_scan_t(cohort, cfg, transport, seed).unwrap()
+}
+
+/// In-proc session with the standard config.
+pub fn run_inproc(
+    cohort: &Cohort,
+    backend: Backend,
+    shard_m: usize,
+    seed: u64,
+) -> MultiPartyScanResult {
+    run(cohort, &cfg(backend, shard_m), Transport::InProc, seed)
+}
+
+/// Bit-level equality, NaN-safe (identical computations must produce
+/// identical bit patterns, including NaN payloads for collinear
+/// variants).
+pub fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for j in 0..a.len() {
+        assert_eq!(a[j].to_bits(), b[j].to_bits(), "{what}[{j}]: {} vs {}", a[j], b[j]);
+    }
+}
+
+/// All scan statistics of two sessions bit-identical (every trait's
+/// β/σ̂/p plus the covariate fit).
+pub fn assert_scan_bits_eq(a: &MultiPartyScanResult, b: &MultiPartyScanResult, label: &str) {
+    assert_eq!(a.output.t(), b.output.t(), "{label}: trait count");
+    for tt in 0..a.output.t() {
+        assert_bits_eq(
+            &a.output.assoc[tt].beta,
+            &b.output.assoc[tt].beta,
+            &format!("{label} trait {tt} beta"),
+        );
+        assert_bits_eq(
+            &a.output.assoc[tt].se,
+            &b.output.assoc[tt].se,
+            &format!("{label} trait {tt} se"),
+        );
+        assert_bits_eq(
+            &a.output.assoc[tt].p,
+            &b.output.assoc[tt].p,
+            &format!("{label} trait {tt} p"),
+        );
+    }
+    for (i, (fa, fb)) in
+        a.output.covariate_fit.iter().zip(&b.output.covariate_fit).enumerate()
+    {
+        assert_bits_eq(&fa.gamma, &fb.gamma, &format!("{label} fit {i} gamma"));
+    }
+}
+
+/// SELECT outputs of two sessions identical: same shortlist, same lanes,
+/// and bit-identical statistics for every pick of every round.
+pub fn assert_select_bits_eq(
+    a: &MultiPartyScanResult,
+    b: &MultiPartyScanResult,
+    label: &str,
+) {
+    match (&a.select, &b.select) {
+        (None, None) => {}
+        (Some(sa), Some(sb)) => {
+            assert_eq!(sa.candidates, sb.candidates, "{label}: candidates");
+            assert_eq!(sa.lanes(), sb.lanes(), "{label}: lanes");
+            assert_eq!(sa.rounds.len(), sb.rounds.len(), "{label}: rounds");
+            for (ra, rb) in sa.rounds.iter().zip(&sb.rounds) {
+                assert_eq!(ra.round, rb.round);
+                assert_eq!(ra.picks.len(), rb.picks.len());
+                for (lane, (pa, pb)) in ra.picks.iter().zip(&rb.picks).enumerate() {
+                    match (pa, pb) {
+                        (None, None) => {}
+                        (Some(pa), Some(pb)) => {
+                            let what = format!("{label} round {} lane {lane}", ra.round);
+                            assert_eq!(pa.variant, pb.variant, "{what}: variant");
+                            assert_eq!(pa.trait_idx, pb.trait_idx, "{what}: trait");
+                            assert_eq!(pa.beta.to_bits(), pb.beta.to_bits(), "{what}: beta");
+                            assert_eq!(pa.se.to_bits(), pb.se.to_bits(), "{what}: se");
+                            assert_eq!(pa.p.to_bits(), pb.p.to_bits(), "{what}: p");
+                        }
+                        other => panic!("{label}: pick divergence {other:?}"),
+                    }
+                }
+            }
+        }
+        other => panic!("{label}: SELECT presence divergence ({:?})", other.0.is_some()),
+    }
+}
+
+/// One conformance scenario: a cohort shape plus protocol knobs, run
+/// identically across every cell of the backend × transport × compute
+/// matrix.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub parties: usize,
+    pub n_per: usize,
+    pub m: usize,
+    pub t: usize,
+    pub shard_m: usize,
+    pub select_k: usize,
+    pub select_alpha: f64,
+    pub select_candidates: usize,
+    pub select_policy: SelectPolicy,
+    pub cohort_seed: u64,
+    pub session_seed: u64,
+    /// also run the TCP transport cells (slower; off by default)
+    pub tcp: bool,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "scenario",
+            parties: 3,
+            n_per: 40,
+            m: 70,
+            t: 1,
+            shard_m: 0,
+            select_k: 0,
+            select_alpha: 0.5,
+            select_candidates: 8,
+            select_policy: SelectPolicy::Union,
+            cohort_seed: 0xC0DE,
+            session_seed: 0x5EED,
+            tcp: false,
+        }
+    }
+}
+
+impl Scenario {
+    fn config(&self, backend: Backend, compute: Compute) -> ScanConfig {
+        let mut c = cfg_compute(backend, self.shard_m, compute);
+        c.select_k = self.select_k;
+        c.select_alpha = self.select_alpha;
+        c.select_candidates = self.select_candidates;
+        c.select_policy = self.select_policy;
+        c
+    }
+
+    /// Number of shards this scenario's plan streams over.
+    pub fn shards(&self) -> usize {
+        ShardPlan::new(self.m, self.shard_m).count()
+    }
+}
+
+/// Run one scenario across the full conformance matrix. For each
+/// backend, the Rust/in-proc session is the baseline; every other cell
+/// (artifact compute, TCP transport, and their combination) must
+/// reproduce its scan + SELECT statistics bit-for-bit. Artifact cells
+/// additionally assert the suite's pass accounting: exactly one
+/// trait-batched Y-side pass and one X-side pass per shard **regardless
+/// of T**. Returns the per-(backend, compute) in-proc results for extra
+/// scenario-specific assertions.
+pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanResult)> {
+    let cohort = generate_cohort(&spec_for(sc.parties, sc.n_per, sc.m, sc.t), sc.cohort_seed);
+    let mut out = Vec::new();
+    for backend in backends() {
+        let baseline = run(
+            &cohort,
+            &sc.config(backend, Compute::Rust),
+            Transport::InProc,
+            sc.session_seed,
+        );
+        assert_eq!(baseline.metrics.shards, sc.shards(), "{}: shard plan", sc.name);
+        let mut transports = vec![Transport::InProc];
+        if sc.tcp {
+            transports.push(Transport::Tcp);
+        }
+        for compute in Compute::all() {
+            for &transport in &transports {
+                if compute == Compute::Rust && transport == Transport::InProc {
+                    continue; // that's the baseline itself
+                }
+                let label = format!(
+                    "{} [{backend:?} × {transport:?} × {compute:?}]",
+                    sc.name
+                );
+                let res =
+                    run(&cohort, &sc.config(backend, compute), transport, sc.session_seed);
+                assert_scan_bits_eq(&res, &baseline, &label);
+                assert_select_bits_eq(&res, &baseline, &label);
+                if compute == Compute::Artifact {
+                    for (p, km) in res.party_kernels.iter().enumerate() {
+                        assert_eq!(
+                            km.yside_passes(),
+                            1,
+                            "{label}: party {p} Y-side passes"
+                        );
+                        assert_eq!(
+                            km.xside_passes(),
+                            sc.shards() as u64,
+                            "{label}: party {p} X-side passes — one per shard, \
+                             independent of T={}",
+                            sc.t
+                        );
+                    }
+                }
+                if transport == Transport::InProc {
+                    out.push((backend, compute, res));
+                }
+            }
+        }
+        out.push((backend, Compute::Rust, baseline));
+    }
+    out
+}
+
+/// Declare `#[test]` functions from scenario literals:
+///
+/// ```ignore
+/// mod common;
+/// conformance_scenarios! {
+///     scan_sharded_t16: { shard_m: 16, t: 16 },
+/// }
+/// ```
+#[macro_export]
+macro_rules! conformance_scenarios {
+    ($($name:ident: { $($field:ident: $value:expr),* $(,)? }),* $(,)?) => {
+        $(
+            #[test]
+            fn $name() {
+                let scenario = $crate::common::Scenario {
+                    name: stringify!($name),
+                    $($field: $value,)*
+                    ..Default::default()
+                };
+                $crate::common::run_conformance(&scenario);
+            }
+        )*
+    };
+}

@@ -1,0 +1,149 @@
+//! Cross-backend conformance matrix (acceptance criteria of the
+//! parameterized-artifact-suite tentpole): one scenario definition runs
+//! across {plaintext, masked, Shamir} × {in-proc, TCP} × {Rust,
+//! artifact} and every cell must reproduce the Rust baseline's scan +
+//! SELECT statistics bit-for-bit, with the artifact suite executing
+//! exactly one X-side pass per shard regardless of the trait count.
+//! Also: the artifact-mode memory regression (peak resident block bytes
+//! `O(shard_m·N_p)`, not `O(M·N_p)`) and lowering-cache behavior over
+//! ragged shard plans.
+
+mod common;
+
+use common::{run_conformance, spec_for, Compute, Scenario};
+use dash::coordinator::Transport;
+use dash::gwas::generate_cohort;
+use dash::mpc::Backend;
+use dash::scan::SelectPolicy;
+
+// The acceptance grid: shard_m ∈ {7, 64, whole-M} × T ∈ {1, 16}, all
+// three backends, Rust vs artifact, bit-identical.
+conformance_scenarios! {
+    scan_shard7_t1: { shard_m: 7, t: 1, cohort_seed: 0xA000 },
+    scan_shard64_t1: { shard_m: 64, t: 1, cohort_seed: 0xA001 },
+    scan_whole_m_t1: { shard_m: 0, t: 1, cohort_seed: 0xA002 },
+    scan_shard7_t16: { shard_m: 7, t: 16, cohort_seed: 0xA003 },
+    scan_shard64_t16: { shard_m: 64, t: 16, cohort_seed: 0xA004 },
+    scan_whole_m_t16: { shard_m: 0, t: 16, cohort_seed: 0xA005 },
+    // SELECT rounds through the matrix: gathered candidate round +
+    // promote cross-product rounds, bit-identical picks everywhere
+    select_union_t1: {
+        shard_m: 16, t: 1, select_k: 2, select_candidates: 70, cohort_seed: 0xA006
+    },
+    select_per_trait_t4: {
+        shard_m: 16, t: 4, select_k: 2, select_candidates: 16,
+        select_policy: SelectPolicy::PerTrait, cohort_seed: 0xA007
+    },
+    // transport closure: TCP cells must match the in-proc baseline too
+    tcp_spot_check: { shard_m: 16, t: 4, select_k: 1, tcp: true, cohort_seed: 0xA008 },
+}
+
+/// The X-side pass count is a function of the shard plan alone: a T=16
+/// session costs exactly as many artifact X-side passes as a T=1
+/// session over the same plan (the trait-batching amortization claim).
+#[test]
+fn xside_passes_independent_of_trait_count() {
+    let mut counts = Vec::new();
+    for t in [1usize, 16] {
+        let sc = Scenario { shard_m: 16, t, cohort_seed: 0xA100, ..Default::default() };
+        let cells = run_conformance(&sc);
+        let (_, _, res) = cells
+            .iter()
+            .find(|(b, c, _)| *b == Backend::Masked && *c == Compute::Artifact)
+            .expect("artifact cell present");
+        counts.push(res.party_kernels[0].xside_passes());
+    }
+    assert_eq!(counts[0], counts[1], "X-side passes must not scale with T");
+}
+
+/// Memory regression: peak resident artifact block bytes in a sharded
+/// session are set by the canonical shard width, not by M. With the
+/// entry ladder starting at 64, a shard_m=16 session over M=1024 must
+/// stay within the analytic `O(N_p · canon(shard_m))` bound and far
+/// below the single-shot session's whole-M block.
+#[test]
+fn artifact_peak_block_bytes_bounded_by_shard_width() {
+    let (parties, n_per, m, t) = (3usize, 50usize, 1024usize, 2usize);
+    let spec = spec_for(parties, n_per, m, t);
+    let k = spec.k_covariates();
+    let cohort = generate_cohort(&spec, 0xA200);
+    let run = |shard_m: usize| {
+        common::run(
+            &cohort,
+            &common::cfg_compute(Backend::Masked, shard_m, Compute::Artifact),
+            Transport::InProc,
+            77,
+        )
+    };
+    let sharded = run(16);
+    let single = run(0);
+    assert_eq!(sharded.metrics.shards, 64);
+    assert_eq!(single.metrics.shards, 1);
+
+    // Analytic bound per party: the widest resident block is the padded
+    // CompressXy/CompressX working set — inputs N_p·(wc + t_pad + k_pad)
+    // plus O((k_pad + t_pad)·wc) outputs, wc = canon(16) = 64,
+    // t_pad = canon(2) = 4, k_pad = 16.
+    let (wc, t_pad, k_pad) = (64u64, 4u64, 16u64);
+    let n = n_per as u64;
+    let bound = 8 * (n * (wc + t_pad + k_pad) + wc * t_pad + wc + k_pad * wc);
+    for (p, km) in sharded.party_kernels.iter().enumerate() {
+        let peak = km.peak_block_bytes();
+        assert!(peak > 0, "party {p}: no artifact blocks metered");
+        assert!(
+            peak <= bound,
+            "party {p}: peak block bytes {peak} exceed O(shard_m·N_p) bound {bound}"
+        );
+    }
+    // ... while the single-shot session materializes the whole-M block
+    // (canon(1024) = 1024 = 16× wider): the shard bound is really about
+    // the shard width.
+    let sharded_peak: u64 =
+        sharded.party_kernels.iter().map(|k| k.peak_block_bytes()).max().unwrap();
+    let single_peak: u64 =
+        single.party_kernels.iter().map(|k| k.peak_block_bytes()).max().unwrap();
+    assert!(
+        sharded_peak * 4 <= single_peak,
+        "sharded peak {sharded_peak} not far below whole-M peak {single_peak}"
+    );
+    // identical statistics regardless (sharding is a pure execution knob)
+    common::assert_scan_bits_eq(&sharded, &single, "sharded vs single-shot artifact");
+    // K must fit the default entry padding for the bound above to hold
+    assert!(k as u64 <= k_pad);
+}
+
+/// A ragged shard plan (tail narrower than shard_m, both below the
+/// first ladder rung) canonicalizes onto a handful of lowered entries:
+/// the cache, not the shard count, bounds lowering work.
+#[test]
+fn lowering_cache_covers_ragged_plans() {
+    let cohort = generate_cohort(&spec_for(3, 40, 70, 3), 0xA300);
+    let res = common::run(
+        &cohort,
+        &common::cfg_compute(Backend::Masked, 7, Compute::Artifact),
+        Transport::InProc,
+        78,
+    );
+    assert_eq!(res.metrics.shards, 10);
+    for (p, km) in res.party_kernels.iter().enumerate() {
+        // one CompressXy entry + one canonical CompressX entry (all ten
+        // shards, including the 7-wide tail, round up to w=64)
+        assert_eq!(km.lowered_entries(), 2, "party {p}: lowered entries");
+        assert_eq!(km.xside_passes(), 10, "party {p}: X-side passes");
+        assert_eq!(km.cache_hits(), 9, "party {p}: cache hits");
+    }
+}
+
+/// Rust-path sessions carry zeroed kernel telemetry — the meters are
+/// session plumbing, not artifact-path-only state.
+#[test]
+fn rust_sessions_have_inert_kernel_meters() {
+    let cohort = generate_cohort(&spec_for(3, 40, 24, 1), 0xA400);
+    let res = common::run_inproc(&cohort, Backend::Masked, 8, 79);
+    assert_eq!(res.party_kernels.len(), 3);
+    for km in &res.party_kernels {
+        assert_eq!(km.lowered_entries(), 0);
+        assert_eq!(km.xside_passes(), 0);
+        assert_eq!(km.peak_block_bytes(), 0);
+    }
+}

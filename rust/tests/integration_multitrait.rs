@@ -5,8 +5,11 @@
 //! session and T independent single-trait sessions, and the
 //! `O((K+T)·shard_m)` per-round payload bound.
 
+mod common;
+
+use common::{assert_bits_eq, backends, cfg, spec_for};
 use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
-use dash::gwas::{generate_cohort, Cohort, CohortSpec, PartyData};
+use dash::gwas::{generate_cohort, Cohort, PartyData};
 use dash::linalg::Matrix;
 use dash::mpc::field::Fe;
 use dash::mpc::fixed::FixedCodec;
@@ -16,42 +19,13 @@ use dash::scan::{
     FlatLayout, RFactorMethod, ScanConfig,
 };
 
-fn spec_for(parties: usize, n_per: usize, m: usize, t: usize) -> CohortSpec {
-    CohortSpec {
-        party_sizes: vec![n_per; parties],
-        m_variants: m,
-        n_traits: t,
-        n_causal: 3.min(m),
-        effect_sd: 0.4,
-        fst: 0.05,
-        party_admixture: (0..parties)
-            .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
-            .collect(),
-        ancestry_effect: 0.4,
-        batch_effect_sd: 0.1,
-        n_pcs: 2,
-        noise_sd: 1.0,
-    }
-}
-
-fn cfg(backend: Backend, shard_m: usize) -> ScanConfig {
-    ScanConfig { backend, shard_m, block_m: 32, threads: Some(2), ..Default::default() }
-}
-
 fn run(
     cohort: &Cohort,
     backend: Backend,
     shard_m: usize,
     seed: u64,
 ) -> MultiPartyScanResult {
-    run_multi_party_scan_t(cohort, &cfg(backend, shard_m), Transport::InProc, seed).unwrap()
-}
-
-fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length");
-    for j in 0..a.len() {
-        assert_eq!(a[j].to_bits(), b[j].to_bits(), "{what}[{j}]: {} vs {}", a[j], b[j]);
-    }
+    common::run_inproc(cohort, backend, shard_m, seed)
 }
 
 /// Project a multi-trait cohort down to a single-trait cohort carrying
@@ -136,7 +110,7 @@ fn single_trait_reference(cohort: &Cohort, backend: Backend) -> dash::scan::Scan
 #[test]
 fn networked_t1_bit_identical_to_single_trait_reference() {
     let cohort = generate_cohort(&spec_for(3, 80, 40, 1), 810);
-    for backend in [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }] {
+    for backend in backends() {
         let session = run(&cohort, backend, 16, 51);
         let reference = single_trait_reference(&cohort, backend);
         assert_eq!(session.output.t(), 1, "{backend:?}");
@@ -158,7 +132,7 @@ fn networked_t1_bit_identical_to_single_trait_reference() {
 fn multi_trait_session_matches_t1_sessions_all_backends() {
     let t = 3;
     let cohort = generate_cohort(&spec_for(3, 70, 32, t), 811);
-    for backend in [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }] {
+    for backend in backends() {
         let multi = run(&cohort, backend, 8, 52);
         assert_eq!(multi.output.t(), t, "{backend:?}");
         for tt in 0..t {
@@ -188,7 +162,7 @@ fn multi_trait_session_matches_t1_sessions_all_backends() {
 #[test]
 fn multi_trait_tcp_session_byte_identical() {
     let cohort = generate_cohort(&spec_for(3, 60, 24, 4), 812);
-    for backend in [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }] {
+    for backend in backends() {
         let inproc =
             run_multi_party_scan_t(&cohort, &cfg(backend, 8), Transport::InProc, 53).unwrap();
         // TCP contends for sockets with the parallel test suite; allow one

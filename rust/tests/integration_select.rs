@@ -4,6 +4,9 @@
 //! (per-round SELECT traffic independent of M), and the
 //! duplicate-frame → protocol-ErrorMsg regression.
 
+mod common;
+
+use common::backends;
 use dash::coordinator::messages::{
     error_frame, Compress, PlainBase, PlainShard, Setup, TAG_ERROR,
 };
@@ -63,14 +66,10 @@ fn synth_cohort(
 
 fn cfg(backend: Backend, m: usize, select_k: usize, alpha: f64) -> ScanConfig {
     ScanConfig {
-        backend,
-        shard_m: 16,
-        block_m: 32,
-        threads: Some(2),
         select_k,
         select_alpha: alpha,
         select_candidates: m, // unrestricted: shortlist = all finite-p variants
-        ..Default::default()
+        ..common::cfg(backend, 16)
     }
 }
 
@@ -170,7 +169,7 @@ fn selection_equals_oracle_all_backends() {
             assert!((p.se - w.3).abs() < 1e-6 * w.3.abs().max(1.0), "se k={k}");
         }
 
-        for backend in [Backend::Masked, Backend::Shamir { threshold: 2 }] {
+        for backend in backends().into_iter().filter(|b| *b != Backend::Plaintext) {
             let res = run(&cohort, &cfg(backend, 24, k, 1e-3), 60);
             let s = res.select.as_ref().expect("secure select output");
             assert_eq!(

@@ -3,31 +3,16 @@
 //! communication, and transport equivalence (acceptance criteria of the
 //! shard-pipeline tentpole).
 
+mod common;
+
+use common::{assert_bits_eq, backends, cfg};
 use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
 use dash::gwas::{generate_cohort, CohortSpec};
 use dash::mpc::Backend;
-use dash::scan::{ScanConfig, ShardPlan};
+use dash::scan::ShardPlan;
 
 fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
-    CohortSpec {
-        party_sizes: vec![n_per; parties],
-        m_variants: m,
-        n_traits: 1,
-        n_causal: 3.min(m),
-        effect_sd: 0.4,
-        fst: 0.05,
-        party_admixture: (0..parties)
-            .map(|i| if parties == 1 { 0.5 } else { i as f64 / (parties - 1) as f64 })
-            .collect(),
-        ancestry_effect: 0.4,
-        batch_effect_sd: 0.1,
-        n_pcs: 2,
-        noise_sd: 1.0,
-    }
-}
-
-fn cfg(backend: Backend, shard_m: usize) -> ScanConfig {
-    ScanConfig { backend, shard_m, block_m: 32, threads: Some(2), ..Default::default() }
+    common::spec_for(parties, n_per, m, 1)
 }
 
 fn run(
@@ -36,23 +21,7 @@ fn run(
     shard_m: usize,
     seed: u64,
 ) -> MultiPartyScanResult {
-    run_multi_party_scan_t(cohort, &cfg(backend, shard_m), Transport::InProc, seed).unwrap()
-}
-
-/// Bit-level equality, NaN-safe (identical computations must produce
-/// identical bit patterns, including NaN payloads for collinear
-/// variants).
-fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length");
-    for j in 0..a.len() {
-        assert_eq!(
-            a[j].to_bits(),
-            b[j].to_bits(),
-            "{what}[{j}]: {} vs {}",
-            a[j],
-            b[j]
-        );
-    }
+    common::run_inproc(cohort, backend, shard_m, seed)
 }
 
 /// Acceptance: a sharded scan over ≥ 4 shards produces an output
@@ -63,7 +32,7 @@ fn sharded_matches_single_shot_all_backends() {
     let width = 16; // 4 shards
     assert_eq!(ShardPlan::new(m, width).count(), 4);
     let cohort = generate_cohort(&spec_for(3, 90, m), 700);
-    for backend in [Backend::Plaintext, Backend::Masked, Backend::Shamir { threshold: 2 }] {
+    for backend in backends() {
         let single = run(&cohort, backend, 0, 41);
         let sharded = run(&cohort, backend, width, 41);
         assert_eq!(single.metrics.shards, 1, "{backend:?}");

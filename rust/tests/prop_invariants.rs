@@ -1,0 +1,238 @@
+//! Property-based invariants (driven by `dash::util::proptest`):
+//!
+//! - `qr_append` / `project_append` reproduce a full re-factorization of
+//!   the appended basis, for random shapes;
+//! - flatten → secure-sum → unflatten is the *identity* on the
+//!   elementwise aggregate for fixed-point-representable inputs, across
+//!   all three backends (losslessness of the wire encoding, not just
+//!   closeness).
+
+use dash::linalg::{householder_qr, project_append, qr_append, Matrix};
+use dash::mpc::field::Fe;
+use dash::mpc::fixed::FixedCodec;
+use dash::mpc::masking::{aggregate_masked, PairwiseMasker};
+use dash::mpc::shamir;
+use dash::scan::{flatten_for_sum, unflatten_sum, CompressedParty};
+use dash::util::proptest::{all_close, fixed_repr_vec, run_prop, PropConfig};
+use dash::util::rng::Rng;
+
+fn hstack_col(a: &Matrix, col: Vec<f64>) -> Matrix {
+    Matrix::vstack(&[&a.transpose(), &Matrix::from_col(col).transpose()]).transpose()
+}
+
+fn random_basis(rng: &mut Rng, n: usize, k: usize) -> Matrix {
+    let mut c = Matrix::randn(n, k, rng);
+    for i in 0..n {
+        c[(i, 0)] = 1.0;
+    }
+    c
+}
+
+/// `qr_append(R, Qᵀb, b·b)` equals the R factor of a full Householder
+/// re-factorization of `[C | b]`, for random (n, k).
+#[test]
+fn prop_qr_append_equals_full_refactorization() {
+    run_prop(
+        "qr-append-vs-full",
+        PropConfig { cases: 48, ..Default::default() },
+        |rng| {
+            let n = 12 + rng.below(40) as usize;
+            let k = 2 + rng.below(5) as usize;
+            let c = random_basis(rng, n, k);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (c, b)
+        },
+        |(c, b)| {
+            let f = householder_qr(c);
+            let u = f.q.t_matvec(b);
+            let d: f64 = b.iter().map(|v| v * v).sum();
+            let r_app = qr_append(&f.r, &u, d)
+                .map_err(|e| format!("append rejected a random column: {e:#}"))?;
+            let full = householder_qr(&hstack_col(c, b.clone())).r;
+            all_close(&r_app.data, &full.data, 1e-8)
+        },
+    );
+}
+
+/// `project_append` extends `QᵀX` by exactly the row a full
+/// re-factorization would produce, for every projected column.
+#[test]
+fn prop_project_append_equals_full_projection() {
+    run_prop(
+        "project-append-vs-full",
+        PropConfig { cases: 48, ..Default::default() },
+        |rng| {
+            let n = 15 + rng.below(30) as usize;
+            let k = 2 + rng.below(4) as usize;
+            let h = 1 + rng.below(6) as usize;
+            let c = random_basis(rng, n, k);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xs = Matrix::randn(n, h, rng);
+            (c, b, xs)
+        },
+        |(c, b, xs)| {
+            let k = c.cols;
+            let f = householder_qr(c);
+            let u = f.q.t_matvec(b);
+            let d: f64 = b.iter().map(|v| v * v).sum();
+            let r_app =
+                qr_append(&f.r, &u, d).map_err(|e| format!("append rejected: {e:#}"))?;
+            let rho = r_app[(k, k)];
+            let qt_x = f.q.t_matmul(xs);
+            let full = householder_qr(&hstack_col(c, b.clone()));
+            let qt_x_full = full.q.t_matmul(xs);
+            for j in 0..xs.cols {
+                let btx: f64 =
+                    b.iter().zip(xs.col(j)).map(|(p, q)| p * q).sum();
+                let inc = project_append(&u, rho, &qt_x.col(j), btx);
+                // the positive-diagonal convention pins the appended
+                // basis direction, so the signs must agree too
+                let want = qt_x_full[(k, j)];
+                if (inc - want).abs() > 1e-8 * want.abs().max(1.0) {
+                    return Err(format!("col {j}: incremental {inc} vs full {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+const FRAC: u32 = 24;
+const MAG: u32 = 5;
+
+fn random_cp(rng: &mut Rng, n: usize, k: usize, m: usize, t: usize) -> CompressedParty {
+    CompressedParty {
+        n,
+        yty: fixed_repr_vec(rng, t, FRAC, MAG),
+        cty: Matrix::from_vec(k, t, fixed_repr_vec(rng, k * t, FRAC, MAG)),
+        ctc: Matrix::from_vec(k, k, fixed_repr_vec(rng, k * k, FRAC, MAG)),
+        // R never enters the secure sum
+        r: Matrix::zeros(k, k),
+        xty: Matrix::from_vec(m, t, fixed_repr_vec(rng, m * t, FRAC, MAG)),
+        xtx: fixed_repr_vec(rng, m, FRAC, MAG),
+        ctx: Matrix::from_vec(k, m, fixed_repr_vec(rng, k * m, FRAC, MAG)),
+    }
+}
+
+/// flatten → backend secure sum → unflatten reproduces the exact
+/// elementwise aggregate bit-for-bit, for random (P, K, M, T): the wire
+/// encoding is lossless on fixed-point-representable inputs on every
+/// backend.
+#[test]
+fn prop_flatten_secure_sum_unflatten_identity() {
+    run_prop(
+        "flatten-secure-sum-unflatten",
+        PropConfig { cases: 32, ..Default::default() },
+        |rng| {
+            let parties = 2 + rng.below(3) as usize;
+            let k = 1 + rng.below(4) as usize;
+            let m = 1 + rng.below(16) as usize;
+            let t = 1 + rng.below(4) as usize;
+            let cps: Vec<CompressedParty> = (0..parties)
+                .map(|_| {
+                    let n = 10 + rng.below(90) as usize;
+                    random_cp(rng, n, k, m, t)
+                })
+                .collect();
+            let mask_seed = rng.next_u64();
+            (cps, mask_seed)
+        },
+        |(cps, mask_seed)| {
+            let codec = FixedCodec::new(FRAC);
+            let parties = cps.len();
+            let (layout, _) = flatten_for_sum(&cps[0]);
+            let flats: Vec<Vec<f64>> =
+                cps.iter().map(|cp| flatten_for_sum(cp).1).collect();
+            // exact elementwise aggregate (all values on the 2^-24 grid,
+            // so the f64 sums are exact)
+            let mut exact = vec![0.0f64; layout.len()];
+            for f in &flats {
+                for (a, b) in exact.iter_mut().zip(f) {
+                    *a += b;
+                }
+            }
+            let expect = unflatten_sum(layout, &exact)
+                .map_err(|e| format!("unflatten exact: {e:#}"))?;
+
+            // masked: real pairwise masks must cancel exactly
+            let mut rng = Rng::new(*mask_seed);
+            let seeds = PairwiseMasker::session_seeds(parties, &mut rng);
+            let contributions: Vec<Vec<u64>> = flats
+                .iter()
+                .enumerate()
+                .map(|(p, f)| {
+                    let mut enc = codec.encode_vec(f).map_err(|e| format!("{e:#}"))?;
+                    PairwiseMasker::new(p, parties, seeds[p].clone())
+                        .mask_in_place(&mut enc);
+                    Ok(enc)
+                })
+                .collect::<Result<_, String>>()?;
+            let masked = codec.decode_vec(&aggregate_masked(&contributions));
+
+            // Shamir: share, route, share-wise sum, reconstruct
+            let threshold = 2.min(parties);
+            let mut routed: Vec<Vec<Vec<Fe>>> = vec![Vec::new(); parties];
+            for f in &flats {
+                let secrets: Vec<Fe> = f
+                    .iter()
+                    .map(|&v| {
+                        Ok(Fe::from_i64(
+                            codec.encode(v).map_err(|e| format!("{e:#}"))? as i64,
+                        ))
+                    })
+                    .collect::<Result<_, String>>()?;
+                let shares = shamir::share_vec(&secrets, parties, threshold, &mut rng);
+                for (q, sv) in shares.into_iter().enumerate() {
+                    routed[q].push(sv.into_iter().map(|s| s.y).collect());
+                }
+            }
+            let sums: Vec<Vec<Fe>> = routed
+                .iter()
+                .map(|incoming| {
+                    let mut acc = vec![Fe(0); layout.len()];
+                    for sv in incoming {
+                        for (a, &s) in acc.iter_mut().zip(sv) {
+                            *a = a.add(s);
+                        }
+                    }
+                    acc
+                })
+                .collect();
+            let shamir_sum: Vec<f64> = (0..layout.len())
+                .map(|i| {
+                    let shares: Vec<shamir::Share> = (0..threshold)
+                        .map(|q| shamir::Share { x: q as u64 + 1, y: sums[q][i] })
+                        .collect();
+                    shamir::reconstruct(&shares).to_i64() as f64 / codec.scale()
+                })
+                .collect();
+
+            for (name, summed) in
+                [("plaintext", &exact), ("masked", &masked), ("shamir", &shamir_sum)]
+            {
+                let agg = unflatten_sum(layout, summed)
+                    .map_err(|e| format!("unflatten {name}: {e:#}"))?;
+                if agg.n != expect.n {
+                    return Err(format!("{name}: n {} vs {}", agg.n, expect.n));
+                }
+                for (what, got, want) in [
+                    ("yty", &agg.yty, &expect.yty),
+                    ("xtx", &agg.xtx, &expect.xtx),
+                    ("cty", &agg.cty.data, &expect.cty.data),
+                    ("ctc", &agg.ctc.data, &expect.ctc.data),
+                    ("xty", &agg.xty.data, &expect.xty.data),
+                    ("ctx", &agg.ctx.data, &expect.ctx.data),
+                ] {
+                    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "{name} {what}[{i}]: {g} vs exact {w} (not lossless)"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
