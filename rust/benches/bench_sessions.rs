@@ -1,0 +1,179 @@
+//! Session-service throughput: serial dedicated-connection runs vs the
+//! multiplexed SessionManager at increasing concurrency, plus the
+//! multiplexing byte overhead and the shared-engine lowering accounting.
+//! Writes `BENCH_sessions.json` (bench rows + summary rows) for
+//! EXPERIMENTS.md §E11.
+
+use dash::coordinator::{
+    run_multi_party_scan_t, run_session_batch, BatchOptions, SessionSpec, Transport,
+};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::net::FRAME_V2_OVERHEAD;
+use dash::runtime::ArtifactExec;
+use dash::scan::ScanConfig;
+use dash::util::bench::Bench;
+use dash::util::json::Json;
+
+fn spec(parties: usize, n_per: usize, m: usize, t: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_per; parties],
+        m_variants: m,
+        n_traits: t,
+        n_causal: 3,
+        effect_sd: 0.4,
+        fst: 0.05,
+        party_admixture: (0..parties).map(|i| i as f64 / (parties - 1) as f64).collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (n_per, m) = if quick { (60, 96) } else { (200, 480) };
+    let sessions = if quick { 4 } else { 8 };
+    let cohort = generate_cohort(&spec(3, n_per, m, 2), 0xE11);
+    // one compress thread per party so session-level parallelism—not
+    // intra-party parallelism—is what the concurrency sweep measures
+    let cfg = ScanConfig {
+        backend: Backend::Masked,
+        shard_m: 32,
+        block_m: 32,
+        threads: Some(1),
+        ..ScanConfig::default()
+    };
+    let specs: Vec<SessionSpec> =
+        (0..sessions).map(|i| SessionSpec { cfg: cfg.clone(), seed: 40 + i as u64 }).collect();
+
+    let mut b = Bench::new("sessions");
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // serial baseline: one dedicated-connection run after another
+    let label = format!("serial_x{sessions}");
+    let serial_s = b
+        .case_units(&label, Some(sessions as f64), "sess", || {
+            for s in &specs {
+                std::hint::black_box(
+                    run_multi_party_scan_t(&cohort, &s.cfg, Transport::InProc, s.seed)
+                        .unwrap(),
+                );
+            }
+        })
+        .median_s;
+    rows.push((label, serial_s));
+
+    // multiplexed: same sessions over shared connections, swept over
+    // the worker-pool bound
+    for conc in [1usize, 4, sessions] {
+        if conc > sessions {
+            continue;
+        }
+        let label = format!("mux_x{sessions}_c{conc}");
+        let mux_s = b
+            .case_units(&label, Some(sessions as f64), "sess", || {
+                let batch = run_session_batch(
+                    &cohort,
+                    &specs,
+                    &BatchOptions { max_concurrent: conc, ..Default::default() },
+                )
+                .unwrap();
+                assert!(batch.runs.iter().all(|r| r.is_ok()));
+                std::hint::black_box(batch);
+            })
+            .median_s;
+        rows.push((label, mux_s));
+    }
+
+    // Byte overhead: per-session bytes under multiplexing vs serial —
+    // exactly the v2 envelope per frame.
+    let serial_run =
+        run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 40).unwrap();
+    let batch = run_session_batch(
+        &cohort,
+        &specs[..1],
+        &BatchOptions { max_concurrent: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mux_run = batch.runs[0].as_ref().unwrap();
+    let frames = mux_run.metrics.messages_total;
+    let overhead = mux_run.metrics.bytes_total as i64 - serial_run.metrics.bytes_total as i64;
+    assert_eq!(
+        overhead,
+        (frames * FRAME_V2_OVERHEAD) as i64,
+        "multiplexing overhead must be exactly 12 bytes per frame"
+    );
+
+    // Shared-engine lowering: an artifact-mode batch lowers each entry
+    // once for all sessions.
+    let mut art = cfg.clone();
+    art.use_artifacts = true;
+    art.artifact_exec = ArtifactExec::Reference;
+    let art_specs: Vec<SessionSpec> =
+        (0..sessions).map(|i| SessionSpec { cfg: art.clone(), seed: 40 + i as u64 }).collect();
+    let art_batch = run_session_batch(
+        &cohort,
+        &art_specs,
+        &BatchOptions { max_concurrent: 4.min(sessions), ..Default::default() },
+    )
+    .unwrap();
+    assert!(art_batch.runs.iter().all(|r| r.is_ok()));
+    let lowered_per_party = art_batch.party_kernels[0].lowered_entries();
+    let xpasses_per_party = art_batch.party_kernels[0].xside_passes();
+
+    // human summary
+    let serial_tp = sessions as f64 / serial_s;
+    println!("\nsession throughput (P=3, N={}, M={m}, T=2, masked):", 3 * n_per);
+    println!("{:>16} {:>10} {:>12} {:>10}", "case", "median_s", "sess/s", "vs serial");
+    for (label, s) in &rows {
+        let tp = sessions as f64 / *s;
+        println!("{:>16} {:>10.4} {:>12.2} {:>9.2}x", label, s, tp, tp / serial_tp);
+    }
+    println!(
+        "bytes/session     serial {} vs multiplexed {} (+{} = {} frames × {}B envelope)",
+        serial_run.metrics.bytes_total,
+        mux_run.metrics.bytes_total,
+        overhead,
+        frames,
+        FRAME_V2_OVERHEAD
+    );
+    println!(
+        "shared engine     {lowered_per_party} lowered entries serve {} sessions \
+         ({xpasses_per_party} X-passes/party, no per-session recompiles)",
+        sessions
+    );
+
+    // machine-readable report
+    let mut report = b.json_lines();
+    for (label, s) in &rows {
+        let mut o = Json::obj();
+        o.set("group", "sessions")
+            .set("row", "throughput")
+            .set("label", label.as_str())
+            .set("sessions", sessions)
+            .set("median_s", *s)
+            .set("sessions_per_s", sessions as f64 / *s)
+            .set("speedup_vs_serial", serial_s / *s);
+        report.push_str(&o.to_string());
+        report.push('\n');
+    }
+    let mut o = Json::obj();
+    o.set("group", "sessions")
+        .set("row", "overhead")
+        .set("serial_bytes", serial_run.metrics.bytes_total)
+        .set("mux_bytes_per_session", mux_run.metrics.bytes_total)
+        .set("frames_per_session", frames)
+        .set("envelope_bytes_per_frame", FRAME_V2_OVERHEAD)
+        .set("shared_engine_lowered_entries", lowered_per_party as usize)
+        .set("shared_engine_xside_passes", xpasses_per_party as usize)
+        .set("per_session_recompiles", 0usize);
+    report.push_str(&o.to_string());
+    report.push('\n');
+    if let Err(e) = std::fs::write("BENCH_sessions.json", &report) {
+        eprintln!("warn: could not write BENCH_sessions.json: {e}");
+    } else {
+        println!("report: BENCH_sessions.json");
+    }
+}

@@ -17,6 +17,12 @@ pub struct RunConfig {
     pub scan: ScanConfig,
     pub seed: u64,
     pub transport_tcp: bool,
+    /// number of multiplexed sessions to run over shared connections
+    /// (1 = classic single-session deployment on dedicated connections)
+    pub sessions: usize,
+    /// bound on concurrently-running sessions (leader worker pool and
+    /// party service pool) when `sessions > 1`
+    pub max_concurrent: usize,
 }
 
 impl Default for RunConfig {
@@ -26,6 +32,8 @@ impl Default for RunConfig {
             scan: ScanConfig::default(),
             seed: 7,
             transport_tcp: false,
+            sessions: 1,
+            max_concurrent: 4,
         }
     }
 }
@@ -43,6 +51,14 @@ impl RunConfig {
                 "inproc" => false,
                 other => anyhow::bail!("unknown transport `{other}`"),
             };
+        }
+        if let Some(x) = v.get("sessions").and_then(Json::as_usize) {
+            anyhow::ensure!(x >= 1, "sessions must be ≥ 1");
+            cfg.sessions = x;
+        }
+        if let Some(x) = v.get("max_concurrent").and_then(Json::as_usize) {
+            anyhow::ensure!(x >= 1, "max_concurrent must be ≥ 1");
+            cfg.max_concurrent = x;
         }
         if let Some(c) = v.get("cohort") {
             cfg.cohort = parse_cohort(c, cfg.cohort)?;
@@ -103,6 +119,8 @@ impl RunConfig {
         let mut o = Json::obj();
         o.set("seed", self.seed)
             .set("transport", if self.transport_tcp { "tcp" } else { "inproc" })
+            .set("sessions", self.sessions)
+            .set("max_concurrent", self.max_concurrent)
             .set("cohort", cohort)
             .set("scan", scan);
         o
@@ -248,6 +266,23 @@ mod tests {
         assert_eq!(back.cohort.party_sizes, cfg.cohort.party_sizes);
         assert_eq!(back.scan.backend, cfg.scan.backend);
         assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.sessions, 1);
+        assert_eq!(back.max_concurrent, 4);
+    }
+
+    #[test]
+    fn session_config_roundtrips_and_validates() {
+        let j = Json::parse(r#"{"sessions": 16, "max_concurrent": 8}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.sessions, 16);
+        assert_eq!(cfg.max_concurrent, 8);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sessions, 16);
+        assert_eq!(back.max_concurrent, 8);
+        assert!(RunConfig::from_json(&Json::parse(r#"{"sessions": 0}"#).unwrap()).is_err());
+        assert!(
+            RunConfig::from_json(&Json::parse(r#"{"max_concurrent": 0}"#).unwrap()).is_err()
+        );
     }
 
     #[test]

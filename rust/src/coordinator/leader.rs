@@ -18,7 +18,7 @@ use crate::mpc::fixed::FixedCodec;
 use crate::mpc::masking::aggregate_masked;
 use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::Backend;
-use crate::net::{Endpoint, Frame, WireMessage};
+use crate::net::{Channel, Frame, WireMessage};
 use crate::scan::{
     base_flat_len, choose_candidates, shard_flat_len, unflatten_base, unflatten_shard,
     CombineContext, ScanConfig, ScanOutput, SelectOutput, SelectPolicy, SelectState, ShardPlan,
@@ -62,17 +62,23 @@ pub struct SessionMetrics {
     pub bytes_max_select_round: u64,
 }
 
-/// Leader state for one scan session over connected party endpoints.
-pub struct Leader<'a> {
-    pub endpoints: &'a [Endpoint],
+/// Leader state for one scan session over connected party channels —
+/// dedicated [`crate::net::Endpoint`]s (the classic deployment, session
+/// id 0) or per-session [`crate::net::SessionChannel`]s of a multiplexed
+/// connection (driven by [`super::session::SessionManager`]).
+pub struct Leader<'a, C: Channel> {
+    pub endpoints: &'a [C],
     pub cfg: &'a ScanConfig,
     pub k: usize,
     pub m: usize,
     /// trait count T (1 = classic single-trait scan)
     pub t: usize,
+    /// protocol session id, delivered in SETUP; keys the parties'
+    /// mask/share domains (0 on dedicated connections)
+    pub session: u64,
 }
 
-impl Leader<'_> {
+impl<C: Channel> Leader<'_, C> {
     /// Run the full session; returns scan output, SELECT output (when
     /// `select_k > 0` and the shortlist was non-empty) and metrics.
     pub fn run(
@@ -121,6 +127,7 @@ impl Leader<'_> {
         let seed_matrix = PairwiseMasker::session_seeds(parties, &mut rng);
         for (p, ep) in self.endpoints.iter().enumerate() {
             let setup = Setup {
+                session: self.session,
                 party_index: p as u64,
                 parties: parties as u64,
                 backend: backend_code,
@@ -458,7 +465,7 @@ impl Leader<'_> {
 }
 
 /// Receive a frame, converting a party-side ERROR report into an Err.
-fn recv_ok(ep: &Endpoint) -> anyhow::Result<Frame> {
+fn recv_ok<C: Channel>(ep: &C) -> anyhow::Result<Frame> {
     let f = ep.recv()?;
     if f.tag == TAG_ERROR {
         anyhow::bail!("party error: {}", parse_error(&f));

@@ -57,6 +57,10 @@ pub const LANE_INACTIVE: u64 = u64::MAX;
 /// Session parameters delivered to each party at SETUP.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Setup {
+    /// protocol session id (0 on dedicated connections; the multiplexed
+    /// session id otherwise). Keys the secure-sum mask/share domains so
+    /// concurrent sessions never reuse a PRG stream.
+    pub session: u64,
     pub party_index: u64,
     pub parties: u64,
     /// 0 = plaintext, 1 = masked, 2 = shamir
@@ -82,6 +86,7 @@ impl WireMessage for Setup {
     const NAME: &'static str = "SETUP";
 
     fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("session", self.session);
         s.u64("party_index", self.party_index);
         s.u64("parties", self.parties);
         s.u64("backend", self.backend);
@@ -98,6 +103,7 @@ impl WireMessage for Setup {
 
     fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
         Ok(Setup {
+            session: s.u64("session")?,
             party_index: s.u64("party_index")?,
             parties: s.u64("parties")?,
             backend: s.u64("backend")?,
@@ -570,6 +576,7 @@ mod tests {
 
     fn setup() -> Setup {
         Setup {
+            session: 11,
             party_index: 2,
             parties: 5,
             backend: 1,

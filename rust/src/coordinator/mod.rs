@@ -11,15 +11,27 @@
 //! thread per party), which is also what the benches and examples drive;
 //! `--transport tcp` in the launcher swaps in localhost sockets with the
 //! same protocol bytes.
+//!
+//! Multiplexed deployments ([`session`], `--sessions N`) run many
+//! concurrent scan+SELECT sessions over *one* shared connection pair
+//! per party: a leader-side [`SessionManager`] with a bounded worker
+//! pool, party-side [`party_service`]s sharing one artifact engine, and
+//! session-keyed mask domains — the same protocol state machines over
+//! [`crate::net::SessionChannel`]s instead of dedicated endpoints.
 
 pub mod messages;
 pub mod party;
 pub mod leader;
 pub mod incremental;
+pub mod session;
 
 pub use incremental::{IncrementalAggregate, ScanAssembler};
 pub use leader::{Leader, SessionMetrics};
 pub use party::{ComputeBackend, PartyResult};
+pub use session::{
+    party_service, run_session_batch, BatchOptions, SessionBatchResult, SessionManager,
+    SessionRun, SessionSpec, SessionState, SessionStatus,
+};
 
 use crate::gwas::Cohort;
 use crate::net::{duplex_pair, tcp_pair, ByteMeter};
@@ -97,7 +109,7 @@ pub fn run_multi_party_scan_t(
                     let compute = if cfg.use_artifacts {
                         // each party owns its engine (PJRT handles are
                         // !Send); telemetry flows out via the shared meter
-                        party::ComputeBackend::Artifacts(Box::new(
+                        party::ComputeBackend::Artifacts(std::sync::Arc::new(
                             crate::runtime::Engine::open(&EngineOptions {
                                 dir: cfg.artifacts_dir.clone(),
                                 exec: cfg.artifact_exec,
@@ -111,7 +123,7 @@ pub fn run_multi_party_scan_t(
                     party::serve(&ep, data, &compute)
                 }));
             }
-            let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m, t };
+            let leader = Leader { endpoints: &leader_eps, cfg: &cfg2, k, m, t, session: 0 };
             let out = leader.run(seed);
             for (i, h) in handles.into_iter().enumerate() {
                 let joined = h

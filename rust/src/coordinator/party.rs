@@ -1,8 +1,10 @@
 //! Party-side protocol state machine.
 //!
 //! A party owns its local `(Y, C, X)` — `Y` being the `N_p × T` trait
-//! matrix, `T = 1` for a classic single-trait scan — and an [`Endpoint`]
-//! to the leader. [`serve`] runs the sharded session: SETUP → COMPRESS →
+//! matrix, `T = 1` for a classic single-trait scan — and a frame
+//! [`Channel`] to the leader (a dedicated [`crate::net::Endpoint`], or
+//! one session of a multiplexed connection).
+//! [`serve`] runs the sharded session: SETUP → COMPRESS →
 //! base contribution → one contribution per variant shard → per-shard
 //! RESULT frames → SHUTDOWN. The raw data never crosses the endpoint;
 //! only compressed (and, in secure modes, encoded+masked/shared)
@@ -34,20 +36,23 @@ use crate::mpc::field::Fe;
 use crate::mpc::fixed::FixedCodec;
 use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::shamir;
-use crate::net::{Endpoint, Frame, WireMessage};
+use crate::net::{Channel, Frame, WireMessage};
 use crate::runtime::Engine;
 use crate::scan::{
     compress_base, compress_variant_block, cross_products, BaseStats, ShardPlan, ShardRange,
     VariantBlockStats,
 };
+use std::sync::Arc;
 
 /// How a party computes its compress stage.
 pub enum ComputeBackend {
     /// pure-Rust reference path
     Rust { threads: Option<usize> },
     /// the artifact kernel suite (PJRT or reference executor — see
-    /// [`crate::runtime::ArtifactExec`])
-    Artifacts(Box<Engine>),
+    /// [`crate::runtime::ArtifactExec`]). Shared (`Arc`) so a party
+    /// service serving many concurrent sessions amortizes one engine —
+    /// and its lowering cache — across all of them.
+    Artifacts(Arc<Engine>),
 }
 
 /// Per-session compute state: stream shard-by-shard through the
@@ -108,9 +113,10 @@ pub struct PartyResult {
 }
 
 /// Run the party side of one scan session. Returns the assembled
-/// broadcast result.
-pub fn serve(
-    endpoint: &Endpoint,
+/// broadcast result. `endpoint` is a dedicated [`crate::net::Endpoint`]
+/// or one [`crate::net::SessionChannel`] of a multiplexed connection.
+pub fn serve<C: Channel>(
+    endpoint: &C,
     data: &PartyData,
     compute: &ComputeBackend,
 ) -> anyhow::Result<PartyResult> {
@@ -124,8 +130,8 @@ pub fn serve(
     }
 }
 
-fn serve_inner(
-    endpoint: &Endpoint,
+fn serve_inner<C: Channel>(
+    endpoint: &C,
     data: &PartyData,
     compute: &ComputeBackend,
 ) -> anyhow::Result<PartyResult> {
@@ -164,20 +170,21 @@ fn serve_inner(
             rng: crate::util::rng::Rng,
         },
     }
+    // Mask/share PRG streams are keyed by the session id, so concurrent
+    // sessions multiplexed over one connection (or sharing seeds) stay
+    // domain-separated.
     let mut secure = match setup.backend {
         0 => Secure::Plain,
-        1 => Secure::Masked(PairwiseMasker::new(
+        1 => Secure::Masked(PairwiseMasker::with_domain(
             setup.party_index as usize,
             setup.parties as usize,
             setup.seeds.clone(),
+            setup.session,
         )),
         2 => Secure::Shamir {
             parties: setup.parties as usize,
             threshold: setup.shamir_threshold as usize,
-            rng: crate::util::rng::Rng::new(
-                setup.seeds.iter().fold(0x5A17u64, |a, &s| a ^ s.rotate_left(17))
-                    ^ setup.party_index.wrapping_mul(0x9E3779B97F4A7C15),
-            ),
+            rng: shamir::session_rng(&setup.seeds, setup.party_index, setup.session),
         },
         b => anyhow::bail!("unknown backend {b}"),
     };
@@ -360,7 +367,7 @@ fn serve_inner(
 }
 
 /// Receive a frame, converting a leader-side ERROR broadcast into an Err.
-fn recv_checked(ep: &Endpoint) -> anyhow::Result<Frame> {
+fn recv_checked<C: Channel>(ep: &C) -> anyhow::Result<Frame> {
     let f = ep.recv()?;
     if f.tag == TAG_ERROR {
         anyhow::bail!("leader error: {}", parse_error(&f));

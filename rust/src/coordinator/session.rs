@@ -1,0 +1,498 @@
+//! Concurrent session service: many scan+SELECT sessions multiplexed
+//! over one shared connection per party.
+//!
+//! The classic deployment ([`super::run_multi_party_scan`]) runs exactly
+//! one session per process over dedicated connections. This module is
+//! the scale-out axis: a leader-side [`SessionManager`] schedules any
+//! number of [`SessionSpec`]s onto a bounded worker pool, each session
+//! running the unmodified [`Leader`] state machine over per-session
+//! [`crate::net::SessionChannel`]s of shared [`crate::net::SessionMux`]
+//! connections; a party-side [`party_service`] accepts sessions as their
+//! first frames arrive and serves each with the unmodified party state
+//! machine on its own bounded pool. Sessions are isolated end to end:
+//!
+//! - **framing** — every frame carries its session id (codec v2), the
+//!   demux routes by id, and late/unknown frames are dropped, not
+//!   misdelivered;
+//! - **masking** — secure-sum PRG streams are keyed by session id
+//!   (`SETUP.session`), so concurrent sessions never reuse a mask or
+//!   share stream even under identical seeds;
+//! - **compute** — parties share one [`Engine`] (and its lowering
+//!   cache) across all sessions, so artifact-mode kernels are lowered
+//!   once per shape, not once per session;
+//! - **metering** — each session carries its own byte meter; the shared
+//!   connection meter tallies the multiplexed total.
+//!
+//! [`run_session_batch`] wires a full in-process deployment of the
+//! above (in-proc channels or localhost TCP, optional fault injection
+//! for the chaos battery) and is what the `--sessions` CLI flag, the
+//! conformance matrix, and `bench_sessions` drive.
+
+use super::leader::{Leader, SessionMetrics};
+use super::party::{self, ComputeBackend};
+use super::Transport;
+use crate::gwas::Cohort;
+use crate::net::chaos::{FaultSpec, FaultyTransport};
+use crate::net::{duplex_pair, tcp_pair, ByteMeter, MuxOptions, SessionMux, SessionTransport};
+use crate::runtime::{Engine, EngineOptions, KernelMeter};
+use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
+use crate::util::threadpool::parallel_map;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One session to run: protocol knobs plus the leader-side seed.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub cfg: ScanConfig,
+    pub seed: u64,
+}
+
+/// Scheduler-visible lifecycle of one session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+/// Scheduler-side state of one session: id, lifecycle, and (once
+/// finished) the headline metering snapshot.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    pub session: u64,
+    pub status: SessionStatus,
+    /// shards streamed (0 until the session finishes)
+    pub shards: usize,
+    /// SELECT promote rounds completed
+    pub select_rounds: usize,
+    /// session wire bytes, both directions across all parties
+    pub bytes: u64,
+}
+
+/// A completed session's results.
+#[derive(Clone, Debug)]
+pub struct SessionRun {
+    pub session: u64,
+    pub output: ScanOutput,
+    pub select: Option<SelectOutput>,
+    pub metrics: SessionMetrics,
+}
+
+/// Leader-side scheduler: runs sessions over shared per-party muxes with
+/// a bounded worker pool. Session `i` of a batch gets id `i + 1` (0 is
+/// reserved for dedicated-connection deployments).
+pub struct SessionManager<'a> {
+    muxes: &'a [SessionMux],
+    k: usize,
+    m: usize,
+    t: usize,
+    max_concurrent: usize,
+    states: Mutex<Vec<SessionState>>,
+}
+
+impl<'a> SessionManager<'a> {
+    pub fn new(
+        muxes: &'a [SessionMux],
+        k: usize,
+        m: usize,
+        t: usize,
+        max_concurrent: usize,
+    ) -> SessionManager<'a> {
+        SessionManager {
+            muxes,
+            k,
+            m,
+            t,
+            max_concurrent: max_concurrent.max(1),
+            states: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Snapshot of every session's scheduler state.
+    pub fn states(&self) -> Vec<SessionState> {
+        self.states.lock().unwrap().clone()
+    }
+
+    /// Run all `specs` to completion (bounded concurrency), returning
+    /// per-session results in spec order. A failed session yields its
+    /// error without disturbing the others.
+    pub fn run(&self, specs: &[SessionSpec]) -> Vec<anyhow::Result<SessionRun>> {
+        *self.states.lock().unwrap() = (0..specs.len())
+            .map(|i| SessionState {
+                session: (i + 1) as u64,
+                status: SessionStatus::Queued,
+                shards: 0,
+                select_rounds: 0,
+                bytes: 0,
+            })
+            .collect();
+        // the bounded worker pool is util::threadpool's dynamic-dispatch
+        // map: `max_concurrent` workers pulling session indices, results
+        // collected in spec order
+        parallel_map(specs.len(), Some(self.max_concurrent), |i| {
+            let sid = (i + 1) as u64;
+            self.set_status(i, SessionStatus::Running);
+            let res = self.run_one(sid, &specs[i]);
+            let mut st = self.states.lock().unwrap();
+            let slot = &mut st[i];
+            match &res {
+                Ok(run) => {
+                    slot.status = SessionStatus::Done;
+                    slot.shards = run.metrics.shards;
+                    slot.select_rounds = run.metrics.select_rounds;
+                    slot.bytes = run.metrics.bytes_total;
+                }
+                Err(_) => slot.status = SessionStatus::Failed,
+            }
+            drop(st);
+            res
+        })
+    }
+
+    fn set_status(&self, i: usize, status: SessionStatus) {
+        self.states.lock().unwrap()[i].status = status;
+    }
+
+    fn run_one(&self, sid: u64, spec: &SessionSpec) -> anyhow::Result<SessionRun> {
+        let mut channels = Vec::with_capacity(self.muxes.len());
+        for mux in self.muxes {
+            match mux.open(sid) {
+                Ok(ch) => channels.push(ch),
+                Err(e) => {
+                    // roll back partially-opened queues before bailing
+                    for mux in self.muxes {
+                        mux.close(sid);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let leader = Leader {
+            endpoints: &channels,
+            cfg: &spec.cfg,
+            k: self.k,
+            m: self.m,
+            t: self.t,
+            session: sid,
+        };
+        let out = leader.run(spec.seed);
+        // free the per-session queues whether the session succeeded or
+        // not — the soak test asserts no state survives a session
+        for mux in self.muxes {
+            mux.close(sid);
+        }
+        let (output, select, metrics) = out?;
+        Ok(SessionRun { session: sid, output, select, metrics })
+    }
+}
+
+/// Party-side service: accept sessions from a multiplexed connection and
+/// serve each on a bounded worker pool, all workers sharing one compute
+/// backend (hence one artifact engine + lowering cache). Returns
+/// `(served, failed)` once the leader announces shutdown; per-session
+/// protocol errors are reported over the wire by the party state machine
+/// and do not stop the service.
+pub fn party_service(
+    mux: SessionMux,
+    data: &crate::gwas::PartyData,
+    compute: &ComputeBackend,
+    max_workers: usize,
+) -> (usize, usize) {
+    let served = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..max_workers.max(1) {
+            s.spawn(|| loop {
+                match mux.accept() {
+                    Ok(Some(ch)) => {
+                        let sid = ch.session();
+                        match party::serve(&ch, data, compute) {
+                            Ok(_) => served.fetch_add(1, Ordering::SeqCst),
+                            Err(_) => failed.fetch_add(1, Ordering::SeqCst),
+                        };
+                        mux.close(sid);
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            });
+        }
+    });
+    // orderly two-way teardown: tell the leader we are done, then wait
+    // for our pump (which already saw the leader's shutdown) to exit
+    mux.shutdown();
+    mux.join();
+    (served.load(Ordering::SeqCst), failed.load(Ordering::SeqCst))
+}
+
+/// Deployment knobs for [`run_session_batch`].
+#[derive(Clone, Debug)]
+pub struct BatchOptions {
+    pub transport: Transport,
+    /// bound on concurrently-running sessions, leader and party side
+    pub max_concurrent: usize,
+    /// per-frame receive timeout (bounds how long a session can wait on
+    /// a frame a faulty transport swallowed)
+    pub recv_timeout: Option<Duration>,
+    /// chaos battery: perturb one frame on one party's shared connection
+    pub fault: Option<FaultSpec>,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions {
+            transport: Transport::InProc,
+            max_concurrent: 4,
+            recv_timeout: Some(Duration::from_secs(30)),
+            fault: None,
+        }
+    }
+}
+
+/// Result of a multiplexed session batch.
+pub struct SessionBatchResult {
+    /// per-session results, in spec order
+    pub runs: Vec<anyhow::Result<SessionRun>>,
+    /// the manager's final per-session scheduler states (spec order)
+    pub states: Vec<SessionState>,
+    /// shared-connection wire bytes per party (all sessions + control)
+    pub conn_bytes: Vec<u64>,
+    /// per-party kernel-suite telemetry — one engine per party shared by
+    /// every session, so `lowered_entries` must not scale with sessions
+    pub party_kernels: Vec<KernelMeter>,
+    /// sessions the party services completed / failed (summed)
+    pub served: usize,
+    pub failed: usize,
+    /// leader-side sessions still open right after the batch (must be 0
+    /// — the soak-test handle)
+    pub residual_sessions: usize,
+    /// batch wall time
+    pub wall_s: f64,
+}
+
+/// Run a batch of sessions over one shared connection pair per party:
+/// the full multiplexed deployment (leader manager + party services) in
+/// one process. All specs must agree on the compute path
+/// (`use_artifacts`), which is fixed per party service.
+pub fn run_session_batch(
+    cohort: &Cohort,
+    specs: &[SessionSpec],
+    opts: &BatchOptions,
+) -> anyhow::Result<SessionBatchResult> {
+    anyhow::ensure!(!specs.is_empty(), "session batch needs at least one spec");
+    let parties = cohort.parties.len();
+    anyhow::ensure!(parties >= 1, "need at least one party");
+    let first = &specs[0].cfg;
+    anyhow::ensure!(
+        specs.iter().all(|s| s.cfg.use_artifacts == first.use_artifacts),
+        "all sessions of a batch must share the compute path (use_artifacts)"
+    );
+
+    // Shared connections: one byte-metered pair per party, the leader
+    // side optionally wrapped in the fault injector.
+    let mut conn_meters = Vec::with_capacity(parties);
+    let mut leader_muxes = Vec::with_capacity(parties);
+    let mut party_muxes = Vec::with_capacity(parties);
+    for p in 0..parties {
+        let meter = ByteMeter::new();
+        let (l, pp) = match opts.transport {
+            Transport::InProc => duplex_pair(meter.clone()),
+            Transport::Tcp => tcp_pair(meter.clone())?,
+        };
+        let raw: Box<dyn SessionTransport> =
+            FaultyTransport::wrap_if(Box::new(l), p, opts.fault);
+        leader_muxes.push(SessionMux::new(
+            raw,
+            MuxOptions { accept: false, recv_timeout: opts.recv_timeout },
+        ));
+        party_muxes.push(SessionMux::over(
+            pp,
+            MuxOptions { accept: true, recv_timeout: opts.recv_timeout },
+        ));
+        conn_meters.push(meter);
+    }
+
+    // One compute backend per party, built up front so an engine-open
+    // failure surfaces before any thread is spawned. Artifact engines
+    // are shared across every session the service runs.
+    let kernel_meters: Vec<KernelMeter> = (0..parties).map(|_| KernelMeter::new()).collect();
+    let mut computes = Vec::with_capacity(parties);
+    for km in &kernel_meters {
+        computes.push(if first.use_artifacts {
+            ComputeBackend::Artifacts(Arc::new(Engine::open(&EngineOptions {
+                dir: first.artifacts_dir.clone(),
+                exec: first.artifact_exec,
+                policy: first.entry_policy(),
+                meter: km.clone(),
+            })?))
+        } else {
+            ComputeBackend::Rust { threads: first.threads }
+        });
+    }
+
+    let t0 = Instant::now();
+    let manager = SessionManager::new(
+        &leader_muxes,
+        cohort.k(),
+        cohort.m(),
+        cohort.t(),
+        opts.max_concurrent,
+    );
+    let (runs, states, served, failed, residual_sessions) = std::thread::scope(|s| {
+        let mut svc = Vec::with_capacity(parties);
+        for (p, mux) in party_muxes.into_iter().enumerate() {
+            let data = &cohort.parties[p];
+            let compute = &computes[p];
+            let workers = opts.max_concurrent;
+            svc.push(s.spawn(move || party_service(mux, data, compute, workers)));
+        }
+        let runs = manager.run(specs);
+        let states = manager.states();
+        let residual: usize = leader_muxes.iter().map(|m| m.open_sessions()).sum();
+        // teardown handshake: announce shutdown to every party service,
+        // collect them, then wait for our pumps (fed by their answering
+        // shutdown frames) to exit
+        for mux in leader_muxes.iter() {
+            mux.shutdown();
+        }
+        let mut served = 0usize;
+        let mut failed = 0usize;
+        for h in svc {
+            let (ok, bad) = h.join().expect("party service panicked");
+            served += ok;
+            failed += bad;
+        }
+        for mux in leader_muxes.iter() {
+            mux.join();
+        }
+        (runs, states, served, failed, residual)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    Ok(SessionBatchResult {
+        runs,
+        states,
+        conn_bytes: conn_meters.iter().map(|m| m.bytes()).collect(),
+        party_kernels: kernel_meters,
+        served,
+        failed,
+        residual_sessions,
+        wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::{generate_cohort, CohortSpec};
+    use crate::mpc::Backend;
+
+    fn batch_cfg(backend: Backend) -> ScanConfig {
+        ScanConfig {
+            backend,
+            shard_m: 8,
+            block_m: 16,
+            threads: Some(1),
+            ..ScanConfig::default()
+        }
+    }
+
+    #[test]
+    fn multiplexed_batch_matches_dedicated_connections() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 321);
+        let cfg = batch_cfg(Backend::Masked);
+        let serial =
+            super::super::run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 42)
+                .unwrap();
+        let specs: Vec<SessionSpec> =
+            (0..3).map(|_| SessionSpec { cfg: cfg.clone(), seed: 42 }).collect();
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions { max_concurrent: 3, ..Default::default() },
+        )
+        .unwrap();
+        // 3 sessions served by each of the 3 party services
+        assert_eq!(batch.served, 9);
+        assert_eq!(batch.failed, 0);
+        assert_eq!(batch.residual_sessions, 0);
+        for run in &batch.runs {
+            let run = run.as_ref().expect("session failed");
+            for tt in 0..serial.output.t() {
+                for (a, b) in
+                    run.output.assoc[tt].beta.iter().zip(&serial.output.assoc[tt].beta)
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_metrics_populated() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 322);
+        let cfg = batch_cfg(Backend::Plaintext);
+        let specs: Vec<SessionSpec> =
+            (0..2).map(|i| SessionSpec { cfg: cfg.clone(), seed: 50 + i }).collect();
+        let batch = run_session_batch(&cohort, &specs, &BatchOptions::default()).unwrap();
+        assert!(batch.runs.iter().all(|r| r.is_ok()));
+        assert!(batch.wall_s > 0.0);
+        // the manager's scheduler states settled to Done with metering
+        assert_eq!(batch.states.len(), 2);
+        for (i, st) in batch.states.iter().enumerate() {
+            assert_eq!(st.session, (i + 1) as u64);
+            assert_eq!(st.status, SessionStatus::Done);
+            assert!(st.shards > 0);
+            assert!(st.bytes > 0);
+        }
+        let bytes: Vec<u64> = batch
+            .runs
+            .iter()
+            .map(|r| r.as_ref().unwrap().metrics.bytes_total)
+            .collect();
+        assert!(bytes.iter().all(|&b| b > 0));
+        // the shared connections carry every session plus control frames
+        let conn_total: u64 = batch.conn_bytes.iter().sum();
+        assert!(conn_total > bytes.iter().sum::<u64>() / 2);
+    }
+
+    #[test]
+    fn mixed_session_specs_run_in_one_batch() {
+        // sessions with different SELECT knobs and seeds share the muxes
+        let cohort = generate_cohort(&CohortSpec::default_small(), 323);
+        let mut with_select = batch_cfg(Backend::Plaintext);
+        with_select.select_k = 1;
+        with_select.select_alpha = 0.9;
+        with_select.select_candidates = 8;
+        let specs = vec![
+            SessionSpec { cfg: batch_cfg(Backend::Plaintext), seed: 1 },
+            SessionSpec { cfg: with_select.clone(), seed: 2 },
+        ];
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions { max_concurrent: 2, ..Default::default() },
+        )
+        .unwrap();
+        let r0 = batch.runs[0].as_ref().unwrap();
+        let r1 = batch.runs[1].as_ref().unwrap();
+        assert!(r0.select.is_none());
+        assert!(r1.select.is_some());
+        // per-session serial equivalents agree bit-for-bit
+        for (spec, run) in specs.iter().zip([r0, r1]) {
+            let serial = super::super::run_multi_party_scan_t(
+                &cohort,
+                &spec.cfg,
+                Transport::InProc,
+                spec.seed,
+            )
+            .unwrap();
+            for (a, b) in
+                run.output.assoc[0].beta.iter().zip(&serial.output.assoc[0].beta)
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}

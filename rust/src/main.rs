@@ -74,6 +74,8 @@ fn scan_command() -> Command {
         .opt("block-m", "256", "variant block width")
         .opt("shard-m", "0", "variant shard width for the streaming protocol (0 = single shot)")
         .opt("transport", "inproc", "inproc|tcp")
+        .opt("sessions", "1", "multiplexed scan+SELECT sessions over shared per-party connections (1 = classic dedicated-connection run)")
+        .opt("max-concurrent", "4", "bound on concurrently-running sessions (leader scheduler and party service pools)")
         .opt("report", "", "write a JSON report to this path")
         .flag("artifacts", "use the artifact kernel suite for compression")
         .opt("artifacts-dir", "artifacts", "artifact directory")
@@ -133,6 +135,14 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     cfg.scan.select_policy = dash::scan::SelectPolicy::parse(a.get("select-policy").unwrap())?;
     cfg.scan.select_candidates = a.get_usize("select-candidates")?;
     let alpha = a.get_f64("alpha")?;
+    cfg.sessions = a.get_usize("sessions")?;
+    anyhow::ensure!(cfg.sessions >= 1, "--sessions must be ≥ 1");
+    cfg.max_concurrent = a.get_usize("max-concurrent")?;
+    anyhow::ensure!(cfg.max_concurrent >= 1, "--max-concurrent must be ≥ 1");
+
+    if cfg.sessions > 1 {
+        return run_scan_sessions(&cfg, a.get("report").filter(|p| !p.is_empty()));
+    }
 
     eprintln!(
         "generating cohort: P={} N={} M={} T={} K={} ...",
@@ -272,6 +282,117 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
             eprintln!("report written to {path}");
         }
     }
+    Ok(())
+}
+
+/// `scan --sessions N`: run N multiplexed sessions over one shared
+/// connection pair per party through the SessionManager.
+fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()> {
+    use dash::coordinator::{run_session_batch, BatchOptions, SessionSpec};
+
+    let cohort = generate_cohort(&cfg.cohort, cfg.seed);
+    let transport = if cfg.transport_tcp { Transport::Tcp } else { Transport::InProc };
+    eprintln!(
+        "running {} multiplexed sessions (max {} concurrent): backend={} transport={:?} \
+         artifacts={}",
+        cfg.sessions,
+        cfg.max_concurrent,
+        cfg.scan.backend.name(),
+        transport,
+        cfg.scan.use_artifacts
+    );
+    let specs: Vec<SessionSpec> = (0..cfg.sessions)
+        .map(|i| SessionSpec { cfg: cfg.scan.clone(), seed: cfg.seed.wrapping_add(i as u64) })
+        .collect();
+    let batch = run_session_batch(
+        &cohort,
+        &specs,
+        &BatchOptions {
+            transport,
+            max_concurrent: cfg.max_concurrent,
+            ..Default::default()
+        },
+    )?;
+
+    println!("== dash scan --sessions ==");
+    println!("parties           {}", cohort.parties.len());
+    println!("samples (N)       {}", cohort.n_total());
+    println!("variants (M)      {}", cohort.m());
+    println!("traits (T)        {}", cohort.t());
+    println!("backend           {}", cfg.scan.backend.name());
+    println!("sessions          {} (max {} concurrent)", cfg.sessions, cfg.max_concurrent);
+    println!(
+        "{:>8} {:>8} {:>10} {:>14} {:>8} {:>8}",
+        "session", "status", "total_s", "bytes", "shards", "select"
+    );
+    let mut failures = 0usize;
+    for (i, run) in batch.runs.iter().enumerate() {
+        match run {
+            Ok(r) => println!(
+                "{:>8} {:>8} {:>10.4} {:>14} {:>8} {:>8}",
+                i + 1,
+                "ok",
+                r.metrics.total_s,
+                human_bytes(r.metrics.bytes_total),
+                r.metrics.shards,
+                r.metrics.select_rounds
+            ),
+            Err(e) => {
+                failures += 1;
+                println!("{:>8} {:>8}  {e:#}", i + 1, "FAILED");
+            }
+        }
+    }
+    let conn_total: u64 = batch.conn_bytes.iter().sum();
+    println!("wall time         {}", human_secs(batch.wall_s));
+    println!("throughput        {:.2} sessions/s", cfg.sessions as f64 / batch.wall_s);
+    println!("shared-conn bytes {}", human_bytes(conn_total));
+    println!("party serve ok/err {} / {}", batch.served, batch.failed);
+    if cfg.scan.use_artifacts {
+        let lowered: u64 = batch.party_kernels.iter().map(|k| k.lowered_entries()).sum();
+        let hits: u64 = batch.party_kernels.iter().map(|k| k.cache_hits()).sum();
+        println!(
+            "artifact suite    entries={lowered} cache-hits={hits} (one engine per party, \
+             shared across sessions)"
+        );
+    }
+    if let Some(path) = report {
+        let mut rep = dash::util::json::Json::obj();
+        rep.set("config", cfg.to_json())
+            .set("sessions", cfg.sessions)
+            .set("max_concurrent", cfg.max_concurrent)
+            .set("wall_s", batch.wall_s)
+            .set("sessions_per_s", cfg.sessions as f64 / batch.wall_s)
+            .set("conn_bytes_total", conn_total)
+            .set("served", batch.served)
+            .set("failed", batch.failed);
+        let rows: Vec<dash::util::json::Json> = batch
+            .runs
+            .iter()
+            .enumerate()
+            .map(|(i, run)| {
+                let mut row = dash::util::json::Json::obj();
+                row.set("session", i + 1);
+                match run {
+                    Ok(r) => {
+                        row.set("ok", true)
+                            .set("total_s", r.metrics.total_s)
+                            .set("bytes_total", r.metrics.bytes_total)
+                            .set("shards", r.metrics.shards)
+                            .set("select_rounds", r.metrics.select_rounds);
+                    }
+                    Err(e) => {
+                        row.set("ok", false).set("error", format!("{e:#}"));
+                    }
+                }
+                row
+            })
+            .collect();
+        rep.set("runs", dash::util::json::Json::Arr(rows));
+        std::fs::write(path, rep.to_pretty())?;
+        eprintln!("report written to {path}");
+    }
+    anyhow::ensure!(failures == 0, "{failures} session(s) failed");
     Ok(())
 }
 

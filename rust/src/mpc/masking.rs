@@ -24,13 +24,25 @@ pub struct PairwiseMasker {
     pub seeds: Vec<u64>,
     /// round counter — fresh masks per combine round
     pub round: u64,
+    /// mask-domain tag (the session id in multiplexed deployments):
+    /// concurrent sessions sharing a transport — or even, degenerately,
+    /// identical pairwise seeds — draw from disjoint PRG streams
+    pub domain: u64,
 }
 
 impl PairwiseMasker {
     pub fn new(party: usize, parties: usize, seeds: Vec<u64>) -> Self {
+        Self::with_domain(party, parties, seeds, 0)
+    }
+
+    /// As [`PairwiseMasker::new`] with an explicit mask domain (session
+    /// id). Two maskers over the same seeds but different domains
+    /// produce disjoint mask streams for every round
+    /// (`tests/mask_domains.rs`).
+    pub fn with_domain(party: usize, parties: usize, seeds: Vec<u64>, domain: u64) -> Self {
         assert_eq!(seeds.len(), parties);
         assert!(party < parties);
-        PairwiseMasker { party, parties, seeds, round: 0 }
+        PairwiseMasker { party, parties, seeds, round: 0, domain }
     }
 
     /// Generate the symmetric seed matrix for a session (leader side).
@@ -48,14 +60,16 @@ impl PairwiseMasker {
     }
 
     /// Mask `values` in place for this round and advance the round
-    /// counter. The PRG stream is keyed by (pair seed, round) so each
-    /// round's masks are independent.
+    /// counter. The PRG stream is keyed by (pair seed, domain, round) so
+    /// each round's masks are independent — across rounds within a
+    /// session *and* across concurrent sessions (domains) on the same
+    /// pairwise seeds.
     pub fn mask_in_place(&mut self, values: &mut [u64]) {
         for j in 0..self.parties {
             if j == self.party {
                 continue;
             }
-            let mut prg = Rng::new(self.seeds[j]).derive(self.round);
+            let mut prg = Rng::new(self.seeds[j]).derive(self.domain).derive(self.round);
             if j > self.party {
                 for v in values.iter_mut() {
                     *v = v.wrapping_add(prg.next_u64());
@@ -169,6 +183,33 @@ mod tests {
             let want: f64 = plain.iter().map(|p| p[i]).sum();
             assert!((agg[i] - want).abs() < 1e-6, "i={i}: {} vs {want}", agg[i]);
         }
+    }
+
+    #[test]
+    fn domains_cancel_independently_and_disjointly() {
+        // masks still cancel within each domain…
+        let mut rng = Rng::new(85);
+        let seeds = PairwiseMasker::session_seeds(3, &mut rng);
+        for domain in [1u64, 2] {
+            let mut maskers: Vec<PairwiseMasker> = (0..3)
+                .map(|p| PairwiseMasker::with_domain(p, 3, seeds[p].clone(), domain))
+                .collect();
+            let plain: Vec<Vec<u64>> = (0..3).map(|p| vec![p as u64; 16]).collect();
+            let mut masked = plain.clone();
+            for (p, m) in masked.iter_mut().enumerate() {
+                maskers[p].mask_in_place(m);
+            }
+            assert_eq!(aggregate_masked(&masked), vec![3u64; 16]);
+        }
+        // …and identical seeds in different domains give disjoint streams
+        let mut a = PairwiseMasker::with_domain(0, 3, seeds[0].clone(), 1);
+        let mut b = PairwiseMasker::with_domain(0, 3, seeds[0].clone(), 2);
+        let mut va = vec![0u64; 256];
+        let mut vb = vec![0u64; 256];
+        a.mask_in_place(&mut va);
+        b.mask_in_place(&mut vb);
+        let same = va.iter().zip(&vb).filter(|(x, y)| x == y).count();
+        assert!(same <= 1, "mask streams overlap in {same}/256 words");
     }
 
     #[test]

@@ -98,6 +98,18 @@ pub fn add_share_vecs(a: &mut [Share], b: &[Share]) {
     }
 }
 
+/// Per-session share-randomness stream for one party: keyed by the
+/// session's pairwise seeds, the party index, *and* the session id, so
+/// concurrent sessions over the same setup (even with identical seeds)
+/// draw their sharing polynomials from disjoint streams — the Shamir
+/// analogue of the pairwise-mask domain separation
+/// (`tests/mask_domains.rs`).
+pub fn session_rng(seeds: &[u64], party_index: u64, session: u64) -> Rng {
+    let base = seeds.iter().fold(0x5A17u64, |a, &s| a ^ s.rotate_left(17))
+        ^ party_index.wrapping_mul(0x9E3779B97F4A7C15);
+    Rng::new(base).derive(session)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,309 @@
+//! Fault-injecting session transport for the chaos battery.
+//!
+//! [`FaultyTransport`] wraps any [`SessionTransport`] and perturbs
+//! exactly one targeted frame — the `nth` frame of a chosen session in a
+//! chosen direction — by dropping, duplicating, reordering, or
+//! misrouting it to another session. The perturbation is deterministic
+//! (a counter, not a coin flip) so every chaos test pins down precisely
+//! which protocol step was hit and can assert the exact failure surface:
+//! the affected session fails with a clean `ErrorMsg`/timeout, and every
+//! untouched session completes bit-identically to its serial run
+//! (`tests/chaos_sessions.rs`).
+//!
+//! Mux control frames ([`crate::net::SESSION_CTRL`]) are never targeted,
+//! so connection teardown stays orderly even under fault injection.
+
+use super::frame::Frame;
+use super::meter::ByteMeter;
+use super::mux::{SessionTransport, SESSION_CTRL};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What happens to the targeted frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// the frame vanishes
+    Drop,
+    /// the frame is delivered twice
+    Duplicate,
+    /// the frame is swapped with the targeted session's *next* frame
+    /// (swapping with another session's frame would be undone by the
+    /// demux, which only guarantees per-session FIFO order); if no later
+    /// frame of that session ever passes, the held frame is lost
+    /// (degrades to a drop — still bounded by the receive timeout)
+    Reorder,
+    /// the frame is delivered to a different session
+    Misroute { to: u64 },
+}
+
+/// Which direction of the wrapped transport is perturbed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDir {
+    /// outgoing frames (`send_s`)
+    Send,
+    /// incoming frames (`recv_s`)
+    Recv,
+}
+
+/// One deterministic fault: the `nth` (0-based) frame of `session` in
+/// direction `dir` on the wrapped connection of party `party`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// which party's shared connection is wrapped (used by the session
+    /// service wiring; the transport itself doesn't read it)
+    pub party: usize,
+    pub dir: FaultDir,
+    pub mode: FaultMode,
+    /// targeted session id
+    pub session: u64,
+    /// 0-based index among that session's frames in that direction
+    pub nth: u64,
+}
+
+/// A [`SessionTransport`] that injects exactly one fault.
+pub struct FaultyTransport {
+    inner: Box<dyn SessionTransport>,
+    spec: FaultSpec,
+    seen: AtomicU64,
+    /// held frame awaiting the next send (send-side reorder)
+    held: Mutex<Option<(u64, Frame)>>,
+    /// frame queued for redelivery (recv-side duplicate/reorder)
+    pending: Mutex<Option<(u64, Frame)>>,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: Box<dyn SessionTransport>, spec: FaultSpec) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            spec,
+            seen: AtomicU64::new(0),
+            held: Mutex::new(None),
+            pending: Mutex::new(None),
+        }
+    }
+
+    /// Wrap an endpoint-like transport only if the spec targets this
+    /// party; otherwise pass it through untouched.
+    pub fn wrap_if(
+        inner: Box<dyn SessionTransport>,
+        party: usize,
+        spec: Option<FaultSpec>,
+    ) -> Box<dyn SessionTransport> {
+        match spec {
+            Some(s) if s.party == party => Box::new(FaultyTransport::new(inner, s)),
+            _ => inner,
+        }
+    }
+
+    /// Does this frame hit the fault trigger?
+    fn triggers(&self, sid: u64) -> bool {
+        if sid != self.spec.session || sid == SESSION_CTRL {
+            return false;
+        }
+        self.seen.fetch_add(1, Ordering::SeqCst) == self.spec.nth
+    }
+}
+
+impl SessionTransport for FaultyTransport {
+    fn send_s(&self, sid: u64, f: &Frame) -> anyhow::Result<u64> {
+        if self.spec.dir != FaultDir::Send {
+            return self.inner.send_s(sid, f);
+        }
+        if self.triggers(sid) {
+            return match self.spec.mode {
+                FaultMode::Drop => Ok(0),
+                FaultMode::Duplicate => {
+                    let a = self.inner.send_s(sid, f)?;
+                    let b = self.inner.send_s(sid, f)?;
+                    Ok(a + b)
+                }
+                FaultMode::Misroute { to } => self.inner.send_s(to, f),
+                FaultMode::Reorder => {
+                    *self.held.lock().unwrap() = Some((sid, f.clone()));
+                    Ok(0)
+                }
+            };
+        }
+        let n = self.inner.send_s(sid, f)?;
+        // a held (reordered) frame goes out right after the targeted
+        // session's next frame
+        if sid == self.spec.session {
+            let held = self.held.lock().unwrap().take();
+            if let Some((hs, hf)) = held {
+                self.inner.send_s(hs, &hf)?;
+            }
+        }
+        Ok(n)
+    }
+
+    fn recv_s(&self) -> anyhow::Result<(u64, Frame)> {
+        if self.spec.dir != FaultDir::Recv {
+            return self.inner.recv_s();
+        }
+        if let Some(x) = self.pending.lock().unwrap().take() {
+            return Ok(x);
+        }
+        loop {
+            let (sid, f) = self.inner.recv_s()?;
+            if self.triggers(sid) {
+                match self.spec.mode {
+                    FaultMode::Drop => continue,
+                    FaultMode::Duplicate => {
+                        *self.pending.lock().unwrap() = Some((sid, f.clone()));
+                        return Ok((sid, f));
+                    }
+                    FaultMode::Misroute { to } => return Ok((to, f)),
+                    FaultMode::Reorder => {
+                        // hold until the targeted session's next frame
+                        *self.held.lock().unwrap() = Some((sid, f));
+                        continue;
+                    }
+                }
+            }
+            if sid == self.spec.session {
+                let held = self.held.lock().unwrap().take();
+                if let Some(h) = held {
+                    // deliver the later frame now, the held one next
+                    *self.pending.lock().unwrap() = Some(h);
+                    return Ok((sid, f));
+                }
+            }
+            return Ok((sid, f));
+        }
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        self.inner.meter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::duplex_pair;
+
+    fn frame(v: u64) -> Frame {
+        let mut f = Frame::new(1);
+        f.put_u64(v);
+        f
+    }
+
+    fn faulty_pair(spec: FaultSpec) -> (FaultyTransport, crate::net::Endpoint) {
+        let (a, b) = duplex_pair(ByteMeter::new());
+        (FaultyTransport::new(Box::new(a), spec), b)
+    }
+
+    #[test]
+    fn drop_swallows_only_the_targeted_frame() {
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Drop,
+            session: 7,
+            nth: 1,
+        });
+        t.send_s(7, &frame(0)).unwrap();
+        t.send_s(9, &frame(100)).unwrap(); // other session untouched
+        assert_eq!(t.send_s(7, &frame(1)).unwrap(), 0); // dropped
+        t.send_s(7, &frame(2)).unwrap();
+        let got: Vec<(u64, u64)> = (0..3)
+            .map(|_| {
+                let (sid, f) = peer.recv_s().unwrap();
+                (sid, f.reader().u64().unwrap())
+            })
+            .collect();
+        assert_eq!(got, vec![(7, 0), (9, 100), (7, 2)]);
+    }
+
+    #[test]
+    fn duplicate_and_misroute_on_send() {
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Duplicate,
+            session: 3,
+            nth: 0,
+        });
+        t.send_s(3, &frame(5)).unwrap();
+        for _ in 0..2 {
+            let (sid, f) = peer.recv_s().unwrap();
+            assert_eq!((sid, f.reader().u64().unwrap()), (3, 5));
+        }
+
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Misroute { to: 8 },
+            session: 3,
+            nth: 0,
+        });
+        t.send_s(3, &frame(6)).unwrap();
+        let (sid, _) = peer.recv_s().unwrap();
+        assert_eq!(sid, 8);
+    }
+
+    #[test]
+    fn reorder_swaps_with_next_frame() {
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Reorder,
+            session: 2,
+            nth: 0,
+        });
+        t.send_s(2, &frame(1)).unwrap(); // held
+        t.send_s(2, &frame(2)).unwrap(); // goes first, then flushes held
+        let a = peer.recv_s().unwrap().1.reader().u64().unwrap();
+        let b = peer.recv_s().unwrap().1.reader().u64().unwrap();
+        assert_eq!((a, b), (2, 1));
+    }
+
+    #[test]
+    fn recv_side_faults() {
+        // drop on receive: the frame is read off the wire and discarded
+        let (a, b) = duplex_pair(ByteMeter::new());
+        let t = FaultyTransport::new(
+            Box::new(a),
+            FaultSpec {
+                party: 0,
+                dir: FaultDir::Recv,
+                mode: FaultMode::Drop,
+                session: 4,
+                nth: 0,
+            },
+        );
+        b.send_s(4, &frame(1)).unwrap();
+        b.send_s(4, &frame(2)).unwrap();
+        let (sid, f) = t.recv_s().unwrap();
+        assert_eq!((sid, f.reader().u64().unwrap()), (4, 2));
+
+        // duplicate on receive: delivered twice
+        let (a, b) = duplex_pair(ByteMeter::new());
+        let t = FaultyTransport::new(
+            Box::new(a),
+            FaultSpec {
+                party: 0,
+                dir: FaultDir::Recv,
+                mode: FaultMode::Duplicate,
+                session: 4,
+                nth: 0,
+            },
+        );
+        b.send_s(4, &frame(9)).unwrap();
+        assert_eq!(t.recv_s().unwrap().1.reader().u64().unwrap(), 9);
+        assert_eq!(t.recv_s().unwrap().1.reader().u64().unwrap(), 9);
+    }
+
+    #[test]
+    fn ctrl_session_is_never_targeted() {
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Drop,
+            session: SESSION_CTRL,
+            nth: 0,
+        });
+        t.send_s(SESSION_CTRL, &frame(1)).unwrap();
+        assert_eq!(peer.recv_s().unwrap().0, SESSION_CTRL);
+    }
+}

@@ -1,11 +1,27 @@
 //! Binary message framing.
 //!
-//! Wire format: `[u32 tag][u64 payload_len][payload bytes]`, all
+//! Wire format v1: `[u32 tag][u64 payload_len][payload bytes]`, all
 //! little-endian. Payload helpers encode vectors of `u64`/`f64` and
 //! matrices with shape headers — enough structure for the protocol
 //! messages without a serde dependency.
+//!
+//! Wire format v2 (multiplexed sessions): `[u32 FRAME_V2_MAGIC]
+//! [u64 session_id][u32 tag][u64 payload_len][payload bytes]`. The magic
+//! word occupies the tag position of a v1 frame, so a reader that
+//! understands both ([`FrameReader::read_any`]) sniffs the first word:
+//! magic ⇒ v2 with an explicit session id, anything else ⇒ a v1 frame
+//! belonging to the implicit session 0. v1 writers and readers are
+//! unchanged; only session-multiplexed transports emit v2 frames.
 
 use std::io::{Read, Write};
+
+/// First word of a v2 (session-multiplexed) frame. Deliberately far
+/// outside the protocol tag range so a v1 frame can never alias it.
+pub const FRAME_V2_MAGIC: u32 = 0xD5A2_F2AA;
+
+/// Extra wire bytes a v2 frame carries over v1: the magic word plus the
+/// session id.
+pub const FRAME_V2_OVERHEAD: u64 = 4 + 8;
 
 /// A tagged frame.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,9 +35,14 @@ impl Frame {
         Frame { tag, payload: Vec::new() }
     }
 
-    /// Total bytes on the wire for this frame.
+    /// Total bytes on the wire for this frame (v1 framing).
     pub fn wire_len(&self) -> u64 {
         4 + 8 + self.payload.len() as u64
+    }
+
+    /// Total bytes on the wire for this frame under v2 (session) framing.
+    pub fn wire_len_v2(&self) -> u64 {
+        self.wire_len() + FRAME_V2_OVERHEAD
     }
 
     // ---- payload writers ----
@@ -140,11 +161,23 @@ impl<W: Write> FrameWriter<W> {
     }
 
     pub fn write(&mut self, f: &Frame) -> anyhow::Result<u64> {
+        anyhow::ensure!(f.tag != FRAME_V2_MAGIC, "tag collides with the v2 magic word");
         self.w.write_all(&f.tag.to_le_bytes())?;
         self.w.write_all(&(f.payload.len() as u64).to_le_bytes())?;
         self.w.write_all(&f.payload)?;
         self.w.flush()?;
         Ok(f.wire_len())
+    }
+
+    /// Write a v2 (session-multiplexed) frame.
+    pub fn write_v2(&mut self, session: u64, f: &Frame) -> anyhow::Result<u64> {
+        self.w.write_all(&FRAME_V2_MAGIC.to_le_bytes())?;
+        self.w.write_all(&session.to_le_bytes())?;
+        self.w.write_all(&f.tag.to_le_bytes())?;
+        self.w.write_all(&(f.payload.len() as u64).to_le_bytes())?;
+        self.w.write_all(&f.payload)?;
+        self.w.flush()?;
+        Ok(f.wire_len_v2())
     }
 }
 
@@ -161,13 +194,35 @@ impl<R: Read> FrameReader<R> {
     pub fn read(&mut self) -> anyhow::Result<Frame> {
         let mut tag = [0u8; 4];
         self.r.read_exact(&mut tag)?;
+        self.read_body(u32::from_le_bytes(tag))
+    }
+
+    /// Read a frame in either framing version: a v2 frame yields its
+    /// explicit session id, a v1 frame falls back to session 0.
+    pub fn read_any(&mut self) -> anyhow::Result<(u64, Frame)> {
+        let mut head = [0u8; 4];
+        self.r.read_exact(&mut head)?;
+        let first = u32::from_le_bytes(head);
+        if first == FRAME_V2_MAGIC {
+            let mut sid = [0u8; 8];
+            self.r.read_exact(&mut sid)?;
+            let mut tag = [0u8; 4];
+            self.r.read_exact(&mut tag)?;
+            let f = self.read_body(u32::from_le_bytes(tag))?;
+            Ok((u64::from_le_bytes(sid), f))
+        } else {
+            Ok((0, self.read_body(first)?))
+        }
+    }
+
+    fn read_body(&mut self, tag: u32) -> anyhow::Result<Frame> {
         let mut len = [0u8; 8];
         self.r.read_exact(&mut len)?;
         let len = u64::from_le_bytes(len) as usize;
         anyhow::ensure!(len <= 1 << 32, "frame too large: {len} bytes");
         let mut payload = vec![0u8; len];
         self.r.read_exact(&mut payload)?;
-        Ok(Frame { tag: u32::from_le_bytes(tag), payload })
+        Ok(Frame { tag, payload })
     }
 }
 
@@ -240,6 +295,70 @@ mod tests {
         g.put_u64(u64::MAX / 8);
         assert!(g.reader().u64_vec().is_err());
         assert!(g.reader().bytes().is_err());
+    }
+
+    #[test]
+    fn v2_roundtrip_with_session_id() {
+        let mut buf = Vec::new();
+        let mut f = Frame::new(7);
+        f.put_u64(99).put_f64_slice(&[1.5, -2.5]);
+        let n = FrameWriter::new(&mut buf).write_v2(0xDEAD_BEEF, &f).unwrap();
+        assert_eq!(n, f.wire_len() + FRAME_V2_OVERHEAD);
+        assert_eq!(n as usize, buf.len());
+        let (sid, g) = FrameReader::new(buf.as_slice()).read_any().unwrap();
+        assert_eq!(sid, 0xDEAD_BEEF);
+        assert_eq!(g, f);
+    }
+
+    #[test]
+    fn read_any_falls_back_to_v1() {
+        // interleaved v1 and v2 frames on one stream, read with read_any
+        let mut buf = Vec::new();
+        {
+            let mut w = FrameWriter::new(&mut buf);
+            let mut f1 = Frame::new(3);
+            f1.put_u64(1);
+            w.write(&f1).unwrap();
+            let mut f2 = Frame::new(4);
+            f2.put_u64(2);
+            w.write_v2(42, &f2).unwrap();
+            let mut f3 = Frame::new(5);
+            f3.put_u64(3);
+            w.write(&f3).unwrap();
+        }
+        let mut r = FrameReader::new(buf.as_slice());
+        let (s1, g1) = r.read_any().unwrap();
+        assert_eq!((s1, g1.tag), (0, 3));
+        let (s2, g2) = r.read_any().unwrap();
+        assert_eq!((s2, g2.tag), (42, 4));
+        let (s3, g3) = r.read_any().unwrap();
+        assert_eq!((s3, g3.tag), (0, 5));
+    }
+
+    #[test]
+    fn v1_writer_rejects_magic_tag() {
+        let mut buf = Vec::new();
+        let f = Frame::new(FRAME_V2_MAGIC);
+        assert!(FrameWriter::new(&mut buf).write(&f).is_err());
+        // v2 framing carries any tag, including one equal to the magic
+        let n = FrameWriter::new(&mut buf).write_v2(1, &f).unwrap();
+        assert_eq!(n as usize, buf.len());
+        let (sid, g) = FrameReader::new(buf.as_slice()).read_any().unwrap();
+        assert_eq!(sid, 1);
+        assert_eq!(g.tag, FRAME_V2_MAGIC);
+    }
+
+    #[test]
+    fn truncated_v2_stream_errors() {
+        let mut buf = Vec::new();
+        let mut f = Frame::new(1);
+        f.put_u64_slice(&[1, 2, 3]);
+        FrameWriter::new(&mut buf).write_v2(9, &f).unwrap();
+        for cut in [2usize, 6, 13, buf.len() - 1] {
+            let mut t = buf.clone();
+            t.truncate(cut);
+            assert!(FrameReader::new(t.as_slice()).read_any().is_err(), "cut {cut}");
+        }
     }
 
     #[test]

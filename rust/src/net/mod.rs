@@ -11,12 +11,25 @@
 //! to the binary wire format (or a lossless JSON-debug form for
 //! transcripts).
 
+//!
+//! Multiplexed deployments layer a session demultiplexer ([`mux`]) over
+//! one shared connection per party: every frame gains a `session_id`
+//! (codec v2, with v1 fallback for dedicated connections) and a
+//! [`SessionChannel`] exposes each session as an ordered [`Channel`] —
+//! the interface both deployment shapes share. The chaos battery drives
+//! the same stack through a fault-injecting transport ([`chaos`]).
+
+pub mod chaos;
 mod codec;
 mod frame;
+pub mod mux;
 mod transport;
 mod meter;
 
 pub use codec::{Codec, FieldSink, FieldSource, WireMessage};
-pub use frame::{Frame, FrameReader, FrameWriter, PayloadReader};
+pub use frame::{Frame, FrameReader, FrameWriter, PayloadReader, FRAME_V2_MAGIC,
+    FRAME_V2_OVERHEAD};
 pub use meter::ByteMeter;
-pub use transport::{duplex_pair, tcp_pair, Endpoint};
+pub use mux::{MuxOptions, SessionChannel, SessionMux, SessionTransport, SESSION_CTRL,
+    TAG_MUX_SHUTDOWN};
+pub use transport::{duplex_pair, tcp_pair, Channel, Endpoint};

@@ -1,0 +1,470 @@
+//! Session demultiplexer: many interleaved protocol sessions over one
+//! shared connection.
+//!
+//! A [`SessionMux`] wraps one raw frame transport (an [`Endpoint`] or a
+//! fault-injecting [`crate::net::chaos::FaultyTransport`]) and carries
+//! any number of concurrent sessions over it using v2 (session-tagged)
+//! frames. A background pump thread reads incoming frames and routes
+//! them into per-session queues; [`SessionChannel`] handles expose one
+//! session as an ordered, byte-metered [`Channel`] — exactly what the
+//! leader and party state machines already speak — so the entire
+//! scan+SELECT protocol multiplexes without touching a single protocol
+//! message.
+//!
+//! ## Session lifecycle
+//!
+//! The initiating side (the leader) calls [`SessionMux::open`] before
+//! sending a session's first frame; the accepting side (a party) calls
+//! [`SessionMux::accept`], which yields a channel when the first frame
+//! of an unknown session id arrives. [`SessionMux::close`] frees a
+//! session's queue (asserted by the soak test — per-session state must
+//! not accumulate). Connection teardown is an explicit two-way
+//! handshake: each side sends a control-session shutdown frame
+//! ([`SessionMux::shutdown`]), and a pump exits when it *receives* one,
+//! so every in-flight frame is routed before either pump stops.
+//!
+//! ## Fault containment
+//!
+//! Frames for unknown or already-closed sessions are counted and
+//! dropped — a misrouted frame can at worst fail its target session's
+//! protocol state machine (every contribution carries its round/shard
+//! ordinal, so cross-session leakage is detected), never stall the
+//! connection. A configurable receive timeout bounds how long a session
+//! waits on a frame that a faulty transport swallowed: the waiting
+//! session fails with a clean error and every other session keeps
+//! running (the chaos battery in `tests/chaos_sessions.rs`).
+
+use super::frame::Frame;
+use super::meter::ByteMeter;
+use super::transport::{Channel, Endpoint};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Reserved session id for mux control frames (never a protocol
+/// session).
+pub const SESSION_CTRL: u64 = u64::MAX;
+
+/// Control frame tag: orderly connection shutdown.
+pub const TAG_MUX_SHUTDOWN: u32 = 0xF00F;
+
+/// Raw frame transport a [`SessionMux`] multiplexes over: session-tagged
+/// send and receive plus the shared-connection byte meter.
+pub trait SessionTransport: Send + Sync {
+    /// Send one session-tagged frame; returns its wire bytes.
+    fn send_s(&self, session: u64, f: &Frame) -> anyhow::Result<u64>;
+    /// Receive the next frame with its session id (v1 frames fall back
+    /// to session 0).
+    fn recv_s(&self) -> anyhow::Result<(u64, Frame)>;
+    /// Whole-connection meter (all sessions, both framing versions).
+    fn meter(&self) -> &ByteMeter;
+}
+
+impl SessionTransport for Endpoint {
+    fn send_s(&self, session: u64, f: &Frame) -> anyhow::Result<u64> {
+        Endpoint::send_s(self, session, f)
+    }
+    fn recv_s(&self) -> anyhow::Result<(u64, Frame)> {
+        Endpoint::recv_s(self)
+    }
+    fn meter(&self) -> &ByteMeter {
+        Endpoint::meter(self)
+    }
+}
+
+/// Mux configuration.
+#[derive(Clone, Debug)]
+pub struct MuxOptions {
+    /// Accept sessions initiated by the peer (party side). When false,
+    /// frames for sessions not opened locally are dropped (leader side).
+    pub accept: bool,
+    /// How long a session waits for a frame before failing cleanly.
+    /// `None` blocks indefinitely (only safe when the peer is trusted to
+    /// always answer or shut down).
+    pub recv_timeout: Option<Duration>,
+}
+
+impl Default for MuxOptions {
+    fn default() -> Self {
+        MuxOptions { accept: false, recv_timeout: Some(Duration::from_secs(30)) }
+    }
+}
+
+struct MuxState {
+    /// per-session inbox, keyed by session id
+    queues: BTreeMap<u64, VecDeque<Frame>>,
+    /// sessions created by incoming frames, not yet accepted locally
+    pending: VecDeque<u64>,
+    /// peer sent its shutdown control frame
+    closed: bool,
+    /// pump died on a transport error
+    poisoned: Option<String>,
+    /// frames for unknown/closed sessions, counted and dropped
+    dropped: u64,
+}
+
+struct MuxCore {
+    raw: Box<dyn SessionTransport>,
+    state: Mutex<MuxState>,
+    cv: Condvar,
+    opts: MuxOptions,
+}
+
+impl MuxCore {
+    /// Pump loop: route every incoming frame to its session queue.
+    fn pump(&self) {
+        loop {
+            match self.raw.recv_s() {
+                Ok((sid, f)) => {
+                    let mut st = self.state.lock().unwrap();
+                    if sid == SESSION_CTRL {
+                        if f.tag == TAG_MUX_SHUTDOWN {
+                            st.closed = true;
+                            self.cv.notify_all();
+                            return;
+                        }
+                        st.dropped += 1;
+                    } else if let Some(q) = st.queues.get_mut(&sid) {
+                        q.push_back(f);
+                        self.cv.notify_all();
+                    } else if self.opts.accept {
+                        let mut q = VecDeque::new();
+                        q.push_back(f);
+                        st.queues.insert(sid, q);
+                        st.pending.push_back(sid);
+                        self.cv.notify_all();
+                    } else {
+                        st.dropped += 1;
+                    }
+                }
+                Err(e) => {
+                    let mut st = self.state.lock().unwrap();
+                    st.poisoned = Some(format!("{e:#}"));
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn recv_on(&self, sid: u64) -> anyhow::Result<Frame> {
+        // one deadline per receive — other sessions' traffic waking the
+        // condvar must not extend this session's wait (the liveness
+        // bound the chaos battery relies on)
+        let deadline = self.opts.recv_timeout.map(|d| std::time::Instant::now() + d);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.queues.get_mut(&sid) {
+                Some(q) => {
+                    if let Some(f) = q.pop_front() {
+                        return Ok(f);
+                    }
+                }
+                None => anyhow::bail!("session {sid} is not open on this connection"),
+            }
+            if let Some(p) = &st.poisoned {
+                anyhow::bail!("session {sid}: connection failed: {p}");
+            }
+            if st.closed {
+                anyhow::bail!("session {sid}: connection shut down by peer");
+            }
+            st = match deadline {
+                None => self.cv.wait(st).unwrap(),
+                Some(deadline) => {
+                    let now = std::time::Instant::now();
+                    let Some(left) = deadline.checked_duration_since(now).filter(|d| {
+                        !d.is_zero()
+                    }) else {
+                        anyhow::bail!(
+                            "session {sid}: timed out after {:?} waiting for a frame",
+                            self.opts.recv_timeout.unwrap_or_default()
+                        );
+                    };
+                    self.cv.wait_timeout(st, left).unwrap().0
+                }
+            };
+        }
+    }
+}
+
+/// One shared connection carrying many interleaved sessions.
+pub struct SessionMux {
+    core: Arc<MuxCore>,
+    pump: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SessionMux {
+    /// Wrap a raw transport and start the routing pump.
+    pub fn new(raw: Box<dyn SessionTransport>, opts: MuxOptions) -> SessionMux {
+        let core = Arc::new(MuxCore {
+            raw,
+            state: Mutex::new(MuxState {
+                queues: BTreeMap::new(),
+                pending: VecDeque::new(),
+                closed: false,
+                poisoned: None,
+                dropped: 0,
+            }),
+            cv: Condvar::new(),
+            opts,
+        });
+        let pump_core = Arc::clone(&core);
+        let pump = std::thread::spawn(move || pump_core.pump());
+        SessionMux { core, pump: Mutex::new(Some(pump)) }
+    }
+
+    /// Convenience for the common case: mux over an [`Endpoint`].
+    pub fn over(ep: Endpoint, opts: MuxOptions) -> SessionMux {
+        SessionMux::new(Box::new(ep), opts)
+    }
+
+    /// Open a locally-initiated session (leader side). Must be called
+    /// before the first frame of that session can arrive back.
+    pub fn open(&self, sid: u64) -> anyhow::Result<SessionChannel> {
+        anyhow::ensure!(sid != SESSION_CTRL, "session id {sid} is reserved");
+        let mut st = self.core.state.lock().unwrap();
+        if let Some(p) = &st.poisoned {
+            anyhow::bail!("connection failed: {p}");
+        }
+        anyhow::ensure!(!st.closed, "connection shut down by peer");
+        anyhow::ensure!(
+            st.queues.insert(sid, VecDeque::new()).is_none(),
+            "session {sid} already open"
+        );
+        drop(st);
+        Ok(self.channel(sid))
+    }
+
+    /// Wait for the peer to initiate a session (party side). Returns
+    /// `Ok(None)` after the peer's orderly shutdown; `Err` if the
+    /// connection died. Safe to call from many worker threads — each
+    /// pending session is handed to exactly one caller.
+    pub fn accept(&self) -> anyhow::Result<Option<SessionChannel>> {
+        anyhow::ensure!(self.core.opts.accept, "mux is not in accepting mode");
+        let mut st = self.core.state.lock().unwrap();
+        loop {
+            if let Some(sid) = st.pending.pop_front() {
+                drop(st);
+                return Ok(Some(self.channel(sid)));
+            }
+            if let Some(p) = &st.poisoned {
+                anyhow::bail!("connection failed: {p}");
+            }
+            if st.closed {
+                return Ok(None);
+            }
+            st = self.core.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Close a session: frees its queue. Late frames for it are dropped.
+    pub fn close(&self, sid: u64) {
+        let mut st = self.core.state.lock().unwrap();
+        st.queues.remove(&sid);
+    }
+
+    /// Announce orderly shutdown to the peer (its pump exits once every
+    /// earlier frame has been routed). Best-effort: a dead connection is
+    /// already shut down.
+    pub fn shutdown(&self) {
+        let _ = self.core.raw.send_s(SESSION_CTRL, &Frame::new(TAG_MUX_SHUTDOWN));
+    }
+
+    /// Wait for the routing pump to exit (after the *peer's* shutdown
+    /// frame arrived or the connection died).
+    pub fn join(&self) {
+        let handle = self.pump.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Sessions currently open (soak-test handle: must return to 0).
+    pub fn open_sessions(&self) -> usize {
+        self.core.state.lock().unwrap().queues.len()
+    }
+
+    /// Frames dropped for unknown/closed sessions.
+    pub fn dropped_frames(&self) -> u64 {
+        self.core.state.lock().unwrap().dropped
+    }
+
+    /// Whole-connection byte meter.
+    pub fn conn_meter(&self) -> &ByteMeter {
+        self.core.raw.meter()
+    }
+
+    fn channel(&self, sid: u64) -> SessionChannel {
+        SessionChannel { sid, core: Arc::clone(&self.core), meter: ByteMeter::new() }
+    }
+}
+
+/// One session of a multiplexed connection, as an ordered frame
+/// [`Channel`]. The per-channel meter counts this session's wire bytes
+/// in both directions (sends locally, receives as routed by the pump),
+/// so per-session accounting survives multiplexing.
+pub struct SessionChannel {
+    sid: u64,
+    core: Arc<MuxCore>,
+    meter: ByteMeter,
+}
+
+impl SessionChannel {
+    pub fn session(&self) -> u64 {
+        self.sid
+    }
+}
+
+impl Channel for SessionChannel {
+    fn send(&self, f: &Frame) -> anyhow::Result<()> {
+        let n = self.core.raw.send_s(self.sid, f)?;
+        self.meter.record(n);
+        Ok(())
+    }
+
+    fn recv(&self) -> anyhow::Result<Frame> {
+        let f = self.core.recv_on(self.sid)?;
+        self.meter.record(f.wire_len_v2());
+        Ok(f)
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        &self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::duplex_pair;
+
+    fn muxed_pair() -> (SessionMux, SessionMux) {
+        let (l, p) = duplex_pair(ByteMeter::new());
+        (
+            SessionMux::over(l, MuxOptions { accept: false, ..Default::default() }),
+            SessionMux::over(p, MuxOptions { accept: true, ..Default::default() }),
+        )
+    }
+
+    fn frame(tag: u32, v: u64) -> Frame {
+        let mut f = Frame::new(tag);
+        f.put_u64(v);
+        f
+    }
+
+    fn finish(leader: &SessionMux, party: &SessionMux) {
+        leader.shutdown();
+        assert!(party.accept().unwrap().is_none());
+        party.shutdown();
+        leader.join();
+        party.join();
+    }
+
+    #[test]
+    fn two_sessions_interleave_without_crosstalk() {
+        let (leader, party) = muxed_pair();
+        let a = leader.open(1).unwrap();
+        let b = leader.open(2).unwrap();
+        // interleave sends across the two sessions
+        b.send(&frame(10, 20)).unwrap();
+        a.send(&frame(10, 10)).unwrap();
+        b.send(&frame(11, 21)).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        let pb = party.accept().unwrap().unwrap();
+        // accept order follows first-frame arrival order
+        assert_eq!(pa.session(), 2);
+        assert_eq!(pb.session(), 1);
+        assert_eq!(pb.recv().unwrap().reader().u64().unwrap(), 10);
+        assert_eq!(pa.recv().unwrap().reader().u64().unwrap(), 20);
+        assert_eq!(pa.recv().unwrap().reader().u64().unwrap(), 21);
+        // answers route back by session id
+        pa.send(&frame(12, 200)).unwrap();
+        pb.send(&frame(12, 100)).unwrap();
+        assert_eq!(a.recv().unwrap().reader().u64().unwrap(), 100);
+        assert_eq!(b.recv().unwrap().reader().u64().unwrap(), 200);
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn per_session_meters_count_both_directions() {
+        let (leader, party) = muxed_pair();
+        let a = leader.open(5).unwrap();
+        let f = frame(1, 7);
+        a.send(&f).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        let g = pa.recv().unwrap();
+        pa.send(&g).unwrap();
+        a.recv().unwrap();
+        assert_eq!(a.meter().bytes(), 2 * f.wire_len_v2());
+        assert_eq!(pa.meter().bytes(), 2 * f.wire_len_v2());
+        assert_eq!(leader.conn_meter().bytes(), 2 * f.wire_len_v2());
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn close_frees_queue_and_drops_late_frames() {
+        let (leader, party) = muxed_pair();
+        let a = leader.open(1).unwrap();
+        a.send(&frame(1, 1)).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        pa.recv().unwrap();
+        assert_eq!(leader.open_sessions(), 1);
+        leader.close(1);
+        assert_eq!(leader.open_sessions(), 0);
+        // a frame arriving for the closed session is dropped, not routed
+        pa.send(&frame(2, 2)).unwrap();
+        // synchronize: open a fresh session and round-trip through it so
+        // the pump has definitely processed the stale frame first
+        let b = leader.open(2).unwrap();
+        b.send(&frame(3, 3)).unwrap();
+        let pb = party.accept().unwrap().unwrap();
+        pb.recv().unwrap();
+        pb.send(&frame(4, 4)).unwrap();
+        b.recv().unwrap();
+        assert_eq!(leader.dropped_frames(), 1);
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn recv_timeout_fails_cleanly() {
+        let (l, p) = duplex_pair(ByteMeter::new());
+        let leader = SessionMux::over(
+            l,
+            MuxOptions {
+                accept: false,
+                recv_timeout: Some(Duration::from_millis(50)),
+            },
+        );
+        let party = SessionMux::over(p, MuxOptions { accept: true, ..Default::default() });
+        let a = leader.open(1).unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn unopened_session_recv_is_error() {
+        let (leader, party) = muxed_pair();
+        let a = leader.open(1).unwrap();
+        leader.close(1);
+        assert!(a.recv().is_err());
+        assert!(leader.open(u64::MAX).is_err());
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn shutdown_unblocks_waiting_session() {
+        let (leader, party) = muxed_pair();
+        let a = leader.open(1).unwrap();
+        let t = std::thread::spawn(move || a.recv());
+        // party announces shutdown: the waiting leader session must fail
+        // cleanly rather than hang
+        party.shutdown();
+        let err = t.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"), "{err:#}");
+        leader.shutdown();
+        assert!(party.accept().unwrap().is_none());
+        leader.join();
+        party.join();
+    }
+}

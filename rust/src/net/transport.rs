@@ -11,15 +11,32 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, Sender, channel};
 use std::sync::Mutex;
 
+/// A bidirectional ordered frame channel with byte metering — the
+/// interface the protocol state machines (leader and party) run over.
+/// Implemented by a dedicated [`Endpoint`] (one connection per session,
+/// the classic deployment) and by [`crate::net::SessionChannel`] (one
+/// session of a multiplexed shared connection).
+pub trait Channel: Send + Sync {
+    fn send(&self, f: &Frame) -> anyhow::Result<()>;
+    fn recv(&self) -> anyhow::Result<Frame>;
+    fn meter(&self) -> &ByteMeter;
+}
+
 /// A bidirectional frame endpoint.
 pub enum Endpoint {
     InProc {
-        tx: Sender<Vec<u8>>,
+        /// locked so a shared endpoint (session demux) stays `Sync`
+        /// on every toolchain
+        tx: Mutex<Sender<Vec<u8>>>,
         rx: Mutex<Receiver<Vec<u8>>>,
         meter: ByteMeter,
     },
     Tcp {
-        stream: Mutex<TcpStream>,
+        /// separately-locked halves (`try_clone`d handles of one
+        /// socket): a demux pump can block in a read while session
+        /// workers keep writing — full-duplex, no lock coupling
+        read: Mutex<TcpStream>,
+        write: Mutex<TcpStream>,
         meter: ByteMeter,
     },
 }
@@ -33,11 +50,14 @@ impl Endpoint {
                 let mut buf = Vec::with_capacity(f.payload.len() + 12);
                 FrameWriter::new(&mut buf).write(f)?;
                 meter.record(buf.len() as u64);
-                tx.send(buf).map_err(|_| anyhow::anyhow!("peer hung up"))?;
+                tx.lock()
+                    .unwrap()
+                    .send(buf)
+                    .map_err(|_| anyhow::anyhow!("peer hung up"))?;
                 Ok(())
             }
-            Endpoint::Tcp { stream, meter } => {
-                let mut s = stream.lock().unwrap();
+            Endpoint::Tcp { write, meter, .. } => {
+                let mut s = write.lock().unwrap();
                 let n = FrameWriter::new(&mut *s).write(f)?;
                 meter.record(n);
                 Ok(())
@@ -55,9 +75,51 @@ impl Endpoint {
                     .map_err(|_| anyhow::anyhow!("peer hung up"))?;
                 FrameReader::new(buf.as_slice()).read()
             }
-            Endpoint::Tcp { stream, .. } => {
-                let mut s = stream.lock().unwrap();
+            Endpoint::Tcp { read, .. } => {
+                let mut s = read.lock().unwrap();
                 FrameReader::new(ReadAdapter(&mut s)).read()
+            }
+        }
+    }
+
+    /// Send one session-tagged (v2) frame. Returns its wire bytes.
+    pub fn send_s(&self, session: u64, f: &Frame) -> anyhow::Result<u64> {
+        match self {
+            Endpoint::InProc { tx, meter, .. } => {
+                let mut buf = Vec::with_capacity(f.payload.len() + 24);
+                FrameWriter::new(&mut buf).write_v2(session, f)?;
+                let n = buf.len() as u64;
+                meter.record(n);
+                tx.lock()
+                    .unwrap()
+                    .send(buf)
+                    .map_err(|_| anyhow::anyhow!("peer hung up"))?;
+                Ok(n)
+            }
+            Endpoint::Tcp { write, meter, .. } => {
+                let mut s = write.lock().unwrap();
+                let n = FrameWriter::new(&mut *s).write_v2(session, f)?;
+                meter.record(n);
+                Ok(n)
+            }
+        }
+    }
+
+    /// Receive one frame in either framing version: `(session_id,
+    /// frame)`, with v1 frames falling back to session 0.
+    pub fn recv_s(&self) -> anyhow::Result<(u64, Frame)> {
+        match self {
+            Endpoint::InProc { rx, .. } => {
+                let buf = rx
+                    .lock()
+                    .unwrap()
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("peer hung up"))?;
+                FrameReader::new(buf.as_slice()).read_any()
+            }
+            Endpoint::Tcp { read, .. } => {
+                let mut s = read.lock().unwrap();
+                FrameReader::new(ReadAdapter(&mut s)).read_any()
             }
         }
     }
@@ -67,6 +129,18 @@ impl Endpoint {
             Endpoint::InProc { meter, .. } => meter,
             Endpoint::Tcp { meter, .. } => meter,
         }
+    }
+}
+
+impl Channel for Endpoint {
+    fn send(&self, f: &Frame) -> anyhow::Result<()> {
+        Endpoint::send(self, f)
+    }
+    fn recv(&self) -> anyhow::Result<Frame> {
+        Endpoint::recv(self)
+    }
+    fn meter(&self) -> &ByteMeter {
+        Endpoint::meter(self)
     }
 }
 
@@ -83,8 +157,12 @@ pub fn duplex_pair(meter: ByteMeter) -> (Endpoint, Endpoint) {
     let (tx_a, rx_b) = channel();
     let (tx_b, rx_a) = channel();
     (
-        Endpoint::InProc { tx: tx_a, rx: Mutex::new(rx_a), meter: meter.clone() },
-        Endpoint::InProc { tx: tx_b, rx: Mutex::new(rx_b), meter },
+        Endpoint::InProc {
+            tx: Mutex::new(tx_a),
+            rx: Mutex::new(rx_a),
+            meter: meter.clone(),
+        },
+        Endpoint::InProc { tx: Mutex::new(tx_b), rx: Mutex::new(rx_b), meter },
     )
 }
 
@@ -97,8 +175,16 @@ pub fn tcp_pair(meter: ByteMeter) -> anyhow::Result<(Endpoint, Endpoint)> {
     client.set_nodelay(true)?;
     server.set_nodelay(true)?;
     Ok((
-        Endpoint::Tcp { stream: Mutex::new(server), meter: meter.clone() },
-        Endpoint::Tcp { stream: Mutex::new(client), meter },
+        Endpoint::Tcp {
+            read: Mutex::new(server.try_clone()?),
+            write: Mutex::new(server),
+            meter: meter.clone(),
+        },
+        Endpoint::Tcp {
+            read: Mutex::new(client.try_clone()?),
+            write: Mutex::new(client),
+            meter,
+        },
     ))
 }
 
@@ -159,6 +245,44 @@ mod tests {
         leader.send(&req).unwrap();
         assert_eq!(leader.recv().unwrap().reader().u64().unwrap(), 42);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn session_frames_roundtrip_both_transports() {
+        for pair in [
+            duplex_pair(ByteMeter::new()),
+            tcp_pair(ByteMeter::new()).unwrap(),
+        ] {
+            let (a, b) = pair;
+            let mut f = Frame::new(3);
+            f.put_u64(17);
+            let n = a.send_s(0xA11CE, &f).unwrap();
+            assert_eq!(n, f.wire_len_v2());
+            let (sid, g) = b.recv_s().unwrap();
+            assert_eq!(sid, 0xA11CE);
+            assert_eq!(g, f);
+            // v1 frames on the same stream fall back to session 0
+            a.send(&f).unwrap();
+            let (sid, g) = b.recv_s().unwrap();
+            assert_eq!(sid, 0);
+            assert_eq!(g, f);
+        }
+    }
+
+    #[test]
+    fn session_frame_bytes_match_across_transports() {
+        let m1 = ByteMeter::new();
+        let (a1, b1) = duplex_pair(m1.clone());
+        let m2 = ByteMeter::new();
+        let (a2, b2) = tcp_pair(m2.clone()).unwrap();
+        let mut f = Frame::new(9);
+        f.put_f64_slice(&[1.0, 2.0]);
+        a1.send_s(7, &f).unwrap();
+        b1.recv_s().unwrap();
+        a2.send_s(7, &f).unwrap();
+        b2.recv_s().unwrap();
+        assert_eq!(m1.bytes(), m2.bytes());
+        assert_eq!(m1.bytes(), f.wire_len_v2());
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Chaos battery for the multiplexed session service: a fault-injecting
+//! transport perturbs exactly one frame (drop / duplicate / reorder /
+//! cross-session misroute) on one party's shared connection, and the
+//! batch must degrade *surgically*:
+//!
+//! - the batch always completes — never a hang (bounded by the demux
+//!   receive timeout);
+//! - every affected session fails with a clean error (protocol
+//!   `ErrorMsg`, ordering violation, or timeout — never a panic);
+//! - zero contamination: every session that reports success is
+//!   bit-identical to its serial dedicated-connection run;
+//! - at least the untouched sessions succeed.
+
+mod common;
+
+use common::{assert_run_matches, cfg, spec_for};
+use dash::coordinator::{
+    run_multi_party_scan_t, run_session_batch, BatchOptions, MultiPartyScanResult,
+    SessionSpec, Transport,
+};
+use dash::gwas::{generate_cohort, Cohort};
+use dash::mpc::Backend;
+use dash::net::chaos::{FaultDir, FaultMode, FaultSpec};
+use dash::scan::ScanConfig;
+use std::time::Duration;
+
+const SESSIONS: usize = 3;
+/// the perturbed session (1-based session ids)
+const VICTIM: u64 = 2;
+
+fn chaos_cohort() -> Cohort {
+    generate_cohort(&spec_for(3, 24, 24, 1), 0xC4A0)
+}
+
+fn chaos_cfg() -> ScanConfig {
+    cfg(Backend::Masked, 8) // 3 shards
+}
+
+/// Run a faulted batch and enforce the battery-wide invariants. Returns
+/// per-session results paired with their serial baseline check already
+/// applied; also returns which sessions failed.
+fn run_chaos(fault: FaultSpec, label: &str) -> Vec<bool> {
+    let cohort = chaos_cohort();
+    let c = chaos_cfg();
+    let serial: MultiPartyScanResult =
+        run_multi_party_scan_t(&cohort, &c, Transport::InProc, 7).unwrap();
+    let specs: Vec<SessionSpec> =
+        (0..SESSIONS).map(|_| SessionSpec { cfg: c.clone(), seed: 7 }).collect();
+    let batch = run_session_batch(
+        &cohort,
+        &specs,
+        &BatchOptions {
+            max_concurrent: SESSIONS,
+            recv_timeout: Some(Duration::from_secs(2)),
+            fault: Some(fault),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(batch.runs.len(), SESSIONS, "{label}: batch returned");
+    assert_eq!(batch.residual_sessions, 0, "{label}: leaked sessions");
+    let mut failed = Vec::with_capacity(SESSIONS);
+    for (i, run) in batch.runs.iter().enumerate() {
+        match run {
+            Ok(r) => {
+                // zero contamination: success ⇒ bit-identical to serial
+                assert_run_matches(r, &serial, &format!("{label} session {}", i + 1));
+                failed.push(false);
+            }
+            Err(e) => {
+                // clean failure: a described error, not a panic/hang
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty(), "{label}: empty error");
+                failed.push(true);
+            }
+        }
+    }
+    // session 1 is never targeted by the specs below — it must survive
+    assert!(!failed[0], "{label}: untouched session 1 failed");
+    failed
+}
+
+/// A dropped party→leader contribution: the victim session times out (or
+/// trips an ordering check) and every other session completes.
+#[test]
+fn dropped_contribution_fails_only_the_victim() {
+    let failed = run_chaos(
+        FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Drop,
+            session: VICTIM,
+            nth: 1, // first shard contribution (0 is the base round)
+        },
+        "drop",
+    );
+    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+}
+
+/// A duplicated contribution frame trips the shard-ordinal check — a
+/// clean protocol error, not a silent double count.
+#[test]
+fn duplicated_contribution_is_detected() {
+    let failed = run_chaos(
+        FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Duplicate,
+            session: VICTIM,
+            nth: 1,
+        },
+        "duplicate",
+    );
+    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+}
+
+/// Two reordered contribution frames trip the ordering check cleanly.
+#[test]
+fn reordered_contributions_are_detected() {
+    let failed = run_chaos(
+        FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Reorder,
+            session: VICTIM,
+            nth: 1,
+        },
+        "reorder",
+    );
+    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+}
+
+/// A frame misrouted from one session into another: the victim loses a
+/// frame, the misroute target either detects the intruder or finishes
+/// untouched — and any session that succeeds is bit-identical to serial
+/// (enforced by `run_chaos` for every mode).
+#[test]
+fn cross_session_misroute_never_contaminates() {
+    let failed = run_chaos(
+        FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Misroute { to: 3 },
+            session: VICTIM,
+            nth: 1,
+        },
+        "misroute",
+    );
+    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+}
+
+/// Misroute to a session id nobody opened: the frame is dropped by the
+/// demux (counted, not misdelivered) and only the victim fails.
+#[test]
+fn misroute_to_unknown_session_is_dropped() {
+    let failed = run_chaos(
+        FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Misroute { to: 999 },
+            session: VICTIM,
+            nth: 1,
+        },
+        "misroute-unknown",
+    );
+    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+}
+
+/// Leader→party faults: dropping a result-broadcast frame leaves the
+/// leader's own result intact (still bit-identical) but the party-side
+/// service reports the failed session — and nothing hangs.
+#[test]
+fn dropped_result_broadcast_is_party_side_failure_only() {
+    let cohort = chaos_cohort();
+    let c = chaos_cfg();
+    let serial = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 7).unwrap();
+    let specs: Vec<SessionSpec> =
+        (0..SESSIONS).map(|_| SessionSpec { cfg: c.clone(), seed: 7 }).collect();
+    let batch = run_session_batch(
+        &cohort,
+        &specs,
+        &BatchOptions {
+            max_concurrent: SESSIONS,
+            recv_timeout: Some(Duration::from_secs(2)),
+            fault: Some(FaultSpec {
+                party: 1,
+                dir: FaultDir::Send,
+                // SETUP=0, COMPRESS=1, then the leader's next sends to
+                // this party are the result broadcast frames
+                nth: 2,
+                mode: FaultMode::Drop,
+                session: VICTIM,
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for (i, run) in batch.runs.iter().enumerate() {
+        let run = run.as_ref().unwrap_or_else(|e| panic!("session {}: {e:#}", i + 1));
+        assert_run_matches(run, &serial, &format!("session {}", i + 1));
+    }
+    assert_eq!(batch.failed, 1, "exactly the victim's party-side serve fails");
+    assert_eq!(batch.served, SESSIONS * 3 - 1);
+}

@@ -15,11 +15,14 @@
 
 #![allow(dead_code)]
 
-use dash::coordinator::{run_multi_party_scan_t, MultiPartyScanResult, Transport};
+use dash::coordinator::{
+    run_multi_party_scan_t, run_session_batch, BatchOptions, MultiPartyScanResult,
+    SessionBatchResult, SessionRun, SessionSpec, Transport,
+};
 use dash::gwas::{generate_cohort, Cohort, CohortSpec};
 use dash::mpc::Backend;
 use dash::runtime::ArtifactExec;
-use dash::scan::{ScanConfig, SelectPolicy, ShardPlan};
+use dash::scan::{ScanConfig, ScanOutput, SelectOutput, SelectPolicy, ShardPlan};
 
 /// The three MPC backends of the conformance matrix.
 pub fn backends() -> [Backend; 3] {
@@ -111,27 +114,31 @@ pub fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
 /// All scan statistics of two sessions bit-identical (every trait's
 /// β/σ̂/p plus the covariate fit).
 pub fn assert_scan_bits_eq(a: &MultiPartyScanResult, b: &MultiPartyScanResult, label: &str) {
-    assert_eq!(a.output.t(), b.output.t(), "{label}: trait count");
-    for tt in 0..a.output.t() {
+    assert_output_bits_eq(&a.output, &b.output, label);
+}
+
+/// Output-level variant of [`assert_scan_bits_eq`] (usable for
+/// multiplexed [`SessionRun`]s too).
+pub fn assert_output_bits_eq(a: &ScanOutput, b: &ScanOutput, label: &str) {
+    assert_eq!(a.t(), b.t(), "{label}: trait count");
+    for tt in 0..a.t() {
         assert_bits_eq(
-            &a.output.assoc[tt].beta,
-            &b.output.assoc[tt].beta,
+            &a.assoc[tt].beta,
+            &b.assoc[tt].beta,
             &format!("{label} trait {tt} beta"),
         );
         assert_bits_eq(
-            &a.output.assoc[tt].se,
-            &b.output.assoc[tt].se,
+            &a.assoc[tt].se,
+            &b.assoc[tt].se,
             &format!("{label} trait {tt} se"),
         );
         assert_bits_eq(
-            &a.output.assoc[tt].p,
-            &b.output.assoc[tt].p,
+            &a.assoc[tt].p,
+            &b.assoc[tt].p,
             &format!("{label} trait {tt} p"),
         );
     }
-    for (i, (fa, fb)) in
-        a.output.covariate_fit.iter().zip(&b.output.covariate_fit).enumerate()
-    {
+    for (i, (fa, fb)) in a.covariate_fit.iter().zip(&b.covariate_fit).enumerate() {
         assert_bits_eq(&fa.gamma, &fb.gamma, &format!("{label} fit {i} gamma"));
     }
 }
@@ -143,7 +150,16 @@ pub fn assert_select_bits_eq(
     b: &MultiPartyScanResult,
     label: &str,
 ) {
-    match (&a.select, &b.select) {
+    assert_select_out_eq(&a.select, &b.select, label);
+}
+
+/// Output-level variant of [`assert_select_bits_eq`].
+pub fn assert_select_out_eq(
+    a: &Option<SelectOutput>,
+    b: &Option<SelectOutput>,
+    label: &str,
+) {
+    match (a, b) {
         (None, None) => {}
         (Some(sa), Some(sb)) => {
             assert_eq!(sa.candidates, sb.candidates, "{label}: candidates");
@@ -172,6 +188,33 @@ pub fn assert_select_bits_eq(
     }
 }
 
+/// A multiplexed session run bit-identical to a serial baseline.
+pub fn assert_run_matches(run: &SessionRun, baseline: &MultiPartyScanResult, label: &str) {
+    assert_output_bits_eq(&run.output, &baseline.output, label);
+    assert_select_out_eq(&run.select, &baseline.select, label);
+}
+
+/// Run `sessions` identical multiplexed sessions over shared per-party
+/// connections and return the batch (panicking on wiring errors;
+/// per-session results stay `Result`s).
+pub fn run_batch(
+    cohort: &Cohort,
+    cfg: &ScanConfig,
+    sessions: usize,
+    max_concurrent: usize,
+    transport: Transport,
+    seed: u64,
+) -> SessionBatchResult {
+    let specs: Vec<SessionSpec> =
+        (0..sessions).map(|_| SessionSpec { cfg: cfg.clone(), seed }).collect();
+    run_session_batch(
+        cohort,
+        &specs,
+        &BatchOptions { transport, max_concurrent, ..Default::default() },
+    )
+    .unwrap()
+}
+
 /// One conformance scenario: a cohort shape plus protocol knobs, run
 /// identically across every cell of the backend × transport × compute
 /// matrix.
@@ -191,6 +234,10 @@ pub struct Scenario {
     pub session_seed: u64,
     /// also run the TCP transport cells (slower; off by default)
     pub tcp: bool,
+    /// additionally run this many *concurrent multiplexed* sessions per
+    /// cell, each of which must be bit-identical to the cell's serial
+    /// baseline (1 = skip the multiplexed pass)
+    pub sessions: usize,
 }
 
 impl Default for Scenario {
@@ -209,6 +256,7 @@ impl Default for Scenario {
             cohort_seed: 0xC0DE,
             session_seed: 0x5EED,
             tcp: false,
+            sessions: 1,
         }
     }
 }
@@ -252,6 +300,10 @@ pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanRe
         if sc.tcp {
             transports.push(Transport::Tcp);
         }
+        // lowered-entry count of a single artifact session, captured
+        // from the artifact × in-proc cell below (the shared-engine
+        // reference point for the multiplexed pass)
+        let mut single_lowered = None;
         for compute in Compute::all() {
             for &transport in &transports {
                 if compute == Compute::Rust && transport == Transport::InProc {
@@ -280,9 +332,62 @@ pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanRe
                             sc.t
                         );
                     }
+                    if transport == Transport::InProc {
+                        single_lowered = Some(res.party_kernels[0].lowered_entries());
+                    }
                 }
                 if transport == Transport::InProc {
                     out.push((backend, compute, res));
+                }
+            }
+        }
+        // Multiplexed pass: `sessions` concurrent sessions over one
+        // shared connection pair per party, every cell of the same
+        // matrix, every session bit-identical to this backend's serial
+        // baseline — with one shared artifact engine per party (no
+        // per-session recompiles).
+        if sc.sessions > 1 {
+            let single_lowered =
+                single_lowered.expect("artifact × in-proc cell ran before the session pass");
+            for compute in Compute::all() {
+                for &transport in &transports {
+                    let label = format!(
+                        "{} [{backend:?} × {transport:?} × {compute:?} × {} sessions]",
+                        sc.name, sc.sessions
+                    );
+                    let batch = run_batch(
+                        &cohort,
+                        &sc.config(backend, compute),
+                        sc.sessions,
+                        sc.sessions,
+                        transport,
+                        sc.session_seed,
+                    );
+                    assert_eq!(batch.failed, 0, "{label}: party-side failures");
+                    assert_eq!(batch.residual_sessions, 0, "{label}: leaked sessions");
+                    assert_eq!(batch.runs.len(), sc.sessions, "{label}: run count");
+                    for (i, run) in batch.runs.iter().enumerate() {
+                        let run = run
+                            .as_ref()
+                            .unwrap_or_else(|e| panic!("{label}: session {i}: {e:#}"));
+                        assert_run_matches(run, &baseline, &format!("{label} #{i}"));
+                    }
+                    if compute == Compute::Artifact {
+                        for (p, km) in batch.party_kernels.iter().enumerate() {
+                            assert_eq!(
+                                km.lowered_entries(),
+                                single_lowered,
+                                "{label}: party {p} lowered entries — the engine \
+                                 (and its lowering cache) must be shared across \
+                                 sessions, not rebuilt per session"
+                            );
+                            assert_eq!(
+                                km.xside_passes(),
+                                (sc.sessions * sc.shards()) as u64,
+                                "{label}: party {p} X-side passes"
+                            );
+                        }
+                    }
                 }
             }
         }

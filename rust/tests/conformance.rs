@@ -7,6 +7,11 @@
 //! Also: the artifact-mode memory regression (peak resident block bytes
 //! `O(shard_m·N_p)`, not `O(M·N_p)`) and lowering-cache behavior over
 //! ragged shard plans.
+//!
+//! Scenarios with `sessions: N` additionally run N concurrent
+//! multiplexed sessions over one shared connection pair per party in
+//! every cell and hold each session to the same bit-identity contract
+//! (see `tests/sessions.rs` for the 16-session TCP acceptance run).
 
 mod common;
 
@@ -36,6 +41,16 @@ conformance_scenarios! {
     },
     // transport closure: TCP cells must match the in-proc baseline too
     tcp_spot_check: { shard_m: 16, t: 4, select_k: 1, tcp: true, cohort_seed: 0xA008 },
+    // session closure: concurrent multiplexed sessions over shared
+    // connections, every session bit-identical to the serial baseline,
+    // one shared artifact engine per party (no per-session recompiles)
+    sessions_x4_scan: {
+        sessions: 4, shard_m: 16, t: 2, n_per: 24, m: 40, cohort_seed: 0xA009
+    },
+    sessions_x4_select: {
+        sessions: 4, shard_m: 8, t: 2, select_k: 1, select_candidates: 8,
+        n_per: 24, m: 32, cohort_seed: 0xA00A
+    },
 }
 
 /// The X-side pass count is a function of the shard plan alone: a T=16

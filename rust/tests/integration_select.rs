@@ -327,6 +327,7 @@ fn duplicate_shard_frame_yields_protocol_error() {
             k: 4,
             m: 8,
             t: 1,
+            session: 0,
         };
         leader.run(99)
     });

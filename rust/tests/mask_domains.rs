@@ -1,0 +1,116 @@
+//! Session-keyed mask/share domain separation (regression tests for the
+//! concurrent-session service): two sessions configured with *identical*
+//! pairwise seeds must draw disjoint randomness streams on both secure
+//! backends, keyed only by their session ids — otherwise multiplexed
+//! sessions would reuse one-time masks (masked backend) or sharing
+//! polynomials (Shamir), breaking the security argument of DESIGN.md
+//! §Sessions.
+
+use dash::mpc::field::Fe;
+use dash::mpc::masking::{aggregate_masked, PairwiseMasker};
+use dash::mpc::shamir;
+
+const SEEDS: [u64; 3] = [0xAA11, 0xBB22, 0xCC33];
+
+/// Fraction of equal words two supposedly-independent u64 streams may
+/// share before we call it overlap (256 words: expected ≈ 0 collisions).
+fn assert_disjoint(a: &[u64], b: &[u64], what: &str) {
+    assert_eq!(a.len(), b.len());
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    assert!(same <= 1, "{what}: {same}/{} words equal", a.len());
+}
+
+/// The mask stream of (seed, session, round): mask a zero vector.
+fn mask_stream(session: u64, round_skip: u64) -> Vec<u64> {
+    let mut m = PairwiseMasker::with_domain(0, 3, SEEDS.to_vec(), session);
+    let mut v = vec![0u64; 256];
+    for _ in 0..round_skip {
+        let mut skip = vec![0u64; 1];
+        m.mask_in_place(&mut skip);
+    }
+    m.mask_in_place(&mut v);
+    v
+}
+
+#[test]
+fn identical_seeds_different_sessions_give_disjoint_mask_streams() {
+    // every (session, round) pair draws a fresh stream
+    let s1r0 = mask_stream(1, 0);
+    let s2r0 = mask_stream(2, 0);
+    let s1r1 = mask_stream(1, 1);
+    let s2r1 = mask_stream(2, 1);
+    assert_disjoint(&s1r0, &s2r0, "sessions at round 0");
+    assert_disjoint(&s1r1, &s2r1, "sessions at round 1");
+    assert_disjoint(&s1r0, &s1r1, "rounds within session 1");
+    assert_disjoint(&s1r0, &s2r1, "cross session × round");
+    // determinism: the same (session, round) reproduces exactly
+    assert_eq!(s1r0, mask_stream(1, 0));
+}
+
+#[test]
+fn masks_still_cancel_within_each_session_domain() {
+    for session in [1u64, 2, 77] {
+        let mut maskers: Vec<PairwiseMasker> = (0..3)
+            .map(|p| {
+                // symmetric seed matrix rows for a 3-party ring built
+                // from the shared unordered-pair seeds
+                let row = match p {
+                    0 => vec![0, SEEDS[0], SEEDS[1]],
+                    1 => vec![SEEDS[0], 0, SEEDS[2]],
+                    _ => vec![SEEDS[1], SEEDS[2], 0],
+                };
+                PairwiseMasker::with_domain(p, 3, row, session)
+            })
+            .collect();
+        let plain: Vec<Vec<u64>> = (0..3).map(|p| vec![(p + 1) as u64; 64]).collect();
+        let mut masked = plain.clone();
+        for (p, v) in masked.iter_mut().enumerate() {
+            maskers[p].mask_in_place(v);
+            assert_ne!(v, &plain[p], "session {session}: mask must change the vector");
+        }
+        assert_eq!(aggregate_masked(&masked), vec![6u64; 64]);
+    }
+}
+
+#[test]
+fn shamir_session_rngs_are_disjoint_and_deterministic() {
+    let mut a1 = shamir::session_rng(&SEEDS, 0, 1);
+    let mut a2 = shamir::session_rng(&SEEDS, 0, 2);
+    let s1: Vec<u64> = (0..256).map(|_| a1.next_u64()).collect();
+    let s2: Vec<u64> = (0..256).map(|_| a2.next_u64()).collect();
+    assert_disjoint(&s1, &s2, "shamir share randomness across sessions");
+    // distinct parties stay separated too
+    let mut b1 = shamir::session_rng(&SEEDS, 1, 1);
+    let sb: Vec<u64> = (0..256).map(|_| b1.next_u64()).collect();
+    assert_disjoint(&s1, &sb, "shamir share randomness across parties");
+    // deterministic per (seeds, party, session)
+    let mut again = shamir::session_rng(&SEEDS, 0, 1);
+    assert_eq!(s1[0], again.next_u64());
+}
+
+#[test]
+fn shamir_share_streams_differ_across_sessions_but_reconstruct_identically() {
+    let secrets: Vec<Fe> = (0..32i64).map(|i| Fe::from_i64(i * 7 - 50)).collect();
+    let share_y = |session: u64| -> Vec<Vec<u64>> {
+        let mut rng = shamir::session_rng(&SEEDS, 0, session);
+        shamir::share_vec(&secrets, 3, 2, &mut rng)
+            .iter()
+            .map(|sv| sv.iter().map(|s| s.y.0).collect())
+            .collect()
+    };
+    let y1 = share_y(1);
+    let y2 = share_y(2);
+    for (p, (a, b)) in y1.iter().zip(&y2).enumerate() {
+        assert_disjoint(a, b, &format!("party-{p} share vector across sessions"));
+    }
+    // both sessions' shares reconstruct the same secrets (any quorum);
+    // layout is shares[party][secret]
+    for session in [1u64, 2] {
+        let mut rng = shamir::session_rng(&SEEDS, 0, session);
+        let shares = shamir::share_vec(&secrets, 3, 2, &mut rng);
+        for (i, want) in secrets.iter().enumerate() {
+            let quorum = [shares[0][i], shares[2][i]];
+            assert_eq!(shamir::reconstruct(&quorum).0, want.0, "session {session} [{i}]");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Soak/regression: 32 sequential sessions through one SessionManager
+//! over one set of shared connections and one shared artifact engine per
+//! party. Per-session state must actually be freed — no monotonic growth
+//! in peak resident kernel-block bytes, no lowering-cache growth beyond
+//! the shapes of a single session, no leaked demux queues — and cost
+//! must scale exactly linearly in sessions (pass counts), with every
+//! session bit-identical to the first.
+
+mod common;
+
+use common::{assert_output_bits_eq, cfg_compute, spec_for, Compute};
+use dash::coordinator::{run_session_batch, BatchOptions, SessionSpec};
+use dash::gwas::generate_cohort;
+use dash::mpc::Backend;
+
+fn soak(sessions: usize) -> dash::coordinator::SessionBatchResult {
+    let cohort = generate_cohort(&spec_for(3, 30, 32, 2), 0x50AC);
+    // artifact compute: the kernel meter is the state-growth handle
+    let c = cfg_compute(Backend::Masked, 8, Compute::Artifact);
+    let specs: Vec<SessionSpec> =
+        (0..sessions).map(|_| SessionSpec { cfg: c.clone(), seed: 3 }).collect();
+    run_session_batch(
+        &cohort,
+        &specs,
+        &BatchOptions { max_concurrent: 1, ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn thirty_two_sequential_sessions_free_their_state() {
+    let small = soak(2);
+    let big = soak(32);
+    assert_eq!(big.runs.len(), 32);
+    // each of the 3 party services served all 32 sessions
+    assert_eq!(big.served, 32 * 3);
+    assert_eq!(big.failed, 0);
+    // no leaked leader-side demux queues
+    assert_eq!(big.residual_sessions, 0);
+
+    // every session produced the identical (bit-for-bit) result
+    let first = big.runs[0].as_ref().unwrap();
+    for run in &big.runs[1..] {
+        let run = run.as_ref().unwrap();
+        assert_output_bits_eq(&run.output, &first.output, "soak session");
+        // …at identical per-session wire cost (no per-session drift)
+        assert_eq!(run.metrics.bytes_total, first.metrics.bytes_total);
+    }
+
+    for (p, (km2, km32)) in
+        small.party_kernels.iter().zip(&big.party_kernels).enumerate()
+    {
+        // lowering cache: the 32-session run lowers exactly the same
+        // entries as the 2-session run — shapes, not sessions, bound it
+        assert_eq!(
+            km32.lowered_entries(),
+            km2.lowered_entries(),
+            "party {p}: lowering cache grew with session count"
+        );
+        // peak resident kernel-block bytes: identical, i.e. each
+        // session's blocks were freed before the next session ran
+        assert_eq!(
+            km32.peak_block_bytes(),
+            km2.peak_block_bytes(),
+            "party {p}: peak resident block bytes grew with session count"
+        );
+        // pass counts scale exactly linearly (32/2 = 16×): all work was
+        // done, none duplicated
+        assert_eq!(
+            km32.xside_passes(),
+            16 * km2.xside_passes(),
+            "party {p}: X-side passes"
+        );
+        assert_eq!(
+            km32.yside_passes(),
+            16 * km2.yside_passes(),
+            "party {p}: Y-side passes"
+        );
+        // every pass after the first session's lowering hits the cache
+        assert_eq!(
+            km32.lowered_entries() + km32.cache_hits(),
+            km32.xside_passes() + km32.yside_passes() + km32.select_passes(),
+            "party {p}: lowering accounting"
+        );
+    }
+}
