@@ -11,11 +11,23 @@
 //!   artifact/whole-M vs artifact/per-shard (streaming entry dispatch)
 //!   artifact/T=...        trait batching: one X-side pass regardless of T
 //!
+//! Plus the threaded tiled-compress rows (E12) → `BENCH_compress.json`:
+//!   compress-threaded/shard_m=.../threads=...   serial vs threaded sweep
+//! This sweep doubles as the CI divergence gate: every threaded output is
+//! asserted bit-identical to the serial bits (kernel-level and through a
+//! full e2e sharded scan) — any divergence panics and fails the bench.
+//!
 //! `DASH_BENCH_QUICK=1` shrinks measurement windows ~10x.
 
+use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::gwas::{generate_cohort, CohortSpec};
 use dash::linalg::Matrix;
+use dash::mpc::Backend;
 use dash::runtime::{Engine, KernelMeter, ShapePolicy};
-use dash::scan::{compress_party, ShardPlan};
+use dash::scan::{
+    compress_party, compress_variant_block_opts, compress_yside, ScanConfig, ShardPlan,
+    VariantBlockStats,
+};
 use dash::util::bench::Bench;
 use dash::util::rng::Rng;
 
@@ -96,6 +108,104 @@ fn main() {
 
     b.save_report();
     artifact_suite_rows();
+    threaded_sweep_rows();
+}
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (g, w)) in a.iter().zip(b).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// E12 — threaded tiled compress → `BENCH_compress.json`: serial vs
+/// threaded throughput over threads {1, 2, 4, 8} × shard width, every
+/// threaded result asserted bit-identical to the serial bits, plus an
+/// e2e sharded scan holding `compress_threads` result-neutral through
+/// the full protocol. Speedup expectations only apply on multi-core
+/// hosts — on a single-core runner the rows should merely not regress.
+fn threaded_sweep_rows() {
+    let mut b = Bench::new("compress-threaded");
+    let (n, k, m) = (8192usize, 8usize, 1024usize);
+    let (y, c, x) = data(n, k, m, 48);
+    for &shard_w in &[64usize, 256] {
+        let plan = ShardPlan::new(m, shard_w);
+        let (yty_s, cty_s) = compress_yside(&y, &c, None, Some(1));
+        let serial: Vec<VariantBlockStats> = plan
+            .ranges()
+            .map(|r| {
+                compress_variant_block_opts(&y, &c, &x, r.j0, r.j1, shard_w, None, Some(1))
+            })
+            .collect();
+        for &threads in &[1usize, 2, 4, 8] {
+            b.case_units(
+                &format!("shard_m={shard_w}/threads={threads}"),
+                Some((n * m) as f64),
+                "cell",
+                || {
+                    std::hint::black_box(compress_yside(&y, &c, None, Some(threads)));
+                    for r in plan.ranges() {
+                        std::hint::black_box(compress_variant_block_opts(
+                            &y,
+                            &c,
+                            &x,
+                            r.j0,
+                            r.j1,
+                            shard_w,
+                            None,
+                            Some(threads),
+                        ));
+                    }
+                },
+            );
+            // the divergence gate: threaded bits must equal serial bits
+            let (yty_p, cty_p) = compress_yside(&y, &c, None, Some(threads));
+            let tag = format!("shard_m={shard_w} threads={threads}");
+            assert_bits(&yty_p, &yty_s, &format!("{tag} yty"));
+            assert_bits(&cty_p.data, &cty_s.data, &format!("{tag} cty"));
+            for (r, s) in plan.ranges().zip(&serial) {
+                let vb = compress_variant_block_opts(
+                    &y,
+                    &c,
+                    &x,
+                    r.j0,
+                    r.j1,
+                    shard_w,
+                    None,
+                    Some(threads),
+                );
+                let what = format!("{tag} shard {}..{}", r.j0, r.j1);
+                assert_bits(&vb.xty.data, &s.xty.data, &format!("{what} xty"));
+                assert_bits(&vb.xtx, &s.xtx, &format!("{what} xtx"));
+                assert_bits(&vb.ctx.data, &s.ctx.data, &format!("{what} ctx"));
+            }
+        }
+    }
+
+    // e2e gate: a full sharded multi-party scan with compress_threads=4
+    // reproduces the compress_threads=1 statistics bit-for-bit
+    let cohort = generate_cohort(&CohortSpec::default_small(), 49);
+    let run_with = |threads: usize| {
+        let cfg = ScanConfig {
+            backend: Backend::Masked,
+            shard_m: 16,
+            block_m: 32,
+            compress_threads: Some(threads),
+            ..Default::default()
+        };
+        run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 50).unwrap()
+    };
+    let serial = run_with(1);
+    let threaded = run_with(4);
+    for tt in 0..serial.output.t() {
+        let (a, p) = (&serial.output.assoc[tt], &threaded.output.assoc[tt]);
+        assert_bits(&p.beta, &a.beta, &format!("e2e trait {tt} beta"));
+        assert_bits(&p.se, &a.se, &format!("e2e trait {tt} se"));
+        assert_bits(&p.p, &a.p, &format!("e2e trait {tt} p"));
+    }
+    println!("e2e sharded scan: compress_threads=4 bit-identical to serial");
+
+    b.save_report_to("BENCH_compress.json");
 }
 
 /// E10 — artifact kernel-suite rows: per-shard streaming dispatch vs a

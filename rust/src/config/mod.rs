@@ -116,6 +116,9 @@ impl RunConfig {
         if let Some(t) = self.scan.threads {
             scan.set("threads", t);
         }
+        if let Some(t) = self.scan.compress_threads {
+            scan.set("compress_threads", t);
+        }
         let mut o = Json::obj();
         o.set("seed", self.seed)
             .set("transport", if self.transport_tcp { "tcp" } else { "inproc" })
@@ -224,6 +227,9 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
     if let Some(x) = v.get("threads").and_then(Json::as_usize) {
         s.threads = Some(x);
     }
+    if let Some(x) = v.get("compress_threads").and_then(Json::as_usize) {
+        s.compress_threads = Some(x);
+    }
     if let Some(x) = v.get("use_artifacts").and_then(|j| j.as_bool()) {
         s.use_artifacts = x;
     }
@@ -323,6 +329,26 @@ mod tests {
         assert_eq!(back.scan.select_policy, SelectPolicy::PerTrait);
         assert_eq!(back.scan.select_candidates, 8);
         assert_eq!(back.scan.select_alpha, cfg.scan.select_alpha);
+    }
+
+    #[test]
+    fn compress_threads_roundtrips_and_falls_back() {
+        // default: unset, falls back to the legacy threads knob
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.scan.compress_threads, None);
+        assert_eq!(cfg.scan.effective_compress_threads(), None);
+        let j = Json::parse(r#"{"scan": {"threads": 3, "compress_threads": 5}}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scan.threads, Some(3));
+        assert_eq!(cfg.scan.compress_threads, Some(5));
+        assert_eq!(cfg.scan.effective_compress_threads(), Some(5));
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scan.compress_threads, Some(5));
+        assert_eq!(back.scan.threads, Some(3));
+        // only the legacy knob set → it is the compress budget
+        let j = Json::parse(r#"{"scan": {"threads": 2}}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scan.effective_compress_threads(), Some(2));
     }
 
     #[test]

@@ -115,10 +115,13 @@ pub fn run_multi_party_scan_t(
                                 exec: cfg.artifact_exec,
                                 policy: cfg.entry_policy(),
                                 meter: kernel_meter,
+                                threads: cfg.effective_compress_threads(),
                             })?,
                         ))
                     } else {
-                        party::ComputeBackend::Rust { threads: cfg.threads }
+                        party::ComputeBackend::Rust {
+                            threads: cfg.effective_compress_threads(),
+                        }
                     };
                     party::serve(&ep, data, &compute)
                 }));

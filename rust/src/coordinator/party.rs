@@ -39,9 +39,10 @@ use crate::mpc::shamir;
 use crate::net::{Channel, Frame, WireMessage};
 use crate::runtime::Engine;
 use crate::scan::{
-    compress_base, compress_variant_block, cross_products, BaseStats, ShardPlan, ShardRange,
-    VariantBlockStats,
+    compress_base_opts, compress_variant_block, compress_variant_block_opts, cross_products,
+    BaseStats, ShardPlan, ShardRange, VariantBlockStats,
 };
+use crate::util::threadpool::{effective_threads, parallel_map};
 use std::sync::Arc;
 
 /// How a party computes its compress stage.
@@ -76,7 +77,9 @@ enum CompressState<'a> {
 impl CompressState<'_> {
     fn base(&self) -> anyhow::Result<BaseStats> {
         match self {
-            CompressState::Streaming { data, .. } => Ok(compress_base(&data.ys, &data.c)),
+            CompressState::Streaming { data, threads, .. } => {
+                Ok(compress_base_opts(&data.ys, &data.c, None, *threads))
+            }
             CompressState::Cached { engine, data } => {
                 engine.compress_base(&data.ys, &data.c)
             }
@@ -97,6 +100,42 @@ impl CompressState<'_> {
             CompressState::Cached { engine, data } => {
                 engine.compress_shard(&data.ys, &data.c, &data.x, r.j0, r.j1)
             }
+        }
+    }
+
+    /// Like [`Self::shard`] but with intra-shard threading pinned to one
+    /// worker — used when whole shards fan out across the pool, so the
+    /// shard-level parallelism *is* the budget (no `threads²`
+    /// oversubscription). Bit-identical to [`Self::shard`] by the
+    /// canonical-fold contract.
+    fn shard_single_threaded(&self, r: ShardRange) -> anyhow::Result<VariantBlockStats> {
+        match self {
+            CompressState::Streaming { data, block_m, .. } => {
+                Ok(compress_variant_block_opts(
+                    &data.ys,
+                    &data.c,
+                    &data.x,
+                    r.j0,
+                    r.j1,
+                    *block_m,
+                    None,
+                    Some(1),
+                ))
+            }
+            CompressState::Cached { .. } => self.shard(r),
+        }
+    }
+
+    /// How many independent shards to compress concurrently. Streaming
+    /// mode uses the compress worker budget; cached (artifact) mode
+    /// stays sequential — each dispatch meters one resident canonical
+    /// block, and the `O(shard_m·N_p)` peak-bytes contract is per block.
+    fn shard_fanout(&self, nshards: usize) -> usize {
+        match self {
+            CompressState::Streaming { threads, .. } => {
+                effective_threads(*threads).min(nshards)
+            }
+            CompressState::Cached { .. } => 1,
         }
     }
 }
@@ -252,9 +291,27 @@ fn serve_inner<C: Channel>(
     // order while we keep compressing ahead of it; in cached mode each
     // shard's columns are freed right after this send.
     contribute(&base.flatten(), 0)?;
-    for r in plan.ranges() {
-        let flat = state.shard(r)?.flatten();
-        contribute(&flat, r.index + 1)?;
+    let ranges: Vec<ShardRange> = plan.ranges().collect();
+    let fanout = state.shard_fanout(ranges.len());
+    if fanout <= 1 {
+        for r in ranges {
+            let flat = state.shard(r)?.flatten();
+            contribute(&flat, r.index + 1)?;
+        }
+    } else {
+        // Independent shards fan out across the worker pool in bounded
+        // waves; contributions still go out strictly in shard order (the
+        // wire protocol and the leader's streaming consumption are
+        // unchanged, including Shamir's per-round share round trip), and
+        // a wave's statistics are freed before the next wave compresses.
+        for wave in ranges.chunks(fanout) {
+            let flats = parallel_map(wave.len(), Some(fanout), |i| {
+                state.shard_single_threaded(wave[i]).map(|vb| vb.flatten())
+            });
+            for (r, flat) in wave.iter().zip(flats) {
+                contribute(&flat?, r.index + 1)?;
+            }
+        }
     }
 
     // SELECT phase: the leader drives, we answer. Round `shards + 1`

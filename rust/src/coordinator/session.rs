@@ -316,6 +316,17 @@ pub fn run_session_batch(
     // One compute backend per party, built up front so an engine-open
     // failure surfaces before any thread is spawned. Artifact engines
     // are shared across every session the service runs.
+    //
+    // Thread budget: session workers × per-session compress threads must
+    // not exceed the batch's global compress budget, so the budget is
+    // divided across the concurrent session workers (floor 1). A batch
+    // of 4 concurrent sessions on an 8-thread budget gives each session
+    // 2 compress workers — never 4 × 8. Result-neutral by the canonical
+    // tiled-fold contract.
+    let budget = crate::util::threadpool::effective_threads(
+        first.effective_compress_threads(),
+    );
+    let per_session = (budget / opts.max_concurrent.max(1)).max(1);
     let kernel_meters: Vec<KernelMeter> = (0..parties).map(|_| KernelMeter::new()).collect();
     let mut computes = Vec::with_capacity(parties);
     for km in &kernel_meters {
@@ -325,9 +336,10 @@ pub fn run_session_batch(
                 exec: first.artifact_exec,
                 policy: first.entry_policy(),
                 meter: km.clone(),
+                threads: Some(per_session),
             })?))
         } else {
-            ComputeBackend::Rust { threads: first.threads }
+            ComputeBackend::Rust { threads: Some(per_session) }
         });
     }
 

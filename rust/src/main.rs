@@ -73,6 +73,7 @@ fn scan_command() -> Command {
         .opt("seed", "7", "rng seed")
         .opt("block-m", "256", "variant block width")
         .opt("shard-m", "0", "variant shard width for the streaming protocol (0 = single shot)")
+        .opt("compress-threads", "0", "worker-thread budget for the tiled compress kernels, shared across concurrent sessions (0 = auto; bit-identical at any count)")
         .opt("transport", "inproc", "inproc|tcp")
         .opt("sessions", "1", "multiplexed scan+SELECT sessions over shared per-party connections (1 = classic dedicated-connection run)")
         .opt("max-concurrent", "4", "bound on concurrently-running sessions (leader scheduler and party service pools)")
@@ -113,6 +114,10 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     cfg.seed = a.get_u64("seed")?;
     cfg.scan.block_m = a.get_usize("block-m")?;
     cfg.scan.shard_m = a.get_usize("shard-m")?;
+    let compress_threads = a.get_usize("compress-threads")?;
+    if compress_threads > 0 {
+        cfg.scan.compress_threads = Some(compress_threads);
+    }
     cfg.transport_tcp = a.get("transport") == Some("tcp");
     if a.flag("artifacts") {
         cfg.scan.use_artifacts = true;

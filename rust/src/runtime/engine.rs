@@ -83,13 +83,13 @@ impl Engine {
         Ok(Engine {
             manifest: Some(manifest),
             pjrt: Some(Pjrt { client, executables: RefCell::new(BTreeMap::new()) }),
-            exec: RefExec::new(policy, meter)?,
+            exec: RefExec::new(policy, meter, None)?,
         })
     }
 
     /// Reference engine with an explicit policy (tests/benches).
     pub fn reference(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<Engine> {
-        Ok(Engine { manifest: None, pjrt: None, exec: RefExec::new(policy, meter)? })
+        Ok(Engine { manifest: None, pjrt: None, exec: RefExec::new(policy, meter, None)? })
     }
 
     /// Entries lowered (compiled / planned) so far.

@@ -54,7 +54,7 @@ impl Engine {
                 }
                 Ok(Engine {
                     manifest,
-                    exec: RefExec::new(policy, opts.meter.clone())?,
+                    exec: RefExec::new(policy, opts.meter.clone(), opts.threads)?,
                 })
             }
         }
@@ -62,7 +62,7 @@ impl Engine {
 
     /// Reference engine with an explicit policy (tests/benches).
     pub fn reference(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<Engine> {
-        Ok(Engine { manifest: None, exec: RefExec::new(policy, meter)? })
+        Ok(Engine { manifest: None, exec: RefExec::new(policy, meter, None)? })
     }
 
     /// Entries lowered (planned) so far.

@@ -45,7 +45,11 @@
 //! with the session plumbing the way [`crate::net::ByteMeter`] is.
 
 use crate::linalg::Matrix;
-use crate::scan::{cross_products, VariantBlockStats};
+use crate::scan::{
+    canonical_tile_rows, compress_variant_block_opts, compress_yside, cross_products,
+    VariantBlockStats,
+};
+use crate::util::threadpool::effective_threads;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -247,6 +251,10 @@ pub struct EngineOptions {
     pub policy: ShapePolicy,
     /// shared telemetry sink (clone of the session's per-party meter)
     pub meter: KernelMeter,
+    /// worker-thread budget for the executor's tiled compress kernels
+    /// (None = auto). Purely a scheduling knob: the canonical tiled
+    /// accumulation is bit-identical at any worker count.
+    pub threads: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -256,6 +264,7 @@ impl Default for EngineOptions {
             exec: ArtifactExec::Auto,
             policy: ShapePolicy::default(),
             meter: KernelMeter::new(),
+            threads: None,
         }
     }
 }
@@ -288,6 +297,8 @@ struct MeterInner {
     select_passes: AtomicU64,
     cur_block_bytes: AtomicU64,
     peak_block_bytes: AtomicU64,
+    tile_passes: AtomicU64,
+    peak_tile_threads: AtomicU64,
 }
 
 impl KernelMeter {
@@ -321,6 +332,11 @@ impl KernelMeter {
         self.inner.cur_block_bytes.fetch_sub(bytes, Ordering::Relaxed);
     }
 
+    pub(crate) fn record_tiles(&self, tiles: u64, threads: u64) {
+        self.inner.tile_passes.fetch_add(tiles, Ordering::Relaxed);
+        self.inner.peak_tile_threads.fetch_max(threads, Ordering::Relaxed);
+    }
+
     /// Distinct entries lowered (compiled / planned) so far.
     pub fn lowered_entries(&self) -> u64 {
         self.inner.lowered.load(Ordering::Relaxed)
@@ -352,6 +368,18 @@ impl KernelMeter {
     pub fn peak_block_bytes(&self) -> u64 {
         self.inner.peak_block_bytes.load(Ordering::Relaxed)
     }
+
+    /// Canonical sample-tile partials accumulated across all compress
+    /// dispatches (a deterministic function of `(N, K)` per pass —
+    /// never of thread count).
+    pub fn tile_passes(&self) -> u64 {
+        self.inner.tile_passes.load(Ordering::Relaxed)
+    }
+
+    /// Widest worker-thread budget any compress dispatch ran with.
+    pub fn peak_tile_threads(&self) -> u64 {
+        self.inner.peak_tile_threads.load(Ordering::Relaxed)
+    }
 }
 
 /// The reference executor: pure-Rust execution of the parameterized
@@ -364,12 +392,19 @@ pub struct RefExec {
     policy: ShapePolicy,
     meter: KernelMeter,
     lowered: Mutex<BTreeSet<EntryKey>>,
+    /// worker budget for the tiled compress kernels (None = auto);
+    /// result-neutral by the canonical-fold contract
+    threads: Option<usize>,
 }
 
 impl RefExec {
-    pub fn new(policy: ShapePolicy, meter: KernelMeter) -> anyhow::Result<RefExec> {
+    pub fn new(
+        policy: ShapePolicy,
+        meter: KernelMeter,
+        threads: Option<usize>,
+    ) -> anyhow::Result<RefExec> {
         policy.validate()?;
-        Ok(RefExec { policy, meter, lowered: Mutex::new(BTreeSet::new()) })
+        Ok(RefExec { policy, meter, lowered: Mutex::new(BTreeSet::new()), threads })
     }
 
     pub fn policy(&self) -> &ShapePolicy {
@@ -424,39 +459,24 @@ impl RefExec {
         self.touch(key);
         self.meter.record_pass(KernelKind::CompressXy, PassKind::Scan);
 
-        let block_bytes = 8 * (n * (tc + kp) + tc + kp * tc + kp * kp) as u64;
+        // Modeled working set of the lowered entry: one canonical sample
+        // tile of the padded inputs plus the padded outputs. Tile height
+        // is the deterministic `canonical_tile_rows(K)` — never the
+        // thread count — so metering is machine-independent.
+        let th = n.min(canonical_tile_rows(k));
+        let ntiles = n.div_ceil(canonical_tile_rows(k)).max(1);
+        let block_bytes = 8 * (th * (tc + kp) + tc + kp * tc + kp * kp) as u64;
         self.meter.enter_block(block_bytes);
-        let ys_p = pad_cols(ys, tc);
-        let c_p = pad_cols(c, kp);
-        // Same per-element accumulation as `compress_base`: ordered fold
-        // over samples for YᵀY, `t_matvec` per trait column for CᵀY,
-        // `gram` for CᵀC — zero-padded lanes feed zero products only.
-        let mut yty_p = Vec::with_capacity(tc);
-        let mut cty_p = Matrix::zeros(kp, tc);
-        for tt in 0..tc {
-            let y = ys_p.col(tt);
-            yty_p.push(y.iter().map(|v| v * v).sum());
-            for (i, v) in c_p.t_matvec(&y).into_iter().enumerate() {
-                cty_p[(i, tt)] = v;
-            }
-        }
-        let ctc_p = c_p.gram();
+        self.meter.record_tiles(ntiles as u64, effective_threads(self.threads) as u64);
+        // The shared canonical tiled kernel on the *unpadded* inputs:
+        // bit-identity with `compress_base` by construction, and no
+        // padded N×·· slabs are ever materialized (padded lanes would
+        // only feed the sliced-away outputs — the padding is a lowering
+        // contract, not a numeric one).
+        let (yty, cty) = compress_yside(ys, c, None, self.threads);
+        let ctc = c.gram();
         self.meter.exit_block(block_bytes);
-
-        yty_p.truncate(t);
-        let mut cty = Matrix::zeros(k, t);
-        for i in 0..k {
-            for tt in 0..t {
-                cty[(i, tt)] = cty_p[(i, tt)];
-            }
-        }
-        let mut ctc = Matrix::zeros(k, k);
-        for i in 0..k {
-            for j in 0..k {
-                ctc[(i, j)] = ctc_p[(i, j)];
-            }
-        }
-        Ok((yty_p, cty, ctc))
+        Ok((yty, cty, ctc))
     }
 
     /// Shard-width-parameterized variant-side entry over columns
@@ -492,52 +512,22 @@ impl RefExec {
         self.touch(key);
         self.meter.record_pass(KernelKind::CompressX, pass);
 
-        let block_bytes = 8 * (n * (wc + tc + kp) + wc * tc + wc + kp * wc) as u64;
+        // Modeled working set: one canonical sample tile of the padded
+        // inputs plus the padded outputs — `O(tile·wc)`, freed at exit.
+        let th = n.min(canonical_tile_rows(k));
+        let ntiles = n.div_ceil(canonical_tile_rows(k)).max(1);
+        let block_bytes = 8 * (th * (wc + tc + kp) + wc * tc + wc + kp * wc) as u64;
         self.meter.enter_block(block_bytes);
-        let mut x_p = Matrix::zeros(n, wc);
-        for i in 0..n {
-            x_p.row_mut(i)[..w].copy_from_slice(&x.row(i)[j0..j1]);
-        }
-        let ys_p = pad_cols(ys, tc);
-        let c_p = pad_cols(c, kp);
-
-        // Dense axpy accumulation in sample order — the exact per-element
-        // order of `compress_variant_block` (each output element is a sum
-        // over samples `i = 0..n` ascending).
-        let mut xty_p = Matrix::zeros(wc, tc);
-        let mut xtx_p = vec![0.0f64; wc];
-        let mut ctx_p = Matrix::zeros(kp, wc);
-        for i in 0..n {
-            let y_row = ys_p.row(i);
-            let x_row = x_p.row(i);
-            let c_row = c_p.row(i);
-            for (j, &xv) in x_row.iter().enumerate() {
-                xtx_p[j] += xv * xv;
-                let lane = &mut xty_p.data[j * tc..(j + 1) * tc];
-                for (o, &yv) in lane.iter_mut().zip(y_row) {
-                    *o += xv * yv;
-                }
-            }
-            for (kk, &cv) in c_row.iter().enumerate() {
-                let row = ctx_p.row_mut(kk);
-                for (r, &xv) in row.iter_mut().zip(x_row) {
-                    *r += cv * xv;
-                }
-            }
-        }
+        self.meter.record_tiles(ntiles as u64, effective_threads(self.threads) as u64);
+        // The shared canonical tiled kernel on the *unpadded* inputs —
+        // the exact per-element fold of `compress_variant_block`
+        // (ascending canonical tiles, samples ascending within a tile),
+        // so artifact-mode outputs are bit-identical to the Rust path by
+        // construction at any thread count. One column chunk of the
+        // canonical width keeps the scratch layout of the lowered entry.
+        let vb = compress_variant_block_opts(ys, c, x, j0, j1, wc, None, self.threads);
         self.meter.exit_block(block_bytes);
-
-        // Slice the canonical padding away.
-        let mut xty = Matrix::zeros(w, t);
-        for j in 0..w {
-            xty.row_mut(j).copy_from_slice(&xty_p.row(j)[..t]);
-        }
-        xtx_p.truncate(w);
-        let mut ctx = Matrix::zeros(k, w);
-        for kk in 0..k {
-            ctx.row_mut(kk).copy_from_slice(&ctx_p.row(kk)[..w]);
-        }
-        Ok(VariantBlockStats { j0, xty, xtx: xtx_p, ctx })
+        Ok(vb)
     }
 
     /// Gathered-columns SELECT entry: cross-products of column `j` of
@@ -590,7 +580,7 @@ mod tests {
     }
 
     fn exec() -> RefExec {
-        RefExec::new(ShapePolicy::default(), KernelMeter::new()).unwrap()
+        RefExec::new(ShapePolicy::default(), KernelMeter::new(), None).unwrap()
     }
 
     #[test]
@@ -705,11 +695,39 @@ mod tests {
         assert!(wide > narrow, "peak should grow with shard width: {narrow} vs {wide}");
     }
 
+    /// The executor's worker budget is result-neutral: a 4-thread
+    /// executor reproduces the single-thread executor bit-for-bit, while
+    /// the meter's tile telemetry stays a deterministic function of
+    /// `(N, K)` alone.
+    #[test]
+    fn executor_thread_count_is_result_neutral_and_tiles_metered() {
+        let (ys, c, x) = make(900, 3, 40, 2, 9008);
+        let serial = RefExec::new(ShapePolicy::default(), KernelMeter::new(), Some(1)).unwrap();
+        let par = RefExec::new(ShapePolicy::default(), KernelMeter::new(), Some(4)).unwrap();
+        let a = serial.compress_x(&ys, &c, &x, 0, 40, PassKind::Scan).unwrap();
+        let b = par.compress_x(&ys, &c, &x, 0, 40, PassKind::Scan).unwrap();
+        assert_eq!(a.xty.data, b.xty.data);
+        assert_eq!(a.xtx, b.xtx);
+        assert_eq!(a.ctx.data, b.ctx.data);
+        let (yty_a, cty_a, _) = serial.compress_xy(&ys, &c).unwrap();
+        let (yty_b, cty_b, _) = par.compress_xy(&ys, &c).unwrap();
+        assert_eq!(yty_a, yty_b);
+        assert_eq!(cty_a.data, cty_b.data);
+        // tile accounting: both executors ran the same canonical tiles
+        // (900 rows / canonical_tile_rows(3) per pass, two passes), and
+        // each reports its own worker budget
+        let tiles_per_pass = 900u64.div_ceil(canonical_tile_rows(3) as u64);
+        assert_eq!(serial.meter().tile_passes(), 2 * tiles_per_pass);
+        assert_eq!(par.meter().tile_passes(), 2 * tiles_per_pass);
+        assert_eq!(serial.meter().peak_tile_threads(), 1);
+        assert_eq!(par.meter().peak_tile_threads(), 4);
+    }
+
     #[test]
     fn k_pad_overflow_rejected() {
         let (ys, c, x) = make(20, 5, 4, 1, 9006);
         let policy = ShapePolicy { k_pad: 4, ..Default::default() };
-        let e = RefExec::new(policy, KernelMeter::new()).unwrap();
+        let e = RefExec::new(policy, KernelMeter::new(), None).unwrap();
         assert!(e.compress_xy(&ys, &c).is_err());
         assert!(e.compress_x(&ys, &c, &x, 0, 4, PassKind::Scan).is_err());
     }

@@ -30,9 +30,21 @@
 //! variant sums never mix across columns), and per-trait bit-identical
 //! to a `T = 1` compression of each trait column (per-trait sums never
 //! mix across traits).
+//!
+//! ## Tiled, canonically-ordered accumulation (DESIGN.md §Parallel
+//! compress)
+//!
+//! Both stages stream samples in fixed-height **tiles** of
+//! [`canonical_tile_rows`] rows (sized so a tile of X, Y and C fits in
+//! L2), accumulate each tile into private scratch, and fold the tile
+//! partials into the output in **ascending tile order**. Every output
+//! element is therefore the same fixed-shape sum regardless of thread
+//! count, column chunking, or which worker computed which tile — the
+//! threaded paths are bit-identical to the serial path by construction,
+//! and the conformance matrix holds them to it.
 
 use crate::linalg::{householder_qr, Matrix};
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::{effective_threads, parallel_for_chunks, parallel_map};
 
 /// Per-party compressed statistics for `T` traits. The entire secure
 /// protocol operates on this — the `N_p`-row data never leaves the
@@ -246,25 +258,113 @@ pub fn unflatten_shard(
     })
 }
 
-/// Compress the variant-independent statistics of one party. `ys` is
-/// `N × T` (row-major samples × traits).
-pub fn compress_base(ys: &Matrix, c: &Matrix) -> BaseStats {
+/// Canonical sample-tile height for the compress kernels: the largest
+/// row count such that a tile of X (nominal shard width), Y (nominal
+/// trait batch) and C (`K` columns) stays within a conservative L2
+/// budget. Deliberately a function of `K` **only** — never of the actual
+/// shard width, trait count, thread count, or machine — so every code
+/// path (serial, threaded, reference executor) tiles the sample
+/// dimension identically and the canonical accumulation order is fixed.
+pub fn canonical_tile_rows(k: usize) -> usize {
+    const L2_BUDGET_BYTES: usize = 256 * 1024;
+    // nominal working-set columns per sample row: 64 X lanes + 16 trait
+    // lanes, plus the K covariate lanes
+    const NOMINAL_COLS: usize = 80;
+    (L2_BUDGET_BYTES / (8 * (k + NOMINAL_COLS))).clamp(64, 4096)
+}
+
+/// Accumulate samples `[i0, i1)` of the Y-side statistics into `part`
+/// (layout `[yty(T) | cty(K·T)]`, zeroed by the caller). The per-trait
+/// lanes never mix, so trait `t` of a T-trait partial is bit-identical
+/// to the T = 1 partial of that trait.
+fn yside_tile_partial(part: &mut [f64], ys: &Matrix, c: &Matrix, i0: usize, i1: usize) {
+    let t = ys.cols;
+    part.fill(0.0);
+    let (yty_p, cty_p) = part.split_at_mut(t);
+    for i in i0..i1 {
+        let y_row = ys.row(i);
+        for (o, &yv) in yty_p.iter_mut().zip(y_row) {
+            *o += yv * yv;
+        }
+        for (kk, &cv) in c.row(i).iter().enumerate() {
+            let lane = &mut cty_p[kk * t..(kk + 1) * t];
+            for (o, &yv) in lane.iter_mut().zip(y_row) {
+                *o += cv * yv;
+            }
+        }
+    }
+}
+
+/// Y-side sums `(YᵀY diag, CᵀY)` via the canonical tiled accumulation —
+/// the shared kernel behind [`compress_base`] and the reference
+/// executor's `CompressXy`, so the two are bit-identical by
+/// construction.
+pub fn compress_yside(
+    ys: &Matrix,
+    c: &Matrix,
+    tile_rows: Option<usize>,
+    threads: Option<usize>,
+) -> (Vec<f64>, Matrix) {
     let n = ys.rows;
     assert_eq!(c.rows, n, "C rows != N");
     assert!(ys.cols >= 1, "need at least one trait column");
     let k = c.cols;
     let t = ys.cols;
-    // Per-trait columns through the same accumulation as the historical
-    // single-trait path, so trait `t` of a T-trait compression is
-    // bit-identical to a T = 1 compression of that trait.
-    let mut yty = Vec::with_capacity(t);
-    let mut cty = Matrix::zeros(k, t);
-    for (tt, y) in ys.cols(0..t).enumerate() {
-        yty.push(y.iter().map(|v| v * v).sum());
-        for (i, v) in c.t_matvec(&y).into_iter().enumerate() {
-            cty[(i, tt)] = v;
+    let tile = tile_rows.unwrap_or_else(|| canonical_tile_rows(k)).max(1);
+    let ntiles = n.div_ceil(tile).max(1);
+    let len = t + k * t;
+    let mut acc = vec![0.0f64; len];
+    let nthreads = effective_threads(threads).min(ntiles);
+    if nthreads <= 1 {
+        let mut part = vec![0.0f64; len];
+        for ti in 0..ntiles {
+            yside_tile_partial(&mut part, ys, c, ti * tile, ((ti + 1) * tile).min(n));
+            for (a, &p) in acc.iter_mut().zip(&part) {
+                *a += p;
+            }
+        }
+    } else {
+        // Waves of ≤ nthreads tile partials computed in parallel, folded
+        // in ascending tile order; each wave's scratch drops before the
+        // next wave starts, bounding resident scratch at O(threads·tile).
+        for wave0 in (0..ntiles).step_by(nthreads) {
+            let wave_len = nthreads.min(ntiles - wave0);
+            let parts = parallel_map(wave_len, Some(nthreads), |wi| {
+                let ti = wave0 + wi;
+                let mut part = vec![0.0f64; len];
+                yside_tile_partial(&mut part, ys, c, ti * tile, ((ti + 1) * tile).min(n));
+                part
+            });
+            for part in parts {
+                for (a, &p) in acc.iter_mut().zip(&part) {
+                    *a += p;
+                }
+            }
         }
     }
+    let yty = acc[..t].to_vec();
+    let cty = Matrix::from_vec(k, t, acc[t..].to_vec());
+    (yty, cty)
+}
+
+/// Compress the variant-independent statistics of one party. `ys` is
+/// `N × T` (row-major samples × traits).
+pub fn compress_base(ys: &Matrix, c: &Matrix) -> BaseStats {
+    compress_base_opts(ys, c, None, Some(1))
+}
+
+/// [`compress_base`] with explicit tile height and worker count. Any
+/// `(tile_rows, threads)` combination yields bit-identical output for a
+/// given `tile_rows` (the canonical fold order depends on the tile
+/// boundaries alone, and `None` pins them to [`canonical_tile_rows`]).
+pub fn compress_base_opts(
+    ys: &Matrix,
+    c: &Matrix,
+    tile_rows: Option<usize>,
+    threads: Option<usize>,
+) -> BaseStats {
+    let n = ys.rows;
+    let (yty, cty) = compress_yside(ys, c, tile_rows, threads);
     BaseStats { n, yty, cty, ctc: c.gram(), r: householder_qr(c).r }
 }
 
@@ -286,6 +386,74 @@ pub fn compress_variant_block(
     block_m: usize,
     threads: Option<usize>,
 ) -> VariantBlockStats {
+    compress_variant_block_opts(ys, c, x, j0, j1, block_m, None, threads)
+}
+
+/// Accumulate samples `[i0, i1)` of the X-side statistics for the `bw`
+/// absolute columns starting at `x0` into `part` (layout
+/// `[xty(bw·T) | xtx(bw) | ctx(K×bw)]`, zeroed here). The branch-free
+/// axpy form beats the per-element `if xv == 0` skip even at ~50%
+/// genotype sparsity (EXPERIMENTS.md §Perf); the trait loop vectorizes
+/// over the contiguous trait lane.
+#[allow(clippy::too_many_arguments)]
+fn xside_tile_partial(
+    part: &mut [f64],
+    ys: &Matrix,
+    c: &Matrix,
+    x: &Matrix,
+    x0: usize,
+    bw: usize,
+    i0: usize,
+    i1: usize,
+) {
+    let t = ys.cols;
+    part.fill(0.0);
+    let (xty_p, rest) = part.split_at_mut(bw * t);
+    let (xtx_p, ctx_p) = rest.split_at_mut(bw);
+    for i in i0..i1 {
+        let y_row = ys.row(i);
+        let x_row = &x.row(i)[x0..x0 + bw];
+        for (j, &xv) in x_row.iter().enumerate() {
+            xtx_p[j] += xv * xv;
+            let lane = &mut xty_p[j * t..(j + 1) * t];
+            for (o, &yv) in lane.iter_mut().zip(y_row) {
+                *o += xv * yv;
+            }
+        }
+        for (kk, &cv) in c.row(i).iter().enumerate() {
+            let row = &mut ctx_p[kk * bw..(kk + 1) * bw];
+            for (r, &xv) in row.iter_mut().zip(x_row) {
+                *r += cv * xv;
+            }
+        }
+    }
+}
+
+/// [`compress_variant_block`] with an explicit sample-tile height.
+///
+/// Parallelism is two-level, and neither level perturbs the result:
+///
+/// - **columns** — variant columns are chunked `block_m` wide; per-
+///   variant sums never mix across columns, so chunking is order-
+///   neutral by construction;
+/// - **samples** — each chunk streams the canonical sample tiles
+///   ([`canonical_tile_rows`], or `tile_rows` for tests), accumulating
+///   every tile into private scratch and folding the partials in
+///   ascending tile order. When the column dimension is too narrow to
+///   occupy the workers (the common one-shard-at-a-time streaming case)
+///   the tile partials of a chunk are computed in parallel waves
+///   instead — same tiles, same fold order, same bits.
+#[allow(clippy::too_many_arguments)]
+pub fn compress_variant_block_opts(
+    ys: &Matrix,
+    c: &Matrix,
+    x: &Matrix,
+    j0: usize,
+    j1: usize,
+    block_m: usize,
+    tile_rows: Option<usize>,
+    threads: Option<usize>,
+) -> VariantBlockStats {
     let n = ys.rows;
     assert_eq!(c.rows, n, "C rows != N");
     assert_eq!(x.rows, n, "X rows != N");
@@ -295,62 +463,85 @@ pub fn compress_variant_block(
     let t = ys.cols;
     let w = j1 - j0;
 
-    // Blocked over variants. Each chunk accumulates into a chunk-local
-    // contiguous buffer (xty/xtx/ctx interleaved per block) and writes
-    // back once — the strided `ctx[kk·w + j]` stores of the naive loop
-    // thrash the cache at K ≥ 16 (see EXPERIMENTS.md §Perf).
+    let tile = tile_rows.unwrap_or_else(|| canonical_tile_rows(k)).max(1);
+    let ntiles = n.div_ceil(tile).max(1);
+    let chunk = block_m.max(1);
+    let col_chunks = w.div_ceil(chunk).max(1);
+    let nthreads = effective_threads(threads);
+
     let mut xty = Matrix::zeros(w, t);
     let mut xtx = vec![0.0; w];
     let mut ctx = Matrix::zeros(k, w);
+    if w == 0 {
+        return VariantBlockStats { j0, xty, xtx, ctx };
+    }
     {
         // Disjoint column blocks → safe shared-mutable access.
         let xty_ptr = SendPtr(xty.data.as_mut_ptr());
         let xtx_ptr = SendPtr(xtx.as_mut_ptr());
         let ctx_ptr = SendPtr(ctx.data.as_mut_ptr());
-        parallel_for_chunks(w, block_m.max(1), threads, |b0, b1| {
-            let bw = b1 - b0;
-            // local accumulators: [xty(bw·T) | xtx(bw) | ctx(k×bw)]
-            let mut local = vec![0.0f64; bw * (1 + t + k)];
-            for i in 0..n {
-                let y_row = ys.row(i);
-                let x_row = &x.row(i)[j0 + b0..j0 + b1];
-                let c_row = c.row(i);
-                let (xty_l, rest) = local.split_at_mut(bw * t);
-                let (xtx_l, ctx_l) = rest.split_at_mut(bw);
-                // branch-free axpy form: one vectorizable pass per output
-                // row (beats the per-element `if xv == 0` skip even at
-                // ~50% genotype sparsity — see EXPERIMENTS.md §Perf); the
-                // trait loop vectorizes over the contiguous trait lane
-                for (j, &xv) in x_row.iter().enumerate() {
-                    xtx_l[j] += xv * xv;
-                    let lane = &mut xty_l[j * t..(j + 1) * t];
-                    for (o, &yv) in lane.iter_mut().zip(y_row) {
-                        *o += xv * yv;
-                    }
+        // single write-back of a chunk's accumulator into the shared
+        // outputs. SAFETY: columns [b0, b1) are owned by one caller.
+        let write_back = |b0: usize, bw: usize, acc: &[f64]| unsafe {
+            for j in 0..bw {
+                for tt in 0..t {
+                    *xty_ptr.at((b0 + j) * t + tt) = acc[j * t + tt];
                 }
-                for (kk, &cv) in c_row.iter().enumerate() {
-                    let row = &mut ctx_l[kk * bw..(kk + 1) * bw];
-                    for (r, &xv) in row.iter_mut().zip(x_row) {
-                        *r += cv * xv;
-                    }
-                }
+                *xtx_ptr.at(b0 + j) = acc[bw * t + j];
             }
-            // single write-back into the shared outputs
-            // SAFETY: columns [b0, b1) are owned by this chunk.
-            unsafe {
+            for kk in 0..k {
                 for j in 0..bw {
-                    for tt in 0..t {
-                        *xty_ptr.at((b0 + j) * t + tt) = local[j * t + tt];
-                    }
-                    *xtx_ptr.at(b0 + j) = local[bw * t + j];
-                }
-                for kk in 0..k {
-                    for j in 0..bw {
-                        *ctx_ptr.at(kk * w + b0 + j) = local[bw * (1 + t) + kk * bw + j];
-                    }
+                    *ctx_ptr.at(kk * w + b0 + j) = acc[bw * (1 + t) + kk * bw + j];
                 }
             }
-        });
+        };
+        if nthreads <= 1 || col_chunks >= nthreads || ntiles <= 1 {
+            // Column-parallel: each worker owns whole column chunks and
+            // streams the tiles of its chunk serially (partials reuse
+            // one scratch buffer, folded ascending as they complete).
+            parallel_for_chunks(w, chunk, threads, |b0, b1| {
+                let bw = b1 - b0;
+                let mut acc = vec![0.0f64; bw * (1 + t + k)];
+                let mut part = vec![0.0f64; bw * (1 + t + k)];
+                for ti in 0..ntiles {
+                    let (i0, i1) = (ti * tile, ((ti + 1) * tile).min(n));
+                    xside_tile_partial(&mut part, ys, c, x, j0 + b0, bw, i0, i1);
+                    for (a, &p) in acc.iter_mut().zip(&part) {
+                        *a += p;
+                    }
+                }
+                write_back(b0, bw, &acc);
+            });
+        } else {
+            // Tile-parallel: too few column chunks to occupy the
+            // workers, so parallelize over sample tiles instead — waves
+            // of ≤ nthreads tile partials, folded in ascending tile
+            // order; a wave's scratch drops before the next wave starts
+            // (resident scratch stays O(threads · chunk), not O(ntiles)).
+            let mut b0 = 0usize;
+            while b0 < w {
+                let b1 = (b0 + chunk).min(w);
+                let bw = b1 - b0;
+                let mut acc = vec![0.0f64; bw * (1 + t + k)];
+                for wave0 in (0..ntiles).step_by(nthreads) {
+                    let wave_len = nthreads.min(ntiles - wave0);
+                    let parts = parallel_map(wave_len, Some(nthreads), |wi| {
+                        let ti = wave0 + wi;
+                        let mut part = vec![0.0f64; bw * (1 + t + k)];
+                        let (i0, i1) = (ti * tile, ((ti + 1) * tile).min(n));
+                        xside_tile_partial(&mut part, ys, c, x, j0 + b0, bw, i0, i1);
+                        part
+                    });
+                    for part in parts {
+                        for (a, &p) in acc.iter_mut().zip(&part) {
+                            *a += p;
+                        }
+                    }
+                }
+                write_back(b0, bw, &acc);
+                b0 = b1;
+            }
+        }
     }
 
     VariantBlockStats { j0, xty, xtx, ctx }
@@ -367,7 +558,7 @@ pub fn compress_party(
     block_m: usize,
     threads: Option<usize>,
 ) -> CompressedParty {
-    let base = compress_base(ys, c);
+    let base = compress_base_opts(ys, c, None, threads);
     let vb = compress_variant_block(ys, c, x, 0, x.cols, block_m, threads);
     CompressedParty {
         n: base.n,
@@ -586,6 +777,54 @@ mod tests {
         // actually — rows are always scanned in order within a block)
         assert!(rel_err(&a.xty.data, &b.xty.data) < 1e-14);
         assert!(rel_err(&a.ctx.data, &b.ctx.data) < 1e-14);
+    }
+
+    /// The tentpole contract: for a fixed tile height, every
+    /// (threads × block_m) combination produces bit-identical output —
+    /// the canonical ascending-tile fold is independent of who computes
+    /// which tile partial and of how the columns are chunked.
+    #[test]
+    fn threaded_compress_bit_identical_to_serial_across_tiles() {
+        let n = 57;
+        let (ys, c, x) = make(n, 3, 19, 2, 140);
+        for tile in [1usize, 13, 64, n] {
+            let serial =
+                compress_variant_block_opts(&ys, &c, &x, 0, 19, 19, Some(tile), Some(1));
+            let (yty_s, cty_s) = compress_yside(&ys, &c, Some(tile), Some(1));
+            for threads in [2usize, 4, 7] {
+                for block_m in [1usize, 5, 19] {
+                    let par = compress_variant_block_opts(
+                        &ys,
+                        &c,
+                        &x,
+                        0,
+                        19,
+                        block_m,
+                        Some(tile),
+                        Some(threads),
+                    );
+                    let tag = format!("tile={tile} threads={threads} block_m={block_m}");
+                    assert_eq!(par.xty.data, serial.xty.data, "xty {tag}");
+                    assert_eq!(par.xtx, serial.xtx, "xtx {tag}");
+                    assert_eq!(par.ctx.data, serial.ctx.data, "ctx {tag}");
+                }
+                let (yty_p, cty_p) = compress_yside(&ys, &c, Some(tile), Some(threads));
+                assert_eq!(yty_p, yty_s, "yty tile={tile} threads={threads}");
+                assert_eq!(cty_p.data, cty_s.data, "cty tile={tile} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_tile_rows_depends_on_k_only_and_is_bounded() {
+        // monotone non-increasing in K, clamped into [64, 4096]
+        let mut prev = usize::MAX;
+        for k in [1usize, 2, 8, 16, 64, 1024, 1 << 20] {
+            let t = canonical_tile_rows(k);
+            assert!((64..=4096).contains(&t), "tile {t} out of bounds at k={k}");
+            assert!(t <= prev, "tile height must not grow with K");
+            prev = t;
+        }
     }
 
     #[test]

@@ -56,7 +56,8 @@ mod select;
 mod shard;
 
 pub use compressed::{
-    base_flat_len, compress_base, compress_party, compress_variant_block, flatten_for_sum,
+    base_flat_len, canonical_tile_rows, compress_base, compress_base_opts, compress_party,
+    compress_variant_block, compress_variant_block_opts, compress_yside, flatten_for_sum,
     shard_flat_len, unflatten_base, unflatten_shard, unflatten_sum, AggregateSums, BaseStats,
     BaseSums, CompressedParty, FlatLayout, ShardSums, VariantBlockStats,
 };
@@ -81,6 +82,11 @@ pub struct ScanConfig {
     pub frac_bits: u32,
     /// worker threads per party for the compress stage (None = auto)
     pub threads: Option<usize>,
+    /// dedicated worker-thread budget for the tiled compress kernels
+    /// (`--compress-threads`). `None` falls back to [`Self::threads`];
+    /// the thread count never changes results — the canonical tiled
+    /// accumulation is bit-identical at any worker count.
+    pub compress_threads: Option<usize>,
     /// variant-block width for the compress stage (intra-shard
     /// parallelism granularity)
     pub block_m: usize,
@@ -121,6 +127,7 @@ impl Default for ScanConfig {
             backend: SmcBackend::Masked,
             frac_bits: 24,
             threads: None,
+            compress_threads: None,
             block_m: 256,
             shard_m: 0,
             r_method: RFactorMethod::Auto,
@@ -139,6 +146,13 @@ impl Default for ScanConfig {
 }
 
 impl ScanConfig {
+    /// The compress-stage worker budget: the dedicated
+    /// `compress_threads` knob when set, else the legacy `threads` knob
+    /// (None = auto-detect).
+    pub fn effective_compress_threads(&self) -> Option<usize> {
+        self.compress_threads.or(self.threads)
+    }
+
     /// Entry-shape policy of the artifact kernel suite for this config.
     pub fn entry_policy(&self) -> crate::runtime::ShapePolicy {
         crate::runtime::ShapePolicy {

@@ -7,7 +7,9 @@
 //! defaults to available parallelism and is overridable for the E2 core
 //! sweep (`DASH_THREADS` or explicit argument).
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use: explicit `n`, else `DASH_THREADS`,
 /// else `std::thread::available_parallelism()`.
@@ -26,6 +28,11 @@ pub fn effective_threads(n: Option<usize>) -> usize {
 /// Run `f(start, end)` over disjoint chunks of `0..len` on up to
 /// `threads` workers. Work is distributed dynamically (atomic cursor over
 /// fixed-size chunks) so uneven block costs balance out.
+///
+/// A panic in `f` on any worker short-circuits the remaining chunks and
+/// is re-raised on the calling thread with its original payload — never
+/// a silent partial result, never the anonymous "a scoped thread
+/// panicked" abort from `std::thread::scope`.
 pub fn parallel_for_chunks<F>(len: usize, chunk: usize, threads: Option<usize>, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -36,6 +43,7 @@ where
         return;
     }
     if nthreads <= 1 {
+        // serial path: panics unwind to the caller naturally
         let mut s = 0;
         while s < len {
             f(s, (s + chunk).min(len));
@@ -44,6 +52,7 @@ where
         return;
     }
     let cursor = AtomicUsize::new(0);
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..nthreads {
             scope.spawn(|| loop {
@@ -51,10 +60,24 @@ where
                 if s >= len {
                     break;
                 }
-                f(s, (s + chunk).min(len));
+                if let Err(payload) =
+                    catch_unwind(AssertUnwindSafe(|| f(s, (s + chunk).min(len))))
+                {
+                    // park the cursor past the end so every worker stops
+                    // handing out chunks, keep the first payload
+                    cursor.store(len, Ordering::Relaxed);
+                    let mut slot = panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    break;
+                }
             });
         }
     });
+    if let Some(payload) = panic_payload.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
 }
 
 /// Parallel map over `0..n` producing a `Vec<T>` in index order.
@@ -136,6 +159,47 @@ mod tests {
     fn effective_threads_floor_one() {
         assert_eq!(effective_threads(Some(0)), 1);
         assert!(effective_threads(None) >= 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_with_payload() {
+        let err = std::panic::catch_unwind(|| {
+            parallel_for_chunks(1000, 7, Some(4), |s, _| {
+                if s >= 35 {
+                    panic!("boom at {s}");
+                }
+            });
+        })
+        .expect_err("worker panic must reach the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload must be the original panic message");
+        assert!(msg.starts_with("boom at "), "unexpected payload: {msg}");
+    }
+
+    #[test]
+    fn serial_path_panic_propagates() {
+        let err = std::panic::catch_unwind(|| {
+            parallel_for_chunks(10, 3, Some(1), |_, _| panic!("serial boom"));
+        })
+        .expect_err("serial-path panic must reach the caller");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"serial boom"));
+    }
+
+    #[test]
+    fn map_worker_panic_propagates() {
+        let err = std::panic::catch_unwind(|| {
+            parallel_map(100, Some(4), |i| {
+                if i == 63 {
+                    panic!("map boom");
+                }
+                i
+            })
+        })
+        .expect_err("parallel_map must re-raise worker panics");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"map boom"));
     }
 
     #[test]

@@ -226,6 +226,10 @@ pub struct Scenario {
     pub m: usize,
     pub t: usize,
     pub shard_m: usize,
+    /// worker-thread budget for the tiled compress kernels (0 = leave
+    /// the config default, i.e. the harness `threads` knob); any value
+    /// must be bit-identical to the serial baseline
+    pub compress_threads: usize,
     pub select_k: usize,
     pub select_alpha: f64,
     pub select_candidates: usize,
@@ -249,6 +253,7 @@ impl Default for Scenario {
             m: 70,
             t: 1,
             shard_m: 0,
+            compress_threads: 0,
             select_k: 0,
             select_alpha: 0.5,
             select_candidates: 8,
@@ -264,6 +269,9 @@ impl Default for Scenario {
 impl Scenario {
     fn config(&self, backend: Backend, compute: Compute) -> ScanConfig {
         let mut c = cfg_compute(backend, self.shard_m, compute);
+        if self.compress_threads > 0 {
+            c.compress_threads = Some(self.compress_threads);
+        }
         c.select_k = self.select_k;
         c.select_alpha = self.select_alpha;
         c.select_candidates = self.select_candidates;

@@ -51,6 +51,20 @@ conformance_scenarios! {
         sessions: 4, shard_m: 8, t: 2, select_k: 1, select_candidates: 8,
         n_per: 24, m: 32, cohort_seed: 0xA00A
     },
+    // threaded compress closure: the tiled kernels' canonical
+    // accumulation order makes the worker-thread budget result-neutral,
+    // so threaded cells hold the exact same cross-backend bit-identity
+    // contract as the serial grid above
+    scan_shard16_threads4: {
+        shard_m: 16, t: 4, compress_threads: 4, cohort_seed: 0xA00B
+    },
+    scan_whole_m_t16_threads7: {
+        shard_m: 0, t: 16, compress_threads: 7, cohort_seed: 0xA00C
+    },
+    select_union_threads4: {
+        shard_m: 16, t: 1, select_k: 2, select_candidates: 70,
+        compress_threads: 4, cohort_seed: 0xA00D
+    },
 }
 
 /// The X-side pass count is a function of the shard plan alone: a T=16
@@ -146,6 +160,34 @@ fn lowering_cache_covers_ragged_plans() {
         assert_eq!(km.lowered_entries(), 2, "party {p}: lowered entries");
         assert_eq!(km.xside_passes(), 10, "party {p}: X-side passes");
         assert_eq!(km.cache_hits(), 9, "party {p}: cache hits");
+    }
+}
+
+/// The `compress_threads` knob is a pure execution knob: any thread
+/// budget must reproduce the single-threaded session's scan + SELECT
+/// statistics bit-for-bit, across every backend and both compute paths
+/// (the tiled kernels fold per-tile partials in canonical tile order,
+/// which is independent of the thread count).
+#[test]
+fn threaded_compress_matches_serial_e2e() {
+    let cohort = generate_cohort(&spec_for(3, 40, 70, 4), 0xA500);
+    for backend in common::backends() {
+        for compute in Compute::all() {
+            let run_with = |threads: usize| {
+                let mut cfg = common::cfg_compute(backend, 16, compute);
+                cfg.select_k = 1;
+                cfg.compress_threads = Some(threads);
+                common::run(&cohort, &cfg, Transport::InProc, 80)
+            };
+            let serial = run_with(1);
+            for threads in [2usize, 4, 7] {
+                let threaded = run_with(threads);
+                let label =
+                    format!("compress_threads={threads} [{backend:?} × {compute:?}]");
+                common::assert_scan_bits_eq(&threaded, &serial, &label);
+                common::assert_select_bits_eq(&threaded, &serial, &label);
+            }
+        }
     }
 }
 

@@ -5,14 +5,20 @@
 //! - flatten → secure-sum → unflatten is the *identity* on the
 //!   elementwise aggregate for fixed-point-representable inputs, across
 //!   all three backends (losslessness of the wire encoding, not just
-//!   closeness).
+//!   closeness);
+//! - the tiled compress kernels are bit-identical to their serial run
+//!   for any (shape, trait count, tile height, thread budget) — the
+//!   canonical ascending-tile fold makes the worker count invisible.
 
 use dash::linalg::{householder_qr, project_append, qr_append, Matrix};
 use dash::mpc::field::Fe;
 use dash::mpc::fixed::FixedCodec;
 use dash::mpc::masking::{aggregate_masked, PairwiseMasker};
 use dash::mpc::shamir;
-use dash::scan::{flatten_for_sum, unflatten_sum, CompressedParty};
+use dash::scan::{
+    compress_variant_block_opts, compress_yside, flatten_for_sum, unflatten_sum,
+    CompressedParty,
+};
 use dash::util::proptest::{all_close, fixed_repr_vec, run_prop, PropConfig};
 use dash::util::rng::Rng;
 
@@ -90,6 +96,73 @@ fn prop_project_append_equals_full_projection() {
                 let want = qt_x_full[(k, j)];
                 if (inc - want).abs() > 1e-8 * want.abs().max(1.0) {
                     return Err(format!("col {j}: incremental {inc} vs full {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Threaded compress is bit-identical to the single-threaded run with
+/// the same tile height, for random shapes across tile ∈ {1, 13, 64, n}
+/// × threads ∈ {2, 4, 7} × T ∈ {1, 16}: every output element is the same
+/// fixed-shape sum (ascending tile fold, samples-ascending within a
+/// tile) no matter how many workers computed the tile partials.
+#[test]
+fn prop_threaded_compress_bit_identical_to_serial() {
+    run_prop(
+        "threaded-compress-vs-serial",
+        PropConfig { cases: 12, ..Default::default() },
+        |rng| {
+            let n = 20 + rng.below(100) as usize;
+            let k = 2 + rng.below(4) as usize;
+            let m = 1 + rng.below(24) as usize;
+            let t = if rng.below(2) == 0 { 1 } else { 16 };
+            let mut c = Matrix::randn(n, k, rng);
+            for i in 0..n {
+                c[(i, 0)] = 1.0;
+            }
+            let x = Matrix::randn(n, m, rng);
+            let ys = Matrix::randn(n, t, rng);
+            (ys, c, x)
+        },
+        |(ys, c, x)| {
+            let (n, m) = (ys.rows, x.cols);
+            for tile in [1usize, 13, 64, n] {
+                let serial =
+                    compress_variant_block_opts(ys, c, x, 0, m, 5, Some(tile), Some(1));
+                let (yty_s, cty_s) = compress_yside(ys, c, Some(tile), Some(1));
+                for threads in [2usize, 4, 7] {
+                    let par = compress_variant_block_opts(
+                        ys,
+                        c,
+                        x,
+                        0,
+                        m,
+                        5,
+                        Some(tile),
+                        Some(threads),
+                    );
+                    let tag = format!("tile={tile} threads={threads}");
+                    for (name, got, want) in [
+                        ("xty", &par.xty.data, &serial.xty.data),
+                        ("xtx", &par.xtx, &serial.xtx),
+                        ("ctx", &par.ctx.data, &serial.ctx.data),
+                    ] {
+                        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                            if g.to_bits() != w.to_bits() {
+                                return Err(format!("{tag} {name}[{i}]: {g} vs {w}"));
+                            }
+                        }
+                    }
+                    let (yty_p, cty_p) = compress_yside(ys, c, Some(tile), Some(threads));
+                    let got = yty_p.iter().chain(cty_p.data.iter());
+                    let want = yty_s.iter().chain(cty_s.data.iter());
+                    for (i, (g, w)) in got.zip(want).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!("{tag} yside[{i}]: {g} vs {w}"));
+                        }
+                    }
                 }
             }
             Ok(())
