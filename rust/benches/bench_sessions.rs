@@ -1,15 +1,18 @@
 //! Session-service throughput: serial dedicated-connection runs vs the
 //! multiplexed SessionManager at increasing concurrency, plus the
-//! multiplexing byte overhead and the shared-engine lowering accounting.
-//! Writes `BENCH_sessions.json` (bench rows + summary rows) for
-//! EXPERIMENTS.md §E11.
+//! multiplexing byte overhead and the shared-engine lowering accounting,
+//! plus the high-connection-count reactor-vs-threaded sweep
+//! (c ∈ {64, 256, 1024} concurrent sessions, sessions/s and
+//! transport-threads-spawned per drive mode). Writes
+//! `BENCH_sessions.json` (bench rows + summary rows) for
+//! EXPERIMENTS.md §E11/§E13.
 
 use dash::coordinator::{
     run_multi_party_scan_t, run_session_batch, BatchOptions, SessionSpec, Transport,
 };
 use dash::gwas::{generate_cohort, CohortSpec};
 use dash::mpc::Backend;
-use dash::net::FRAME_V2_OVERHEAD;
+use dash::net::{transport_driver_threads, FRAME_V2_OVERHEAD};
 use dash::runtime::ArtifactExec;
 use dash::scan::ScanConfig;
 use dash::util::bench::Bench;
@@ -87,6 +90,29 @@ fn main() {
         rows.push((label, mux_s));
     }
 
+    // the same batch driven by the epoll reactor instead of pump
+    // threads (linux-only): one readiness thread for every connection
+    if cfg!(target_os = "linux") {
+        let label = format!("mux_x{sessions}_c{sessions}_reactor");
+        let mux_s = b
+            .case_units(&label, Some(sessions as f64), "sess", || {
+                let batch = run_session_batch(
+                    &cohort,
+                    &specs,
+                    &BatchOptions {
+                        transport: Transport::Reactor,
+                        max_concurrent: sessions,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert!(batch.runs.iter().all(|r| r.is_ok()));
+                std::hint::black_box(batch);
+            })
+            .median_s;
+        rows.push((label, mux_s));
+    }
+
     // Byte overhead: per-session bytes under multiplexing vs serial —
     // exactly the v2 envelope per frame.
     let serial_run =
@@ -123,6 +149,51 @@ fn main() {
     let lowered_per_party = art_batch.party_kernels[0].lowered_entries();
     let xpasses_per_party = art_batch.party_kernels[0].xside_passes();
 
+    // High-connection-count sweep (EXPERIMENTS.md §E13): c concurrent
+    // tiny sessions, reactor vs threaded pumps, sessions/s plus the
+    // transport threads each drive mode spawned (the reactor must stay
+    // O(1) regardless of c). Single-shot wall time per cell — the cells
+    // are scheduling-dominated, and c=1024 is too heavy to repeat.
+    let sweep_cohort = generate_cohort(&spec(3, 24, 16, 1), 0xE13);
+    let sweep_cfg = ScanConfig {
+        backend: Backend::Masked,
+        shard_m: 8,
+        block_m: 8,
+        threads: Some(1),
+        ..ScanConfig::default()
+    };
+    let sweep_cs: &[usize] = if quick { &[64] } else { &[64, 256, 1024] };
+    let mut sweep_transports = vec![Transport::Tcp];
+    if cfg!(target_os = "linux") {
+        sweep_transports.push(Transport::Reactor);
+    }
+    // (c, transport, wall_s, sessions/s, transport threads spawned)
+    let mut sweep: Vec<(usize, Transport, f64, f64, u64)> = Vec::new();
+    for &c in sweep_cs {
+        let sweep_specs: Vec<SessionSpec> = (0..c)
+            .map(|i| SessionSpec { cfg: sweep_cfg.clone(), seed: 9000 + i as u64 })
+            .collect();
+        for &transport in &sweep_transports {
+            let before = transport_driver_threads();
+            let batch = run_session_batch(
+                &sweep_cohort,
+                &sweep_specs,
+                &BatchOptions {
+                    transport,
+                    max_concurrent: c,
+                    // generous per-frame deadline: at c=1024 the box is
+                    // scheduling thousands of session workers
+                    recv_timeout: Some(std::time::Duration::from_secs(300)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let drivers = transport_driver_threads() - before;
+            assert!(batch.runs.iter().all(|r| r.is_ok()), "c={c} {transport:?}");
+            sweep.push((c, transport, batch.wall_s, c as f64 / batch.wall_s, drivers));
+        }
+    }
+
     // human summary
     let serial_tp = sessions as f64 / serial_s;
     println!("\nsession throughput (P=3, N={}, M={m}, T=2, masked):", 3 * n_per);
@@ -144,6 +215,21 @@ fn main() {
          ({xpasses_per_party} X-passes/party, no per-session recompiles)",
         sessions
     );
+    println!("\nhigh-connection sweep (P=3, tiny sessions, E13):");
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>16}",
+        "c", "transport", "wall_s", "sess/s", "driver_threads"
+    );
+    for &(c, t, wall, tp, drivers) in &sweep {
+        println!(
+            "{:>6} {:>10} {:>10.3} {:>12.1} {:>16}",
+            c,
+            dash::config::transport_name(t),
+            wall,
+            tp,
+            drivers
+        );
+    }
 
     // machine-readable report
     let mut report = b.json_lines();
@@ -156,6 +242,18 @@ fn main() {
             .set("median_s", *s)
             .set("sessions_per_s", sessions as f64 / *s)
             .set("speedup_vs_serial", serial_s / *s);
+        report.push_str(&o.to_string());
+        report.push('\n');
+    }
+    for &(c, t, wall, tp, drivers) in &sweep {
+        let mut o = Json::obj();
+        o.set("group", "sessions")
+            .set("row", "sweep")
+            .set("transport", dash::config::transport_name(t))
+            .set("sessions", c)
+            .set("wall_s", wall)
+            .set("sessions_per_s", tp)
+            .set("driver_threads", drivers as usize);
         report.push_str(&o.to_string());
         report.push('\n');
     }

@@ -5,6 +5,7 @@
 //! and it serializes back to JSON for reproducible experiment records
 //! (every EXPERIMENTS.md row carries its config).
 
+use crate::coordinator::Transport;
 use crate::gwas::CohortSpec;
 use crate::mpc::Backend;
 use crate::scan::{RFactorMethod, ScanConfig, SelectPolicy};
@@ -16,7 +17,10 @@ pub struct RunConfig {
     pub cohort: CohortSpec,
     pub scan: ScanConfig,
     pub seed: u64,
-    pub transport_tcp: bool,
+    /// leader ↔ party transport: in-process channels, threaded TCP
+    /// (one pump thread per connection), or the epoll reactor (one
+    /// readiness thread for every connection)
+    pub transport: Transport,
     /// number of multiplexed sessions to run over shared connections
     /// (1 = classic single-session deployment on dedicated connections)
     pub sessions: usize,
@@ -31,7 +35,7 @@ impl Default for RunConfig {
             cohort: CohortSpec::default_small(),
             scan: ScanConfig::default(),
             seed: 7,
-            transport_tcp: false,
+            transport: Transport::InProc,
             sessions: 1,
             max_concurrent: 4,
         }
@@ -46,11 +50,7 @@ impl RunConfig {
             cfg.seed = s as u64;
         }
         if let Some(t) = v.get("transport").and_then(Json::as_str) {
-            cfg.transport_tcp = match t {
-                "tcp" => true,
-                "inproc" => false,
-                other => anyhow::bail!("unknown transport `{other}`"),
-            };
+            cfg.transport = parse_transport(t)?;
         }
         if let Some(x) = v.get("sessions").and_then(Json::as_usize) {
             anyhow::ensure!(x >= 1, "sessions must be ≥ 1");
@@ -121,12 +121,31 @@ impl RunConfig {
         }
         let mut o = Json::obj();
         o.set("seed", self.seed)
-            .set("transport", if self.transport_tcp { "tcp" } else { "inproc" })
+            .set("transport", transport_name(self.transport))
             .set("sessions", self.sessions)
             .set("max_concurrent", self.max_concurrent)
             .set("cohort", cohort)
             .set("scan", scan);
         o
+    }
+}
+
+/// Parse a transport name (`--transport` / config `"transport"`).
+pub fn parse_transport(t: &str) -> anyhow::Result<Transport> {
+    Ok(match t {
+        "inproc" => Transport::InProc,
+        "tcp" => Transport::Tcp,
+        "reactor" => Transport::Reactor,
+        other => anyhow::bail!("unknown transport `{other}`"),
+    })
+}
+
+/// Canonical name of a transport (config serialization and run reports).
+pub fn transport_name(t: Transport) -> &'static str {
+    match t {
+        Transport::InProc => "inproc",
+        Transport::Tcp => "tcp",
+        Transport::Reactor => "reactor",
     }
 }
 
@@ -304,7 +323,7 @@ mod tests {
         .unwrap();
         let cfg = RunConfig::from_json(&j).unwrap();
         assert_eq!(cfg.seed, 42);
-        assert!(cfg.transport_tcp);
+        assert_eq!(cfg.transport, Transport::Tcp);
         assert_eq!(cfg.cohort.party_sizes, vec![100, 100]);
         assert_eq!(cfg.cohort.party_admixture.len(), 2); // auto-filled
         assert_eq!(cfg.cohort.m_variants, 50);
@@ -377,6 +396,17 @@ mod tests {
             &Json::parse(r#"{"scan": {"artifact_exec": "gpu"}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn transport_names_roundtrip() {
+        for name in ["inproc", "tcp", "reactor"] {
+            let j = Json::parse(&format!(r#"{{"transport": "{name}"}}"#)).unwrap();
+            let cfg = RunConfig::from_json(&j).unwrap();
+            assert_eq!(transport_name(cfg.transport), name);
+            let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.transport, cfg.transport);
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub use session::{
 };
 
 use crate::gwas::Cohort;
-use crate::net::{duplex_pair, tcp_pair, ByteMeter};
+use crate::net::{duplex_pair, tcp_pair, tcp_stream_pair, ByteMeter, MuxOptions, Reactor};
 use crate::runtime::{EngineOptions, KernelMeter};
 use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
 
@@ -43,7 +43,11 @@ use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transport {
     InProc,
+    /// localhost TCP, one blocking pump thread per shared connection
     Tcp,
+    /// localhost TCP driven by one epoll readiness thread for every
+    /// connection ([`crate::net::Reactor`]); linux only
+    Reactor,
 }
 
 /// Result of [`run_multi_party_scan`].
@@ -77,6 +81,9 @@ pub fn run_multi_party_scan_t(
     transport: Transport,
     seed: u64,
 ) -> anyhow::Result<MultiPartyScanResult> {
+    if transport == Transport::Reactor {
+        return run_multi_party_scan_reactor(cohort, cfg, seed);
+    }
     let parties = cohort.parties.len();
     let k = cohort.k();
     let m = cohort.m();
@@ -90,6 +97,7 @@ pub fn run_multi_party_scan_t(
         let (l, p) = match transport {
             Transport::InProc => duplex_pair(meter.clone()),
             Transport::Tcp => tcp_pair(meter.clone())?,
+            Transport::Reactor => unreachable!("dispatched above"),
         };
         leader_eps.push(l);
         party_eps.push(p);
@@ -137,6 +145,122 @@ pub fn run_multi_party_scan_t(
             out
         },
     )?;
+
+    Ok(MultiPartyScanResult {
+        output: output.0,
+        select: output.1,
+        metrics: output.2,
+        party_bytes: meters.iter().map(|m| m.bytes()).collect(),
+        party_kernels: kernel_meters,
+    })
+}
+
+/// Reactor deployment of the classic scan: one epoll readiness thread
+/// drives every party's connection, the protocol running as session 0
+/// of a driven [`crate::net::SessionMux`] pair per party — the
+/// unchanged leader and party state machines over
+/// [`crate::net::SessionChannel`]s. Frames gain the 12-byte v2 session
+/// envelope, so byte totals sit above the dedicated-connection runs by
+/// exactly `frames × FRAME_V2_OVERHEAD` plus the teardown handshake.
+fn run_multi_party_scan_reactor(
+    cohort: &Cohort,
+    cfg: &ScanConfig,
+    seed: u64,
+) -> anyhow::Result<MultiPartyScanResult> {
+    let parties = cohort.parties.len();
+    let k = cohort.k();
+    let m = cohort.m();
+    let t = cohort.t();
+
+    let reactor = Reactor::new()?;
+    let mut leader_muxes = Vec::with_capacity(parties);
+    let mut party_muxes = Vec::with_capacity(parties);
+    let mut meters = Vec::with_capacity(parties);
+    for p in 0..parties {
+        let meter = ByteMeter::new();
+        let (ls, ps) = tcp_stream_pair()?;
+        // the connection meter lives on the leader-side handle: local
+        // sends plus decoded inbound frames count both directions once
+        leader_muxes.push(session::reactor_mux(
+            &reactor,
+            ls,
+            MuxOptions { accept: false, ..Default::default() },
+            meter.clone(),
+            p,
+            None,
+        )?);
+        party_muxes.push(session::reactor_mux(
+            &reactor,
+            ps,
+            MuxOptions { accept: true, ..Default::default() },
+            ByteMeter::new(),
+            p,
+            None,
+        )?);
+        meters.push(meter);
+    }
+    let mut leader_chs = Vec::with_capacity(parties);
+    for mux in &leader_muxes {
+        leader_chs.push(mux.open(0)?);
+    }
+
+    let cfg2 = cfg.clone();
+    let kernel_meters: Vec<KernelMeter> = (0..parties).map(|_| KernelMeter::new()).collect();
+    let output = std::thread::scope(
+        |s| -> anyhow::Result<(ScanOutput, Option<SelectOutput>, SessionMetrics)> {
+            let mut handles = Vec::with_capacity(parties);
+            for (idx, pmux) in party_muxes.iter().enumerate() {
+                let data = &cohort.parties[idx];
+                let cfg = &cfg2;
+                let kernel_meter = kernel_meters[idx].clone();
+                handles.push(s.spawn(move || -> anyhow::Result<PartyResult> {
+                    let compute = if cfg.use_artifacts {
+                        party::ComputeBackend::Artifacts(std::sync::Arc::new(
+                            crate::runtime::Engine::open(&EngineOptions {
+                                dir: cfg.artifacts_dir.clone(),
+                                exec: cfg.artifact_exec,
+                                policy: cfg.entry_policy(),
+                                meter: kernel_meter,
+                                threads: cfg.effective_compress_threads(),
+                            })?,
+                        ))
+                    } else {
+                        party::ComputeBackend::Rust {
+                            threads: cfg.effective_compress_threads(),
+                        }
+                    };
+                    let ch = pmux.accept()?.ok_or_else(|| {
+                        anyhow::anyhow!("connection shut down before the session arrived")
+                    })?;
+                    let res = party::serve(&ch, data, &compute);
+                    // orderly teardown: wait for the leader's shutdown,
+                    // then answer it
+                    while let Some(stale) = pmux.accept()? {
+                        drop(stale);
+                    }
+                    pmux.shutdown();
+                    pmux.join();
+                    res
+                }));
+            }
+            let leader = Leader { endpoints: &leader_chs, cfg: &cfg2, k, m, t, session: 0 };
+            let out = leader.run(seed);
+            for mux in leader_muxes.iter() {
+                mux.shutdown();
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let joined = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("party {i} thread panicked"))?;
+                joined.map_err(|e| anyhow::anyhow!("party {i}: {e:#}"))?;
+            }
+            for mux in leader_muxes.iter() {
+                mux.join();
+            }
+            out
+        },
+    )?;
+    reactor.shutdown();
 
     Ok(MultiPartyScanResult {
         output: output.0,

@@ -32,8 +32,9 @@ use super::leader::{Leader, SessionMetrics};
 use super::party::{self, ComputeBackend};
 use super::Transport;
 use crate::gwas::Cohort;
-use crate::net::chaos::{FaultSpec, FaultyTransport};
-use crate::net::{duplex_pair, tcp_pair, ByteMeter, MuxOptions, SessionMux, SessionTransport};
+use crate::net::chaos::{FaultSink, FaultSpec, FaultyTransport};
+use crate::net::{duplex_pair, tcp_pair, tcp_stream_pair, ByteMeter, FrameSink, MuxOptions,
+    Reactor, SessionMux, SessionTransport};
 use crate::runtime::{Engine, EngineOptions, KernelMeter};
 use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
 use crate::util::threadpool::parallel_map;
@@ -226,6 +227,30 @@ pub fn party_service(
     (served.load(Ordering::SeqCst), failed.load(Ordering::SeqCst))
 }
 
+/// Build a reactor-driven [`SessionMux`] over one raw TCP stream. The
+/// connection handle is the mux's send side (optionally wrapped in the
+/// fault injector), the mux's frame sink (optionally wrapped in the
+/// receive-side fault injector) is what the reactor pushes decoded
+/// frames into, and the inbox-backpressure resume hook is wired back to
+/// the connection so a drained session re-arms its reads.
+pub(crate) fn reactor_mux(
+    reactor: &Reactor,
+    stream: std::net::TcpStream,
+    opts: MuxOptions,
+    meter: ByteMeter,
+    party: usize,
+    fault: Option<FaultSpec>,
+) -> anyhow::Result<SessionMux> {
+    let handle = reactor.connect(stream, meter)?;
+    let raw = FaultyTransport::wrap_if(Box::new(handle.clone()), party, fault);
+    let (mux, sink) = SessionMux::driven(raw, opts);
+    let sink: Arc<dyn FrameSink> = FaultSink::wrap_if(sink, party, fault);
+    let resume = handle.clone();
+    mux.set_resume_hook(Box::new(move || resume.resume()));
+    handle.activate(sink)?;
+    Ok(mux)
+}
+
 /// Deployment knobs for [`run_session_batch`].
 #[derive(Clone, Debug)]
 pub struct BatchOptions {
@@ -290,26 +315,53 @@ pub fn run_session_batch(
     );
 
     // Shared connections: one byte-metered pair per party, the leader
-    // side optionally wrapped in the fault injector.
+    // side optionally wrapped in the fault injector. Reactor mode drives
+    // both ends of every pair from one readiness thread; the connection
+    // meter lives on the leader-side handle, where local sends plus
+    // decoded inbound frames cover both directions exactly once — the
+    // same total the pull-mode shared meter records at its two send
+    // sites.
+    let reactor = match opts.transport {
+        Transport::Reactor => Some(Reactor::new()?),
+        _ => None,
+    };
+    let l_opts = MuxOptions {
+        accept: false,
+        recv_timeout: opts.recv_timeout,
+        ..Default::default()
+    };
+    let p_opts = MuxOptions {
+        accept: true,
+        recv_timeout: opts.recv_timeout,
+        ..Default::default()
+    };
     let mut conn_meters = Vec::with_capacity(parties);
     let mut leader_muxes = Vec::with_capacity(parties);
     let mut party_muxes = Vec::with_capacity(parties);
     for p in 0..parties {
         let meter = ByteMeter::new();
-        let (l, pp) = match opts.transport {
-            Transport::InProc => duplex_pair(meter.clone()),
-            Transport::Tcp => tcp_pair(meter.clone())?,
-        };
-        let raw: Box<dyn SessionTransport> =
-            FaultyTransport::wrap_if(Box::new(l), p, opts.fault);
-        leader_muxes.push(SessionMux::new(
-            raw,
-            MuxOptions { accept: false, recv_timeout: opts.recv_timeout },
-        ));
-        party_muxes.push(SessionMux::over(
-            pp,
-            MuxOptions { accept: true, recv_timeout: opts.recv_timeout },
-        ));
+        match opts.transport {
+            Transport::Reactor => {
+                let r = reactor.as_ref().expect("reactor constructed above");
+                let (ls, ps) = tcp_stream_pair()?;
+                leader_muxes.push(reactor_mux(
+                    r, ls, l_opts.clone(), meter.clone(), p, opts.fault,
+                )?);
+                party_muxes.push(reactor_mux(
+                    r, ps, p_opts.clone(), ByteMeter::new(), p, None,
+                )?);
+            }
+            Transport::InProc | Transport::Tcp => {
+                let (l, pp) = match opts.transport {
+                    Transport::InProc => duplex_pair(meter.clone()),
+                    _ => tcp_pair(meter.clone())?,
+                };
+                let raw: Box<dyn SessionTransport> =
+                    FaultyTransport::wrap_if(Box::new(l), p, opts.fault);
+                leader_muxes.push(SessionMux::new(raw, l_opts.clone()));
+                party_muxes.push(SessionMux::over(pp, p_opts.clone()));
+            }
+        }
         conn_meters.push(meter);
     }
 
@@ -380,6 +432,11 @@ pub fn run_session_batch(
         }
         (runs, states, served, failed, residual)
     });
+    // every mux has completed its teardown handshake: stop the readiness
+    // loop and close the sockets it drove
+    if let Some(r) = &reactor {
+        r.shutdown();
+    }
     let wall_s = t0.elapsed().as_secs_f64();
 
     Ok(SessionBatchResult {

@@ -74,7 +74,7 @@ fn scan_command() -> Command {
         .opt("block-m", "256", "variant block width")
         .opt("shard-m", "0", "variant shard width for the streaming protocol (0 = single shot)")
         .opt("compress-threads", "0", "worker-thread budget for the tiled compress kernels, shared across concurrent sessions (0 = auto; bit-identical at any count)")
-        .opt("transport", "inproc", "inproc|tcp")
+        .opt("transport", "inproc", "inproc|tcp|reactor (reactor: one epoll readiness thread drives every connection)")
         .opt("sessions", "1", "multiplexed scan+SELECT sessions over shared per-party connections (1 = classic dedicated-connection run)")
         .opt("max-concurrent", "4", "bound on concurrently-running sessions (leader scheduler and party service pools)")
         .opt("report", "", "write a JSON report to this path")
@@ -118,7 +118,7 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     if compress_threads > 0 {
         cfg.scan.compress_threads = Some(compress_threads);
     }
-    cfg.transport_tcp = a.get("transport") == Some("tcp");
+    cfg.transport = dash::config::parse_transport(a.get("transport").unwrap())?;
     if a.flag("artifacts") {
         cfg.scan.use_artifacts = true;
         cfg.scan.artifacts_dir = a.get("artifacts-dir").unwrap().to_string();
@@ -158,7 +158,7 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         cfg.cohort.k_covariates()
     );
     let cohort = generate_cohort(&cfg.cohort, cfg.seed);
-    let transport = if cfg.transport_tcp { Transport::Tcp } else { Transport::InProc };
+    let transport = cfg.transport;
     eprintln!(
         "running scan: backend={} transport={:?} artifacts={}",
         cfg.scan.backend.name(),
@@ -296,7 +296,7 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
     use dash::coordinator::{run_session_batch, BatchOptions, SessionSpec};
 
     let cohort = generate_cohort(&cfg.cohort, cfg.seed);
-    let transport = if cfg.transport_tcp { Transport::Tcp } else { Transport::InProc };
+    let transport = cfg.transport;
     eprintln!(
         "running {} multiplexed sessions (max {} concurrent): backend={} transport={:?} \
          artifacts={}",
@@ -309,6 +309,7 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
     let specs: Vec<SessionSpec> = (0..cfg.sessions)
         .map(|i| SessionSpec { cfg: cfg.scan.clone(), seed: cfg.seed.wrapping_add(i as u64) })
         .collect();
+    let threads_before = dash::net::transport_driver_threads();
     let batch = run_session_batch(
         &cohort,
         &specs,
@@ -318,6 +319,7 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
             ..Default::default()
         },
     )?;
+    let driver_threads = dash::net::transport_driver_threads() - threads_before;
 
     println!("== dash scan --sessions ==");
     println!("parties           {}", cohort.parties.len());
@@ -352,6 +354,10 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
     println!("wall time         {}", human_secs(batch.wall_s));
     println!("throughput        {:.2} sessions/s", cfg.sessions as f64 / batch.wall_s);
     println!("shared-conn bytes {}", human_bytes(conn_total));
+    println!(
+        "transport threads {driver_threads} ({})",
+        dash::config::transport_name(transport)
+    );
     println!("party serve ok/err {} / {}", batch.served, batch.failed);
     if cfg.scan.use_artifacts {
         let lowered: u64 = batch.party_kernels.iter().map(|k| k.lowered_entries()).sum();
@@ -369,6 +375,7 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
             .set("wall_s", batch.wall_s)
             .set("sessions_per_s", cfg.sessions as f64 / batch.wall_s)
             .set("conn_bytes_total", conn_total)
+            .set("driver_threads", driver_threads)
             .set("served", batch.served)
             .set("failed", batch.failed);
         let rows: Vec<dash::util::json::Json> = batch

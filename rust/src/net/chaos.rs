@@ -15,9 +15,11 @@
 
 use super::frame::Frame;
 use super::meter::ByteMeter;
-use super::mux::{SessionTransport, SESSION_CTRL};
+use super::mux::{SessionTransport, TransportDead, SESSION_CTRL};
+use super::reactor::{FrameSink, SinkVerdict};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// What happens to the targeted frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +62,54 @@ pub struct FaultSpec {
     pub nth: u64,
 }
 
+/// Does this frame hit the fault trigger? `seen` counts that
+/// direction's frames of the targeted session.
+fn hits(spec: &FaultSpec, seen: &AtomicU64, sid: u64) -> bool {
+    if sid != spec.session || sid == SESSION_CTRL {
+        return false;
+    }
+    seen.fetch_add(1, Ordering::SeqCst) == spec.nth
+}
+
+/// Receive-direction fault logic, factored out of the pull-mode
+/// transport so the push-mode reactor path ([`FaultSink`]) applies the
+/// exact same perturbation: one incoming frame expands to zero, one, or
+/// two deliveries.
+pub struct RecvFilter {
+    spec: FaultSpec,
+    seen: AtomicU64,
+    /// held frame awaiting the targeted session's next frame (reorder)
+    held: Mutex<Option<(u64, Frame)>>,
+}
+
+impl RecvFilter {
+    pub fn new(spec: FaultSpec) -> RecvFilter {
+        RecvFilter { spec, seen: AtomicU64::new(0), held: Mutex::new(None) }
+    }
+
+    /// Perturb one incoming frame into its deliveries, in order.
+    pub fn apply(&self, sid: u64, f: Frame) -> Vec<(u64, Frame)> {
+        if hits(&self.spec, &self.seen, sid) {
+            return match self.spec.mode {
+                FaultMode::Drop => Vec::new(),
+                FaultMode::Duplicate => vec![(sid, f.clone()), (sid, f)],
+                FaultMode::Misroute { to } => vec![(to, f)],
+                FaultMode::Reorder => {
+                    *self.held.lock().unwrap() = Some((sid, f));
+                    Vec::new()
+                }
+            };
+        }
+        if sid == self.spec.session {
+            if let Some(h) = self.held.lock().unwrap().take() {
+                // deliver the later frame now, the held one next
+                return vec![(sid, f), h];
+            }
+        }
+        vec![(sid, f)]
+    }
+}
+
 /// A [`SessionTransport`] that injects exactly one fault.
 pub struct FaultyTransport {
     inner: Box<dyn SessionTransport>,
@@ -67,8 +117,10 @@ pub struct FaultyTransport {
     seen: AtomicU64,
     /// held frame awaiting the next send (send-side reorder)
     held: Mutex<Option<(u64, Frame)>>,
-    /// frame queued for redelivery (recv-side duplicate/reorder)
-    pending: Mutex<Option<(u64, Frame)>>,
+    /// recv-side perturbation (consulted only for `FaultDir::Recv`)
+    filter: RecvFilter,
+    /// deliveries queued by the recv filter, drained in order
+    pending: Mutex<VecDeque<(u64, Frame)>>,
 }
 
 impl FaultyTransport {
@@ -78,7 +130,8 @@ impl FaultyTransport {
             spec,
             seen: AtomicU64::new(0),
             held: Mutex::new(None),
-            pending: Mutex::new(None),
+            filter: RecvFilter::new(spec),
+            pending: Mutex::new(VecDeque::new()),
         }
     }
 
@@ -95,13 +148,6 @@ impl FaultyTransport {
         }
     }
 
-    /// Does this frame hit the fault trigger?
-    fn triggers(&self, sid: u64) -> bool {
-        if sid != self.spec.session || sid == SESSION_CTRL {
-            return false;
-        }
-        self.seen.fetch_add(1, Ordering::SeqCst) == self.spec.nth
-    }
 }
 
 impl SessionTransport for FaultyTransport {
@@ -109,7 +155,7 @@ impl SessionTransport for FaultyTransport {
         if self.spec.dir != FaultDir::Send {
             return self.inner.send_s(sid, f);
         }
-        if self.triggers(sid) {
+        if hits(&self.spec, &self.seen, sid) {
             return match self.spec.mode {
                 FaultMode::Drop => Ok(0),
                 FaultMode::Duplicate => {
@@ -140,40 +186,81 @@ impl SessionTransport for FaultyTransport {
         if self.spec.dir != FaultDir::Recv {
             return self.inner.recv_s();
         }
-        if let Some(x) = self.pending.lock().unwrap().take() {
-            return Ok(x);
-        }
         loop {
+            if let Some(x) = self.pending.lock().unwrap().pop_front() {
+                return Ok(x);
+            }
             let (sid, f) = self.inner.recv_s()?;
-            if self.triggers(sid) {
-                match self.spec.mode {
-                    FaultMode::Drop => continue,
-                    FaultMode::Duplicate => {
-                        *self.pending.lock().unwrap() = Some((sid, f.clone()));
-                        return Ok((sid, f));
-                    }
-                    FaultMode::Misroute { to } => return Ok((to, f)),
-                    FaultMode::Reorder => {
-                        // hold until the targeted session's next frame
-                        *self.held.lock().unwrap() = Some((sid, f));
-                        continue;
-                    }
-                }
-            }
-            if sid == self.spec.session {
-                let held = self.held.lock().unwrap().take();
-                if let Some(h) = held {
-                    // deliver the later frame now, the held one next
-                    *self.pending.lock().unwrap() = Some(h);
-                    return Ok((sid, f));
-                }
-            }
-            return Ok((sid, f));
+            let out = self.filter.apply(sid, f);
+            self.pending.lock().unwrap().extend(out);
         }
     }
 
     fn meter(&self) -> &ByteMeter {
         self.inner.meter()
+    }
+}
+
+/// Receive-side fault injection for the reactor drive mode: sits
+/// between the reactor and a [`crate::net::MuxSink`], expanding each
+/// pushed frame through the same [`RecvFilter`] the pull-mode
+/// [`FaultyTransport`] uses — both drive modes perturb identically.
+/// Inbox-full backpressure composes: refused deliveries queue here and
+/// replay (in order) when the reactor retries after resume.
+pub struct FaultSink {
+    filter: RecvFilter,
+    inner: Arc<dyn FrameSink>,
+    pending: Mutex<VecDeque<(u64, Frame)>>,
+}
+
+impl FaultSink {
+    pub fn new(spec: FaultSpec, inner: Arc<dyn FrameSink>) -> FaultSink {
+        FaultSink {
+            filter: RecvFilter::new(spec),
+            inner,
+            pending: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Wrap a sink only if the spec targets this party's receive
+    /// direction; otherwise pass it through untouched.
+    pub fn wrap_if(
+        inner: Arc<dyn FrameSink>,
+        party: usize,
+        spec: Option<FaultSpec>,
+    ) -> Arc<dyn FrameSink> {
+        match spec {
+            Some(s) if s.party == party && s.dir == FaultDir::Recv => {
+                Arc::new(FaultSink::new(s, inner))
+            }
+            _ => inner,
+        }
+    }
+}
+
+impl FrameSink for FaultSink {
+    fn on_frame(&self, sid: u64, f: Frame) -> SinkVerdict {
+        let mut pend = self.pending.lock().unwrap();
+        if pend.is_empty() {
+            pend.extend(self.filter.apply(sid, f));
+        }
+        // non-empty pending means this call is the reactor retrying a
+        // refused delivery: the argument is the placeholder returned
+        // below and the real frames replay from the queue
+        while let Some((s, g)) = pend.pop_front() {
+            match self.inner.on_frame(s, g) {
+                SinkVerdict::Accepted => {}
+                SinkVerdict::Full(back) => {
+                    pend.push_front((s, back));
+                    return SinkVerdict::Full(Frame::new(0));
+                }
+            }
+        }
+        SinkVerdict::Accepted
+    }
+
+    fn on_dead(&self, dead: TransportDead) {
+        self.inner.on_dead(dead);
     }
 }
 

@@ -226,6 +226,77 @@ impl<R: Read> FrameReader<R> {
     }
 }
 
+/// Incremental, non-blocking frame decoder: feed it byte chunks as they
+/// arrive ([`FrameDecoder::push`]) and pull complete frames out
+/// ([`FrameDecoder::next_frame`]). Decoding mirrors
+/// [`FrameReader::read_any`] exactly — v2 magic sniff, v1 fallback to
+/// session 0, the same frame-length cap — but never blocks: a partial
+/// frame yields `Ok(None)` until more bytes arrive, so a readiness-driven
+/// reactor can hand it whatever the socket had and move on. The internal
+/// reassembly buffer is owned per connection and reused across frames.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder { buf: Vec::new() }
+    }
+
+    /// Append freshly-read bytes to the reassembly buffer.
+    pub fn push(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet decoded. Nonzero at EOF means the
+    /// stream was cut mid-frame.
+    pub fn buffered_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn word(&self, off: usize) -> u32 {
+        u32::from_le_bytes(self.buf[off..off + 4].try_into().unwrap())
+    }
+
+    fn long(&self, off: usize) -> u64 {
+        u64::from_le_bytes(self.buf[off..off + 8].try_into().unwrap())
+    }
+
+    /// Try to decode the next complete frame. `Ok(None)` means "need
+    /// more bytes"; `Err` means the stream is corrupt (implausible frame
+    /// length) and the connection must be failed.
+    pub fn next_frame(&mut self) -> anyhow::Result<Option<(u64, Frame)>> {
+        let avail = self.buf.len();
+        if avail < 4 {
+            return Ok(None);
+        }
+        // header layout after the sniffed first word: v2 is
+        // [magic][sid u64][tag u32][len u64], v1 is [tag u32][len u64]
+        let (hdr, sid, tag) = if self.word(0) == FRAME_V2_MAGIC {
+            if avail < 24 {
+                return Ok(None);
+            }
+            (24usize, self.long(4), self.word(12))
+        } else {
+            if avail < 12 {
+                return Ok(None);
+            }
+            (12usize, 0u64, self.word(0))
+        };
+        let len = if hdr == 24 { self.long(16) } else { self.long(4) };
+        anyhow::ensure!(len <= 1 << 32, "frame too large: {len} bytes");
+        let total = hdr + len as usize;
+        if avail < total {
+            return Ok(None);
+        }
+        let payload = self.buf[hdr..total].to_vec();
+        let f = Frame { tag, payload };
+        self.buf.drain(..total);
+        Ok(Some((sid, f)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,5 +442,70 @@ mod tests {
         buf.truncate(buf.len() - 3);
         let mut r = FrameReader::new(buf.as_slice());
         assert!(r.read().is_err());
+    }
+
+    #[test]
+    fn incremental_decoder_matches_read_any_byte_at_a_time() {
+        // a mixed v1/v2 stream fed one byte at a time must decode to the
+        // exact frames read_any sees on the whole buffer
+        let mut buf = Vec::new();
+        {
+            let mut w = FrameWriter::new(&mut buf);
+            let mut f1 = Frame::new(3);
+            f1.put_u64(1);
+            w.write(&f1).unwrap();
+            let mut f2 = Frame::new(4);
+            f2.put_f64_slice(&[1.5, -2.5]);
+            w.write_v2(42, &f2).unwrap();
+            w.write(&Frame::new(5)).unwrap();
+        }
+        let mut want = Vec::new();
+        let mut r = FrameReader::new(buf.as_slice());
+        for _ in 0..3 {
+            want.push(r.read_any().unwrap());
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in &buf {
+            dec.push(std::slice::from_ref(b));
+            while let Some(sf) = dec.next_frame().unwrap() {
+                got.push(sf);
+            }
+        }
+        assert_eq!(got, want);
+        assert_eq!(dec.buffered_len(), 0);
+    }
+
+    #[test]
+    fn incremental_decoder_reports_partial_frames() {
+        let mut buf = Vec::new();
+        let mut f = Frame::new(9);
+        f.put_u64_slice(&[7, 8]);
+        FrameWriter::new(&mut buf).write_v2(5, &f).unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.push(&buf[..buf.len() - 1]);
+        assert!(dec.next_frame().unwrap().is_none());
+        assert_eq!(dec.buffered_len(), buf.len() - 1);
+        dec.push(&buf[buf.len() - 1..]);
+        let (sid, g) = dec.next_frame().unwrap().unwrap();
+        assert_eq!((sid, g), (5, f));
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_implausible_length() {
+        // corrupt length word in both framings → clean Err, not an
+        // unbounded allocation or a hang
+        let mut v1 = 1u32.to_le_bytes().to_vec();
+        v1.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&v1);
+        assert!(dec.next_frame().is_err());
+        let mut v2 = FRAME_V2_MAGIC.to_le_bytes().to_vec();
+        v2.extend_from_slice(&7u64.to_le_bytes());
+        v2.extend_from_slice(&1u32.to_le_bytes());
+        v2.extend_from_slice(&((1u64 << 32) + 1).to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&v2);
+        assert!(dec.next_frame().is_err());
     }
 }

@@ -23,13 +23,34 @@ pub mod chaos;
 mod codec;
 mod frame;
 pub mod mux;
+pub mod reactor;
 mod transport;
 mod meter;
 
 pub use codec::{Codec, FieldSink, FieldSource, WireMessage};
-pub use frame::{Frame, FrameReader, FrameWriter, PayloadReader, FRAME_V2_MAGIC,
-    FRAME_V2_OVERHEAD};
+pub use frame::{Frame, FrameDecoder, FrameReader, FrameWriter, PayloadReader,
+    FRAME_V2_MAGIC, FRAME_V2_OVERHEAD};
 pub use meter::ByteMeter;
-pub use mux::{MuxOptions, SessionChannel, SessionMux, SessionTransport, SESSION_CTRL,
-    TAG_MUX_SHUTDOWN};
-pub use transport::{duplex_pair, tcp_pair, Channel, Endpoint};
+pub use mux::{MuxOptions, MuxSink, SessionChannel, SessionMux, SessionTransport,
+    TransportDead, SESSION_CTRL, TAG_MUX_SHUTDOWN};
+pub use reactor::{ConnHandle, FrameSink, Reactor, SinkVerdict};
+pub use transport::{duplex_pair, tcp_pair, tcp_stream_pair, Channel, Endpoint};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Transport driver threads spawned so far in this process: one per
+/// pump-mode [`SessionMux`], one per [`Reactor`]. Monotonic — benches
+/// and tests read deltas to prove the reactor drives any number of
+/// connections with O(1) threads where the threaded pump needs one
+/// each.
+static DRIVER_THREADS: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn note_driver_thread() {
+    DRIVER_THREADS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Cumulative count of transport driver threads spawned by this
+/// process.
+pub fn transport_driver_threads() -> u64 {
+    DRIVER_THREADS.load(Ordering::Relaxed)
+}

@@ -36,10 +36,36 @@
 
 use super::frame::Frame;
 use super::meter::ByteMeter;
+use super::reactor::{FrameSink, SinkVerdict};
 use super::transport::{Channel, Endpoint};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// Why a connection's frame driver (pump thread or reactor) stopped
+/// routing — the typed replacement for the old free-form poison string,
+/// so callers can distinguish a peer vanishing from local I/O failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportDead {
+    /// The peer hung up without the orderly shutdown handshake.
+    PeerHangup,
+    /// The byte stream ended in the middle of a frame.
+    TruncatedFrame,
+    /// The raw transport failed with an I/O or decode error.
+    Io(String),
+}
+
+impl std::fmt::Display for TransportDead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportDead::PeerHangup => write!(f, "peer hung up"),
+            TransportDead::TruncatedFrame => write!(f, "stream truncated mid-frame"),
+            TransportDead::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportDead {}
 
 /// Reserved session id for mux control frames (never a protocol
 /// session).
@@ -82,11 +108,19 @@ pub struct MuxOptions {
     /// `None` blocks indefinitely (only safe when the peer is trusted to
     /// always answer or shut down).
     pub recv_timeout: Option<Duration>,
+    /// Bound on each session's inbox (frames). A full inbox exerts
+    /// backpressure on the shared connection: the pump blocks, the
+    /// reactor parks the frame and pauses that connection's reads.
+    pub queue_cap: usize,
 }
 
 impl Default for MuxOptions {
     fn default() -> Self {
-        MuxOptions { accept: false, recv_timeout: Some(Duration::from_secs(30)) }
+        MuxOptions {
+            accept: false,
+            recv_timeout: Some(Duration::from_secs(30)),
+            queue_cap: 256,
+        }
     }
 }
 
@@ -97,10 +131,22 @@ struct MuxState {
     pending: VecDeque<u64>,
     /// peer sent its shutdown control frame
     closed: bool,
-    /// pump died on a transport error
-    poisoned: Option<String>,
+    /// frame driver (pump or reactor) died on a transport error
+    poisoned: Option<TransportDead>,
     /// frames for unknown/closed sessions, counted and dropped
     dropped: u64,
+    /// session whose full inbox is holding a frame back at the driver
+    stalled: Option<u64>,
+}
+
+/// Outcome of offering one incoming frame to the routing core.
+enum Routed {
+    /// Consumed: queued, dropped-and-counted, or accepted-session setup.
+    Done,
+    /// The peer's orderly shutdown control frame arrived.
+    Shutdown,
+    /// The target session's inbox is at capacity; the frame comes back.
+    Full(Frame),
 }
 
 struct MuxCore {
@@ -108,39 +154,98 @@ struct MuxCore {
     state: Mutex<MuxState>,
     cv: Condvar,
     opts: MuxOptions,
+    /// reactor-mode hook: called (lock released) when a stalled
+    /// session's inbox drains so the reactor retries the parked frame
+    resume: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
 }
 
 impl MuxCore {
-    /// Pump loop: route every incoming frame to its session queue.
+    /// Offer one incoming frame to the per-session queues. Shared by
+    /// the pump thread and the reactor sink so both drive modes route
+    /// identically.
+    fn try_route(&self, sid: u64, f: Frame) -> Routed {
+        let mut st = self.state.lock().unwrap();
+        if sid == SESSION_CTRL {
+            if f.tag == TAG_MUX_SHUTDOWN {
+                st.closed = true;
+                self.cv.notify_all();
+                return Routed::Shutdown;
+            }
+            st.dropped += 1;
+        } else if let Some(q) = st.queues.get_mut(&sid) {
+            if q.len() >= self.opts.queue_cap {
+                st.stalled = Some(sid);
+                return Routed::Full(f);
+            }
+            q.push_back(f);
+            self.cv.notify_all();
+        } else if self.opts.accept {
+            let mut q = VecDeque::new();
+            q.push_back(f);
+            st.queues.insert(sid, q);
+            st.pending.push_back(sid);
+            self.cv.notify_all();
+        } else {
+            st.dropped += 1;
+        }
+        Routed::Done
+    }
+
+    fn fail(&self, dead: TransportDead) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.poisoned.is_some() {
+            return;
+        }
+        st.poisoned = Some(dead);
+        self.cv.notify_all();
+    }
+
+    /// A pop made room in `sid`'s inbox: wake a blocked pump and, if
+    /// the frame driver parked a frame for this session, fire the
+    /// reactor resume hook (outside the state lock).
+    fn unstall(&self, sid: u64, st: std::sync::MutexGuard<'_, MuxState>) {
+        let mut st = st;
+        if st.stalled != Some(sid) {
+            return;
+        }
+        st.stalled = None;
+        self.cv.notify_all();
+        drop(st);
+        if let Some(hook) = self.resume.lock().unwrap().as_ref() {
+            hook();
+        }
+    }
+
+    /// Pump loop: route every incoming frame to its session queue,
+    /// blocking (TCP backpressure) while a target inbox is full.
     fn pump(&self) {
         loop {
             match self.raw.recv_s() {
                 Ok((sid, f)) => {
-                    let mut st = self.state.lock().unwrap();
-                    if sid == SESSION_CTRL {
-                        if f.tag == TAG_MUX_SHUTDOWN {
-                            st.closed = true;
-                            self.cv.notify_all();
-                            return;
+                    let mut f = f;
+                    loop {
+                        match self.try_route(sid, f) {
+                            Routed::Done => break,
+                            Routed::Shutdown => return,
+                            Routed::Full(back) => {
+                                f = back;
+                                let mut st = self.state.lock().unwrap();
+                                loop {
+                                    if st.closed {
+                                        return;
+                                    }
+                                    match st.queues.get(&sid) {
+                                        None => break,
+                                        Some(q) if q.len() < self.opts.queue_cap => break,
+                                        Some(_) => st = self.cv.wait(st).unwrap(),
+                                    }
+                                }
+                            }
                         }
-                        st.dropped += 1;
-                    } else if let Some(q) = st.queues.get_mut(&sid) {
-                        q.push_back(f);
-                        self.cv.notify_all();
-                    } else if self.opts.accept {
-                        let mut q = VecDeque::new();
-                        q.push_back(f);
-                        st.queues.insert(sid, q);
-                        st.pending.push_back(sid);
-                        self.cv.notify_all();
-                    } else {
-                        st.dropped += 1;
                     }
                 }
                 Err(e) => {
-                    let mut st = self.state.lock().unwrap();
-                    st.poisoned = Some(format!("{e:#}"));
-                    self.cv.notify_all();
+                    self.fail(TransportDead::Io(format!("{e:#}")));
                     return;
                 }
             }
@@ -157,6 +262,7 @@ impl MuxCore {
             match st.queues.get_mut(&sid) {
                 Some(q) => {
                     if let Some(f) = q.pop_front() {
+                        self.unstall(sid, st);
                         return Ok(f);
                     }
                 }
@@ -187,6 +293,27 @@ impl MuxCore {
     }
 }
 
+/// Push side of a reactor-driven mux: the reactor (or a fault-injecting
+/// wrapper) delivers decoded frames here instead of a pump pulling them.
+pub struct MuxSink {
+    core: Arc<MuxCore>,
+}
+
+impl FrameSink for MuxSink {
+    fn on_frame(&self, sid: u64, f: Frame) -> SinkVerdict {
+        match self.core.try_route(sid, f) {
+            // shutdown just marks the mux closed; the reactor keeps the
+            // connection until the whole loop stops
+            Routed::Done | Routed::Shutdown => SinkVerdict::Accepted,
+            Routed::Full(back) => SinkVerdict::Full(back),
+        }
+    }
+
+    fn on_dead(&self, dead: TransportDead) {
+        self.core.fail(dead);
+    }
+}
+
 /// One shared connection carrying many interleaved sessions.
 pub struct SessionMux {
     core: Arc<MuxCore>,
@@ -194,9 +321,8 @@ pub struct SessionMux {
 }
 
 impl SessionMux {
-    /// Wrap a raw transport and start the routing pump.
-    pub fn new(raw: Box<dyn SessionTransport>, opts: MuxOptions) -> SessionMux {
-        let core = Arc::new(MuxCore {
+    fn core_for(raw: Box<dyn SessionTransport>, opts: MuxOptions) -> Arc<MuxCore> {
+        Arc::new(MuxCore {
             raw,
             state: Mutex::new(MuxState {
                 queues: BTreeMap::new(),
@@ -204,13 +330,38 @@ impl SessionMux {
                 closed: false,
                 poisoned: None,
                 dropped: 0,
+                stalled: None,
             }),
             cv: Condvar::new(),
             opts,
-        });
+            resume: Mutex::new(None),
+        })
+    }
+
+    /// Wrap a raw transport and start the routing pump (threaded drive
+    /// mode: one blocking thread per shared connection).
+    pub fn new(raw: Box<dyn SessionTransport>, opts: MuxOptions) -> SessionMux {
+        let core = SessionMux::core_for(raw, opts);
         let pump_core = Arc::clone(&core);
+        crate::net::note_driver_thread();
         let pump = std::thread::spawn(move || pump_core.pump());
         SessionMux { core, pump: Mutex::new(Some(pump)) }
+    }
+
+    /// Reactor drive mode: no pump thread — the returned [`MuxSink`] is
+    /// handed to the reactor, which pushes decoded frames in. `send` is
+    /// the send-only half (a reactor connection handle, optionally
+    /// fault-wrapped); its `recv_s` is never called.
+    pub fn driven(send: Box<dyn SessionTransport>, opts: MuxOptions) -> (SessionMux, Arc<MuxSink>) {
+        let core = SessionMux::core_for(send, opts);
+        let sink = Arc::new(MuxSink { core: Arc::clone(&core) });
+        (SessionMux { core, pump: Mutex::new(None) }, sink)
+    }
+
+    /// Wire the reactor's backpressure-release callback (reactor drive
+    /// mode only): invoked when a stalled session's inbox drains.
+    pub fn set_resume_hook(&self, hook: Box<dyn Fn() + Send + Sync>) {
+        *self.core.resume.lock().unwrap() = Some(hook);
     }
 
     /// Convenience for the common case: mux over an [`Endpoint`].
@@ -261,6 +412,9 @@ impl SessionMux {
     pub fn close(&self, sid: u64) {
         let mut st = self.core.state.lock().unwrap();
         st.queues.remove(&sid);
+        // a frame driver stalled on this session's full inbox must not
+        // wait forever for a consumer that just left
+        self.core.unstall(sid, st);
     }
 
     /// Announce orderly shutdown to the peer (its pump exits once every
@@ -270,12 +424,19 @@ impl SessionMux {
         let _ = self.core.raw.send_s(SESSION_CTRL, &Frame::new(TAG_MUX_SHUTDOWN));
     }
 
-    /// Wait for the routing pump to exit (after the *peer's* shutdown
-    /// frame arrived or the connection died).
+    /// Wait for frame delivery to stop: the pump thread to exit
+    /// (threaded mode) or the peer's shutdown / connection death to be
+    /// routed (reactor mode — the reactor thread itself lives on,
+    /// driving other connections).
     pub fn join(&self) {
         let handle = self.pump.lock().unwrap().take();
         if let Some(h) = handle {
             let _ = h.join();
+            return;
+        }
+        let mut st = self.core.state.lock().unwrap();
+        while !st.closed && st.poisoned.is_none() {
+            st = self.core.cv.wait(st).unwrap();
         }
     }
 
@@ -433,6 +594,7 @@ mod tests {
             MuxOptions {
                 accept: false,
                 recv_timeout: Some(Duration::from_millis(50)),
+                ..Default::default()
             },
         );
         let party = SessionMux::over(p, MuxOptions { accept: true, ..Default::default() });
@@ -449,6 +611,44 @@ mod tests {
         leader.close(1);
         assert!(a.recv().is_err());
         assert!(leader.open(u64::MAX).is_err());
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn driver_death_is_a_typed_error() {
+        // drop the party side entirely: the leader's pump dies on the
+        // broken transport and waiting sessions get the typed poison,
+        // not a hang or a generic string
+        let (l, p) = duplex_pair(ByteMeter::new());
+        let leader = SessionMux::over(l, MuxOptions { accept: false, ..Default::default() });
+        let a = leader.open(1).unwrap();
+        drop(p);
+        let err = a.recv().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("connection failed"), "{msg}");
+        // the driver has stopped: join returns promptly
+        leader.join();
+    }
+
+    #[test]
+    fn bounded_inbox_blocks_pump_without_losing_frames() {
+        let (l, p) = duplex_pair(ByteMeter::new());
+        let leader = SessionMux::over(l, MuxOptions { accept: false, ..Default::default() });
+        let party = SessionMux::over(
+            p,
+            MuxOptions { accept: true, queue_cap: 2, ..Default::default() },
+        );
+        let a = leader.open(1).unwrap();
+        // 12 frames against a 2-frame inbox: the pump must backpressure
+        // (block on the raw transport), never drop or reorder
+        for i in 0..12u64 {
+            a.send(&frame(1, i)).unwrap();
+        }
+        let pa = party.accept().unwrap().unwrap();
+        for i in 0..12u64 {
+            assert_eq!(pa.recv().unwrap().reader().u64().unwrap(), i);
+        }
+        assert_eq!(party.dropped_frames(), 0);
         finish(&leader, &party);
     }
 

@@ -1,0 +1,701 @@
+//! Readiness-driven reactor transport: one thread, thousands of
+//! connections.
+//!
+//! The threaded mux burns one blocking pump thread per shared connection
+//! ([`crate::net::mux::SessionMux::new`]); a party service built on it
+//! tops out at hundreds of peers. The [`Reactor`] replaces the pumps
+//! with a single epoll-backed readiness loop: every registered
+//! connection is non-blocking, incoming bytes feed a per-connection
+//! incremental [`FrameDecoder`], and each decoded frame is pushed into a
+//! [`FrameSink`] (a reactor-driven [`crate::net::mux::SessionMux`], or a
+//! fault-injecting wrapper from `net::chaos`). The epoll interface is
+//! hand-rolled over the libc syscall surface — no new dependency,
+//! matching the repo's hermetic-build stance.
+//!
+//! ## Flow control
+//!
+//! A sink may refuse a frame ([`SinkVerdict::Full`]) when its bounded
+//! per-session inbox is at capacity. The reactor then parks the frame,
+//! disarms read interest for that connection (so TCP backpressure
+//! reaches the peer) and leaves any undecoded bytes in the decoder;
+//! when the consumer drains the inbox, the mux's resume hook calls
+//! [`ConnHandle::resume`] and the reactor retries the parked frame
+//! before re-arming reads. A full session therefore stalls only its own
+//! connection — never the readiness loop.
+//!
+//! ## Write coalescing
+//!
+//! Senders never touch the socket: [`ConnHandle::send_s`] encodes the
+//! v2 frame straight into a shared per-connection outbound buffer and
+//! wakes the reactor only on the empty→non-empty edge. The reactor
+//! flushes the whole buffer with single large `write` calls, so bursts
+//! of tiny frames (SELECT rounds are O(lanes·H) small frames) coalesce
+//! into a handful of syscalls instead of one per frame. `EPOLLOUT` is
+//! armed only while the socket pushes back.
+
+use super::frame::{Frame, FrameWriter};
+use super::meter::ByteMeter;
+use super::mux::{SessionTransport, TransportDead};
+use std::sync::{Arc, Mutex};
+
+/// Verdict a [`FrameSink`] returns for one delivered frame.
+pub enum SinkVerdict {
+    /// Frame consumed (routed, dropped-and-counted, or control-handled).
+    Accepted,
+    /// The consumer's bounded queue is full: the frame comes back to the
+    /// reactor, which parks it and pauses reads until `resume`.
+    Full(Frame),
+}
+
+/// Consumer side of a reactor connection: decoded frames are pushed in
+/// on the reactor thread.
+pub trait FrameSink: Send + Sync {
+    /// Deliver one decoded frame (session id from the v2 envelope; v1
+    /// frames fall back to session 0).
+    fn on_frame(&self, sid: u64, f: Frame) -> SinkVerdict;
+    /// The connection stopped delivering: clean EOF surfaces as
+    /// [`TransportDead::PeerHangup`], a mid-frame cut as
+    /// [`TransportDead::TruncatedFrame`]. A sink that already saw the
+    /// orderly shutdown handshake ignores this.
+    fn on_dead(&self, dead: TransportDead);
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::{ConnHandle, Reactor};
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::*;
+    use std::collections::HashMap;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    mod sys {
+        pub const EPOLL_CTL_ADD: i32 = 1;
+        pub const EPOLL_CTL_DEL: i32 = 2;
+        pub const EPOLL_CTL_MOD: i32 = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+        pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+        pub const EFD_CLOEXEC: i32 = 0o2000000;
+
+        /// Kernel epoll_event layout; packed on x86 so the 64-bit data
+        /// word sits directly after the 32-bit event mask.
+        #[repr(C)]
+        #[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: i32) -> i32;
+            pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, ev: *mut EpollEvent) -> i32;
+            pub fn epoll_wait(
+                epfd: i32,
+                evs: *mut EpollEvent,
+                maxevents: i32,
+                timeout_ms: i32,
+            ) -> i32;
+            pub fn eventfd(initval: u32, flags: i32) -> i32;
+            pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+            pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+            pub fn close(fd: i32) -> i32;
+        }
+    }
+
+    /// Token the wakeup eventfd carries in `epoll_event.data`.
+    const WAKE: u64 = u64::MAX;
+
+    /// Per-connection shared outbound buffer (coalesced writes).
+    struct OutBuf {
+        bytes: Mutex<Vec<u8>>,
+    }
+
+    enum Cmd {
+        Register(u64, TcpStream, Arc<dyn FrameSink>, Arc<OutBuf>, ByteMeter),
+        Flush(u64),
+        Resume(u64),
+    }
+
+    struct Inner {
+        epfd: i32,
+        wakefd: i32,
+        cmds: Mutex<Vec<Cmd>>,
+        next_token: AtomicU64,
+        stop: AtomicBool,
+    }
+
+    impl Inner {
+        fn push(&self, cmd: Cmd) {
+            self.cmds.lock().unwrap().push(cmd);
+            self.wake();
+        }
+
+        fn wake(&self) {
+            let one = 1u64.to_ne_bytes();
+            // best-effort: a full eventfd counter still wakes the loop
+            unsafe { sys::write(self.wakefd, one.as_ptr(), one.len()) };
+        }
+    }
+
+    impl Drop for Inner {
+        fn drop(&mut self) {
+            unsafe {
+                sys::close(self.epfd);
+                sys::close(self.wakefd);
+            }
+        }
+    }
+
+    /// Reactor-thread-local state of one registered connection.
+    struct Conn {
+        stream: TcpStream,
+        decoder: crate::net::FrameDecoder,
+        sink: Arc<dyn FrameSink>,
+        out: Arc<OutBuf>,
+        meter: ByteMeter,
+        /// frame the sink refused; retried on resume before re-arming reads
+        parked: Option<(u64, Frame)>,
+        paused: bool,
+        want_write: bool,
+    }
+
+    enum Fate {
+        Keep,
+        Dead,
+    }
+
+    /// One readiness loop driving every registered connection.
+    pub struct Reactor {
+        inner: Arc<Inner>,
+        thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    }
+
+    impl Reactor {
+        /// Create the epoll instance and spawn the (single) driver
+        /// thread.
+        pub fn new() -> anyhow::Result<Reactor> {
+            let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            anyhow::ensure!(epfd >= 0, "epoll_create1 failed: {}", errno());
+            let wakefd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC) };
+            if wakefd < 0 {
+                let e = errno();
+                unsafe { sys::close(epfd) };
+                anyhow::bail!("eventfd failed: {e}");
+            }
+            let mut ev = sys::EpollEvent { events: sys::EPOLLIN, data: WAKE };
+            let rc = unsafe { sys::epoll_ctl(epfd, sys::EPOLL_CTL_ADD, wakefd, &mut ev) };
+            if rc != 0 {
+                let e = errno();
+                unsafe {
+                    sys::close(epfd);
+                    sys::close(wakefd);
+                }
+                anyhow::bail!("epoll_ctl(wakefd) failed: {e}");
+            }
+            let inner = Arc::new(Inner {
+                epfd,
+                wakefd,
+                cmds: Mutex::new(Vec::new()),
+                next_token: AtomicU64::new(0),
+                stop: AtomicBool::new(false),
+            });
+            let loop_inner = Arc::clone(&inner);
+            crate::net::note_driver_thread();
+            let thread = std::thread::spawn(move || run_loop(&loop_inner));
+            Ok(Reactor { inner, thread: Mutex::new(Some(thread)) })
+        }
+
+        /// Stage a connection: the returned handle sends immediately
+        /// (bytes buffer until the reactor picks the connection up), but
+        /// reads are armed only once [`ConnHandle::activate`] attaches
+        /// the frame sink — the sink usually needs the handle first.
+        pub fn connect(&self, stream: TcpStream, meter: ByteMeter) -> anyhow::Result<ConnHandle> {
+            stream.set_nonblocking(true)?;
+            stream.set_nodelay(true)?;
+            let token = self.inner.next_token.fetch_add(1, Ordering::Relaxed);
+            Ok(ConnHandle {
+                token,
+                inner: Arc::clone(&self.inner),
+                out: Arc::new(OutBuf { bytes: Mutex::new(Vec::new()) }),
+                meter,
+                staged: Arc::new(Mutex::new(Some(stream))),
+            })
+        }
+
+        /// Stop the readiness loop and close every registered
+        /// connection. Idempotent.
+        pub fn shutdown(&self) {
+            self.inner.stop.store(true, Ordering::SeqCst);
+            self.inner.wake();
+            let handle = self.thread.lock().unwrap().take();
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+
+    impl Drop for Reactor {
+        fn drop(&mut self) {
+            self.shutdown();
+        }
+    }
+
+    /// Send side of one reactor connection. Implements
+    /// [`SessionTransport`] so the existing mux / fault-injection
+    /// plumbing wraps it unchanged; receiving happens via the
+    /// [`FrameSink`], never by pulling.
+    #[derive(Clone)]
+    pub struct ConnHandle {
+        token: u64,
+        inner: Arc<Inner>,
+        out: Arc<OutBuf>,
+        meter: ByteMeter,
+        staged: Arc<Mutex<Option<TcpStream>>>,
+    }
+
+    impl ConnHandle {
+        /// Attach the frame sink and arm the read side.
+        pub fn activate(&self, sink: Arc<dyn FrameSink>) -> anyhow::Result<()> {
+            let stream = self.staged.lock().unwrap().take();
+            let stream = stream.ok_or_else(|| anyhow::anyhow!("connection already active"))?;
+            self.inner.push(Cmd::Register(
+                self.token,
+                stream,
+                sink,
+                Arc::clone(&self.out),
+                self.meter.clone(),
+            ));
+            Ok(())
+        }
+
+        /// Retry the parked frame and re-arm reads (called by the
+        /// consumer after draining a full inbox).
+        pub fn resume(&self) {
+            self.inner.push(Cmd::Resume(self.token));
+        }
+    }
+
+    impl SessionTransport for ConnHandle {
+        fn send_s(&self, session: u64, f: &Frame) -> anyhow::Result<u64> {
+            let mut b = self.out.bytes.lock().unwrap();
+            let was_empty = b.is_empty();
+            let n = FrameWriter::new(&mut *b).write_v2(session, f)?;
+            drop(b);
+            self.meter.record(n);
+            if was_empty {
+                self.inner.push(Cmd::Flush(self.token));
+            }
+            Ok(n)
+        }
+
+        fn recv_s(&self) -> anyhow::Result<(u64, Frame)> {
+            anyhow::bail!("reactor connections deliver frames through their sink")
+        }
+
+        fn meter(&self) -> &ByteMeter {
+            &self.meter
+        }
+    }
+
+    fn errno() -> std::io::Error {
+        std::io::Error::last_os_error()
+    }
+
+    fn ctl(epfd: i32, op: i32, fd: i32, events: u32, data: u64) {
+        let mut ev = sys::EpollEvent { events, data };
+        unsafe { sys::epoll_ctl(epfd, op, fd, &mut ev) };
+    }
+
+    fn rearm(epfd: i32, conn: &Conn, token: u64) {
+        let mut events = sys::EPOLLRDHUP;
+        if !conn.paused {
+            events |= sys::EPOLLIN;
+        }
+        if conn.want_write {
+            events |= sys::EPOLLOUT;
+        }
+        ctl(epfd, sys::EPOLL_CTL_MOD, conn.stream.as_raw_fd(), events, token);
+    }
+
+    fn run_loop(inner: &Inner) {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 64];
+        let mut scratch = vec![0u8; 64 * 1024];
+        loop {
+            let n = unsafe {
+                sys::epoll_wait(inner.epfd, events.as_mut_ptr(), events.len() as i32, -1)
+            };
+            if n < 0 {
+                if errno().kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                // an unusable epoll fd: fail every connection and exit
+                for (_, conn) in conns.drain() {
+                    conn.sink.on_dead(TransportDead::Io("epoll_wait failed".into()));
+                }
+                return;
+            }
+            let fired: Vec<sys::EpollEvent> = events[..n as usize].to_vec();
+            if fired.iter().any(|ev| ev.data == WAKE) {
+                let mut buf = [0u8; 8];
+                unsafe { sys::read(inner.wakefd, buf.as_mut_ptr(), buf.len()) };
+            }
+            let cmds = std::mem::take(&mut *inner.cmds.lock().unwrap());
+            for cmd in cmds {
+                match cmd {
+                    Cmd::Register(token, stream, sink, out, meter) => {
+                        ctl(
+                            inner.epfd,
+                            sys::EPOLL_CTL_ADD,
+                            stream.as_raw_fd(),
+                            sys::EPOLLIN | sys::EPOLLRDHUP,
+                            token,
+                        );
+                        let mut conn = Conn {
+                            stream,
+                            decoder: crate::net::FrameDecoder::new(),
+                            sink,
+                            out,
+                            meter,
+                            parked: None,
+                            paused: false,
+                            want_write: false,
+                        };
+                        // bytes sent before registration flush now
+                        if let Fate::Dead = flush_conn(inner.epfd, &mut conn, token) {
+                            drop_conn(inner.epfd, conn);
+                        } else {
+                            conns.insert(token, conn);
+                        }
+                    }
+                    Cmd::Flush(token) => {
+                        if let Some(conn) = conns.get_mut(&token) {
+                            if let Fate::Dead = flush_conn(inner.epfd, conn, token) {
+                                let conn = conns.remove(&token).unwrap();
+                                drop_conn(inner.epfd, conn);
+                            }
+                        }
+                    }
+                    Cmd::Resume(token) => {
+                        if let Some(conn) = conns.get_mut(&token) {
+                            if let Fate::Dead = resume_conn(inner.epfd, conn, token) {
+                                let conn = conns.remove(&token).unwrap();
+                                drop_conn(inner.epfd, conn);
+                            }
+                        }
+                    }
+                }
+            }
+            if inner.stop.load(Ordering::SeqCst) {
+                for (token, mut conn) in conns.drain() {
+                    // best-effort final flush of coalesced writes
+                    let _ = flush_conn(inner.epfd, &mut conn, token);
+                    drop_conn(inner.epfd, conn);
+                }
+                return;
+            }
+            for ev in &fired {
+                let (data, mask) = (ev.data, ev.events);
+                if data == WAKE || !conns.contains_key(&data) {
+                    continue;
+                }
+                let mut fate = Fate::Keep;
+                if mask & sys::EPOLLOUT != 0 {
+                    let conn = conns.get_mut(&data).unwrap();
+                    fate = flush_conn(inner.epfd, conn, data);
+                }
+                let readable = mask & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP
+                    | sys::EPOLLRDHUP)
+                    != 0;
+                if let (Fate::Keep, true) = (&fate, readable) {
+                    let conn = conns.get_mut(&data).unwrap();
+                    if !conn.paused {
+                        fate = read_conn(inner.epfd, conn, data, &mut scratch);
+                    }
+                }
+                if let Fate::Dead = fate {
+                    let conn = conns.remove(&data).unwrap();
+                    drop_conn(inner.epfd, conn);
+                }
+            }
+        }
+    }
+
+    fn drop_conn(epfd: i32, conn: Conn) {
+        ctl(epfd, sys::EPOLL_CTL_DEL, conn.stream.as_raw_fd(), 0, 0);
+        // conn.stream drops here, closing the socket
+    }
+
+    /// Write the coalesced outbound buffer until empty or the socket
+    /// pushes back (then arm `EPOLLOUT`).
+    fn flush_conn(epfd: i32, conn: &mut Conn, token: u64) -> Fate {
+        loop {
+            let mut b = conn.out.bytes.lock().unwrap();
+            if b.is_empty() {
+                if conn.want_write {
+                    conn.want_write = false;
+                    rearm(epfd, conn, token);
+                }
+                return Fate::Keep;
+            }
+            match conn.stream.write(&b) {
+                Ok(n) => {
+                    b.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    drop(b);
+                    if !conn.want_write {
+                        conn.want_write = true;
+                        rearm(epfd, conn, token);
+                    }
+                    return Fate::Keep;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    drop(b);
+                    conn.sink.on_dead(TransportDead::Io(format!("write failed: {e}")));
+                    return Fate::Dead;
+                }
+            }
+        }
+    }
+
+    /// Read until the socket would block, pushing bytes through the
+    /// incremental decoder and decoded frames into the sink.
+    fn read_conn(epfd: i32, conn: &mut Conn, token: u64, scratch: &mut [u8]) -> Fate {
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    let dead = if conn.decoder.buffered_len() > 0 || conn.parked.is_some() {
+                        TransportDead::TruncatedFrame
+                    } else {
+                        TransportDead::PeerHangup
+                    };
+                    conn.sink.on_dead(dead);
+                    return Fate::Dead;
+                }
+                Ok(n) => {
+                    conn.decoder.push(&scratch[..n]);
+                    if let Fate::Dead = drain_frames(epfd, conn, token) {
+                        return Fate::Dead;
+                    }
+                    if conn.paused {
+                        return Fate::Keep;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Fate::Keep,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    conn.sink.on_dead(TransportDead::Io(format!("read failed: {e}")));
+                    return Fate::Dead;
+                }
+            }
+        }
+    }
+
+    /// Deliver every complete frame in the decoder; on a refusal, park
+    /// the frame and pause reads (TCP backpressure toward the peer).
+    fn drain_frames(epfd: i32, conn: &mut Conn, token: u64) -> Fate {
+        loop {
+            let before = conn.decoder.buffered_len();
+            match conn.decoder.next_frame() {
+                Ok(Some((sid, f))) => {
+                    conn.meter.record((before - conn.decoder.buffered_len()) as u64);
+                    match conn.sink.on_frame(sid, f) {
+                        SinkVerdict::Accepted => {}
+                        SinkVerdict::Full(back) => {
+                            conn.parked = Some((sid, back));
+                            conn.paused = true;
+                            rearm(epfd, conn, token);
+                            return Fate::Keep;
+                        }
+                    }
+                }
+                Ok(None) => return Fate::Keep,
+                Err(e) => {
+                    conn.sink.on_dead(TransportDead::Io(format!("{e:#}")));
+                    return Fate::Dead;
+                }
+            }
+        }
+    }
+
+    /// Retry the parked frame; on acceptance re-arm reads and drain any
+    /// frames that were already buffered while paused.
+    fn resume_conn(epfd: i32, conn: &mut Conn, token: u64) -> Fate {
+        if let Some((sid, f)) = conn.parked.take() {
+            match conn.sink.on_frame(sid, f) {
+                SinkVerdict::Accepted => {}
+                SinkVerdict::Full(back) => {
+                    conn.parked = Some((sid, back));
+                    return Fate::Keep;
+                }
+            }
+        }
+        conn.paused = false;
+        rearm(epfd, conn, token);
+        drain_frames(epfd, conn, token)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::{ConnHandle, Reactor};
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    use super::*;
+    use std::net::TcpStream;
+
+    /// Stub on platforms without epoll: construction fails cleanly and
+    /// callers fall back to the threaded pump transport.
+    pub struct Reactor;
+
+    impl Reactor {
+        pub fn new() -> anyhow::Result<Reactor> {
+            anyhow::bail!("the reactor transport requires linux epoll; use --transport threaded")
+        }
+
+        pub fn connect(&self, _: TcpStream, _: ByteMeter) -> anyhow::Result<ConnHandle> {
+            anyhow::bail!("the reactor transport requires linux epoll")
+        }
+
+        pub fn shutdown(&self) {}
+    }
+
+    #[derive(Clone)]
+    pub struct ConnHandle;
+
+    impl ConnHandle {
+        pub fn activate(&self, _: Arc<dyn FrameSink>) -> anyhow::Result<()> {
+            anyhow::bail!("the reactor transport requires linux epoll")
+        }
+
+        pub fn resume(&self) {}
+    }
+
+    impl SessionTransport for ConnHandle {
+        fn send_s(&self, _: u64, _: &Frame) -> anyhow::Result<u64> {
+            anyhow::bail!("the reactor transport requires linux epoll")
+        }
+
+        fn recv_s(&self) -> anyhow::Result<(u64, Frame)> {
+            anyhow::bail!("the reactor transport requires linux epoll")
+        }
+
+        fn meter(&self) -> &ByteMeter {
+            unreachable!("fallback reactor connections cannot be constructed")
+        }
+    }
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use crate::net::mux::{MuxOptions, SessionMux};
+    use crate::net::transport::{tcp_stream_pair, Channel};
+
+    fn driven_pair(
+        reactor: &Reactor,
+        l_opts: MuxOptions,
+        p_opts: MuxOptions,
+    ) -> (SessionMux, SessionMux) {
+        let (ls, ps) = tcp_stream_pair().unwrap();
+        let lh = reactor.connect(ls, ByteMeter::new()).unwrap();
+        let ph = reactor.connect(ps, ByteMeter::new()).unwrap();
+        let (lmux, lsink) = SessionMux::driven(Box::new(lh.clone()), l_opts);
+        let (pmux, psink) = SessionMux::driven(Box::new(ph.clone()), p_opts);
+        let (lr, pr) = (lh.clone(), ph.clone());
+        lmux.set_resume_hook(Box::new(move || lr.resume()));
+        pmux.set_resume_hook(Box::new(move || pr.resume()));
+        lh.activate(lsink).unwrap();
+        ph.activate(psink).unwrap();
+        (lmux, pmux)
+    }
+
+    fn frame(tag: u32, v: u64) -> Frame {
+        let mut f = Frame::new(tag);
+        f.put_u64(v);
+        f
+    }
+
+    #[test]
+    fn driven_mux_roundtrips_sessions_over_one_reactor() {
+        let reactor = Reactor::new().unwrap();
+        let (leader, party) = driven_pair(
+            &reactor,
+            MuxOptions { accept: false, ..Default::default() },
+            MuxOptions { accept: true, ..Default::default() },
+        );
+        let a = leader.open(1).unwrap();
+        let b = leader.open(2).unwrap();
+        b.send(&frame(10, 20)).unwrap();
+        a.send(&frame(10, 10)).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        let pb = party.accept().unwrap().unwrap();
+        assert_eq!(pa.session(), 2);
+        assert_eq!(pb.session(), 1);
+        assert_eq!(pb.recv().unwrap().reader().u64().unwrap(), 10);
+        assert_eq!(pa.recv().unwrap().reader().u64().unwrap(), 20);
+        pa.send(&frame(12, 200)).unwrap();
+        pb.send(&frame(12, 100)).unwrap();
+        assert_eq!(a.recv().unwrap().reader().u64().unwrap(), 100);
+        assert_eq!(b.recv().unwrap().reader().u64().unwrap(), 200);
+        // per-session byte meters hold under reactor delivery
+        let f = frame(10, 10);
+        assert_eq!(a.meter().bytes(), 2 * f.wire_len_v2());
+        leader.shutdown();
+        assert!(party.accept().unwrap().is_none());
+        party.shutdown();
+        leader.join();
+        party.join();
+        reactor.shutdown();
+    }
+
+    #[test]
+    fn full_inbox_pauses_one_connection_not_the_loop() {
+        let reactor = Reactor::new().unwrap();
+        let (leader, party) = driven_pair(
+            &reactor,
+            MuxOptions { accept: false, ..Default::default() },
+            MuxOptions { accept: true, queue_cap: 1, ..Default::default() },
+        );
+        let a = leader.open(1).unwrap();
+        // burst far past the inbox bound: backpressure must park, not
+        // drop or deadlock
+        for i in 0..16u64 {
+            a.send(&frame(7, i)).unwrap();
+        }
+        let pa = party.accept().unwrap().unwrap();
+        for i in 0..16u64 {
+            assert_eq!(pa.recv().unwrap().reader().u64().unwrap(), i);
+        }
+        // the paused connection never stalled the loop: a second
+        // connection on the same reactor keeps flowing while session 1
+        // is saturated
+        let (l2, p2) = driven_pair(
+            &reactor,
+            MuxOptions { accept: false, ..Default::default() },
+            MuxOptions { accept: true, ..Default::default() },
+        );
+        let c = l2.open(9).unwrap();
+        c.send(&frame(1, 42)).unwrap();
+        let pc = p2.accept().unwrap().unwrap();
+        assert_eq!(pc.recv().unwrap().reader().u64().unwrap(), 42);
+        for (l, p) in [(&leader, &party), (&l2, &p2)] {
+            l.shutdown();
+            assert!(p.accept().unwrap().is_none());
+            p.shutdown();
+            l.join();
+            p.join();
+        }
+        reactor.shutdown();
+    }
+}

@@ -6,7 +6,7 @@
 
 use super::frame::{Frame, FrameReader, FrameWriter};
 use super::meter::ByteMeter;
-use std::io::Read;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, Sender, channel};
 use std::sync::Mutex;
@@ -37,6 +37,11 @@ pub enum Endpoint {
         /// workers keep writing — full-duplex, no lock coupling
         read: Mutex<TcpStream>,
         write: Mutex<TcpStream>,
+        /// reused encode scratch: each frame is serialized here once and
+        /// hits the socket as a single `write_all` — no per-send `Vec`
+        /// allocation (steady state) and no four-syscall header dribble
+        /// on a nodelay socket
+        wbuf: Mutex<Vec<u8>>,
         meter: ByteMeter,
     },
 }
@@ -56,9 +61,11 @@ impl Endpoint {
                     .map_err(|_| anyhow::anyhow!("peer hung up"))?;
                 Ok(())
             }
-            Endpoint::Tcp { write, meter, .. } => {
-                let mut s = write.lock().unwrap();
-                let n = FrameWriter::new(&mut *s).write(f)?;
+            Endpoint::Tcp { write, wbuf, meter, .. } => {
+                let mut b = wbuf.lock().unwrap();
+                b.clear();
+                let n = FrameWriter::new(&mut *b).write(f)?;
+                write.lock().unwrap().write_all(&b)?;
                 meter.record(n);
                 Ok(())
             }
@@ -96,9 +103,11 @@ impl Endpoint {
                     .map_err(|_| anyhow::anyhow!("peer hung up"))?;
                 Ok(n)
             }
-            Endpoint::Tcp { write, meter, .. } => {
-                let mut s = write.lock().unwrap();
-                let n = FrameWriter::new(&mut *s).write_v2(session, f)?;
+            Endpoint::Tcp { write, wbuf, meter, .. } => {
+                let mut b = wbuf.lock().unwrap();
+                b.clear();
+                let n = FrameWriter::new(&mut *b).write_v2(session, f)?;
+                write.lock().unwrap().write_all(&b)?;
                 meter.record(n);
                 Ok(n)
             }
@@ -166,23 +175,32 @@ pub fn duplex_pair(meter: ByteMeter) -> (Endpoint, Endpoint) {
     )
 }
 
-/// Create a connected localhost-TCP endpoint pair.
-pub fn tcp_pair(meter: ByteMeter) -> anyhow::Result<(Endpoint, Endpoint)> {
+/// Create a connected localhost-TCP raw stream pair. Reactor-managed
+/// connections own their sockets directly (no endpoint wrapper).
+pub fn tcp_stream_pair() -> anyhow::Result<(TcpStream, TcpStream)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let client = TcpStream::connect(addr)?;
     let (server, _) = listener.accept()?;
     client.set_nodelay(true)?;
     server.set_nodelay(true)?;
+    Ok((server, client))
+}
+
+/// Create a connected localhost-TCP endpoint pair.
+pub fn tcp_pair(meter: ByteMeter) -> anyhow::Result<(Endpoint, Endpoint)> {
+    let (server, client) = tcp_stream_pair()?;
     Ok((
         Endpoint::Tcp {
             read: Mutex::new(server.try_clone()?),
             write: Mutex::new(server),
+            wbuf: Mutex::new(Vec::new()),
             meter: meter.clone(),
         },
         Endpoint::Tcp {
             read: Mutex::new(client.try_clone()?),
             write: Mutex::new(client),
+            wbuf: Mutex::new(Vec::new()),
             meter,
         },
     ))

@@ -10,6 +10,11 @@
 //! - zero contamination: every session that reports success is
 //!   bit-identical to its serial dedicated-connection run;
 //! - at least the untouched sessions succeed.
+//!
+//! Every fault runs over both drive modes — the in-proc pump-thread
+//! transport and (on linux) the epoll reactor — and must degrade the
+//! same way: faults through the readiness loop fail only the targeted
+//! session, never the loop.
 
 mod common;
 
@@ -36,10 +41,21 @@ fn chaos_cfg() -> ScanConfig {
     cfg(Backend::Masked, 8) // 3 shards
 }
 
-/// Run a faulted batch and enforce the battery-wide invariants. Returns
-/// per-session results paired with their serial baseline check already
-/// applied; also returns which sessions failed.
-fn run_chaos(fault: FaultSpec, label: &str) -> Vec<bool> {
+/// The drive modes every fault must degrade identically under: the
+/// pump-thread transport everywhere, plus the epoll reactor on linux.
+fn chaos_transports() -> Vec<Transport> {
+    let mut ts = vec![Transport::InProc];
+    if cfg!(target_os = "linux") {
+        ts.push(Transport::Reactor);
+    }
+    ts
+}
+
+/// Run a faulted batch over one drive mode and enforce the battery-wide
+/// invariants: the batch completes, successes are bit-identical to
+/// serial, and the never-targeted session 1 survives. Returns which
+/// sessions failed.
+fn run_chaos_over(fault: FaultSpec, transport: Transport, label: &str) -> Vec<bool> {
     let cohort = chaos_cohort();
     let c = chaos_cfg();
     let serial: MultiPartyScanResult =
@@ -50,10 +66,10 @@ fn run_chaos(fault: FaultSpec, label: &str) -> Vec<bool> {
         &cohort,
         &specs,
         &BatchOptions {
+            transport,
             max_concurrent: SESSIONS,
             recv_timeout: Some(Duration::from_secs(2)),
             fault: Some(fault),
-            ..Default::default()
         },
     )
     .unwrap();
@@ -80,11 +96,20 @@ fn run_chaos(fault: FaultSpec, label: &str) -> Vec<bool> {
     failed
 }
 
+/// Run the fault over every drive mode and return one failure pattern
+/// per mode; callers assert the same surgical degradation on each.
+fn run_chaos(fault: FaultSpec, label: &str) -> Vec<Vec<bool>> {
+    chaos_transports()
+        .into_iter()
+        .map(|t| run_chaos_over(fault, t, &format!("{label} [{t:?}]")))
+        .collect()
+}
+
 /// A dropped party→leader contribution: the victim session times out (or
 /// trips an ordering check) and every other session completes.
 #[test]
 fn dropped_contribution_fails_only_the_victim() {
-    let failed = run_chaos(
+    for failed in run_chaos(
         FaultSpec {
             party: 0,
             dir: FaultDir::Recv,
@@ -93,16 +118,17 @@ fn dropped_contribution_fails_only_the_victim() {
             nth: 1, // first shard contribution (0 is the base round)
         },
         "drop",
-    );
-    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
-    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    ) {
+        assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+        assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    }
 }
 
 /// A duplicated contribution frame trips the shard-ordinal check — a
 /// clean protocol error, not a silent double count.
 #[test]
 fn duplicated_contribution_is_detected() {
-    let failed = run_chaos(
+    for failed in run_chaos(
         FaultSpec {
             party: 0,
             dir: FaultDir::Recv,
@@ -111,15 +137,16 @@ fn duplicated_contribution_is_detected() {
             nth: 1,
         },
         "duplicate",
-    );
-    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
-    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    ) {
+        assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+        assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    }
 }
 
 /// Two reordered contribution frames trip the ordering check cleanly.
 #[test]
 fn reordered_contributions_are_detected() {
-    let failed = run_chaos(
+    for failed in run_chaos(
         FaultSpec {
             party: 0,
             dir: FaultDir::Recv,
@@ -128,8 +155,9 @@ fn reordered_contributions_are_detected() {
             nth: 1,
         },
         "reorder",
-    );
-    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    ) {
+        assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    }
 }
 
 /// A frame misrouted from one session into another: the victim loses a
@@ -138,7 +166,7 @@ fn reordered_contributions_are_detected() {
 /// (enforced by `run_chaos` for every mode).
 #[test]
 fn cross_session_misroute_never_contaminates() {
-    let failed = run_chaos(
+    for failed in run_chaos(
         FaultSpec {
             party: 0,
             dir: FaultDir::Recv,
@@ -147,15 +175,16 @@ fn cross_session_misroute_never_contaminates() {
             nth: 1,
         },
         "misroute",
-    );
-    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    ) {
+        assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+    }
 }
 
 /// Misroute to a session id nobody opened: the frame is dropped by the
 /// demux (counted, not misdelivered) and only the victim fails.
 #[test]
 fn misroute_to_unknown_session_is_dropped() {
-    let failed = run_chaos(
+    for failed in run_chaos(
         FaultSpec {
             party: 0,
             dir: FaultDir::Recv,
@@ -164,9 +193,10 @@ fn misroute_to_unknown_session_is_dropped() {
             nth: 1,
         },
         "misroute-unknown",
-    );
-    assert!(failed[(VICTIM - 1) as usize], "victim must fail");
-    assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    ) {
+        assert!(failed[(VICTIM - 1) as usize], "victim must fail");
+        assert_eq!(failed.iter().filter(|&&f| f).count(), 1, "exactly one failure");
+    }
 }
 
 /// Leader→party faults: dropping a result-broadcast frame leaves the
@@ -179,29 +209,33 @@ fn dropped_result_broadcast_is_party_side_failure_only() {
     let serial = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 7).unwrap();
     let specs: Vec<SessionSpec> =
         (0..SESSIONS).map(|_| SessionSpec { cfg: c.clone(), seed: 7 }).collect();
-    let batch = run_session_batch(
-        &cohort,
-        &specs,
-        &BatchOptions {
-            max_concurrent: SESSIONS,
-            recv_timeout: Some(Duration::from_secs(2)),
-            fault: Some(FaultSpec {
-                party: 1,
-                dir: FaultDir::Send,
-                // SETUP=0, COMPRESS=1, then the leader's next sends to
-                // this party are the result broadcast frames
-                nth: 2,
-                mode: FaultMode::Drop,
-                session: VICTIM,
-            }),
-            ..Default::default()
-        },
-    )
-    .unwrap();
-    for (i, run) in batch.runs.iter().enumerate() {
-        let run = run.as_ref().unwrap_or_else(|e| panic!("session {}: {e:#}", i + 1));
-        assert_run_matches(run, &serial, &format!("session {}", i + 1));
+    for transport in chaos_transports() {
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions {
+                transport,
+                max_concurrent: SESSIONS,
+                recv_timeout: Some(Duration::from_secs(2)),
+                fault: Some(FaultSpec {
+                    party: 1,
+                    dir: FaultDir::Send,
+                    // SETUP=0, COMPRESS=1, then the leader's next sends
+                    // to this party are the result broadcast frames
+                    nth: 2,
+                    mode: FaultMode::Drop,
+                    session: VICTIM,
+                }),
+            },
+        )
+        .unwrap();
+        for (i, run) in batch.runs.iter().enumerate() {
+            let run = run
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{transport:?} session {}: {e:#}", i + 1));
+            assert_run_matches(run, &serial, &format!("{transport:?} session {}", i + 1));
+        }
+        assert_eq!(batch.failed, 1, "{transport:?}: exactly the victim's serve fails");
+        assert_eq!(batch.served, SESSIONS * 3 - 1, "{transport:?}");
     }
-    assert_eq!(batch.failed, 1, "exactly the victim's party-side serve fails");
-    assert_eq!(batch.served, SESSIONS * 3 - 1);
 }

@@ -7,8 +7,8 @@
 
 use dash::coordinator::messages::*;
 use dash::linalg::Matrix;
-use dash::net::{Codec, Frame, FrameReader, FrameWriter, WireMessage, FRAME_V2_MAGIC,
-    SESSION_CTRL};
+use dash::net::{Codec, Frame, FrameDecoder, FrameReader, FrameWriter, WireMessage,
+    FRAME_V2_MAGIC, SESSION_CTRL};
 use dash::util::rng::Rng;
 
 fn rand_u64s(rng: &mut Rng, max: usize) -> Vec<u64> {
@@ -301,6 +301,130 @@ fn fuzz_v2_framing_roundtrip_and_v1_fallback() {
             }
             assert!(decoded < expected.len(), "truncated stream decoded fully");
         }
+    }
+}
+
+/// Encode a random mixed v1/v2 stream, returning the wire bytes, the
+/// `(session, frame)` sequence `read_any` (and the incremental decoder)
+/// must reproduce from them, and each frame's on-wire byte length.
+fn rand_stream(rng: &mut Rng) -> (Vec<u8>, Vec<(u64, Frame)>, Vec<u64>) {
+    let n = 1 + (rng.next_u64() as usize) % 10;
+    let mut expected: Vec<(u64, Frame)> = Vec::with_capacity(n);
+    let mut lens: Vec<u64> = Vec::with_capacity(n);
+    let mut buf = Vec::new();
+    let mut w = FrameWriter::new(&mut buf);
+    for _ in 0..n {
+        let mut f = Frame::new((rng.next_u64() % 1000) as u32);
+        for _ in 0..(rng.next_u64() as usize) % 6 {
+            f.put_u64(rng.next_u64());
+        }
+        if rng.next_u64() % 2 == 0 {
+            let sid = rand_sid(rng);
+            lens.push(w.write_v2(sid, &f).unwrap());
+            expected.push((sid, f));
+        } else {
+            lens.push(w.write(&f).unwrap());
+            expected.push((0, f)); // v1 fallback session
+        }
+    }
+    drop(w);
+    (buf, expected, lens)
+}
+
+/// Drain every currently-decodable frame from the incremental decoder.
+fn drain(dec: &mut FrameDecoder) -> Vec<(u64, Frame)> {
+    let mut out = Vec::new();
+    while let Some(sf) = dec.next_frame().expect("valid stream must decode cleanly") {
+        out.push(sf);
+    }
+    out
+}
+
+/// The incremental decoder the reactor feeds from arbitrary readiness
+/// chunks must reassemble mixed v1/v2 streams exactly: byte-at-a-time
+/// delivery (the worst partial-read case) and random-split delivery
+/// both reproduce the `read_any` frame sequence bit-for-bit, with no
+/// bytes left buffered at stream end.
+#[test]
+fn fuzz_incremental_decoder_reassembles_any_split() {
+    let mut rng = Rng::new(0xDECA_0DE5);
+    for round in 0..60u64 {
+        let (buf, expected, _) = rand_stream(&mut rng);
+
+        // byte-at-a-time: every push is a 1-byte partial read
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &buf {
+            dec.push(&[b]);
+            got.extend(drain(&mut dec));
+        }
+        assert_eq!(got, expected, "round {round}: byte-at-a-time reassembly");
+        assert_eq!(dec.buffered_len(), 0, "round {round}: residual bytes");
+
+        // random splits: chunk boundaries land anywhere, including
+        // mid-header and mid-payload
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            let take = 1 + (rng.next_u64() as usize) % (buf.len() - pos);
+            dec.push(&buf[pos..pos + take]);
+            pos += take;
+            got.extend(drain(&mut dec));
+        }
+        assert_eq!(got, expected, "round {round}: random-split reassembly");
+        assert_eq!(dec.buffered_len(), 0, "round {round}: residual bytes");
+    }
+}
+
+/// Truncation through the incremental decoder is *visible*, never
+/// silent: a stream cut mid-frame yields only the frames before the
+/// cut and leaves the partial frame buffered (`buffered_len > 0`) — the
+/// reactor's EOF-mid-frame detection hinges on exactly this signal.
+/// Corrupted headers (an implausible length word) fail with an Err,
+/// not a panic or an unbounded buffer.
+#[test]
+fn fuzz_incremental_decoder_truncation_and_corruption() {
+    let mut rng = Rng::new(0xDECA_0DE6);
+    for round in 0..60u64 {
+        let (buf, expected, lens) = rand_stream(&mut rng);
+
+        // cut strictly inside the stream, then feed byte-at-a-time
+        let cut = 1 + (rng.next_u64() as usize) % (buf.len() - 1);
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &buf[..cut] {
+            dec.push(&[b]);
+            got.extend(drain(&mut dec));
+        }
+        assert!(got.len() < expected.len(), "round {round}: truncated stream complete");
+        assert_eq!(got[..], expected[..got.len()], "round {round}: prefix fidelity");
+        // bytes past the last whole frame must stay visibly buffered —
+        // the reactor's EOF-mid-frame detection hinges on this signal
+        let consumed: u64 = lens[..got.len()].iter().sum();
+        assert_eq!(
+            dec.buffered_len() as u64,
+            cut as u64 - consumed,
+            "round {round}: partial-frame bytes unaccounted"
+        );
+
+        // corrupt the length word of the first frame to an implausible
+        // value: the decoder must reject it cleanly
+        let mut bad = buf.clone();
+        let len_off = if u32::from_le_bytes(bad[0..4].try_into().unwrap())
+            == FRAME_V2_MAGIC
+        {
+            16 // [magic][session][tag][len]
+        } else {
+            4 // [tag][len]
+        };
+        bad[len_off..len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&bad);
+        assert!(
+            dec.next_frame().is_err(),
+            "round {round}: implausible length accepted"
+        );
     }
 }
 

@@ -238,6 +238,10 @@ pub struct Scenario {
     pub session_seed: u64,
     /// also run the TCP transport cells (slower; off by default)
     pub tcp: bool,
+    /// also run the epoll-reactor transport cells (one readiness thread
+    /// driving every connection; linux-only — silently skipped
+    /// elsewhere)
+    pub reactor: bool,
     /// additionally run this many *concurrent multiplexed* sessions per
     /// cell, each of which must be bit-identical to the cell's serial
     /// baseline (1 = skip the multiplexed pass)
@@ -261,6 +265,7 @@ impl Default for Scenario {
             cohort_seed: 0xC0DE,
             session_seed: 0x5EED,
             tcp: false,
+            reactor: false,
             sessions: 1,
         }
     }
@@ -307,6 +312,9 @@ pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanRe
         let mut transports = vec![Transport::InProc];
         if sc.tcp {
             transports.push(Transport::Tcp);
+        }
+        if sc.reactor && cfg!(target_os = "linux") {
+            transports.push(Transport::Reactor);
         }
         // lowered-entry count of a single artifact session, captured
         // from the artifact × in-proc cell below (the shared-engine

@@ -41,6 +41,17 @@ conformance_scenarios! {
     },
     // transport closure: TCP cells must match the in-proc baseline too
     tcp_spot_check: { shard_m: 16, t: 4, select_k: 1, tcp: true, cohort_seed: 0xA008 },
+    // reactor closure: the epoll readiness-loop transport must reproduce
+    // the in-proc baseline bit-for-bit, scan and SELECT alike
+    reactor_spot_check: {
+        shard_m: 16, t: 4, select_k: 1, reactor: true, cohort_seed: 0xA00E
+    },
+    // reactor × multiplexed sessions: concurrent sessions driven by one
+    // readiness thread, each bit-identical to the serial baseline
+    reactor_sessions_x4: {
+        sessions: 4, shard_m: 16, t: 2, reactor: true, n_per: 24, m: 40,
+        cohort_seed: 0xA00F
+    },
     // session closure: concurrent multiplexed sessions over shared
     // connections, every session bit-identical to the serial baseline,
     // one shared artifact engine per party (no per-session recompiles)

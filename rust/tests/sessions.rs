@@ -18,13 +18,24 @@ use dash::coordinator::{
 };
 use dash::gwas::generate_cohort;
 use dash::mpc::Backend;
-use dash::net::FRAME_V2_OVERHEAD;
+use dash::net::{transport_driver_threads, FRAME_V2_OVERHEAD};
+use std::sync::Mutex;
+
+/// Serializes the tests in this binary: the O(1)-transport-threads
+/// assertion reads a process-wide monotonic counter, so no other test
+/// may spawn transport threads inside its measurement window.
+static DRIVER_GATE: Mutex<()> = Mutex::new(());
+
+fn driver_gate() -> std::sync::MutexGuard<'static, ()> {
+    DRIVER_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// The headline acceptance run: 16 concurrent sessions multiplexed over
 /// one shared TCP connection pair per party, all three backends, every
 /// session bit-identical to its serial dedicated-connection run.
 #[test]
 fn sixteen_concurrent_sessions_over_shared_tcp_match_serial() {
+    let _gate = driver_gate();
     let cohort = generate_cohort(&spec_for(3, 24, 30, 1), 0x5E55_0001);
     for backend in backends() {
         let c = cfg(backend, 8);
@@ -49,6 +60,7 @@ fn sixteen_concurrent_sessions_over_shared_tcp_match_serial() {
 /// at high concurrency produce identical per-session results.
 #[test]
 fn concurrency_level_does_not_change_results() {
+    let _gate = driver_gate();
     let cohort = generate_cohort(&spec_for(3, 24, 30, 2), 0x5E55_0002);
     let c = cfg(Backend::Masked, 8);
     let serialized = run_batch(&cohort, &c, 6, 1, Transport::InProc, 91);
@@ -65,6 +77,7 @@ fn concurrency_level_does_not_change_results() {
 /// the v2 session-framing overhead for each of its frames.
 #[test]
 fn per_session_bytes_equal_serial_plus_framing_overhead() {
+    let _gate = driver_gate();
     let cohort = generate_cohort(&spec_for(3, 24, 30, 1), 0x5E55_0003);
     let c = cfg(Backend::Masked, 8);
     let serial = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 55).unwrap();
@@ -95,10 +108,71 @@ fn per_session_bytes_equal_serial_plus_framing_overhead() {
     assert_eq!(conn_total, per_session + ctrl);
 }
 
+/// Reactor acceptance: 16 concurrent sessions over the epoll
+/// readiness-loop transport are bit-identical to serial, and the whole
+/// batch — six shared connections across three parties — is driven by
+/// exactly ONE transport thread (the threaded path spawns one blocking
+/// pump per mux, i.e. 2 per party).
+#[test]
+fn sixteen_concurrent_sessions_over_reactor_match_serial() {
+    let _gate = driver_gate();
+    if !cfg!(target_os = "linux") {
+        eprintln!("skipping: reactor transport is linux-only");
+        return;
+    }
+    let cohort = generate_cohort(&spec_for(3, 24, 30, 1), 0x5E55_0005);
+    let c = cfg(Backend::Masked, 8);
+    let serial = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 77).unwrap();
+    let before = transport_driver_threads();
+    let batch = run_batch(&cohort, &c, 16, 16, Transport::Reactor, 77);
+    let drivers = transport_driver_threads() - before;
+    assert_eq!(drivers, 1, "reactor batch must use exactly one transport thread");
+    assert_eq!(batch.served, 16 * 3);
+    assert_eq!(batch.failed, 0);
+    assert_eq!(batch.residual_sessions, 0);
+    for (i, run) in batch.runs.iter().enumerate() {
+        let run = run.as_ref().unwrap_or_else(|e| panic!("reactor session {i}: {e:#}"));
+        assert_run_matches(run, &serial, &format!("reactor session {i}"));
+    }
+}
+
+/// Byte accounting is drive-mode independent: the reactor batch meters
+/// exactly the same per-session and per-connection byte totals as the
+/// threaded-pump batch over the identical workload, including the
+/// teardown control frames.
+#[test]
+fn reactor_byte_accounting_matches_threaded() {
+    let _gate = driver_gate();
+    if !cfg!(target_os = "linux") {
+        eprintln!("skipping: reactor transport is linux-only");
+        return;
+    }
+    let cohort = generate_cohort(&spec_for(3, 24, 30, 1), 0x5E55_0006);
+    let c = cfg(Backend::Masked, 8);
+    let threaded = run_batch(&cohort, &c, 4, 4, Transport::Tcp, 63);
+    let reactor = run_batch(&cohort, &c, 4, 4, Transport::Reactor, 63);
+    for (i, (a, b)) in threaded.runs.iter().zip(&reactor.runs).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        common::assert_output_bits_eq(&a.output, &b.output, "threaded vs reactor");
+        assert_eq!(
+            a.metrics.bytes_total, b.metrics.bytes_total,
+            "session {i}: per-session bytes"
+        );
+        assert_eq!(
+            a.metrics.messages_total, b.metrics.messages_total,
+            "session {i}: per-session frames"
+        );
+    }
+    let t_total: u64 = threaded.conn_bytes.iter().sum();
+    let r_total: u64 = reactor.conn_bytes.iter().sum();
+    assert_eq!(t_total, r_total, "shared-connection byte totals");
+}
+
 /// Sessions with different seeds produce *different* (properly seeded)
 /// results in one batch, each matching its own serial run.
 #[test]
 fn distinct_seeds_multiplex_cleanly() {
+    let _gate = driver_gate();
     let cohort = generate_cohort(&spec_for(3, 24, 30, 1), 0x5E55_0004);
     let c = cfg(Backend::Shamir { threshold: 2 }, 8);
     let specs: Vec<SessionSpec> =
