@@ -101,6 +101,8 @@ impl RunConfig {
             .set("select_candidates", self.scan.select_candidates)
             .set("use_artifacts", self.scan.use_artifacts)
             .set("artifacts_dir", self.scan.artifacts_dir.as_str())
+            .set("checkpoint_dir", self.scan.checkpoint_dir.as_str())
+            .set("resume", self.scan.resume)
             .set("artifact_exec", self.scan.artifact_exec.name())
             .set("entry_widths", self.scan.entry_widths.clone())
             .set("entry_traits", self.scan.entry_traits.clone())
@@ -255,6 +257,12 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
     if let Some(x) = v.get("artifacts_dir").and_then(Json::as_str) {
         s.artifacts_dir = x.to_string();
     }
+    if let Some(x) = v.get("checkpoint_dir").and_then(Json::as_str) {
+        s.checkpoint_dir = x.to_string();
+    }
+    if let Some(x) = v.get("resume").and_then(|j| j.as_bool()) {
+        s.resume = x;
+    }
     if let Some(x) = v.get("artifact_exec").and_then(Json::as_str) {
         s.artifact_exec = crate::runtime::ArtifactExec::parse(x)?;
     }
@@ -396,6 +404,22 @@ mod tests {
             &Json::parse(r#"{"scan": {"artifact_exec": "gpu"}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn checkpoint_config_roundtrips() {
+        // defaults: checkpointing off
+        let d = RunConfig::default();
+        assert!(d.scan.checkpoint_dir.is_empty());
+        assert!(!d.scan.resume);
+        let j = Json::parse(r#"{"scan": {"checkpoint_dir": "/tmp/ckpt", "resume": true}}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scan.checkpoint_dir, "/tmp/ckpt");
+        assert!(cfg.scan.resume);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scan.checkpoint_dir, "/tmp/ckpt");
+        assert!(back.scan.resume);
     }
 
     #[test]

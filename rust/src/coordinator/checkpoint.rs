@@ -1,0 +1,149 @@
+//! Leader-side checkpoint persistence: one versioned
+//! [`Checkpoint`] frame per session, written atomically after every
+//! combined shard and deleted on clean completion.
+//!
+//! The on-disk format is the wire format — a single v1 frame
+//! ([`crate::net::FrameWriter`]) holding the CHECKPOINT message, so the
+//! snapshot inherits the codec layer's length guards and needs no
+//! separate parser. Files live at `{dir}/session-{sid}.ckpt`; writes go
+//! through a `.tmp` sibling + rename so a crash mid-write leaves either
+//! the previous snapshot or none, never a torn file.
+//!
+//! What is deliberately NOT in the snapshot (DESIGN.md §Checkpointing):
+//! the base-round aggregate, the SELECT state, and any mask or share
+//! material. The base round and SELECT replay deterministically on
+//! resume, and the PRG mask/share streams are keyed by (seed, session,
+//! round) with absolute round numbers — a resumed session re-runs only
+//! rounds whose mask domains it would have used anyway, so replay can
+//! never reuse randomness across different plaintexts.
+
+use super::messages::Checkpoint;
+use crate::net::{FrameReader, FrameWriter, WireMessage};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Checkpoint file path for one session.
+pub fn checkpoint_path(dir: &str, session: u64) -> PathBuf {
+    Path::new(dir).join(format!("session-{session}.ckpt"))
+}
+
+/// Atomically persist `ckpt` for its session (tmp + rename; creates
+/// `dir` if missing).
+pub fn save(dir: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+    fs::create_dir_all(dir)?;
+    let path = checkpoint_path(dir, ckpt.session);
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut file = fs::File::create(&tmp)?;
+        FrameWriter::new(&mut file).write(&ckpt.to_frame())?;
+        file.flush()?;
+        file.sync_all()?;
+    }
+    fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Load a session's checkpoint. `Ok(None)` when no snapshot exists
+/// (fresh session); a present-but-malformed file is an error, not a
+/// silent restart from zero.
+pub fn load(dir: &str, session: u64) -> anyhow::Result<Option<Checkpoint>> {
+    let path = checkpoint_path(dir, session);
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let frame = FrameReader::new(bytes.as_slice()).read()?;
+    let ckpt = Checkpoint::from_frame(&frame)?;
+    anyhow::ensure!(
+        ckpt.session == session,
+        "checkpoint {} holds session {} (want {session})",
+        path.display(),
+        ckpt.session
+    );
+    Ok(Some(ckpt))
+}
+
+/// Delete a session's checkpoint after clean completion (missing file
+/// is fine — nothing was ever written, or a previous run cleaned up).
+pub fn remove(dir: &str, session: u64) -> anyhow::Result<()> {
+    match fs::remove_file(checkpoint_path(dir, session)) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(e.into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::CHECKPOINT_VERSION;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mpc-ckpt-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn ckpt(session: u64) -> Checkpoint {
+        let (m, t) = (4u64, 2u64);
+        let mut stats = vec![f64::NAN; (4 * t * m) as usize];
+        stats[1] = 2.5;
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            session,
+            seed: 7,
+            backend: 1,
+            m,
+            k: 3,
+            t,
+            shard_m: 2,
+            select_k: 0,
+            done: vec![0],
+            df: 10.0,
+            stats,
+        }
+    }
+
+    #[test]
+    fn save_load_remove_roundtrip() {
+        let dir = tempdir("roundtrip");
+        let d = dir.to_str().unwrap();
+        // nothing written yet → fresh
+        assert!(load(d, 3).unwrap().is_none());
+        save(d, &ckpt(3)).unwrap();
+        let got = load(d, 3).unwrap().unwrap();
+        assert_eq!(got.session, 3);
+        assert_eq!(got.done, vec![0]);
+        assert_eq!(got.stats[1], 2.5);
+        assert!(got.stats[0].is_nan());
+        // sessions don't collide
+        assert!(load(d, 4).unwrap().is_none());
+        save(d, &ckpt(4)).unwrap();
+        // overwrite is the common case (one snapshot per combined shard)
+        let mut later = ckpt(3);
+        later.done = vec![0, 1];
+        save(d, &later).unwrap();
+        assert_eq!(load(d, 3).unwrap().unwrap().done, vec![0, 1]);
+        remove(d, 3).unwrap();
+        assert!(load(d, 3).unwrap().is_none());
+        // removing twice (or a never-written session) is not an error
+        remove(d, 3).unwrap();
+        assert_eq!(load(d, 4).unwrap().unwrap().session, 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_file_is_a_loud_error() {
+        let dir = tempdir("malformed");
+        let d = dir.to_str().unwrap();
+        fs::create_dir_all(d).unwrap();
+        fs::write(checkpoint_path(d, 1), b"not a frame").unwrap();
+        assert!(load(d, 1).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -272,6 +272,90 @@ impl ScanAssembler {
         Ok(parts)
     }
 
+    /// Snapshot the assembled per-trait statistics for checkpointing:
+    /// `(df, flat)` where `df` is NaN until the first shard lands and
+    /// `flat` is `[β̂(m) | σ̂(m) | t(m) | p(m)]` per trait (`4·T·m`
+    /// values, NaN at columns not yet assembled). Together with the list
+    /// of combined shard ranges this is the assembler's complete
+    /// mutable state — the [`CombineContext`] is deliberately excluded
+    /// (the base round is cheap and deterministic, so a resuming run
+    /// re-derives it bit-identically).
+    pub fn snapshot_stats(&self) -> (f64, Vec<f64>) {
+        let mut flat = Vec::with_capacity(4 * self.traits.len() * self.m);
+        for acc in &self.traits {
+            flat.extend_from_slice(&acc.beta);
+            flat.extend_from_slice(&acc.se);
+            flat.extend_from_slice(&acc.t);
+            flat.extend_from_slice(&acc.p);
+        }
+        (self.df.unwrap_or(f64::NAN), flat)
+    }
+
+    /// Restore a fresh assembler from a checkpoint snapshot: mark each
+    /// checkpointed shard range as assembled and scatter its statistics
+    /// back into place. Must be called before any
+    /// [`add_shard`](Self::add_shard) (ranges overlapping assembled
+    /// columns are rejected, same as a duplicate shard frame).
+    pub fn restore(
+        &mut self,
+        ranges: &[ShardRange],
+        df: f64,
+        flat: &[f64],
+    ) -> anyhow::Result<()> {
+        let t = self.traits.len();
+        anyhow::ensure!(
+            flat.len() == 4 * t * self.m,
+            "checkpoint stats length {} != 4·T·M",
+            flat.len()
+        );
+        for r in ranges {
+            anyhow::ensure!(r.j0 <= r.j1 && r.j1 <= self.m, "checkpoint range beyond M");
+            anyhow::ensure!(
+                !self.filled[r.j0..r.j1].iter().any(|&f| f),
+                "checkpoint shard [{}, {}) overlaps columns already assembled",
+                r.j0,
+                r.j1
+            );
+            for (tt, acc) in self.traits.iter_mut().enumerate() {
+                let base = tt * 4 * self.m;
+                acc.beta[r.j0..r.j1].copy_from_slice(&flat[base + r.j0..base + r.j1]);
+                acc.se[r.j0..r.j1]
+                    .copy_from_slice(&flat[base + self.m + r.j0..base + self.m + r.j1]);
+                acc.t[r.j0..r.j1]
+                    .copy_from_slice(&flat[base + 2 * self.m + r.j0..base + 2 * self.m + r.j1]);
+                acc.p[r.j0..r.j1]
+                    .copy_from_slice(&flat[base + 3 * self.m + r.j0..base + 3 * self.m + r.j1]);
+            }
+            self.filled[r.j0..r.j1].fill(true);
+            self.assembled += r.width();
+        }
+        if df.is_finite() {
+            self.df.get_or_insert(df);
+        }
+        Ok(())
+    }
+
+    /// Per-trait `(β̂, σ̂)` for an already-assembled column range, in the
+    /// trait-major concatenated layout of a SHARD_RESULT frame — lets a
+    /// resuming leader re-broadcast the partial results of shards it
+    /// skipped.
+    pub fn result_slices(&self, range: ShardRange) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+        anyhow::ensure!(range.j0 <= range.j1 && range.j1 <= self.m, "range beyond M");
+        anyhow::ensure!(
+            self.filled[range.j0..range.j1].iter().all(|&f| f),
+            "range [{}, {}) not fully assembled",
+            range.j0,
+            range.j1
+        );
+        let mut beta = Vec::with_capacity(range.width() * self.traits.len());
+        let mut se = Vec::with_capacity(range.width() * self.traits.len());
+        for acc in &self.traits {
+            beta.extend_from_slice(&acc.beta[range.j0..range.j1]);
+            se.extend_from_slice(&acc.se[range.j0..range.j1]);
+        }
+        Ok((beta, se))
+    }
+
     /// Finish the session, checking every column arrived.
     pub fn finish(self) -> anyhow::Result<ScanOutput> {
         Ok(self.finish_with_context()?.0)
@@ -462,6 +546,59 @@ mod tests {
             for j in 0..13 {
                 assert_eq!(a.assoc[tt].beta[j].to_bits(), b.assoc[tt].beta[j].to_bits());
                 assert_eq!(a.assoc[tt].p[j].to_bits(), b.assoc[tt].p[j].to_bits());
+            }
+        }
+    }
+
+    /// Snapshot after a partial assembly, restore into a fresh assembler,
+    /// finish with the remaining shards: bit-identical to an
+    /// uninterrupted run (the checkpoint/resume invariant).
+    #[test]
+    fn snapshot_restore_matches_uninterrupted() {
+        let p1 = party_t(72, 3, 14, 2, 185);
+        let inc = IncrementalAggregate::from_parties(std::slice::from_ref(&p1)).unwrap();
+        let agg = inc.sums().unwrap();
+        let opts = CombineOptions { r_method: RFactorMethod::Cholesky };
+        let plan = ShardPlan::new(14, 5); // shards [0,5) [5,10) [10,14)
+
+        let mut full = ScanAssembler::new(&agg.base(), None, opts, 14).unwrap();
+        for r in plan.ranges() {
+            full.add_shard(r, &agg.shard_sums(r.j0, r.j1)).unwrap();
+        }
+        let want = full.finish().unwrap();
+
+        // interrupted after two shards
+        let mut first = ScanAssembler::new(&agg.base(), None, opts, 14).unwrap();
+        for s in [0usize, 1] {
+            let r = plan.range(s);
+            first.add_shard(r, &agg.shard_sums(r.j0, r.j1)).unwrap();
+        }
+        let (df, flat) = first.snapshot_stats();
+        assert!(df.is_finite());
+        assert_eq!(flat.len(), 4 * 2 * 14);
+
+        // resumed: restore the two done shards, replay only the third
+        let mut resumed = ScanAssembler::new(&agg.base(), None, opts, 14).unwrap();
+        let done = [plan.range(0), plan.range(1)];
+        resumed.restore(&done, df, &flat).unwrap();
+        assert_eq!(resumed.assembled(), 10);
+        // restored ranges re-broadcast the same partial results
+        let (beta0, se0) = resumed.result_slices(plan.range(0)).unwrap();
+        assert_eq!(beta0.len(), 2 * 5);
+        assert_eq!(se0.len(), 2 * 5);
+        // overlapping restore is rejected like a duplicate shard
+        assert!(resumed.restore(&[plan.range(1)], df, &flat).is_err());
+        let r2 = plan.range(2);
+        resumed.add_shard(r2, &agg.shard_sums(r2.j0, r2.j1)).unwrap();
+        let got = resumed.finish().unwrap();
+        for tt in 0..2 {
+            assert_eq!(got.assoc[tt].df, want.assoc[tt].df);
+            for j in 0..14 {
+                assert_eq!(
+                    got.assoc[tt].beta[j].to_bits(),
+                    want.assoc[tt].beta[j].to_bits()
+                );
+                assert_eq!(got.assoc[tt].p[j].to_bits(), want.assoc[tt].p[j].to_bits());
             }
         }
     }

@@ -13,7 +13,6 @@
 
 use super::incremental::ScanAssembler;
 use super::messages::*;
-use crate::mpc::field::Fe;
 use crate::mpc::fixed::FixedCodec;
 use crate::mpc::masking::aggregate_masked;
 use crate::mpc::masking::PairwiseMasker;
@@ -60,7 +59,46 @@ pub struct SessionMetrics {
     /// broadcast + cross-product sums) — `O(lanes·H)`, independent of M
     /// (the E9 claim, asserted in `integration_select.rs`)
     pub bytes_max_select_round: u64,
+    /// shards restored from a checkpoint instead of recomputed (resume)
+    pub shards_skipped: u64,
+    /// parties that went silent mid-session but were survived — Shamir
+    /// share-sum reconstruction from a surviving quorum (the Degraded
+    /// completion; empty for a clean run)
+    pub dropouts: Vec<Dropout>,
 }
+
+/// A party that went silent, and at which secure-sum round (0 = base,
+/// s+1 = shard s, shards+1+r = SELECT round r).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dropout {
+    pub party: u64,
+    pub round: u64,
+}
+
+/// Typed session failure: a party stopped responding at a point where
+/// its contribution is unrecoverable — any round under the plaintext or
+/// masked backends (masks only cancel with every party present), or a
+/// Shamir round whose share fan-out never arrived. When a checkpoint
+/// dir is configured the state up to the last combined shard is already
+/// on disk, so the caller retries with `resume` instead of restarting
+/// from zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartyDropped {
+    pub party: u64,
+    pub round: u64,
+}
+
+impl std::fmt::Display for PartyDropped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "party {} dropped at secure-sum round {}",
+            self.party, self.round
+        )
+    }
+}
+
+impl std::error::Error for PartyDropped {}
 
 /// Leader state for one scan session over connected party channels —
 /// dedicated [`crate::net::Endpoint`]s (the classic deployment, session
@@ -112,9 +150,6 @@ impl<C: Channel> Leader<'_, C> {
         metrics.shards = plan.count();
         let codec = FixedCodec::new(self.cfg.frac_bits);
         let mut rng = Rng::new(seed);
-
-        // SETUP: pairwise seeds (simulated DH — delivered over the
-        // metered link so their cost is visible) + session params.
         let backend_code = match self.cfg.backend {
             Backend::Plaintext => 0u64,
             Backend::Masked => 1,
@@ -124,6 +159,36 @@ impl<C: Channel> Leader<'_, C> {
             Backend::Shamir { threshold } => threshold,
             _ => 0,
         };
+
+        // Resume: load the session's snapshot and check its fingerprint
+        // against this run's configuration — resuming across different
+        // seeds/backends/layouts would silently mix statistics.
+        let ckpt = if self.cfg.resume && !self.cfg.checkpoint_dir.is_empty() {
+            super::checkpoint::load(&self.cfg.checkpoint_dir, self.session)?
+        } else {
+            None
+        };
+        if let Some(c) = &ckpt {
+            anyhow::ensure!(
+                c.seed == seed
+                    && c.backend == backend_code
+                    && c.m == self.m as u64
+                    && c.k == self.k as u64
+                    && c.t == self.t as u64
+                    && c.shard_m == self.cfg.shard_m as u64
+                    && c.select_k == self.cfg.select_k as u64,
+                "checkpoint for session {} is from a different run configuration",
+                self.session
+            );
+            anyhow::ensure!(
+                c.done.iter().all(|&s| (s as usize) < plan.count()),
+                "checkpoint shard index beyond the shard plan"
+            );
+        }
+        let done: Vec<u64> = ckpt.as_ref().map_or_else(Vec::new, |c| c.done.clone());
+
+        // SETUP: pairwise seeds (simulated DH — delivered over the
+        // metered link so their cost is visible) + session params.
         let seed_matrix = PairwiseMasker::session_seeds(parties, &mut rng);
         for (p, ep) in self.endpoints.iter().enumerate() {
             let setup = Setup {
@@ -140,6 +205,7 @@ impl<C: Channel> Leader<'_, C> {
                 shard_m: self.cfg.shard_m as u64,
                 select_k: self.cfg.select_k as u64,
                 seeds: seed_matrix[p].clone(),
+                done_shards: done.clone(),
             };
             ep.send(&setup.to_frame())?;
         }
@@ -151,9 +217,12 @@ impl<C: Channel> Leader<'_, C> {
         }
 
         // Base round: collect + aggregate the O(K² + KT) covariate and
-        // trait stats.
+        // trait stats. Always re-run on resume — it is cheap and
+        // deterministic, and re-derives the CombineContext the snapshot
+        // deliberately leaves out.
+        let mut dropouts: Vec<Dropout> = Vec::new();
         let (base_flat, party_rs, round_bytes) =
-            self.collect_round(&codec, 0, base_flat_len(self.k, self.t))?;
+            self.collect_round(&codec, 0, base_flat_len(self.k, self.t), &mut dropouts)?;
         metrics.bytes_max_round = round_bytes;
         let base = unflatten_base(self.k, self.t, &base_flat)?;
 
@@ -169,19 +238,43 @@ impl<C: Channel> Leader<'_, C> {
         )?;
         metrics.combine_s += t0.elapsed().as_secs_f64();
 
+        // Restore checkpointed shards into the fresh assembler: their
+        // columns are marked assembled and their statistics scattered
+        // back, so only the remaining shards run secure-sum rounds.
+        if let Some(c) = &ckpt {
+            let ranges: Vec<_> = c.done.iter().map(|&s| plan.range(s as usize)).collect();
+            asm.restore(&ranges, c.df, &c.stats)?;
+            metrics.shards_skipped = c.done.len() as u64;
+        }
+
         // Shard rounds: aggregate + combine each shard as it arrives;
         // buffer the partial-result frames for the post-scan broadcast.
         // compress_wall_s stops at the last contribution received, so it
         // excludes the trailing combine (in pipelined runs the two phases
         // overlap, so compress_wall_s + combine_s may exceed total_s).
         let mut results = Vec::with_capacity(plan.count());
+        let mut done_now = done.clone();
         let mut last_contribution = Instant::now();
         for range in plan.ranges() {
+            if done.binary_search(&(range.index as u64)).is_ok() {
+                // restored from the checkpoint — re-broadcast the
+                // snapshot's partial result without a secure-sum round
+                let (beta, se) = asm.result_slices(range)?;
+                results.push(ShardResult {
+                    shard: range.index as u64,
+                    j0: range.j0 as u64,
+                    traits: self.t as u64,
+                    beta,
+                    se,
+                });
+                continue;
+            }
             let w = range.width();
             let (flat, _, round_bytes) = self.collect_round(
                 &codec,
                 range.index + 1,
                 shard_flat_len(self.k, self.t, w),
+                &mut dropouts,
             )?;
             last_contribution = Instant::now();
             metrics.bytes_max_round = metrics.bytes_max_round.max(round_bytes);
@@ -203,6 +296,32 @@ impl<C: Channel> Leader<'_, C> {
                 beta,
                 se,
             });
+            done_now.push(range.index as u64);
+            // Snapshot after every combined shard: a later death costs at
+            // most one shard of recompute. Written regardless of dropout
+            // state — the file is removed again on clean completion.
+            if !self.cfg.checkpoint_dir.is_empty() {
+                let (df, stats) = asm.snapshot_stats();
+                let mut done_sorted = done_now.clone();
+                done_sorted.sort_unstable();
+                super::checkpoint::save(
+                    &self.cfg.checkpoint_dir,
+                    &Checkpoint {
+                        version: CHECKPOINT_VERSION,
+                        session: self.session,
+                        seed,
+                        backend: backend_code,
+                        m: self.m as u64,
+                        k: self.k as u64,
+                        t: self.t as u64,
+                        shard_m: self.cfg.shard_m as u64,
+                        select_k: self.cfg.select_k as u64,
+                        done: done_sorted,
+                        df,
+                        stats,
+                    },
+                )?;
+            }
         }
         metrics.compress_wall_s = last_contribution.duration_since(t_compress).as_secs_f64();
 
@@ -212,9 +331,39 @@ impl<C: Channel> Leader<'_, C> {
 
         // SELECT phase: iterative forward stepwise over the cached
         // context (rank-1 basis growth, O(lanes·H) traffic per round).
+        // A degraded quorum finished the scan from survivor share-sums,
+        // but SELECT needs fresh contributions from *every* party — with
+        // dropouts on record, follow the empty-shortlist path instead so
+        // the surviving parties exit cleanly.
         let mut select_results: Vec<SelectResult> = Vec::new();
         let select = if self.cfg.select_k > 0 {
-            self.select_phase(&codec, &out, cx, plan.count(), &mut metrics, &mut select_results)?
+            if dropouts.is_empty() {
+                self.select_phase(
+                    &codec,
+                    &out,
+                    cx,
+                    plan.count(),
+                    &mut metrics,
+                    &mut select_results,
+                    &mut dropouts,
+                )?
+            } else {
+                let sf = SelectSetup {
+                    k: self.cfg.select_k as u64,
+                    policy: self.cfg.select_policy.code(),
+                    lanes: 1,
+                    p_enter: self.cfg.select_alpha,
+                    candidates: vec![],
+                }
+                .to_frame();
+                let done_f = SelectDone { rounds: 0 }.to_frame();
+                for ep in self.endpoints {
+                    metrics.bytes_select += sf.wire_len() + done_f.wire_len();
+                    ep.send(&sf)?;
+                    ep.send(&done_f)?;
+                }
+                None
+            }
         } else {
             None
         };
@@ -236,6 +385,11 @@ impl<C: Channel> Leader<'_, C> {
         metrics.bytes_total = self.total_bytes();
         metrics.messages_total =
             self.endpoints.iter().map(|e| e.meter().messages()).sum();
+        metrics.dropouts = dropouts;
+        // Clean completion: the snapshot has served its purpose.
+        if !self.cfg.checkpoint_dir.is_empty() {
+            super::checkpoint::remove(&self.cfg.checkpoint_dir, self.session)?;
+        }
         Ok((out, select, metrics))
     }
 
@@ -244,6 +398,7 @@ impl<C: Channel> Leader<'_, C> {
     /// promotions and fold the returning cross-product sums into the
     /// grown bases. Returns `None` when the shortlist is empty (nothing
     /// with a finite scan p-value).
+    #[allow(clippy::too_many_arguments)]
     fn select_phase(
         &self,
         codec: &FixedCodec,
@@ -252,6 +407,7 @@ impl<C: Channel> Leader<'_, C> {
         shards: usize,
         metrics: &mut SessionMetrics,
         results: &mut Vec<SelectResult>,
+        dropouts: &mut Vec<Dropout>,
     ) -> anyhow::Result<Option<SelectOutput>> {
         let cand = choose_candidates(out, self.cfg.select_candidates.max(1));
         let lanes = match self.cfg.select_policy {
@@ -286,7 +442,7 @@ impl<C: Channel> Leader<'_, C> {
         // shortlist columns (all of it already in the parties' cached
         // compressed statistics — no fresh O(N·M·K) compress).
         let (flat, _, rb) =
-            self.collect_round(codec, shards + 1, shard_flat_len(self.k, self.t, h))?;
+            self.collect_round(codec, shards + 1, shard_flat_len(self.k, self.t, h), dropouts)?;
         bytes_select += rb;
         let sums = unflatten_shard(self.k, self.t, h, &flat)?;
         let mut st =
@@ -311,7 +467,7 @@ impl<C: Channel> Leader<'_, C> {
                 ep.send(&pf)?;
             }
             let (flat, _, rb) =
-                self.collect_round(codec, shards + 1 + round, promote.active() * h)?;
+                self.collect_round(codec, shards + 1 + round, promote.active() * h, dropouts)?;
             round_bytes += rb;
             st.fold(&picks, &flat)?;
             metrics.select_rounds += 1;
@@ -344,11 +500,18 @@ impl<C: Channel> Leader<'_, C> {
     /// The third return value is the round's wire bytes, counted from
     /// the round's own frames (meter deltas would also pick up shards
     /// the parties have already streamed ahead).
+    ///
+    /// Dropout handling: a transport-dead party fails the round with a
+    /// typed [`PartyDropped`] — except the Shamir share-sum leg, where
+    /// every survivor's sum already folds in the dead party's
+    /// contribution, so the round reconstructs exactly from any
+    /// surviving quorum and records the death in `dropouts` instead.
     fn collect_round(
         &self,
         codec: &FixedCodec,
         round: usize,
         expect_len: usize,
+        dropouts: &mut Vec<Dropout>,
     ) -> anyhow::Result<(Vec<f64>, Option<Vec<crate::linalg::Matrix>>, u64)> {
         let parties = self.endpoints.len();
         let mut round_bytes = 0u64;
@@ -356,8 +519,8 @@ impl<C: Channel> Leader<'_, C> {
             Backend::Plaintext => {
                 let mut sum = vec![0.0f64; expect_len];
                 let mut rs = Vec::with_capacity(parties);
-                for ep in self.endpoints {
-                    let f = recv_ok(ep)?;
+                for (p, ep) in self.endpoints.iter().enumerate() {
+                    let f = recv_or_dropped(ep, p, round)?;
                     round_bytes += f.wire_len();
                     let flat = if round == 0 {
                         let msg = PlainBase::from_frame(&f)?;
@@ -383,8 +546,8 @@ impl<C: Channel> Leader<'_, C> {
             }
             Backend::Masked => {
                 let mut contributions = Vec::with_capacity(parties);
-                for ep in self.endpoints {
-                    let f = recv_ok(ep)?;
+                for (p, ep) in self.endpoints.iter().enumerate() {
+                    let f = recv_or_dropped(ep, p, round)?;
                     round_bytes += f.wire_len();
                     let enc = if round == 0 {
                         MaskedBase::from_frame(&f)?.enc
@@ -405,10 +568,24 @@ impl<C: Channel> Leader<'_, C> {
                 Ok((codec.decode_vec(&ring_sum), None, round_bytes))
             }
             Backend::Shamir { threshold } => {
-                // Round trip 1: collect each party's share fan-out.
+                // Round trip 1: collect each party's share fan-out. A
+                // death here is unrecoverable — the party's data for
+                // this round was never shared with anyone — so it fails
+                // typed, naming the party and round. A party already on
+                // the dropout list fails fast without waiting out a
+                // second recv timeout.
                 let mut outgoing: Vec<Vec<Vec<u64>>> = Vec::with_capacity(parties);
-                for ep in self.endpoints {
-                    let f = recv_ok(ep)?;
+                for (p, ep) in self.endpoints.iter().enumerate() {
+                    if dropouts.iter().any(|d| d.party == p as u64) {
+                        return Err(anyhow::Error::new(PartyDropped {
+                            party: p as u64,
+                            round: round as u64,
+                        })
+                        .context(format!(
+                            "party {p} already dropped in an earlier round"
+                        )));
+                    }
+                    let f = recv_or_dropped(ep, p, round)?;
                     round_bytes += f.wire_len();
                     let msg = ShamirOut::from_frame(&f)?;
                     anyhow::ensure!(
@@ -427,33 +604,63 @@ impl<C: Channel> Leader<'_, C> {
                     round_bytes += f.wire_len();
                     ep.send(&f)?;
                 }
-                // Round trip 2: collect share-sums, reconstruct from the
-                // first `threshold` parties (any quorum works; tested).
-                let mut sums: Vec<Vec<u64>> = Vec::with_capacity(parties);
-                for ep in self.endpoints {
-                    let f = recv_ok(ep)?;
-                    round_bytes += f.wire_len();
-                    let msg = ShamirSum::from_frame(&f)?;
-                    anyhow::ensure!(
-                        msg.round == round as u64,
-                        "shamir sum round out of sync: {} vs {round}",
-                        msg.round
-                    );
-                    anyhow::ensure!(msg.sum.len() == expect_len, "share sum length mismatch");
-                    sums.push(msg.sum);
-                }
+                // Round trip 2: collect share-sums. Every survivor's
+                // sum folds in ALL parties' round contributions (the
+                // fan-out above reached everyone), so a death on this
+                // leg loses nothing: reconstruct from the first
+                // `threshold` *surviving* parties at their true
+                // evaluation points — field-exact for any quorum, hence
+                // bit-identical to the no-dropout run — and record the
+                // death for the metrics' Degraded verdict.
                 let quorum = threshold.min(parties);
-                let mut flat = vec![0.0f64; expect_len];
-                for (i, slot) in flat.iter_mut().enumerate() {
-                    let shares: Vec<crate::mpc::shamir::Share> = (0..quorum)
-                        .map(|q| crate::mpc::shamir::Share {
-                            x: q as u64 + 1,
-                            y: Fe(sums[q][i]),
-                        })
-                        .collect();
-                    let fe = crate::mpc::shamir::reconstruct(&shares);
-                    *slot = fe.to_i64() as f64 / codec.scale();
+                let mut sums: Vec<Option<Vec<u64>>> = vec![None; parties];
+                for (p, ep) in self.endpoints.iter().enumerate() {
+                    match ep.recv() {
+                        Ok(f) if f.tag == TAG_ERROR => {
+                            anyhow::bail!("party error: {}", parse_error(&f))
+                        }
+                        Ok(f) => {
+                            round_bytes += f.wire_len();
+                            let msg = ShamirSum::from_frame(&f)?;
+                            anyhow::ensure!(
+                                msg.round == round as u64,
+                                "shamir sum round out of sync: {} vs {round}",
+                                msg.round
+                            );
+                            anyhow::ensure!(
+                                msg.sum.len() == expect_len,
+                                "share sum length mismatch"
+                            );
+                            sums[p] = Some(msg.sum);
+                        }
+                        Err(_) => {
+                            dropouts.push(Dropout { party: p as u64, round: round as u64 })
+                        }
+                    }
                 }
+                let live: Vec<usize> = (0..parties).filter(|&p| sums[p].is_some()).collect();
+                if live.len() < quorum {
+                    let d = dropouts.last().copied().unwrap_or(Dropout {
+                        party: 0,
+                        round: round as u64,
+                    });
+                    return Err(anyhow::Error::new(PartyDropped {
+                        party: d.party,
+                        round: round as u64,
+                    })
+                    .context(format!(
+                        "quorum lost at round {round}: {} of {parties} share-sums \
+                         arrived, threshold {quorum}",
+                        live.len()
+                    )));
+                }
+                let points: Vec<u64> = live[..quorum].iter().map(|&p| p as u64 + 1).collect();
+                let vecs: Vec<&[u64]> =
+                    live[..quorum].iter().map(|&p| sums[p].as_deref().unwrap()).collect();
+                let flat: Vec<f64> = crate::mpc::shamir::reconstruct_sums(&points, &vecs)
+                    .iter()
+                    .map(|fe| fe.to_i64() as f64 / codec.scale())
+                    .collect();
                 Ok((flat, None, round_bytes))
             }
         }
@@ -464,11 +671,17 @@ impl<C: Channel> Leader<'_, C> {
     }
 }
 
-/// Receive a frame, converting a party-side ERROR report into an Err.
-fn recv_ok<C: Channel>(ep: &C) -> anyhow::Result<Frame> {
-    let f = ep.recv()?;
-    if f.tag == TAG_ERROR {
-        anyhow::bail!("party error: {}", parse_error(&f));
+/// Receive a frame, converting a party-side ERROR report into an Err
+/// and a dead transport (closed stream, recv timeout) into a typed
+/// [`PartyDropped`] naming the party and secure-sum round.
+fn recv_or_dropped<C: Channel>(ep: &C, party: usize, round: usize) -> anyhow::Result<Frame> {
+    match ep.recv() {
+        Ok(f) if f.tag == TAG_ERROR => anyhow::bail!("party error: {}", parse_error(&f)),
+        Ok(f) => Ok(f),
+        Err(e) => Err(anyhow::Error::new(PartyDropped {
+            party: party as u64,
+            round: round as u64,
+        })
+        .context(format!("recv from party {party}: {e:#}"))),
     }
-    Ok(f)
 }

@@ -49,6 +49,11 @@ pub const TAG_SELECT_SETUP: u32 = 13;
 pub const TAG_PROMOTE: u32 = 14;
 pub const TAG_SELECT_RESULT: u32 = 15;
 pub const TAG_SELECT_DONE: u32 = 16;
+pub const TAG_CHECKPOINT: u32 = 17;
+
+/// Checkpoint frame format version (bumped on layout changes; loaders
+/// reject other versions rather than guess).
+pub const CHECKPOINT_VERSION: u64 = 1;
 
 /// Sentinel variant index in PROMOTE/SELECT_RESULT lane vectors: the
 /// lane has already stopped and promotes nothing this round.
@@ -79,6 +84,12 @@ pub struct Setup {
     pub select_k: u64,
     /// pairwise seeds, row `party_index` of the symmetric seed matrix
     pub seeds: Vec<u64>,
+    /// shards already combined by a previous (interrupted) run of this
+    /// session — the party skips their compress+contribute rounds on
+    /// resume. Empty = fresh session. Round numbering stays absolute
+    /// (round s+1 for shard s), so the PRG mask/share domains of the
+    /// remaining rounds are untouched by the skips.
+    pub done_shards: Vec<u64>,
 }
 
 impl WireMessage for Setup {
@@ -99,6 +110,7 @@ impl WireMessage for Setup {
         s.u64("shard_m", self.shard_m);
         s.u64("select_k", self.select_k);
         s.u64s("seeds", &self.seeds);
+        s.u64s("done_shards", &self.done_shards);
     }
 
     fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
@@ -116,6 +128,7 @@ impl WireMessage for Setup {
             shard_m: s.u64("shard_m")?,
             select_k: s.u64("select_k")?,
             seeds: s.u64s("seeds")?,
+            done_shards: s.u64s("done_shards")?,
         })
     }
 }
@@ -535,6 +548,96 @@ impl WireMessage for SelectResult {
     }
 }
 
+/// Leader-side per-session scan checkpoint, written after every
+/// combined shard. Self-describing: the session fingerprint fields
+/// (`seed`/`backend`/`m`/`k`/`t`/`shard_m`/`select_k`) must match the
+/// resuming run's config or the snapshot is rejected — resuming a
+/// different session from a stale file would silently mix statistics.
+///
+/// Only the *assembled shard statistics* are snapshotted: `done` lists
+/// the combined shards, `df`/`stats` the assembler's filled state
+/// (`stats` is the flat `[β̂ | σ̂ | t | p]` quadruple per trait,
+/// `4·T·M` values, NaN at unfilled columns). The base round and the
+/// SELECT phase are deliberately NOT checkpointed — both are cheap and
+/// deterministic, so a resume re-runs them bit-identically.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub version: u64,
+    pub session: u64,
+    /// cohort seed (fingerprint only — parties re-derive their data)
+    pub seed: u64,
+    /// backend wire code, as in [`Setup::backend`]
+    pub backend: u64,
+    pub m: u64,
+    pub k: u64,
+    pub t: u64,
+    pub shard_m: u64,
+    pub select_k: u64,
+    /// combined shard indices, strictly increasing
+    pub done: Vec<u64>,
+    /// residual degrees of freedom (NaN = not yet set)
+    pub df: f64,
+    /// flat per-trait stats, `4·t·m` values: for each trait,
+    /// `[beta(m) | se(m) | tstat(m) | p(m)]`; NaN where unfilled
+    pub stats: Vec<f64>,
+}
+
+impl WireMessage for Checkpoint {
+    const TAG: u32 = TAG_CHECKPOINT;
+    const NAME: &'static str = "CHECKPOINT";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("version", self.version);
+        s.u64("session", self.session);
+        s.u64("seed", self.seed);
+        s.u64("backend", self.backend);
+        s.u64("m", self.m);
+        s.u64("k", self.k);
+        s.u64("t", self.t);
+        s.u64("shard_m", self.shard_m);
+        s.u64("select_k", self.select_k);
+        s.u64s("done", &self.done);
+        s.f64("df", self.df);
+        s.f64s("stats", &self.stats);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let c = Checkpoint {
+            version: s.u64("version")?,
+            session: s.u64("session")?,
+            seed: s.u64("seed")?,
+            backend: s.u64("backend")?,
+            m: s.u64("m")?,
+            k: s.u64("k")?,
+            t: s.u64("t")?,
+            shard_m: s.u64("shard_m")?,
+            select_k: s.u64("select_k")?,
+            done: s.u64s("done")?,
+            df: s.f64("df")?,
+            stats: s.f64s("stats")?,
+        };
+        anyhow::ensure!(
+            c.version == CHECKPOINT_VERSION,
+            "unsupported checkpoint version {} (want {})",
+            c.version,
+            CHECKPOINT_VERSION
+        );
+        anyhow::ensure!(c.t >= 1, "trait count must be ≥ 1");
+        let want = 4usize
+            .checked_mul(c.t as usize)
+            .and_then(|x| x.checked_mul(c.m as usize));
+        anyhow::ensure!(
+            want == Some(c.stats.len()),
+            "checkpoint stats length {} != 4·t·m",
+            c.stats.len()
+        );
+        for w in c.done.windows(2) {
+            anyhow::ensure!(w[0] < w[1], "done shards must be strictly increasing");
+        }
+        Ok(c)
+    }
+}
+
 /// Error report from a party.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ErrorMsg {
@@ -589,6 +692,7 @@ mod tests {
             shard_m: 128,
             select_k: 3,
             seeds: vec![1, 2, 3, 4, u64::MAX],
+            done_shards: vec![0, 3],
         }
     }
 
@@ -771,6 +875,51 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_roundtrip_and_rejects() {
+        let m = 3u64;
+        let t = 2u64;
+        let mut stats = vec![f64::NAN; (4 * t * m) as usize];
+        stats[0] = 0.5;
+        stats[7] = -1.25;
+        let c = Checkpoint {
+            version: CHECKPOINT_VERSION,
+            session: 4,
+            seed: 0xC4A0,
+            backend: 2,
+            m,
+            k: 5,
+            t,
+            shard_m: 2,
+            select_k: 0,
+            done: vec![0, 1],
+            df: f64::NAN,
+            stats,
+        };
+        // NaN breaks PartialEq — compare bit patterns on the binary path
+        let got = Checkpoint::from_frame(&c.to_frame()).unwrap();
+        assert_eq!(got.session, 4);
+        assert_eq!(got.seed, 0xC4A0);
+        assert_eq!(got.done, vec![0, 1]);
+        assert!(got.df.is_nan());
+        assert_eq!(got.stats.len(), c.stats.len());
+        for (a, b) in got.stats.iter().zip(&c.stats) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // wrong version
+        let mut bad = c.clone();
+        bad.version = CHECKPOINT_VERSION + 1;
+        assert!(Checkpoint::from_frame(&bad.to_frame()).is_err());
+        // stats length not 4·t·m
+        let mut bad = c.clone();
+        bad.stats.pop();
+        assert!(Checkpoint::from_frame(&bad.to_frame()).is_err());
+        // non-increasing done list
+        let mut bad = c.clone();
+        bad.done = vec![1, 1];
+        assert!(Checkpoint::from_frame(&bad.to_frame()).is_err());
+    }
+
+    #[test]
     fn error_frame_roundtrip() {
         let f = error_frame("boom");
         assert_eq!(parse_error(&f), "boom");
@@ -796,6 +945,7 @@ mod tests {
             TAG_PROMOTE,
             TAG_SELECT_RESULT,
             TAG_SELECT_DONE,
+            TAG_CHECKPOINT,
         ];
         for (i, a) in tags.iter().enumerate() {
             for b in &tags[i + 1..] {

@@ -19,6 +19,7 @@
 //! session-keyed mask domains — the same protocol state machines over
 //! [`crate::net::SessionChannel`]s instead of dedicated endpoints.
 
+pub mod checkpoint;
 pub mod messages;
 pub mod party;
 pub mod leader;
@@ -26,7 +27,7 @@ pub mod incremental;
 pub mod session;
 
 pub use incremental::{IncrementalAggregate, ScanAssembler};
-pub use leader::{Leader, SessionMetrics};
+pub use leader::{Dropout, Leader, PartyDropped, SessionMetrics};
 pub use party::{ComputeBackend, PartyResult};
 pub use session::{
     party_service, run_session_batch, BatchOptions, SessionBatchResult, SessionManager,

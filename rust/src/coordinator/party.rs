@@ -181,6 +181,12 @@ fn serve_inner<C: Channel>(
     let m = setup.m as usize;
     let t = setup.t as usize;
     let plan = ShardPlan::new(m, setup.shard_m as usize);
+    for w in setup.done_shards.windows(2) {
+        anyhow::ensure!(w[0] < w[1], "done shards must be strictly increasing");
+    }
+    for &s in &setup.done_shards {
+        anyhow::ensure!((s as usize) < plan.count(), "done shard {s} beyond the shard plan");
+    }
 
     Compress::from_frame(&recv_checked(endpoint)?)?;
 
@@ -245,6 +251,12 @@ fn serve_inner<C: Channel>(
             }
             Secure::Masked(masker) => {
                 let mut enc = codec.encode_vec(flat)?;
+                // Key the pad by the absolute protocol round, not the
+                // call count: with checkpointed shards skipped on
+                // resume, the remaining rounds must use exactly the
+                // mask domains an uninterrupted run would — a pad
+                // position never re-keys onto a different plaintext.
+                masker.round = round as u64;
                 masker.mask_in_place(&mut enc);
                 if round == 0 {
                     endpoint.send(&MaskedBase { enc }.to_frame())?;
@@ -258,7 +270,13 @@ fn serve_inner<C: Channel>(
                     .iter()
                     .map(|&v| Ok(Fe::from_i64(codec.encode(v)? as i64)))
                     .collect::<anyhow::Result<_>>()?;
-                let share_vecs = shamir::share_vec(&secrets, *parties, *threshold, rng);
+                // Per-round share randomness (the Shamir analogue of the
+                // masked pad's absolute-round keying): skipped shards
+                // never shift the polynomial stream onto different
+                // secrets, so a resumed session reuses no randomness.
+                let mut round_rng = rng.derive(round as u64);
+                let share_vecs =
+                    shamir::share_vec(&secrets, *parties, *threshold, &mut round_rng);
                 // ship y-values only; x is implied by recipient index + 1
                 let ys: Vec<Vec<u64>> = share_vecs
                     .iter()
@@ -291,7 +309,15 @@ fn serve_inner<C: Channel>(
     // order while we keep compressing ahead of it; in cached mode each
     // shard's columns are freed right after this send.
     contribute(&base.flatten(), 0)?;
-    let ranges: Vec<ShardRange> = plan.ranges().collect();
+    // Shards the leader restored from a checkpoint need no fresh
+    // contribution — drop them from the compress stream. Round numbers
+    // stay absolute (r.index + 1), so the remaining rounds keep the
+    // mask/share domains of an uninterrupted run, and the result drain
+    // below still expects every shard's broadcast frame.
+    let ranges: Vec<ShardRange> = plan
+        .ranges()
+        .filter(|r| setup.done_shards.binary_search(&(r.index as u64)).is_err())
+        .collect();
     let fanout = state.shard_fanout(ranges.len());
     if fanout <= 1 {
         for r in ranges {

@@ -89,6 +89,13 @@ fn scan_command() -> Command {
         .opt("select-alpha", "1e-4", "SELECT stop rule: entry p-value threshold")
         .opt("select-policy", "union", "SELECT lane policy: union|per-trait")
         .opt("select-candidates", "32", "SELECT candidate-shortlist cap per trait")
+        .opt(
+            "checkpoint-dir",
+            "",
+            "leader-side checkpoint directory: snapshot after every combined shard \
+             (empty = checkpointing off)",
+        )
+        .flag("resume", "resume from an existing checkpoint in --checkpoint-dir")
 }
 
 fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
@@ -139,6 +146,18 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     );
     cfg.scan.select_policy = dash::scan::SelectPolicy::parse(a.get("select-policy").unwrap())?;
     cfg.scan.select_candidates = a.get_usize("select-candidates")?;
+    if let Some(dir) = a.get("checkpoint-dir") {
+        if !dir.is_empty() {
+            cfg.scan.checkpoint_dir = dir.to_string();
+        }
+    }
+    if a.flag("resume") {
+        cfg.scan.resume = true;
+    }
+    anyhow::ensure!(
+        !cfg.scan.resume || !cfg.scan.checkpoint_dir.is_empty(),
+        "--resume requires --checkpoint-dir"
+    );
     let alpha = a.get_f64("alpha")?;
     cfg.sessions = a.get_usize("sessions")?;
     anyhow::ensure!(cfg.sessions >= 1, "--sessions must be ≥ 1");

@@ -88,6 +88,32 @@ pub fn reconstruct_vec(party_shares: &[&[Share]]) -> Vec<Fe> {
         .collect()
 }
 
+/// Element-wise Lagrange reconstruction from summed share vectors held
+/// by an arbitrary surviving quorum. `points[q]` is party `q`'s
+/// evaluation point (1-based party id) and `sums[q]` its share-sum
+/// vector of raw field words — the dropout-recovery path feeds whichever
+/// parties stayed alive, which need not be a prefix of the roster.
+/// Reconstruction is field-exact for **any** ≥ threshold distinct
+/// points, so a degraded quorum yields bit-identical secrets.
+pub fn reconstruct_sums(points: &[u64], sums: &[&[u64]]) -> Vec<Fe> {
+    assert_eq!(points.len(), sums.len(), "one evaluation point per sum vector");
+    assert!(!sums.is_empty());
+    let len = sums[0].len();
+    for s in sums {
+        assert_eq!(s.len(), len, "ragged share-sum vectors");
+    }
+    (0..len)
+        .map(|i| {
+            let row: Vec<Share> = points
+                .iter()
+                .zip(sums)
+                .map(|(&x, s)| Share { x, y: Fe(s[i]) })
+                .collect();
+            reconstruct(&row)
+        })
+        .collect()
+}
+
 /// Share-wise addition: add another party's contribution share-by-share
 /// (same evaluation points required).
 pub fn add_share_vecs(a: &mut [Share], b: &[Share]) {
@@ -183,6 +209,39 @@ mod tests {
         let party_shares = share_vec(&secrets, 5, 3, &mut rng);
         let quorum: Vec<&[Share]> = party_shares[..3].iter().map(|v| v.as_slice()).collect();
         assert_eq!(reconstruct_vec(&quorum), secrets);
+    }
+
+    #[test]
+    fn reconstruct_sums_from_any_survivor_subset_is_exact() {
+        // 5 parties, t = 3: sum two shared vectors share-wise, then
+        // reconstruct the totals from every 3-subset of "survivors" —
+        // all subsets must agree exactly (the Degraded-but-correct
+        // property the dropout recovery path relies on)
+        let mut rng = Rng::new(96);
+        let a: Vec<Fe> = (0..9).map(|_| random_fe(&mut rng)).collect();
+        let b: Vec<Fe> = (0..9).map(|_| random_fe(&mut rng)).collect();
+        let want: Vec<Fe> = a.iter().zip(&b).map(|(x, y)| x.add(*y)).collect();
+        let mut party_sums = share_vec(&a, 5, 3, &mut rng);
+        for (acc, sh) in party_sums.iter_mut().zip(share_vec(&b, 5, 3, &mut rng)) {
+            add_share_vecs(acc, &sh);
+        }
+        let raw: Vec<Vec<u64>> = party_sums
+            .iter()
+            .map(|v| v.iter().map(|s| s.y.0).collect())
+            .collect();
+        for i in 0..5 {
+            for j in i + 1..5 {
+                for k in j + 1..5 {
+                    let points = [i as u64 + 1, j as u64 + 1, k as u64 + 1];
+                    let sums = [raw[i].as_slice(), raw[j].as_slice(), raw[k].as_slice()];
+                    assert_eq!(
+                        reconstruct_sums(&points, &sums),
+                        want,
+                        "survivors {points:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub enum FaultMode {
     Reorder,
     /// the frame is delivered to a different session
     Misroute { to: u64 },
+    /// the frame **and every subsequent frame** of the targeted session
+    /// in this direction vanish — a persistent one-directional
+    /// connection death, the party-dropout axis of the chaos battery
+    /// (the recovery path in `coordinator::leader` must turn this into
+    /// a resumed or typed-degraded result, never a restart or a hang)
+    Hangup,
 }
 
 /// Which direction of the wrapped transport is perturbed.
@@ -68,7 +74,12 @@ fn hits(spec: &FaultSpec, seen: &AtomicU64, sid: u64) -> bool {
     if sid != spec.session || sid == SESSION_CTRL {
         return false;
     }
-    seen.fetch_add(1, Ordering::SeqCst) == spec.nth
+    let n = seen.fetch_add(1, Ordering::SeqCst);
+    match spec.mode {
+        // a hangup is permanent: the nth and every later frame die
+        FaultMode::Hangup => n >= spec.nth,
+        _ => n == spec.nth,
+    }
 }
 
 /// Receive-direction fault logic, factored out of the pull-mode
@@ -91,7 +102,7 @@ impl RecvFilter {
     pub fn apply(&self, sid: u64, f: Frame) -> Vec<(u64, Frame)> {
         if hits(&self.spec, &self.seen, sid) {
             return match self.spec.mode {
-                FaultMode::Drop => Vec::new(),
+                FaultMode::Drop | FaultMode::Hangup => Vec::new(),
                 FaultMode::Duplicate => vec![(sid, f.clone()), (sid, f)],
                 FaultMode::Misroute { to } => vec![(to, f)],
                 FaultMode::Reorder => {
@@ -157,7 +168,7 @@ impl SessionTransport for FaultyTransport {
         }
         if hits(&self.spec, &self.seen, sid) {
             return match self.spec.mode {
-                FaultMode::Drop => Ok(0),
+                FaultMode::Drop | FaultMode::Hangup => Ok(0),
                 FaultMode::Duplicate => {
                     let a = self.inner.send_s(sid, f)?;
                     let b = self.inner.send_s(sid, f)?;
@@ -379,6 +390,48 @@ mod tests {
         b.send_s(4, &frame(9)).unwrap();
         assert_eq!(t.recv_s().unwrap().1.reader().u64().unwrap(), 9);
         assert_eq!(t.recv_s().unwrap().1.reader().u64().unwrap(), 9);
+    }
+
+    #[test]
+    fn hangup_kills_the_session_from_nth_onward() {
+        // receive side: frames 0..nth flow, nth and everything after die,
+        // other sessions keep flowing
+        let (a, b) = duplex_pair(ByteMeter::new());
+        let t = FaultyTransport::new(
+            Box::new(a),
+            FaultSpec {
+                party: 0,
+                dir: FaultDir::Recv,
+                mode: FaultMode::Hangup,
+                session: 4,
+                nth: 2,
+            },
+        );
+        for v in 0..5u64 {
+            b.send_s(4, &frame(v)).unwrap();
+        }
+        b.send_s(9, &frame(100)).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            let (sid, f) = t.recv_s().unwrap();
+            got.push((sid, f.reader().u64().unwrap()));
+        }
+        assert_eq!(got, vec![(4, 0), (4, 1), (9, 100)]);
+
+        // send side: same persistence
+        let (t, peer) = faulty_pair(FaultSpec {
+            party: 0,
+            dir: FaultDir::Send,
+            mode: FaultMode::Hangup,
+            session: 2,
+            nth: 1,
+        });
+        t.send_s(2, &frame(0)).unwrap();
+        assert_eq!(t.send_s(2, &frame(1)).unwrap(), 0);
+        assert_eq!(t.send_s(2, &frame(2)).unwrap(), 0);
+        t.send_s(3, &frame(30)).unwrap();
+        assert_eq!(peer.recv_s().unwrap().1.reader().u64().unwrap(), 0);
+        assert_eq!(peer.recv_s().unwrap().0, 3);
     }
 
     #[test]

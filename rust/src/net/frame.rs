@@ -23,6 +23,14 @@ pub const FRAME_V2_MAGIC: u32 = 0xD5A2_F2AA;
 /// session id.
 pub const FRAME_V2_OVERHEAD: u64 = 4 + 8;
 
+/// Largest payload length accepted from the wire, in either framing
+/// version and by both the blocking reader and the incremental decoder.
+/// Checked against the peer's length word **as a u64, before any cast
+/// or allocation** — a corrupted or hostile length must surface as a
+/// clean error, never a huge allocation or a lossy `as usize` truncation
+/// on 32-bit targets.
+pub const MAX_FRAME_LEN: u64 = 1 << 32;
+
 /// A tagged frame.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
@@ -218,9 +226,9 @@ impl<R: Read> FrameReader<R> {
     fn read_body(&mut self, tag: u32) -> anyhow::Result<Frame> {
         let mut len = [0u8; 8];
         self.r.read_exact(&mut len)?;
-        let len = u64::from_le_bytes(len) as usize;
-        anyhow::ensure!(len <= 1 << 32, "frame too large: {len} bytes");
-        let mut payload = vec![0u8; len];
+        let len = u64::from_le_bytes(len);
+        anyhow::ensure!(len <= MAX_FRAME_LEN, "frame too large: {len} bytes");
+        let mut payload = vec![0u8; len as usize];
         self.r.read_exact(&mut payload)?;
         Ok(Frame { tag, payload })
     }
@@ -285,7 +293,7 @@ impl FrameDecoder {
             (12usize, 0u64, self.word(0))
         };
         let len = if hdr == 24 { self.long(16) } else { self.long(4) };
-        anyhow::ensure!(len <= 1 << 32, "frame too large: {len} bytes");
+        anyhow::ensure!(len <= MAX_FRAME_LEN, "frame too large: {len} bytes");
         let total = hdr + len as usize;
         if avail < total {
             return Ok(None);
@@ -366,6 +374,24 @@ mod tests {
         g.put_u64(u64::MAX / 8);
         assert!(g.reader().u64_vec().is_err());
         assert!(g.reader().bytes().is_err());
+    }
+
+    #[test]
+    fn implausible_length_word_is_error_in_both_read_paths() {
+        // a v1 header whose length word exceeds MAX_FRAME_LEN must fail
+        // before allocating, through read(), read_any(), and the
+        // incremental decoder alike
+        let mut v1 = 3u32.to_le_bytes().to_vec();
+        v1.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = FrameReader::new(v1.as_slice()).read().unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"), "{err:#}");
+        let err = FrameReader::new(v1.as_slice()).read_any().unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"), "{err:#}");
+        // boundary: exactly MAX_FRAME_LEN + 1 (would truncate to 1 under
+        // a 32-bit `as usize` cast) is rejected too
+        let mut edge = 3u32.to_le_bytes().to_vec();
+        edge.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(FrameReader::new(edge.as_slice()).read_any().is_err());
     }
 
     #[test]

@@ -255,8 +255,13 @@ impl MuxCore {
     fn recv_on(&self, sid: u64) -> anyhow::Result<Frame> {
         // one deadline per receive — other sessions' traffic waking the
         // condvar must not extend this session's wait (the liveness
-        // bound the chaos battery relies on)
-        let deadline = self.opts.recv_timeout.map(|d| std::time::Instant::now() + d);
+        // bound the chaos battery relies on). `recv_timeout: None` means
+        // wait forever on a plain (zero-CPU) condvar wait, never a
+        // zero-duration `wait_timeout` spin.
+        let deadline = self
+            .opts
+            .recv_timeout
+            .map(|d| (std::time::Instant::now() + d, d));
         let mut st = self.state.lock().unwrap();
         loop {
             match st.queues.get_mut(&sid) {
@@ -276,14 +281,13 @@ impl MuxCore {
             }
             st = match deadline {
                 None => self.cv.wait(st).unwrap(),
-                Some(deadline) => {
+                Some((deadline, timeout)) => {
                     let now = std::time::Instant::now();
                     let Some(left) = deadline.checked_duration_since(now).filter(|d| {
                         !d.is_zero()
                     }) else {
                         anyhow::bail!(
-                            "session {sid}: timed out after {:?} waiting for a frame",
-                            self.opts.recv_timeout.unwrap_or_default()
+                            "session {sid}: timed out after {timeout:?} waiting for a frame"
                         );
                     };
                     self.cv.wait_timeout(st, left).unwrap().0
@@ -601,6 +605,76 @@ mod tests {
         let a = leader.open(1).unwrap();
         let err = a.recv().unwrap_err();
         assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn none_timeout_recv_blocks_until_a_frame_arrives() {
+        // recv_timeout: None must wait indefinitely (no spurious timeout
+        // error) and wake when a frame finally lands
+        let (l, p) = duplex_pair(ByteMeter::new());
+        let leader = SessionMux::over(
+            l,
+            MuxOptions { accept: false, recv_timeout: None, ..Default::default() },
+        );
+        let party = SessionMux::over(p, MuxOptions { accept: true, ..Default::default() });
+        let a = leader.open(1).unwrap();
+        a.send(&frame(1, 1)).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        pa.recv().unwrap();
+        let t = std::thread::spawn(move || a.recv());
+        std::thread::sleep(Duration::from_millis(120));
+        pa.send(&frame(2, 7)).unwrap();
+        let got = t.join().unwrap().unwrap();
+        assert_eq!(got.reader().u64().unwrap(), 7);
+        finish(&leader, &party);
+    }
+
+    /// Thread CPU ticks (utime + stime) of the calling thread, from
+    /// procfs — the busy-spin detector for the None-timeout wait.
+    #[cfg(target_os = "linux")]
+    fn own_thread_cpu_ticks() -> u64 {
+        let stat = std::fs::read_to_string("/proc/thread-self/stat").unwrap();
+        // fields after the parenthesized comm: state is field 3, so
+        // utime (field 14) and stime (field 15) are offsets 11 and 12
+        let rest = stat.rsplit(')').next().unwrap();
+        let fs: Vec<&str> = rest.split_whitespace().collect();
+        fs[11].parse::<u64>().unwrap() + fs[12].parse::<u64>().unwrap()
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn none_timeout_recv_blocks_without_burning_cpu() {
+        // a session configured to wait forever must park on the condvar:
+        // a zero-duration wait_timeout fallback would spin the thread
+        // and show up as hundreds of ms of CPU here
+        let (l, p) = duplex_pair(ByteMeter::new());
+        let leader = SessionMux::over(
+            l,
+            MuxOptions { accept: false, recv_timeout: None, ..Default::default() },
+        );
+        let party = SessionMux::over(p, MuxOptions { accept: true, ..Default::default() });
+        let a = leader.open(1).unwrap();
+        a.send(&frame(1, 1)).unwrap();
+        let pa = party.accept().unwrap().unwrap();
+        pa.recv().unwrap();
+        let t = std::thread::spawn(move || {
+            let before = own_thread_cpu_ticks();
+            let got = a.recv();
+            (before, own_thread_cpu_ticks(), got)
+        });
+        // let the receiver block for a measurable window, then release it
+        std::thread::sleep(Duration::from_millis(400));
+        pa.send(&frame(2, 9)).unwrap();
+        let (before, after, got) = t.join().unwrap();
+        assert_eq!(got.unwrap().reader().u64().unwrap(), 9);
+        // a spinning wait burns ~40 ticks (at the usual 100 Hz) over
+        // 400 ms; a parked wait burns ~0. Allow generous scheduler noise.
+        assert!(
+            after - before < 10,
+            "blocked recv burned {} CPU ticks — busy spin",
+            after - before
+        );
         finish(&leader, &party);
     }
 

@@ -91,7 +91,7 @@ impl ScanOutput {
         let mut hs: Vec<usize> = (0..self.m)
             .filter(|&j| assoc.p[j].is_finite() && assoc.p[j] < alpha)
             .collect();
-        hs.sort_by(|&a, &b| assoc.p[a].partial_cmp(&assoc.p[b]).unwrap());
+        hs.sort_by(|&a, &b| assoc.p[a].total_cmp(&assoc.p[b]));
         hs
     }
 }

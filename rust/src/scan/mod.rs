@@ -119,6 +119,14 @@ pub struct ScanConfig {
     /// candidate-shortlist cap per trait (bounds per-round SELECT
     /// traffic at `O(H)` independent of M; ≥ M = unrestricted stepwise)
     pub select_candidates: usize,
+    /// directory for leader-side per-session scan checkpoints
+    /// (`--checkpoint-dir`): a snapshot after every combined shard, so
+    /// an interrupted session resumes at the last combined shard instead
+    /// of recomputing from zero. Empty = checkpointing off.
+    pub checkpoint_dir: String,
+    /// resume from an existing checkpoint in `checkpoint_dir`
+    /// (`--resume`); a missing snapshot falls back to a fresh session
+    pub resume: bool,
 }
 
 impl Default for ScanConfig {
@@ -141,6 +149,8 @@ impl Default for ScanConfig {
             select_alpha: 1e-4,
             select_policy: SelectPolicy::Union,
             select_candidates: 32,
+            checkpoint_dir: String::new(),
+            resume: false,
         }
     }
 }

@@ -145,10 +145,21 @@ impl SelectOutput {
 pub fn choose_candidates(out: &ScanOutput, cap: usize) -> Vec<usize> {
     let mut set = BTreeSet::new();
     for assoc in &out.assoc {
-        let mut ranked: Vec<usize> = (0..out.m).filter(|&j| assoc.p[j].is_finite()).collect();
-        ranked.sort_by(|&a, &b| assoc.p[a].partial_cmp(&assoc.p[b]).unwrap().then(a.cmp(&b)));
+        // total_cmp with an explicit NaN-last key: a zero-variance
+        // variant yields p = NaN, which partial_cmp().unwrap() would
+        // turn into a leader panic mid-session
+        let mut ranked: Vec<usize> = (0..out.m).collect();
+        ranked.sort_by(|&a, &b| {
+            let (pa, pb) = (assoc.p[a], assoc.p[b]);
+            pa.is_nan()
+                .cmp(&pb.is_nan())
+                .then_with(|| pa.total_cmp(&pb))
+                .then(a.cmp(&b))
+        });
         for &j in ranked.iter().take(cap) {
-            set.insert(j);
+            if assoc.p[j].is_finite() {
+                set.insert(j);
+            }
         }
     }
     set.into_iter().collect()
@@ -626,6 +637,33 @@ mod tests {
         let mut flat = cross_products(&x, picks[0].as_ref().unwrap().variant, &x);
         flat[picks[0].as_ref().unwrap().slot] += 1.0;
         assert!(st.fold(&picks, &flat).is_err());
+    }
+
+    #[test]
+    fn choose_candidates_survives_zero_variance_variant() {
+        // a constant (zero-variance) genotype column produces NaN
+        // association statistics; ranking must neither panic nor admit
+        // the degenerate variant into the shortlist
+        let (ys, c, mut x) = data(160, 3, 7, 1, 406);
+        for i in 0..x.rows {
+            x[(i, 4)] = 0.0;
+        }
+        let agg = aggregate_of(&ys, &c, &x);
+        let out = crate::scan::combine_compressed(&agg, None, CombineOptions::default())
+            .unwrap();
+        assert!(
+            !out.assoc[0].p[4].is_finite(),
+            "expected a non-finite p for the constant column, got {}",
+            out.assoc[0].p[4]
+        );
+        let cand = choose_candidates(&out, 7);
+        assert!(!cand.contains(&4), "zero-variance variant shortlisted: {cand:?}");
+        assert_eq!(cand.len(), 6, "all finite-p variants kept: {cand:?}");
+        for w in cand.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // and the scan-level hit ranking stays panic-free too
+        let _ = out.hits(1.0);
     }
 
     #[test]

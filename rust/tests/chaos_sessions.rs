@@ -199,6 +199,63 @@ fn misroute_to_unknown_session_is_dropped() {
     }
 }
 
+/// A party hangup mid-scan (persistent death, not a one-frame glitch):
+/// the victim session fails with the *typed* dropout error — the
+/// message names the dropped party — and every other session completes
+/// bit-identical. The masked backend cannot recover from any death, so
+/// this is the clean-typed-failure leg of the dropout contract.
+#[test]
+fn party_hangup_mid_scan_fails_typed_and_only_the_victim() {
+    for transport in chaos_transports() {
+        let label = format!("hangup [{transport:?}]");
+        let cohort = chaos_cohort();
+        let c = chaos_cfg();
+        let serial = run_multi_party_scan_t(&cohort, &c, Transport::InProc, 7).unwrap();
+        let specs: Vec<SessionSpec> =
+            (0..SESSIONS).map(|_| SessionSpec { cfg: c.clone(), seed: 7 }).collect();
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions {
+                transport,
+                max_concurrent: SESSIONS,
+                recv_timeout: Some(Duration::from_secs(2)),
+                fault: Some(FaultSpec {
+                    party: 0,
+                    dir: FaultDir::Recv,
+                    // frame 0 is the base round; from the first shard
+                    // contribution on, the party is gone for good
+                    mode: FaultMode::Hangup,
+                    session: VICTIM,
+                    nth: 1,
+                }),
+            },
+        )
+        .unwrap();
+        assert_eq!(batch.residual_sessions, 0, "{label}: leaked sessions");
+        for (i, run) in batch.runs.iter().enumerate() {
+            let sid = (i + 1) as u64;
+            match run {
+                Ok(r) => {
+                    assert_ne!(sid, VICTIM, "{label}: victim session succeeded");
+                    assert_run_matches(r, &serial, &format!("{label} session {sid}"));
+                }
+                Err(e) => {
+                    assert_eq!(sid, VICTIM, "{label}: non-victim session {sid} failed");
+                    let msg = format!("{e:#}");
+                    // typed dropout, not a bare timeout: the error names
+                    // the dead party
+                    assert!(
+                        msg.contains("party 0"),
+                        "{label}: error does not name the dropped party: {msg}"
+                    );
+                }
+            }
+        }
+        assert!(batch.runs[(VICTIM - 1) as usize].is_err(), "{label}: victim must fail");
+    }
+}
+
 /// Leader→party faults: dropping a result-broadcast frame leaves the
 /// leader's own result intact (still bit-identical) but the party-side
 /// service reports the failed session — and nothing hangs.

@@ -91,6 +91,10 @@ fn fuzz_all_wire_messages() {
     for iter in 0..150u64 {
         let r = &mut rng;
 
+        // done_shards must be strictly increasing (resume contract)
+        let mut done_shards = rand_u64s(r, 6);
+        done_shards.sort_unstable();
+        done_shards.dedup();
         check(
             &Setup {
                 session: r.next_u64(),
@@ -106,6 +110,7 @@ fn fuzz_all_wire_messages() {
                 shard_m: r.next_u64(),
                 select_k: r.next_u64(),
                 seeds: rand_u64s(r, 8), // incl. the 0-seed degenerate
+                done_shards,
             },
             r,
         );
@@ -168,6 +173,34 @@ fn fuzz_all_wire_messages() {
         };
         check(&sr, r);
 
+        // Checkpoint: the decode validates its invariants, so the fuzz
+        // inputs must honor them — version pinned, t ≥ 1, stats exactly
+        // 4·t·m, done strictly increasing (possibly empty)
+        let ck_t = 1 + r.next_u64() % 3;
+        let ck_m = r.next_u64() % 5;
+        let mut ck_done = rand_u64s(r, 6);
+        ck_done.sort_unstable();
+        ck_done.dedup();
+        let ck_stats: Vec<f64> =
+            (0..4 * ck_t as usize * ck_m as usize).map(|_| rand_f64(r)).collect();
+        check(
+            &Checkpoint {
+                version: CHECKPOINT_VERSION,
+                session: r.next_u64(),
+                seed: r.next_u64(),
+                backend: r.next_u64() % 4,
+                m: ck_m,
+                k: r.next_u64(),
+                t: ck_t,
+                shard_m: r.next_u64(),
+                select_k: r.next_u64(),
+                done: ck_done,
+                df: if iter % 4 == 0 { f64::NAN } else { rand_f64(r) },
+                stats: ck_stats,
+            },
+            r,
+        );
+
         let msg: String = match iter % 3 {
             0 => String::new(),
             1 => "plain ascii error".to_string(),
@@ -197,6 +230,7 @@ fn fuzz_wrong_tag_always_clean_error() {
             shard_m: 0,
             select_k: 2,
             seeds: vec![1, 2],
+            done_shards: vec![],
         }
         .to_frame(),
         Compress.to_frame(),
@@ -424,6 +458,37 @@ fn fuzz_incremental_decoder_truncation_and_corruption() {
         assert!(
             dec.next_frame().is_err(),
             "round {round}: implausible length accepted"
+        );
+    }
+}
+
+/// A v1 frame whose length word is smashed to an implausible value must
+/// fail `FrameReader::read_any` with a clean Err — the blocking-reader
+/// twin of the incremental-decoder guard above. Before the uniform
+/// length guard, a huge v1 length word turned into an attempted
+/// multi-exabyte allocation instead of an error.
+#[test]
+fn fuzz_v1_implausible_length_is_a_clean_read_error() {
+    let mut rng = Rng::new(0xBAD_1E4);
+    for _ in 0..40 {
+        let mut f = Frame::new((rng.next_u64() % 1000) as u32);
+        for _ in 0..(rng.next_u64() as usize) % 6 {
+            f.put_u64(rng.next_u64());
+        }
+        let mut buf = Vec::new();
+        FrameWriter::new(&mut buf).write(&f).unwrap(); // v1: [tag][len][payload]
+        // smash the v1 length word to a huge value (top bit set keeps it
+        // above any plausible frame cap regardless of the low bits)
+        let huge = rng.next_u64() | (1 << 62);
+        buf[4..12].copy_from_slice(&huge.to_le_bytes());
+        assert!(
+            FrameReader::new(buf.as_slice()).read_any().is_err(),
+            "implausible v1 length accepted by read_any"
+        );
+        // …and through the plain v1 read path too
+        assert!(
+            FrameReader::new(buf.as_slice()).read().is_err(),
+            "implausible v1 length accepted by read"
         );
     }
 }

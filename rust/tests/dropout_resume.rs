@@ -1,0 +1,244 @@
+//! Party-dropout + checkpoint/resume battery: the chaos axis where a
+//! party dies *permanently* mid-scan ([`FaultMode::Hangup`]) and the
+//! session must never hang and never restart from zero. Three contracts:
+//!
+//! - **Degraded completion** (Shamir, share-sum leg): every survivor's
+//!   sum already folds in all parties' contributions, so the leader
+//!   reconstructs from a surviving quorum and the result is
+//!   bit-identical to the clean run — with the death on record in
+//!   `metrics.dropouts`.
+//! - **Typed failure + checkpoint** (any backend, unrecoverable leg):
+//!   the session fails with an error naming the dropped party, and the
+//!   leader's per-shard snapshot survives on disk.
+//! - **Resume**: re-running with `resume` skips the checkpointed shards
+//!   (`metrics.shards_skipped`), recomputes only the rest, and the
+//!   output is bit-identical to an uninterrupted session — absolute
+//!   round numbering keeps every mask/share domain where an
+//!   uninterrupted run would have used it.
+
+mod common;
+
+use common::{assert_run_matches, backends, cfg, spec_for};
+use dash::coordinator::{
+    checkpoint::checkpoint_path, run_multi_party_scan_t, run_session_batch, BatchOptions,
+    Dropout, MultiPartyScanResult, SessionBatchResult, SessionSpec, Transport,
+};
+use dash::gwas::{generate_cohort, Cohort};
+use dash::mpc::Backend;
+use dash::net::chaos::{FaultDir, FaultMode, FaultSpec};
+use dash::scan::ScanConfig;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Single-session batches: the one session's id (1-based).
+const SID: u64 = 1;
+const SEED: u64 = 7;
+
+fn dropout_cohort() -> Cohort {
+    // 3 parties × 24 samples, M = 24 → 3 shards at width 8
+    generate_cohort(&spec_for(3, 24, 24, 1), 0xD0_0D)
+}
+
+/// Contribution frames the leader receives per party before round `r`
+/// starts: plaintext/masked send one frame per round, Shamir two
+/// (SHAMIR_OUT + SHAMIR_SUM). Round 0 is the base, round s+1 shard s.
+fn frames_before_round(backend: Backend, round: u64) -> u64 {
+    match backend {
+        Backend::Shamir { .. } => 2 * round,
+        _ => round,
+    }
+}
+
+/// Hangup on the leader's receive side from party 0, starting at frame
+/// `nth` of the victim session.
+fn hangup(nth: u64) -> FaultSpec {
+    FaultSpec {
+        party: 0,
+        dir: FaultDir::Recv,
+        mode: FaultMode::Hangup,
+        session: SID,
+        nth,
+    }
+}
+
+/// Run one single-session batch (the deployment shape whose transports
+/// support fault injection) with a 2-second receive timeout bounding
+/// every dead-party wait.
+fn run_one(
+    cohort: &Cohort,
+    c: &ScanConfig,
+    transport: Transport,
+    fault: Option<FaultSpec>,
+) -> SessionBatchResult {
+    run_session_batch(
+        cohort,
+        &[SessionSpec { cfg: c.clone(), seed: SEED }],
+        &BatchOptions {
+            transport,
+            max_concurrent: 1,
+            recv_timeout: Some(Duration::from_secs(2)),
+            fault,
+        },
+    )
+    .unwrap()
+}
+
+fn baseline(cohort: &Cohort, backend: Backend) -> MultiPartyScanResult {
+    run_multi_party_scan_t(cohort, &cfg(backend, 8), Transport::InProc, SEED).unwrap()
+}
+
+/// Fresh per-test checkpoint directory under the system temp dir.
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "dash-dropout-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Shamir share-sum leg death: the victim's final SHAMIR_SUM frame (and
+/// everything after) vanishes. The survivors' sums already carry every
+/// party's contribution, so the session **completes** — bit-identical
+/// to the clean run — and records exactly one dropout at the final
+/// shard round.
+#[test]
+fn shamir_sum_leg_dropout_completes_degraded_and_bit_identical() {
+    let cohort = dropout_cohort();
+    let backend = Backend::Shamir { threshold: 2 };
+    let serial = baseline(&cohort, backend);
+    // rounds 0..=3 (base + 3 shards), 2 frames each = 8; frame 7 is the
+    // last round's SHAMIR_SUM — the only recoverable leg
+    let last_round = 3u64;
+    let nth = frames_before_round(backend, last_round) + 1;
+    let batch = run_one(&cohort, &cfg(backend, 8), Transport::InProc, Some(hangup(nth)));
+    let run = batch.runs[0].as_ref().unwrap_or_else(|e| {
+        panic!("sum-leg dropout must complete degraded, not fail: {e:#}")
+    });
+    assert_run_matches(run, &serial, "degraded shamir session");
+    assert_eq!(
+        run.metrics.dropouts,
+        vec![Dropout { party: 0, round: last_round }],
+        "exactly one recorded dropout at the last shard round"
+    );
+    assert_eq!(run.metrics.shards_skipped, 0, "no resume involved");
+    // the dropped party was only partitioned leader-ward: it still
+    // drains the result broadcast, so every party service completes
+    assert_eq!(batch.failed, 0, "party services must all complete");
+    assert_eq!(batch.residual_sessions, 0, "leaked sessions");
+}
+
+/// The core resume contract, for every backend: interrupt a
+/// checkpointing session mid-scan (typed failure, snapshot on disk),
+/// then resume — the resumed session skips the checkpointed shards and
+/// its output is bit-identical to an uninterrupted run.
+#[test]
+fn interrupted_then_resumed_matches_uninterrupted_all_backends() {
+    let cohort = dropout_cohort();
+    for backend in backends() {
+        let label = format!("{backend:?}");
+        let serial = baseline(&cohort, backend);
+        let dir = ckpt_dir(&label.replace([' ', '{', '}', ':'], ""));
+        let mut c = cfg(backend, 8);
+        c.checkpoint_dir = dir.to_str().unwrap().to_string();
+
+        // Interrupt at shard 1 (round 2): shard 0 is already combined
+        // and checkpointed, the death is unrecoverable on every
+        // backend's round-entry leg → typed failure naming the party.
+        let nth = frames_before_round(backend, 2);
+        let batch = run_one(&cohort, &c, Transport::InProc, Some(hangup(nth)));
+        let err = batch.runs[0]
+            .as_ref()
+            .err()
+            .unwrap_or_else(|| panic!("{label}: interrupted session must fail"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("party 0") && msg.contains("dropped"),
+            "{label}: failure must name the dropped party: {msg}"
+        );
+        let path = checkpoint_path(c.checkpoint_dir.as_str(), SID);
+        assert!(path.exists(), "{label}: no checkpoint at {}", path.display());
+
+        // Resume: no fault this time; the snapshot's shards are skipped
+        // and the output is bit-identical to the uninterrupted run.
+        c.resume = true;
+        let batch = run_one(&cohort, &c, Transport::InProc, None);
+        let run = batch.runs[0]
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{label}: resume failed: {e:#}"));
+        assert_run_matches(run, &serial, &format!("{label} resumed"));
+        assert!(
+            run.metrics.shards_skipped >= 1,
+            "{label}: resume must skip checkpointed shards, skipped {}",
+            run.metrics.shards_skipped
+        );
+        assert!(run.metrics.dropouts.is_empty(), "{label}: clean resume");
+        assert!(
+            !path.exists(),
+            "{label}: checkpoint must be removed on clean completion"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A checkpoint from a *different* run configuration must refuse to
+/// resume loudly — silently mixing statistics across seeds would be a
+/// correctness hole, not a convenience.
+#[test]
+fn resume_with_mismatched_fingerprint_is_a_loud_error() {
+    let cohort = dropout_cohort();
+    let dir = ckpt_dir("fingerprint");
+    let mut c = cfg(Backend::Masked, 8);
+    c.checkpoint_dir = dir.to_str().unwrap().to_string();
+    let batch = run_one(&cohort, &c, Transport::InProc, Some(hangup(2)));
+    assert!(batch.runs[0].is_err(), "interrupted session must fail");
+    assert!(checkpoint_path(c.checkpoint_dir.as_str(), SID).exists());
+
+    // same session id, different seed → fingerprint mismatch
+    c.resume = true;
+    let batch = run_session_batch(
+        &cohort,
+        &[SessionSpec { cfg: c.clone(), seed: SEED + 1 }],
+        &BatchOptions {
+            transport: Transport::InProc,
+            max_concurrent: 1,
+            recv_timeout: Some(Duration::from_secs(2)),
+            fault: None,
+        },
+    )
+    .unwrap();
+    let err = batch.runs[0].as_ref().err().expect("mismatched resume must fail");
+    assert!(
+        format!("{err:#}").contains("different run configuration"),
+        "unexpected error: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI smoke: kill a party over real TCP, resume, and get the
+/// uninterrupted answer bit-for-bit. The end-to-end shape of the
+/// recovery story in one fast test
+/// (`cargo test --test dropout_resume kill_and_resume`).
+#[test]
+fn kill_and_resume_smoke() {
+    let cohort = dropout_cohort();
+    let backend = Backend::Shamir { threshold: 2 };
+    let serial = baseline(&cohort, backend);
+    let dir = ckpt_dir("smoke");
+    let mut c = cfg(backend, 8);
+    c.checkpoint_dir = dir.to_str().unwrap().to_string();
+
+    // kill the victim's share fan-out at shard 1 — unrecoverable leg
+    let nth = frames_before_round(backend, 2);
+    let batch = run_one(&cohort, &c, Transport::Tcp, Some(hangup(nth)));
+    assert!(batch.runs[0].is_err(), "interrupted session must fail typed");
+    assert!(checkpoint_path(c.checkpoint_dir.as_str(), SID).exists());
+
+    c.resume = true;
+    let batch = run_one(&cohort, &c, Transport::Tcp, None);
+    let run = batch.runs[0].as_ref().unwrap_or_else(|e| panic!("resume failed: {e:#}"));
+    assert_run_matches(run, &serial, "kill-and-resume over TCP");
+    assert!(run.metrics.shards_skipped >= 1, "resume must skip shards");
+    assert!(!checkpoint_path(c.checkpoint_dir.as_str(), SID).exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
