@@ -1,0 +1,155 @@
+//! Control-plane throughput (E15): jobs/s through the daemon's HTTP
+//! submit → poll → fetch path vs the same work as direct in-process
+//! single-session batches, plus the raw HTTP/registry op rate. Writes
+//! `BENCH_daemon.json` for EXPERIMENTS.md §E15.
+
+use dash::config::RunConfig;
+use dash::coordinator::{run_session_batch, BatchOptions, Daemon, DaemonOptions, SessionSpec};
+use dash::gwas::{generate_cohort, CohortSpec};
+use dash::mpc::Backend;
+use dash::net::http::http_request;
+use dash::scan::ScanConfig;
+use dash::util::bench::Bench;
+use dash::util::json::Json;
+
+fn spec(parties: usize, n_per: usize, m: usize) -> CohortSpec {
+    CohortSpec {
+        party_sizes: vec![n_per; parties],
+        m_variants: m,
+        n_traits: 1,
+        n_causal: 3,
+        effect_sd: 0.4,
+        fst: 0.05,
+        party_admixture: (0..parties).map(|i| i as f64 / (parties - 1) as f64).collect(),
+        ancestry_effect: 0.4,
+        batch_effect_sd: 0.1,
+        n_pcs: 2,
+        noise_sd: 1.0,
+    }
+}
+
+fn submit(addr: &str, body: &Json) -> u64 {
+    let r = http_request(addr, "POST", "/jobs", Some(body.to_string().as_bytes())).unwrap();
+    assert_eq!(r.status, 201, "submit: {}", String::from_utf8_lossy(&r.body));
+    r.json_body().unwrap().get("job").and_then(Json::as_usize).unwrap() as u64
+}
+
+fn wait_and_fetch(addr: &str, id: u64) {
+    loop {
+        let v = http_request(addr, "GET", &format!("/jobs/{id}"), None)
+            .unwrap()
+            .json_body()
+            .unwrap();
+        match v.get("status").and_then(Json::as_str) {
+            Some("done") => break,
+            Some("queued") | Some("running") => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            other => panic!("job {id} settled as {other:?}"),
+        }
+    }
+    let r = http_request(addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+    assert_eq!(r.status, 200);
+    std::hint::black_box(r);
+}
+
+fn main() {
+    let quick = std::env::var("DASH_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (n_per, m) = if quick { (40, 48) } else { (120, 192) };
+    let jobs = if quick { 4usize } else { 8 };
+    let cohort_spec = spec(3, n_per, m);
+    let cohort = generate_cohort(&cohort_spec, 0xE15);
+    let scan = ScanConfig {
+        backend: Backend::Masked,
+        shard_m: 32,
+        block_m: 32,
+        threads: Some(1),
+        ..ScanConfig::default()
+    };
+    let rc = RunConfig {
+        cohort: cohort_spec,
+        scan: scan.clone(),
+        seed: 0xE15,
+        ..RunConfig::default()
+    };
+    let mut body = Json::obj();
+    body.set("config", rc.to_json());
+
+    let mut b = Bench::new("daemon");
+
+    // baseline: the same jobs as direct in-process single-session
+    // batches, serially — what each daemon worker does minus HTTP,
+    // registry, and cohort regeneration
+    let direct_label = format!("direct_x{jobs}");
+    let direct_s = b
+        .case_units(&direct_label, Some(jobs as f64), "job", || {
+            for _ in 0..jobs {
+                let specs = vec![SessionSpec { cfg: scan.clone(), seed: 0xE15 }];
+                let batch = run_session_batch(
+                    &cohort,
+                    &specs,
+                    &BatchOptions { max_concurrent: 1, ..Default::default() },
+                )
+                .unwrap();
+                assert!(batch.runs.iter().all(|r| r.is_ok()));
+                std::hint::black_box(batch);
+            }
+        })
+        .median_s;
+
+    let daemon = Daemon::start(DaemonOptions {
+        max_jobs: 2,
+        queue_cap: jobs,
+        max_jobs_per_tenant: jobs + 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = daemon.addr().to_string();
+
+    // the full control-plane path: submit everything, then drain —
+    // jobs pipeline through the two workers
+    let daemon_label = format!("daemon_x{jobs}_c2");
+    let daemon_s = b
+        .case_units(&daemon_label, Some(jobs as f64), "job", || {
+            let ids: Vec<u64> = (0..jobs).map(|_| submit(&addr, &body)).collect();
+            for id in ids {
+                wait_and_fetch(&addr, id);
+            }
+        })
+        .median_s;
+
+    // raw control-plane op rate, no scans involved
+    let ops = 100usize;
+    let ops_s = b
+        .case_units("healthz_x100", Some(ops as f64), "op", || {
+            for _ in 0..ops {
+                let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+                assert_eq!(r.status, 200);
+            }
+        })
+        .median_s;
+    daemon.shutdown();
+
+    let mut report = String::new();
+    for (row, wall) in [("direct", direct_s), ("daemon", daemon_s)] {
+        let mut o = Json::obj();
+        o.set("group", "daemon")
+            .set("row", row)
+            .set("jobs", jobs)
+            .set("wall_s", wall)
+            .set("jobs_per_s", jobs as f64 / wall);
+        report.push_str(&o.to_string());
+        report.push('\n');
+    }
+    let mut o = Json::obj();
+    o.set("group", "daemon")
+        .set("row", "http_ops")
+        .set("ops_per_s", ops as f64 / ops_s);
+    report.push_str(&o.to_string());
+    report.push('\n');
+    if let Err(e) = std::fs::write("BENCH_daemon.json", &report) {
+        eprintln!("warn: could not write BENCH_daemon.json: {e}");
+    } else {
+        println!("report: BENCH_daemon.json");
+    }
+}

@@ -75,6 +75,41 @@ pub fn remove(dir: &str, session: u64) -> anyhow::Result<()> {
     }
 }
 
+/// Garbage-collect orphaned checkpoints: delete every
+/// `session-*.ckpt` in `dir` whose session id is not in `keep`, plus
+/// any `.ckpt.tmp` leftovers from interrupted writes. Cancelled,
+/// failed, and crashed runs leave snapshots behind that no one will
+/// ever resume — under a long-lived daemon those accumulate forever
+/// unless swept at startup. Unrelated files are never touched; a
+/// missing directory is nothing to sweep. Returns how many files were
+/// removed.
+pub fn sweep(dir: &str, keep: &[u64]) -> anyhow::Result<usize> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e.into()),
+    };
+    let mut removed = 0usize;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale_tmp = name.starts_with("session-") && name.ends_with(".ckpt.tmp");
+        let session = name
+            .strip_prefix("session-")
+            .and_then(|rest| rest.strip_suffix(".ckpt"))
+            .and_then(|rest| rest.parse::<u64>().ok());
+        if stale_tmp || session.is_some_and(|s| !keep.contains(&s)) {
+            match fs::remove_file(entry.path()) {
+                Ok(()) => removed += 1,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    Ok(removed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +169,30 @@ mod tests {
         // removing twice (or a never-written session) is not an error
         remove(d, 3).unwrap();
         assert_eq!(load(d, 4).unwrap().unwrap().session, 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_removes_only_orphaned_checkpoints() {
+        let dir = tempdir("sweep");
+        let d = dir.to_str().unwrap();
+        // a missing directory is nothing to sweep
+        assert_eq!(sweep(d, &[]).unwrap(), 0);
+        save(d, &ckpt(1)).unwrap();
+        save(d, &ckpt(2)).unwrap();
+        save(d, &ckpt(3)).unwrap();
+        // a torn write leaves a stale tmp; sweep clears it too
+        fs::write(Path::new(d).join("session-9.ckpt.tmp"), b"torn").unwrap();
+        // unrelated files are never touched
+        fs::write(Path::new(d).join("notes.txt"), b"keep me").unwrap();
+        let removed = sweep(d, &[2]).unwrap();
+        assert_eq!(removed, 3, "sessions 1 and 3 plus the stale tmp");
+        assert!(load(d, 1).unwrap().is_none());
+        assert_eq!(load(d, 2).unwrap().unwrap().session, 2);
+        assert!(load(d, 3).unwrap().is_none());
+        assert!(Path::new(d).join("notes.txt").exists());
+        // idempotent: a second sweep finds nothing
+        assert_eq!(sweep(d, &[2]).unwrap(), 0);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,801 @@
+//! Scan-as-a-service control plane: a leader daemon wrapping
+//! [`run_session_batch`] behind a dependency-free HTTP/JSON API
+//! (DESIGN.md §Control plane).
+//!
+//! Routes:
+//!
+//! - `POST /jobs` — submit a scan/SELECT job (body: `{"tenant",
+//!   "config": <RunConfig JSON>}`); returns `201 {"job": id}` or `429`
+//!   + `Retry-After` when admission control rejects.
+//! - `GET /jobs/{id}` — lifecycle status plus [`SessionMetrics`] once
+//!   the job ran.
+//! - `GET /jobs/{id}/result` — full scan output with every statistic as
+//!   an exact f64 bit pattern (`%016x` hex), so clients round-trip
+//!   results without any decimal-formatting loss; `409` until done.
+//! - `DELETE /jobs/{id}` — cancel: a queued job is dropped from the
+//!   queue, a running one has its [`CancelToken`] fired (the batch
+//!   watcher then closes its mux queues, waking any blocked receive).
+//! - `GET /healthz` — liveness + registry counters.
+//!
+//! Admission control is deliberately bounded: `max_jobs` worker threads
+//! run jobs, at most `queue_cap` more may wait, and each tenant may
+//! hold at most `max_jobs_per_tenant` active (queued + running) jobs.
+//! Anything beyond that is rejected *immediately* with `429` and a
+//! `Retry-After` hint — the daemon never queues forever, so a client
+//! can always distinguish "busy, try later" from "accepted".
+//!
+//! Jobs are not resumable across daemon restarts (the registry is in
+//! memory), so per-job checkpoints under `checkpoint_root/job-{id}`
+//! are removed whenever a job leaves the system — clean, failed, or
+//! cancelled — and a startup GC sweeps every `job-*` directory left by
+//! a previous process. That is what keeps a long-lived daemon from
+//! accumulating orphaned snapshots (the checkpoint-leak bug this
+//! module's tests pin down).
+
+use super::checkpoint;
+use super::leader::SessionMetrics;
+use super::session::{run_session_batch, BatchOptions, CancelToken, SessionRun, SessionSpec};
+use crate::config::RunConfig;
+use crate::gwas::generate_cohort;
+use crate::net::chaos::{FaultDir, FaultMode, FaultSpec};
+use crate::net::http::{HttpServer, Request, Response};
+use crate::scan::{ScanOutput, SelectOutput};
+use crate::util::json::Json;
+use crate::util::lock_unpoisoned;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Deployment knobs for one daemon instance.
+#[derive(Clone, Debug)]
+pub struct DaemonOptions {
+    /// listen address (`host:port`; port 0 binds an ephemeral port)
+    pub listen: String,
+    /// worker pool size — jobs running concurrently
+    pub max_jobs: usize,
+    /// jobs allowed to wait behind the pool before submits get 429
+    pub queue_cap: usize,
+    /// active (queued + running) jobs any one tenant may hold
+    pub max_jobs_per_tenant: usize,
+    /// `Retry-After` seconds attached to every 429
+    pub retry_after_s: u64,
+    /// per-job checkpoint root ("" disables checkpointing); job `i`
+    /// writes under `{root}/job-{i}`, removed when the job settles
+    pub checkpoint_root: String,
+}
+
+impl Default for DaemonOptions {
+    fn default() -> Self {
+        DaemonOptions {
+            listen: "127.0.0.1:0".to_string(),
+            max_jobs: 2,
+            queue_cap: 4,
+            max_jobs_per_tenant: 2,
+            retry_after_s: 1,
+            checkpoint_root: String::new(),
+        }
+    }
+}
+
+/// Client-visible job lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    fn active(self) -> bool {
+        matches!(self, JobStatus::Queued | JobStatus::Running)
+    }
+}
+
+/// Chaos handle carried by a job submission (`"fault": "panic" |
+/// "stall"`): `Panic` makes the leader-side session worker panic
+/// mid-run (the daemon-survives-a-panicking-session regression),
+/// `Stall` drops a leader-bound frame so the job blocks mid-scan until
+/// cancelled or timed out (the deterministic cancel-mid-scan handle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobFault {
+    None,
+    Panic,
+    Stall,
+}
+
+struct Job {
+    tenant: String,
+    cfg: RunConfig,
+    /// cancellable pre-run delay — lets tests pin a worker for a
+    /// deterministic amount of time to drive saturation
+    hold_ms: u64,
+    fault: JobFault,
+    status: JobStatus,
+    error: String,
+    cancel: CancelToken,
+    run: Option<SessionRun>,
+    residual_sessions: usize,
+    wall_s: f64,
+}
+
+struct Registry {
+    next_id: u64,
+    jobs: BTreeMap<u64, Job>,
+    queue: VecDeque<u64>,
+}
+
+struct DaemonInner {
+    opts: DaemonOptions,
+    reg: Mutex<Registry>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// A running daemon: HTTP server + worker pool + job registry.
+/// Dropping it shuts everything down (cancelling active jobs first).
+pub struct Daemon {
+    inner: Arc<DaemonInner>,
+    server: HttpServer,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Daemon {
+    pub fn start(opts: DaemonOptions) -> anyhow::Result<Daemon> {
+        anyhow::ensure!(opts.max_jobs >= 1, "max_jobs must be ≥ 1");
+        anyhow::ensure!(opts.max_jobs_per_tenant >= 1, "max_jobs_per_tenant must be ≥ 1");
+        if !opts.checkpoint_root.is_empty() {
+            gc_checkpoint_root(&opts.checkpoint_root)?;
+        }
+        let inner = Arc::new(DaemonInner {
+            opts: opts.clone(),
+            reg: Mutex::new(Registry {
+                next_id: 1,
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        for _ in 0..opts.max_jobs {
+            let w = Arc::clone(&inner);
+            workers.push(std::thread::spawn(move || worker_loop(&w)));
+        }
+        let h = Arc::clone(&inner);
+        let server = HttpServer::bind(&opts.listen, Arc::new(move |req: &Request| route(&h, req)))?;
+        Ok(Daemon { inner, server, workers: Mutex::new(workers) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Stop serving: reject new work, cancel queued and running jobs,
+    /// drain the workers, then stop the HTTP server. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        {
+            let mut reg = lock_unpoisoned(&self.inner.reg);
+            let queued: Vec<u64> = reg.queue.drain(..).collect();
+            for id in queued {
+                if let Some(job) = reg.jobs.get_mut(&id) {
+                    if job.status == JobStatus::Queued {
+                        job.status = JobStatus::Cancelled;
+                        job.error = "daemon shut down".to_string();
+                        job.cancel.cancel();
+                    }
+                }
+            }
+            for job in reg.jobs.values() {
+                if job.status == JobStatus::Running {
+                    job.cancel.cancel();
+                }
+            }
+        }
+        self.inner.cv.notify_all();
+        let workers: Vec<JoinHandle<()>> = lock_unpoisoned(&self.workers).drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+        self.server.shutdown();
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Checkpoint directory of one job.
+pub fn job_checkpoint_dir(root: &str, id: u64) -> String {
+    format!("{root}/job-{id}")
+}
+
+/// Startup GC: a daemon's registry does not survive a restart, so no
+/// checkpoint under the root is resumable — sweep every `job-*`
+/// directory and remove the emptied directories. Returns how many
+/// checkpoint files were deleted. Unrelated entries under the root are
+/// never touched.
+pub fn gc_checkpoint_root(root: &str) -> anyhow::Result<usize> {
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e.into()),
+    };
+    let mut removed = 0usize;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with("job-") || !entry.path().is_dir() {
+            continue;
+        }
+        let Some(dir) = entry.path().to_str().map(String::from) else { continue };
+        removed += checkpoint::sweep(&dir, &[])?;
+        let _ = std::fs::remove_dir(entry.path());
+    }
+    Ok(removed)
+}
+
+// ---------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------
+
+fn worker_loop(inner: &DaemonInner) {
+    loop {
+        let id = {
+            let mut reg = lock_unpoisoned(&inner.reg);
+            loop {
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = reg.queue.pop_front() {
+                    break id;
+                }
+                reg = inner
+                    .cv
+                    .wait_timeout(reg, Duration::from_millis(100))
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .0;
+            }
+        };
+        run_job(inner, id);
+    }
+}
+
+fn run_job(inner: &DaemonInner, id: u64) {
+    // Claim the job (a cancel may have settled it while it was queued).
+    let (cfg, hold_ms, fault, token) = {
+        let mut reg = lock_unpoisoned(&inner.reg);
+        let Some(job) = reg.jobs.get_mut(&id) else { return };
+        if job.status != JobStatus::Queued {
+            return;
+        }
+        job.status = JobStatus::Running;
+        (job.cfg.clone(), job.hold_ms, job.fault, job.cancel.clone())
+    };
+
+    let t0 = std::time::Instant::now();
+
+    // Cancellable pre-run hold (admission / cancellation test handle).
+    let mut held = 0u64;
+    let mut cancelled = token.is_cancelled() || inner.stop.load(Ordering::SeqCst);
+    while !cancelled && held < hold_ms {
+        let step = (hold_ms - held).min(20);
+        cancelled =
+            token.wait_timeout(Duration::from_millis(step)) || inner.stop.load(Ordering::SeqCst);
+        held += step;
+    }
+
+    let outcome = if cancelled {
+        Err(anyhow::anyhow!("job {id} cancelled before it started"))
+    } else {
+        execute(inner, id, &cfg, fault, &token)
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Daemon jobs are not resumable: drop the job's checkpoints on any
+    // exit — clean, failed, or cancelled — *before* publishing the
+    // terminal status, so a client that observes "cancelled" can rely
+    // on the snapshot being gone.
+    if !inner.opts.checkpoint_root.is_empty() {
+        let _ = std::fs::remove_dir_all(job_checkpoint_dir(&inner.opts.checkpoint_root, id));
+    }
+
+    {
+        let mut reg = lock_unpoisoned(&inner.reg);
+        if let Some(job) = reg.jobs.get_mut(&id) {
+            job.wall_s = wall_s;
+            match outcome {
+                Ok((run, residual)) => {
+                    job.residual_sessions = residual;
+                    match run {
+                        Ok(r) => {
+                            job.run = Some(r);
+                            job.status = JobStatus::Done;
+                        }
+                        Err(e) => {
+                            job.error = format!("{e:#}");
+                            job.status = if job.cancel.is_cancelled() {
+                                JobStatus::Cancelled
+                            } else {
+                                JobStatus::Failed
+                            };
+                        }
+                    }
+                }
+                Err(e) => {
+                    job.error = format!("{e:#}");
+                    job.status = if job.cancel.is_cancelled() {
+                        JobStatus::Cancelled
+                    } else {
+                        JobStatus::Failed
+                    };
+                }
+            }
+        }
+    }
+    inner.cv.notify_all();
+}
+
+/// Run one job as a single-session batch. Returns the batch-level
+/// result (setup errors are the outer `Err`) with the per-session
+/// outcome and the residual-session count inside.
+#[allow(clippy::type_complexity)]
+fn execute(
+    inner: &DaemonInner,
+    id: u64,
+    cfg: &RunConfig,
+    fault: JobFault,
+    token: &CancelToken,
+) -> anyhow::Result<(anyhow::Result<SessionRun>, usize)> {
+    let mut scan = cfg.scan.clone();
+    if !inner.opts.checkpoint_root.is_empty() {
+        scan.checkpoint_dir = job_checkpoint_dir(&inner.opts.checkpoint_root, id);
+        // jobs never resume across restarts — the startup GC removed
+        // anything a previous process left behind
+        scan.resume = false;
+    }
+    let cohort = generate_cohort(&cfg.cohort, cfg.seed);
+    let specs = vec![SessionSpec { cfg: scan, seed: cfg.seed }];
+    let opts = BatchOptions {
+        transport: cfg.transport,
+        max_concurrent: 1,
+        cancel: Some(token.clone()),
+        panic_session: (fault == JobFault::Panic).then_some(1),
+        fault: (fault == JobFault::Stall).then_some(FaultSpec {
+            party: 0,
+            dir: FaultDir::Recv,
+            mode: FaultMode::Drop,
+            session: 1,
+            nth: 2,
+        }),
+        ..BatchOptions::default()
+    };
+    let batch = run_session_batch(&cohort, &specs, &opts)?;
+    let run = batch
+        .runs
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| Err(anyhow::anyhow!("batch returned no session result")));
+    Ok((run, batch.residual_sessions))
+}
+
+// ---------------------------------------------------------------------
+// HTTP routes
+// ---------------------------------------------------------------------
+
+fn route(inner: &DaemonInner, req: &Request) -> Response {
+    let path = if req.path.len() > 1 {
+        req.path.trim_end_matches('/')
+    } else {
+        req.path.as_str()
+    };
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => health(inner),
+        ("POST", "/jobs") => submit(inner, req),
+        (method, path) => {
+            if let Some(rest) = path.strip_prefix("/jobs/") {
+                if let Some(idstr) = rest.strip_suffix("/result") {
+                    return match method {
+                        "GET" => result(inner, idstr),
+                        _ => err_json(405, "result is GET-only"),
+                    };
+                }
+                return match method {
+                    "GET" => status(inner, rest),
+                    "DELETE" => cancel(inner, rest),
+                    _ => err_json(405, "job routes are GET/DELETE"),
+                };
+            }
+            err_json(404, "no such route")
+        }
+    }
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    let mut o = Json::obj();
+    o.set("error", msg);
+    Response::json(status, &o)
+}
+
+/// 429 with the mandatory `Retry-After` hint — the admission-control
+/// rejection, never a silent queue.
+fn busy(inner: &DaemonInner, why: &str) -> Response {
+    let mut o = Json::obj();
+    o.set("error", why).set("retry_after_s", inner.opts.retry_after_s);
+    Response::json(429, &o).with_header("retry-after", &inner.opts.retry_after_s.to_string())
+}
+
+fn parse_id(idstr: &str) -> Option<u64> {
+    idstr.parse::<u64>().ok()
+}
+
+fn submit(inner: &DaemonInner, req: &Request) -> Response {
+    if inner.stop.load(Ordering::SeqCst) {
+        return err_json(409, "daemon is shutting down");
+    }
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return err_json(400, "body is not UTF-8"),
+    };
+    let v = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return err_json(400, &format!("malformed JSON body: {e:#}")),
+    };
+    let cfg = match v.get("config") {
+        Some(c) => match RunConfig::from_json(c) {
+            Ok(cfg) => cfg,
+            Err(e) => return err_json(400, &format!("bad config: {e:#}")),
+        },
+        None => RunConfig::default(),
+    };
+    let tenant = v
+        .get("tenant")
+        .and_then(Json::as_str)
+        .or_else(|| req.header("x-tenant"))
+        .unwrap_or("anon")
+        .to_string();
+    let hold_ms = v.get("hold_ms").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let fault = match v.get("fault").and_then(Json::as_str) {
+        None => JobFault::None,
+        Some("panic") => JobFault::Panic,
+        Some("stall") => JobFault::Stall,
+        Some(other) => return err_json(400, &format!("unknown fault `{other}`")),
+    };
+
+    let id = {
+        let mut reg = lock_unpoisoned(&inner.reg);
+        if reg.queue.len() >= inner.opts.queue_cap {
+            return busy(inner, "worker pool and admission queue are full");
+        }
+        let tenant_active =
+            reg.jobs.values().filter(|j| j.status.active() && j.tenant == tenant).count();
+        if tenant_active >= inner.opts.max_jobs_per_tenant {
+            return busy(inner, &format!("tenant `{tenant}` is at its active-job quota"));
+        }
+        let id = reg.next_id;
+        reg.next_id += 1;
+        reg.jobs.insert(
+            id,
+            Job {
+                tenant: tenant.clone(),
+                cfg,
+                hold_ms,
+                fault,
+                status: JobStatus::Queued,
+                error: String::new(),
+                cancel: CancelToken::new(),
+                run: None,
+                residual_sessions: 0,
+                wall_s: 0.0,
+            },
+        );
+        reg.queue.push_back(id);
+        id
+    };
+    inner.cv.notify_all();
+    let mut o = Json::obj();
+    o.set("job", id).set("tenant", tenant).set("status", JobStatus::Queued.name());
+    Response::json(201, &o)
+}
+
+fn status(inner: &DaemonInner, idstr: &str) -> Response {
+    let Some(id) = parse_id(idstr) else {
+        return err_json(400, "job id must be an integer");
+    };
+    let reg = lock_unpoisoned(&inner.reg);
+    let Some(job) = reg.jobs.get(&id) else {
+        return err_json(404, "no such job");
+    };
+    let mut o = Json::obj();
+    o.set("job", id)
+        .set("tenant", job.tenant.as_str())
+        .set("status", job.status.name())
+        .set("wall_s", job.wall_s)
+        .set("residual_sessions", job.residual_sessions);
+    if !job.error.is_empty() {
+        o.set("error", job.error.as_str());
+    }
+    if let Some(run) = &job.run {
+        o.set("metrics", metrics_json(&run.metrics));
+    }
+    Response::json(200, &o)
+}
+
+fn result(inner: &DaemonInner, idstr: &str) -> Response {
+    let Some(id) = parse_id(idstr) else {
+        return err_json(400, "job id must be an integer");
+    };
+    let reg = lock_unpoisoned(&inner.reg);
+    let Some(job) = reg.jobs.get(&id) else {
+        return err_json(404, "no such job");
+    };
+    match (&job.status, &job.run) {
+        (JobStatus::Done, Some(run)) => Response::json(200, &result_json(id, run)),
+        (st, _) => {
+            let mut o = Json::obj();
+            o.set("error", "job has no result").set("status", st.name());
+            if !job.error.is_empty() {
+                o.set("detail", job.error.as_str());
+            }
+            Response::json(409, &o)
+        }
+    }
+}
+
+fn cancel(inner: &DaemonInner, idstr: &str) -> Response {
+    let Some(id) = parse_id(idstr) else {
+        return err_json(400, "job id must be an integer");
+    };
+    let mut reg = lock_unpoisoned(&inner.reg);
+    let Some(job) = reg.jobs.get_mut(&id) else {
+        return err_json(404, "no such job");
+    };
+    let (code, state) = match job.status {
+        JobStatus::Queued => {
+            job.status = JobStatus::Cancelled;
+            job.error = "cancelled while queued".to_string();
+            job.cancel.cancel();
+            reg.queue.retain(|&q| q != id);
+            (202, JobStatus::Cancelled.name())
+        }
+        JobStatus::Running => {
+            // fire the token; the worker settles the job (and removes
+            // its checkpoints) once the batch unwinds
+            job.cancel.cancel();
+            (202, "cancelling")
+        }
+        st => (200, st.name()),
+    };
+    drop(reg);
+    inner.cv.notify_all();
+    let mut o = Json::obj();
+    o.set("job", id).set("status", state);
+    Response::json(code, &o)
+}
+
+fn health(inner: &DaemonInner) -> Response {
+    let reg = lock_unpoisoned(&inner.reg);
+    let mut by = [0usize; 5];
+    for job in reg.jobs.values() {
+        let i = match job.status {
+            JobStatus::Queued => 0,
+            JobStatus::Running => 1,
+            JobStatus::Done => 2,
+            JobStatus::Failed => 3,
+            JobStatus::Cancelled => 4,
+        };
+        by[i] += 1;
+    }
+    let mut o = Json::obj();
+    o.set("ok", true)
+        .set("jobs", reg.jobs.len())
+        .set("queued", by[0])
+        .set("running", by[1])
+        .set("done", by[2])
+        .set("failed", by[3])
+        .set("cancelled", by[4])
+        .set("max_jobs", inner.opts.max_jobs)
+        .set("queue_cap", inner.opts.queue_cap);
+    Response::json(200, &o)
+}
+
+// ---------------------------------------------------------------------
+// result rendering
+// ---------------------------------------------------------------------
+
+fn hex_bits(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Str(format!("{:016x}", x.to_bits()))).collect())
+}
+
+/// Render a finished run. Statistics travel as `%016x` f64 bit
+/// patterns because [`Json`] numbers are f64s printed in decimal —
+/// fine for humans, lossy for a bit-parity check. `result_fp` is
+/// [`result_fingerprint`] over the same bits, so two results agree iff
+/// their fingerprints do.
+pub fn result_json(id: u64, run: &SessionRun) -> Json {
+    let out = &run.output;
+    let mut o = Json::obj();
+    o.set("job", id)
+        .set("session", run.session)
+        .set("n", out.n)
+        .set("k", out.k)
+        .set("m", out.m)
+        .set("traits", out.assoc.len());
+    let assoc: Vec<Json> = out
+        .assoc
+        .iter()
+        .enumerate()
+        .map(|(t, a)| {
+            let mut row = Json::obj();
+            row.set("trait", t)
+                .set("beta_bits", hex_bits(&a.beta))
+                .set("se_bits", hex_bits(&a.se))
+                .set("p_bits", hex_bits(&a.p))
+                .set("df", a.df);
+            row
+        })
+        .collect();
+    o.set("assoc", Json::Arr(assoc));
+    if let Some(sel) = &run.select {
+        let mut s = Json::obj();
+        s.set("lanes", sel.lanes());
+        let selected: Vec<Vec<usize>> = (0..sel.lanes()).map(|l| sel.selected(l)).collect();
+        s.set("selected", selected);
+        o.set("select", s);
+    }
+    o.set("metrics", metrics_json(&run.metrics));
+    o.set("result_fp", format!("{:016x}", result_fingerprint(out, run.select.as_ref())));
+    o
+}
+
+pub fn metrics_json(m: &SessionMetrics) -> Json {
+    let mut o = Json::obj();
+    o.set("compress_wall_s", m.compress_wall_s)
+        .set("combine_s", m.combine_s)
+        .set("total_s", m.total_s)
+        .set("bytes_total", m.bytes_total)
+        .set("messages_total", m.messages_total)
+        .set("bytes_result", m.bytes_result)
+        .set("shards", m.shards)
+        .set("bytes_max_round", m.bytes_max_round)
+        .set("select_rounds", m.select_rounds)
+        .set("bytes_select", m.bytes_select)
+        .set("bytes_max_select_round", m.bytes_max_select_round)
+        .set("shards_skipped", m.shards_skipped)
+        .set("dropouts", m.dropouts.len());
+    o
+}
+
+/// Order-sensitive FNV-1a over the exact bit patterns of every
+/// reported statistic (β, SE, p, df per trait) plus the scan shape and
+/// the SELECT choices. Two runs fingerprint equal iff their outputs
+/// are bit-identical — the daemon/one-shot parity oracle used by the
+/// CLI (`result_fp` line), the e2e smoke, and the integration tests.
+pub fn result_fingerprint(output: &ScanOutput, select: Option<&SelectOutput>) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(output.n as u64);
+    mix(output.k as u64);
+    mix(output.m as u64);
+    for a in &output.assoc {
+        for xs in [&a.beta, &a.se, &a.p] {
+            for &x in xs.iter() {
+                mix(x.to_bits());
+            }
+        }
+        mix(a.df.to_bits());
+    }
+    if let Some(sel) = select {
+        mix(sel.lanes() as u64);
+        for lane in 0..sel.lanes() {
+            for v in sel.selected(lane) {
+                mix(v as u64);
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::http::http_request;
+    use crate::stats::AssocResult;
+
+    fn output(beta1: f64) -> ScanOutput {
+        ScanOutput {
+            assoc: vec![AssocResult {
+                beta: vec![1.5, beta1],
+                se: vec![0.1, 0.2],
+                t: vec![1.0, 2.0],
+                p: vec![0.5, 0.25],
+                df: 10.0,
+            }],
+            covariate_fit: vec![],
+            n: 100,
+            k: 3,
+            m: 2,
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_bit_sensitive() {
+        let a = result_fingerprint(&output(2.5), None);
+        assert_eq!(a, result_fingerprint(&output(2.5), None));
+        // a single flipped mantissa bit changes the fingerprint
+        let tweaked = f64::from_bits(2.5f64.to_bits() ^ 1);
+        assert_ne!(a, result_fingerprint(&output(tweaked), None));
+    }
+
+    #[test]
+    fn startup_gc_sweeps_orphaned_job_checkpoints() {
+        let root = std::env::temp_dir().join(format!("dash-daemon-gc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let root_s = root.to_str().unwrap().to_string();
+        // nothing to sweep when the root does not exist yet
+        assert_eq!(gc_checkpoint_root(&root_s).unwrap(), 0);
+        // two orphaned job dirs with checkpoints, one unrelated entry
+        for id in [3u64, 7] {
+            let dir = job_checkpoint_dir(&root_s, id);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(format!("{dir}/session-1.ckpt"), b"stale").unwrap();
+        }
+        std::fs::create_dir_all(root.join("not-a-job")).unwrap();
+        std::fs::write(root.join("not-a-job/keep.txt"), b"keep").unwrap();
+        assert_eq!(gc_checkpoint_root(&root_s).unwrap(), 2);
+        assert!(!root.join("job-3").exists());
+        assert!(!root.join("job-7").exists());
+        assert!(root.join("not-a-job/keep.txt").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bad_requests_get_typed_errors_without_running_anything() {
+        let daemon = Daemon::start(DaemonOptions::default()).unwrap();
+        let addr = daemon.addr().to_string();
+        let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.json_body().unwrap().get("ok").and_then(Json::as_bool), Some(true));
+        let r = http_request(&addr, "GET", "/jobs/999", None).unwrap();
+        assert_eq!(r.status, 404);
+        let r = http_request(&addr, "GET", "/jobs/999/result", None).unwrap();
+        assert_eq!(r.status, 404);
+        let r = http_request(&addr, "DELETE", "/jobs/999", None).unwrap();
+        assert_eq!(r.status, 404);
+        let r = http_request(&addr, "GET", "/jobs/banana", None).unwrap();
+        assert_eq!(r.status, 400);
+        let r = http_request(&addr, "POST", "/jobs", Some(b"{not json")).unwrap();
+        assert_eq!(r.status, 400);
+        let r = http_request(&addr, "POST", "/jobs", Some(br#"{"fault":"meteor"}"#)).unwrap();
+        assert_eq!(r.status, 400);
+        let r = http_request(&addr, "PUT", "/jobs/1", None).unwrap();
+        assert_eq!(r.status, 405);
+        let r = http_request(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(r.status, 404);
+        daemon.shutdown();
+    }
+}

@@ -18,20 +18,28 @@
 //! pool, party-side [`party_service`]s sharing one artifact engine, and
 //! session-keyed mask domains — the same protocol state machines over
 //! [`crate::net::SessionChannel`]s instead of dedicated endpoints.
+//!
+//! Scan-as-a-service ([`daemon`], `dash serve`) puts those batches
+//! behind an HTTP/JSON control plane: bounded admission (429 +
+//! `Retry-After`, per-tenant quotas), typed job lifecycle, cooperative
+//! cancellation, and checkpoint GC for jobs that never finish.
 
 pub mod checkpoint;
+pub mod daemon;
 pub mod messages;
 pub mod party;
 pub mod leader;
 pub mod incremental;
 pub mod session;
 
+pub use daemon::{result_fingerprint, Daemon, DaemonOptions, JobStatus};
 pub use incremental::{IncrementalAggregate, ScanAssembler};
 pub use leader::{Dropout, Leader, PartyDropped, SessionMetrics};
 pub use party::{ComputeBackend, PartyResult};
 pub use session::{
-    party_service, run_session_batch, BatchOptions, SessionBatchResult, SessionManager,
-    SessionRun, SessionSpec, SessionState, SessionStatus,
+    party_service, run_session_batch, BatchOptions, CancelToken, SessionBatchResult,
+    SessionCancelled, SessionManager, SessionPanicked, SessionRun, SessionSpec, SessionState,
+    SessionStatus,
 };
 
 use crate::gwas::Cohort;

@@ -37,9 +37,11 @@ use crate::net::{duplex_pair, tcp_pair, tcp_stream_pair, ByteMeter, FrameSink, M
     Reactor, SessionMux, SessionTransport};
 use crate::runtime::{Engine, EngineOptions, KernelMeter};
 use crate::scan::{ScanConfig, ScanOutput, SelectOutput};
+use crate::util::lock_unpoisoned;
 use crate::util::threadpool::parallel_map;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One session to run: protocol knobs plus the leader-side seed.
@@ -47,6 +49,96 @@ use std::time::{Duration, Instant};
 pub struct SessionSpec {
     pub cfg: ScanConfig,
     pub seed: u64,
+}
+
+/// Cooperative cancellation handle for a session batch — the daemon's
+/// `DELETE /jobs/{id}` path. `cancel()` is sticky and wakes every
+/// waiter; [`run_session_batch`] arms a watcher that closes the batch's
+/// per-session mux queues on cancellation, which makes any blocked
+/// per-session receive fail promptly instead of waiting out its
+/// timeout.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken { inner: Arc::new((Mutex::new(false), Condvar::new())) }
+    }
+
+    /// Fire the token (idempotent) and wake every waiter.
+    pub fn cancel(&self) {
+        *lock_unpoisoned(&self.inner.0) = true;
+        self.inner.1.notify_all();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        *lock_unpoisoned(&self.inner.0)
+    }
+
+    /// Block up to `d` for a cancellation; returns the fired state.
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let g = lock_unpoisoned(&self.inner.0);
+        if *g {
+            return true;
+        }
+        let (g, _) = self
+            .inner
+            .1
+            .wait_timeout(g, d)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        *g
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+/// Typed per-session failure: the session was torn down by an external
+/// cancellation (its queues were closed under it).
+#[derive(Clone, Debug)]
+pub struct SessionCancelled {
+    pub session: u64,
+}
+
+impl std::fmt::Display for SessionCancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session {} cancelled", self.session)
+    }
+}
+
+impl std::error::Error for SessionCancelled {}
+
+/// Typed per-session failure: the leader-side worker panicked. The
+/// panic is contained to this session — the rest of the batch (and a
+/// daemon scheduling it) keeps running.
+#[derive(Clone, Debug)]
+pub struct SessionPanicked {
+    pub session: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for SessionPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session {} panicked: {}", self.session, self.message)
+    }
+}
+
+impl std::error::Error for SessionPanicked {}
+
+/// Best-effort text of a caught panic payload.
+fn panic_payload(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Scheduler-visible lifecycle of one session.
@@ -91,6 +183,8 @@ pub struct SessionManager<'a> {
     t: usize,
     max_concurrent: usize,
     states: Mutex<Vec<SessionState>>,
+    cancel: Option<CancelToken>,
+    panic_session: Option<u64>,
 }
 
 impl<'a> SessionManager<'a> {
@@ -108,19 +202,42 @@ impl<'a> SessionManager<'a> {
             t,
             max_concurrent: max_concurrent.max(1),
             states: Mutex::new(Vec::new()),
+            cancel: None,
+            panic_session: None,
         }
     }
 
-    /// Snapshot of every session's scheduler state.
+    /// Arm a cancellation token: once fired, sessions that have not
+    /// started fail with the typed [`SessionCancelled`] instead of
+    /// running, and in-flight sessions map their teardown error to the
+    /// same type.
+    pub fn set_cancel(&mut self, token: CancelToken) {
+        self.cancel = Some(token);
+    }
+
+    /// Chaos handle: the worker of this session id panics mid-run,
+    /// exercising the panic-containment path deterministically.
+    pub fn set_panic_session(&mut self, session: Option<u64>) {
+        self.panic_session = session;
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.is_cancelled())
+    }
+
+    /// Snapshot of every session's scheduler state. Recovers from lock
+    /// poisoning: a crashed worker must not cascade panics into every
+    /// later status query (the daemon keeps answering `GET /jobs/{id}`
+    /// after one job dies).
     pub fn states(&self) -> Vec<SessionState> {
-        self.states.lock().unwrap().clone()
+        lock_unpoisoned(&self.states).clone()
     }
 
     /// Run all `specs` to completion (bounded concurrency), returning
     /// per-session results in spec order. A failed session yields its
     /// error without disturbing the others.
     pub fn run(&self, specs: &[SessionSpec]) -> Vec<anyhow::Result<SessionRun>> {
-        *self.states.lock().unwrap() = (0..specs.len())
+        *lock_unpoisoned(&self.states) = (0..specs.len())
             .map(|i| SessionState {
                 session: (i + 1) as u64,
                 status: SessionStatus::Queued,
@@ -136,7 +253,7 @@ impl<'a> SessionManager<'a> {
             let sid = (i + 1) as u64;
             self.set_status(i, SessionStatus::Running);
             let res = self.run_one(sid, &specs[i]);
-            let mut st = self.states.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.states);
             let slot = &mut st[i];
             match &res {
                 Ok(run) => {
@@ -153,10 +270,13 @@ impl<'a> SessionManager<'a> {
     }
 
     fn set_status(&self, i: usize, status: SessionStatus) {
-        self.states.lock().unwrap()[i].status = status;
+        lock_unpoisoned(&self.states)[i].status = status;
     }
 
     fn run_one(&self, sid: u64, spec: &SessionSpec) -> anyhow::Result<SessionRun> {
+        if self.cancelled() {
+            return Err(SessionCancelled { session: sid }.into());
+        }
         let mut channels = Vec::with_capacity(self.muxes.len());
         for mux in self.muxes {
             match mux.open(sid) {
@@ -170,6 +290,15 @@ impl<'a> SessionManager<'a> {
                 }
             }
         }
+        // re-check after the opens: a cancel firing between the first
+        // check and here would race the watcher's close sweep and let
+        // this session run on freshly re-created queues
+        if self.cancelled() {
+            for mux in self.muxes {
+                mux.close(sid);
+            }
+            return Err(SessionCancelled { session: sid }.into());
+        }
         let leader = Leader {
             endpoints: &channels,
             cfg: &spec.cfg,
@@ -178,13 +307,43 @@ impl<'a> SessionManager<'a> {
             t: self.t,
             session: sid,
         };
-        let out = leader.run(spec.seed);
+        // Panic containment: a panicking session worker yields a typed
+        // per-session failure, never a batch-wide (or daemon-wide)
+        // abort. The channels outlive the catch so the failure can be
+        // broadcast to the parties.
+        let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if self.panic_session == Some(sid) {
+                panic!("injected session panic (chaos handle)");
+            }
+            leader.run(spec.seed)
+        }))
+        .unwrap_or_else(|p| {
+            let message = panic_payload(p.as_ref());
+            // best-effort broadcast so the party workers fail this
+            // session immediately instead of waiting out their receive
+            // timeout
+            let f = super::messages::error_frame(&format!(
+                "session {sid} panicked at the leader: {message}"
+            ));
+            for ch in &channels {
+                let _ = crate::net::Channel::send(ch, &f);
+            }
+            Err(SessionPanicked { session: sid, message }.into())
+        });
         // free the per-session queues whether the session succeeded or
         // not — the soak test asserts no state survives a session
         for mux in self.muxes {
             mux.close(sid);
         }
-        let (output, select, metrics) = out?;
+        let (output, select, metrics) = out.map_err(|e| {
+            // a cancel surfaces as whatever receive error the queue
+            // teardown caused; give it its typed identity
+            if self.cancelled() {
+                anyhow::Error::from(SessionCancelled { session: sid })
+            } else {
+                e
+            }
+        })?;
         Ok(SessionRun { session: sid, output, select, metrics })
     }
 }
@@ -194,9 +353,13 @@ impl<'a> SessionManager<'a> {
 /// backend (hence one artifact engine + lowering cache). Returns
 /// `(served, failed)` once the leader announces shutdown; per-session
 /// protocol errors are reported over the wire by the party state machine
-/// and do not stop the service.
+/// and do not stop the service. A *panicking* session worker is equally
+/// contained — counted as failed, queue freed, worker back to
+/// accepting — because under a long-lived daemon one poisoned session
+/// must never take the whole party service (and with it every other
+/// tenant's sessions) down.
 pub fn party_service(
-    mux: SessionMux,
+    mux: &SessionMux,
     data: &crate::gwas::PartyData,
     compute: &ComputeBackend,
     max_workers: usize,
@@ -209,9 +372,12 @@ pub fn party_service(
                 match mux.accept() {
                     Ok(Some(ch)) => {
                         let sid = ch.session();
-                        match party::serve(&ch, data, compute) {
-                            Ok(_) => served.fetch_add(1, Ordering::SeqCst),
-                            Err(_) => failed.fetch_add(1, Ordering::SeqCst),
+                        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            party::serve(&ch, data, compute)
+                        }));
+                        match res {
+                            Ok(Ok(_)) => served.fetch_add(1, Ordering::SeqCst),
+                            Ok(Err(_)) | Err(_) => failed.fetch_add(1, Ordering::SeqCst),
                         };
                         mux.close(sid);
                     }
@@ -262,6 +428,16 @@ pub struct BatchOptions {
     pub recv_timeout: Option<Duration>,
     /// chaos battery: perturb one frame on one party's shared connection
     pub fault: Option<FaultSpec>,
+    /// external cancellation: when the token fires, a watcher closes
+    /// every batch session's queues (waking blocked receives) and
+    /// sessions fail with the typed [`SessionCancelled`]
+    pub cancel: Option<CancelToken>,
+    /// chaos handle: the leader-side worker of this session id panics
+    /// mid-run (drives the panic-containment regression tests)
+    pub panic_session: Option<u64>,
+    /// chaos handle: this party's whole service thread panics before
+    /// serving (drives the service-join regression tests)
+    pub panic_party_service: Option<usize>,
 }
 
 impl Default for BatchOptions {
@@ -271,6 +447,9 @@ impl Default for BatchOptions {
             max_concurrent: 4,
             recv_timeout: Some(Duration::from_secs(30)),
             fault: None,
+            cancel: None,
+            panic_session: None,
+            panic_party_service: None,
         }
     }
 }
@@ -289,6 +468,9 @@ pub struct SessionBatchResult {
     /// sessions the party services completed / failed (summed)
     pub served: usize,
     pub failed: usize,
+    /// party service threads that died on a panic — a counted, typed
+    /// outcome (their sessions fail individually), never a batch abort
+    pub service_panics: usize,
     /// leader-side sessions still open right after the batch (must be 0
     /// — the soak-test handle)
     pub residual_sessions: usize,
@@ -342,7 +524,11 @@ pub fn run_session_batch(
         let meter = ByteMeter::new();
         match opts.transport {
             Transport::Reactor => {
-                let r = reactor.as_ref().expect("reactor constructed above");
+                // typed failure, not a daemon-killing panic, if the
+                // construction above ever stops covering this arm
+                let r = reactor.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("reactor transport selected but no reactor was built")
+                })?;
                 let (ls, ps) = tcp_stream_pair()?;
                 leader_muxes.push(reactor_mux(
                     r, ls, l_opts.clone(), meter.clone(), p, opts.fault,
@@ -396,42 +582,103 @@ pub fn run_session_batch(
     }
 
     let t0 = Instant::now();
-    let manager = SessionManager::new(
+    let mut manager = SessionManager::new(
         &leader_muxes,
         cohort.k(),
         cohort.m(),
         cohort.t(),
         opts.max_concurrent,
     );
-    let (runs, states, served, failed, residual_sessions) = std::thread::scope(|s| {
-        let mut svc = Vec::with_capacity(parties);
-        for (p, mux) in party_muxes.into_iter().enumerate() {
-            let data = &cohort.parties[p];
-            let compute = &computes[p];
-            let workers = opts.max_concurrent;
-            svc.push(s.spawn(move || party_service(mux, data, compute, workers)));
-        }
-        let runs = manager.run(specs);
-        let states = manager.states();
-        let residual: usize = leader_muxes.iter().map(|m| m.open_sessions()).sum();
-        // teardown handshake: announce shutdown to every party service,
-        // collect them, then wait for our pumps (fed by their answering
-        // shutdown frames) to exit
-        for mux in leader_muxes.iter() {
-            mux.shutdown();
-        }
-        let mut served = 0usize;
-        let mut failed = 0usize;
-        for h in svc {
-            let (ok, bad) = h.join().expect("party service panicked");
-            served += ok;
-            failed += bad;
-        }
-        for mux in leader_muxes.iter() {
-            mux.join();
-        }
-        (runs, states, served, failed, residual)
-    });
+    if let Some(token) = &opts.cancel {
+        manager.set_cancel(token.clone());
+    }
+    manager.set_panic_session(opts.panic_session);
+    let batch_sessions = specs.len() as u64;
+    let (runs, states, served, failed, service_panics, residual_sessions) =
+        std::thread::scope(|s| {
+            // cancellation watcher: once the token fires, sweep-close
+            // every batch session on the leader muxes (waking blocked
+            // receives) until the batch drains — the repeated sweep also
+            // covers sessions whose queues open after the first pass
+            let batch_done = AtomicBool::new(false);
+            let done = &batch_done;
+            if let Some(token) = opts.cancel.clone() {
+                let muxes = &leader_muxes;
+                s.spawn(move || {
+                    loop {
+                        if done.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        if token.wait_timeout(Duration::from_millis(20)) {
+                            break;
+                        }
+                    }
+                    while !done.load(Ordering::SeqCst) {
+                        for mux in muxes {
+                            for sid in 1..=batch_sessions {
+                                mux.close(sid);
+                            }
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                });
+            }
+            let mut svc = Vec::with_capacity(parties);
+            for (p, mux) in party_muxes.iter().enumerate() {
+                let data = &cohort.parties[p];
+                let compute = &computes[p];
+                let workers = opts.max_concurrent;
+                let panic_service = opts.panic_party_service == Some(p);
+                svc.push(s.spawn(move || {
+                    let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        if panic_service {
+                            panic!("injected party service panic (chaos handle)");
+                        }
+                        party_service(mux, data, compute, workers)
+                    }));
+                    match res {
+                        Ok(counts) => counts,
+                        Err(p) => {
+                            // a dead service must still answer the
+                            // teardown handshake or the leader-side
+                            // pumps would wait forever
+                            mux.shutdown();
+                            mux.join();
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                }));
+            }
+            let runs = manager.run(specs);
+            let states = manager.states();
+            batch_done.store(true, Ordering::SeqCst);
+            let residual: usize = leader_muxes.iter().map(|m| m.open_sessions()).sum();
+            // teardown handshake: announce shutdown to every party
+            // service, collect them, then wait for our pumps (fed by
+            // their answering shutdown frames) to exit
+            for mux in leader_muxes.iter() {
+                mux.shutdown();
+            }
+            let mut served = 0usize;
+            let mut failed = 0usize;
+            let mut service_panics = 0usize;
+            for h in svc {
+                // a panicked service is a counted outcome, not a batch
+                // abort: its sessions already failed individually on
+                // their receive timeouts
+                match h.join() {
+                    Ok((ok, bad)) => {
+                        served += ok;
+                        failed += bad;
+                    }
+                    Err(_) => service_panics += 1,
+                }
+            }
+            for mux in leader_muxes.iter() {
+                mux.join();
+            }
+            (runs, states, served, failed, service_panics, residual)
+        });
     // every mux has completed its teardown handshake: stop the readiness
     // loop and close the sockets it drove
     if let Some(r) = &reactor {
@@ -446,6 +693,7 @@ pub fn run_session_batch(
         party_kernels: kernel_meters,
         served,
         failed,
+        service_panics,
         residual_sessions,
         wall_s,
     })
@@ -456,6 +704,7 @@ mod tests {
     use super::*;
     use crate::gwas::{generate_cohort, CohortSpec};
     use crate::mpc::Backend;
+    use crate::net::chaos::{FaultDir, FaultMode};
 
     fn batch_cfg(backend: Backend) -> ScanConfig {
         ScanConfig {
@@ -524,6 +773,129 @@ mod tests {
         // the shared connections carry every session plus control frames
         let conn_total: u64 = batch.conn_bytes.iter().sum();
         assert!(conn_total > bytes.iter().sum::<u64>() / 2);
+    }
+
+    #[test]
+    fn injected_session_panic_is_contained_and_typed() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 324);
+        let cfg = batch_cfg(Backend::Plaintext);
+        let specs: Vec<SessionSpec> =
+            (0..3).map(|i| SessionSpec { cfg: cfg.clone(), seed: 60 + i }).collect();
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions {
+                max_concurrent: 3,
+                panic_session: Some(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // the panicked session failed with the typed error...
+        let err = batch.runs[1].as_ref().unwrap_err();
+        assert!(err.downcast_ref::<SessionPanicked>().is_some(), "{err:#}");
+        // ...every other session completed, the scheduler states stayed
+        // queryable, and no per-session queue leaked
+        assert!(batch.runs[0].is_ok() && batch.runs[2].is_ok());
+        assert_eq!(batch.states[1].status, SessionStatus::Failed);
+        assert_eq!(batch.states[0].status, SessionStatus::Done);
+        assert_eq!(batch.residual_sessions, 0);
+        assert_eq!(batch.service_panics, 0);
+        // the broadcast error frame failed the session at all 3 parties
+        // immediately (no timeout waits)
+        assert_eq!(batch.failed, 3);
+        assert_eq!(batch.served, 6);
+    }
+
+    #[test]
+    fn cancel_before_start_fails_every_session_typed() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 325);
+        let cfg = batch_cfg(Backend::Masked);
+        let token = CancelToken::new();
+        token.cancel();
+        let specs: Vec<SessionSpec> =
+            (0..2).map(|i| SessionSpec { cfg: cfg.clone(), seed: 70 + i }).collect();
+        let t0 = Instant::now();
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions { cancel: Some(token), ..Default::default() },
+        )
+        .unwrap();
+        // prompt teardown — nothing waited out a 30 s receive timeout
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        for run in &batch.runs {
+            let err = run.as_ref().unwrap_err();
+            assert!(err.downcast_ref::<SessionCancelled>().is_some(), "{err:#}");
+        }
+        assert_eq!(batch.residual_sessions, 0);
+    }
+
+    #[test]
+    fn cancel_mid_scan_wakes_a_stalled_session() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 326);
+        let cfg = batch_cfg(Backend::Masked);
+        let token = CancelToken::new();
+        let canceller = token.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            canceller.cancel();
+        });
+        let specs = vec![SessionSpec { cfg, seed: 80 }];
+        let t0 = Instant::now();
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions {
+                // swallow one of party 0's contributions: the leader
+                // stalls mid-scan, and only the cancel sweep (closing
+                // the session's queues) can release it before the 30 s
+                // receive timeout
+                fault: Some(FaultSpec {
+                    party: 0,
+                    dir: FaultDir::Recv,
+                    mode: FaultMode::Drop,
+                    session: 1,
+                    nth: 2,
+                }),
+                cancel: Some(token),
+                max_concurrent: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        h.join().unwrap();
+        let err = batch.runs[0].as_ref().unwrap_err();
+        assert!(err.downcast_ref::<SessionCancelled>().is_some(), "{err:#}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "cancel did not wake the stalled session"
+        );
+        assert_eq!(batch.residual_sessions, 0);
+    }
+
+    #[test]
+    fn party_service_panic_is_counted_not_fatal() {
+        let cohort = generate_cohort(&CohortSpec::default_small(), 327);
+        let cfg = batch_cfg(Backend::Plaintext);
+        let specs = vec![SessionSpec { cfg, seed: 90 }];
+        let batch = run_session_batch(
+            &cohort,
+            &specs,
+            &BatchOptions {
+                panic_party_service: Some(1),
+                // fallback bound for the dead service's sessions
+                recv_timeout: Some(Duration::from_millis(500)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // the join error became a counted outcome, not a batch abort
+        assert_eq!(batch.service_panics, 1);
+        assert!(batch.runs[0].is_err());
+        assert_eq!(batch.residual_sessions, 0);
+        // scheduler state stayed queryable after the crash
+        assert_eq!(batch.states[0].status, SessionStatus::Failed);
     }
 
     #[test]

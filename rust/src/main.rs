@@ -5,18 +5,26 @@
 //!   regress      multi-party linear regression only (§2)
 //!   bench-comm   communication scaling rows (E4)
 //!   artifacts    report on the compiled artifact set
+//!   serve        scan-as-a-service leader daemon (HTTP/JSON control plane)
+//!   jobs         client for a running daemon (submit/status/result/cancel)
 //!
 //! Examples:
 //!   dash scan --parties 4 --n 8000 --m 20000 --backend masked
 //!   dash scan --config run.json --transport tcp
 //!   dash regress --parties 3 --n 3000
+//!   dash serve --listen 127.0.0.1:8787 --max-jobs 2
+//!   dash jobs submit --addr 127.0.0.1:8787 --config run.json --wait
 
 use dash::config::RunConfig;
-use dash::coordinator::{run_multi_party_scan_t, Transport};
+use dash::coordinator::{
+    result_fingerprint, run_multi_party_scan_t, Daemon, DaemonOptions, Transport,
+};
 use dash::gwas::{generate_cohort, CohortSpec};
 use dash::mpc::Backend;
+use dash::net::http::http_request;
 use dash::scan::combine_regression;
 use dash::util::cli::Command;
+use dash::util::json::Json;
 use dash::util::{human_bytes, human_secs};
 
 fn main() {
@@ -44,6 +52,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "regress" => cmd_regress(&rest),
         "bench-comm" => cmd_bench_comm(&rest),
         "artifacts" => cmd_artifacts(&rest),
+        "serve" => cmd_serve(&rest),
+        "jobs" => cmd_jobs(&rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -53,7 +63,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn usage_text() -> String {
-    "usage: dash <scan|regress|bench-comm|artifacts> [options]\n\
+    "usage: dash <scan|regress|bench-comm|artifacts|serve|jobs> [options]\n\
      run `dash <subcommand> --help` for options"
         .to_string()
 }
@@ -276,10 +286,16 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
         }
     }
 
+    // parity oracle: exact bit-pattern fingerprint of the full output,
+    // compared against the daemon path by the e2e smoke
+    let result_fp = format!("{:016x}", result_fingerprint(&res.output, res.select.as_ref()));
+    println!("result_fp         {result_fp}");
+
     if let Some(path) = a.get("report") {
         if !path.is_empty() {
             let mut rep = dash::util::json::Json::obj();
             rep.set("config", cfg.to_json())
+                .set("result_fp", result_fp.as_str())
                 .set("bytes_total", res.metrics.bytes_total)
                 .set("bytes_result", res.metrics.bytes_result)
                 .set("compress_wall_s", res.metrics.compress_wall_s)
@@ -406,11 +422,13 @@ fn run_scan_sessions(cfg: &RunConfig, report: Option<&str>) -> anyhow::Result<()
                 row.set("session", i + 1);
                 match run {
                     Ok(r) => {
+                        let fp = result_fingerprint(&r.output, r.select.as_ref());
                         row.set("ok", true)
                             .set("total_s", r.metrics.total_s)
                             .set("bytes_total", r.metrics.bytes_total)
                             .set("shards", r.metrics.shards)
-                            .set("select_rounds", r.metrics.select_rounds);
+                            .set("select_rounds", r.metrics.select_rounds)
+                            .set("result_fp", format!("{fp:016x}"));
                     }
                     Err(e) => {
                         row.set("ok", false).set("error", format!("{e:#}"));
@@ -534,6 +552,154 @@ fn cmd_artifacts(raw: &[String]) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "run the scan-as-a-service leader daemon")
+        .opt("listen", "127.0.0.1:8787", "listen address (host:port; port 0 = ephemeral)")
+        .opt("max-jobs", "2", "worker pool size — jobs running concurrently")
+        .opt("queue", "4", "jobs allowed to wait behind the pool before submits get 429")
+        .opt("max-jobs-per-tenant", "2", "active (queued + running) jobs per tenant")
+        .opt("retry-after", "1", "Retry-After seconds attached to 429 rejections")
+        .opt(
+            "checkpoint-dir",
+            "",
+            "per-job checkpoint root: job i snapshots under job-{i}/, removed when the \
+             job settles; orphans are swept at startup (empty = checkpointing off)",
+        );
+    let a = cmd.parse(raw)?;
+    let opts = DaemonOptions {
+        listen: a.get("listen").unwrap().to_string(),
+        max_jobs: a.get_usize("max-jobs")?,
+        queue_cap: a.get_usize("queue")?,
+        max_jobs_per_tenant: a.get_usize("max-jobs-per-tenant")?,
+        retry_after_s: a.get_u64("retry-after")?,
+        checkpoint_root: a.get("checkpoint-dir").unwrap().to_string(),
+    };
+    let daemon = Daemon::start(opts)?;
+    // the e2e smoke parses this line to learn the ephemeral port
+    println!("dash daemon listening on {}", daemon.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_jobs(raw: &[String]) -> anyhow::Result<()> {
+    let (action, rest) = match raw.split_first() {
+        Some((s, r)) if !s.starts_with('-') => (s.as_str(), r.to_vec()),
+        _ => anyhow::bail!("usage: dash jobs <submit|status|result|cancel|health> [options]"),
+    };
+    let cmd = Command::new("jobs", "client for a running dash daemon")
+        .opt("addr", "127.0.0.1:8787", "daemon address")
+        .opt("config", "", "run-config JSON file to submit (defaults apply when empty)")
+        .opt("tenant", "anon", "tenant name for admission quotas")
+        .opt("id", "0", "job id (status|result|cancel)")
+        .opt("poll-ms", "100", "poll interval for --wait")
+        .flag("wait", "submit: poll until the job settles, then fetch and print the result");
+    let a = cmd.parse(&rest)?;
+    let addr = a.get("addr").unwrap().to_string();
+    match action {
+        "health" => {
+            let r = http_request(&addr, "GET", "/healthz", None)?;
+            anyhow::ensure!(r.status == 200, "daemon unhealthy: HTTP {}", r.status);
+            println!("{}", r.json_body()?.to_pretty());
+            Ok(())
+        }
+        "submit" => {
+            let mut body = Json::obj();
+            body.set("tenant", a.get("tenant").unwrap());
+            if let Some(path) = a.get("config").filter(|p| !p.is_empty()) {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
+                body.set("config", Json::parse(&text)?);
+            }
+            let r = http_request(&addr, "POST", "/jobs", Some(body.to_string().as_bytes()))?;
+            let v = r.json_body()?;
+            anyhow::ensure!(
+                r.status == 201,
+                "submit rejected: HTTP {} {}",
+                r.status,
+                v.to_string()
+            );
+            let id = v
+                .get("job")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("daemon response carries no job id"))?;
+            println!("job {id}");
+            if a.flag("wait") {
+                let poll = a.get_u64("poll-ms")?.max(10);
+                loop {
+                    let r = http_request(&addr, "GET", &format!("/jobs/{id}"), None)?;
+                    anyhow::ensure!(r.status == 200, "status poll failed: HTTP {}", r.status);
+                    let v = r.json_body()?;
+                    let st = v.get("status").and_then(Json::as_str).unwrap_or("?").to_string();
+                    if st != "queued" && st != "running" {
+                        anyhow::ensure!(
+                            st == "done",
+                            "job {id} settled as {st}: {}",
+                            v.get("error").and_then(Json::as_str).unwrap_or("(no detail)")
+                        );
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(poll));
+                }
+                let r = http_request(&addr, "GET", &format!("/jobs/{id}/result"), None)?;
+                anyhow::ensure!(r.status == 200, "result fetch failed: HTTP {}", r.status);
+                print_job_result(&r.json_body()?);
+            }
+            Ok(())
+        }
+        "status" => {
+            let id = a.get_u64("id")?;
+            let r = http_request(&addr, "GET", &format!("/jobs/{id}"), None)?;
+            println!("{}", r.json_body()?.to_pretty());
+            anyhow::ensure!(r.status == 200, "HTTP {}", r.status);
+            Ok(())
+        }
+        "result" => {
+            let id = a.get_u64("id")?;
+            let r = http_request(&addr, "GET", &format!("/jobs/{id}/result"), None)?;
+            let v = r.json_body()?;
+            anyhow::ensure!(r.status == 200, "no result: HTTP {} {}", r.status, v.to_string());
+            print_job_result(&v);
+            Ok(())
+        }
+        "cancel" => {
+            let id = a.get_u64("id")?;
+            let r = http_request(&addr, "DELETE", &format!("/jobs/{id}"), None)?;
+            println!("{}", r.json_body()?.to_string());
+            anyhow::ensure!(r.status < 300, "HTTP {}", r.status);
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown jobs action `{other}` (submit|status|result|cancel|health)")
+        }
+    }
+}
+
+/// Shape summary plus the parity fingerprint. The `result_fp` line is
+/// what the e2e smoke compares against a one-shot `dash scan`.
+fn print_job_result(v: &Json) {
+    let g = |k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+    println!(
+        "job {} session {}: N={} K={} M={} T={}",
+        g("job"),
+        g("session"),
+        g("n"),
+        g("k"),
+        g("m"),
+        g("traits")
+    );
+    if let Some(sel) = v.get("select") {
+        println!(
+            "select lanes {} selected {}",
+            sel.get("lanes").and_then(Json::as_usize).unwrap_or(0),
+            sel.get("selected").map(|s| s.to_string()).unwrap_or_default()
+        );
+    }
+    println!("result_fp {}", v.get("result_fp").and_then(Json::as_str).unwrap_or("?"));
 }
 
 fn split_sizes(n: usize, parties: usize) -> Vec<usize> {

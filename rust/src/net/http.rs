@@ -1,0 +1,426 @@
+//! Minimal HTTP/1.1 server and client for the daemon control plane.
+//!
+//! Hand-rolled over [`std::net::TcpListener`] under the same
+//! no-new-deps discipline as the rest of the transport layer: the
+//! control plane needs exactly five routes and JSON bodies, not a web
+//! framework. The server is deliberately simple — every connection
+//! carries one request and is closed after the response
+//! (`Connection: close`), each accepted connection is handled on its
+//! own short-lived thread, and bodies are bounded (`413` past the cap)
+//! with a socket read timeout so a stalled client cannot pin a handler
+//! thread forever. That is the right shape for a job-control API where
+//! requests are small, infrequent, and latency-insensitive relative to
+//! the multi-second scans they launch.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Largest accepted request body (the biggest legitimate payload is a
+/// RunConfig JSON document, a few KiB).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest accepted request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Per-socket read timeout: bounds how long a slow or stalled peer can
+/// hold a handler thread.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path only (any `?query` suffix is kept verbatim in `path`; the
+    /// control plane doesn't use query strings)
+    pub path: String,
+    /// header names lowercased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One HTTP response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// JSON response with the right content type.
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "application/json".into())],
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    /// Plain-text response.
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "text/plain".into())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Add a header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
+    }
+
+    /// Case-insensitive header lookup (client side).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body parsed as JSON (client side).
+    pub fn json_body(&self) -> anyhow::Result<crate::util::json::Json> {
+        crate::util::json::Json::parse(std::str::from_utf8(&self.body)?)
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+/// Read one request head + body off a stream. `Err` means the request
+/// was malformed or over limits; the enclosed response should be sent
+/// back before closing.
+fn read_request(stream: &mut BufReader<TcpStream>) -> Result<Request, Response> {
+    let mut head = String::new();
+    // request line
+    let mut line = String::new();
+    stream
+        .read_line(&mut line)
+        .map_err(|_| Response::text(400, "unreadable request line"))?;
+    if line.is_empty() {
+        return Err(Response::text(400, "empty request"));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(Response::text(400, "malformed request line"));
+    }
+    // headers
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        stream
+            .read_line(&mut line)
+            .map_err(|_| Response::text(400, "unreadable header"))?;
+        head.push_str(&line);
+        if head.len() > MAX_HEAD_BYTES {
+            return Err(Response::text(400, "request head too large"));
+        }
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        let Some((name, value)) = trimmed.split_once(':') else {
+            return Err(Response::text(400, "malformed header"));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    // body (Content-Length framing only; the control plane never chunks)
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse())
+        .transpose()
+        .map_err(|_| Response::text(400, "malformed content-length"))?
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(Response::text(413, "request body too large"));
+    }
+    let mut body = vec![0u8; len];
+    stream
+        .read_exact(&mut body)
+        .map_err(|_| Response::text(400, "truncated request body"))?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut out = format!("HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    for (k, v) in &resp.headers {
+        out.push_str(&format!("{k}: {v}\r\n"));
+    }
+    out.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", resp.body.len()));
+    stream.write_all(out.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+/// Request handler: pure function from request to response. Panics are
+/// contained per connection and answered with a 500.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A tiny threaded HTTP server: one accept loop, one short-lived thread
+/// per connection, one request per connection.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving. `addr` may use port 0 (ephemeral); the
+    /// actual address is [`HttpServer::local_addr`].
+    pub fn bind(addr: &str, handler: Handler) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            // finished-connection reaping keeps the handle list bounded
+            // on a long-lived daemon
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let handler = Arc::clone(&handler);
+                conns.push(std::thread::spawn(move || serve_conn(stream, handler)));
+                conns.retain(|h| !h.is_finished());
+            }
+            for h in conns {
+                let _ = h.join();
+            }
+        });
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            accept_thread: Mutex::new(Some(accept)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and wait for in-flight connections to finish.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        let handle = crate::util::lock_unpoisoned(&self.accept_thread).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, handler: Handler) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let resp = match read_request(&mut reader) {
+        Ok(req) => {
+            // a panicking handler answers 500 and the daemon lives on
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)))
+                .unwrap_or_else(|_| Response::text(500, "handler panicked"))
+        }
+        Err(resp) => resp,
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+/// Blocking one-shot HTTP client: open, send one request, read the full
+/// response. Enough for the `dash jobs` CLI, the tests, and the bench.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> anyhow::Result<Response> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let body = body.unwrap_or(&[]);
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n\
+         connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    anyhow::ensure!(
+        parts.next().is_some_and(|v| v.starts_with("HTTP/1.")),
+        "malformed status line {line:?}"
+    );
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line {line:?}"))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let len: Option<usize> = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok());
+    let mut body = Vec::new();
+    match len {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::bind(
+            "127.0.0.1:0",
+            Arc::new(|req: &Request| match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/healthz") => {
+                    let mut o = Json::obj();
+                    o.set("ok", true);
+                    Response::json(200, &o)
+                }
+                ("POST", "/echo") => Response {
+                    status: 200,
+                    headers: vec![("content-type".into(), "application/json".into())],
+                    body: req.body.clone(),
+                },
+                ("GET", "/boom") => panic!("handler panic"),
+                ("GET", "/busy") => {
+                    Response::text(429, "try later").with_header("retry-after", "1")
+                }
+                _ => Response::text(404, "no such route"),
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let srv = echo_server();
+        let addr = srv.local_addr().to_string();
+        let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.json_body().unwrap().get("ok").and_then(|j| j.as_bool()), Some(true));
+        let body = br#"{"x": 3}"#;
+        let r = http_request(&addr, "POST", "/echo", Some(body)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, body);
+        let r = http_request(&addr, "GET", "/nowhere", None).unwrap();
+        assert_eq!(r.status, 404);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn custom_headers_survive_the_wire() {
+        let srv = echo_server();
+        let addr = srv.local_addr().to_string();
+        let r = http_request(&addr, "GET", "/busy", None).unwrap();
+        assert_eq!(r.status, 429);
+        assert_eq!(r.header("Retry-After"), Some("1"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_is_a_500_and_the_server_keeps_serving() {
+        let srv = echo_server();
+        let addr = srv.local_addr().to_string();
+        let r = http_request(&addr, "GET", "/boom", None).unwrap();
+        assert_eq!(r.status, 500);
+        // the accept loop survived the panicked handler
+        let r = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_413() {
+        let srv = echo_server();
+        let addr = srv.local_addr().to_string();
+        // claim an over-cap body without paying to send it
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let head = format!(
+            "POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        let mut resp = String::new();
+        BufReader::new(stream).read_line(&mut resp).unwrap();
+        assert!(resp.contains("413"), "{resp}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_prompt_and_idempotent() {
+        let srv = echo_server();
+        let addr = srv.local_addr().to_string();
+        srv.shutdown();
+        srv.shutdown();
+        assert!(http_request(&addr, "GET", "/healthz", None).is_err());
+    }
+}

@@ -22,6 +22,7 @@
 pub mod chaos;
 mod codec;
 mod frame;
+pub mod http;
 pub mod mux;
 pub mod reactor;
 mod transport;

@@ -413,9 +413,14 @@ impl SessionMux {
     }
 
     /// Close a session: frees its queue. Late frames for it are dropped.
+    /// A receiver blocked in `recv` on this session is woken and fails
+    /// with a clean "not open" error immediately — close is the
+    /// cancellation path, and a cancelled session must not sit out the
+    /// full receive timeout first.
     pub fn close(&self, sid: u64) {
         let mut st = self.core.state.lock().unwrap();
         st.queues.remove(&sid);
+        self.core.cv.notify_all();
         // a frame driver stalled on this session's full inbox must not
         // wait forever for a consumer that just left
         self.core.unstall(sid, st);
@@ -675,6 +680,26 @@ mod tests {
             "blocked recv burned {} CPU ticks — busy spin",
             after - before
         );
+        finish(&leader, &party);
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_receiver_promptly() {
+        // a session blocked in recv (30 s default timeout) must fail the
+        // moment its queue is closed out from under it — the liveness
+        // bound the daemon's cancellation path relies on
+        let (leader, party) = muxed_pair();
+        let a = leader.open(1).unwrap();
+        let t = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            (a.recv(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        leader.close(1);
+        let (res, waited) = t.join().unwrap();
+        let err = res.unwrap_err();
+        assert!(format!("{err:#}").contains("not open"), "{err:#}");
+        assert!(waited < Duration::from_secs(2), "recv waited {waited:?} after close");
         finish(&leader, &party);
     }
 

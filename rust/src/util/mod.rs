@@ -18,6 +18,17 @@ pub mod threadpool;
 pub mod bench;
 pub mod proptest;
 
+/// Lock a mutex, recovering from poisoning. A panic while a guard was
+/// held marks the mutex poisoned forever; for scheduler/registry state
+/// that must stay queryable after a crashed worker (a daemon answering
+/// `GET /jobs/{id}` after one job panicked), the stored data is still a
+/// consistent snapshot — every writer updates it atomically under the
+/// guard — so the right move is to take the data back, not to cascade
+/// the panic into every later reader.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Format a byte count as a human-readable string (e.g. `"1.25 MiB"`).
 pub fn human_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -50,6 +61,24 @@ pub fn human_secs(s: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicked_holder() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        // poison the mutex: panic while holding the guard
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // the data is still the consistent pre-panic snapshot
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
 
     #[test]
     fn human_bytes_units() {

@@ -1,0 +1,403 @@
+//! Control-plane integration: the scan-as-a-service daemon of ISSUE 9.
+//!
+//! - submit → poll → fetch over real HTTP is bit-identical to a direct
+//!   [`run_session_batch`] on all three MPC backends (`result_fp` and
+//!   the decoded bit patterns themselves);
+//! - a saturated worker pool rejects with 429 + `Retry-After` within a
+//!   second — admission control never queues forever;
+//! - per-tenant quotas admit other tenants and free up on cancel;
+//! - cancelling a wedged mid-scan job frees its mux queues
+//!   (`residual_sessions == 0`) and removes its checkpoint directory;
+//! - a deliberately panicked session settles as `failed`, leaves no
+//!   checkpoint behind, and the daemon keeps serving;
+//! - a concurrent submit/cancel/status battery never yields an
+//!   unexpected status code and every job settles.
+
+mod common;
+
+use common::{backends, cfg, spec_for};
+use dash::config::RunConfig;
+use dash::coordinator::daemon::job_checkpoint_dir;
+use dash::coordinator::{
+    result_fingerprint, run_session_batch, BatchOptions, Daemon, DaemonOptions, SessionSpec,
+};
+use dash::gwas::generate_cohort;
+use dash::mpc::Backend;
+use dash::net::http::{http_request, Response};
+use dash::util::json::Json;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn daemon(opts: DaemonOptions) -> (Daemon, String) {
+    let d = Daemon::start(opts).unwrap();
+    let addr = d.addr().to_string();
+    (d, addr)
+}
+
+/// A small scan+SELECT run config the daemon can regenerate exactly
+/// (the cohort is derived from the spec, so config JSON is the whole
+/// job description).
+fn run_config(backend: Backend, seed: u64) -> RunConfig {
+    RunConfig {
+        cohort: spec_for(3, 24, 24, 1),
+        scan: {
+            let mut c = cfg(backend, 8);
+            c.select_k = 2;
+            c
+        },
+        seed,
+        ..RunConfig::default()
+    }
+}
+
+fn job_body(rc: &RunConfig) -> Json {
+    let mut b = Json::obj();
+    b.set("config", rc.to_json());
+    b
+}
+
+fn submit(addr: &str, body: &Json) -> Response {
+    http_request(addr, "POST", "/jobs", Some(body.to_string().as_bytes())).unwrap()
+}
+
+fn submit_ok(addr: &str, body: &Json) -> u64 {
+    let r = submit(addr, body);
+    assert_eq!(r.status, 201, "submit: {}", String::from_utf8_lossy(&r.body));
+    r.json_body().unwrap().get("job").and_then(Json::as_usize).unwrap() as u64
+}
+
+fn status_of(addr: &str, id: u64) -> Json {
+    let r = http_request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(r.status, 200, "status: {}", String::from_utf8_lossy(&r.body));
+    r.json_body().unwrap()
+}
+
+fn state_of(v: &Json) -> String {
+    v.get("status").and_then(Json::as_str).unwrap_or("?").to_string()
+}
+
+/// Poll until the job reaches `want` (or panics after `within`).
+fn wait_for(addr: &str, id: u64, want: &str, within: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let v = status_of(addr, id);
+        let st = state_of(&v);
+        if st == want {
+            return v;
+        }
+        assert!(t0.elapsed() < within, "job {id} stuck at `{st}` waiting for `{want}`");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Poll until the job leaves queued/running.
+fn wait_settled(addr: &str, id: u64, within: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let v = status_of(addr, id);
+        let st = state_of(&v);
+        if st != "queued" && st != "running" {
+            return v;
+        }
+        assert!(t0.elapsed() < within, "job {id} still `{st}` after {:?}", t0.elapsed());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn tempdir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("dash-daemon-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_str().unwrap().to_string()
+}
+
+/// Decode one `*_bits` hex array back into the exact f64s.
+fn decode_bits(row: &Json, key: &str) -> Vec<f64> {
+    match row.get(key) {
+        Some(Json::Arr(xs)) => xs
+            .iter()
+            .map(|x| f64::from_bits(u64::from_str_radix(x.as_str().unwrap(), 16).unwrap()))
+            .collect(),
+        other => panic!("missing {key}: {other:?}"),
+    }
+}
+
+/// The headline parity check: for every backend, submit the job over
+/// HTTP and compare the fetched result — fingerprint and decoded bit
+/// patterns — against an in-process [`run_session_batch`] oracle.
+#[test]
+fn daemon_result_is_bit_identical_to_run_session_batch() {
+    let (d, addr) = daemon(DaemonOptions::default());
+    for backend in backends() {
+        // normalize through the JSON round-trip the daemon performs, so
+        // the oracle sees the exact config the daemon will parse (e.g.
+        // the Shamir threshold is re-derived from the backend name)
+        let rc = RunConfig::from_json(&run_config(backend, 0xDA01).to_json()).unwrap();
+        let cohort = generate_cohort(&rc.cohort, rc.seed);
+        let specs = vec![SessionSpec { cfg: rc.scan.clone(), seed: rc.seed }];
+        let opts = BatchOptions {
+            transport: rc.transport,
+            max_concurrent: 1,
+            ..Default::default()
+        };
+        let batch = run_session_batch(&cohort, &specs, &opts).unwrap();
+        let oracle = batch.runs.into_iter().next().unwrap().unwrap();
+        let want_fp =
+            format!("{:016x}", result_fingerprint(&oracle.output, oracle.select.as_ref()));
+
+        let id = submit_ok(&addr, &job_body(&rc));
+        let v = wait_settled(&addr, id, Duration::from_secs(120));
+        assert_eq!(state_of(&v), "done", "{backend:?}: {}", v.to_string());
+        let r = http_request(&addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+        assert_eq!(r.status, 200, "{backend:?}");
+        let res = r.json_body().unwrap();
+        assert_eq!(
+            res.get("result_fp").and_then(Json::as_str),
+            Some(want_fp.as_str()),
+            "{backend:?}: fingerprint parity"
+        );
+        let assoc = match res.get("assoc") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("{backend:?}: missing assoc: {other:?}"),
+        };
+        assert_eq!(assoc.len(), oracle.output.assoc.len(), "{backend:?}: trait count");
+        for (t, row) in assoc.iter().enumerate() {
+            let want = &oracle.output.assoc[t];
+            for (key, want_xs) in
+                [("beta_bits", &want.beta), ("se_bits", &want.se), ("p_bits", &want.p)]
+            {
+                let got = decode_bits(row, key);
+                assert_eq!(got.len(), want_xs.len(), "{backend:?} t{t} {key} length");
+                for (j, g) in got.iter().enumerate() {
+                    assert_eq!(g.to_bits(), want_xs[j].to_bits(), "{backend:?} t{t} {key}[{j}]");
+                }
+            }
+        }
+        // SELECT choices survive the wire too
+        let sel = oracle.select.as_ref().expect("oracle ran SELECT");
+        let got_sel = res.get("select").expect("result carries select");
+        assert_eq!(
+            got_sel.get("lanes").and_then(Json::as_usize),
+            Some(sel.lanes()),
+            "{backend:?}: lanes"
+        );
+    }
+    d.shutdown();
+}
+
+/// Admission control: with the single worker pinned and the one queue
+/// slot taken, the next submit is rejected in well under a second with
+/// 429 + `Retry-After` — never parked on an unbounded queue.
+#[test]
+fn saturated_pool_rejects_with_429_and_retry_after_within_a_second() {
+    let (d, addr) = daemon(DaemonOptions {
+        max_jobs: 1,
+        queue_cap: 1,
+        max_jobs_per_tenant: 16,
+        retry_after_s: 3,
+        ..Default::default()
+    });
+    let mut hold = Json::obj();
+    hold.set("hold_ms", 60_000usize).set("tenant", "t-sat");
+    let a = submit_ok(&addr, &hold);
+    wait_for(&addr, a, "running", Duration::from_secs(10));
+    let b = submit_ok(&addr, &hold); // occupies the only queue slot
+
+    let t0 = Instant::now();
+    let r = submit(&addr, &hold);
+    let waited = t0.elapsed();
+    assert_eq!(r.status, 429, "{}", String::from_utf8_lossy(&r.body));
+    assert!(waited < Duration::from_secs(1), "rejection took {waited:?}");
+    assert_eq!(r.header("retry-after"), Some("3"));
+    assert_eq!(r.json_body().unwrap().get("retry_after_s").and_then(Json::as_usize), Some(3));
+
+    // a held (running) job has no result yet
+    let r = http_request(&addr, "GET", &format!("/jobs/{a}/result"), None).unwrap();
+    assert_eq!(r.status, 409);
+
+    // cancelling the queued job frees the slot immediately
+    let rc = http_request(&addr, "DELETE", &format!("/jobs/{b}"), None).unwrap();
+    assert_eq!(rc.status, 202);
+    let c = submit_ok(&addr, &hold);
+
+    for id in [a, c] {
+        let _ = http_request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+    }
+    d.shutdown();
+}
+
+/// Tenant quotas are per tenant: one tenant at quota gets 429 while
+/// another is admitted, and cancelling frees the quota.
+#[test]
+fn per_tenant_quota_rejects_only_that_tenant() {
+    let (d, addr) = daemon(DaemonOptions {
+        max_jobs: 1,
+        queue_cap: 8,
+        max_jobs_per_tenant: 2,
+        ..Default::default()
+    });
+    let mut alice = Json::obj();
+    alice.set("hold_ms", 60_000usize).set("tenant", "alice");
+    let a1 = submit_ok(&addr, &alice);
+    let a2 = submit_ok(&addr, &alice);
+    let r = submit(&addr, &alice);
+    assert_eq!(r.status, 429, "alice at quota");
+    assert!(r.header("retry-after").is_some());
+
+    // a different tenant is unaffected by alice's quota
+    let mut bob = Json::obj();
+    bob.set("hold_ms", 60_000usize).set("tenant", "bob");
+    let b1 = submit_ok(&addr, &bob);
+
+    // cancel one of alice's: quota frees once it settles
+    let _ = http_request(&addr, "DELETE", &format!("/jobs/{a1}"), None).unwrap();
+    wait_settled(&addr, a1, Duration::from_secs(10));
+    let a3 = submit_ok(&addr, &alice);
+
+    for id in [a2, b1, a3] {
+        let _ = http_request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+    }
+    d.shutdown();
+}
+
+/// Cancel mid-scan: a chaos-stalled job wedges after at least one
+/// checkpoint is on disk; `DELETE` wakes it, the batch unwinds with no
+/// leaked session queues, and the job's checkpoint directory is gone
+/// by the time the status reads `cancelled`.
+#[test]
+fn cancel_mid_scan_frees_queues_and_removes_checkpoints() {
+    let root = tempdir("cancel");
+    let (d, addr) = daemon(DaemonOptions { checkpoint_root: root.clone(), ..Default::default() });
+    let mut rc = run_config(Backend::Masked, 0xDA04);
+    rc.scan.select_k = 0;
+    let mut body = job_body(&rc);
+    body.set("fault", "stall");
+    let id = submit_ok(&addr, &body);
+    wait_for(&addr, id, "running", Duration::from_secs(30));
+
+    // the stall drops the third leader-bound frame (shard 1), so the
+    // shard-0 checkpoint lands before the job wedges
+    let dir = job_checkpoint_dir(&root, id);
+    let t0 = Instant::now();
+    while !Path::new(&dir).exists() {
+        assert!(t0.elapsed() < Duration::from_secs(20), "no checkpoint appeared in {dir}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let r = http_request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(r.status, 202);
+    let v = wait_settled(&addr, id, Duration::from_secs(20));
+    assert_eq!(state_of(&v), "cancelled", "{}", v.to_string());
+    assert_eq!(
+        v.get("residual_sessions").and_then(Json::as_usize),
+        Some(0),
+        "cancel leaked mux session queues"
+    );
+    assert!(!Path::new(&dir).exists(), "cancelled job left its checkpoint behind");
+
+    // the daemon is still fully serving
+    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200);
+    d.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The acceptance regression: a deliberately panicked session settles
+/// as a typed `failed` job with no checkpoint file behind, and the
+/// daemon goes on to run the same job cleanly.
+#[test]
+fn panicking_session_does_not_kill_the_daemon_and_leaves_no_checkpoint() {
+    let root = tempdir("panic");
+    let (d, addr) = daemon(DaemonOptions { checkpoint_root: root.clone(), ..Default::default() });
+    let rc = run_config(Backend::Masked, 0xDA05);
+    let mut body = job_body(&rc);
+    body.set("fault", "panic");
+    let id = submit_ok(&addr, &body);
+    let v = wait_settled(&addr, id, Duration::from_secs(60));
+    assert_eq!(state_of(&v), "failed", "{}", v.to_string());
+    let err = v.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(err.contains("panicked"), "error should name the panic: {err}");
+    assert!(
+        !Path::new(&job_checkpoint_dir(&root, id)).exists(),
+        "panicked job left a checkpoint behind"
+    );
+    let r = http_request(&addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+    assert_eq!(r.status, 409, "failed job has no result");
+
+    // same daemon, same config, no fault: runs to completion
+    let id2 = submit_ok(&addr, &job_body(&rc));
+    let v2 = wait_settled(&addr, id2, Duration::from_secs(120));
+    assert_eq!(state_of(&v2), "done", "{}", v2.to_string());
+    assert!(
+        !Path::new(&job_checkpoint_dir(&root, id2)).exists(),
+        "clean job's checkpoint not removed"
+    );
+    d.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Race battery: several client threads submit, immediately poll, and
+/// cancel jobs while two workers drain the pool. Every response must be
+/// an expected status code (no 500s, no hangs) and every job settles.
+#[test]
+fn concurrent_submit_cancel_status_battery() {
+    let (d, addr) = daemon(DaemonOptions {
+        max_jobs: 2,
+        queue_cap: 64,
+        max_jobs_per_tenant: 64,
+        ..Default::default()
+    });
+    let addr = std::sync::Arc::new(addr);
+    let mut handles = Vec::new();
+    for th in 0..4u64 {
+        let addr = std::sync::Arc::clone(&addr);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..6u64 {
+                let rc = run_config(Backend::Plaintext, 0xBA77 + th * 100 + i);
+                let mut body = job_body(&rc);
+                body.set("hold_ms", 5usize).set("tenant", format!("t{th}"));
+                let r = submit(&addr, &body);
+                assert!(
+                    r.status == 201 || r.status == 429,
+                    "submit: HTTP {} {}",
+                    r.status,
+                    String::from_utf8_lossy(&r.body)
+                );
+                if r.status != 201 {
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+                let v = r.json_body().unwrap();
+                let id = v.get("job").and_then(Json::as_usize).unwrap() as u64;
+                let s = http_request(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+                assert_eq!(s.status, 200);
+                // cancel roughly half the jobs, racing the workers
+                if i % 2 == 0 {
+                    let c = http_request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+                    assert!(c.status == 200 || c.status == 202, "cancel: HTTP {}", c.status);
+                }
+                let s = http_request(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+                assert_eq!(s.status, 200);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // every job drains to a terminal state, none wedged
+    let t0 = Instant::now();
+    loop {
+        let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(h.status, 200);
+        let v = h.json_body().unwrap();
+        let active = v.get("queued").and_then(Json::as_usize).unwrap()
+            + v.get("running").and_then(Json::as_usize).unwrap();
+        if active == 0 {
+            // nothing failed: no faults were injected
+            assert_eq!(v.get("failed").and_then(Json::as_usize), Some(0), "{}", v.to_string());
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(120), "jobs wedged: {}", v.to_string());
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    d.shutdown();
+}

@@ -1,0 +1,156 @@
+//! End-to-end daemon smoke: spawn the real `dash serve` binary on an
+//! ephemeral port, drive it with the `dash jobs` client over real
+//! localhost HTTP, and assert the fetched result is bit-identical
+//! (`result_fp`) to a one-shot `dash scan` with the same parameters.
+//!
+//! The config handed to the daemon is not hand-written: the one-shot
+//! scan's `--report` JSON embeds the exact resolved `RunConfig`, which
+//! this test extracts and resubmits — so the parity check can never
+//! drift from the CLI's cohort-override quirks.
+
+use dash::util::json::Json;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dash")
+}
+
+fn tempdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dash-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn serve_submit_poll_fetch_matches_one_shot_cli() {
+    let dir = tempdir();
+    let report = dir.join("report.json");
+
+    // One-shot CLI run: sharded scan + 2 SELECT rounds.
+    let out = Command::new(bin())
+        .args([
+            "scan", "--parties", "3", "--n", "48", "--m", "24", "--backend", "masked",
+            "--shard-m", "8", "--select-k", "2", "--seed", "9", "--report",
+            report.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "one-shot scan failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let rep = Json::parse(&std::fs::read_to_string(&report).unwrap()).unwrap();
+    let want_fp = rep
+        .get("result_fp")
+        .and_then(Json::as_str)
+        .expect("report carries result_fp")
+        .to_string();
+    // the stdout line agrees with the report (the e2e parse contract)
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let printed = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("result_fp"))
+        .expect("scan printed no result_fp line")
+        .trim()
+        .to_string();
+    assert_eq!(printed, want_fp);
+
+    // The daemon gets the *resolved* config from the report.
+    let cfg_path = dir.join("job.json");
+    std::fs::write(&cfg_path, rep.get("config").expect("report embeds config").to_string())
+        .unwrap();
+
+    // Spawn the daemon on an ephemeral port; it announces the bound
+    // address on its first stdout line.
+    let mut child = Command::new(bin())
+        .args(["serve", "--listen", "127.0.0.1:0", "--checkpoint-dir",
+            dir.join("ckpt").to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout_pipe = child.stdout.take().unwrap();
+    let _guard = KillOnDrop(child);
+    let first = BufReader::new(stdout_pipe)
+        .lines()
+        .next()
+        .expect("daemon exited before announcing its address")
+        .unwrap();
+    let addr = first
+        .strip_prefix("dash daemon listening on ")
+        .unwrap_or_else(|| panic!("unexpected announce line: {first}"))
+        .trim()
+        .to_string();
+
+    // Health must answer promptly once the address is printed.
+    let t0 = Instant::now();
+    loop {
+        let h = Command::new(bin()).args(["jobs", "health", "--addr", &addr]).output().unwrap();
+        if h.status.success() {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "daemon never became healthy: {}",
+            String::from_utf8_lossy(&h.stderr)
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // submit → poll → fetch through the client; --wait prints the
+    // result summary with its parity fingerprint.
+    let sub = Command::new(bin())
+        .args([
+            "jobs", "submit", "--addr", &addr, "--config", cfg_path.to_str().unwrap(),
+            "--tenant", "e2e", "--wait",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        sub.status.success(),
+        "jobs submit failed: {}\n{}",
+        String::from_utf8_lossy(&sub.stdout),
+        String::from_utf8_lossy(&sub.stderr)
+    );
+    let sub_out = String::from_utf8_lossy(&sub.stdout);
+    let got_fp = sub_out
+        .lines()
+        .find_map(|l| l.strip_prefix("result_fp "))
+        .expect("jobs submit --wait printed no result_fp")
+        .trim()
+        .to_string();
+    assert_eq!(got_fp, want_fp, "daemon vs one-shot CLI parity");
+
+    // the dedicated result route agrees
+    let res = Command::new(bin())
+        .args(["jobs", "result", "--addr", &addr, "--id", "1"])
+        .output()
+        .unwrap();
+    assert!(res.status.success(), "{}", String::from_utf8_lossy(&res.stderr));
+    let res_out = String::from_utf8_lossy(&res.stdout);
+    assert!(
+        res_out.contains(&format!("result_fp {want_fp}")),
+        "jobs result output: {res_out}"
+    );
+
+    // no checkpoint residue for the completed job
+    assert!(
+        !dir.join("ckpt/job-1").exists(),
+        "daemon left a checkpoint directory for a finished job"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
