@@ -25,6 +25,7 @@ fn spec(parties: usize, n_per: usize, m: usize) -> CohortSpec {
         batch_effect_sd: 0.1,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     }
 }
 

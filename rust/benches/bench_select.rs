@@ -34,6 +34,7 @@ fn spec(n_total: usize, parties: usize, m: usize) -> CohortSpec {
         batch_effect_sd: 0.1,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     }
 }
 

@@ -31,6 +31,7 @@ fn spec(parties: usize, n_per: usize, m: usize, t: usize) -> CohortSpec {
         batch_effect_sd: 0.1,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     }
 }
 

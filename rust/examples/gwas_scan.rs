@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         batch_effect_sd: 0.25,
         n_pcs: 4,
         noise_sd: 1.0,
+        binary_traits: false,
     };
     eprintln!(
         "generating cohort: P={parties} N={n_total} M={m} K={} ...",

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 batch_effect_sd: 0.4,
                 n_pcs: 2,
                 noise_sd: 1.0,
+                binary_traits: false,
             };
             // same seeds across party counts → paired comparison
             let cohort = generate_cohort(&spec, 1000 + rep);

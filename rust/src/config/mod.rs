@@ -8,7 +8,7 @@
 use crate::coordinator::Transport;
 use crate::gwas::CohortSpec;
 use crate::mpc::Backend;
-use crate::scan::{RFactorMethod, ScanConfig, SelectPolicy};
+use crate::scan::{Glm, RFactorMethod, ScanConfig, SelectPolicy};
 use crate::util::json::Json;
 
 /// Full configuration of one scan run.
@@ -89,7 +89,8 @@ impl RunConfig {
             .set("ancestry_effect", self.cohort.ancestry_effect)
             .set("batch_effect_sd", self.cohort.batch_effect_sd)
             .set("n_pcs", self.cohort.n_pcs)
-            .set("noise_sd", self.cohort.noise_sd);
+            .set("noise_sd", self.cohort.noise_sd)
+            .set("binary_traits", self.cohort.binary_traits);
         let mut scan = Json::obj();
         scan.set("backend", self.scan.backend.name())
             .set("frac_bits", self.scan.frac_bits as usize)
@@ -107,6 +108,9 @@ impl RunConfig {
             .set("entry_widths", self.scan.entry_widths.clone())
             .set("entry_traits", self.scan.entry_traits.clone())
             .set("entry_k_pad", self.scan.entry_k_pad)
+            .set("glm", self.scan.glm.name())
+            .set("irls_max_iter", self.scan.irls_max_iter)
+            .set("irls_tol", self.scan.irls_tol)
             .set(
                 "r_method",
                 match self.scan.r_method {
@@ -215,6 +219,9 @@ fn parse_cohort(v: &Json, mut c: CohortSpec) -> anyhow::Result<CohortSpec> {
             *slot = x;
         }
     }
+    if let Some(x) = v.get("binary_traits").and_then(|j| j.as_bool()) {
+        c.binary_traits = x;
+    }
     Ok(c)
 }
 
@@ -276,6 +283,17 @@ fn parse_scan(v: &Json, mut s: ScanConfig) -> anyhow::Result<ScanConfig> {
         s.entry_k_pad = x;
     }
     s.entry_policy().validate()?;
+    if let Some(x) = v.get("glm").and_then(Json::as_str) {
+        s.glm = Glm::parse(x)?;
+    }
+    if let Some(x) = v.get("irls_max_iter").and_then(Json::as_usize) {
+        anyhow::ensure!(x >= 1, "irls_max_iter must be ≥ 1");
+        s.irls_max_iter = x;
+    }
+    if let Some(x) = v.get("irls_tol").and_then(Json::as_f64) {
+        anyhow::ensure!(x.is_finite() && x > 0.0, "irls_tol must be a positive number");
+        s.irls_tol = x;
+    }
     if let Some(x) = v.get("r_method").and_then(Json::as_str) {
         s.r_method = match x {
             "auto" => RFactorMethod::Auto,
@@ -420,6 +438,39 @@ mod tests {
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.scan.checkpoint_dir, "/tmp/ckpt");
         assert!(back.scan.resume);
+    }
+
+    #[test]
+    fn glm_config_roundtrips_and_validates() {
+        // defaults: linear scan, IRLS knobs at the stats-layer defaults
+        let d = RunConfig::default();
+        assert_eq!(d.scan.glm, Glm::Linear);
+        assert!(!d.cohort.binary_traits);
+        let j = Json::parse(
+            r#"{"cohort": {"binary_traits": true},
+                "scan": {"glm": "logistic", "irls_max_iter": 50, "irls_tol": 1e-9}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scan.glm, Glm::Logistic);
+        assert!(cfg.cohort.binary_traits);
+        assert_eq!(cfg.scan.irls_max_iter, 50);
+        assert_eq!(cfg.scan.irls_tol, 1e-9);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scan.glm, Glm::Logistic);
+        assert!(back.cohort.binary_traits);
+        assert_eq!(back.scan.irls_max_iter, 50);
+        assert_eq!(back.scan.irls_tol, 1e-9);
+        assert!(RunConfig::from_json(&Json::parse(r#"{"scan": {"glm": "poisson"}}"#).unwrap())
+            .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"irls_max_iter": 0}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"scan": {"irls_tol": -1.0}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

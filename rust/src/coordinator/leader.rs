@@ -19,9 +19,12 @@ use crate::mpc::masking::PairwiseMasker;
 use crate::mpc::Backend;
 use crate::net::{Channel, Frame, WireMessage};
 use crate::scan::{
-    base_flat_len, choose_candidates, shard_flat_len, unflatten_base, unflatten_shard,
-    CombineContext, ScanConfig, ScanOutput, SelectOutput, SelectPolicy, SelectState, ShardPlan,
+    base_flat_len, choose_candidates, irls_base_flat_len, irls_shard_flat_len, shard_flat_len,
+    unflatten_base, unflatten_irls_base, unflatten_irls_shard, unflatten_shard, BaseSums,
+    CombineContext, Glm, IrlsState, IrlsStep, ScanConfig, ScanOutput, SelectOutput, SelectPolicy,
+    SelectState, ShardPlan,
 };
+use crate::stats::{score_assoc_from_sums, AssocResult, LogisticFit};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -59,6 +62,15 @@ pub struct SessionMetrics {
     /// broadcast + cross-product sums) — `O(lanes·H)`, independent of M
     /// (the E9 claim, asserted in `integration_select.rs`)
     pub bytes_max_select_round: u64,
+    /// IRLS iterations the logistic null-model fit ran (0 for linear
+    /// scans)
+    pub irls_iters: usize,
+    /// total wire bytes of the IRLS phase (setup/round/done broadcasts
+    /// plus every null-model secure-sum round) — `O(iters·K²·T)`,
+    /// independent of M
+    pub bytes_irls: u64,
+    /// peak wire bytes of any single IRLS round (broadcast + sums)
+    pub bytes_max_irls_round: u64,
     /// shards restored from a checkpoint instead of recomputed (resume)
     pub shards_skipped: u64,
     /// parties that went silent mid-session but were survived — Shamir
@@ -148,7 +160,7 @@ impl<C: Channel> Leader<'_, C> {
         let mut metrics = SessionMetrics::default();
         let plan = ShardPlan::new(self.m, self.cfg.shard_m);
         metrics.shards = plan.count();
-        let codec = FixedCodec::new(self.cfg.frac_bits);
+        let codec = FixedCodec::try_new(self.cfg.frac_bits)?;
         let mut rng = Rng::new(seed);
         let backend_code = match self.cfg.backend {
             Backend::Plaintext => 0u64,
@@ -159,6 +171,21 @@ impl<C: Channel> Leader<'_, C> {
             Backend::Shamir { threshold } => threshold,
             _ => 0,
         };
+
+        // Logistic scans replace the linear shard rounds with the IRLS
+        // loop + one weighted shard pass; the phases that depend on the
+        // linear assembler (SELECT, checkpoint/resume) are rejected up
+        // front instead of failing obscurely mid-session.
+        if self.cfg.glm == Glm::Logistic {
+            anyhow::ensure!(
+                self.cfg.select_k == 0,
+                "logistic scans do not support the SELECT phase"
+            );
+            anyhow::ensure!(
+                self.cfg.checkpoint_dir.is_empty() && !self.cfg.resume,
+                "logistic scans do not support checkpoint/resume"
+            );
+        }
 
         // Resume: load the session's snapshot and check its fingerprint
         // against this run's configuration — resuming across different
@@ -204,6 +231,7 @@ impl<C: Channel> Leader<'_, C> {
                 block_m: self.cfg.block_m as u64,
                 shard_m: self.cfg.shard_m as u64,
                 select_k: self.cfg.select_k as u64,
+                glm: self.cfg.glm.code(),
                 seeds: seed_matrix[p].clone(),
                 done_shards: done.clone(),
             };
@@ -225,6 +253,28 @@ impl<C: Channel> Leader<'_, C> {
             self.collect_round(&codec, 0, base_flat_len(self.k, self.t), &mut dropouts)?;
         metrics.bytes_max_round = round_bytes;
         let base = unflatten_base(self.k, self.t, &base_flat)?;
+
+        // Logistic mode: secure IRLS null model + one weighted shard
+        // pass, then the same results/shutdown downlink as the linear
+        // scan. The linear assembler below is never built.
+        if self.cfg.glm == Glm::Logistic {
+            let (out, results) =
+                self.logistic_phase(&codec, &plan, &base, t_compress, &mut metrics, &mut dropouts)?;
+            let bytes_before = self.total_bytes();
+            for ep in self.endpoints {
+                for res in &results {
+                    ep.send(&res.to_frame())?;
+                }
+                ep.send(&Shutdown.to_frame())?;
+            }
+            metrics.bytes_result = self.total_bytes() - bytes_before;
+            metrics.total_s = t_start.elapsed().as_secs_f64();
+            metrics.bytes_total = self.total_bytes();
+            metrics.messages_total =
+                self.endpoints.iter().map(|e| e.meter().messages()).sum();
+            metrics.dropouts = dropouts;
+            return Ok((out, None, metrics));
+        }
 
         // Factorize the covariate block once (O(K³)). Auto resolution of
         // the R-factor method (TSQR when per-party factors exist) lives
@@ -391,6 +441,146 @@ impl<C: Channel> Leader<'_, C> {
             super::checkpoint::remove(&self.cfg.checkpoint_dir, self.session)?;
         }
         Ok((out, select, metrics))
+    }
+
+    /// Run the logistic workload after the base round: broadcast the
+    /// IRLS parameters, iterate (broadcast β_i, secure-sum the weighted
+    /// null-model stats evaluated at β_i, Newton-update) until the
+    /// deviance stabilizes for every trait or the cap fires, broadcast
+    /// IRLS_DONE with the final β, then collect one *weighted* shard
+    /// round per variant shard (absolute round `iters + 1 + shard`, so
+    /// every mask/share PRG domain stays distinct) and reduce each to
+    /// per-variant score tests. Per-iteration traffic is `O(K²·T)`,
+    /// per-shard traffic `O(K·width·T)` — same envelope as the linear
+    /// scan plus the iteration count.
+    fn logistic_phase(
+        &self,
+        codec: &FixedCodec,
+        plan: &ShardPlan,
+        base: &BaseSums,
+        t_compress: Instant,
+        metrics: &mut SessionMetrics,
+        dropouts: &mut Vec<Dropout>,
+    ) -> anyhow::Result<(ScanOutput, Vec<ShardResult>)> {
+        let (k, t) = (self.k, self.t);
+        // Case counts per trait from the already-aggregated base round:
+        // row 0 of CᵀY is Σy when covariate column 0 is the intercept
+        // (every cohort in this codebase; a non-intercept first column
+        // only de-centers the shared starting point).
+        let sum_y: Vec<f64> = (0..t).map(|tt| base.cty[(0, tt)]).collect();
+        let mut st = IrlsState::new(
+            k,
+            t,
+            base.n as f64,
+            &sum_y,
+            self.cfg.irls_max_iter,
+            self.cfg.irls_tol,
+        )?;
+
+        let sf = IrlsSetup {
+            max_iter: self.cfg.irls_max_iter as u64,
+            tol: self.cfg.irls_tol,
+        }
+        .to_frame();
+        for ep in self.endpoints {
+            metrics.bytes_irls += sf.wire_len();
+            ep.send(&sf)?;
+        }
+
+        // IRLS loop: iteration i is secure-sum round i (1-based; the
+        // base round was round 0).
+        let mut last_contribution = Instant::now();
+        loop {
+            let iter = st.iters + 1;
+            let rf = IrlsRound { iter: iter as u64, beta: st.beta_flat() }.to_frame();
+            let mut round_bytes = 0u64;
+            for ep in self.endpoints {
+                round_bytes += rf.wire_len();
+                ep.send(&rf)?;
+            }
+            let (flat, _, rb) =
+                self.collect_round(codec, iter, irls_base_flat_len(k, t), dropouts)?;
+            last_contribution = Instant::now();
+            round_bytes += rb;
+            metrics.bytes_irls += round_bytes;
+            metrics.bytes_max_irls_round = metrics.bytes_max_irls_round.max(round_bytes);
+            let t0 = Instant::now();
+            let sums = unflatten_irls_base(k, t, &flat)?;
+            let step = st.step(&sums)?;
+            metrics.combine_s += t0.elapsed().as_secs_f64();
+            if step == IrlsStep::Stop {
+                break;
+            }
+        }
+        metrics.irls_iters = st.iters;
+        let df = IrlsDone { iters: st.iters as u64, beta: st.beta_flat() }.to_frame();
+        for ep in self.endpoints {
+            metrics.bytes_irls += df.wire_len();
+            ep.send(&df)?;
+        }
+        let fits: Vec<LogisticFit> = (0..t).map(|tt| st.fit(tt)).collect();
+
+        // Weighted shard pass at the final β: per-variant score tests
+        // against each trait's cached CᵀWC Cholesky factor.
+        let mut results = Vec::with_capacity(plan.count());
+        let mut assoc: Vec<AssocResult> = (0..t)
+            .map(|_| AssocResult {
+                beta: vec![f64::NAN; self.m],
+                se: vec![f64::NAN; self.m],
+                t: vec![f64::NAN; self.m],
+                p: vec![f64::NAN; self.m],
+                df: (base.n as f64) - (k as f64) - 1.0,
+            })
+            .collect();
+        for range in plan.ranges() {
+            let w = range.width();
+            let round = st.iters + 1 + range.index;
+            let (flat, _, rb) =
+                self.collect_round(codec, round, irls_shard_flat_len(k, t, w), dropouts)?;
+            last_contribution = Instant::now();
+            metrics.bytes_max_round = metrics.bytes_max_round.max(rb);
+            let t0 = Instant::now();
+            let sums = unflatten_irls_shard(k, t, w, &flat)?;
+            let mut beta = Vec::with_capacity(w * t);
+            let mut se = Vec::with_capacity(w * t);
+            for tt in 0..t {
+                let a = score_assoc_from_sums(
+                    base.n,
+                    k,
+                    st.final_r(tt),
+                    &sums[tt].score,
+                    &sums[tt].xwx,
+                    &sums[tt].cwx,
+                );
+                for j in 0..w {
+                    assoc[tt].beta[range.j0 + j] = a.beta[j];
+                    assoc[tt].se[range.j0 + j] = a.se[j];
+                    assoc[tt].t[range.j0 + j] = a.t[j];
+                    assoc[tt].p[range.j0 + j] = a.p[j];
+                }
+                beta.extend_from_slice(&a.beta);
+                se.extend_from_slice(&a.se);
+            }
+            metrics.combine_s += t0.elapsed().as_secs_f64();
+            results.push(ShardResult {
+                shard: range.index as u64,
+                j0: range.j0 as u64,
+                traits: t as u64,
+                beta,
+                se,
+            });
+        }
+        metrics.compress_wall_s = last_contribution.duration_since(t_compress).as_secs_f64();
+
+        let covariate_fit = fits.iter().map(|f| f.to_regression_fit(base.n)).collect();
+        let out = ScanOutput {
+            assoc,
+            covariate_fit,
+            n: base.n,
+            k,
+            m: self.m,
+        };
+        Ok((out, results))
     }
 
     /// Run the SELECT rounds: broadcast the candidate shortlist, collect

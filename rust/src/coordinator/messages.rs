@@ -50,6 +50,9 @@ pub const TAG_PROMOTE: u32 = 14;
 pub const TAG_SELECT_RESULT: u32 = 15;
 pub const TAG_SELECT_DONE: u32 = 16;
 pub const TAG_CHECKPOINT: u32 = 17;
+pub const TAG_IRLS_SETUP: u32 = 18;
+pub const TAG_IRLS_ROUND: u32 = 19;
+pub const TAG_IRLS_DONE: u32 = 20;
 
 /// Checkpoint frame format version (bumped on layout changes; loaders
 /// reject other versions rather than guess).
@@ -82,6 +85,14 @@ pub struct Setup {
     /// maximum SELECT rounds after the scan (0 = scan only; > 0 tells
     /// the party to expect a SELECT_SETUP frame after its shard rounds)
     pub select_k: u64,
+    /// GLM wire code ([`crate::scan::Glm`]): 0 = linear, 1 = logistic.
+    /// Logistic replaces the linear shard rounds with IRLS_SETUP, one
+    /// IRLS_ROUND per Newton iteration (secure-sum round = iteration,
+    /// 1-based), IRLS_DONE, then one *weighted* round per variant shard
+    /// at absolute round `iters + 1 + shard` — the continued numbering
+    /// keeps every mask/share PRG domain distinct from the base round
+    /// and from each other.
+    pub glm: u64,
     /// pairwise seeds, row `party_index` of the symmetric seed matrix
     pub seeds: Vec<u64>,
     /// shards already combined by a previous (interrupted) run of this
@@ -109,6 +120,7 @@ impl WireMessage for Setup {
         s.u64("block_m", self.block_m);
         s.u64("shard_m", self.shard_m);
         s.u64("select_k", self.select_k);
+        s.u64("glm", self.glm);
         s.u64s("seeds", &self.seeds);
         s.u64s("done_shards", &self.done_shards);
     }
@@ -127,6 +139,7 @@ impl WireMessage for Setup {
             block_m: s.u64("block_m")?,
             shard_m: s.u64("shard_m")?,
             select_k: s.u64("select_k")?,
+            glm: s.u64("glm")?,
             seeds: s.u64s("seeds")?,
             done_shards: s.u64s("done_shards")?,
         })
@@ -638,6 +651,102 @@ impl WireMessage for Checkpoint {
     }
 }
 
+/// Logistic-mode kickoff: IRLS loop parameters. The party bounds its
+/// round loop by `max_iter` (a hostile leader cannot spin it forever)
+/// and answers each subsequent IRLS_ROUND with one secure-sum
+/// contribution of the weighted null-model sums.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IrlsSetup {
+    /// IRLS iteration cap (≥ 1)
+    pub max_iter: u64,
+    /// deviance stop tolerance (leader-side; informational for parties)
+    pub tol: f64,
+}
+
+impl WireMessage for IrlsSetup {
+    const TAG: u32 = TAG_IRLS_SETUP;
+    const NAME: &'static str = "IRLS_SETUP";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("max_iter", self.max_iter);
+        s.f64("tol", self.tol);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = IrlsSetup { max_iter: s.u64("max_iter")?, tol: s.f64("tol")? };
+        anyhow::ensure!(m.max_iter >= 1, "IRLS needs at least one iteration");
+        anyhow::ensure!(
+            m.tol.is_finite() && m.tol > 0.0,
+            "IRLS tolerance must be positive and finite"
+        );
+        Ok(m)
+    }
+}
+
+/// One IRLS iteration broadcast: the current null-model iterate β
+/// (trait-major `T·K`). The party answers with the weighted sums
+/// `[CᵀWC | CᵀWz | deviance]` per trait, secure-summed at absolute
+/// round `iter` (1-based; round 0 is the base round).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IrlsRound {
+    /// 1-based IRLS iteration = absolute secure-sum round
+    pub iter: u64,
+    /// trait-major `T·K` iterate
+    pub beta: Vec<f64>,
+}
+
+impl WireMessage for IrlsRound {
+    const TAG: u32 = TAG_IRLS_ROUND;
+    const NAME: &'static str = "IRLS_ROUND";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("iter", self.iter);
+        s.f64s("beta", &self.beta);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = IrlsRound { iter: s.u64("iter")?, beta: s.f64s("beta")? };
+        anyhow::ensure!(m.iter >= 1, "IRLS rounds are 1-based");
+        anyhow::ensure!(
+            m.beta.iter().all(|b| b.is_finite()),
+            "IRLS iterate must be finite"
+        );
+        Ok(m)
+    }
+}
+
+/// End of the IRLS loop: how many iterations ran plus the final iterate
+/// (trait-major `T·K`). The party then streams one *weighted* shard
+/// round per variant shard at this β, secure-summed at absolute round
+/// `iters + 1 + shard`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IrlsDone {
+    /// IRLS iterations evaluated (≥ 1)
+    pub iters: u64,
+    /// trait-major `T·K` final iterate
+    pub beta: Vec<f64>,
+}
+
+impl WireMessage for IrlsDone {
+    const TAG: u32 = TAG_IRLS_DONE;
+    const NAME: &'static str = "IRLS_DONE";
+
+    fn write_fields<S: FieldSink>(&self, s: &mut S) {
+        s.u64("iters", self.iters);
+        s.f64s("beta", &self.beta);
+    }
+
+    fn read_fields<S: FieldSource>(s: &mut S) -> anyhow::Result<Self> {
+        let m = IrlsDone { iters: s.u64("iters")?, beta: s.f64s("beta")? };
+        anyhow::ensure!(m.iters >= 1, "IRLS runs at least one iteration");
+        anyhow::ensure!(
+            m.beta.iter().all(|b| b.is_finite()),
+            "IRLS iterate must be finite"
+        );
+        Ok(m)
+    }
+}
+
 /// Error report from a party.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ErrorMsg {
@@ -691,6 +800,7 @@ mod tests {
             block_m: 256,
             shard_m: 128,
             select_k: 3,
+            glm: 0,
             seeds: vec![1, 2, 3, 4, u64::MAX],
             done_shards: vec![0, 3],
         }
@@ -920,6 +1030,47 @@ mod tests {
     }
 
     #[test]
+    fn irls_frames_roundtrip() {
+        roundtrip(&IrlsSetup { max_iter: 25, tol: 1e-8 });
+        roundtrip(&IrlsRound { iter: 3, beta: vec![0.5, -1.25, 0.0] });
+        roundtrip(&IrlsDone { iters: 7, beta: vec![2.0, -0.5] });
+    }
+
+    #[test]
+    fn irls_frames_reject_malformed() {
+        // zero max_iter
+        let mut f = Frame::new(TAG_IRLS_SETUP);
+        f.put_u64(0).put_f64(1e-8);
+        assert!(IrlsSetup::from_frame(&f).is_err());
+        // non-positive / non-finite tolerance
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut f = Frame::new(TAG_IRLS_SETUP);
+            f.put_u64(10).put_f64(bad);
+            assert!(IrlsSetup::from_frame(&f).is_err(), "tol={bad}");
+        }
+        // 0-based IRLS round
+        let mut f = Frame::new(TAG_IRLS_ROUND);
+        f.put_u64(0).put_f64_slice(&[0.5]);
+        assert!(IrlsRound::from_frame(&f).is_err());
+        // non-finite iterate
+        let mut f = Frame::new(TAG_IRLS_ROUND);
+        f.put_u64(1).put_f64_slice(&[f64::NAN]);
+        assert!(IrlsRound::from_frame(&f).is_err());
+        // zero iterations in DONE
+        let mut f = Frame::new(TAG_IRLS_DONE);
+        f.put_u64(0).put_f64_slice(&[0.5]);
+        assert!(IrlsDone::from_frame(&f).is_err());
+        // non-finite final iterate
+        let mut f = Frame::new(TAG_IRLS_DONE);
+        f.put_u64(2).put_f64_slice(&[f64::INFINITY]);
+        assert!(IrlsDone::from_frame(&f).is_err());
+        // wrong tag
+        assert!(IrlsSetup::from_frame(&Compress.to_frame()).is_err());
+        assert!(IrlsRound::from_frame(&Compress.to_frame()).is_err());
+        assert!(IrlsDone::from_frame(&Compress.to_frame()).is_err());
+    }
+
+    #[test]
     fn error_frame_roundtrip() {
         let f = error_frame("boom");
         assert_eq!(parse_error(&f), "boom");
@@ -946,6 +1097,9 @@ mod tests {
             TAG_SELECT_RESULT,
             TAG_SELECT_DONE,
             TAG_CHECKPOINT,
+            TAG_IRLS_SETUP,
+            TAG_IRLS_ROUND,
+            TAG_IRLS_DONE,
         ];
         for (i, a) in tags.iter().enumerate() {
             for b in &tags[i + 1..] {

@@ -39,8 +39,9 @@ use crate::mpc::shamir;
 use crate::net::{Channel, Frame, WireMessage};
 use crate::runtime::Engine;
 use crate::scan::{
-    compress_base_opts, compress_variant_block, compress_variant_block_opts, cross_products,
-    BaseStats, ShardPlan, ShardRange, VariantBlockStats,
+    compress_base_opts, compress_irls_base, compress_irls_shard, compress_variant_block,
+    compress_variant_block_opts, cross_products, BaseStats, ShardPlan, ShardRange,
+    VariantBlockStats,
 };
 use crate::util::threadpool::{effective_threads, parallel_map};
 use std::sync::Arc;
@@ -187,6 +188,28 @@ fn serve_inner<C: Channel>(
     for &s in &setup.done_shards {
         anyhow::ensure!((s as usize) < plan.count(), "done shard {s} beyond the shard plan");
     }
+    anyhow::ensure!(setup.glm <= 1, "unknown glm code {}", setup.glm);
+    if setup.glm == 1 {
+        // Logistic mode preconditions, enforced before any data leaves:
+        // no SELECT phase, no resume (both are linear-assembler
+        // features), and strictly 0/1 traits — the IRLS weighted sums
+        // are only meaningful (and only envelope-bounded) for binary y.
+        anyhow::ensure!(
+            setup.select_k == 0,
+            "logistic scans do not support the SELECT phase"
+        );
+        anyhow::ensure!(
+            setup.done_shards.is_empty(),
+            "logistic scans do not support checkpoint resume"
+        );
+        for &v in &data.ys.data {
+            anyhow::ensure!(
+                v == 0.0 || v == 1.0,
+                "logistic traits must be 0/1 (found {v}); generate the cohort \
+                 with binary traits (--binary-traits)"
+            );
+        }
+    }
 
     Compress::from_frame(&recv_checked(endpoint)?)?;
 
@@ -201,7 +224,9 @@ fn serve_inner<C: Channel>(
         }
     };
 
-    let codec = FixedCodec::new(setup.frac_bits as u32);
+    // The wire carries frac_bits as a u64; reject anything past the
+    // codec's supported range instead of panicking on a hostile SETUP.
+    let codec = FixedCodec::try_new(u32::try_from(setup.frac_bits).unwrap_or(u32::MAX))?;
     let base = state.base()?;
 
     // Backend-specific secure-sum context, shared by the base round and
@@ -309,15 +334,115 @@ fn serve_inner<C: Channel>(
     // order while we keep compressing ahead of it; in cached mode each
     // shard's columns are freed right after this send.
     contribute(&base.flatten(), 0)?;
+
+    // Logistic mode: the linear shard stream and the SELECT phase are
+    // replaced by the leader-driven IRLS loop — one weighted null-model
+    // secure sum per broadcast iterate (absolute round = iteration,
+    // 1-based) — followed by one *weighted* pass over the variant
+    // shards at the final iterate (absolute round `iters + 1 + shard`).
+    // The continued absolute numbering keeps every mask pad / share
+    // polynomial domain-separated from the base round and from each
+    // other. The result drain below is unchanged: the leader broadcasts
+    // the same ShardResult frames either way.
+    if setup.glm == 1 {
+        let k = setup.k as usize;
+        let irls = IrlsSetup::from_frame(&recv_checked(endpoint)?)?;
+        // The cap bounds our round loop — a hostile leader cannot spin
+        // this party through unbounded recompute rounds.
+        anyhow::ensure!(
+            irls.max_iter <= 100_000,
+            "implausible IRLS iteration cap {}",
+            irls.max_iter
+        );
+        let mut rounds_seen = 0u64;
+        let (iters, final_beta) = loop {
+            let f = recv_checked(endpoint)?;
+            match f.tag {
+                TAG_IRLS_ROUND => {
+                    let r = IrlsRound::from_frame(&f)?;
+                    anyhow::ensure!(
+                        r.iter <= irls.max_iter,
+                        "IRLS round {} beyond the advertised cap {}",
+                        r.iter,
+                        irls.max_iter
+                    );
+                    anyhow::ensure!(
+                        r.iter == rounds_seen + 1,
+                        "IRLS round out of order: {} after {rounds_seen}",
+                        r.iter
+                    );
+                    anyhow::ensure!(
+                        r.beta.len() == t * k,
+                        "IRLS iterate length {} != T·K",
+                        r.beta.len()
+                    );
+                    rounds_seen = r.iter;
+                    let flat = match compute {
+                        ComputeBackend::Rust { threads } => {
+                            compress_irls_base(&data.ys, &data.c, &r.beta, None, *threads)
+                        }
+                        ComputeBackend::Artifacts(engine) => {
+                            engine.compress_irls_base(&data.ys, &data.c, &r.beta)?
+                        }
+                    };
+                    contribute(&flat, r.iter as usize)?;
+                }
+                TAG_IRLS_DONE => {
+                    let d = IrlsDone::from_frame(&f)?;
+                    anyhow::ensure!(
+                        d.iters == rounds_seen && rounds_seen >= 1,
+                        "IRLS_DONE iteration count {} != rounds served {rounds_seen}",
+                        d.iters
+                    );
+                    anyhow::ensure!(
+                        d.beta.len() == t * k,
+                        "final IRLS iterate length {} != T·K",
+                        d.beta.len()
+                    );
+                    break (d.iters as usize, d.beta);
+                }
+                other => anyhow::bail!("unexpected frame tag {other} in IRLS phase"),
+            }
+        };
+        for r in plan.ranges() {
+            let flat = match compute {
+                ComputeBackend::Rust { threads } => compress_irls_shard(
+                    &data.ys,
+                    &data.c,
+                    &data.x,
+                    &final_beta,
+                    r.j0,
+                    r.j1,
+                    None,
+                    *threads,
+                ),
+                ComputeBackend::Artifacts(engine) => engine.compress_irls_shard(
+                    &data.ys,
+                    &data.c,
+                    &data.x,
+                    &final_beta,
+                    r.j0,
+                    r.j1,
+                )?,
+            };
+            contribute(&flat, iters + 1 + r.index)?;
+        }
+    }
+
     // Shards the leader restored from a checkpoint need no fresh
     // contribution — drop them from the compress stream. Round numbers
     // stay absolute (r.index + 1), so the remaining rounds keep the
     // mask/share domains of an uninterrupted run, and the result drain
-    // below still expects every shard's broadcast frame.
-    let ranges: Vec<ShardRange> = plan
-        .ranges()
-        .filter(|r| setup.done_shards.binary_search(&(r.index as u64)).is_err())
-        .collect();
+    // below still expects every shard's broadcast frame. (Logistic
+    // sessions contributed their weighted rounds above — nothing left
+    // to stream here.)
+    let ranges: Vec<ShardRange> = if setup.glm == 1 {
+        Vec::new()
+    } else {
+        plan.ranges()
+            .filter(|r| setup.done_shards.binary_search(&(r.index as u64)).is_err())
+            .collect()
+    };
     let fanout = state.shard_fanout(ranges.len());
     if fanout <= 1 {
         for r in ranges {

@@ -31,6 +31,12 @@ pub struct CohortSpec {
     pub n_pcs: usize,
     /// residual noise sd
     pub noise_sd: f64,
+    /// threshold each liability-scale trait at 0 into a 0/1 case-control
+    /// label (`--binary-traits`, logistic scans). The threshold consumes
+    /// no RNG draws, so the underlying liabilities, covariates, and
+    /// genotypes are bit-identical to the quantitative cohort from the
+    /// same seed.
+    pub binary_traits: bool,
 }
 
 impl CohortSpec {
@@ -48,6 +54,7 @@ impl CohortSpec {
             batch_effect_sd: 0.2,
             n_pcs: 2,
             noise_sd: 1.0,
+            binary_traits: false,
         }
     }
 
@@ -225,6 +232,13 @@ pub fn generate_cohort(spec: &CohortSpec, seed: u64) -> Cohort {
                     vt += causal_beta[(tt, ci)] * (x[(i, j)] - 2.0 * f) / sd;
                 }
                 ys[(i, tt)] = vt;
+            }
+        }
+        if spec.binary_traits {
+            // case = positive liability; draw-free, so the generator
+            // stream stays on the quantitative-cohort sequence
+            for v in ys.data.iter_mut() {
+                *v = if *v > 0.0 { 1.0 } else { 0.0 };
             }
         }
         parties.push(PartyData { ys, c, x });

@@ -99,6 +99,10 @@ fn scan_command() -> Command {
         .opt("select-alpha", "1e-4", "SELECT stop rule: entry p-value threshold")
         .opt("select-policy", "union", "SELECT lane policy: union|per-trait")
         .opt("select-candidates", "32", "SELECT candidate-shortlist cap per trait")
+        .opt("glm", "linear", "model: linear|logistic (logistic = secure IRLS null model + weighted score-test pass; requires 0/1 traits)")
+        .opt("irls-max-iter", "25", "IRLS iteration cap for --glm logistic")
+        .opt("irls-tol", "1e-8", "IRLS relative deviance stop tolerance for --glm logistic")
+        .flag("binary-traits", "threshold simulated liabilities into 0/1 case-control traits (for --glm logistic)")
         .opt(
             "checkpoint-dir",
             "",
@@ -156,6 +160,21 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     );
     cfg.scan.select_policy = dash::scan::SelectPolicy::parse(a.get("select-policy").unwrap())?;
     cfg.scan.select_candidates = a.get_usize("select-candidates")?;
+    cfg.scan.glm = dash::scan::Glm::parse(a.get("glm").unwrap())?;
+    cfg.scan.irls_max_iter = a.get_usize("irls-max-iter")?;
+    anyhow::ensure!(cfg.scan.irls_max_iter >= 1, "--irls-max-iter must be ≥ 1");
+    cfg.scan.irls_tol = a.get_f64("irls-tol")?;
+    anyhow::ensure!(
+        cfg.scan.irls_tol.is_finite() && cfg.scan.irls_tol > 0.0,
+        "--irls-tol must be a positive number"
+    );
+    if a.flag("binary-traits") {
+        cfg.cohort.binary_traits = true;
+    }
+    anyhow::ensure!(
+        cfg.scan.glm != dash::scan::Glm::Logistic || cfg.scan.select_k == 0,
+        "--glm logistic does not support the SELECT phase (drop --select-k)"
+    );
     if let Some(dir) = a.get("checkpoint-dir") {
         if !dir.is_empty() {
             cfg.scan.checkpoint_dir = dir.to_string();
@@ -210,6 +229,14 @@ fn cmd_scan(raw: &[String]) -> anyhow::Result<()> {
     );
     println!("compress wall     {}", human_secs(res.metrics.compress_wall_s));
     println!("combine           {}", human_secs(res.metrics.combine_s));
+    if cfg.scan.glm == dash::scan::Glm::Logistic {
+        println!(
+            "irls              {} iters, {} total, peak round {}",
+            res.metrics.irls_iters,
+            human_bytes(res.metrics.bytes_irls),
+            human_bytes(res.metrics.bytes_max_irls_round)
+        );
+    }
     println!("total             {}", human_secs(res.metrics.total_s));
     println!(
         "variant·traits/s  {:.0}",

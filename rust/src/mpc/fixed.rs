@@ -27,6 +27,23 @@
 //! β̂ and σ̂** for every finite variant. Magnitudes past
 //! [`FixedCodec::max_abs`] are rejected at encode time, never silently
 //! wrapped.
+//!
+//! ### IRLS weighted sums (logistic scans)
+//!
+//! The logistic workload secure-sums *reweighted* cross-products. The
+//! IRLS weights are intrinsically bounded — `w = μ(1-μ) ∈ (0, 1/4]` —
+//! and although the working response `z = η + (y-μ)/w` is unbounded as
+//! `w → 0`, every encoded entry carries the product `w·z = w·η + (y-μ)`
+//! with `|y-μ| ≤ 1`, so the weighted sums `CᵀWC`, `CᵀWz`, `XᵀWX`,
+//! `CᵀWX` and the score `Xᵀ(y-μ)` all stay within `O(N·max(|C|,|X|)² ·
+//! max(1, |η|))` of the linear envelope. The one way out of the
+//! envelope is **quasi-separation**: a perfectly predictive covariate
+//! drives `β̂` (hence `η`) toward ±∞ iteration over iteration, the
+//! leader-side divergence guard trips first in practice, and any
+//! weighted sum that does outgrow [`FixedCodec::max_abs`] is rejected
+//! at encode time with a range error — never silently wrapped
+//! (regression-tested by the quasi-separated cohort in
+//! `tests/logistic.rs`).
 
 /// Fixed-point parameters.
 #[derive(Clone, Copy, Debug)]
@@ -40,10 +57,29 @@ impl Default for FixedCodec {
     }
 }
 
+/// Largest supported `frac_bits`: `max_abs` keeps 10 bits of party
+/// headroom under the 62-bit magnitude budget, so the integer part
+/// runs out at `62 - 10 = 52` fractional bits (`max_abs() == 1.0`).
+/// Anything above would underflow the shift — the old `frac_bits < 62`
+/// bound let `max_abs` panic in debug and wrap to a bogus huge range
+/// (defeating `check_range`) in release.
+pub const MAX_FRAC_BITS: u32 = 52;
+
 impl FixedCodec {
+    /// Construct with a trusted `frac_bits` (panics on an unsupported
+    /// value — use [`try_new`](Self::try_new) for wire-derived input).
     pub fn new(frac_bits: u32) -> Self {
-        assert!(frac_bits < 62);
-        FixedCodec { frac_bits }
+        Self::try_new(frac_bits).expect("unsupported frac_bits")
+    }
+
+    /// Non-panicking constructor for untrusted (wire/config) values.
+    pub fn try_new(frac_bits: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            frac_bits <= MAX_FRAC_BITS,
+            "frac_bits {frac_bits} unsupported (max {MAX_FRAC_BITS}: \
+             larger values underflow the max_abs headroom shift)"
+        );
+        Ok(FixedCodec { frac_bits })
     }
 
     #[inline]
@@ -52,9 +88,10 @@ impl FixedCodec {
     }
 
     /// Largest encodable magnitude (with headroom for summing across
-    /// up to 2^10 parties without overflow).
+    /// up to 2^10 parties without overflow). Non-panicking over the
+    /// whole constructor-admitted range `0..=MAX_FRAC_BITS`.
     pub fn max_abs(&self) -> f64 {
-        ((1u64 << (62 - self.frac_bits - 10)) as f64).floor()
+        (1u64 << (62 - self.frac_bits.min(MAX_FRAC_BITS) - 10)) as f64
     }
 
     /// Encode one value into the ring Z_2^64 (two's complement).
@@ -170,5 +207,39 @@ mod tests {
     fn error_bound_monotone() {
         let c = FixedCodec::default();
         assert!(c.sum_error_bound(10) < c.sum_error_bound(100));
+    }
+
+    /// Boundary of the tightened constructor bound: `MAX_FRAC_BITS` is
+    /// accepted with a sane (non-wrapped) `max_abs`, one past it is
+    /// rejected — the shift that used to underflow for
+    /// `52 < frac_bits < 62` can no longer be reached.
+    #[test]
+    fn frac_bits_boundary() {
+        let c = FixedCodec::new(MAX_FRAC_BITS);
+        assert_eq!(c.max_abs(), 1.0);
+        assert_eq!(c.decode(c.encode(1.0).unwrap()), 1.0);
+        assert!(c.encode(1.5).is_err(), "past max_abs must be rejected");
+        assert!(FixedCodec::try_new(MAX_FRAC_BITS).is_ok());
+        for bad in [MAX_FRAC_BITS + 1, 61, 62, u32::MAX] {
+            assert!(FixedCodec::try_new(bad).is_err(), "frac_bits={bad}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported frac_bits")]
+    fn new_panics_past_bound() {
+        let _ = FixedCodec::new(MAX_FRAC_BITS + 1);
+    }
+
+    /// max_abs is monotone decreasing in frac_bits over the whole
+    /// admitted range and never wraps to a bogus huge value.
+    #[test]
+    fn max_abs_sane_across_range() {
+        let mut prev = f64::INFINITY;
+        for fb in 0..=MAX_FRAC_BITS {
+            let m = FixedCodec::new(fb).max_abs();
+            assert!(m >= 1.0 && m < prev, "frac_bits={fb}: max_abs={m}");
+            prev = m;
+        }
     }
 }

@@ -319,6 +319,34 @@ impl Engine {
         Ok(VariantBlockStats { j0, xty: xty_m, xtx, ctx: ctx_m })
     }
 
+    /// IRLS base entry (logistic scans): one weighted covariate-side
+    /// pass per secure IRLS round. No lowered PJRT entry exists for the
+    /// IRLS kernels — the logistic protocol requires **bit-identical**
+    /// accumulation across compute modes, so both builds always serve
+    /// this from the reference executor.
+    pub fn compress_irls_base(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        beta: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        self.exec.compress_irls_base(ys, c, beta)
+    }
+
+    /// IRLS weighted shard pass at the final β̂ (reference executor in
+    /// both builds; see [`Self::compress_irls_base`]).
+    pub fn compress_irls_shard(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        beta: &[f64],
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        self.exec.compress_irls_shard(ys, c, x, beta, j0, j1)
+    }
+
     /// SELECT promote round through the gathered-columns entry.
     pub fn cross_products(
         &self,

@@ -117,6 +117,34 @@ impl Engine {
         self.exec.compress_x(ys, c, xs, 0, xs.cols, PassKind::Select)
     }
 
+    /// IRLS base entry (logistic scans): one weighted covariate-side
+    /// pass per secure IRLS round. The IRLS kernels have no lowered
+    /// artifact — the logistic protocol requires **bit-identical**
+    /// accumulation across compute modes, so both builds always serve
+    /// them from the reference executor.
+    pub fn compress_irls_base(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        beta: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        self.exec.compress_irls_base(ys, c, beta)
+    }
+
+    /// IRLS weighted shard pass at the final β̂ (reference executor in
+    /// both builds; see [`Self::compress_irls_base`]).
+    pub fn compress_irls_shard(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        beta: &[f64],
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        self.exec.compress_irls_shard(ys, c, x, beta, j0, j1)
+    }
+
     /// SELECT promote round: the gathered-columns cross-product entry.
     pub fn cross_products(
         &self,

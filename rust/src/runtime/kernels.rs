@@ -17,7 +17,14 @@
 //!   pure-Rust streaming path);
 //! - [`KernelKind::SelectGather`] — the gathered-columns SELECT entry:
 //!   one promoted column's cross-products against the `H` shortlisted
-//!   columns, the `O(N_p·H)` kernel of a stepwise promote round.
+//!   columns, the `O(N_p·H)` kernel of a stepwise promote round;
+//! - [`KernelKind::CompressIrls`] — the secure-logistic entries: the
+//!   width-free weighted covariate-side pass re-executed every IRLS
+//!   round (`CᵀWC, CᵀWz, dev` per trait at the broadcast `β`), and the
+//!   shard-width-parameterized weighted score pass at the final `β̂`.
+//!   These are served by the reference executor in every build (no
+//!   lowered PJRT entry): the logistic protocol leans on bit-identical
+//!   accumulation across compute modes.
 //!
 //! ## Shape policy
 //!
@@ -46,8 +53,9 @@
 
 use crate::linalg::Matrix;
 use crate::scan::{
-    canonical_tile_rows, compress_variant_block_opts, compress_yside, cross_products,
-    VariantBlockStats,
+    canonical_tile_rows, compress_irls_base as irls_base_kernel,
+    compress_irls_shard as irls_shard_kernel, compress_variant_block_opts, compress_yside,
+    cross_products, VariantBlockStats,
 };
 use crate::util::threadpool::effective_threads;
 use std::collections::BTreeSet;
@@ -64,6 +72,11 @@ pub enum KernelKind {
     CompressX,
     /// Gathered-columns SELECT cross-products: `x_j, X_S → x_jᵀX_S`.
     SelectGather,
+    /// Secure-IRLS weighted compress (logistic scans): the width-free
+    /// base entry `Y, C, β → CᵀWC, CᵀWz, dev` re-executed every IRLS
+    /// round, and the shard-width-parameterized weighted pass
+    /// `Y, C, X_shard, β̂ → Xᵀ(y−μ̂), diag XᵀWX, CᵀWX` at the final β.
+    CompressIrls,
 }
 
 impl KernelKind {
@@ -72,6 +85,7 @@ impl KernelKind {
             KernelKind::CompressXy => "compress_xy",
             KernelKind::CompressX => "compress_x",
             KernelKind::SelectGather => "select_gather",
+            KernelKind::CompressIrls => "compress_irls",
         }
     }
 }
@@ -96,6 +110,14 @@ impl EntryKey {
                 format!("compress_x.w{}.t{}", self.shard_w, self.n_traits)
             }
             KernelKind::SelectGather => format!("select_gather.h{}", self.shard_w),
+            // width-free base entry when shard_w == 0 (the per-round
+            // IRLS pass), width-parameterized weighted shard pass else
+            KernelKind::CompressIrls if self.shard_w == 0 => {
+                format!("compress_irls.t{}", self.n_traits)
+            }
+            KernelKind::CompressIrls => {
+                format!("compress_irls.w{}.t{}", self.shard_w, self.n_traits)
+            }
         }
     }
 }
@@ -173,6 +195,13 @@ impl ShapePolicy {
             KernelKind::SelectGather => {
                 EntryKey { kind, shard_w: self.canon_width(w), n_traits: 1 }
             }
+            KernelKind::CompressIrls => EntryKey {
+                kind,
+                // w == 0 is the width-free base entry, not a zero-width
+                // shard — keep it distinct from the width ladder
+                shard_w: if w == 0 { 0 } else { self.canon_width(w) },
+                n_traits: self.canon_traits(t),
+            },
         }
     }
 
@@ -183,8 +212,14 @@ impl ShapePolicy {
         let mut keys = Vec::new();
         for &t in &self.trait_batches {
             keys.push(EntryKey { kind: KernelKind::CompressXy, shard_w: 0, n_traits: t });
+            keys.push(EntryKey { kind: KernelKind::CompressIrls, shard_w: 0, n_traits: t });
             for &w in &self.widths {
                 keys.push(EntryKey { kind: KernelKind::CompressX, shard_w: w, n_traits: t });
+                keys.push(EntryKey {
+                    kind: KernelKind::CompressIrls,
+                    shard_w: w,
+                    n_traits: t,
+                });
             }
         }
         for &w in &self.widths {
@@ -295,6 +330,8 @@ struct MeterInner {
     xside_passes: AtomicU64,
     yside_passes: AtomicU64,
     select_passes: AtomicU64,
+    irls_base_passes: AtomicU64,
+    irls_shard_passes: AtomicU64,
     cur_block_bytes: AtomicU64,
     peak_block_bytes: AtomicU64,
     tile_passes: AtomicU64,
@@ -321,6 +358,14 @@ impl KernelMeter {
             _ => &self.inner.select_passes,
         };
         slot.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_irls_base(&self) {
+        self.inner.irls_base_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_irls_shard(&self) {
+        self.inner.irls_shard_passes.fetch_add(1, Ordering::Relaxed);
     }
 
     pub(crate) fn enter_block(&self, bytes: u64) {
@@ -362,6 +407,17 @@ impl KernelMeter {
     /// SELECT-phase executions (candidate gather + promote rounds).
     pub fn select_passes(&self) -> u64 {
         self.inner.select_passes.load(Ordering::Relaxed)
+    }
+
+    /// IRLS base-entry executions — one per secure IRLS round.
+    pub fn irls_base_passes(&self) -> u64 {
+        self.inner.irls_base_passes.load(Ordering::Relaxed)
+    }
+
+    /// IRLS weighted-shard executions — one per shard of the single
+    /// weighted pass at the final β, **independent of T**.
+    pub fn irls_shard_passes(&self) -> u64 {
+        self.inner.irls_shard_passes.load(Ordering::Relaxed)
     }
 
     /// Peak bytes of padded kernel blocks resident at once.
@@ -530,6 +586,90 @@ impl RefExec {
         Ok(vb)
     }
 
+    /// IRLS base entry: the per-round weighted covariate-side compress
+    /// `(CᵀWC | CᵀWz | dev)` per trait at the broadcast `β`. Served by
+    /// the same canonical tiled fold as the streaming kernel —
+    /// bit-identical to the Rust compute path at any worker count, which
+    /// the logistic conformance cells pin down.
+    pub fn compress_irls_base(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        beta: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        let n = ys.rows;
+        anyhow::ensure!(c.rows == n, "C rows != N");
+        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
+        let (k, t) = (c.cols, ys.cols);
+        self.ensure_k(k)?;
+        anyhow::ensure!(
+            beta.len() == t * k,
+            "beta length {} != T·K = {}",
+            beta.len(),
+            t * k
+        );
+        let kp = self.policy.k_pad;
+        let tc = self.policy.canon_traits(t);
+        let key = self.policy.canon_key(KernelKind::CompressIrls, 0, t);
+        self.touch(key);
+        self.meter.record_irls_base();
+
+        // Modeled working set: one canonical sample tile of the padded
+        // inputs plus the padded per-trait outputs (K²+K+1 lanes each).
+        let th = n.min(canonical_tile_rows(k));
+        let ntiles = n.div_ceil(canonical_tile_rows(k)).max(1);
+        let block_bytes = 8 * (th * (tc + kp) + tc * (kp * kp + kp + 1)) as u64;
+        self.meter.enter_block(block_bytes);
+        self.meter.record_tiles(ntiles as u64, effective_threads(self.threads) as u64);
+        let flat = irls_base_kernel(ys, c, beta, None, self.threads);
+        self.meter.exit_block(block_bytes);
+        Ok(flat)
+    }
+
+    /// IRLS weighted shard entry over columns `[j0, j1)` of `x` at the
+    /// final `β̂`: per trait and variant `(score | diag XᵀWX | CᵀWX)`.
+    pub fn compress_irls_shard(
+        &self,
+        ys: &Matrix,
+        c: &Matrix,
+        x: &Matrix,
+        beta: &[f64],
+        j0: usize,
+        j1: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        let n = ys.rows;
+        anyhow::ensure!(c.rows == n && x.rows == n, "row mismatch");
+        anyhow::ensure!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
+        anyhow::ensure!(ys.cols >= 1, "need at least one trait column");
+        let (k, t, w) = (c.cols, ys.cols, j1 - j0);
+        self.ensure_k(k)?;
+        anyhow::ensure!(
+            beta.len() == t * k,
+            "beta length {} != T·K = {}",
+            beta.len(),
+            t * k
+        );
+        if w == 0 {
+            // zero-width shard of an empty plan: nothing to lower
+            return Ok(Vec::new());
+        }
+        let kp = self.policy.k_pad;
+        let wc = self.policy.canon_width(w);
+        let tc = self.policy.canon_traits(t);
+        let key = self.policy.canon_key(KernelKind::CompressIrls, w, t);
+        self.touch(key);
+        self.meter.record_irls_shard();
+
+        let th = n.min(canonical_tile_rows(k));
+        let ntiles = n.div_ceil(canonical_tile_rows(k)).max(1);
+        let block_bytes = 8 * (th * (wc + tc + kp) + tc * wc * (2 + kp)) as u64;
+        self.meter.enter_block(block_bytes);
+        self.meter.record_tiles(ntiles as u64, effective_threads(self.threads) as u64);
+        let flat = irls_shard_kernel(ys, c, x, beta, j0, j1, None, self.threads);
+        self.meter.exit_block(block_bytes);
+        Ok(flat)
+    }
+
     /// Gathered-columns SELECT entry: cross-products of column `j` of
     /// `x` against the gathered shortlist `xs`, padded to the canonical
     /// width and sliced back.
@@ -625,8 +765,17 @@ mod tests {
             p.canon_key(KernelKind::SelectGather, 9, 7).entry_name(),
             "select_gather.h32"
         );
-        // suite: |T|·(1 + |W|) compress entries + |W| select entries
-        assert_eq!(p.suite().len(), 2 * (1 + 2) + 2);
+        assert_eq!(
+            p.canon_key(KernelKind::CompressIrls, 0, 3).entry_name(),
+            "compress_irls.t4"
+        );
+        assert_eq!(
+            p.canon_key(KernelKind::CompressIrls, 7, 3).entry_name(),
+            "compress_irls.w8.t4"
+        );
+        // suite: |T|·(2 + 2·|W|) compress entries (xy + irls base, and
+        // per width an x + irls shard entry) + |W| select entries
+        assert_eq!(p.suite().len(), 2 * (2 + 2 * 2) + 2);
     }
 
     #[test]
@@ -730,6 +879,50 @@ mod tests {
         let e = RefExec::new(policy, KernelMeter::new(), None).unwrap();
         assert!(e.compress_xy(&ys, &c).is_err());
         assert!(e.compress_x(&ys, &c, &x, 0, 4, PassKind::Scan).is_err());
+    }
+
+    #[test]
+    fn compress_irls_entries_bit_identical_to_rust_kernels() {
+        let (mut ys, c, x) = make(91, 4, 23, 2, 9009);
+        for v in ys.data.iter_mut() {
+            *v = if *v > 0.0 { 1.0 } else { 0.0 };
+        }
+        let beta: Vec<f64> = (0..8).map(|i| 0.05 * (i as f64) - 0.1).collect();
+        let e = exec();
+        let fast = e.compress_irls_base(&ys, &c, &beta).unwrap();
+        let slow = irls_base_kernel(&ys, &c, &beta, None, Some(3));
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (j0, j1) in [(0usize, 23usize), (0, 7), (7, 23)] {
+            let fast = e.compress_irls_shard(&ys, &c, &x, &beta, j0, j1).unwrap();
+            let slow = irls_shard_kernel(&ys, &c, &x, &beta, j0, j1, None, Some(2));
+            assert_eq!(fast.len(), slow.len(), "{j0}..{j1}");
+            for (a, b) in fast.iter().zip(&slow) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{j0}..{j1}");
+            }
+        }
+        let m = e.meter();
+        assert_eq!(m.irls_base_passes(), 1);
+        assert_eq!(m.irls_shard_passes(), 3);
+        assert_eq!(m.xside_passes(), 0);
+        // one base entry + one w=64 shard entry; ragged shards dedup
+        assert_eq!(e.lowered_count(), 2);
+    }
+
+    #[test]
+    fn compress_irls_rejects_bad_shapes() {
+        let (mut ys, c, x) = make(30, 3, 5, 2, 9010);
+        for v in ys.data.iter_mut() {
+            *v = if *v > 0.0 { 1.0 } else { 0.0 };
+        }
+        let e = exec();
+        assert!(e.compress_irls_base(&ys, &c, &[0.0; 5]).is_err(), "bad beta len");
+        assert!(e.compress_irls_shard(&ys, &c, &x, &[0.0; 6], 3, 2).is_err(), "bad range");
+        let empty = e.compress_irls_shard(&ys, &c, &x, &[0.0; 6], 2, 2).unwrap();
+        assert!(empty.is_empty(), "zero-width shard is a no-op");
+        assert_eq!(e.meter().irls_shard_passes(), 0);
     }
 
     #[test]

@@ -1,0 +1,627 @@
+//! Secure logistic regression (IRLS) over the compressed-stat pipeline.
+//!
+//! The linear scan secure-sums *unweighted* cross-products once. A
+//! logistic scan iterates: the leader broadcasts the current null-model
+//! iterate β, every party recomputes the **weighted** cross-products
+//! `CᵀWC`, `CᵀWz` and the deviance locally from its shard of samples,
+//! and the same secure-sum layer (plaintext / masked / Shamir — with
+//! continued absolute round numbering, so pads and shares stay
+//! domain-separated from the base round and the weighted shard rounds)
+//! aggregates them. Once the deviance stabilizes the leader broadcasts
+//! the final β and the parties stream one weighted pass over the
+//! variant shards (`Xᵀ(y−μ̂)`, `diag(XᵀWX)`, `CᵀWX`), from which the
+//! leader computes per-variant score tests — per-iteration traffic
+//! `O(K²·T)`, per-shard traffic `O(K·shard_m·T)`, same shapes as the
+//! linear scan.
+//!
+//! Kernels here follow the canonical-tile contract of
+//! [`super::compressed`]: samples are streamed in
+//! [`canonical_tile_rows`] tiles, per-tile partials are folded in
+//! ascending tile order, and parallel execution computes the *same*
+//! tiles in waves — so threaded output is bit-identical to serial, and
+//! the reference executor (which calls these very kernels) is
+//! bit-identical to the party's streaming path by construction.
+
+use crate::linalg::{cholesky_upper, Matrix};
+use crate::stats::{
+    clamped_mu, deviance_converged, deviance_term, irls_beta_init, irls_solve,
+    LogisticFit, logistic_fit_from_final, IRLS_BETA_GUARD,
+};
+use crate::util::threadpool::{effective_threads, parallel_map};
+
+use super::compressed::canonical_tile_rows;
+
+/// Flattened length of one IRLS base (null-model) round: per trait
+/// `[CᵀWC (K²) | CᵀWz (K) | deviance (1)]`, trait-major.
+pub fn irls_base_flat_len(k: usize, t: usize) -> usize {
+    t * (k * k + k + 1)
+}
+
+/// Flattened length of one weighted variant shard: per trait
+/// `[score Xᵀ(y−μ̂) (w) | diag(XᵀWX) (w) | CᵀWX (K·w)]`, trait-major.
+pub fn irls_shard_flat_len(k: usize, t: usize, w: usize) -> usize {
+    t * w * (2 + k)
+}
+
+/// Per-sample logistic working quantities at linear predictor `eta`:
+/// `(μ, w, y−μ, w·z)` with `w·z = w·η + (y−μ)` — the *scaled* working
+/// response, bounded even as `w → 0`, which is what keeps the encoded
+/// sums inside the fixed-point envelope (see `mpc/fixed.rs`).
+#[inline]
+fn working(y: f64, eta: f64) -> (f64, f64, f64, f64) {
+    let mu = clamped_mu(eta);
+    let w = mu * (1.0 - mu);
+    let resid = y - mu;
+    (mu, w, resid, w * eta + resid)
+}
+
+/// Accumulate samples `[i0, i1)` of the IRLS base statistics into
+/// `part` (layout [`irls_base_flat_len`], zeroed here). `beta_flat` is
+/// trait-major `T·K`.
+fn irls_base_tile_partial(
+    part: &mut [f64],
+    ys: &Matrix,
+    c: &Matrix,
+    beta_flat: &[f64],
+    i0: usize,
+    i1: usize,
+) {
+    let t = ys.cols;
+    let k = c.cols;
+    let stride = k * k + k + 1;
+    part.fill(0.0);
+    for i in i0..i1 {
+        let c_row = c.row(i);
+        let y_row = ys.row(i);
+        for tt in 0..t {
+            let beta = &beta_flat[tt * k..(tt + 1) * k];
+            let eta: f64 = c_row.iter().zip(beta).map(|(a, b)| a * b).sum();
+            let (mu, w, _resid, wz) = working(y_row[tt], eta);
+            let lane = &mut part[tt * stride..(tt + 1) * stride];
+            let (ctwc, rest) = lane.split_at_mut(k * k);
+            let (ctwz, dev) = rest.split_at_mut(k);
+            for a in 0..k {
+                let ca = c_row[a];
+                ctwz[a] += ca * wz;
+                let row = &mut ctwc[a * k..(a + 1) * k];
+                let wca = w * ca;
+                for (o, &cb) in row.iter_mut().zip(c_row) {
+                    *o += wca * cb;
+                }
+            }
+            dev[0] += deviance_term(y_row[tt], mu);
+        }
+    }
+}
+
+/// Accumulate samples `[i0, i1)` of the weighted shard statistics for
+/// the `bw` absolute variant columns starting at `x0` into `part`
+/// (layout [`irls_shard_flat_len`] for width `bw`, zeroed here).
+#[allow(clippy::too_many_arguments)]
+fn irls_shard_tile_partial(
+    part: &mut [f64],
+    ys: &Matrix,
+    c: &Matrix,
+    x: &Matrix,
+    beta_flat: &[f64],
+    x0: usize,
+    bw: usize,
+    i0: usize,
+    i1: usize,
+) {
+    let t = ys.cols;
+    let k = c.cols;
+    let stride = bw * (2 + k);
+    part.fill(0.0);
+    for i in i0..i1 {
+        let c_row = c.row(i);
+        let y_row = ys.row(i);
+        let x_row = &x.row(i)[x0..x0 + bw];
+        for tt in 0..t {
+            let beta = &beta_flat[tt * k..(tt + 1) * k];
+            let eta: f64 = c_row.iter().zip(beta).map(|(a, b)| a * b).sum();
+            let (_mu, w, resid, _wz) = working(y_row[tt], eta);
+            let lane = &mut part[tt * stride..(tt + 1) * stride];
+            let (score, rest) = lane.split_at_mut(bw);
+            let (xwx, cwx) = rest.split_at_mut(bw);
+            for (j, &xv) in x_row.iter().enumerate() {
+                score[j] += xv * resid;
+                xwx[j] += w * xv * xv;
+            }
+            for a in 0..k {
+                let wca = w * c_row[a];
+                let row = &mut cwx[a * bw..(a + 1) * bw];
+                for (o, &xv) in row.iter_mut().zip(x_row) {
+                    *o += wca * xv;
+                }
+            }
+        }
+    }
+}
+
+/// Drive a tiled accumulation with the canonical wave schedule: tiles
+/// folded in ascending order, any thread count bit-identical to serial.
+fn tiled_accumulate(
+    n: usize,
+    len: usize,
+    tile: usize,
+    threads: Option<usize>,
+    partial: impl Fn(&mut [f64], usize, usize) + Sync,
+) -> Vec<f64> {
+    let ntiles = n.div_ceil(tile).max(1);
+    let mut acc = vec![0.0f64; len];
+    let nthreads = effective_threads(threads).min(ntiles);
+    if nthreads <= 1 {
+        let mut part = vec![0.0f64; len];
+        for ti in 0..ntiles {
+            partial(&mut part, ti * tile, ((ti + 1) * tile).min(n));
+            for (a, &p) in acc.iter_mut().zip(&part) {
+                *a += p;
+            }
+        }
+    } else {
+        for wave0 in (0..ntiles).step_by(nthreads) {
+            let wave_len = nthreads.min(ntiles - wave0);
+            let parts = parallel_map(wave_len, Some(nthreads), |wi| {
+                let ti = wave0 + wi;
+                let mut part = vec![0.0f64; len];
+                partial(&mut part, ti * tile, ((ti + 1) * tile).min(n));
+                part
+            });
+            for part in parts {
+                for (a, &p) in acc.iter_mut().zip(&part) {
+                    *a += p;
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// One party's IRLS base-round contribution at the broadcast iterate
+/// `beta_flat` (trait-major `T·K`): flattened `[CᵀWC | CᵀWz | dev]` per
+/// trait over this party's samples. Bit-identical for any
+/// `(tile_rows, threads)` with the same tile boundaries (`None` pins
+/// them to [`canonical_tile_rows`]).
+pub fn compress_irls_base(
+    ys: &Matrix,
+    c: &Matrix,
+    beta_flat: &[f64],
+    tile_rows: Option<usize>,
+    threads: Option<usize>,
+) -> Vec<f64> {
+    let n = ys.rows;
+    let t = ys.cols;
+    let k = c.cols;
+    assert_eq!(c.rows, n, "C rows != N");
+    assert_eq!(beta_flat.len(), t * k, "beta must be trait-major T·K");
+    let tile = tile_rows.unwrap_or_else(|| canonical_tile_rows(k)).max(1);
+    tiled_accumulate(n, irls_base_flat_len(k, t), tile, threads, |part, i0, i1| {
+        irls_base_tile_partial(part, ys, c, beta_flat, i0, i1)
+    })
+}
+
+/// One party's weighted shard contribution for variant columns
+/// `[j0, j1)` at the final iterate `beta_flat`: flattened
+/// `[score | xwx | cwx]` per trait. Same canonical-tile contract as
+/// [`compress_irls_base`].
+#[allow(clippy::too_many_arguments)]
+pub fn compress_irls_shard(
+    ys: &Matrix,
+    c: &Matrix,
+    x: &Matrix,
+    beta_flat: &[f64],
+    j0: usize,
+    j1: usize,
+    tile_rows: Option<usize>,
+    threads: Option<usize>,
+) -> Vec<f64> {
+    let n = ys.rows;
+    let t = ys.cols;
+    let k = c.cols;
+    assert_eq!(c.rows, n, "C rows != N");
+    assert_eq!(x.rows, n, "X rows != N");
+    assert!(j0 <= j1 && j1 <= x.cols, "bad column range {j0}..{j1}");
+    assert_eq!(beta_flat.len(), t * k, "beta must be trait-major T·K");
+    let bw = j1 - j0;
+    if bw == 0 {
+        return Vec::new();
+    }
+    let tile = tile_rows.unwrap_or_else(|| canonical_tile_rows(k)).max(1);
+    tiled_accumulate(n, irls_shard_flat_len(k, t, bw), tile, threads, |part, i0, i1| {
+        irls_shard_tile_partial(part, ys, c, x, beta_flat, j0, bw, i0, i1)
+    })
+}
+
+/// Aggregated IRLS base sums for one trait.
+#[derive(Clone, Debug)]
+pub struct IrlsBaseSums {
+    /// `CᵀWC`, K × K
+    pub ctwc: Matrix,
+    /// `CᵀWz` (scaled working response), length K
+    pub ctwz: Vec<f64>,
+    /// binomial deviance at the broadcast iterate
+    pub dev: f64,
+}
+
+/// Split an aggregated IRLS base round back into per-trait sums.
+pub fn unflatten_irls_base(k: usize, t: usize, v: &[f64]) -> anyhow::Result<Vec<IrlsBaseSums>> {
+    anyhow::ensure!(
+        v.len() == irls_base_flat_len(k, t),
+        "irls base sum length {} != expected {}",
+        v.len(),
+        irls_base_flat_len(k, t)
+    );
+    let stride = k * k + k + 1;
+    let mut out = Vec::with_capacity(t);
+    for tt in 0..t {
+        let lane = &v[tt * stride..(tt + 1) * stride];
+        out.push(IrlsBaseSums {
+            ctwc: Matrix::from_vec(k, k, lane[..k * k].to_vec()),
+            ctwz: lane[k * k..k * k + k].to_vec(),
+            dev: lane[stride - 1],
+        });
+    }
+    Ok(out)
+}
+
+/// Aggregated weighted shard sums for one trait.
+#[derive(Clone, Debug)]
+pub struct IrlsShardSums {
+    /// `Xᵀ(y − μ̂)`, length w
+    pub score: Vec<f64>,
+    /// `diag(XᵀWX)`, length w
+    pub xwx: Vec<f64>,
+    /// `CᵀWX`, K × w
+    pub cwx: Matrix,
+}
+
+/// Split an aggregated weighted shard back into per-trait sums.
+pub fn unflatten_irls_shard(
+    k: usize,
+    t: usize,
+    w: usize,
+    v: &[f64],
+) -> anyhow::Result<Vec<IrlsShardSums>> {
+    anyhow::ensure!(
+        v.len() == irls_shard_flat_len(k, t, w),
+        "irls shard sum length {} != expected {}",
+        v.len(),
+        irls_shard_flat_len(k, t, w)
+    );
+    let stride = w * (2 + k);
+    let mut out = Vec::with_capacity(t);
+    for tt in 0..t {
+        let lane = &v[tt * stride..(tt + 1) * stride];
+        out.push(IrlsShardSums {
+            score: lane[..w].to_vec(),
+            xwx: lane[w..2 * w].to_vec(),
+            cwx: Matrix::from_vec(k, w, lane[2 * w..].to_vec()),
+        });
+    }
+    Ok(out)
+}
+
+/// Outcome of one leader-side IRLS step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IrlsStep {
+    /// at least one trait still iterating — broadcast the new β
+    Continue,
+    /// every trait finished — broadcast IRLS_DONE and move to the
+    /// weighted shard pass
+    Stop,
+}
+
+/// Leader-side IRLS driver across `T` traits.
+///
+/// Protocol shape: the leader broadcasts the iterate β_i, parties
+/// return weighted sums evaluated **at** β_i, and [`step`](Self::step)
+/// decides per trait: converged (deviance stable vs. the previous
+/// iteration) or capped traits are *frozen* — their Cholesky factor of
+/// `CᵀWC` at β_i is recorded and their β stops moving (so the recorded
+/// factor is exactly the one the score-test epilogue needs, and each
+/// trait's final state matches a pooled single-trait oracle run with
+/// the same `(max_iter, tol)`). Unfinished traits get the Newton update
+/// `RᵀR β_{i+1} = CᵀWz`. Stop fires when every trait is frozen; the cap
+/// guarantees it by `max_iter` rounds.
+#[derive(Clone, Debug)]
+pub struct IrlsState {
+    pub k: usize,
+    pub t: usize,
+    pub max_iter: usize,
+    pub tol: f64,
+    /// IRLS rounds evaluated so far (also the absolute secure-sum round
+    /// number of the most recent evaluation)
+    pub iters: usize,
+    beta: Vec<Vec<f64>>,
+    prev_dev: Vec<Option<f64>>,
+    done: Vec<bool>,
+    trait_iters: Vec<usize>,
+    trait_converged: Vec<bool>,
+    final_r: Vec<Option<Matrix>>,
+    deviance: Vec<f64>,
+}
+
+impl IrlsState {
+    /// `n` is the pooled sample count and `sum_y[tt]` the pooled case
+    /// count of trait `tt` (= row 0 of the base round's `CᵀY` when
+    /// covariate column 0 is the intercept) — enough to center the
+    /// shared starting point without touching per-sample data.
+    pub fn new(
+        k: usize,
+        t: usize,
+        n: f64,
+        sum_y: &[f64],
+        max_iter: usize,
+        tol: f64,
+    ) -> anyhow::Result<IrlsState> {
+        anyhow::ensure!(k >= 1 && t >= 1, "need K ≥ 1 and T ≥ 1");
+        anyhow::ensure!(sum_y.len() == t, "sum_y length != T");
+        anyhow::ensure!(max_iter >= 1, "need at least one IRLS iteration");
+        anyhow::ensure!(tol > 0.0 && tol.is_finite(), "IRLS tolerance must be positive");
+        anyhow::ensure!(n > k as f64, "need N > K");
+        let beta = sum_y
+            .iter()
+            .map(|&s| irls_beta_init(k, n, s))
+            .collect();
+        Ok(IrlsState {
+            k,
+            t,
+            max_iter,
+            tol,
+            iters: 0,
+            beta,
+            prev_dev: vec![None; t],
+            done: vec![false; t],
+            trait_iters: vec![0; t],
+            trait_converged: vec![false; t],
+            final_r: vec![None; t],
+            deviance: vec![0.0; t],
+        })
+    }
+
+    /// Current iterate, trait-major `T·K` — the broadcast payload.
+    pub fn beta_flat(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.t * self.k);
+        for b in &self.beta {
+            v.extend_from_slice(b);
+        }
+        v
+    }
+
+    pub fn beta(&self, tt: usize) -> &[f64] {
+        &self.beta[tt]
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+
+    /// Consume one round of aggregated sums (evaluated at the current
+    /// iterate). Errors on non-finite deviance, a non-PD weighted Gram
+    /// matrix, or an iterate escaping the divergence guard
+    /// (quasi-separation) — all conditions under which continuing would
+    /// push the weighted sums out of the fixed-point envelope.
+    pub fn step(&mut self, sums: &[IrlsBaseSums]) -> anyhow::Result<IrlsStep> {
+        anyhow::ensure!(sums.len() == self.t, "sums length != T");
+        anyhow::ensure!(!self.is_done(), "IRLS already finished");
+        self.iters += 1;
+        for tt in 0..self.t {
+            if self.done[tt] {
+                continue;
+            }
+            let s = &sums[tt];
+            anyhow::ensure!(
+                s.ctwc.rows == self.k && s.ctwc.cols == self.k && s.ctwz.len() == self.k,
+                "trait {tt}: bad IRLS sum shape"
+            );
+            anyhow::ensure!(
+                s.dev.is_finite(),
+                "trait {tt}: IRLS deviance diverged (non-finite)"
+            );
+            let stop = self
+                .prev_dev[tt]
+                .is_some_and(|p| deviance_converged(s.dev, p, self.tol));
+            if stop || self.iters == self.max_iter {
+                self.final_r[tt] = Some(cholesky_upper(&s.ctwc)?);
+                self.deviance[tt] = s.dev;
+                self.trait_iters[tt] = self.iters;
+                self.trait_converged[tt] = stop;
+                self.done[tt] = true;
+            } else {
+                self.prev_dev[tt] = Some(s.dev);
+                let nb = irls_solve(&s.ctwc, &s.ctwz)?;
+                anyhow::ensure!(
+                    nb.iter().all(|b| b.abs() <= IRLS_BETA_GUARD),
+                    "trait {tt}: IRLS diverged (quasi-separation?): |beta| exceeded {IRLS_BETA_GUARD}"
+                );
+                self.beta[tt] = nb;
+            }
+        }
+        Ok(if self.is_done() { IrlsStep::Stop } else { IrlsStep::Continue })
+    }
+
+    /// Upper Cholesky factor of the final `CᵀWC` of trait `tt`. Panics
+    /// before [`step`](Self::step) returned [`IrlsStep::Stop`] for it.
+    pub fn final_r(&self, tt: usize) -> &Matrix {
+        self.final_r[tt].as_ref().expect("IRLS not finished for this trait")
+    }
+
+    /// Package trait `tt`'s finished null model as a [`LogisticFit`].
+    pub fn fit(&self, tt: usize) -> LogisticFit {
+        logistic_fit_from_final(
+            self.beta[tt].clone(),
+            self.final_r(tt).clone(),
+            self.deviance[tt],
+            self.trait_iters[tt],
+            self.trait_converged[tt],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::logistic_fit_pooled;
+    use crate::util::rng::Rng;
+
+    fn cohort(n: usize, k: usize, t: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        let mut ys = Matrix::zeros(n, t);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            for tt in 0..t {
+                let eta = 0.5 * c[(i, k - 1)] - 0.2 + 0.1 * tt as f64;
+                let p = 1.0 / (1.0 + (-eta).exp());
+                ys[(i, tt)] = if rng.uniform() < p { 1.0 } else { 0.0 };
+            }
+        }
+        (ys, c)
+    }
+
+    #[test]
+    fn base_kernel_thread_and_tile_neutral() {
+        let (ys, c) = cohort(700, 3, 2, 9100);
+        let beta = vec![0.1, -0.2, 0.3, 0.0, 0.25, -0.1];
+        let serial = compress_irls_base(&ys, &c, &beta, Some(64), Some(1));
+        for threads in [2, 4, 7] {
+            let par = compress_irls_base(&ys, &c, &beta, Some(64), Some(threads));
+            assert!(
+                serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} not bit-identical"
+            );
+        }
+        // different tile heights change fold order → may differ in last
+        // bits, but must agree numerically
+        let other = compress_irls_base(&ys, &c, &beta, Some(13), Some(3));
+        for (a, b) in serial.iter().zip(&other) {
+            assert!((a - b).abs() <= 1e-9 * a.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn shard_kernel_thread_neutral_and_column_consistent() {
+        let (ys, c) = cohort(500, 3, 2, 9101);
+        let mut rng = Rng::new(9102);
+        let x = Matrix::randn(500, 12, &mut rng);
+        let beta = vec![0.1, -0.2, 0.3, 0.0, 0.25, -0.1];
+        let full = compress_irls_shard(&ys, &c, &x, &beta, 0, 12, Some(64), Some(1));
+        let par = compress_irls_shard(&ys, &c, &x, &beta, 0, 12, Some(64), Some(4));
+        assert!(full.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // per-variant sums never mix across columns: a sub-range equals
+        // the matching lanes of the full range, bit for bit
+        let k = 3;
+        let sub = compress_irls_shard(&ys, &c, &x, &beta, 4, 9, Some(64), Some(1));
+        let subs = unflatten_irls_shard(k, 2, 5, &sub).unwrap();
+        let fulls = unflatten_irls_shard(k, 2, 12, &full).unwrap();
+        for tt in 0..2 {
+            for j in 0..5 {
+                assert_eq!(subs[tt].score[j].to_bits(), fulls[tt].score[j + 4].to_bits());
+                assert_eq!(subs[tt].xwx[j].to_bits(), fulls[tt].xwx[j + 4].to_bits());
+                for a in 0..k {
+                    assert_eq!(
+                        subs[tt].cwx[(a, j)].to_bits(),
+                        fulls[tt].cwx[(a, j + 4)].to_bits()
+                    );
+                }
+            }
+        }
+        assert!(compress_irls_shard(&ys, &c, &x, &beta, 3, 3, None, None).is_empty());
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let (ys, c) = cohort(200, 3, 2, 9103);
+        let beta = vec![0.0; 6];
+        let flat = compress_irls_base(&ys, &c, &beta, None, None);
+        assert_eq!(flat.len(), irls_base_flat_len(3, 2));
+        let sums = unflatten_irls_base(3, 2, &flat).unwrap();
+        assert_eq!(sums.len(), 2);
+        // CᵀWC is symmetric by construction
+        for s in &sums {
+            for a in 0..3 {
+                for b in 0..3 {
+                    assert_eq!(s.ctwc[(a, b)].to_bits(), s.ctwc[(b, a)].to_bits());
+                }
+            }
+            assert!(s.dev > 0.0);
+        }
+        assert!(unflatten_irls_base(3, 2, &flat[1..]).is_err());
+        assert!(unflatten_irls_shard(3, 2, 5, &flat).is_err());
+    }
+
+    #[test]
+    fn state_walks_to_the_pooled_oracle() {
+        // Driving IrlsState with single-party kernel sums must land on
+        // (numerically) the same fit as the pooled plaintext oracle —
+        // same init, same stop rule, same per-trait freeze.
+        let (ys, c) = cohort(900, 3, 2, 9104);
+        let n = 900.0;
+        let sum_y: Vec<f64> = (0..2).map(|tt| ys.col(tt).iter().sum()).collect();
+        let mut st = IrlsState::new(3, 2, n, &sum_y, 25, 1e-8).unwrap();
+        loop {
+            let flat = compress_irls_base(&ys, &c, &st.beta_flat(), None, None);
+            let sums = unflatten_irls_base(3, 2, &flat).unwrap();
+            if st.step(&sums).unwrap() == IrlsStep::Stop {
+                break;
+            }
+        }
+        for tt in 0..2 {
+            let oracle = logistic_fit_pooled(&ys.col(tt), &c, 25, 1e-8).unwrap();
+            let fit = st.fit(tt);
+            assert_eq!(fit.iters, oracle.iters, "trait {tt}");
+            assert!(fit.converged);
+            for (a, b) in fit.beta.iter().zip(&oracle.beta) {
+                assert!((a - b).abs() < 1e-8, "trait {tt}: {a} vs {b}");
+            }
+            assert!((fit.deviance - oracle.deviance).abs() < 1e-6);
+            for (a, b) in fit.p.iter().zip(&oracle.p) {
+                assert!((a - b).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn separation_guard_fires_through_the_state_machine() {
+        // trait = indicator of covariate 1 → quasi-separation
+        let n = 300;
+        let mut rng = Rng::new(9105);
+        let mut c = Matrix::zeros(n, 2);
+        let mut ys = Matrix::zeros(n, 1);
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = rng.normal();
+            ys[(i, 0)] = if c[(i, 1)] > 0.0 { 1.0 } else { 0.0 };
+        }
+        let sum_y: f64 = ys.col(0).iter().sum();
+        let mut st = IrlsState::new(2, 1, n as f64, &[sum_y], 200, 1e-12).unwrap();
+        let err = loop {
+            let flat = compress_irls_base(&ys, &c, &st.beta_flat(), None, None);
+            let sums = unflatten_irls_base(2, 1, &flat).unwrap();
+            match st.step(&sums) {
+                Ok(IrlsStep::Stop) => panic!("separated fit must not converge cleanly"),
+                Ok(IrlsStep::Continue) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("quasi-separation"), "{err:#}");
+    }
+
+    #[test]
+    fn max_iter_cap_freezes_all_traits() {
+        let (ys, c) = cohort(400, 3, 2, 9106);
+        let sum_y: Vec<f64> = (0..2).map(|tt| ys.col(tt).iter().sum()).collect();
+        let mut st = IrlsState::new(3, 2, 400.0, &sum_y, 2, 1e-15).unwrap();
+        for round in 1..=2 {
+            let flat = compress_irls_base(&ys, &c, &st.beta_flat(), None, None);
+            let sums = unflatten_irls_base(3, 2, &flat).unwrap();
+            let step = st.step(&sums).unwrap();
+            assert_eq!(step == IrlsStep::Stop, round == 2);
+        }
+        let fit = st.fit(0);
+        assert_eq!(fit.iters, 2);
+        assert!(!fit.converged);
+        assert!(st.is_done());
+    }
+}

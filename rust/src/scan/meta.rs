@@ -98,6 +98,7 @@ mod tests {
             batch_effect_sd: 0.0,
             n_pcs: 1,
             noise_sd: 1.0,
+            binary_traits: false,
         };
         let cohort = generate_cohort(&spec, 150);
         let meta = meta_analyze(&cohort, 30).unwrap();
@@ -124,6 +125,7 @@ mod tests {
             batch_effect_sd: 0.0,
             n_pcs: 1,
             noise_sd: 1.0,
+            binary_traits: false,
         };
         let cohort = generate_cohort(&spec, 151);
         let meta = meta_analyze(&cohort, 20).unwrap();

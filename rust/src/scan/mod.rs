@@ -51,6 +51,7 @@
 
 pub mod compressed;
 mod combine;
+pub mod logistic;
 mod meta;
 mod select;
 mod shard;
@@ -65,6 +66,11 @@ pub use combine::{
     combine_base, combine_compressed, combine_regression, combine_shard, CombineContext,
     CombineOptions, RFactorMethod, ScanOutput,
 };
+pub use logistic::{
+    compress_irls_base, compress_irls_shard, irls_base_flat_len, irls_shard_flat_len,
+    unflatten_irls_base, unflatten_irls_shard, IrlsBaseSums, IrlsShardSums, IrlsState,
+    IrlsStep,
+};
 pub use meta::{meta_analyze, MetaResult};
 pub use select::{
     choose_candidates, cross_products, SelectOutput, SelectPick, SelectPolicy, SelectRound,
@@ -73,6 +79,49 @@ pub use select::{
 pub use shard::{ShardPlan, ShardRange};
 
 pub use crate::mpc::Backend as SmcBackend;
+
+/// Which generalized linear model the scan fits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Glm {
+    /// classic linear association scan (the paper's workload)
+    Linear,
+    /// logistic regression: secure IRLS null model + one weighted
+    /// score-test pass over the variant shards
+    Logistic,
+}
+
+impl Glm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Glm::Linear => "linear",
+            Glm::Logistic => "logistic",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Glm> {
+        match s {
+            "linear" => Ok(Glm::Linear),
+            "logistic" => Ok(Glm::Logistic),
+            other => anyhow::bail!("unknown glm {other:?} (expected linear|logistic)"),
+        }
+    }
+
+    /// Wire encoding (Setup.glm field).
+    pub fn code(self) -> u64 {
+        match self {
+            Glm::Linear => 0,
+            Glm::Logistic => 1,
+        }
+    }
+
+    pub fn from_code(code: u64) -> anyhow::Result<Glm> {
+        match code {
+            0 => Ok(Glm::Linear),
+            1 => Ok(Glm::Logistic),
+            other => anyhow::bail!("unknown glm code {other}"),
+        }
+    }
+}
 
 /// Top-level scan configuration.
 #[derive(Clone, Debug)]
@@ -127,6 +176,16 @@ pub struct ScanConfig {
     /// resume from an existing checkpoint in `checkpoint_dir`
     /// (`--resume`); a missing snapshot falls back to a fresh session
     pub resume: bool,
+    /// which GLM the scan fits (`--glm`). Logistic runs secure IRLS
+    /// rounds for the null model before a single weighted shard pass;
+    /// it requires 0/1 traits and is incompatible with SELECT and
+    /// checkpoint/resume.
+    pub glm: Glm,
+    /// IRLS iteration cap for logistic scans (`--irls-max-iter`)
+    pub irls_max_iter: usize,
+    /// IRLS deviance stop tolerance for logistic scans (`--irls-tol`):
+    /// stop when `|dev_i − dev_{i−1}| < tol·(|dev_i| + 0.1)`
+    pub irls_tol: f64,
 }
 
 impl Default for ScanConfig {
@@ -151,6 +210,9 @@ impl Default for ScanConfig {
             select_candidates: 32,
             checkpoint_dir: String::new(),
             resume: false,
+            glm: Glm::Linear,
+            irls_max_iter: crate::stats::IRLS_DEFAULT_MAX_ITER,
+            irls_tol: crate::stats::IRLS_DEFAULT_TOL,
         }
     }
 }

@@ -1,0 +1,424 @@
+//! Logistic-regression math on *compressed* weighted sufficient
+//! statistics — the IRLS analogue of [`super::regression`].
+//!
+//! Each Newton/IRLS iteration of a logistic fit is a weighted
+//! least-squares solve: with `μ_i = σ(c_iᵀβ)`, `w_i = μ_i(1-μ_i)` and
+//! the *scaled* working response `w_i z_i = w_i η_i + (y_i - μ_i)`, the
+//! update solves `(CᵀWC) β⁺ = CᵀWz`. Both sides are sums of per-sample
+//! products — exactly the shape the secure-sum pipeline aggregates —
+//! so parties only ever reveal the aggregated `CᵀWC`, `CᵀWz` and the
+//! deviance per iteration, never per-sample weights.
+//!
+//! After the null model `y ~ C` converges, per-variant association uses
+//! the **score test** with a one-step coefficient estimate: from the
+//! aggregated `U_j = x_jᵀ(y - μ̂)`, `x_jᵀWx_j` and `CᵀWx_j`,
+//!
+//! ```text
+//! V_j = x_jᵀWx_j − u_jᵀu_j,   u_j = R⁻ᵀ (CᵀWx_j),  RᵀR = CᵀWC
+//! β̂_j = U_j / V_j,  se_j = 1/√V_j,  z_j = U_j/√V_j,  p = 2Φ̄(|z_j|)
+//! ```
+//!
+//! — one weighted pass over the variant shards, per-variant traffic
+//! `O(K)` like the linear scan, no per-variant iteration. The same
+//! epilogue ([`score_assoc_from_sums`]) serves the secure leader and
+//! the pooled-plaintext oracle, so the two differ only by fixed-point
+//! rounding of the aggregated sums.
+
+use crate::linalg::{cholesky_upper, invert_upper, solve_rt_b, solve_upper, Matrix};
+use crate::stats::tdist::normal_two_sided_p;
+use crate::stats::{AssocResult, RegressionFit};
+
+/// μ clamp: keeps `ln μ`, `ln(1-μ)` finite and the weights strictly
+/// positive. Applied identically by every compute path (Rust kernels,
+/// reference executor, pooled oracle) — part of the bit-identity
+/// contract for logistic scans.
+pub const MU_EPS: f64 = 1e-12;
+
+/// Default IRLS iteration cap.
+pub const IRLS_DEFAULT_MAX_ITER: usize = 25;
+
+/// Default deviance-based stop tolerance:
+/// `|dev_i − dev_{i−1}| < tol · (|dev_i| + 0.1)`.
+pub const IRLS_DEFAULT_TOL: f64 = 1e-8;
+
+/// Divergence guard: a null-model coefficient past this magnitude means
+/// the deviance is still falling because a covariate (quasi-)separates
+/// the cases — the fit has no finite optimum and the weighted sums
+/// would eventually outgrow the fixed-point envelope.
+pub const IRLS_BETA_GUARD: f64 = 30.0;
+
+/// The logistic mean function, clamped away from {0, 1}.
+#[inline]
+pub fn clamped_mu(eta: f64) -> f64 {
+    let mu = 1.0 / (1.0 + (-eta).exp());
+    mu.clamp(MU_EPS, 1.0 - MU_EPS)
+}
+
+/// One sample's contribution to the binomial deviance
+/// `−2 Σ [y ln μ + (1−y) ln(1−μ)]` for y ∈ {0, 1}.
+#[inline]
+pub fn deviance_term(y: f64, mu: f64) -> f64 {
+    -2.0 * if y > 0.5 { mu.ln() } else { (1.0 - mu).ln() }
+}
+
+/// Shared IRLS starting point (used by the secure leader and the pooled
+/// oracle so both walk the same iterate sequence): intercept at
+/// `logit(p̄)` with the prevalence clamped to `[1/n, 1−1/n]`, all other
+/// coefficients zero. Assumes column 0 of `C` is the intercept (as
+/// every cohort in this codebase is built); for a general design this
+/// is still a valid — just less centered — starting point.
+pub fn irls_beta_init(k: usize, n: f64, sum_y: f64) -> Vec<f64> {
+    let p = (sum_y / n).clamp(1.0 / n, 1.0 - 1.0 / n);
+    let mut beta = vec![0.0; k];
+    beta[0] = (p / (1.0 - p)).ln();
+    beta
+}
+
+/// Whether the deviance sequence has converged at iteration `i ≥ 2`.
+#[inline]
+pub fn deviance_converged(dev: f64, prev: f64, tol: f64) -> bool {
+    (dev - prev).abs() < tol * (dev.abs() + 0.1)
+}
+
+/// One IRLS update on aggregated sums: solve `(CᵀWC) β⁺ = CᵀWz` via the
+/// Cholesky factor of `CᵀWC`. Errors when the weighted Gram matrix is
+/// not positive definite (collinear covariates, or weights collapsed to
+/// zero under separation).
+pub fn irls_solve(ctwc: &Matrix, ctwz: &[f64]) -> anyhow::Result<Vec<f64>> {
+    let k = ctwz.len();
+    anyhow::ensure!(ctwc.rows == k && ctwc.cols == k, "CᵀWC must be K×K");
+    let r = cholesky_upper(ctwc)?;
+    let b = Matrix::from_vec(k, 1, ctwz.to_vec());
+    let w = solve_rt_b(&r, &b);
+    Ok(solve_upper(&r, &w).data)
+}
+
+/// Null-model fit summary: the converged (or capped) coefficients plus
+/// Wald statistics from the final weighted Gram matrix.
+#[derive(Clone, Debug)]
+pub struct LogisticFit {
+    pub beta: Vec<f64>,
+    pub se: Vec<f64>,
+    pub z: Vec<f64>,
+    pub p: Vec<f64>,
+    pub deviance: f64,
+    /// IRLS iterations actually evaluated (≥ 1)
+    pub iters: usize,
+    /// false when the max-iteration cap stopped the fit
+    pub converged: bool,
+    /// upper Cholesky factor of the final `CᵀWC` (evaluated at `beta`)
+    pub r: Matrix,
+}
+
+/// Build the Wald summary from a final iterate: `Var(β̂) = (CᵀWC)⁻¹`,
+/// z = β̂/se, p from the normal tail (IRLS standard asymptotics).
+pub fn logistic_fit_from_final(
+    beta: Vec<f64>,
+    r: Matrix,
+    deviance: f64,
+    iters: usize,
+    converged: bool,
+) -> LogisticFit {
+    let k = beta.len();
+    let rinv = invert_upper(&r);
+    let mut se = Vec::with_capacity(k);
+    for i in 0..k {
+        let v: f64 = (0..k).map(|j| rinv[(i, j)] * rinv[(i, j)]).sum();
+        se.push(v.sqrt());
+    }
+    let z: Vec<f64> = beta
+        .iter()
+        .zip(&se)
+        .map(|(b, s)| if *s > 0.0 { b / s } else { f64::INFINITY })
+        .collect();
+    let p: Vec<f64> = z.iter().map(|&zv| normal_two_sided_p(zv)).collect();
+    LogisticFit { beta, se, z, p, deviance, iters, converged, r }
+}
+
+impl LogisticFit {
+    /// Repackage as the [`RegressionFit`] slot of a
+    /// [`crate::scan::ScanOutput`] covariate fit. `tau2` carries the
+    /// null deviance (logistic fits have no residual variance), `df` is
+    /// the usual `N − K`.
+    pub fn to_regression_fit(&self, n: usize) -> RegressionFit {
+        RegressionFit {
+            gamma: self.beta.clone(),
+            se: self.se.clone(),
+            tau2: self.deviance,
+            t: self.z.clone(),
+            p: self.p.clone(),
+            df: (n - self.beta.len()) as f64,
+        }
+    }
+}
+
+/// Score-test epilogue on aggregated weighted sums for one shard of
+/// variants: `score[j] = x_jᵀ(y − μ̂)`, `xwx[j] = x_jᵀWx_j`, column `j`
+/// of `cwx` is `CᵀWx_j`, and `r` is the upper Cholesky factor of the
+/// final `CᵀWC`. Variants whose effective information `V_j` vanishes
+/// (numerically in the span of C, or carrying no weight) get NaN
+/// statistics, exactly like the collinear guard of the linear scan.
+pub fn score_assoc_from_sums(
+    n: usize,
+    k: usize,
+    r: &Matrix,
+    score: &[f64],
+    xwx: &[f64],
+    cwx: &Matrix,
+) -> AssocResult {
+    let w = score.len();
+    assert_eq!(xwx.len(), w);
+    assert_eq!(cwx.rows, k);
+    assert_eq!(cwx.cols, w);
+    let df = (n as f64) - (k as f64) - 1.0;
+    let u = solve_rt_b(r, cwx); // K × w, u_j = R⁻ᵀ CᵀWx_j
+    let mut beta = vec![0.0; w];
+    let mut se = vec![0.0; w];
+    let mut z = vec![0.0; w];
+    let mut p = vec![1.0; w];
+    for j in 0..w {
+        let mut uu = 0.0;
+        for i in 0..k {
+            let v = u[(i, j)];
+            uu += v * v;
+        }
+        let vj = xwx[j] - uu;
+        if vj <= 1e-12 * xwx[j].abs().max(1.0) {
+            beta[j] = f64::NAN;
+            se[j] = f64::NAN;
+            z[j] = f64::NAN;
+            p[j] = f64::NAN;
+            continue;
+        }
+        let sv = vj.sqrt();
+        beta[j] = score[j] / vj;
+        se[j] = 1.0 / sv;
+        z[j] = score[j] / sv;
+        p[j] = normal_two_sided_p(z[j]);
+    }
+    AssocResult { beta, se, t: z, p, df }
+}
+
+/// Pooled plaintext Newton–Raphson oracle for the null model `y ~ C`,
+/// walking the *same* iterate sequence as the secure protocol: evaluate
+/// the weighted sums at the broadcast β, stop (without a further
+/// update) once the deviance stabilizes or the cap is hit, so the final
+/// `CᵀWC` is exactly the one the score epilogue uses.
+pub fn logistic_fit_pooled(
+    y: &[f64],
+    c: &Matrix,
+    max_iter: usize,
+    tol: f64,
+) -> anyhow::Result<LogisticFit> {
+    let n = y.len();
+    let k = c.cols;
+    anyhow::ensure!(c.rows == n, "C rows != N");
+    anyhow::ensure!(n > k, "need N > K");
+    anyhow::ensure!(max_iter >= 1, "need at least one IRLS iteration");
+    for &v in y {
+        anyhow::ensure!(v == 0.0 || v == 1.0, "logistic traits must be 0/1 (got {v})");
+    }
+    let sum_y: f64 = y.iter().sum();
+    let mut beta = irls_beta_init(k, n as f64, sum_y);
+    let mut prev_dev: Option<f64> = None;
+    for iter in 1..=max_iter {
+        // weighted sums at the current iterate
+        let mut ctwc = Matrix::zeros(k, k);
+        let mut ctwz = vec![0.0; k];
+        let mut dev = 0.0;
+        for i in 0..n {
+            let row = c.row(i);
+            let eta: f64 = row.iter().zip(&beta).map(|(a, b)| a * b).sum();
+            let mu = clamped_mu(eta);
+            let wgt = mu * (1.0 - mu);
+            let wz = wgt * eta + (y[i] - mu);
+            dev += deviance_term(y[i], mu);
+            for a in 0..k {
+                ctwz[a] += row[a] * wz;
+                for b in a..k {
+                    ctwc[(a, b)] += wgt * row[a] * row[b];
+                }
+            }
+        }
+        for a in 0..k {
+            for b in 0..a {
+                ctwc[(a, b)] = ctwc[(b, a)];
+            }
+        }
+        anyhow::ensure!(dev.is_finite(), "IRLS deviance diverged");
+        let stop = prev_dev.is_some_and(|p| deviance_converged(dev, p, tol));
+        if stop || iter == max_iter {
+            let r = cholesky_upper(&ctwc)?;
+            return Ok(logistic_fit_from_final(beta, r, dev, iter, stop));
+        }
+        prev_dev = Some(dev);
+        beta = irls_solve(&ctwc, &ctwz)?;
+        anyhow::ensure!(
+            beta.iter().all(|b| b.abs() <= IRLS_BETA_GUARD),
+            "IRLS diverged (quasi-separation?): |beta| exceeded {IRLS_BETA_GUARD}"
+        );
+    }
+    unreachable!("loop returns at iter == max_iter");
+}
+
+/// Pooled plaintext score scan oracle: per-variant score statistics at
+/// the fitted null model, via the same epilogue as the secure leader.
+pub fn logistic_score_scan_pooled(
+    y: &[f64],
+    c: &Matrix,
+    x: &Matrix,
+    fit: &LogisticFit,
+) -> AssocResult {
+    let n = y.len();
+    let k = c.cols;
+    let m = x.cols;
+    assert_eq!(c.rows, n);
+    assert_eq!(x.rows, n);
+    // per-sample weights at the converged null
+    let mut resid = vec![0.0; n];
+    let mut wgt = vec![0.0; n];
+    for i in 0..n {
+        let eta: f64 = c.row(i).iter().zip(&fit.beta).map(|(a, b)| a * b).sum();
+        let mu = clamped_mu(eta);
+        resid[i] = y[i] - mu;
+        wgt[i] = mu * (1.0 - mu);
+    }
+    let mut score = vec![0.0; m];
+    let mut xwx = vec![0.0; m];
+    let mut cwx = Matrix::zeros(k, m);
+    for i in 0..n {
+        let xr = x.row(i);
+        let cr = c.row(i);
+        for j in 0..m {
+            let xv = xr[j];
+            if xv == 0.0 {
+                continue;
+            }
+            score[j] += xv * resid[i];
+            xwx[j] += wgt[i] * xv * xv;
+            for a in 0..k {
+                cwx[(a, j)] += wgt[i] * cr[a] * xv;
+            }
+        }
+    }
+    score_assoc_from_sums(n, k, &fit.r, &score, &xwx, &cwx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth(n: usize, k: usize, seed: u64) -> (Vec<f64>, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::randn(n, k, &mut rng);
+        let true_beta: Vec<f64> = (0..k).map(|j| 0.4 * (j as f64 - 1.0)).collect();
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            let eta: f64 = c.row(i).iter().zip(&true_beta).map(|(a, b)| a * b).sum();
+            let p = 1.0 / (1.0 + (-eta).exp());
+            y[i] = if rng.uniform() < p { 1.0 } else { 0.0 };
+        }
+        (y, c)
+    }
+
+    #[test]
+    fn pooled_fit_recovers_known_coefficients() {
+        // strong signal, large n: β̂ close to truth, Wald p tiny
+        let n = 4000;
+        let (y, c) = synth(n, 3, 7001);
+        let fit = logistic_fit_pooled(&y, &c, 25, 1e-10).unwrap();
+        assert!(fit.converged, "should converge in 25 iterations");
+        // truth: [-0.4, 0.0, 0.4]
+        assert!((fit.beta[0] + 0.4).abs() < 0.15, "beta0={}", fit.beta[0]);
+        assert!(fit.beta[1].abs() < 0.15, "beta1={}", fit.beta[1]);
+        assert!((fit.beta[2] - 0.4).abs() < 0.15, "beta2={}", fit.beta[2]);
+        assert!(fit.p[2] < 1e-10);
+        assert!(fit.deviance > 0.0 && fit.deviance < 2.0 * n as f64);
+    }
+
+    #[test]
+    fn perfect_separation_trips_the_divergence_guard() {
+        // y = 1 exactly when c1 > 0: no finite optimum
+        let n = 200;
+        let mut rng = Rng::new(7002);
+        let mut c = Matrix::zeros(n, 2);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = rng.normal();
+            y[i] = if c[(i, 1)] > 0.0 { 1.0 } else { 0.0 };
+        }
+        let err = logistic_fit_pooled(&y, &c, 500, 1e-12).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("quasi-separation"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn max_iter_cap_stops_without_convergence_flag() {
+        let (y, c) = synth(300, 3, 7003);
+        let fit = logistic_fit_pooled(&y, &c, 2, 1e-14).unwrap();
+        assert_eq!(fit.iters, 2);
+        assert!(!fit.converged);
+    }
+
+    #[test]
+    fn score_scan_matches_wald_refit_direction() {
+        // the score z and a full per-variant refit must agree in sign
+        // and roughly in magnitude for a causal variant
+        let n = 1500;
+        let mut rng = Rng::new(7004);
+        let mut c = Matrix::zeros(n, 2);
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            c[(i, 0)] = 1.0;
+            c[(i, 1)] = rng.normal();
+            x[(i, 0)] = rng.normal(); // causal
+            x[(i, 1)] = rng.normal(); // null
+            let eta = 0.2 * c[(i, 1)] + 0.8 * x[(i, 0)];
+            let p = 1.0 / (1.0 + (-eta).exp());
+            y[i] = if rng.uniform() < p { 1.0 } else { 0.0 };
+        }
+        let fit = logistic_fit_pooled(&y, &c, 25, 1e-10).unwrap();
+        let scan = logistic_score_scan_pooled(&y, &c, &x, &fit);
+        assert!(scan.beta[0] > 0.3, "causal beta={}", scan.beta[0]);
+        assert!(scan.p[0] < 1e-8, "causal p={}", scan.p[0]);
+        assert!(scan.p[1] > 1e-4, "null p={}", scan.p[1]);
+        assert!(scan.t.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn collinear_variant_gets_nan_score_stats() {
+        let (y, c) = synth(400, 3, 7005);
+        // x col 0 = covariate col 1 → zero effective information
+        let x = Matrix::from_vec(y.len(), 1, c.col(1));
+        let fit = logistic_fit_pooled(&y, &c, 25, 1e-10).unwrap();
+        let scan = logistic_score_scan_pooled(&y, &c, &x, &fit);
+        assert!(scan.beta[0].is_nan());
+        assert!(scan.p[0].is_nan());
+    }
+
+    #[test]
+    fn beta_init_is_clamped_and_centered() {
+        let b = irls_beta_init(3, 100.0, 50.0);
+        assert_eq!(b, vec![0.0, 0.0, 0.0]);
+        // all-cases cohort: clamped to 1 − 1/n, finite logit
+        let b = irls_beta_init(2, 100.0, 100.0);
+        assert!(b[0].is_finite() && b[0] > 4.0);
+        assert_eq!(b[1], 0.0);
+    }
+
+    #[test]
+    fn clamped_mu_stays_inside_unit_interval() {
+        for eta in [-800.0, -40.0, 0.0, 40.0, 800.0] {
+            let mu = clamped_mu(eta);
+            assert!(mu >= MU_EPS && mu <= 1.0 - MU_EPS, "eta={eta} mu={mu}");
+            assert!(deviance_term(1.0, mu).is_finite());
+            assert!(deviance_term(0.0, mu).is_finite());
+        }
+    }
+}

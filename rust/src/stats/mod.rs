@@ -4,9 +4,18 @@
 
 mod tdist;
 mod regression;
+mod logistic;
 
-pub use tdist::{ln_gamma, betainc, t_sf, t_two_sided_p};
+pub use tdist::{
+    ln_gamma, betainc, t_sf, t_two_sided_p, erfc, normal_sf, normal_two_sided_p,
+};
 pub use regression::{
     RegressionFit, fit_from_sufficient, ScanStats, scan_stats_from_projected,
     scan_stats_from_projected_parts, AssocResult,
+};
+pub use logistic::{
+    clamped_mu, deviance_converged, deviance_term, irls_beta_init, irls_solve,
+    logistic_fit_from_final, logistic_fit_pooled, logistic_score_scan_pooled,
+    score_assoc_from_sums, LogisticFit, IRLS_BETA_GUARD, IRLS_DEFAULT_MAX_ITER,
+    IRLS_DEFAULT_TOL, MU_EPS,
 };

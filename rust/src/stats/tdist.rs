@@ -104,8 +104,14 @@ fn betacf(a: f64, b: f64, x: f64) -> f64 {
 }
 
 /// Survival function P(T > t) for Student-t with `df` degrees of freedom.
+///
+/// A NaN statistic (zero-variance / collinear variant) propagates to a
+/// NaN probability — it must never masquerade as a tail value.
 pub fn t_sf(t: f64, df: f64) -> f64 {
     assert!(df > 0.0);
+    if t.is_nan() {
+        return f64::NAN;
+    }
     if !t.is_finite() {
         return if t > 0.0 { 0.0 } else { 1.0 };
     }
@@ -119,12 +125,114 @@ pub fn t_sf(t: f64, df: f64) -> f64 {
 }
 
 /// Two-sided p-value for a t statistic: P(|T| > |t|).
+///
+/// NaN t → NaN p (a NaN statistic previously fell through a dead
+/// `t == 0.0` arm and returned p = 0.0, i.e. *maximally significant* —
+/// it would rank first in SELECT); ±∞ → 0.0.
 pub fn t_two_sided_p(t: f64, df: f64) -> f64 {
+    if t.is_nan() {
+        return f64::NAN;
+    }
     if !t.is_finite() {
-        return if t == 0.0 { 1.0 } else { 0.0 };
+        return 0.0;
     }
     let x = df / (df + t * t);
     betainc(0.5 * df, 0.5, x).clamp(0.0, 1.0)
+}
+
+/// Complementary error function via the regularized upper incomplete
+/// gamma function: `erfc(x) = Q(1/2, x²)` for `x ≥ 0`, with the
+/// reflection `erfc(-x) = 2 - erfc(x)`. Accurate to ~1e-12 over the
+/// Wald-z range a GWAS needs.
+pub fn erfc(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    if x >= 0.0 {
+        gamma_q(0.5, x * x)
+    } else {
+        2.0 - gamma_q(0.5, x * x)
+    }
+}
+
+/// Standard-normal survival function P(Z > z) (Wald tests). NaN → NaN.
+pub fn normal_sf(z: f64) -> f64 {
+    0.5 * erfc(z / std::f64::consts::SQRT_2)
+}
+
+/// Two-sided standard-normal p-value: P(|Z| > |z|). NaN z → NaN p,
+/// ±∞ → 0.0 — same contract as [`t_two_sided_p`].
+pub fn normal_two_sided_p(z: f64) -> f64 {
+    if z.is_nan() {
+        return f64::NAN;
+    }
+    if !z.is_finite() {
+        return 0.0;
+    }
+    erfc(z.abs() / std::f64::consts::SQRT_2).clamp(0.0, 1.0)
+}
+
+/// Regularized upper incomplete gamma function Q(a, x), series /
+/// continued-fraction split (Numerical Recipes style).
+fn gamma_q(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == f64::INFINITY {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+}
+
+/// Series representation of P(a, x), convergent for x < a + 1.
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let gln = ln_gamma(a);
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..300 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 3e-16 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - gln).exp()
+}
+
+/// Lentz continued fraction for Q(a, x), convergent for x ≥ a + 1.
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    const FPMIN: f64 = 1e-300;
+    let gln = ln_gamma(a);
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / FPMIN;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..=300 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = b + an / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 3e-16 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - gln).exp() * h
 }
 
 #[cfg(test)]
@@ -216,5 +324,81 @@ mod tests {
         // t with huge df ≈ standard normal: P(T>1.96) ≈ 0.025
         let p = t_sf(1.959964, 1e7);
         assert!((p - 0.025).abs() < 1e-4, "p={p}");
+    }
+
+    /// Regression: a NaN t statistic must propagate to NaN — the old
+    /// `!t.is_finite()` branch tested `t == 0.0` (dead: 0.0 is finite)
+    /// and `t > 0.0` (false for NaN), so NaN returned p = 0.0 from
+    /// `t_two_sided_p` (maximally significant) and 1.0 from `t_sf`.
+    #[test]
+    fn nan_t_propagates_to_nan_p() {
+        for df in [1.0, 5.0, 1000.0] {
+            assert!(t_two_sided_p(f64::NAN, df).is_nan(), "df={df}");
+            assert!(t_sf(f64::NAN, df).is_nan(), "df={df}");
+        }
+        assert!(normal_two_sided_p(f64::NAN).is_nan());
+        assert!(normal_sf(f64::NAN).is_nan());
+    }
+
+    /// ±∞ keep their exact-tail semantics after the NaN fix.
+    #[test]
+    fn infinite_and_zero_t_edges() {
+        for df in [1.0, 10.0] {
+            assert_eq!(t_two_sided_p(f64::INFINITY, df), 0.0, "df={df}");
+            assert_eq!(t_two_sided_p(f64::NEG_INFINITY, df), 0.0, "df={df}");
+            assert_eq!(t_sf(f64::INFINITY, df), 0.0, "df={df}");
+            assert_eq!(t_sf(f64::NEG_INFINITY, df), 1.0, "df={df}");
+            assert_eq!(t_two_sided_p(0.0, df), 1.0, "df={df}");
+            assert!((t_sf(0.0, df) - 0.5).abs() < 1e-12, "df={df}");
+        }
+        assert_eq!(normal_two_sided_p(f64::INFINITY), 0.0);
+        assert_eq!(normal_two_sided_p(f64::NEG_INFINITY), 0.0);
+        assert_eq!(normal_two_sided_p(0.0), 1.0);
+        assert_eq!(normal_sf(f64::INFINITY), 0.0);
+        assert_eq!(normal_sf(f64::NEG_INFINITY), 1.0);
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        // scipy.special.erfc reference values
+        let cases = [
+            (0.0, 1.0),
+            (0.5, 0.4795001221869535),
+            (1.0, 0.15729920705028513),
+            (2.0, 0.004677734981063127),
+            (-1.0, 1.842700792949715),
+            (3.5, 7.430983723414128e-7),
+        ];
+        for &(x, want) in &cases {
+            let got = erfc(x);
+            assert!(
+                (got - want).abs() < 1e-12 * want.abs().max(1.0),
+                "erfc({x}): got {got:e}, want {want:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_sf_reference_values() {
+        // scipy.stats.norm.sf reference values
+        let cases = [
+            (0.0, 0.5),
+            (1.959963984540054, 0.025000000000000022),
+            (5.0, 2.866515719235352e-7),
+            (-1.0, 0.8413447460685429),
+        ];
+        for &(z, want) in &cases {
+            let got = normal_sf(z);
+            assert!(
+                (got - want).abs() / want.max(1e-12) < 1e-10,
+                "normal_sf({z}): got {got:e}, want {want:e}"
+            );
+        }
+        // two-sided consistency
+        let p = normal_two_sided_p(1.959963984540054);
+        assert!((p - 0.05).abs() < 1e-12, "p={p}");
+        // extreme Wald z still yields a nonzero, tiny p
+        let p = normal_two_sided_p(12.0);
+        assert!(p > 0.0 && p < 1e-30, "p={p:e}");
     }
 }

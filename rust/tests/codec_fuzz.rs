@@ -109,6 +109,7 @@ fn fuzz_all_wire_messages() {
                 block_m: r.next_u64(),
                 shard_m: r.next_u64(),
                 select_k: r.next_u64(),
+                glm: r.next_u64() % 2,
                 seeds: rand_u64s(r, 8), // incl. the 0-seed degenerate
                 done_shards,
             },
@@ -201,6 +202,25 @@ fn fuzz_all_wire_messages() {
             r,
         );
 
+        // IRLS frames: the decode validates its invariants (1-based
+        // iterations, finite iterates, positive finite tolerance), so
+        // the fuzz inputs must honor them
+        check(
+            &IrlsSetup {
+                max_iter: 1 + r.next_u64() % 1000,
+                tol: (1 + r.next_u64() % 1_000_000) as f64 * 1e-9,
+            },
+            r,
+        );
+        let tk = (r.next_u64() as usize) % 9; // incl. the empty degenerate
+        let finite_beta = |r: &mut Rng| -> Vec<f64> {
+            (0..tk).map(|_| (r.next_u64() % 2001) as f64 / 13.0 - 77.0).collect()
+        };
+        let beta = finite_beta(r);
+        check(&IrlsRound { iter: 1 + r.next_u64() % 1000, beta }, r);
+        let beta = finite_beta(r);
+        check(&IrlsDone { iters: 1 + r.next_u64() % 1000, beta }, r);
+
         let msg: String = match iter % 3 {
             0 => String::new(),
             1 => "plain ascii error".to_string(),
@@ -229,6 +249,7 @@ fn fuzz_wrong_tag_always_clean_error() {
             block_m: 4,
             shard_m: 0,
             select_k: 2,
+            glm: 0,
             seeds: vec![1, 2],
             done_shards: vec![],
         }

@@ -22,7 +22,7 @@ use dash::coordinator::{
 use dash::gwas::{generate_cohort, Cohort, CohortSpec};
 use dash::mpc::Backend;
 use dash::runtime::ArtifactExec;
-use dash::scan::{ScanConfig, ScanOutput, SelectOutput, SelectPolicy, ShardPlan};
+use dash::scan::{Glm, ScanConfig, ScanOutput, SelectOutput, SelectPolicy, ShardPlan};
 
 /// The three MPC backends of the conformance matrix.
 pub fn backends() -> [Backend; 3] {
@@ -60,6 +60,7 @@ pub fn spec_for(parties: usize, n_per: usize, m: usize, t: usize) -> CohortSpec 
         batch_effect_sd: 0.1,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     }
 }
 
@@ -234,6 +235,9 @@ pub struct Scenario {
     pub select_alpha: f64,
     pub select_candidates: usize,
     pub select_policy: SelectPolicy,
+    /// which GLM the scenario fits; [`Glm::Logistic`] thresholds the
+    /// cohort traits into 0/1 labels and runs the secure IRLS protocol
+    pub glm: Glm,
     pub cohort_seed: u64,
     pub session_seed: u64,
     /// also run the TCP transport cells (slower; off by default)
@@ -262,6 +266,7 @@ impl Default for Scenario {
             select_alpha: 0.5,
             select_candidates: 8,
             select_policy: SelectPolicy::Union,
+            glm: Glm::Linear,
             cohort_seed: 0xC0DE,
             session_seed: 0x5EED,
             tcp: false,
@@ -281,7 +286,15 @@ impl Scenario {
         c.select_alpha = self.select_alpha;
         c.select_candidates = self.select_candidates;
         c.select_policy = self.select_policy;
+        c.glm = self.glm;
         c
+    }
+
+    /// The scenario's cohort spec (0/1 traits for logistic scenarios).
+    pub fn spec(&self) -> CohortSpec {
+        let mut spec = spec_for(self.parties, self.n_per, self.m, self.t);
+        spec.binary_traits = self.glm == Glm::Logistic;
+        spec
     }
 
     /// Number of shards this scenario's plan streams over.
@@ -299,7 +312,7 @@ impl Scenario {
 /// of T**. Returns the per-(backend, compute) in-proc results for extra
 /// scenario-specific assertions.
 pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanResult)> {
-    let cohort = generate_cohort(&spec_for(sc.parties, sc.n_per, sc.m, sc.t), sc.cohort_seed);
+    let cohort = generate_cohort(&sc.spec(), sc.cohort_seed);
     let mut out = Vec::new();
     for backend in backends() {
         let baseline = run(
@@ -340,13 +353,35 @@ pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanRe
                             1,
                             "{label}: party {p} Y-side passes"
                         );
-                        assert_eq!(
-                            km.xside_passes(),
-                            sc.shards() as u64,
-                            "{label}: party {p} X-side passes — one per shard, \
-                             independent of T={}",
-                            sc.t
-                        );
+                        if sc.glm == Glm::Logistic {
+                            // IRLS replaces the linear shard rounds: one
+                            // reweighted base pass per Newton step plus a
+                            // single weighted shard sweep at the final β.
+                            assert_eq!(
+                                km.xside_passes(),
+                                0,
+                                "{label}: party {p} linear X-side passes"
+                            );
+                            assert_eq!(
+                                km.irls_base_passes(),
+                                res.metrics.irls_iters as u64,
+                                "{label}: party {p} IRLS base passes — one \
+                                 per Newton iteration"
+                            );
+                            assert_eq!(
+                                km.irls_shard_passes(),
+                                sc.shards() as u64,
+                                "{label}: party {p} IRLS shard passes"
+                            );
+                        } else {
+                            assert_eq!(
+                                km.xside_passes(),
+                                sc.shards() as u64,
+                                "{label}: party {p} X-side passes — one per \
+                                 shard, independent of T={}",
+                                sc.t
+                            );
+                        }
                     }
                     if transport == Transport::InProc {
                         single_lowered = Some(res.party_kernels[0].lowered_entries());
@@ -397,11 +432,19 @@ pub fn run_conformance(sc: &Scenario) -> Vec<(Backend, Compute, MultiPartyScanRe
                                  (and its lowering cache) must be shared across \
                                  sessions, not rebuilt per session"
                             );
-                            assert_eq!(
-                                km.xside_passes(),
-                                (sc.sessions * sc.shards()) as u64,
-                                "{label}: party {p} X-side passes"
-                            );
+                            if sc.glm == Glm::Logistic {
+                                assert_eq!(
+                                    km.irls_shard_passes(),
+                                    (sc.sessions * sc.shards()) as u64,
+                                    "{label}: party {p} IRLS shard passes"
+                                );
+                            } else {
+                                assert_eq!(
+                                    km.xside_passes(),
+                                    (sc.sessions * sc.shards()) as u64,
+                                    "{label}: party {p} X-side passes"
+                                );
+                            }
                         }
                     }
                 }

@@ -19,7 +19,7 @@ use common::{run_conformance, spec_for, Compute, Scenario};
 use dash::coordinator::Transport;
 use dash::gwas::generate_cohort;
 use dash::mpc::Backend;
-use dash::scan::SelectPolicy;
+use dash::scan::{Glm, SelectPolicy};
 
 // The acceptance grid: shard_m ∈ {7, 64, whole-M} × T ∈ {1, 16}, all
 // three backends, Rust vs artifact, bit-identical.
@@ -75,6 +75,16 @@ conformance_scenarios! {
     select_union_threads4: {
         shard_m: 16, t: 1, select_k: 2, select_candidates: 70,
         compress_threads: 4, cohort_seed: 0xA00D
+    },
+    // logistic closure: the secure-IRLS scan holds the same
+    // bit-identity contract across the whole matrix — every backend,
+    // Rust vs artifact-reference compute, and the reactor transport —
+    // with the artifact suite running one reweighted base pass per
+    // Newton step, zero linear X-side passes, and one weighted shard
+    // pass per shard at the final β
+    logistic_whole_m: { glm: Glm::Logistic, t: 2, cohort_seed: 0xA010 },
+    logistic_sharded_reactor: {
+        glm: Glm::Logistic, shard_m: 16, t: 2, reactor: true, cohort_seed: 0xA011
     },
 }
 

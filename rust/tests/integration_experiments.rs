@@ -26,6 +26,7 @@ fn e6_meta_loses_power_under_heterogeneity() {
         batch_effect_sd: 0.5,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     };
     let cohort = generate_cohort(&spec, 700);
 

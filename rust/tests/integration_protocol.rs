@@ -41,6 +41,7 @@ fn spec_for(parties: usize, n_per: usize, m: usize) -> CohortSpec {
         batch_effect_sd: 0.1,
         n_pcs: 2,
         noise_sd: 1.0,
+        binary_traits: false,
     }
 }
 
@@ -172,6 +173,7 @@ fn uneven_parties_and_edge_shapes() {
         batch_effect_sd: 0.0,
         n_pcs: 1,
         noise_sd: 1.0,
+        binary_traits: false,
     };
     let cohort = generate_cohort(&spec, 603);
     let cfg = ScanConfig {

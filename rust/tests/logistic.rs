@@ -1,0 +1,257 @@
+//! Integration: the secure logistic (IRLS) workload — acceptance
+//! criteria of the logistic tentpole.
+//!
+//! * Oracle agreement: the secure scan's null-model fit and per-variant
+//!   score statistics match a pooled plaintext Newton–Raphson oracle
+//!   within the fixed-point envelope, on all three MPC backends.
+//! * Execution invariance: shard width and transport are pure execution
+//!   knobs — every combination is bit-identical.
+//! * Traffic shape: per-iteration IRLS rounds cost `O(K²·T)` bytes,
+//!   independent of M.
+//! * Guard rails: quasi-separated cohorts are rejected with a typed
+//!   error before their weighted sums can outgrow the fixed-point
+//!   envelope; SELECT on a logistic scan is rejected up front; NaN
+//!   statistics surface as NaN p-values (never p = 0).
+
+mod common;
+
+use common::{assert_scan_bits_eq, backends, cfg, run, spec_for};
+use dash::coordinator::{MultiPartyScanResult, Transport};
+use dash::gwas::{generate_cohort, Cohort};
+use dash::linalg::Matrix;
+use dash::mpc::Backend;
+use dash::scan::{Glm, ScanConfig};
+use dash::stats::{
+    logistic_fit_pooled, logistic_score_scan_pooled, t_two_sided_p,
+};
+
+fn logistic_cfg(backend: Backend, shard_m: usize) -> ScanConfig {
+    let mut c = cfg(backend, shard_m);
+    c.glm = Glm::Logistic;
+    c
+}
+
+/// Binary (0/1-trait) cohort with the standard integration shape.
+fn binary_cohort(parties: usize, n_per: usize, m: usize, t: usize, seed: u64) -> Cohort {
+    let mut spec = spec_for(parties, n_per, m, t);
+    spec.binary_traits = true;
+    generate_cohort(&spec, seed)
+}
+
+fn run_logistic(cohort: &Cohort, backend: Backend, shard_m: usize) -> MultiPartyScanResult {
+    run(cohort, &logistic_cfg(backend, shard_m), Transport::InProc, 91)
+}
+
+/// Stack the per-party matrices into pooled `(Y, C, X)` — what a single
+/// trusted analyst would compute on (row-major concatenation).
+fn pooled(cohort: &Cohort) -> (Matrix, Matrix, Matrix) {
+    let n = cohort.n_total();
+    let (mut ys, mut c, mut x) = (Vec::new(), Vec::new(), Vec::new());
+    for p in &cohort.parties {
+        ys.extend_from_slice(&p.ys.data);
+        c.extend_from_slice(&p.c.data);
+        x.extend_from_slice(&p.x.data);
+    }
+    (
+        Matrix::from_vec(n, cohort.t(), ys),
+        Matrix::from_vec(n, cohort.k(), c),
+        Matrix::from_vec(n, cohort.m(), x),
+    )
+}
+
+/// Fixed-point-envelope comparison: relative tolerance against the
+/// oracle value, NaN-for-NaN (zero-information variants must agree on
+/// *where* the statistics are undefined).
+fn assert_close(a: &[f64], b: &[f64], rel: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for j in 0..a.len() {
+        if a[j].is_nan() || b[j].is_nan() {
+            assert!(
+                a[j].is_nan() && b[j].is_nan(),
+                "{what}[{j}]: NaN divergence ({} vs {})",
+                a[j],
+                b[j]
+            );
+            continue;
+        }
+        let tol = rel * b[j].abs().max(1.0);
+        assert!(
+            (a[j] - b[j]).abs() <= tol,
+            "{what}[{j}]: {} vs oracle {} (tol {tol})",
+            a[j],
+            b[j]
+        );
+    }
+}
+
+/// Acceptance: on every backend, β̂ and p of the secure logistic scan
+/// match the pooled plaintext Newton–Raphson oracle within the
+/// fixed-point envelope — null-model fit (coefficients, deviance) and
+/// per-variant score statistics alike, for every trait.
+#[test]
+fn secure_logistic_matches_pooled_oracle_all_backends() {
+    let cohort = binary_cohort(3, 60, 24, 2, 0xB10);
+    // the generator really produced a case/control cohort
+    for p in &cohort.parties {
+        assert!(p.ys.data.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+    let (ys, c, x) = pooled(&cohort);
+    let dflt = ScanConfig::default();
+    for backend in backends() {
+        let res = run_logistic(&cohort, backend, 0);
+        assert!(res.metrics.irls_iters >= 2, "{backend:?}: IRLS never iterated");
+        assert!(res.metrics.irls_iters <= dflt.irls_max_iter, "{backend:?}");
+        for tt in 0..cohort.t() {
+            let y = ys.col(tt);
+            let fit = logistic_fit_pooled(&y, &c, dflt.irls_max_iter, dflt.irls_tol)
+                .expect("oracle fit");
+            let label = format!("{backend:?} trait {tt}");
+            // iteration schedules may differ by at most the one step a
+            // quantized deviance can move the stop decision
+            assert!(
+                (res.metrics.irls_iters as i64 - fit.iters as i64).abs() <= 1,
+                "{label}: secure {} vs oracle {} iterations",
+                res.metrics.irls_iters,
+                fit.iters
+            );
+            let null = &res.output.covariate_fit[tt];
+            assert_close(&null.gamma, &fit.beta, 2e-3, &format!("{label} gamma"));
+            assert_close(&[null.tau2], &[fit.deviance], 1e-3, &format!("{label} deviance"));
+            let oracle = logistic_score_scan_pooled(&y, &c, &x, &fit);
+            let a = &res.output.assoc[tt];
+            assert_eq!(a.df, oracle.df, "{label}: score df");
+            assert_close(&a.beta, &oracle.beta, 2e-3, &format!("{label} beta"));
+            assert_close(&a.t, &oracle.t, 2e-3, &format!("{label} z"));
+            assert_close(&a.p, &oracle.p, 2e-3, &format!("{label} p"));
+        }
+    }
+}
+
+/// Shard width is a pure execution knob for the logistic scan too: any
+/// width reproduces the whole-M session bit-for-bit (the IRLS loop is
+/// width-free; the weighted pass folds row tiles in canonical order
+/// regardless of shard boundaries).
+#[test]
+fn logistic_bit_identical_across_shard_widths() {
+    let cohort = binary_cohort(3, 50, 40, 2, 0xB11);
+    let baseline = run_logistic(&cohort, Backend::Masked, 0);
+    for width in [7usize, 16, 40, 4096] {
+        let res = run_logistic(&cohort, Backend::Masked, width);
+        assert_eq!(res.metrics.irls_iters, baseline.metrics.irls_iters, "width {width}");
+        assert_scan_bits_eq(&res, &baseline, &format!("shard width {width}"));
+    }
+}
+
+/// Transport closure: TCP and reactor sessions serialize exactly the
+/// same IRLS frames as in-proc — identical statistics and identical
+/// IRLS byte accounting.
+#[test]
+fn logistic_bit_identical_across_transports() {
+    let cohort = binary_cohort(3, 40, 24, 1, 0xB12);
+    let cfg = logistic_cfg(Backend::Masked, 8);
+    let inproc = run(&cohort, &cfg, Transport::InProc, 92);
+    let mut transports = vec![Transport::Tcp];
+    if cfg!(target_os = "linux") {
+        transports.push(Transport::Reactor);
+    }
+    for transport in transports {
+        let res = run(&cohort, &cfg, transport, 92);
+        assert_scan_bits_eq(&res, &inproc, &format!("{transport:?}"));
+        assert_eq!(res.metrics.irls_iters, inproc.metrics.irls_iters, "{transport:?}");
+        assert_eq!(res.metrics.bytes_irls, inproc.metrics.bytes_irls, "{transport:?}");
+        assert_eq!(
+            res.metrics.bytes_max_irls_round,
+            inproc.metrics.bytes_max_irls_round,
+            "{transport:?}"
+        );
+    }
+}
+
+/// Per-iteration IRLS traffic is `O(K²·T)` — independent of the number
+/// of variants (that is the whole point of running the null model on
+/// compressed statistics: iteration cost does not scale with M).
+#[test]
+fn irls_round_bytes_independent_of_m() {
+    let small = binary_cohort(3, 50, 24, 2, 0xB13);
+    let large = binary_cohort(3, 50, 96, 2, 0xB13);
+    let a = run_logistic(&small, Backend::Masked, 0);
+    let b = run_logistic(&large, Backend::Masked, 0);
+    assert!(a.metrics.bytes_irls > 0);
+    assert!(a.metrics.bytes_max_irls_round > 0);
+    assert!(a.metrics.bytes_max_irls_round <= a.metrics.bytes_irls);
+    assert_eq!(
+        a.metrics.bytes_max_irls_round, b.metrics.bytes_max_irls_round,
+        "peak IRLS round bytes must not scale with M ({} variants vs {})",
+        small.m(),
+        large.m()
+    );
+}
+
+/// Guard rail: a quasi-separated cohort (a covariate perfectly predicts
+/// the outcome, so the MLE is at infinity) is *rejected* with a typed
+/// error once the iterate escapes the divergence guard — the session
+/// must not silently wrap the growing weighted sums through the
+/// fixed-point encoder.
+#[test]
+fn quasi_separated_cohort_rejected_not_wrapped() {
+    let mut cohort = binary_cohort(2, 100, 8, 1, 0xB14);
+    for p in cohort.parties.iter_mut() {
+        for i in 0..p.n() {
+            p.ys[(i, 0)] = if p.c[(i, 1)] > 0.0 { 1.0 } else { 0.0 };
+        }
+    }
+    let mut cfg = logistic_cfg(Backend::Masked, 0);
+    cfg.irls_max_iter = 500;
+    cfg.irls_tol = 1e-12;
+    let err = dash::coordinator::run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 93)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("quasi-separation"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// Logistic scans have no linear assembler, so the SELECT phase is
+/// rejected up front instead of failing obscurely mid-session.
+#[test]
+fn logistic_rejects_select_phase() {
+    let cohort = binary_cohort(2, 40, 12, 1, 0xB15);
+    let mut cfg = logistic_cfg(Backend::Masked, 0);
+    cfg.select_k = 1;
+    let err = dash::coordinator::run_multi_party_scan_t(&cohort, &cfg, Transport::InProc, 94)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("SELECT"), "unexpected error: {err:#}");
+}
+
+/// A variant carrying zero effective information gets NaN statistics
+/// end to end — NaN p, not the maximally-significant p = 0 the NaN-t
+/// bug used to produce. A monomorphic (all-zero) genotype column keeps
+/// its three aggregated sums *exactly* zero through every fixed-point
+/// backend, so the V_j guard fires deterministically.
+#[test]
+fn zero_information_variant_gets_nan_p_end_to_end() {
+    let mut cohort = binary_cohort(3, 50, 12, 1, 0xB16);
+    for p in cohort.parties.iter_mut() {
+        for i in 0..p.n() {
+            p.x[(i, 0)] = 0.0; // variant 0 is monomorphic
+        }
+    }
+    let res = run_logistic(&cohort, Backend::Masked, 0);
+    let a = &res.output.assoc[0];
+    assert!(a.beta[0].is_nan(), "beta[0]={}", a.beta[0]);
+    assert!(a.p[0].is_nan(), "p[0]={}", a.p[0]);
+    // the rest of the scan is unaffected
+    assert!(a.p[1..].iter().filter(|p| p.is_finite()).count() >= 8);
+}
+
+/// Regression for the NaN p-value bugfix riding along with this
+/// workload: a NaN t statistic must yield a NaN p-value (it previously
+/// fell through to p = 0.0 and ranked *first* in SELECT).
+#[test]
+fn nan_t_statistic_yields_nan_p() {
+    assert!(t_two_sided_p(f64::NAN, 10.0).is_nan());
+    assert!(t_two_sided_p(f64::NAN, 1e6).is_nan());
+    // the finite contract is untouched
+    assert_eq!(t_two_sided_p(f64::INFINITY, 10.0), 0.0);
+    assert!((t_two_sided_p(0.0, 10.0) - 1.0).abs() < 1e-12);
+}
